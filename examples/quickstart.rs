@@ -1,0 +1,70 @@
+//! Quickstart: fit an incremental KRR model, stream a few +4/−2 rounds,
+//! and confirm the incremental model equals a from-scratch retrain.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mikrr::data::synth;
+use mikrr::kernels::Kernel;
+use mikrr::krr::intrinsic::IntrinsicKrr;
+use mikrr::krr::{classification_accuracy, KrrModel};
+use mikrr::metrics::Timer;
+
+fn main() -> Result<(), mikrr::error::Error> {
+    // 1) a synthetic ECG-like dataset: N=3000 samples, M=21 features
+    let data = synth::ecg_like(3_000, 21, 42);
+    let (train, test) = data.split(0.8, 42);
+    println!("dataset: {} (train {} / test {})", data.name, train.len(), test.len());
+
+    // 2) fit intrinsic-space KRR with the paper's poly2 kernel, rho = 0.5
+    let kernel = Kernel::poly(2, 1.0);
+    let t = Timer::start();
+    let mut model = IntrinsicKrr::fit(&train.x, &train.y, &kernel, 0.5)?;
+    println!("bootstrap fit: J = {} intrinsic dims in {:.3}s", model.j(), t.elapsed());
+
+    // keep a mirror of the dataset so we can check the paper's invariant
+    let mut x_cur = train.x.clone();
+    let mut y_cur = train.y.clone();
+
+    // 3) stream five +4/−2 rounds — each is ONE batched rank-6 update
+    let stream = synth::ecg_like(20, 21, 7);
+    let mut rng = mikrr::util::prng::Rng::new(7);
+    for round in 0..5 {
+        let idx: Vec<usize> = (round * 4..round * 4 + 4).collect();
+        let mut remove = rng.sample_indices(model.n_samples(), 2);
+        remove.sort_unstable();
+        let t = Timer::start();
+        model.inc_dec(&stream.x.select_rows(&idx), &stream.y_rows(&idx), &remove)?;
+        println!(
+            "round {round}: +4/-2 in {:.2}ms  (n = {})",
+            t.elapsed() * 1e3,
+            model.n_samples()
+        );
+        // mirror the edit
+        x_cur.remove_rows(&remove)?;
+        for (i, &ri) in remove.iter().enumerate() {
+            y_cur.remove(ri - i);
+        }
+        x_cur = x_cur.vcat(&stream.x.select_rows(&idx))?;
+        y_cur.extend(stream.y_rows(&idx));
+    }
+
+    // 4) accuracy, paper style (sign threshold)
+    let pred = model.predict(&test.x)?;
+    println!(
+        "held-out accuracy: {:.2}%",
+        100.0 * classification_accuracy(&pred, &test.y)
+    );
+
+    // 5) the paper's invariant: incremental == retrain on the edited set
+    let fresh = IntrinsicKrr::fit(&x_cur, &y_cur, &kernel, 0.5)?;
+    let p_fresh = fresh.predict(&test.x)?;
+    let max_diff = pred
+        .iter()
+        .zip(&p_fresh)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |incremental - retrain| prediction diff: {max_diff:.2e}");
+    assert!(max_diff < 1e-6, "incremental must equal retrain");
+    println!("quickstart OK");
+    Ok(())
+}

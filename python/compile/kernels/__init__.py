@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the mikrr compile path.
+
+Modules:
+  gram        — blocked Gram-matrix kernels (poly / RBF)
+  feature_map — explicit intrinsic-space feature map (gather-product)
+  woodbury    — rank-k Woodbury correction GEMM (paper eq. 15 hot-spot)
+  ref         — pure-jnp oracles for all of the above
+"""
+
+from . import feature_map, gram, ref, woodbury  # noqa: F401

@@ -1,0 +1,100 @@
+"""L1 Pallas kernels: blocked Gram-matrix computation.
+
+The Gram matrix is the paper's first hot-spot: the empirical-space mode
+(Section III) maintains Q = K + rho*I over the full training set, and every
+incremental batch needs the cross-Gram between the new samples and the
+existing set.  The kernels here tile the (N, N') output into (BM, BN) blocks
+— the full feature dimension M rides along inside a block because M is small
+in the N >> M regime (ECG: M = 21), which is exactly when the Gram path is
+used at scale.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each (BM, BN) block is one
+MXU-friendly matmul of shape (BM, M) x (M, BN); BlockSpec's index_map
+expresses the HBM->VMEM schedule.  ``interpret=True`` is mandatory on this
+CPU-only image — real TPU lowering emits a Mosaic custom-call the CPU PJRT
+plugin cannot execute.
+
+All kernels are verified against :mod:`compile.kernels.ref` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: lane-width friendly (multiples of 8x128 for f32 on
+# TPU); on CPU-interpret they just define the blocking structure.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _pad_rows(a, multiple):
+    """Zero-pad the leading axis of ``a`` up to a multiple of ``multiple``."""
+    n = a.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return a, n
+    pad = [(0, rem)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad), n
+
+
+def _gram_poly_kernel(x_ref, y_ref, o_ref, *, degree, coef0):
+    """One (BM, BN) output block of the poly Gram: (X Y^T + c)^d."""
+    x = x_ref[...]
+    y = y_ref[...]
+    acc = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = (acc + coef0) ** degree
+
+
+def _gram_rbf_kernel(x_ref, y_ref, o_ref, *, gamma):
+    """One (BM, BN) output block of the RBF Gram: exp(-g ||x-y||^2)."""
+    x = x_ref[...]
+    y = y_ref[...]
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=1, keepdims=True)
+    d2 = jnp.maximum(x2 + y2.T - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2)
+
+
+def _blocked_gram(kernel_fn, x, y, bm, bn):
+    """Shared pallas_call driver: pad to tile multiples, run grid, slice."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    m = x.shape[1]
+    xp, n_x = _pad_rows(x, bm)
+    yp, n_y = _pad_rows(y, bn)
+    grid = (xp.shape[0] // bm, yp.shape[0] // bn)
+    out = pl.pallas_call(
+        kernel_fn,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:n_x, :n_y]
+
+
+def gram_poly(x, y, *, degree: int, coef0: float = 1.0,
+              bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Blocked polynomial Gram matrix, K[i,j] = (x_i . y_j + coef0)^degree."""
+    kern = functools.partial(_gram_poly_kernel, degree=degree, coef0=coef0)
+    return _blocked_gram(kern, x, y, bm, bn)
+
+
+def gram_rbf(x, y, *, gamma: float,
+             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Blocked RBF Gram matrix, K[i,j] = exp(-gamma ||x_i - y_j||^2)."""
+    kern = functools.partial(_gram_rbf_kernel, gamma=gamma)
+    return _blocked_gram(kern, x, y, bm, bn)

@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: the rank-k Woodbury correction GEMM (paper eq. 15).
+
+The batched incremental/decremental update
+
+    S' = S^-1 - T W,   T = S^-1 Phi_H (J, H),   W = core^-1 Phi_H' S^-1 (H, J)
+
+spends essentially all of its O(J^2 H) flops in the final `S^-1 - T @ W`
+correction (the core solve is only O(H^3), H ~ 6).  This kernel computes
+that correction as a tiled fused multiply-subtract so the maintained inverse
+is updated in one pass over its (J, J) extent.
+
+TPU mapping: each (BM, BN) output tile does a (BM, H) x (H, BN) matmul on
+the MXU and subtracts from the resident S tile — one HBM read of S, one
+write of S', with T/W streamed into VMEM once per row/col of the grid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _rank_update_kernel(s_ref, a_ref, b_ref, o_ref):
+    """One output tile of  S - A @ B."""
+    a = a_ref[...]
+    b = b_ref[...]
+    prod = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = s_ref[...] - prod
+
+
+def _pad_axis(a, axis, multiple):
+    rem = (-a.shape[axis]) % multiple
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(a, pad)
+
+
+def rank_update(s, a, b, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Tiled  S - A @ B  with S: (J, J'), A: (J, H), B: (H, J')."""
+    s = jnp.asarray(s, jnp.float32)
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    j0, j1 = s.shape
+    h = a.shape[1]
+    sp = _pad_axis(_pad_axis(s, 0, bm), 1, bn)
+    ap = _pad_axis(a, 0, bm)
+    bp = _pad_axis(b, 1, bn)
+    grid = (sp.shape[0] // bm, sp.shape[1] // bn)
+    out = pl.pallas_call(
+        _rank_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(sp.shape, jnp.float32),
+        interpret=True,
+    )(sp, ap, bp)
+    return out[:j0, :j1]
+
+
+def solve_gj(a, b):
+    """Solve ``a x = b`` (small fixed n) by Gauss-Jordan with partial
+    pivoting, written in pure jnp ops.
+
+    ``jnp.linalg.solve`` lowers to a LAPACK typed-FFI custom-call on CPU,
+    which xla_extension 0.5.1 (the Rust runtime's XLA) cannot compile —
+    this keeps the AOT artifacts plain-HLO.  n is the Woodbury core size
+    (H ~ 6), so the unrolled python loop is tiny.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    n = a.shape[0]
+    aug = jnp.concatenate([a, b], axis=1)
+    rows = jnp.arange(n)
+    for col in range(n):
+        colvals = jnp.abs(aug[:, col])
+        piv = jnp.argmax(jnp.where(rows >= col, colvals, -1.0))
+        row_col = aug[col]
+        row_piv = aug[piv]
+        aug = aug.at[col].set(row_piv).at[piv].set(row_col)
+        aug = aug.at[col].set(aug[col] / aug[col, col])
+        factors = aug[:, col].at[col].set(0.0)
+        aug = aug - factors[:, None] * aug[col][None, :]
+    return aug[:, n:]
+
+
+def woodbury_incdec(s_inv, phi_h, signs):
+    """Full batched up/down-date (eq. 15) with the Pallas correction GEMM.
+
+    s_inv: (J, J) maintained inverse; phi_h: (J, H) batch columns;
+    signs: (H,) +1 for incremental columns, -1 for decremental ones.
+    Zero columns are exact no-ops, which the AOT artifact exploits to pad
+    variable |H| < H_max batches.
+    """
+    s_inv = jnp.asarray(s_inv, jnp.float32)
+    phi_h = jnp.asarray(phi_h, jnp.float32)
+    signs = jnp.asarray(signs, jnp.float32)
+    t = s_inv @ phi_h                                   # (J, H)
+    core = jnp.eye(phi_h.shape[1], dtype=jnp.float32) + (signs[:, None] * phi_h.T) @ t
+    w = solve_gj(core, signs[:, None] * t.T)            # (H, J)
+    return rank_update(s_inv, t, w)

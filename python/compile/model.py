@@ -1,0 +1,228 @@
+"""L2 JAX model: the paper's update equations as jittable compute graphs.
+
+These functions compose the L1 Pallas kernels (:mod:`compile.kernels`) into
+the exact state transitions the Rust coordinator drives at runtime.  Every
+public ``*_entry`` function here is an AOT lowering target for
+:mod:`compile.aot`; its shapes are fixed by the artifact manifest and the
+Rust `runtime::HybridExec` falls back to native linalg when live shapes
+do not match.
+
+State carried by the coordinator (intrinsic space, paper Section II):
+  s_inv : (J, J)  maintained (Phi Phi^T + rho I)^-1
+  psum  : (J,)    Phi e^T    (feature-map row sums)
+  py    : (J,)    Phi y^T
+  sy    : ()      e y^T
+  n     : ()      sample count
+The (u, b) head is recovered from that state via the bordered system of
+eq. (5) using the Schur complement (eq. 6-7) — O(J^2), no fresh inverse.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import feature_map, gram, woodbury
+
+
+# ---------------------------------------------------------------------------
+# Feature maps and Gram blocks (thin wrappers over L1)
+# ---------------------------------------------------------------------------
+
+def phi_poly2(x):
+    """Intrinsic map, degree 2: (B, M) -> (B, J)."""
+    return feature_map.phi_poly(x, degree=2)
+
+
+def phi_poly3(x):
+    """Intrinsic map, degree 3: (B, M) -> (B, J)."""
+    return feature_map.phi_poly(x, degree=3)
+
+
+def gram_poly2(x, y):
+    return gram.gram_poly(x, y, degree=2)
+
+
+def gram_poly3(x, y):
+    return gram.gram_poly(x, y, degree=3)
+
+
+def gram_rbf(x, y, *, gamma: float = 1.0 / (2.0 * 50.0 ** 2)):
+    """Paper setting: RBF radius 50 -> gamma = 1/(2 * 50^2)."""
+    return gram.gram_rbf(x, y, gamma=gamma)
+
+
+# ---------------------------------------------------------------------------
+# Intrinsic-space incremental state transitions
+# ---------------------------------------------------------------------------
+
+def woodbury_incdec(s_inv, phi_h, signs):
+    """Batched up/down-date of S^-1 (paper eq. 15), Pallas-cored."""
+    return woodbury.woodbury_incdec(s_inv, phi_h, signs)
+
+
+def krr_refresh(s_inv, psum, py, sy, n):
+    """Recover (u, b) from maintained state via the eq. (5) bordered system.
+
+    Solves  [[S, p], [p^T, n]] [u; b] = [py; sy]  with S^-1 available:
+      b = (sy - p^T S^-1 py) / (n - p^T S^-1 p)
+      u = S^-1 (py - p b)
+    """
+    sp = s_inv @ psum
+    denom = n - psum @ sp
+    b = (sy - sp @ py) / denom
+    u = s_inv @ py - sp * b
+    return u, b
+
+
+def krr_incdec_round(s_inv, psum, py, sy, n, x_c, y_c, phi_r, y_r, *, degree):
+    """One full +|C|/−|R| round in intrinsic space, fused end to end.
+
+    New samples arrive as raw features ``x_c`` (|C|, M) and are mapped by the
+    Pallas feature kernel; removed samples arrive as already-mapped rows
+    ``phi_r`` (|R|, J) (the coordinator keeps the stored Phi).  Returns the
+    complete next state plus the refreshed head.
+    """
+    phi_c = feature_map.phi_poly(x_c, degree=degree)           # (|C|, J)
+    phi_h = jnp.concatenate([phi_c, phi_r], axis=0).T          # (J, H)
+    signs = jnp.concatenate([
+        jnp.ones((phi_c.shape[0],), jnp.float32),
+        -jnp.ones((phi_r.shape[0],), jnp.float32),
+    ])
+    s_inv_new = woodbury.woodbury_incdec(s_inv, phi_h, signs)
+    psum_new = psum + jnp.sum(phi_c, axis=0) - jnp.sum(phi_r, axis=0)
+    py_new = py + phi_c.T @ y_c - phi_r.T @ y_r
+    sy_new = sy + jnp.sum(y_c) - jnp.sum(y_r)
+    n_new = n + jnp.float32(y_c.shape[0]) - jnp.float32(y_r.shape[0])
+    u, b = krr_refresh(s_inv_new, psum_new, py_new, sy_new, n_new)
+    return s_inv_new, psum_new, py_new, sy_new, n_new, u, b
+
+
+def predict_batch(u, b, phi_star):
+    """y* = Phi* u + b for a (B, J) block of mapped test points."""
+    return phi_star @ u + b
+
+
+# ---------------------------------------------------------------------------
+# Kernelized Bayesian Regression (paper Section IV)
+# ---------------------------------------------------------------------------
+
+def kbr_update(cov, phi_h, signs, phi_y, *, sigma_b2: float):
+    """Batched posterior update (eq. 43-44): returns (cov', mean')."""
+    scaled = phi_h / jnp.sqrt(jnp.float32(sigma_b2))
+    cov_new = woodbury.woodbury_incdec(cov, scaled, signs)
+    mean_new = cov_new @ phi_y / sigma_b2
+    return cov_new, mean_new
+
+
+def kbr_predict(cov, mean, phi_star, *, sigma_b2: float):
+    """Predictive head (eq. 49-50): (mu*, psi*) per test row."""
+    mu = phi_star @ mean
+    psi = sigma_b2 + jnp.sum((phi_star @ cov) * phi_star, axis=1)
+    return mu, psi
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (fixed canonical shapes; see DESIGN.md §6)
+# ---------------------------------------------------------------------------
+# Canonical config: ECG-like M=21, poly2 -> J=253, |C|=4, |R|=2, H=6.
+
+M_ECG = 21
+J_POLY2 = 253
+H_MAX = 6
+PRED_BLOCK = 64
+GRAM_BLOCK = 128
+SIGMA_B2 = 0.01
+
+
+def entry_phi_poly2(x):
+    """(H_MAX, M) -> (H_MAX, J)."""
+    return (phi_poly2(x),)
+
+
+def entry_woodbury_incdec(s_inv, phi_h, signs):
+    """eq. 15 at canonical shapes."""
+    return (woodbury_incdec(s_inv, phi_h, signs),)
+
+
+def entry_krr_refresh(s_inv, psum, py, sy, n):
+    u, b = krr_refresh(s_inv, psum, py, sy, n)
+    return (u, b)
+
+
+def entry_gram_poly2(x, y):
+    return (gram_poly2(x, y),)
+
+
+def entry_gram_rbf(x, y):
+    return (gram_rbf(x, y),)
+
+
+def entry_kbr_update(cov, phi_h, signs, phi_y):
+    cov_new, mean_new = kbr_update(cov, phi_h, signs, phi_y, sigma_b2=SIGMA_B2)
+    return (cov_new, mean_new)
+
+
+def entry_predict_batch(u, b, phi_star):
+    return (predict_batch(u, b, phi_star),)
+
+
+def entry_kbr_predict(cov, mean, phi_star):
+    mu, psi = kbr_predict(cov, mean, phi_star, sigma_b2=SIGMA_B2)
+    return (mu, psi)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+#: artifact name -> (entry fn, example args).  The AOT driver lowers each
+#: with return_tuple=True; the manifest records shapes for the Rust loader.
+ENTRIES = {
+    "phi_poly2": (entry_phi_poly2, (_spec((H_MAX, M_ECG)),)),
+    "woodbury_incdec": (
+        entry_woodbury_incdec,
+        (_spec((J_POLY2, J_POLY2)), _spec((J_POLY2, H_MAX)), _spec((H_MAX,))),
+    ),
+    "krr_refresh": (
+        entry_krr_refresh,
+        (
+            _spec((J_POLY2, J_POLY2)),
+            _spec((J_POLY2,)),
+            _spec((J_POLY2,)),
+            _spec(()),
+            _spec(()),
+        ),
+    ),
+    "gram_poly2": (
+        entry_gram_poly2,
+        (_spec((GRAM_BLOCK, M_ECG)), _spec((GRAM_BLOCK, M_ECG))),
+    ),
+    "gram_rbf": (
+        entry_gram_rbf,
+        (_spec((GRAM_BLOCK, M_ECG)), _spec((GRAM_BLOCK, M_ECG))),
+    ),
+    "kbr_update": (
+        entry_kbr_update,
+        (
+            _spec((J_POLY2, J_POLY2)),
+            _spec((J_POLY2, H_MAX)),
+            _spec((H_MAX,)),
+            _spec((J_POLY2,)),
+        ),
+    ),
+    "predict_batch": (
+        entry_predict_batch,
+        (_spec((J_POLY2,)), _spec(()), _spec((PRED_BLOCK, J_POLY2))),
+    ),
+    "kbr_predict": (
+        entry_kbr_predict,
+        (
+            _spec((J_POLY2, J_POLY2)),
+            _spec((J_POLY2,)),
+            _spec((PRED_BLOCK, J_POLY2)),
+        ),
+    ),
+}

@@ -1,0 +1,10 @@
+"""Test config: enable x64 so the pure-jnp oracles run in real float64.
+
+The Pallas kernels and AOT entries cast to float32 explicitly (the PJRT
+interchange dtype), so this only upgrades the reference computations and
+the tolerance checks against them.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,222 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+Includes hypothesis sweeps over shapes/seeds — the CORE correctness signal
+for the compile path.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import feature_map, gram, ref, woodbury
+
+RNG = np.random.default_rng(0)
+
+
+def _x(n, m, seed=0, scale=1.0):
+    return np.random.default_rng(seed).normal(size=(n, m)).astype(np.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Gram kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("degree", [1, 2, 3])
+@pytest.mark.parametrize("shape", [(7, 5, 3), (128, 128, 21), (130, 37, 21), (1, 1, 1)])
+def test_gram_poly_matches_ref(degree, shape):
+    n, p, m = shape
+    x, y = _x(n, m, 1), _x(p, m, 2)
+    got = gram.gram_poly(x, y, degree=degree, bm=32, bn=32)
+    want = ref.gram_poly(jnp.asarray(x), jnp.asarray(y), degree=degree)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("gamma", [0.5, 1.0 / (2 * 50.0**2)])
+@pytest.mark.parametrize("shape", [(9, 6, 4), (128, 64, 21), (65, 129, 8)])
+def test_gram_rbf_matches_ref(gamma, shape):
+    n, p, m = shape
+    x, y = _x(n, m, 3), _x(p, m, 4)
+    got = gram.gram_rbf(x, y, gamma=gamma, bm=32, bn=32)
+    want = ref.gram_rbf(jnp.asarray(x), jnp.asarray(y), gamma=gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_gram_poly_symmetric_psd():
+    x = _x(40, 8, 5)
+    k = np.asarray(gram.gram_poly(x, x, degree=2, bm=16, bn=16), dtype=np.float64)
+    np.testing.assert_allclose(k, k.T, atol=1e-5)
+    w = np.linalg.eigvalsh((k + k.T) / 2)
+    assert w.min() > -1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 70),
+    p=st.integers(1, 70),
+    m=st.integers(1, 24),
+    degree=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_poly_hypothesis(n, p, m, degree, seed):
+    x, y = _x(n, m, seed), _x(p, m, seed + 1)
+    got = gram.gram_poly(x, y, degree=degree, bm=16, bn=16)
+    want = ref.gram_poly(jnp.asarray(x), jnp.asarray(y), degree=degree)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 60),
+    p=st.integers(1, 60),
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_rbf_hypothesis(n, p, m, seed):
+    x, y = _x(n, m, seed), _x(p, m, seed + 7)
+    got = gram.gram_rbf(x, y, gamma=0.3, bm=16, bn=16)
+    want = ref.gram_rbf(jnp.asarray(x), jnp.asarray(y), gamma=0.3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Feature map
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("degree", [1, 2, 3])
+@pytest.mark.parametrize("m", [3, 8, 21])
+def test_phi_poly_matches_ref(degree, m):
+    x = _x(17, m, 11)
+    got = feature_map.phi_poly(x, degree=degree, bm=8)
+    want = ref.phi_poly(jnp.asarray(x), degree=degree)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("degree", [2, 3])
+def test_phi_poly_reproduces_kernel(degree):
+    """phi(x) . phi(y) == (x.y + 1)^degree — the defining identity."""
+    m = 6
+    x, y = _x(12, m, 21), _x(9, m, 22)
+    px = np.asarray(feature_map.phi_poly(x, degree=degree, bm=8), dtype=np.float64)
+    py = np.asarray(feature_map.phi_poly(y, degree=degree, bm=8), dtype=np.float64)
+    k_from_phi = px @ py.T
+    k_direct = np.asarray(ref.gram_poly(jnp.asarray(x), jnp.asarray(y), degree=degree))
+    np.testing.assert_allclose(k_from_phi, k_direct, rtol=2e-4, atol=2e-4)
+
+
+def test_intrinsic_dim():
+    assert ref.intrinsic_dim(21, 2) == 253
+    assert ref.intrinsic_dim(21, 3) == 2024
+    assert feature_map.monomial_table(21, 2)[1].shape[0] == 253
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    m=st.integers(1, 12),
+    degree=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_phi_poly_hypothesis(n, m, degree, seed):
+    x = _x(n, m, seed)
+    got = feature_map.phi_poly(x, degree=degree, bm=8)
+    want = ref.phi_poly(jnp.asarray(x), degree=degree)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Woodbury rank-k update
+# ---------------------------------------------------------------------------
+
+def _spd(j, seed, jitter=1.0):
+    a = np.random.default_rng(seed).normal(size=(j, j))
+    return (a @ a.T / j + jitter * np.eye(j)).astype(np.float32)
+
+
+@pytest.mark.parametrize("j,h", [(5, 2), (64, 6), (253, 6), (100, 1)])
+def test_rank_update_matches_ref(j, h):
+    s = _spd(j, 1)
+    a = _x(j, h, 2)
+    b = _x(h, j, 3)
+    got = woodbury.rank_update(s, a, b, bm=32, bn=32)
+    want = ref.rank_update(jnp.asarray(s), jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("j,nc,nr", [(20, 4, 2), (64, 3, 3), (40, 6, 0), (40, 0, 4)])
+def test_woodbury_incdec_vs_fresh_inverse(j, nc, nr):
+    """The maintained-inverse update must equal inverting the updated S."""
+    rng = np.random.default_rng(42)
+    s = _spd(j, 5, jitter=float(j))
+    s_inv = np.linalg.inv(s.astype(np.float64))
+    phi_c = rng.normal(size=(j, nc)) * 0.3
+    phi_r = rng.normal(size=(j, nr)) * 0.3
+    phi_h = np.concatenate([phi_c, phi_r], axis=1).astype(np.float32)
+    signs = np.concatenate([np.ones(nc), -np.ones(nr)]).astype(np.float32)
+    if phi_h.shape[1] == 0:
+        pytest.skip("empty batch")
+    got = woodbury.woodbury_incdec(s_inv.astype(np.float32), phi_h, signs)
+    s_new = s.astype(np.float64) + phi_c @ phi_c.T - phi_r @ phi_r.T
+    want = np.linalg.inv(s_new)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
+
+
+def test_woodbury_zero_columns_are_noop():
+    """Zero-padding columns must not change the result (artifact padding)."""
+    j = 30
+    s_inv = np.linalg.inv(_spd(j, 9, jitter=5.0).astype(np.float64)).astype(np.float32)
+    phi = np.random.default_rng(3).normal(size=(j, 2)).astype(np.float32) * 0.2
+    signs2 = np.array([1.0, -1.0], np.float32)
+    padded = np.concatenate([phi, np.zeros((j, 4), np.float32)], axis=1)
+    signs6 = np.concatenate([signs2, np.ones(4, np.float32)])
+    got2 = np.asarray(woodbury.woodbury_incdec(s_inv, phi, signs2))
+    got6 = np.asarray(woodbury.woodbury_incdec(s_inv, padded, signs6))
+    np.testing.assert_allclose(got2, got6, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    j=st.integers(2, 48),
+    nc=st.integers(0, 6),
+    nr=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_woodbury_hypothesis(j, nc, nr, seed):
+    if nc + nr == 0:
+        return
+    rng = np.random.default_rng(seed)
+    s = _spd(j, seed, jitter=float(j))
+    s_inv = np.linalg.inv(s.astype(np.float64))
+    phi_h = (rng.normal(size=(j, nc + nr)) * 0.2).astype(np.float32)
+    signs = np.concatenate([np.ones(nc), -np.ones(nr)]).astype(np.float32)
+    got = woodbury.woodbury_incdec(s_inv.astype(np.float32), phi_h, signs)
+    ph64 = phi_h.astype(np.float64)
+    s_new = s.astype(np.float64) + (ph64 * signs) @ ph64.T
+    want = np.linalg.inv(s_new)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp Gauss-Jordan solver (the no-custom-call replacement for
+# jnp.linalg.solve in the AOT path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), m=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_solve_gj_matches_linalg(n, m, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, n)) + n * np.eye(n)
+    b = rng.normal(size=(n, m))
+    got = woodbury.solve_gj(jnp.asarray(a), jnp.asarray(b))
+    want = np.linalg.solve(a, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-8)
+
+
+def test_solve_gj_needs_pivoting():
+    # zero leading pivot forces a row swap
+    a = np.array([[0.0, 1.0], [1.0, 0.0]])
+    b = np.array([[2.0], [3.0]])
+    got = np.asarray(woodbury.solve_gj(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, [[3.0], [2.0]], atol=1e-7)

@@ -1,0 +1,164 @@
+"""L2 correctness: the model-level state transitions vs direct solves.
+
+These tests establish the paper's central claim at the jnp level before the
+Rust side reimplements it in f64: incremental/decremental updates produce
+exactly the same estimator as retraining from scratch.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RHO = 0.5
+
+
+def _data(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, m)).astype(np.float32) * 0.5
+    w = rng.normal(size=m)
+    y = (x @ w + 0.1 * rng.normal(size=n)).astype(np.float32)
+    return x, y
+
+
+def _intrinsic_state(x, y, degree):
+    """Build maintained state (s_inv, psum, py, sy, n) directly in f64."""
+    phi = np.asarray(ref.phi_poly(jnp.asarray(x), degree=degree), np.float64).T  # (J, N)
+    j = phi.shape[0]
+    s = phi @ phi.T + RHO * np.eye(j)
+    return (
+        np.linalg.inv(s),
+        phi.sum(axis=1),
+        phi @ y.astype(np.float64),
+        float(y.sum()),
+        float(len(y)),
+    )
+
+
+def test_krr_refresh_matches_direct_solve():
+    x, y = _data(60, 5, 1)
+    s_inv, psum, py, sy, n = _intrinsic_state(x, y, 2)
+    u, b = model.krr_refresh(
+        jnp.asarray(s_inv), jnp.asarray(psum), jnp.asarray(py),
+        jnp.asarray(sy), jnp.asarray(n),
+    )
+    phi = ref.phi_poly(jnp.asarray(x), degree=2).T
+    u_ref, b_ref = ref.krr_intrinsic_solve(
+        jnp.asarray(phi, jnp.float64), jnp.asarray(y, jnp.float64), RHO
+    )
+    np.testing.assert_allclose(np.asarray(u), np.asarray(u_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(b), float(b_ref), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("degree", [2])
+def test_incdec_round_equals_retrain(degree):
+    """One +4/-2 round == retrain on the edited dataset (paper's core claim)."""
+    x, y = _data(50, 6, 3)
+    xc, yc = _data(4, 6, 4)
+    r_idx = [7, 23]
+
+    s_inv, psum, py, sy, n = _intrinsic_state(x, y, degree)
+    phi_all = np.asarray(ref.phi_poly(jnp.asarray(x), degree=degree), np.float64)
+    phi_r = phi_all[r_idx]
+    y_r = y[r_idx].astype(np.float64)
+
+    out = model.krr_incdec_round(
+        jnp.asarray(s_inv), jnp.asarray(psum), jnp.asarray(py),
+        jnp.asarray(sy), jnp.asarray(n),
+        jnp.asarray(xc), jnp.asarray(yc, jnp.float32),
+        jnp.asarray(phi_r, jnp.float32), jnp.asarray(y_r, jnp.float32),
+        degree=degree,
+    )
+    u_new, b_new = out[5], out[6]
+
+    keep = [i for i in range(len(y)) if i not in r_idx]
+    x2 = np.concatenate([x[keep], xc])
+    y2 = np.concatenate([y[keep], yc])
+    phi2 = ref.phi_poly(jnp.asarray(x2, jnp.float64), degree=degree).T
+    u_ref, b_ref = ref.krr_intrinsic_solve(phi2, jnp.asarray(y2, jnp.float64), RHO)
+    np.testing.assert_allclose(np.asarray(u_new), np.asarray(u_ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(float(b_new), float(b_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_empirical_solve_predicts_like_intrinsic():
+    """Poly-kernel KRR: empirical and intrinsic solutions give one function."""
+    x, y = _data(40, 4, 7)
+    xt, _ = _data(10, 4, 8)
+    x64, y64 = jnp.asarray(x, jnp.float64), jnp.asarray(y, jnp.float64)
+    phi = ref.phi_poly(x64, degree=2).T
+    u, b_i = ref.krr_intrinsic_solve(phi, y64, RHO)
+    pred_i = ref.predict_intrinsic(u, b_i, ref.phi_poly(jnp.asarray(xt, jnp.float64), degree=2))
+
+    k = ref.gram_poly(x64, x64, degree=2)
+    a, b_e = ref.krr_empirical_solve(k, y64, RHO)
+    kt = ref.gram_poly(jnp.asarray(xt, jnp.float64), x64, degree=2)
+    pred_e = ref.predict_empirical(a, b_e, kt)
+    np.testing.assert_allclose(np.asarray(pred_i), np.asarray(pred_e), rtol=1e-6, atol=1e-7)
+
+
+def test_kbr_update_equals_batch_posterior():
+    """k batched KBR updates == batch posterior on the union (eq. 43-44)."""
+    sigma_u2, sigma_b2 = 0.01, 0.01
+    x, y = _data(30, 4, 9)
+    xc, yc = _data(4, 4, 10)
+    x64 = jnp.asarray(x, jnp.float64)
+    phi = ref.phi_poly(x64, degree=2).T  # (J, N)
+    j = phi.shape[0]
+
+    cov0, mean0 = ref.kbr_posterior(phi, jnp.asarray(y, jnp.float64), sigma_u2, sigma_b2)
+
+    phi_c = ref.phi_poly(jnp.asarray(xc, jnp.float64), degree=2).T
+    signs = jnp.ones((4,), jnp.float64)
+    phi_y = phi @ jnp.asarray(y, jnp.float64) + phi_c @ jnp.asarray(yc, jnp.float64)
+    cov1, mean1 = ref.kbr_update(cov0, mean0, phi_c, signs, phi_y, sigma_b2)
+
+    phi_all = jnp.concatenate([phi, phi_c], axis=1)
+    y_all = jnp.concatenate([jnp.asarray(y, jnp.float64), jnp.asarray(yc, jnp.float64)])
+    cov_ref, mean_ref = ref.kbr_posterior(phi_all, y_all, sigma_u2, sigma_b2)
+    np.testing.assert_allclose(np.asarray(cov1), np.asarray(cov_ref), rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(mean1), np.asarray(mean_ref), rtol=1e-6, atol=1e-8)
+
+
+def test_kbr_predictive_variance_shrinks_with_data():
+    """More data => posterior predictive variance must not grow (sanity)."""
+    sigma_u2, sigma_b2 = 0.01, 0.01
+    x, y = _data(20, 3, 11)
+    xt, _ = _data(5, 3, 12)
+    x64 = jnp.asarray(x, jnp.float64)
+    pt = ref.phi_poly(jnp.asarray(xt, jnp.float64), degree=2)
+
+    phi_small = ref.phi_poly(x64[:5], degree=2).T
+    cov_s, mean_s = ref.kbr_posterior(phi_small, jnp.asarray(y[:5], jnp.float64), sigma_u2, sigma_b2)
+    _, psi_small = ref.kbr_predict(cov_s, mean_s, pt, sigma_b2)
+
+    phi_big = ref.phi_poly(x64, degree=2).T
+    cov_b, mean_b = ref.kbr_posterior(phi_big, jnp.asarray(y, jnp.float64), sigma_u2, sigma_b2)
+    _, psi_big = ref.kbr_predict(cov_b, mean_b, pt, sigma_b2)
+
+    assert np.all(np.asarray(psi_big) <= np.asarray(psi_small) + 1e-9)
+    assert np.all(np.asarray(psi_big) >= sigma_b2 - 1e-12)
+
+
+def test_model_kbr_update_matches_ref():
+    """L2 kbr_update (Pallas-cored, f32) vs ref (jnp, f64)."""
+    sigma_b2 = model.SIGMA_B2
+    rng = np.random.default_rng(13)
+    j = 40
+    a = rng.normal(size=(j, j))
+    cov = np.linalg.inv(a @ a.T / j + 10.0 * np.eye(j))
+    phi_h = rng.normal(size=(j, 6)) * 0.05
+    signs = np.concatenate([np.ones(4), -np.ones(2)])
+    phi_y = rng.normal(size=j)
+    got_cov, got_mean = model.kbr_update(
+        jnp.asarray(cov, jnp.float32), jnp.asarray(phi_h, jnp.float32),
+        jnp.asarray(signs, jnp.float32), jnp.asarray(phi_y, jnp.float32),
+        sigma_b2=sigma_b2,
+    )
+    want_cov, want_mean = ref.kbr_update(
+        jnp.asarray(cov), jnp.asarray(mean_zero := np.zeros(j)), jnp.asarray(phi_h),
+        jnp.asarray(signs), jnp.asarray(phi_y), sigma_b2,
+    )
+    np.testing.assert_allclose(np.asarray(got_cov), np.asarray(want_cov), rtol=5e-3, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got_mean), np.asarray(want_mean), rtol=5e-3, atol=5e-3)

@@ -1,0 +1,147 @@
+//! Micro/ablation benchmarks (beyond the paper's tables):
+//!
+//! * `woodbury_batch_sweep`  — rank-|H| update cost vs |H| (validates the
+//!   §II.B rule: batching beats |H| rank-1 updates; fresh inverse wins
+//!   only as |H| -> J).
+//! * `shrink_vs_recompute`   — eq. (29) shrink vs fresh inverse as |R|
+//!   grows (validates the §III.B rule).
+//! * `gram_block_sweep`      — Gram construction cost vs block size.
+//! * `aot_vs_native`         — the canonical woodbury update through the
+//!   AOT artifact vs the native f64 path.
+//! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
+//!
+//! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
+
+use mikrr::benchlib::{black_box, Bencher};
+use mikrr::kernels::Kernel;
+use mikrr::linalg::solve::spd_inverse;
+use mikrr::linalg::woodbury::{bordered_shrink, incdec, sub_matrix};
+use mikrr::linalg::Mat;
+use mikrr::runtime::HybridExec;
+use mikrr::testutil::{random_mat, random_spd};
+use mikrr::util::prng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_args(std::env::args().skip(1));
+    let mut rng = Rng::new(1);
+
+    // ---- woodbury batch-size sweep (J = 253, the paper's poly2 dim) ----
+    let j = 253;
+    let s_inv = spd_inverse(&random_spd(&mut rng, j, 60.0)).unwrap();
+    for h in [1usize, 2, 4, 6, 8, 16, 32, 64] {
+        let phi = random_mat(&mut rng, j, h, 0.05);
+        let signs = vec![1.0; h];
+        b.bench(&format!("woodbury_batch_sweep/J253_H{h}"), || {
+            black_box(incdec(&s_inv, &phi, &signs).unwrap());
+        });
+    }
+    // compare: H rank-1 updates vs one rank-H (the paper's core lever)
+    {
+        let h = 6;
+        let phi = random_mat(&mut rng, j, h, 0.05);
+        let signs = vec![1.0; h];
+        b.bench("woodbury_one_rank6", || {
+            black_box(incdec(&s_inv, &phi, &signs).unwrap());
+        });
+        b.bench("woodbury_six_rank1", || {
+            let mut s = s_inv.clone();
+            for k in 0..h {
+                let col = Mat::from_vec(j, 1, phi.col(k)).unwrap();
+                s = incdec(&s, &col, &[1.0]).unwrap();
+            }
+            black_box(s);
+        });
+        b.bench("fresh_inverse_J253", || {
+            black_box(spd_inverse(&random_spd(&mut rng, j, 60.0)).unwrap());
+        });
+    }
+
+    // ---- empirical shrink vs recompute (N = 400) ----
+    let n = 400;
+    let q = random_spd(&mut rng, n, 40.0);
+    let q_inv = spd_inverse(&q).unwrap();
+    for r in [2usize, 8, 32, 128, 300] {
+        let rem: Vec<usize> = (0..r).map(|i| i * (n / r)).collect();
+        b.bench(&format!("shrink_vs_recompute/shrink_R{r}"), || {
+            black_box(bordered_shrink(&q_inv, &rem).unwrap());
+        });
+        let keep: Vec<usize> = (0..n).filter(|i| !rem.contains(i)).collect();
+        b.bench(&format!("shrink_vs_recompute/recompute_R{r}"), || {
+            let sub = sub_matrix(&q, &keep, &keep);
+            black_box(spd_inverse(&sub).unwrap());
+        });
+    }
+
+    // ---- gram block sweep ----
+    let x = random_mat(&mut rng, 512, 21, 0.5);
+    for kernel in [Kernel::poly(2, 1.0), Kernel::rbf_radius(50.0)] {
+        let name = match &kernel {
+            Kernel::Poly { .. } => "poly2",
+            Kernel::Rbf { .. } => "rbf",
+            _ => "other",
+        };
+        b.bench(&format!("gram_block_sweep/{name}_512x512"), || {
+            black_box(kernel.gram_symmetric(&x));
+        });
+    }
+
+    // ---- AOT artifact vs native (canonical shapes) ----
+    {
+        let ex = HybridExec::auto();
+        let phi = random_mat(&mut rng, j, 6, 0.05);
+        let signs = [1.0, 1.0, 1.0, 1.0, -1.0, -1.0];
+        if ex.has_aot() {
+            b.bench("aot_vs_native/woodbury_aot_J253_H6", || {
+                black_box(ex.woodbury_incdec(&s_inv, &phi, &signs).unwrap());
+            });
+        } else {
+            eprintln!("(aot_vs_native: artifacts not found, skipping AOT side)");
+        }
+        b.bench("aot_vs_native/woodbury_native_J253_H6", || {
+            black_box(ex.woodbury_native(&s_inv, &phi, &signs).unwrap());
+        });
+    }
+
+    // ---- full-scale sparse DRT (paper M=1e6; dense would be 6.4 GB) ----
+    if b.enabled("sparse_full_scale") {
+        let (xs, ys) = mikrr::data::synth::drt_like_sparse(160, 1_000_000, 0.009, 3);
+        b.bench("sparse_full_scale/gram_160x160_M1e6", || {
+            black_box(xs.gram(&xs, &Kernel::poly(2, 1.0)).unwrap());
+        });
+        let mut model =
+            mikrr::krr::empirical_sparse::SparseEmpiricalKrr::fit(&xs, &ys, &Kernel::poly(2, 1.0), 0.5)
+                .unwrap();
+        // cycle fresh batches (+4/−4 keeps n constant and the set duplicate-
+        // free: each inserted row is removed ~40 iterations later, long
+        // before its batch recurs)
+        let pool: Vec<_> = (0..50)
+            .map(|k| mikrr::data::synth::drt_like_sparse(4, 1_000_000, 0.009, 100 + k))
+            .collect();
+        let mut iter = 0usize;
+        b.bench("sparse_full_scale/incdec_plus4_minus4", || {
+            let (xc, yc) = &pool[iter % pool.len()];
+            model.inc_dec(xc, yc, &[0, 1, 2, 3]).unwrap();
+            iter += 1;
+        });
+    }
+
+    // ---- substrate hot spots ----
+    {
+        let table = Kernel::poly(2, 1.0).feature_table(21).unwrap();
+        let xb = random_mat(&mut rng, 256, 21, 0.5);
+        b.bench("featmap/poly2_256x21", || {
+            black_box(table.map(&xb));
+        });
+        let a = random_mat(&mut rng, 253, 253, 1.0);
+        let c = random_mat(&mut rng, 253, 253, 1.0);
+        b.bench("gemm/253x253x253", || {
+            black_box(mikrr::linalg::gemm::matmul(&a, &c).unwrap());
+        });
+        let spd = random_spd(&mut rng, 253, 30.0);
+        b.bench("spd_inverse/253", || {
+            black_box(spd_inverse(&spd).unwrap());
+        });
+    }
+
+    println!("\nmicrobench done ({} benchmarks).", b.results.len());
+}

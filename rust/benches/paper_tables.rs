@@ -1,0 +1,151 @@
+//! Paper-table benchmarks: one bench id per table/figure of the paper's
+//! evaluation (DESIGN.md §5 experiment index).
+//!
+//! Run all:            cargo bench --bench paper_tables
+//! One cell:           cargo bench --bench paper_tables -- --filter ecg_poly2
+//! Quick smoke:        cargo bench --bench paper_tables -- --quick
+//! Paper-scale ECG:    MIKRR_FULL_SCALE=1 cargo bench --bench paper_tables
+//!
+//! Each cell runs the three strategies over 10 rounds of +4/−2 (the exact
+//! protocol of §V), prints the per-round log10 table and the cumulative
+//! curves, and asserts the qualitative result (multiple < single < none,
+//! identical accuracy).
+
+use mikrr::benchlib::Bencher;
+use mikrr::config::Space;
+use mikrr::coordinator::experiment::{run_kbr, run_krr, Strategy};
+use mikrr::data::synth;
+use mikrr::data::Dataset;
+use mikrr::kbr::KbrHyper;
+use mikrr::kernels::Kernel;
+
+struct Sizes {
+    ecg_train: usize,
+    drt_train: usize,
+    drt_dim: usize,
+    rounds: usize,
+}
+
+fn sizes(quick: bool) -> Sizes {
+    if std::env::var("MIKRR_FULL_SCALE").is_ok() {
+        // paper dims: ECG 83 226 train (of 104 033), DRT 640 of 800, M=1e6
+        Sizes { ecg_train: 83_226, drt_train: 640, drt_dim: 1_000_000, rounds: 10 }
+    } else if quick {
+        Sizes { ecg_train: 600, drt_train: 200, drt_dim: 1_500, rounds: 3 }
+    } else {
+        Sizes { ecg_train: 3_000, drt_train: 640, drt_dim: 8_000, rounds: 10 }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let mut b = Bencher::from_args(args);
+    let sz = sizes(quick);
+    let seed = 7u64;
+
+    eprintln!(
+        "generating datasets (ECG n={}, DRT n={} M={})...",
+        sz.ecg_train, sz.drt_train, sz.drt_dim
+    );
+    let need_ecg = b.enabled("ecg");
+    let need_drt = b.enabled("drt");
+    let ecg: Option<Dataset> = need_ecg
+        .then(|| synth::ecg_like(sz.ecg_train + sz.rounds * 4 + 1_000, 21, seed));
+    let drt: Option<Dataset> = need_drt
+        .then(|| synth::drt_like(sz.drt_train + sz.rounds * 4 + 120, sz.drt_dim, 0.01, seed));
+
+    let strategies = [Strategy::Multiple, Strategy::Single, Strategy::None];
+
+    // ----- Tables IV-VIII / Figures 2-6 (KRR) -----
+    let krr_cells: [(&str, bool, Kernel, Space, usize); 5] = [
+        ("ecg_poly2 [Table IV / Fig 2]", true, Kernel::poly(2, 1.0), Space::Intrinsic, sz.ecg_train),
+        ("ecg_poly3 [Table V / Fig 3]", true, Kernel::poly(3, 1.0), Space::Intrinsic, sz.ecg_train),
+        ("drt_poly2 [Table VI / Fig 4]", false, Kernel::poly(2, 1.0), Space::Empirical, sz.drt_train),
+        ("drt_poly3 [Table VII / Fig 5]", false, Kernel::poly(3, 1.0), Space::Empirical, sz.drt_train),
+        ("drt_rbf   [Table VIII / Fig 6]", false, Kernel::rbf_radius(50.0), Space::Empirical, sz.drt_train),
+    ];
+    let mut krr_summaries = Vec::new();
+    for (id, is_ecg, kernel, space, train) in krr_cells {
+        if !b.enabled(id) {
+            continue;
+        }
+        let data = if is_ecg { ecg.as_ref().unwrap() } else { drt.as_ref().unwrap() };
+        let mut report = None;
+        b.bench_once(id, || {
+            report = Some(
+                run_krr(data, &kernel, 0.5, space, train, sz.rounds, 4, 2, seed, &strategies)
+                    .expect("experiment cell failed"),
+            );
+        });
+        let report = report.unwrap();
+        println!("{}", report.record.render_table(&format!(
+            "{id}: per-round log10 s (acc {:.2}%, strategies agree: {})",
+            100.0 * report.accuracy, report.strategies_agree
+        )));
+        println!("{}", report.record.render_curves(&format!("{id} cumulative")));
+        assert!(report.strategies_agree, "{id}: accuracy invariance violated");
+        assert!(
+            report.record.mean_seconds("multiple") < report.record.mean_seconds("single"),
+            "{id}: multiple not faster than single"
+        );
+        krr_summaries.push((
+            id,
+            report.record.mean_seconds("multiple"),
+            report.record.mean_seconds("single"),
+            report.record.mean_seconds("none"),
+            report.record.improvement_fold("multiple", "single"),
+        ));
+    }
+    if !krr_summaries.is_empty() {
+        println!("\n=== Table IX: KRR average computational time in a single round ===");
+        println!(
+            "{:<34} {:>12} {:>12} {:>12} {:>13}",
+            "cell", "multiple(s)", "single(s)", "none(s)", "fold(mvs s)"
+        );
+        for (id, m, s, n, f) in &krr_summaries {
+            println!("{id:<34} {m:>12.6} {s:>12.6} {n:>12.6} {f:>12.2}x");
+        }
+    }
+
+    // ----- Tables X-XI / Figures 7-8 (KBR) -----
+    let mut kbr_summaries = Vec::new();
+    for (id, kernel) in [
+        ("kbr_ecg_poly2 [Table X / Fig 7]", Kernel::poly(2, 1.0)),
+        ("kbr_ecg_poly3 [Table XI / Fig 8]", Kernel::poly(3, 1.0)),
+    ] {
+        if !b.enabled(id) {
+            continue;
+        }
+        let data = ecg.as_ref().expect("ecg needed for kbr cells");
+        let mut report = None;
+        b.bench_once(id, || {
+            report = Some(
+                run_kbr(data, &kernel, KbrHyper::default(), sz.ecg_train, sz.rounds, 4, 2, seed, true)
+                    .expect("kbr cell failed"),
+            );
+        });
+        let report = report.unwrap();
+        println!("{}", report.record.render_table(&format!(
+            "{id}: per-round log10 s (posteriors agree: {})",
+            report.strategies_agree
+        )));
+        println!("{}", report.record.render_curves(&format!("{id} cumulative")));
+        assert!(report.strategies_agree, "{id}: posterior mismatch");
+        kbr_summaries.push((
+            id,
+            report.record.mean_seconds("multiple"),
+            report.record.mean_seconds("single"),
+            report.record.improvement_fold("multiple", "single"),
+        ));
+    }
+    if !kbr_summaries.is_empty() {
+        println!("\n=== Table XII: KBR average computational time in a single round ===");
+        println!("{:<34} {:>12} {:>12} {:>13}", "cell", "multiple(s)", "single(s)", "fold");
+        for (id, m, s, f) in &kbr_summaries {
+            println!("{id:<34} {m:>12.6} {s:>12.6} {f:>12.2}x");
+        }
+    }
+
+    println!("\npaper_tables done ({} cells).", b.results.len());
+}

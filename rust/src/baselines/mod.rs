@@ -1,0 +1,256 @@
+//! The paper's two comparison baselines (§V):
+//!
+//! * [`Nonincremental`] — recompute the whole model from scratch after each
+//!   round of data operations (the green curves).
+//! * [`SingleIncremental`] — apply every insertion and deletion as its own
+//!   rank-1 update (the red curves; Engel et al. / recursive-KRR style).
+//! * [`SingleIncKbr`] — the single-instance KBR baseline for Figs. 7-8.
+//!
+//! All baselines produce *identical estimators* to the multiple-incremental
+//! engines (that's the paper's accuracy-invariance claim); only their
+//! computational profile differs.
+
+use crate::config::Space;
+use crate::error::Result;
+use crate::kbr::{KbrHyper, KbrModel};
+use crate::kernels::Kernel;
+use crate::krr::empirical::EmpiricalKrr;
+use crate::krr::intrinsic::IntrinsicKrr;
+use crate::krr::KrrModel;
+use crate::linalg::Mat;
+
+/// Full-retrain baseline: stores the raw dataset, refits on every round.
+pub struct Nonincremental {
+    kernel: Kernel,
+    rho: f64,
+    space: Space,
+    x: Mat,
+    y: Vec<f64>,
+    model: Box<dyn KrrModel>,
+}
+
+impl Nonincremental {
+    /// Initial fit.
+    pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, rho: f64, space: Space) -> Result<Self> {
+        let model = fit_space(x, y, kernel, rho, space)?;
+        Ok(Self {
+            kernel: kernel.clone(),
+            rho,
+            space,
+            x: x.clone(),
+            y: y.to_vec(),
+            model,
+        })
+    }
+
+    /// Training-set size.
+    pub fn n_samples(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Predict through the current model.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        self.model.predict(x)
+    }
+
+    /// One round: edit the dataset, then retrain from scratch
+    /// (the O(N J^2 + J^3) / O(N^2 M + N^3) cost the paper highlights).
+    pub fn round(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        let mut rem: Vec<usize> = remove_idx.to_vec();
+        rem.sort_unstable();
+        rem.dedup();
+        self.x.remove_rows(&rem)?;
+        for (i, &ri) in rem.iter().enumerate() {
+            self.y.remove(ri - i);
+        }
+        if x_new.rows() > 0 {
+            self.x = self.x.vcat(x_new)?;
+            self.y.extend_from_slice(y_new);
+        }
+        self.model = fit_space(&self.x, &self.y, &self.kernel, self.rho, self.space)?;
+        Ok(())
+    }
+}
+
+/// Single-instance incremental baseline: same engines, but every inserted
+/// sample is one rank-1 update and every removed sample one rank-1
+/// downdate — |C| + |R| separate updates (and head refreshes) per round.
+pub struct SingleIncremental {
+    model: Box<dyn KrrModel>,
+}
+
+impl SingleIncremental {
+    /// Initial fit (same cost as the multiple engine's bootstrap).
+    pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, rho: f64, space: Space) -> Result<Self> {
+        Ok(Self { model: fit_space(x, y, kernel, rho, space)? })
+    }
+
+    /// Predict through the engine.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        self.model.predict(x)
+    }
+
+    /// Training-set size.
+    pub fn n_samples(&self) -> usize {
+        self.model.n_samples()
+    }
+
+    /// One round as (|R| removals + |C| insertions), each its own update.
+    /// Removals go first with indices adjusted as the set shrinks.
+    pub fn round(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        let mut rem: Vec<usize> = remove_idx.to_vec();
+        rem.sort_unstable();
+        rem.dedup();
+        // descending order keeps earlier indices stable
+        for &ri in rem.iter().rev() {
+            self.model.inc_dec(&Mat::zeros(0, x_new.cols()), &[], &[ri])?;
+        }
+        for r in 0..x_new.rows() {
+            let xi = Mat::from_vec(1, x_new.cols(), x_new.row(r).to_vec())?;
+            self.model.inc_dec(&xi, &[y_new[r]], &[])?;
+        }
+        Ok(())
+    }
+}
+
+/// Single-instance incremental KBR baseline (paper Figs. 7-8).
+pub struct SingleIncKbr {
+    model: KbrModel,
+}
+
+impl SingleIncKbr {
+    /// Initial posterior fit.
+    pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, hyper: KbrHyper) -> Result<Self> {
+        Ok(Self { model: KbrModel::fit(x, y, kernel, hyper)? })
+    }
+
+    /// Inner model access.
+    pub fn model(&self) -> &KbrModel {
+        &self.model
+    }
+
+    /// One round as single-sample posterior updates.
+    pub fn round(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        let mut rem: Vec<usize> = remove_idx.to_vec();
+        rem.sort_unstable();
+        rem.dedup();
+        for &ri in rem.iter().rev() {
+            self.model.inc_dec(&Mat::zeros(0, x_new.cols()), &[], &[ri])?;
+        }
+        for r in 0..x_new.rows() {
+            let xi = Mat::from_vec(1, x_new.cols(), x_new.row(r).to_vec())?;
+            self.model.inc_dec(&xi, &[y_new[r]], &[])?;
+        }
+        Ok(())
+    }
+}
+
+fn fit_space(
+    x: &Mat,
+    y: &[f64],
+    kernel: &Kernel,
+    rho: f64,
+    space: Space,
+) -> Result<Box<dyn KrrModel>> {
+    Ok(match space {
+        Space::Intrinsic => Box::new(IntrinsicKrr::fit(x, y, kernel, rho)?),
+        Space::Empirical => Box::new(EmpiricalKrr::fit(x, y, kernel, rho)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::dot;
+    use crate::testutil::assert_vec_close;
+    use crate::util::prng::Rng;
+
+    fn data(n: usize, m: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f64> = rng.gaussian_vec(m);
+        let x = Mat::from_fn(n, m, |_, _| 0.5 * rng.gaussian());
+        let y: Vec<f64> = (0..n)
+            .map(|i| dot(x.row(i), &w) + 0.05 * rng.gaussian())
+            .collect();
+        (x, y)
+    }
+
+    /// The paper's accuracy-invariance claim: all three strategies produce
+    /// the same predictions after the same rounds.
+    #[test]
+    fn all_three_strategies_agree_intrinsic() {
+        let (x, y) = data(40, 4, 1);
+        let (xt, _) = data(10, 4, 2);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut none = Nonincremental::fit(&x, &y, &kernel, 0.5, Space::Intrinsic).unwrap();
+        let mut single = SingleIncremental::fit(&x, &y, &kernel, 0.5, Space::Intrinsic).unwrap();
+        let mut multiple = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let mut rng = Rng::new(3);
+        let mut n_cur = y.len();
+        for round in 0..4 {
+            let (xc, yc) = data(4, 4, 50 + round);
+            let rem = rng.sample_indices(n_cur, 2);
+            none.round(&xc, &yc, &rem).unwrap();
+            single.round(&xc, &yc, &rem).unwrap();
+            multiple.inc_dec(&xc, &yc, &rem).unwrap();
+            n_cur = n_cur + 4 - 2;
+        }
+        let p0 = none.predict(&xt).unwrap();
+        let p1 = single.predict(&xt).unwrap();
+        let p2 = multiple.predict(&xt).unwrap();
+        assert_vec_close(&p1, &p0, 1e-6);
+        assert_vec_close(&p2, &p0, 1e-6);
+    }
+
+    #[test]
+    fn all_three_strategies_agree_empirical_rbf() {
+        let (x, y) = data(25, 5, 4);
+        let (xt, _) = data(6, 5, 5);
+        let kernel = Kernel::rbf_radius(2.0);
+        let mut none = Nonincremental::fit(&x, &y, &kernel, 0.5, Space::Empirical).unwrap();
+        let mut single = SingleIncremental::fit(&x, &y, &kernel, 0.5, Space::Empirical).unwrap();
+        let mut multiple = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let mut rng = Rng::new(6);
+        let mut n_cur = y.len();
+        for round in 0..3 {
+            let (xc, yc) = data(4, 5, 80 + round);
+            let rem = rng.sample_indices(n_cur, 2);
+            none.round(&xc, &yc, &rem).unwrap();
+            single.round(&xc, &yc, &rem).unwrap();
+            multiple.inc_dec(&xc, &yc, &rem).unwrap();
+            n_cur = n_cur + 4 - 2;
+        }
+        let p0 = none.predict(&xt).unwrap();
+        let p1 = single.predict(&xt).unwrap();
+        let p2 = multiple.predict(&xt).unwrap();
+        assert_vec_close(&p1, &p0, 1e-5);
+        assert_vec_close(&p2, &p0, 1e-5);
+    }
+
+    #[test]
+    fn kbr_single_matches_multiple() {
+        let (x, y) = data(30, 3, 7);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut single = SingleIncKbr::fit(&x, &y, &kernel, KbrHyper::default()).unwrap();
+        let mut multiple = KbrModel::fit(&x, &y, &kernel, KbrHyper::default()).unwrap();
+        let (xc, yc) = data(4, 3, 8);
+        let rem = [2usize, 19];
+        single.round(&xc, &yc, &rem).unwrap();
+        multiple.inc_dec(&xc, &yc, &rem).unwrap();
+        assert_vec_close(
+            single.model().posterior_mean(),
+            multiple.posterior_mean(),
+            1e-6,
+        );
+    }
+
+    #[test]
+    fn sizes_track() {
+        let (x, y) = data(10, 3, 9);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut none = Nonincremental::fit(&x, &y, &kernel, 0.5, Space::Intrinsic).unwrap();
+        let (xc, yc) = data(4, 3, 10);
+        none.round(&xc, &yc, &[0, 1]).unwrap();
+        assert_eq!(none.n_samples(), 12);
+    }
+}

@@ -1,0 +1,285 @@
+//! Criterion-lite benchmark harness (the offline crate set has no criterion).
+//!
+//! Provides warmup + adaptive iteration-count measurement with summary
+//! statistics, a `black_box` sink, simple CLI filtering (`cargo bench --
+//! --filter <substr>`), and a renderer for the paper-style tables used by
+//! `rust/benches/paper_tables.rs`.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One benchmark's summary statistics, in seconds.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    /// Benchmark id.
+    pub name: String,
+    /// Measured per-iteration times.
+    pub samples: Vec<f64>,
+}
+
+impl Summary {
+    /// Mean seconds/iteration.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    /// Median seconds/iteration.
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    /// Minimum.
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter (median {:>12}, sd {:>10}, n={})",
+            self.name,
+            crate::util::fmt_secs(self.mean()),
+            crate::util::fmt_secs(self.median()),
+            crate::util::fmt_secs(self.stddev()),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup_secs: f64,
+    /// Measurement wall-clock budget.
+    pub measure_secs: f64,
+    /// Minimum sample count.
+    pub min_samples: usize,
+    /// Maximum sample count.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_secs: 0.3, measure_secs: 1.5, min_samples: 5, max_samples: 200 }
+    }
+}
+
+/// The bench runner: owns filtering and collected results.
+pub struct Bencher {
+    cfg: BenchConfig,
+    filter: Option<String>,
+    /// All summaries collected so far.
+    pub results: Vec<Summary>,
+    quiet: bool,
+}
+
+impl Bencher {
+    /// Build from CLI args (supports `--filter <substr>`, `--quick`).
+    pub fn from_args<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let args: Vec<String> = args.into_iter().collect();
+        let mut filter = None;
+        let mut cfg = BenchConfig::default();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--filter" => {
+                    if i + 1 < args.len() {
+                        filter = Some(args[i + 1].clone());
+                        i += 1;
+                    }
+                }
+                "--quick" => {
+                    cfg.warmup_secs = 0.05;
+                    cfg.measure_secs = 0.2;
+                    cfg.min_samples = 3;
+                }
+                // ignore cargo-bench builtins like --bench
+                _ => {}
+            }
+            i += 1;
+        }
+        Self { cfg, filter, results: Vec::new(), quiet: false }
+    }
+
+    /// New with explicit config.
+    pub fn new(cfg: BenchConfig) -> Self {
+        Self { cfg, filter: None, results: Vec::new(), quiet: false }
+    }
+
+    /// Suppress per-bench output.
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Should this benchmark run under the current filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().is_none_or(|f| name.contains(f))
+    }
+
+    /// Measure `f` (one call = one iteration).  Returns None if filtered out.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<&Summary> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // warmup + per-iteration cost estimate
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.cfg.warmup_secs || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est = t0.elapsed().as_secs_f64() / warm_iters as f64;
+        // choose sample count within the measurement budget
+        let n = ((self.cfg.measure_secs / est.max(1e-9)) as usize)
+            .clamp(self.cfg.min_samples, self.cfg.max_samples);
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let summary = Summary { name: name.to_string(), samples };
+        if !self.quiet {
+            println!("{}", summary.render());
+        }
+        self.results.push(summary);
+        self.results.last()
+    }
+
+    /// Time a single invocation (for expensive end-to-end cells where the
+    /// paper itself reports one round).  Records a 1-sample summary.
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) -> Option<&Summary> {
+        if !self.enabled(name) {
+            return None;
+        }
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        let summary = Summary { name: name.to_string(), samples: vec![dt] };
+        if !self.quiet {
+            println!("{}", summary.render());
+        }
+        self.results.push(summary);
+        self.results.last()
+    }
+}
+
+/// Paper-style table renderer: a header row of column labels and named rows
+/// of f64 cells, printed with fixed precision (the paper reports log10
+/// seconds to 6 decimals).
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<f64>)>,
+    precision: usize,
+}
+
+impl Table {
+    /// New table with a title and column labels.
+    pub fn new(title: impl Into<String>, columns: Vec<String>) -> Self {
+        Self { title: title.into(), columns, rows: Vec::new(), precision: 6 }
+    }
+
+    /// Set cell precision.
+    pub fn precision(mut self, p: usize) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Add a named row.
+    pub fn row(&mut self, name: impl Into<String>, cells: Vec<f64>) {
+        self.rows.push((name.into(), cells));
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let p = self.precision;
+        let w = (p + 6).max(10);
+        let mut out = format!("\n=== {} ===\n", self.title);
+        out.push_str(&format!("{:<12}", ""));
+        for c in &self.columns {
+            out.push_str(&format!("{c:>w$}"));
+        }
+        out.push('\n');
+        for (name, cells) in &self.rows {
+            out.push_str(&format!("{name:<12}"));
+            for v in cells {
+                out.push_str(&format!("{v:>w$.p$}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_secs: 0.001,
+            measure_secs: 0.01,
+            min_samples: 3,
+            max_samples: 10,
+        })
+        .quiet();
+        let mut acc = 0u64;
+        b.bench("tiny", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let s = &b.results[0];
+        assert!(s.samples.len() >= 3);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher::from_args(vec!["--filter".into(), "yes".into()]).quiet();
+        assert!(b.bench("no_match", || {}).is_none());
+        assert!(b.bench("yes_match", || {}).is_some());
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn quick_mode() {
+        let b = Bencher::from_args(vec!["--quick".into()]);
+        assert!(b.cfg.measure_secs < 0.5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Table IV", vec!["83226".into(), "83228".into()]);
+        t.row("Multiple", vec![-0.5375, -0.6652]);
+        t.row("Single", vec![0.0477, 0.0437]);
+        let s = t.render();
+        assert!(s.contains("Table IV"));
+        assert!(s.contains("Multiple"));
+        assert!(s.contains("-0.537500"));
+    }
+
+    #[test]
+    fn bench_once_records() {
+        let mut b = Bencher::new(BenchConfig::default()).quiet();
+        b.bench_once("one", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(b.results[0].samples.len(), 1);
+        assert!(b.results[0].mean() >= 0.001);
+    }
+}

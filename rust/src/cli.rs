@@ -1,0 +1,283 @@
+//! Declarative CLI parsing (clap-lite, no external crates).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! typed accessors with defaults, required flags, and generated help text.
+//!
+//! ```no_run
+//! use mikrr::cli::{App, Arg};
+//! let app = App::new("mikrr", "incremental KRR coordinator")
+//!     .subcommand(
+//!         App::new("serve", "run the streaming coordinator")
+//!             .arg(Arg::flag("rounds", "number of stream rounds").default("10")),
+//!     );
+//! let m = app.parse(std::env::args().skip(1)).unwrap();
+//! ```
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// One flag specification.
+#[derive(Clone, Debug)]
+pub struct Arg {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    required: bool,
+    is_switch: bool,
+}
+
+impl Arg {
+    /// A `--name <value>` flag.
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: false, is_switch: false }
+    }
+
+    /// A boolean `--name` switch (no value).
+    pub fn switch(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: false, is_switch: true }
+    }
+
+    /// Set a default value.
+    pub fn default(mut self, v: &str) -> Self {
+        self.default = Some(v.to_string());
+        self
+    }
+
+    /// Mark required.
+    pub fn required(mut self) -> Self {
+        self.required = true;
+        self
+    }
+}
+
+/// An application or subcommand.
+#[derive(Clone, Debug)]
+pub struct App {
+    name: &'static str,
+    about: &'static str,
+    args: Vec<Arg>,
+    subs: Vec<App>,
+}
+
+/// Parse result: matched subcommand path and flag values.
+#[derive(Debug, Default)]
+pub struct Matches {
+    /// Chain of matched subcommand names (empty for the root).
+    pub subcommand: Vec<&'static str>,
+    values: BTreeMap<&'static str, String>,
+    switches: BTreeMap<&'static str, bool>,
+    /// Positional arguments (anything not starting with `--`).
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    /// String value of a flag (default applied).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed accessor.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("missing flag --{name}")))?;
+        raw.parse::<T>()
+            .map_err(|_| Error::Config(format!("flag --{name}: cannot parse {raw:?}")))
+    }
+
+    /// Boolean switch state.
+    pub fn is_set(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// Last matched subcommand (or "" at root).
+    pub fn cmd(&self) -> &str {
+        self.subcommand.last().copied().unwrap_or("")
+    }
+}
+
+impl App {
+    /// New app/subcommand.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, args: Vec::new(), subs: Vec::new() }
+    }
+
+    /// Add a flag.
+    pub fn arg(mut self, a: Arg) -> Self {
+        self.args.push(a);
+        self
+    }
+
+    /// Add a subcommand.
+    pub fn subcommand(mut self, s: App) -> Self {
+        self.subs.push(s);
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            out.push_str("<COMMAND> ");
+        }
+        out.push_str("[FLAGS]\n");
+        if !self.subs.is_empty() {
+            out.push_str("\nCOMMANDS:\n");
+            for s in &self.subs {
+                out.push_str(&format!("  {:<18} {}\n", s.name, s.about));
+            }
+        }
+        if !self.args.is_empty() {
+            out.push_str("\nFLAGS:\n");
+            for a in &self.args {
+                let mut line = format!("  --{}", a.name);
+                if !a.is_switch {
+                    line.push_str(" <v>");
+                }
+                let mut help = a.help.to_string();
+                if let Some(d) = &a.default {
+                    help.push_str(&format!(" [default: {d}]"));
+                }
+                if a.required {
+                    help.push_str(" (required)");
+                }
+                out.push_str(&format!("{line:<26} {help}\n"));
+            }
+        }
+        out
+    }
+
+    /// Parse an argument iterator (excluding argv[0]).
+    pub fn parse<I>(&self, args: I) -> Result<Matches>
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let mut m = Matches::default();
+        self.parse_into(&mut args.into_iter().peekable(), &mut m)?;
+        Ok(m)
+    }
+
+    fn parse_into(
+        &self,
+        it: &mut std::iter::Peekable<impl Iterator<Item = String>>,
+        m: &mut Matches,
+    ) -> Result<()> {
+        // defaults first
+        for a in &self.args {
+            if let Some(d) = &a.default {
+                m.values.insert(a.name, d.clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::Config(self.help()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| {
+                        Error::Config(format!("unknown flag --{key} for {}", self.name))
+                    })?;
+                if spec.is_switch {
+                    if inline_val.is_some() {
+                        return Err(Error::Config(format!("switch --{key} takes no value")));
+                    }
+                    m.switches.insert(spec.name, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            Error::Config(format!("flag --{key} needs a value"))
+                        })?,
+                    };
+                    m.values.insert(spec.name, v);
+                }
+            } else if let Some(sub) = self.subs.iter().find(|s| s.name == tok) {
+                m.subcommand.push(sub.name);
+                return sub.parse_into(it, m);
+            } else {
+                m.positional.push(tok);
+            }
+        }
+        for a in &self.args {
+            if a.required && !m.values.contains_key(a.name) {
+                return Err(Error::Config(format!("missing required flag --{}", a.name)));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("t", "test app")
+            .subcommand(
+                App::new("run", "run it")
+                    .arg(Arg::flag("n", "count").default("5"))
+                    .arg(Arg::flag("name", "label").required())
+                    .arg(Arg::switch("fast", "go fast")),
+            )
+            .subcommand(App::new("info", "show info"))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let m = app()
+            .parse(vec!["run".into(), "--name".into(), "x".into(), "--fast".into()])
+            .unwrap();
+        assert_eq!(m.cmd(), "run");
+        assert_eq!(m.get("name"), Some("x"));
+        assert_eq!(m.get_parse::<usize>("n").unwrap(), 5);
+        assert!(m.is_set("fast"));
+    }
+
+    #[test]
+    fn inline_equals() {
+        let m = app()
+            .parse(vec!["run".into(), "--name=x".into(), "--n=9".into()])
+            .unwrap();
+        assert_eq!(m.get_parse::<usize>("n").unwrap(), 9);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(app().parse(vec!["run".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let e = app().parse(vec!["run".into(), "--bogus".into(), "1".into()]);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let m = app().parse(vec!["info".into(), "extra".into()]).unwrap();
+        assert_eq!(m.cmd(), "info");
+        assert_eq!(m.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = app().help();
+        assert!(h.contains("COMMANDS"));
+        assert!(h.contains("run"));
+    }
+
+    #[test]
+    fn bad_parse_type() {
+        let m = app()
+            .parse(vec!["run".into(), "--name".into(), "x".into(), "--n".into(), "zz".into()])
+            .unwrap();
+        assert!(m.get_parse::<usize>("n").is_err());
+    }
+}

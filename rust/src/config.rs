@@ -1,0 +1,240 @@
+//! Experiment/runtime configuration: a line-oriented `key = value` format
+//! (TOML subset: comments, sections flattened as `section.key`), plus typed
+//! accessors and CLI-override merging.  Also hosts the canonical
+//! [`ExperimentConfig`] used by the paper-reproduction benches and examples.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flat key-value configuration with dotted sections.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            map.insert(key, val);
+        }
+        Ok(Self { map })
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| Error::Config(format!("key {key}: cannot parse {raw:?}"))),
+        }
+    }
+
+    /// Set/override a value.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.map.insert(key.to_string(), value.into());
+    }
+
+    /// Merge `other` on top of `self`.
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.map {
+            self.map.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Number of keys.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Which operating space an engine runs in (paper §II vs §III).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Space {
+    /// Feature-space `S^-1` maintenance — right when N >> J.
+    Intrinsic,
+    /// Sample-space `Q^-1` maintenance — right when M >> N (and for RBF).
+    Empirical,
+}
+
+impl std::str::FromStr for Space {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "intrinsic" => Ok(Space::Intrinsic),
+            "empirical" => Ok(Space::Empirical),
+            other => Err(Error::Config(format!("unknown space {other:?}"))),
+        }
+    }
+}
+
+/// Canonical experiment description (one paper table/figure cell).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset name ("ecg" or "drt").
+    pub dataset: String,
+    /// Kernel spec ("poly2", "poly3", "rbf").
+    pub kernel: String,
+    /// Ridge parameter rho (paper: 0.5 for KRR).
+    pub ridge: f64,
+    /// Basic (initial) training size.
+    pub train_size: usize,
+    /// Samples added per round (paper: 4).
+    pub inc_per_round: usize,
+    /// Samples removed per round (paper: 2).
+    pub dec_per_round: usize,
+    /// Number of rounds (paper: 10).
+    pub rounds: usize,
+    /// Operating space.
+    pub space: Space,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Paper defaults for the ECG-like intrinsic-space experiments.
+    pub fn ecg(kernel: &str, train_size: usize) -> Self {
+        Self {
+            dataset: "ecg".into(),
+            kernel: kernel.into(),
+            ridge: 0.5,
+            train_size,
+            inc_per_round: 4,
+            dec_per_round: 2,
+            rounds: 10,
+            space: Space::Intrinsic,
+            seed: 0xEC6,
+        }
+    }
+
+    /// Paper defaults for the DRT-like empirical-space experiments.
+    pub fn drt(kernel: &str, train_size: usize) -> Self {
+        Self {
+            dataset: "drt".into(),
+            kernel: kernel.into(),
+            ridge: 0.5,
+            train_size,
+            inc_per_round: 4,
+            dec_per_round: 2,
+            rounds: 10,
+            space: Space::Empirical,
+            seed: 0xD27,
+        }
+    }
+
+    /// Build from a [`Config`] section (keys: `exp.dataset`, `exp.kernel`...).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let dataset: String = cfg.get_or("exp.dataset", "ecg".to_string())?;
+        let space = if dataset == "drt" { Space::Empirical } else { Space::Intrinsic };
+        Ok(Self {
+            dataset,
+            kernel: cfg.get_or("exp.kernel", "poly2".to_string())?,
+            ridge: cfg.get_or("exp.ridge", 0.5)?,
+            train_size: cfg.get_or("exp.train_size", 2000usize)?,
+            inc_per_round: cfg.get_or("exp.inc_per_round", 4usize)?,
+            dec_per_round: cfg.get_or("exp.dec_per_round", 2usize)?,
+            rounds: cfg.get_or("exp.rounds", 10usize)?,
+            space: cfg
+                .get("exp.space")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(space),
+            seed: cfg.get_or("exp.seed", 7u64)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basics() {
+        let c = Config::parse(
+            "# comment\nfoo = 1\n[exp]\ndataset = \"drt\"\nridge = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("foo"), Some("1"));
+        assert_eq!(c.get("exp.dataset"), Some("drt"));
+        assert_eq!(c.get_or("exp.ridge", 0.0).unwrap(), 0.5);
+        assert_eq!(c.get_or("missing", 9usize).unwrap(), 9);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Config::parse("novalue\n").is_err());
+        let c = Config::parse("x = abc\n").unwrap();
+        assert!(c.get_or("x", 1.0f64).is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::parse("x = 1\ny = 2\n").unwrap();
+        let b = Config::parse("y = 3\nz = 4\n").unwrap();
+        a.merge(&b);
+        assert_eq!(a.get("y"), Some("3"));
+        assert_eq!(a.get("z"), Some("4"));
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn experiment_from_config() {
+        let c = Config::parse("[exp]\ndataset = drt\nkernel = rbf\nrounds = 3\n").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.space, Space::Empirical);
+        assert_eq!(e.kernel, "rbf");
+        assert_eq!(e.rounds, 3);
+        assert_eq!(e.inc_per_round, 4);
+    }
+
+    #[test]
+    fn space_parse() {
+        assert_eq!("intrinsic".parse::<Space>().unwrap(), Space::Intrinsic);
+        assert!("weird".parse::<Space>().is_err());
+    }
+
+    #[test]
+    fn paper_defaults() {
+        let e = ExperimentConfig::ecg("poly2", 1000);
+        assert_eq!(e.inc_per_round, 4);
+        assert_eq!(e.dec_per_round, 2);
+        assert_eq!(e.rounds, 10);
+        assert_eq!(e.ridge, 0.5);
+    }
+}

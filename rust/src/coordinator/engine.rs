@@ -1,0 +1,239 @@
+//! The coordinator's engine: a space-routed KRR model, optionally paired
+//! with a KBR posterior for uncertainty serving, with snapshot/rollback.
+//!
+//! Snapshots are cheap-ish full copies of the maintained state (the state
+//! IS the model — S^-1/Q^-1 plus stores); the coordinator takes one before
+//! each numerically risky batched update and restores on failure.
+
+use crate::config::Space;
+use crate::error::{Error, Result};
+use crate::kbr::{KbrHyper, KbrModel};
+use crate::kernels::Kernel;
+use crate::krr::empirical::EmpiricalKrr;
+use crate::krr::intrinsic::IntrinsicKrr;
+use crate::krr::KrrModel;
+use crate::linalg::Mat;
+
+/// Engine variants by operating space.
+#[derive(Clone)]
+enum KrrEngine {
+    Intrinsic(IntrinsicKrr),
+    Empirical(EmpiricalKrr),
+}
+
+/// The routed engine (KRR + optional KBR twin).
+#[derive(Clone)]
+pub struct Engine {
+    krr: KrrEngine,
+    kbr: Option<KbrModel>,
+    space: Space,
+    /// Raw training features, kept in engine order (for outlier scoring
+    /// and the empirical cross-kernels).
+    x: Mat,
+    y: Vec<f64>,
+    kernel: Kernel,
+    ridge: f64,
+}
+
+/// Opaque snapshot for rollback.
+pub struct Snapshot {
+    state: Box<Engine>,
+}
+
+impl Engine {
+    /// Fit in the given space.
+    pub fn fit(
+        x: &Mat,
+        y: &[f64],
+        kernel: &Kernel,
+        ridge: f64,
+        space: Space,
+        with_uncertainty: bool,
+    ) -> Result<Self> {
+        let krr = match space {
+            Space::Intrinsic => KrrEngine::Intrinsic(IntrinsicKrr::fit(x, y, kernel, ridge)?),
+            Space::Empirical => KrrEngine::Empirical(EmpiricalKrr::fit(x, y, kernel, ridge)?),
+        };
+        let kbr = if with_uncertainty {
+            Some(KbrModel::fit(x, y, kernel, KbrHyper::default())?)
+        } else {
+            None
+        };
+        Ok(Self {
+            krr,
+            kbr,
+            space,
+            x: x.clone(),
+            y: y.to_vec(),
+            kernel: kernel.clone(),
+            ridge,
+        })
+    }
+
+    /// Operating space.
+    pub fn space(&self) -> Space {
+        self.space
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Training-set size.
+    pub fn n_samples(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Kernel.
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Ridge.
+    pub fn ridge(&self) -> f64 {
+        self.ridge
+    }
+
+    /// Borrow the KRR model for read-side operations (outlier scoring).
+    pub fn krr(&self) -> &dyn KrrModel {
+        match &self.krr {
+            KrrEngine::Intrinsic(m) => m,
+            KrrEngine::Empirical(m) => m,
+        }
+    }
+
+    /// Copy of the current training set (engine order).
+    pub fn training_view(&self) -> (Mat, Vec<f64>) {
+        (self.x.clone(), self.y.clone())
+    }
+
+    /// Borrow the training targets (engine order).
+    pub fn targets(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// Predict point estimates.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        self.krr().predict(x)
+    }
+
+    /// Predict mean + variance (requires the KBR twin).
+    pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        let kbr = self.kbr.as_ref().ok_or_else(|| {
+            Error::Config("uncertainty serving requires with_uncertainty=true".into())
+        })?;
+        let p = kbr.predict(x)?;
+        Ok((p.mean, p.var))
+    }
+
+    /// One batched multiple inc/dec round across KRR (and KBR if present),
+    /// keeping the raw stores in sync.
+    pub fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        match &mut self.krr {
+            KrrEngine::Intrinsic(m) => m.inc_dec(x_new, y_new, remove_idx)?,
+            KrrEngine::Empirical(m) => m.inc_dec(x_new, y_new, remove_idx)?,
+        }
+        if let Some(kbr) = &mut self.kbr {
+            kbr.inc_dec(x_new, y_new, remove_idx)?;
+        }
+        // mirror into the raw stores
+        let mut rem: Vec<usize> = remove_idx.to_vec();
+        rem.sort_unstable();
+        rem.dedup();
+        self.x.remove_rows(&rem)?;
+        for (i, &ri) in rem.iter().enumerate() {
+            self.y.remove(ri - i);
+        }
+        if x_new.rows() > 0 {
+            self.x = self.x.vcat(x_new)?;
+            self.y.extend_from_slice(y_new);
+        }
+        Ok(())
+    }
+
+    /// Take a rollback snapshot — a deep copy of the maintained state
+    /// (memcpy-bound, no refit; see EXPERIMENTS.md §Perf).
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot { state: Box::new(self.clone()) }
+    }
+
+    /// Restore from a snapshot.
+    pub fn restore(&mut self, snap: Snapshot) {
+        *self = *snap.state;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn fit_and_route_both_spaces() {
+        let d = synth::ecg_like(60, 6, 1);
+        for space in [Space::Intrinsic, Space::Empirical] {
+            let e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, space, false).unwrap();
+            assert_eq!(e.space(), space);
+            assert_eq!(e.n_samples(), 60);
+            let p = e.predict(&d.x.block(0, 5, 0, 6)).unwrap();
+            assert_eq!(p.len(), 5);
+        }
+    }
+
+    #[test]
+    fn inc_dec_keeps_stores_in_sync() {
+        let d = synth::ecg_like(40, 6, 2);
+        let extra = synth::ecg_like(4, 6, 3);
+        let mut e =
+            Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false).unwrap();
+        e.inc_dec(&extra.x, &extra.y, &[1, 5]).unwrap();
+        assert_eq!(e.n_samples(), 42);
+        let (xv, yv) = e.training_view();
+        assert_eq!(xv.rows(), 42);
+        assert_eq!(yv.len(), 42);
+        // last rows are the new samples
+        assert_eq!(xv.row(41), extra.x.row(3));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let d = synth::ecg_like(30, 5, 4);
+        let mut e =
+            Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false).unwrap();
+        let p_before = e.predict(&d.x.block(0, 5, 0, 5)).unwrap();
+        let snap = e.snapshot();
+        let extra = synth::ecg_like(4, 5, 5);
+        e.inc_dec(&extra.x, &extra.y, &[]).unwrap();
+        assert_eq!(e.n_samples(), 34);
+        e.restore(snap);
+        assert_eq!(e.n_samples(), 30);
+        let p_after = e.predict(&d.x.block(0, 5, 0, 5)).unwrap();
+        crate::testutil::assert_vec_close(&p_after, &p_before, 1e-10);
+    }
+
+    #[test]
+    fn uncertainty_requires_flag() {
+        let d = synth::ecg_like(20, 4, 6);
+        let e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false)
+            .unwrap();
+        assert!(e.predict_with_uncertainty(&d.x).is_err());
+        let e2 = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true)
+            .unwrap();
+        let (mu, var) = e2.predict_with_uncertainty(&d.x.block(0, 3, 0, 4)).unwrap();
+        assert_eq!(mu.len(), 3);
+        assert!(var.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn kbr_twin_tracks_krr_through_updates() {
+        let d = synth::ecg_like(40, 5, 7);
+        let extra = synth::ecg_like(6, 5, 8);
+        let mut e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true)
+            .unwrap();
+        e.inc_dec(&extra.x, &extra.y, &[0, 2]).unwrap();
+        let (mu, _) = e.predict_with_uncertainty(&d.x.block(0, 4, 0, 5)).unwrap();
+        assert_eq!(mu.len(), 4);
+        assert_eq!(e.n_samples(), 44);
+    }
+}

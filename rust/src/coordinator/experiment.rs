@@ -1,0 +1,308 @@
+//! The paper-evaluation driver: run the three update strategies over the
+//! same stream of +|C|/−|R| rounds, timing each round per strategy and
+//! checking the accuracy-invariance claim.
+//!
+//! This is shared by `mikrr eval`, `examples/paper_eval.rs` and
+//! `rust/benches/paper_tables.rs`, so every table/figure comes from one
+//! code path.
+
+use crate::baselines::{Nonincremental, SingleIncKbr, SingleIncremental};
+use crate::config::Space;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::kbr::{KbrHyper, KbrModel};
+use crate::kernels::Kernel;
+use crate::krr::empirical::EmpiricalKrr;
+use crate::krr::intrinsic::IntrinsicKrr;
+use crate::krr::{classification_accuracy, KrrModel};
+use crate::linalg::Mat;
+use crate::metrics::{RoundRecord, Timer};
+use crate::util::prng::Rng;
+
+/// Which strategies to run (all by default; the nonincremental baseline can
+/// be skipped for quick passes — it dominates wall-clock).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// The proposed batched update (one rank-|H| op per round).
+    Multiple,
+    /// Rank-1 updates, one per insertion/removal.
+    Single,
+    /// Full retrain per round.
+    None,
+}
+
+impl Strategy {
+    /// Metric-row name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Multiple => "multiple",
+            Strategy::Single => "single",
+            Strategy::None => "none",
+        }
+    }
+}
+
+/// The result of one experiment cell.
+pub struct StrategyReport {
+    /// Per-strategy per-round seconds (+ labels = sample counts).
+    pub record: RoundRecord,
+    /// Held-out classification accuracy after the final round (multiple
+    /// strategy; the others are asserted equal when run).
+    pub accuracy: f64,
+    /// Did all executed strategies end with matching predictions?
+    pub strategies_agree: bool,
+}
+
+/// Pre-drawn round plan so every strategy sees the identical operations.
+struct RoundPlan {
+    x_new: Mat,
+    y_new: Vec<f64>,
+    remove: Vec<usize>,
+}
+
+fn plan_rounds(
+    data: &Dataset,
+    train: usize,
+    rounds: usize,
+    inc: usize,
+    dec: usize,
+    seed: u64,
+) -> Result<(Dataset, Dataset, Vec<RoundPlan>)> {
+    let need = train + rounds * inc;
+    if data.len() < need + 1 {
+        return Err(Error::Config(format!(
+            "dataset has {} samples, need {need}+ for train={train}, {rounds} rounds",
+            data.len()
+        )));
+    }
+    let base_idx: Vec<usize> = (0..train).collect();
+    let base = data.subset(&base_idx);
+    let test_idx: Vec<usize> = (need..data.len()).collect();
+    let test = data.subset(&test_idx);
+    let mut rng = Rng::new(seed ^ 0x9D5);
+    let mut n_cur = train;
+    let mut next = train;
+    let mut plans = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let idx: Vec<usize> = (next..next + inc).collect();
+        next += inc;
+        let x_new = data.x.select_rows(&idx);
+        let y_new: Vec<f64> = idx.iter().map(|&i| data.y[i]).collect();
+        let mut remove = rng.sample_indices(n_cur, dec.min(n_cur));
+        remove.sort_unstable();
+        n_cur = n_cur + inc - remove.len();
+        plans.push(RoundPlan { x_new, y_new, remove });
+    }
+    Ok((base, test, plans))
+}
+
+/// Run a KRR experiment cell over the given strategies.
+#[allow(clippy::too_many_arguments)]
+pub fn run_krr(
+    data: &Dataset,
+    kernel: &Kernel,
+    ridge: f64,
+    space: Space,
+    train: usize,
+    rounds: usize,
+    inc: usize,
+    dec: usize,
+    seed: u64,
+    strategies: &[Strategy],
+) -> Result<StrategyReport> {
+    let (base, test, plans) = plan_rounds(data, train, rounds, inc, dec, seed)?;
+    let mut record = RoundRecord::default();
+    let mut n_label = train;
+    for p in &plans {
+        n_label = n_label + p.y_new.len() - p.remove.len();
+        record.labels.push(n_label.to_string());
+    }
+
+    let mut final_preds: Vec<Vec<f64>> = Vec::new();
+
+    for &strat in strategies {
+        match strat {
+            Strategy::Multiple => {
+                let mut model: Box<dyn KrrModel> = match space {
+                    Space::Intrinsic => {
+                        Box::new(IntrinsicKrr::fit(&base.x, &base.y, kernel, ridge)?)
+                    }
+                    Space::Empirical => {
+                        Box::new(EmpiricalKrr::fit(&base.x, &base.y, kernel, ridge)?)
+                    }
+                };
+                for p in &plans {
+                    let t = Timer::start();
+                    model.inc_dec(&p.x_new, &p.y_new, &p.remove)?;
+                    record.push(strat.name(), t.elapsed());
+                }
+                final_preds.push(model.predict(&test.x)?);
+            }
+            Strategy::Single => {
+                let mut model =
+                    SingleIncremental::fit(&base.x, &base.y, kernel, ridge, space)?;
+                for p in &plans {
+                    let t = Timer::start();
+                    model.round(&p.x_new, &p.y_new, &p.remove)?;
+                    record.push(strat.name(), t.elapsed());
+                }
+                final_preds.push(model.predict(&test.x)?);
+            }
+            Strategy::None => {
+                let mut model = Nonincremental::fit(&base.x, &base.y, kernel, ridge, space)?;
+                for p in &plans {
+                    let t = Timer::start();
+                    model.round(&p.x_new, &p.y_new, &p.remove)?;
+                    record.push(strat.name(), t.elapsed());
+                }
+                final_preds.push(model.predict(&test.x)?);
+            }
+        }
+    }
+
+    let accuracy = final_preds
+        .first()
+        .map(|p| classification_accuracy(p, &test.y))
+        .unwrap_or(0.0);
+    let strategies_agree = final_preds.windows(2).all(|w| {
+        w[0].iter()
+            .zip(&w[1])
+            .all(|(a, b)| (a - b).abs() < 1e-5 * a.abs().max(1.0))
+    });
+    Ok(StrategyReport { record, accuracy, strategies_agree })
+}
+
+/// Run a KBR experiment cell (paper Figs. 7-8 / Tables X-XII: multiple vs
+/// single only).
+#[allow(clippy::too_many_arguments)]
+pub fn run_kbr(
+    data: &Dataset,
+    kernel: &Kernel,
+    hyper: KbrHyper,
+    train: usize,
+    rounds: usize,
+    inc: usize,
+    dec: usize,
+    seed: u64,
+    run_single: bool,
+) -> Result<StrategyReport> {
+    let (base, test, plans) = plan_rounds(data, train, rounds, inc, dec, seed)?;
+    let mut record = RoundRecord::default();
+    let mut n_label = train;
+    for p in &plans {
+        n_label = n_label + p.y_new.len() - p.remove.len();
+        record.labels.push(n_label.to_string());
+    }
+
+    let mut multiple = KbrModel::fit(&base.x, &base.y, kernel, hyper)?;
+    for p in &plans {
+        let t = Timer::start();
+        multiple.inc_dec(&p.x_new, &p.y_new, &p.remove)?;
+        record.push("multiple", t.elapsed());
+    }
+    let pm = multiple.predict(&test.x)?;
+
+    let mut strategies_agree = true;
+    if run_single {
+        let mut single = SingleIncKbr::fit(&base.x, &base.y, kernel, hyper)?;
+        for p in &plans {
+            let t = Timer::start();
+            single.round(&p.x_new, &p.y_new, &p.remove)?;
+            record.push("single", t.elapsed());
+        }
+        let ps = single.model().predict(&test.x)?;
+        strategies_agree = pm
+            .mean
+            .iter()
+            .zip(&ps.mean)
+            .all(|(a, b)| (a - b).abs() < 1e-5 * a.abs().max(1.0));
+    }
+
+    let accuracy = classification_accuracy(&pm.mean, &test.y);
+    Ok(StrategyReport { record, accuracy, strategies_agree })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn krr_experiment_runs_and_agrees() {
+        let data = synth::ecg_like(400, 8, 1);
+        let report = run_krr(
+            &data,
+            &Kernel::poly(2, 1.0),
+            0.5,
+            Space::Intrinsic,
+            200,
+            3,
+            4,
+            2,
+            7,
+            &[Strategy::Multiple, Strategy::Single, Strategy::None],
+        )
+        .unwrap();
+        assert!(report.strategies_agree, "strategies disagree");
+        assert!(report.accuracy > 0.8, "accuracy {}", report.accuracy);
+        assert_eq!(report.record.rounds.len(), 3);
+        assert_eq!(report.record.log10_rounds("multiple").len(), 3);
+        assert_eq!(report.record.labels.len(), 3);
+    }
+
+    #[test]
+    fn krr_experiment_empirical() {
+        let data = synth::drt_like(260, 500, 0.02, 2);
+        let report = run_krr(
+            &data,
+            &Kernel::rbf_radius(50.0),
+            0.5,
+            Space::Empirical,
+            150,
+            3,
+            4,
+            2,
+            3,
+            &[Strategy::Multiple, Strategy::Single],
+        )
+        .unwrap();
+        assert!(report.strategies_agree);
+    }
+
+    #[test]
+    fn kbr_experiment_runs() {
+        let data = synth::ecg_like(300, 6, 4);
+        let report = run_kbr(
+            &data,
+            &Kernel::poly(2, 1.0),
+            KbrHyper::default(),
+            150,
+            3,
+            4,
+            2,
+            5,
+            true,
+        )
+        .unwrap();
+        assert!(report.strategies_agree);
+        assert_eq!(report.record.rounds.len(), 2);
+    }
+
+    #[test]
+    fn insufficient_data_errors() {
+        let data = synth::ecg_like(50, 6, 6);
+        assert!(run_krr(
+            &data,
+            &Kernel::poly(2, 1.0),
+            0.5,
+            Space::Intrinsic,
+            45,
+            10,
+            4,
+            2,
+            7,
+            &[Strategy::Multiple],
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! The L3 coordinator: the event loop that turns a pooled sensor stream
+//! into batched incremental/decremental model updates while serving
+//! predictions.
+//!
+//! Responsibilities (DESIGN.md §2):
+//! * **Routing** — pick intrinsic vs empirical space via the
+//!   [`crate::krr::advisor::Advisor`] cost model.
+//! * **Batching** — group arrivals into one rank-|H| update per round
+//!   ([`crate::streaming::batcher`]).
+//! * **Decremental integration** — fold outlier removals into the SAME
+//!   batched update (the paper's eq. 15 / eq. 30 fused form).
+//! * **State management** — snapshot/rollback of the engine state around
+//!   numerically risky updates, counters, timing.
+//!
+//! The engine state sits behind a `RwLock`, so prediction traffic keeps
+//! flowing between (not during) updates — the write lock is held only for
+//! the O(J^2 H) update itself.
+
+pub mod engine;
+pub mod experiment;
+
+use crate::config::Space;
+use crate::error::Result;
+use crate::kernels::Kernel;
+use crate::krr::advisor::Advisor;
+use crate::metrics::{Counters, LatencyHist, RoundRecord, Timer};
+use crate::streaming::batcher::{BatchPolicy, Batcher};
+use crate::streaming::outlier::{detect_scored, OutlierConfig};
+use crate::streaming::sink::SinkNode;
+use crate::streaming::StreamEvent;
+use engine::Engine;
+
+use crate::linalg::Mat;
+use std::sync::{Arc, RwLock};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Kernel for the model.
+    pub kernel: Kernel,
+    /// Ridge rho (KRR) — also drives the KBR prior when uncertainty is on.
+    pub ridge: f64,
+    /// Space override; `None` lets the advisor decide.
+    pub space: Option<Space>,
+    /// Batching policy.
+    pub batch: BatchPolicy,
+    /// Outlier / decremental policy; `None` disables removals.
+    pub outlier: Option<OutlierConfig>,
+    /// Track a KBR posterior alongside KRR for uncertainty serving.
+    pub with_uncertainty: bool,
+    /// Take a full state snapshot before each update for rollback.  The
+    /// engines fail *before* mutating state for every realistic error
+    /// (shape errors, singular Woodbury core), so this is belt-and-braces;
+    /// off by default — it costs an O(N J) deep copy per round.
+    pub snapshot_rollback: bool,
+}
+
+impl CoordinatorConfig {
+    /// Reasonable defaults for the ECG-like workload.
+    pub fn default_for(kernel: Kernel) -> Self {
+        Self {
+            kernel,
+            ridge: 0.5,
+            space: None,
+            batch: BatchPolicy::default(),
+            outlier: Some(OutlierConfig::default()),
+            with_uncertainty: false,
+            snapshot_rollback: false,
+        }
+    }
+}
+
+/// Shared handle for prediction traffic while the coordinator updates.
+#[derive(Clone)]
+pub struct ModelHandle {
+    inner: Arc<RwLock<Engine>>,
+}
+
+impl ModelHandle {
+    /// Predict through the current model state.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        self.inner.read().expect("engine lock poisoned").predict(x)
+    }
+
+    /// Predictive mean + variance (requires `with_uncertainty`).
+    pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.inner
+            .read()
+            .expect("engine lock poisoned")
+            .predict_with_uncertainty(x)
+    }
+
+    /// Current training-set size.
+    pub fn n_samples(&self) -> usize {
+        self.inner.read().expect("engine lock poisoned").n_samples()
+    }
+}
+
+/// Outcome of one coordinator round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// Samples added.
+    pub added: usize,
+    /// Samples removed (outliers).
+    pub removed: usize,
+    /// Seconds spent in the batched update.
+    pub update_secs: f64,
+    /// Training-set size after the round.
+    pub n_after: usize,
+}
+
+/// The streaming coordinator.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    engine: Arc<RwLock<Engine>>,
+    batcher: Batcher,
+    /// Counters: rounds, added, removed, rollbacks...
+    pub counters: Counters,
+    /// Update-latency histogram.
+    pub update_latency: LatencyHist,
+    /// Per-round record (feeds the paper-style reports).
+    pub record: RoundRecord,
+}
+
+impl Coordinator {
+    /// Bootstrap from an initial training set.  Space is chosen by the
+    /// advisor unless overridden.
+    pub fn bootstrap(x: &Mat, y: &[f64], cfg: CoordinatorConfig) -> Result<Self> {
+        let advisor = Advisor::default();
+        let space = cfg.space.unwrap_or_else(|| {
+            advisor
+                .choose_space(&cfg.kernel, x.rows(), x.cols(), 4, 2)
+                .space
+        });
+        let engine = Engine::fit(x, y, &cfg.kernel, cfg.ridge, space, cfg.with_uncertainty)?;
+        let batcher = Batcher::new(cfg.batch.clone());
+        Ok(Self {
+            cfg,
+            engine: Arc::new(RwLock::new(engine)),
+            batcher,
+            counters: Counters::default(),
+            update_latency: LatencyHist::new(),
+            record: RoundRecord::default(),
+        })
+    }
+
+    /// A cloneable prediction handle.
+    pub fn handle(&self) -> ModelHandle {
+        ModelHandle { inner: Arc::clone(&self.engine) }
+    }
+
+    /// The operating space the engine runs in.
+    pub fn space(&self) -> Space {
+        self.engine.read().expect("engine lock poisoned").space()
+    }
+
+    /// Run one round from a pre-formed batch of events (the bench and test
+    /// entry; `run` pulls from a sink).  Applies outlier removals and the
+    /// insertion batch as ONE multiple inc/dec update, with rollback on
+    /// numerical failure.
+    pub fn apply_batch(&mut self, batch: &[StreamEvent]) -> Result<RoundOutcome> {
+        let t = Timer::start();
+        let mut engine = self.engine.write().expect("engine lock poisoned");
+        // 1) nominate decremental candidates on the CURRENT set
+        let removals: Vec<usize> = match &self.cfg.outlier {
+            Some(ocfg) => {
+                let pred = engine.krr().predict_training()?;
+                detect_scored(&pred, engine.targets(), ocfg)?
+                    .into_iter()
+                    .map(|v| v.index)
+                    .collect()
+            }
+            None => Vec::new(),
+        };
+        // 2) assemble the insertion block
+        let dim = engine.dim();
+        let mut x_new = Mat::zeros(0, dim);
+        let mut y_new = Vec::with_capacity(batch.len());
+        for ev in batch {
+            x_new.push_row(&ev.x)?;
+            y_new.push(ev.y);
+        }
+        // 3) one fused multiple inc/dec update (opt-in snapshot rollback;
+        //    engines fail before mutation for all realistic error paths)
+        let snapshot = self.cfg.snapshot_rollback.then(|| engine.snapshot());
+        match engine.inc_dec(&x_new, &y_new, &removals) {
+            Ok(()) => {}
+            Err(e) => {
+                if let Some(snap) = snapshot {
+                    engine.restore(snap);
+                    self.counters.inc("rollbacks");
+                }
+                return Err(e);
+            }
+        }
+        let dt = t.elapsed();
+        let outcome = RoundOutcome {
+            added: batch.len(),
+            removed: removals.len(),
+            update_secs: dt,
+            n_after: engine.n_samples(),
+        };
+        drop(engine);
+        self.counters.inc("rounds");
+        self.counters.add("added", outcome.added as u64);
+        self.counters.add("removed", outcome.removed as u64);
+        self.update_latency.record(dt);
+        self.record.push("multiple", dt);
+        self.record.labels.push(outcome.n_after.to_string());
+        Ok(outcome)
+    }
+
+    /// Pull-and-apply loop over a sink until the stream goes quiet or
+    /// `max_rounds` is reached.  Returns the outcomes.
+    pub fn run(&mut self, sink: &mut SinkNode, max_rounds: usize) -> Result<Vec<RoundOutcome>> {
+        let mut outcomes = Vec::new();
+        for _ in 0..max_rounds {
+            let batch = self.batcher.next_batch(sink);
+            if batch.is_empty() {
+                break;
+            }
+            outcomes.push(self.apply_batch(&batch)?);
+        }
+        Ok(outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::streaming::source::{SensorNode, SourceConfig};
+    use std::time::Duration;
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            kernel: Kernel::poly(2, 1.0),
+            ridge: 0.5,
+            space: None,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
+            outlier: Some(OutlierConfig { z_threshold: 5.0, max_removals: 2 }),
+            with_uncertainty: false,
+            snapshot_rollback: true,
+        }
+    }
+
+    #[test]
+    fn bootstrap_routes_to_intrinsic_for_ecg_regime() {
+        let d = synth::ecg_like(300, 21, 1);
+        let c = Coordinator::bootstrap(&d.x, &d.y, cfg()).unwrap();
+        assert_eq!(c.space(), Space::Intrinsic);
+    }
+
+    #[test]
+    fn apply_batch_updates_model() {
+        let d = synth::ecg_like(200, 8, 2);
+        let extra = synth::ecg_like(4, 8, 3);
+        let mut c = Coordinator::bootstrap(&d.x, &d.y, cfg()).unwrap();
+        let events: Vec<StreamEvent> = (0..4)
+            .map(|i| StreamEvent {
+                x: extra.x.row(i).to_vec(),
+                y: extra.y[i],
+                source_id: 0,
+                seq: i as u64,
+            })
+            .collect();
+        let before = c.handle().n_samples();
+        let out = c.apply_batch(&events).unwrap();
+        assert_eq!(out.added, 4);
+        assert_eq!(c.handle().n_samples(), before + 4 - out.removed);
+        assert_eq!(c.counters.get("rounds"), 1);
+    }
+
+    #[test]
+    fn run_consumes_stream_end_to_end() {
+        let base = synth::ecg_like(150, 8, 4);
+        let streamed = synth::ecg_like(24, 8, 5);
+        let mut sink = SinkNode::new(32);
+        let h = SensorNode::new(streamed, SourceConfig::default()).spawn(sink.sender());
+        let mut c = Coordinator::bootstrap(&base.x, &base.y, cfg()).unwrap();
+        let outcomes = c.run(&mut sink, 100).unwrap();
+        h.join().unwrap();
+        let added: usize = outcomes.iter().map(|o| o.added).sum();
+        assert_eq!(added, 24);
+        assert!(c.record.rounds.get("multiple").unwrap().len() >= 6);
+    }
+
+    #[test]
+    fn handle_predicts_concurrently() {
+        let d = synth::ecg_like(120, 8, 6);
+        let c = Coordinator::bootstrap(&d.x, &d.y, cfg()).unwrap();
+        let handle = c.handle();
+        let test = synth::ecg_like(10, 8, 7);
+        let preds = handle.predict(&test.x).unwrap();
+        assert_eq!(preds.len(), 10);
+    }
+
+    #[test]
+    fn uncertainty_handle_works() {
+        let d = synth::ecg_like(80, 6, 8);
+        let mut config = cfg();
+        config.with_uncertainty = true;
+        let c = Coordinator::bootstrap(&d.x, &d.y, config).unwrap();
+        let (mu, var) = c
+            .handle()
+            .predict_with_uncertainty(&d.x.block(0, 5, 0, 6))
+            .unwrap();
+        assert_eq!(mu.len(), 5);
+        assert!(var.iter().all(|&v| v > 0.0));
+    }
+}

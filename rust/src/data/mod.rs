@@ -1,0 +1,104 @@
+//! Datasets: synthetic generators standing in for the paper's ECG and
+//! Dorothea benchmarks (see DESIGN.md §3 for the substitution rationale),
+//! dataset containers, splits, and stream replay.
+
+pub mod synth;
+
+use crate::linalg::Mat;
+use crate::util::prng::Rng;
+
+/// An in-memory labelled dataset (rows = samples).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Feature rows (N, M).
+    pub x: Mat,
+    /// Targets (±1 for the 2-class benchmarks).
+    pub y: Vec<f64>,
+    /// Dataset name.
+    pub name: String,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Select rows by index into a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            name: self.name.clone(),
+        }
+    }
+
+    /// Convenience: rows of x by index (used in doc examples).
+    pub fn x_rows(&self, idx: &[usize]) -> Mat {
+        self.x.select_rows(idx)
+    }
+
+    /// Convenience: y values by index.
+    pub fn y_rows(&self, idx: &[usize]) -> Vec<f64> {
+        idx.iter().map(|&i| self.y[i]).collect()
+    }
+
+    /// Deterministic shuffled train/test split (train_frac in (0,1)).
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let n = self.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let (tr, te) = idx.split_at(n_train.min(n));
+        (self.subset(tr), self.subset(te))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: Mat::from_fn(10, 3, |r, c| (r * 3 + c) as f64),
+            y: (0..10).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+            name: "tiny".into(),
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = tiny();
+        let (tr, te) = d.split(0.8, 1);
+        assert_eq!(tr.len(), 8);
+        assert_eq!(te.len(), 2);
+        assert_eq!(tr.dim(), 3);
+    }
+
+    #[test]
+    fn subset_selects() {
+        let d = tiny();
+        let s = d.subset(&[9, 0]);
+        assert_eq!(s.y, vec![-1.0, 1.0]);
+        assert_eq!(s.x.row(0)[0], 27.0);
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = tiny();
+        let (a, _) = d.split(0.5, 7);
+        let (b, _) = d.split(0.5, 7);
+        assert_eq!(a.y, b.y);
+    }
+}

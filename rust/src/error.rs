@@ -1,0 +1,112 @@
+//! Typed error domain for the mikrr library.
+//!
+//! The library surface returns [`Result<T>`]; binaries convert to
+//! `anyhow::Error` at the edge (a `From` impl is provided).
+
+use std::fmt;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions the library can surface.
+#[derive(Debug)]
+pub enum Error {
+    /// Matrix/vector dimension mismatch: (context, expected, got).
+    Shape {
+        /// Operation that failed.
+        context: &'static str,
+        /// Human-readable expected-vs-got description.
+        detail: String,
+    },
+    /// Numerical failure (singular matrix, non-SPD Cholesky pivot, ...).
+    Numerical {
+        /// Operation that failed.
+        context: &'static str,
+        /// Diagnostic detail (pivot value, row index, ...).
+        detail: String,
+    },
+    /// The decremental rule's validity condition was violated
+    /// (e.g. removing more samples than the residual set, paper §III.B).
+    InvalidUpdate(String),
+    /// Configuration / CLI errors.
+    Config(String),
+    /// AOT artifact loading / manifest errors.
+    Artifact(String),
+    /// PJRT runtime errors (wraps the `xla` crate error).
+    Runtime(String),
+    /// Streaming pipeline errors (closed channels, poisoned state, ...).
+    Stream(String),
+    /// I/O.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape { context, detail } => {
+                write!(f, "shape error in {context}: {detail}")
+            }
+            Error::Numerical { context, detail } => {
+                write!(f, "numerical error in {context}: {detail}")
+            }
+            Error::InvalidUpdate(d) => write!(f, "invalid incremental update: {d}"),
+            Error::Config(d) => write!(f, "config error: {d}"),
+            Error::Artifact(d) => write!(f, "artifact error: {d}"),
+            Error::Runtime(d) => write!(f, "runtime error: {d}"),
+            Error::Stream(d) => write!(f, "stream error: {d}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Shorthand constructor for shape errors.
+    pub fn shape(context: &'static str, detail: impl Into<String>) -> Self {
+        Error::Shape { context, detail: detail.into() }
+    }
+
+    /// Shorthand constructor for numerical errors.
+    pub fn numerical(context: &'static str, detail: impl Into<String>) -> Self {
+        Error::Numerical { context, detail: detail.into() }
+    }
+}
+
+/// Guard macro: checks a shape/dimension precondition.
+#[macro_export]
+macro_rules! ensure_shape {
+    ($cond:expr, $ctx:literal, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::error::Error::shape($ctx, format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::shape("gemm", "a.cols=3 != b.rows=4");
+        assert!(e.to_string().contains("gemm"));
+        let e = Error::numerical("cholesky", "pivot -1e-3 at row 5");
+        assert!(e.to_string().contains("cholesky"));
+        let e = Error::InvalidUpdate("batch larger than residual".into());
+        assert!(e.to_string().contains("batch"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,241 @@
+//! Explicit intrinsic-space feature map phi for polynomial kernels.
+//!
+//! For k(x,y) = (x.y + c)^d the multinomial expansion gives
+//! `phi_alpha(x) = sqrt(multinom(alpha) * c^(d-|alpha|)) * x^alpha` over all
+//! multi-indices |alpha| <= d, so that phi(x).phi(y) == k(x,y) exactly.
+//! J = C(M + d, d) — the paper's intrinsic dimension (M=21, d=2 -> 253).
+//!
+//! This is the L3 twin of `python/compile/kernels/feature_map.py`; the
+//! monomial enumeration order matches (combinations-with-replacement by
+//! ascending length) so AOT artifacts and native state are interchangeable.
+
+use crate::linalg::Mat;
+use crate::par;
+
+/// Number of monomials of degree <= d over m variables: C(m + d, d).
+pub fn n_monomials(m: usize, d: usize) -> usize {
+    // compute binomial(m + d, d) in u128 to avoid overflow for large m
+    let mut num: u128 = 1;
+    let mut den: u128 = 1;
+    for i in 0..d {
+        num *= (m + d - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as usize
+}
+
+/// Precomputed monomial table: for each output feature j, the (<= d)
+/// variable indices whose product forms the monomial, plus the sqrt
+/// coefficient.
+#[derive(Clone, Debug)]
+pub struct MonomialTable {
+    /// Input dimension M.
+    pub m: usize,
+    /// Kernel degree d.
+    pub degree: usize,
+    /// Monomials: variable index lists (non-decreasing), length <= degree.
+    pub monos: Vec<Vec<u32>>,
+    /// sqrt(multinomial * coef0^(d-k)) per monomial.
+    pub coefs: Vec<f64>,
+}
+
+impl MonomialTable {
+    /// Build for (x.y + coef0)^degree over m variables.
+    pub fn new(m: usize, degree: usize, coef0: f64) -> Self {
+        let mut monos: Vec<Vec<u32>> = Vec::with_capacity(n_monomials(m, degree));
+        for k in 0..=degree {
+            combinations_with_replacement(m, k, &mut monos);
+        }
+        let coefs = monos
+            .iter()
+            .map(|mono| {
+                let k = mono.len();
+                // multinomial = d! / ((d-k)! * prod(count_v!))
+                let mut denom = factorial(degree - k);
+                let mut run = 1usize;
+                for w in 1..=mono.len() {
+                    if w < mono.len() && mono[w] == mono[w - 1] {
+                        run += 1;
+                    } else {
+                        denom *= factorial(run);
+                        run = 1;
+                    }
+                }
+                let multinom = factorial(degree) as f64 / denom as f64;
+                (multinom * coef0.powi((degree - k) as i32)).sqrt()
+            })
+            .collect();
+        Self { m, degree, monos, coefs }
+    }
+
+    /// Degenerate table for the linear kernel (identity map).
+    pub fn linear(m: usize) -> Self {
+        let monos = (0..m as u32).map(|v| vec![v]).collect();
+        Self { m, degree: 1, monos, coefs: vec![1.0; m] }
+    }
+
+    /// Output dimension J.
+    pub fn j(&self) -> usize {
+        self.monos.len()
+    }
+
+    /// Map one sample into a caller-provided row buffer (len J).
+    pub fn map_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.m);
+        debug_assert_eq!(out.len(), self.j());
+        for (o, (mono, &c)) in out.iter_mut().zip(self.monos.iter().zip(&self.coefs)) {
+            let mut v = c;
+            for &var in mono {
+                v *= x[var as usize];
+            }
+            *o = v;
+        }
+    }
+
+    /// Map a batch: X (B, M) -> Phi (B, J), parallel over rows.
+    pub fn map(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.m, "featmap: input dim {} != {}", x.cols(), self.m);
+        let b = x.rows();
+        let j = self.j();
+        let mut out = Mat::zeros(b, j);
+        let optr = SendPtr(out.as_mut_slice().as_mut_ptr());
+        par::parallel_for(b, 8, |lo, hi| {
+            let p = optr;
+            for r in lo..hi {
+                // SAFETY: disjoint rows per chunk.
+                let row = unsafe { std::slice::from_raw_parts_mut(p.0.add(r * j), j) };
+                self.map_into(x.row(r), row);
+            }
+        });
+        out
+    }
+}
+
+fn factorial(n: usize) -> usize {
+    (1..=n).product::<usize>().max(1)
+}
+
+fn combinations_with_replacement(m: usize, k: usize, out: &mut Vec<Vec<u32>>) {
+    if k == 0 {
+        out.push(Vec::new());
+        return;
+    }
+    let mut cur = vec![0u32; k];
+    loop {
+        out.push(cur.clone());
+        // advance: find rightmost position that can be incremented
+        let mut pos = k;
+        while pos > 0 {
+            pos -= 1;
+            if (cur[pos] as usize) < m - 1 {
+                cur[pos] += 1;
+                let v = cur[pos];
+                for p in pos + 1..k {
+                    cur[p] = v;
+                }
+                break;
+            }
+            if pos == 0 {
+                return;
+            }
+        }
+        if m == 1 {
+            return; // only one monomial per k when m == 1
+        }
+    }
+}
+
+struct SendPtr(*mut f64);
+impl Clone for SendPtr {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl Copy for SendPtr {}
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+    use crate::linalg::matrix::dot;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn counts_match_formula() {
+        assert_eq!(n_monomials(21, 2), 253);
+        assert_eq!(n_monomials(21, 3), 2024);
+        assert_eq!(n_monomials(1, 3), 4); // 1, x, x^2, x^3
+        assert_eq!(n_monomials(3, 0), 1);
+        let t = MonomialTable::new(21, 2, 1.0);
+        assert_eq!(t.j(), 253);
+        let t3 = MonomialTable::new(4, 3, 1.0);
+        assert_eq!(t3.j(), n_monomials(4, 3));
+    }
+
+    #[test]
+    fn defining_identity_phi_dot_phi_is_kernel() {
+        // phi(x).phi(y) == (x.y + c)^d for random data, several (m, d, c)
+        let mut rng = Rng::new(1);
+        for &(m, d, c) in &[(1usize, 2usize, 1.0f64), (3, 2, 1.0), (5, 3, 1.0), (4, 2, 2.0), (6, 1, 0.5)] {
+            let t = MonomialTable::new(m, d, c);
+            let x: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let mut px = vec![0.0; t.j()];
+            let mut py = vec![0.0; t.j()];
+            t.map_into(&x, &mut px);
+            t.map_into(&y, &mut py);
+            let got = dot(&px, &py);
+            let want = (dot(&x, &y) + c).powi(d as i32);
+            assert!(
+                (got - want).abs() < 1e-10 * want.abs().max(1.0),
+                "m={m} d={d} c={c}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_map_matches_single() {
+        let mut rng = Rng::new(2);
+        let t = MonomialTable::new(7, 2, 1.0);
+        let x = Mat::from_fn(33, 7, |_, _| rng.gaussian());
+        let phi = t.map(&x);
+        assert_eq!(phi.shape(), (33, t.j()));
+        let mut row = vec![0.0; t.j()];
+        for r in [0usize, 13, 32] {
+            t.map_into(x.row(r), &mut row);
+            assert_eq!(phi.row(r), &row[..]);
+        }
+    }
+
+    #[test]
+    fn linear_table_is_identity() {
+        let t = MonomialTable::linear(4);
+        let mut out = vec![0.0; 4];
+        t.map_into(&[1.0, 2.0, 3.0, 4.0], &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn matches_kernel_enum_dims() {
+        for m in [1usize, 2, 8, 21] {
+            for d in [1u32, 2, 3] {
+                let k = Kernel::poly(d, 1.0);
+                let t = k.feature_table(m).unwrap();
+                assert_eq!(Some(t.j()), k.intrinsic_dim(m));
+            }
+        }
+    }
+
+    #[test]
+    fn monomials_nondecreasing_and_unique() {
+        let t = MonomialTable::new(5, 3, 1.0);
+        let mut seen = std::collections::HashSet::new();
+        for mono in &t.monos {
+            assert!(mono.windows(2).all(|w| w[0] <= w[1]));
+            assert!(seen.insert(mono.clone()));
+        }
+        assert_eq!(seen.len(), n_monomials(5, 3));
+    }
+}

@@ -1,0 +1,138 @@
+//! Kernel functions, blocked Gram computation, and the explicit
+//! intrinsic-space feature map for polynomial kernels.
+//!
+//! This is the native (L3) twin of the L1 Pallas kernels in
+//! `python/compile/kernels/` — same math, f64, verified against each other
+//! through the runtime integration tests.
+
+pub mod featmap;
+pub mod gram;
+
+pub use featmap::MonomialTable;
+
+use crate::linalg::matrix::dot;
+use crate::linalg::Mat;
+
+/// A kernel function k(x, y).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Kernel {
+    /// k(x,y) = x.y
+    Linear,
+    /// k(x,y) = (x.y + coef0)^degree
+    Poly {
+        /// Polynomial degree (paper uses 2 and 3).
+        degree: u32,
+        /// Additive constant inside the power.
+        coef0: f64,
+    },
+    /// k(x,y) = exp(-gamma ||x-y||^2); paper radius r=50 -> gamma=1/(2 r^2).
+    Rbf {
+        /// Bandwidth.
+        gamma: f64,
+    },
+}
+
+impl Kernel {
+    /// Poly kernel constructor.
+    pub fn poly(degree: u32, coef0: f64) -> Self {
+        Kernel::Poly { degree, coef0 }
+    }
+
+    /// RBF from the paper's "radius" convention.
+    pub fn rbf_radius(r: f64) -> Self {
+        Kernel::Rbf { gamma: 1.0 / (2.0 * r * r) }
+    }
+
+    /// Parse "poly2", "poly3", "rbf", "linear".
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "linear" => Some(Kernel::Linear),
+            "poly2" => Some(Kernel::poly(2, 1.0)),
+            "poly3" => Some(Kernel::poly(3, 1.0)),
+            "rbf" => Some(Kernel::rbf_radius(50.0)),
+            _ => None,
+        }
+    }
+
+    /// Evaluate on two feature vectors.
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match *self {
+            Kernel::Linear => dot(x, y),
+            Kernel::Poly { degree, coef0 } => (dot(x, y) + coef0).powi(degree as i32),
+            Kernel::Rbf { gamma } => {
+                let mut d2 = 0.0;
+                for (a, b) in x.iter().zip(y) {
+                    let d = a - b;
+                    d2 += d * d;
+                }
+                (-gamma * d2).exp()
+            }
+        }
+    }
+
+    /// Intrinsic-space dimension J after feature mapping, if finite.
+    /// RBF maps to an infinite-dimensional space — the reason the paper's
+    /// intrinsic-space mode is "inapplicable to RBFs".
+    pub fn intrinsic_dim(&self, m: usize) -> Option<usize> {
+        match *self {
+            Kernel::Linear => Some(m),
+            Kernel::Poly { degree, .. } => Some(featmap::n_monomials(m, degree as usize)),
+            Kernel::Rbf { .. } => None,
+        }
+    }
+
+    /// Build the monomial table for the explicit feature map (poly/linear).
+    pub fn feature_table(&self, m: usize) -> Option<MonomialTable> {
+        match *self {
+            Kernel::Linear => Some(MonomialTable::linear(m)),
+            Kernel::Poly { degree, coef0 } => {
+                Some(MonomialTable::new(m, degree as usize, coef0))
+            }
+            Kernel::Rbf { .. } => None,
+        }
+    }
+
+    /// Full Gram matrix K[i,j] = k(x_i, y_j) for row-sample matrices.
+    pub fn gram(&self, x: &Mat, y: &Mat) -> Mat {
+        gram::gram(self, x, y)
+    }
+
+    /// Symmetric Gram K[i,j] = k(x_i, x_j).
+    pub fn gram_symmetric(&self, x: &Mat) -> Mat {
+        gram::gram_symmetric(self, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_matches_definitions() {
+        let x = [1.0, 2.0];
+        let y = [0.5, -1.0];
+        assert_eq!(Kernel::Linear.eval(&x, &y), -1.5);
+        assert_eq!(Kernel::poly(2, 1.0).eval(&x, &y), 0.25);
+        let r = Kernel::rbf_radius(50.0);
+        let d2 = 0.25 + 9.0;
+        let want = (-d2 / 5000.0_f64).exp();
+        assert!((r.eval(&x, &y) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Kernel::parse("poly2"), Some(Kernel::poly(2, 1.0)));
+        assert_eq!(Kernel::parse("rbf"), Some(Kernel::rbf_radius(50.0)));
+        assert!(Kernel::parse("cubic").is_none());
+    }
+
+    #[test]
+    fn intrinsic_dims() {
+        // paper: M=21, poly2 -> 253; poly3 -> 2024
+        assert_eq!(Kernel::poly(2, 1.0).intrinsic_dim(21), Some(253));
+        assert_eq!(Kernel::poly(3, 1.0).intrinsic_dim(21), Some(2024));
+        assert_eq!(Kernel::Linear.intrinsic_dim(5), Some(5));
+        assert_eq!(Kernel::rbf_radius(50.0).intrinsic_dim(21), None);
+    }
+}

@@ -1,0 +1,180 @@
+//! The batch-size / operating-space cost model (paper §II.B, §III.B, §VI).
+//!
+//! The paper derives three rules:
+//!
+//! 1. **Space selection**: intrinsic-space maintenance costs O(J^2) per
+//!    rank-1 (J = C(M+d, d)); empirical costs O(N^2). Pick intrinsic when
+//!    J < N (i.e. N ≫ M regime), empirical when N < J or the kernel has
+//!    infinite intrinsic dimension (RBF).
+//! 2. **Intrinsic batch bound**: a batched update with |H| = |C| + |R| is
+//!    profitable vs a fresh O(J^3) inverse only while |H| < J.
+//! 3. **Empirical shrink bound**: removing |R| samples by eq. (29) is
+//!    profitable only while |R| < residual N − |R|; otherwise recompute the
+//!    kept block directly.
+//!
+//! [`Advisor`] encodes these with explicit flop models so the coordinator's
+//! routing decisions are auditable (and benchable — see the ablation bench).
+
+use crate::config::Space;
+use crate::kernels::Kernel;
+
+/// Cost-model-driven routing decisions.
+#[derive(Clone, Debug)]
+pub struct Advisor {
+    /// Relative cost of a kernel evaluation vs a multiply-add (used to
+    /// weight Gram-construction terms; ~1 for poly, ~4 for RBF exp).
+    pub kernel_eval_cost: f64,
+}
+
+impl Default for Advisor {
+    fn default() -> Self {
+        Self { kernel_eval_cost: 1.0 }
+    }
+}
+
+/// A space recommendation with its predicted per-round flop counts.
+#[derive(Clone, Debug)]
+pub struct SpaceChoice {
+    /// The recommended space.
+    pub space: Space,
+    /// Predicted flops for one +|C|/−|R| round in intrinsic space
+    /// (None when inapplicable, e.g. RBF).
+    pub intrinsic_flops: Option<f64>,
+    /// Predicted flops for one round in empirical space.
+    pub empirical_flops: f64,
+}
+
+impl Advisor {
+    /// Flops for one batched intrinsic round (eq. 15 + head refresh):
+    /// feature-map of |C| rows + rank-H update O(J^2 H) + head O(J^2).
+    pub fn intrinsic_round_flops(&self, j: usize, c: usize, r: usize) -> f64 {
+        let j = j as f64;
+        let h = (c + r) as f64;
+        let map = (c as f64) * j; // monomial products
+        2.0 * j * j * h + h * h * h + 3.0 * j * j + map
+    }
+
+    /// Flops for one batched empirical round (eq. 29 shrink + eq. 28 grow +
+    /// head refresh), including Gram-construction against M features.
+    pub fn empirical_round_flops(&self, n: usize, m: usize, c: usize, r: usize) -> f64 {
+        let n = n as f64;
+        let m = m as f64;
+        let c_ = c as f64;
+        let r_ = r as f64;
+        let gram = self.kernel_eval_cost * (n * c_ + c_ * c_) * m;
+        let shrink = 2.0 * n * n * r_;
+        let grow = 2.0 * n * n * c_ + c_ * c_ * c_;
+        let head = 3.0 * n * n;
+        gram + shrink + grow + head
+    }
+
+    /// Pick an operating space for a dataset/kernel/batch profile.
+    pub fn choose_space(
+        &self,
+        kernel: &Kernel,
+        n: usize,
+        m: usize,
+        c: usize,
+        r: usize,
+    ) -> SpaceChoice {
+        let empirical = self.empirical_round_flops(n, m, c, r);
+        match kernel.intrinsic_dim(m) {
+            None => SpaceChoice {
+                space: Space::Empirical,
+                intrinsic_flops: None,
+                empirical_flops: empirical,
+            },
+            Some(j) => {
+                let intrinsic = self.intrinsic_round_flops(j, c, r);
+                let space = if intrinsic <= empirical {
+                    Space::Intrinsic
+                } else {
+                    Space::Empirical
+                };
+                SpaceChoice {
+                    space,
+                    intrinsic_flops: Some(intrinsic),
+                    empirical_flops: empirical,
+                }
+            }
+        }
+    }
+
+    /// §II.B: largest profitable batch size |H| for intrinsic space
+    /// (strictly below J; beyond that a fresh inverse wins).
+    pub fn max_intrinsic_batch(&self, j: usize) -> usize {
+        j.saturating_sub(1).max(1)
+    }
+
+    /// §III.B: is the eq. (29) shrink profitable for removing |r| of n?
+    /// (|R| must be smaller than the residual set.)
+    pub fn shrink_is_profitable(&self, n: usize, r: usize) -> bool {
+        r < n.saturating_sub(r)
+    }
+
+    /// Recommended flush threshold for the stream batcher: collect up to
+    /// this many pending ops before issuing one multiple update.  Chosen as
+    /// the batch size where the per-sample cost of the batched update stops
+    /// improving materially (diminishing returns past ~sqrt(J), capped by
+    /// the §II.B bound).
+    pub fn recommended_flush(&self, j: usize) -> usize {
+        ((j as f64).sqrt() as usize).clamp(2, self.max_intrinsic_batch(j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_forces_empirical() {
+        let adv = Advisor::default();
+        let c = adv.choose_space(&Kernel::rbf_radius(50.0), 1000, 21, 4, 2);
+        assert_eq!(c.space, Space::Empirical);
+        assert!(c.intrinsic_flops.is_none());
+    }
+
+    #[test]
+    fn ecg_regime_prefers_intrinsic() {
+        // N=83226, M=21, poly2 (J=253): intrinsic must win by a mile
+        let adv = Advisor::default();
+        let c = adv.choose_space(&Kernel::poly(2, 1.0), 83_226, 21, 4, 2);
+        assert_eq!(c.space, Space::Intrinsic);
+        assert!(c.intrinsic_flops.unwrap() < c.empirical_flops / 100.0);
+    }
+
+    #[test]
+    fn drt_regime_prefers_empirical() {
+        // N=640, M=1e6, poly2: J = C(M+2,2) is astronomically large
+        let adv = Advisor::default();
+        let c = adv.choose_space(&Kernel::poly(2, 1.0), 640, 1_000_000, 4, 2);
+        assert_eq!(c.space, Space::Empirical);
+    }
+
+    #[test]
+    fn shrink_bound_matches_paper() {
+        let adv = Advisor::default();
+        assert!(adv.shrink_is_profitable(100, 2));
+        assert!(!adv.shrink_is_profitable(10, 5)); // residual == |R|
+        assert!(!adv.shrink_is_profitable(10, 8));
+    }
+
+    #[test]
+    fn intrinsic_batch_bound() {
+        let adv = Advisor::default();
+        assert_eq!(adv.max_intrinsic_batch(253), 252);
+        assert_eq!(adv.max_intrinsic_batch(1), 1);
+        let f = adv.recommended_flush(253);
+        assert!((2..=252).contains(&f));
+    }
+
+    #[test]
+    fn batched_beats_singles_in_model() {
+        // the whole point: one rank-6 update cheaper than six rank-1s
+        let adv = Advisor::default();
+        let j = 253;
+        let batched = adv.intrinsic_round_flops(j, 4, 2);
+        let singles: f64 = (0..6).map(|_| adv.intrinsic_round_flops(j, 1, 0)).sum();
+        assert!(batched < singles);
+    }
+}

@@ -1,0 +1,332 @@
+//! Empirical-space KRR (paper Section III).
+//!
+//! Maintains `Q^-1 = (K + ρI)^-1` (N x N) over the raw training samples.
+//! A `+|C|/−|R|` round removes first (eq. 29, block Schur shrink), then
+//! grows by the new block (eq. 28, bordered inverse) — the paper's eq. (30)
+//! fused ordering.  The `(a, b)` head follows eq. (18)–(19) from `Q^-1`
+//! directly in O(N^2).
+//!
+//! This is the only mode applicable to RBF kernels (infinite intrinsic
+//! dimension) and the right choice when M ≫ N (e.g. Dorothea: N=800,
+//! M=10^6).
+
+use crate::error::{Error, Result};
+use crate::kernels::Kernel;
+use crate::linalg::gemm::gemv;
+use crate::linalg::matrix::dot;
+use crate::linalg::solve::spd_inverse;
+use crate::linalg::woodbury::{bordered_grow, bordered_shrink};
+use crate::linalg::Mat;
+use crate::{ensure_shape, krr::KrrModel};
+
+/// Empirical-space incremental KRR engine.
+#[derive(Clone)]
+pub struct EmpiricalKrr {
+    kernel: Kernel,
+    rho: f64,
+    /// Raw training samples (N, M) — needed for cross-kernels of new data.
+    x: Mat,
+    /// Training targets.
+    y: Vec<f64>,
+    /// Maintained (K + ρI)^-1, (N, N).
+    q_inv: Mat,
+    /// Dual weights a (N,).
+    a: Vec<f64>,
+    /// Bias b.
+    b: f64,
+}
+
+impl EmpiricalKrr {
+    /// Fit from scratch: O(N^2 M + N^3).
+    pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, rho: f64) -> Result<Self> {
+        ensure_shape!(
+            x.rows() == y.len(),
+            "EmpiricalKrr::fit",
+            "x has {} rows, y has {}",
+            x.rows(),
+            y.len()
+        );
+        if rho <= 0.0 {
+            return Err(Error::Config("ridge rho must be > 0".into()));
+        }
+        let mut q = kernel.gram_symmetric(x);
+        q.add_diag(rho)?;
+        let q_inv = spd_inverse(&q)?;
+        let mut model = Self {
+            kernel: kernel.clone(),
+            rho,
+            x: x.clone(),
+            y: y.to_vec(),
+            q_inv,
+            a: vec![0.0; y.len()],
+            b: 0.0,
+        };
+        model.refresh_head()?;
+        Ok(model)
+    }
+
+    /// (a, b) from Q^-1 (paper eq. 18-19) — O(N^2).
+    fn refresh_head(&mut self) -> Result<()> {
+        let n = self.y.len();
+        ensure_shape!(self.q_inv.rows() == n, "refresh_head", "q_inv {:?} vs n {}", self.q_inv.shape(), n);
+        // v = Q^-1 e ; b = (y.v) / (e.v) ; a = Q^-1 y - b v
+        let v = self.q_inv.row_sums();
+        let ev: f64 = v.iter().sum();
+        if ev.abs() < 1e-14 {
+            return Err(Error::numerical("refresh_head", format!("e Q^-1 e = {ev:.3e}")));
+        }
+        self.b = dot(&self.y, &v) / ev;
+        let qy = gemv(&self.q_inv, &self.y)?;
+        self.a = qy.iter().zip(&v).map(|(q, vi)| q - self.b * vi).collect();
+        Ok(())
+    }
+
+    /// Dual weights.
+    pub fn dual_weights(&self) -> &[f64] {
+        &self.a
+    }
+
+    /// Bias.
+    pub fn bias(&self) -> f64 {
+        self.b
+    }
+
+    /// Kernel.
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Maintained inverse (tests/diagnostics).
+    pub fn q_inv(&self) -> &Mat {
+        &self.q_inv
+    }
+
+    /// Training targets.
+    pub fn targets(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// Single incremental update (paper eq. 20-23 path).
+    pub fn inc_one(&mut self, x_new: &[f64], y_new: f64) -> Result<()> {
+        let x = Mat::from_vec(1, x_new.len(), x_new.to_vec())?;
+        self.inc_dec(&x, &[y_new], &[])
+    }
+
+    /// Single decremental update (paper eq. 26-27 path).
+    pub fn dec_one(&mut self, remove_idx: usize) -> Result<()> {
+        self.inc_dec(&Mat::zeros(0, self.x.cols()), &[], &[remove_idx])
+    }
+}
+
+impl KrrModel for EmpiricalKrr {
+    fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        ensure_shape!(
+            x.cols() == self.x.cols(),
+            "EmpiricalKrr::predict",
+            "x has {} cols, expected {}",
+            x.cols(),
+            self.x.cols()
+        );
+        let k_star = self.kernel.gram(x, &self.x); // (B, N)
+        let mut out = gemv(&k_star, &self.a)?;
+        for v in &mut out {
+            *v += self.b;
+        }
+        Ok(out)
+    }
+
+    fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        ensure_shape!(
+            x_new.rows() == y_new.len(),
+            "EmpiricalKrr::inc_dec",
+            "x_new {} rows, y_new {}",
+            x_new.rows(),
+            y_new.len()
+        );
+        let mut rem: Vec<usize> = remove_idx.to_vec();
+        rem.sort_unstable();
+        rem.dedup();
+        if let Some(&mx) = rem.last() {
+            if mx >= self.y.len() {
+                return Err(Error::InvalidUpdate(format!(
+                    "remove index {mx} >= n {}",
+                    self.y.len()
+                )));
+            }
+        }
+        let c = x_new.rows();
+        if c + rem.len() == 0 {
+            return Ok(());
+        }
+        if self.y.len() + c <= rem.len() {
+            return Err(Error::InvalidUpdate(
+                "update would leave an empty training set".into(),
+            ));
+        }
+        // 1) decremental shrink first (paper's eq. 30 ordering)
+        if !rem.is_empty() {
+            // §III.B guard: shrinking needs |R| < residual size; otherwise a
+            // fresh inverse of the kept block is cheaper AND always valid.
+            let residual = self.y.len() - rem.len();
+            if rem.len() >= residual {
+                // direct recompute path
+                let keep: Vec<usize> =
+                    (0..self.y.len()).filter(|i| !rem.contains(i)).collect();
+                let xk = self.x.select_rows(&keep);
+                let mut q = self.kernel.gram_symmetric(&xk);
+                q.add_diag(self.rho)?;
+                self.q_inv = spd_inverse(&q)?;
+            } else {
+                self.q_inv = bordered_shrink(&self.q_inv, &rem)?;
+            }
+            self.x.remove_rows(&rem)?;
+            for (i, &ri) in rem.iter().enumerate() {
+                self.y.remove(ri - i);
+            }
+        }
+        // 2) incremental grow by the new block (eq. 28)
+        if c > 0 {
+            let eta = self.kernel.gram(&self.x, x_new); // (N, C)
+            let mut q_cc = self.kernel.gram_symmetric(x_new); // (C, C)
+            q_cc.add_diag(self.rho)?;
+            self.q_inv = bordered_grow(&self.q_inv, &eta, &q_cc)?;
+            self.x = self.x.vcat(x_new)?;
+            self.y.extend_from_slice(y_new);
+        }
+        self.refresh_head()
+    }
+
+    fn n_samples(&self) -> usize {
+        self.y.len()
+    }
+
+    fn predict_training(&self) -> Result<Vec<f64>> {
+        self.predict(&self.x)
+    }
+
+    fn mode(&self) -> &'static str {
+        "empirical"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, assert_vec_close};
+    use crate::util::prng::Rng;
+
+    fn data(n: usize, m: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f64> = rng.gaussian_vec(m);
+        let x = Mat::from_fn(n, m, |_, _| 0.5 * rng.gaussian());
+        let y: Vec<f64> = (0..n)
+            .map(|i| dot(x.row(i), &w) + 0.05 * rng.gaussian())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn inc_dec_equals_retrain_poly() {
+        let (x, y) = data(40, 6, 1);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut inc = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let (xc, yc) = data(4, 6, 2);
+        inc.inc_dec(&xc, &yc, &[5, 11]).unwrap();
+
+        let mut x2 = x.clone();
+        let mut y2 = y.clone();
+        x2.remove_rows(&[5, 11]).unwrap();
+        y2.remove(11);
+        y2.remove(5);
+        let x2 = x2.vcat(&xc).unwrap();
+        y2.extend_from_slice(&yc);
+        let fresh = EmpiricalKrr::fit(&x2, &y2, &kernel, 0.5).unwrap();
+        assert_vec_close(inc.dual_weights(), fresh.dual_weights(), 1e-7);
+        assert_close(inc.bias(), fresh.bias(), 1e-7);
+    }
+
+    #[test]
+    fn inc_dec_equals_retrain_rbf() {
+        let (x, y) = data(35, 5, 3);
+        let kernel = Kernel::rbf_radius(2.0);
+        let mut inc = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let (xc, yc) = data(3, 5, 4);
+        inc.inc_dec(&xc, &yc, &[0, 34]).unwrap();
+        let mut x2 = x.clone();
+        let mut y2 = y.clone();
+        x2.remove_rows(&[0, 34]).unwrap();
+        y2.remove(34);
+        y2.remove(0);
+        let x2 = x2.vcat(&xc).unwrap();
+        y2.extend_from_slice(&yc);
+        let fresh = EmpiricalKrr::fit(&x2, &y2, &kernel, 0.5).unwrap();
+        assert_vec_close(inc.dual_weights(), fresh.dual_weights(), 1e-6);
+        assert_close(inc.bias(), fresh.bias(), 1e-6);
+    }
+
+    #[test]
+    fn predictions_match_intrinsic_for_poly() {
+        // the two operating modes are the same estimator (paper §III via
+        // the Learning Subspace Property)
+        use crate::krr::intrinsic::IntrinsicKrr;
+        let (x, y) = data(30, 4, 5);
+        let (xt, _) = data(8, 4, 6);
+        let kernel = Kernel::poly(2, 1.0);
+        let emp = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let intr = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let pe = emp.predict(&xt).unwrap();
+        let pi = intr.predict(&xt).unwrap();
+        assert_vec_close(&pe, &pi, 1e-6);
+    }
+
+    #[test]
+    fn sequence_of_rounds_rbf() {
+        let (x, y) = data(25, 4, 7);
+        let kernel = Kernel::rbf_radius(2.0);
+        let mut inc = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let mut x_cur = x;
+        let mut y_cur = y;
+        let mut rng = Rng::new(8);
+        for round in 0..5 {
+            let (xc, yc) = data(4, 4, 200 + round);
+            let mut rem = rng.sample_indices(y_cur.len(), 2);
+            rem.sort_unstable();
+            inc.inc_dec(&xc, &yc, &rem).unwrap();
+            x_cur.remove_rows(&rem).unwrap();
+            for (i, &ri) in rem.iter().enumerate() {
+                y_cur.remove(ri - i);
+            }
+            x_cur = x_cur.vcat(&xc).unwrap();
+            y_cur.extend_from_slice(&yc);
+        }
+        let fresh = EmpiricalKrr::fit(&x_cur, &y_cur, &kernel, 0.5).unwrap();
+        assert_vec_close(inc.dual_weights(), fresh.dual_weights(), 1e-6);
+    }
+
+    #[test]
+    fn large_removal_uses_direct_path() {
+        let (x, y) = data(12, 3, 9);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut inc = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        // remove 8 of 12 -> residual 4 < |R| = 8 -> direct recompute branch
+        let rem: Vec<usize> = (0..8).collect();
+        inc.inc_dec(&Mat::zeros(0, 3), &[], &rem).unwrap();
+        assert_eq!(inc.n_samples(), 4);
+        let keep: Vec<usize> = (8..12).collect();
+        let xk = x.select_rows(&keep);
+        let yk: Vec<f64> = keep.iter().map(|&i| y[i]).collect();
+        let fresh = EmpiricalKrr::fit(&xk, &yk, &kernel, 0.5).unwrap();
+        assert_vec_close(inc.dual_weights(), fresh.dual_weights(), 1e-7);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let (x, y) = data(6, 3, 10);
+        let kernel = Kernel::rbf_radius(1.0);
+        let mut m = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        assert!(m.inc_dec(&Mat::zeros(0, 3), &[], &[6]).is_err());
+        assert!(m
+            .inc_dec(&Mat::zeros(0, 3), &[], &(0..6).collect::<Vec<_>>())
+            .is_err());
+    }
+}

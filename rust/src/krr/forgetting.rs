@@ -1,0 +1,259 @@
+//! Forgetting-factor incremental KRR (extension; paper §I cites the
+//! recursive-KRR variant of [1] where "old and new training samples have
+//! different weights").
+//!
+//! Maintains `S[l+1] = lambda * S[l] + Phi_C Phi_C^T` with `0 < lambda <= 1`
+//! so old evidence decays geometrically — the right behaviour for
+//! non-stationary streams (concept drift), where plain incremental KRR
+//! keeps stale samples at full weight forever.
+//!
+//! The inverse is maintained without refactorization:
+//!
+//! ```text
+//! S' = lambda S + Phi_C Phi_C^T
+//! S'^-1 = (1/lambda) * woodbury_incdec(S^-1, Phi_C / sqrt(lambda), +1...)
+//! ```
+//!
+//! The bias is implicit: polynomial feature maps include the constant
+//! monomial, so the affine term lives inside `u` (no separate `b` — the
+//! decayed bordered system would otherwise mix decayed and undecayed
+//! blocks).  `lambda = 1` reduces exactly to [`super::intrinsic`] without
+//! the explicit intercept.
+
+use crate::error::{Error, Result};
+use crate::kernels::{Kernel, MonomialTable};
+use crate::linalg::gemm::gemv;
+use crate::linalg::matrix::axpy_slice;
+use crate::linalg::solve::spd_inverse;
+use crate::linalg::woodbury::{incdec_into, IncDecWork};
+use crate::linalg::Mat;
+use crate::ensure_shape;
+
+/// Exponentially-weighted incremental KRR.
+pub struct ForgettingKrr {
+    table: MonomialTable,
+    lambda: f64,
+    /// Maintained S^-1 with S = sum lambda^age phi phi^T + lambda^rounds rho I.
+    s_inv: Mat,
+    /// Decayed Phi y^T running sum.
+    py: Vec<f64>,
+    /// Weight vector (bias folded into the constant feature).
+    u: Vec<f64>,
+    rounds: usize,
+    work: IncDecWork,
+}
+
+impl ForgettingKrr {
+    /// Fit on the initial window.
+    pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, rho: f64, lambda: f64) -> Result<Self> {
+        ensure_shape!(
+            x.rows() == y.len(),
+            "ForgettingKrr::fit",
+            "x has {} rows, y has {}",
+            x.rows(),
+            y.len()
+        );
+        if !(0.0 < lambda && lambda <= 1.0) {
+            return Err(Error::Config(format!("lambda {lambda} not in (0, 1]")));
+        }
+        if rho <= 0.0 {
+            return Err(Error::Config("ridge rho must be > 0".into()));
+        }
+        let table = kernel.feature_table(x.cols()).ok_or_else(|| {
+            Error::Config("forgetting KRR needs a finite intrinsic dimension".into())
+        })?;
+        let phi = table.map(x);
+        let phit = phi.transpose();
+        let mut s = crate::linalg::gemm::syrk(&phit)?;
+        s.add_diag(rho)?;
+        let s_inv = spd_inverse(&s)?;
+        let mut py = vec![0.0; table.j()];
+        for (r, &yr) in y.iter().enumerate() {
+            axpy_slice(yr, phi.row(r), &mut py);
+        }
+        let u = gemv(&s_inv, &py)?;
+        Ok(Self { table, lambda, s_inv, py, u, rounds: 0, work: IncDecWork::default() })
+    }
+
+    /// One decayed incremental round: `S <- lambda S + Phi_C Phi_C^T`.
+    pub fn step(&mut self, x_new: &Mat, y_new: &[f64]) -> Result<()> {
+        ensure_shape!(
+            x_new.rows() == y_new.len() && x_new.cols() == self.table.m,
+            "ForgettingKrr::step",
+            "x_new {:?}, y_new {}",
+            x_new.shape(),
+            y_new.len()
+        );
+        let c = x_new.rows();
+        let j = self.table.j();
+        if c > 0 {
+            let phi_c = self.table.map(x_new); // (C, J)
+            // scaled columns: Phi_C / sqrt(lambda)
+            let inv_sqrt = 1.0 / self.lambda.sqrt();
+            let mut cols = Mat::zeros(j, c);
+            for r in 0..c {
+                let src = phi_c.row(r);
+                for jj in 0..j {
+                    cols[(jj, r)] = src[jj] * inv_sqrt;
+                }
+            }
+            let signs = vec![1.0; c];
+            incdec_into(&mut self.s_inv, &cols, &signs, &mut self.work)?;
+            self.s_inv.scale(1.0 / self.lambda);
+            // py <- lambda py + Phi_C^T y
+            for v in &mut self.py {
+                *v *= self.lambda;
+            }
+            for (r, &yr) in y_new.iter().enumerate() {
+                axpy_slice(yr, phi_c.row(r), &mut self.py);
+            }
+        } else {
+            // pure decay round
+            self.s_inv.scale(1.0 / self.lambda);
+            for v in &mut self.py {
+                *v *= self.lambda;
+            }
+        }
+        self.rounds += 1;
+        self.u = gemv(&self.s_inv, &self.py)?;
+        Ok(())
+    }
+
+    /// Predict.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        let phi = self.table.map(x);
+        gemv(&phi, &self.u)
+    }
+
+    /// Forgetting factor.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Rounds applied.
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Weight vector.
+    pub fn weights(&self) -> &[f64] {
+        &self.u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::dot;
+    use crate::testutil::assert_vec_close;
+    use crate::util::prng::Rng;
+
+    fn data(n: usize, m: usize, w: &[f64], seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, m, |_, _| 0.5 * rng.gaussian());
+        let y: Vec<f64> = (0..n)
+            .map(|i| dot(x.row(i), w) + 0.02 * rng.gaussian())
+            .collect();
+        (x, y)
+    }
+
+    /// lambda decay must match the direct weighted solve.
+    #[test]
+    fn matches_direct_weighted_solve() {
+        let m = 3;
+        let mut rng = Rng::new(1);
+        let w = rng.gaussian_vec(m);
+        let (x0, y0) = data(30, m, &w, 2);
+        let kernel = Kernel::poly(2, 1.0);
+        let (rho, lambda) = (0.5, 0.9);
+        let mut model = ForgettingKrr::fit(&x0, &y0, &kernel, rho, lambda).unwrap();
+        let mut batches = vec![(x0.clone(), y0.clone())];
+        for k in 0..4 {
+            let (xc, yc) = data(4, m, &w, 10 + k);
+            model.step(&xc, &yc).unwrap();
+            batches.push((xc, yc));
+        }
+        // direct: S = sum_k lambda^{age} Phi_k Phi_k^T + lambda^{rounds} rho I
+        let table = kernel.feature_table(m).unwrap();
+        let j = table.j();
+        let rounds = batches.len() - 1;
+        let mut s = Mat::zeros(j, j);
+        let mut py = vec![0.0; j];
+        for (k, (xb, yb)) in batches.iter().enumerate() {
+            let age = rounds - if k == 0 { 0 } else { k };
+            let wgt = lambda.powi(age as i32);
+            let phi = table.map(xb);
+            for r in 0..phi.rows() {
+                let row = phi.row(r).to_vec();
+                crate::linalg::gemm::ger(&mut s, wgt, &row, &row).unwrap();
+                axpy_slice(wgt * yb[r], &row, &mut py);
+            }
+        }
+        s.add_diag(rho * lambda.powi(rounds as i32)).unwrap();
+        let u_direct = crate::linalg::solve::solve_spd(&s, &py).unwrap();
+        assert_vec_close(model.weights(), &u_direct, 1e-6);
+    }
+
+    /// lambda = 1 tracks plain (bias-free) incremental KRR.
+    #[test]
+    fn lambda_one_is_plain_incremental() {
+        let m = 3;
+        let mut rng = Rng::new(3);
+        let w = rng.gaussian_vec(m);
+        let (x0, y0) = data(25, m, &w, 4);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut model = ForgettingKrr::fit(&x0, &y0, &kernel, 0.5, 1.0).unwrap();
+        let (xc, yc) = data(5, m, &w, 5);
+        model.step(&xc, &yc).unwrap();
+        // direct on the union
+        let x_all = x0.vcat(&xc).unwrap();
+        let mut y_all = y0.clone();
+        y_all.extend_from_slice(&yc);
+        let fresh = ForgettingKrr::fit(&x_all, &y_all, &kernel, 0.5, 1.0).unwrap();
+        assert_vec_close(model.weights(), fresh.weights(), 1e-7);
+    }
+
+    /// Under concept drift, forgetting adapts while lambda=1 lags.
+    #[test]
+    fn adapts_to_drift() {
+        let m = 4;
+        let mut rng = Rng::new(6);
+        let w_old = rng.gaussian_vec(m);
+        let w_new: Vec<f64> = w_old.iter().map(|v| -v).collect(); // hard flip
+        let (x0, y0) = data(60, m, &w_old, 7);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut forgetful = ForgettingKrr::fit(&x0, &y0, &kernel, 0.5, 0.6).unwrap();
+        let mut sticky = ForgettingKrr::fit(&x0, &y0, &kernel, 0.5, 1.0).unwrap();
+        for k in 0..12 {
+            let (xc, yc) = data(8, m, &w_new, 20 + k);
+            forgetful.step(&xc, &yc).unwrap();
+            sticky.step(&xc, &yc).unwrap();
+        }
+        let (xt, yt) = data(50, m, &w_new, 99);
+        let rmse = |p: &[f64]| crate::krr::rmse(p, &yt);
+        let rf = rmse(&forgetful.predict(&xt).unwrap());
+        let rs = rmse(&sticky.predict(&xt).unwrap());
+        assert!(rf < rs, "forgetting ({rf:.4}) must beat sticky ({rs:.4}) under drift");
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let (x, y) = data(10, 3, &[1.0, 0.0, 0.0], 8);
+        let kernel = Kernel::poly(2, 1.0);
+        assert!(ForgettingKrr::fit(&x, &y, &kernel, 0.5, 0.0).is_err());
+        assert!(ForgettingKrr::fit(&x, &y, &kernel, 0.5, 1.5).is_err());
+        assert!(ForgettingKrr::fit(&x, &y, &Kernel::rbf_radius(1.0), 0.5, 0.9).is_err());
+    }
+
+    #[test]
+    fn pure_decay_round() {
+        let (x, y) = data(20, 3, &[1.0, -1.0, 0.5], 9);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut model = ForgettingKrr::fit(&x, &y, &kernel, 0.5, 0.8).unwrap();
+        let u_before = model.weights().to_vec();
+        model.step(&Mat::zeros(0, 3), &[]).unwrap();
+        // decaying S and py by the same factor leaves u unchanged
+        assert_vec_close(model.weights(), &u_before, 1e-9);
+        assert_eq!(model.rounds(), 1);
+    }
+}

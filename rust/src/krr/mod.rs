@@ -1,0 +1,86 @@
+//! Kernel Ridge Regression engines with multiple incremental/decremental
+//! updates — the paper's primary contribution.
+//!
+//! * [`intrinsic`] — §II: maintains `S^-1 = (Φ Φ^T + ρI)^-1` in feature
+//!   space (dimension J); right choice when N ≫ J.
+//! * [`empirical`] — §III: maintains `Q^-1 = (K + ρI)^-1` in sample space
+//!   (dimension N); right choice when M ≫ N and for RBF kernels.
+//! * [`advisor`] — §II.B/§III.B: the batch-size and space-selection cost
+//!   model.
+//!
+//! Both engines expose the same [`KrrModel`] surface so the coordinator can
+//! route to either behind one trait object.
+
+pub mod advisor;
+pub mod empirical;
+pub mod empirical_sparse;
+pub mod forgetting;
+pub mod intrinsic;
+
+use crate::error::Result;
+use crate::linalg::Mat;
+
+/// Common interface over the two KRR operating modes.
+pub trait KrrModel: Send {
+    /// Predict responses for a block of raw feature rows.
+    fn predict(&self, x: &Mat) -> Result<Vec<f64>>;
+
+    /// One multiple incremental/decremental round: add the rows of
+    /// `(x_new, y_new)`, remove the training samples at `remove_idx`
+    /// (indices into the *current* training set), in a single batched
+    /// update.
+    fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()>;
+
+    /// Current training-set size.
+    fn n_samples(&self) -> usize;
+
+    /// Predictions over the engine's own training set (the outlier-scoring
+    /// hot path; engines override with stored-feature fast paths).
+    fn predict_training(&self) -> Result<Vec<f64>>;
+
+    /// Human-readable mode name ("intrinsic"/"empirical").
+    fn mode(&self) -> &'static str;
+}
+
+/// Classification accuracy of sign-thresholded regression outputs vs ±1
+/// labels (the paper's datasets are 2-class with ±1 targets).
+pub fn classification_accuracy(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred
+        .iter()
+        .zip(y)
+        .filter(|(p, t)| (p.is_sign_positive() && **t > 0.0) || (p.is_sign_negative() && **t <= 0.0))
+        .count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Root-mean-square error.
+pub fn rmse(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred.iter().zip(y).map(|(p, t)| (p - t) * (p - t)).sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_signs() {
+        let pred = [0.9, -0.3, 0.1, -2.0];
+        let y = [1.0, 1.0, 1.0, -1.0];
+        assert!((classification_accuracy(&pred, &y) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_basic() {
+        assert!((rmse(&[1.0, 2.0], &[0.0, 2.0]) - (0.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(rmse(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! # mikrr — Multiple Incremental/Decremental Kernel Ridge Regression
+//!
+//! A production-oriented reproduction of
+//! *"Efficient Multiple Incremental Computation for Kernel Ridge Regression
+//! with Bayesian Uncertainty Modeling"* (Chen, Abdullah, Park — FGCS 2017),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the streaming coordinator: sensor sources, sink-node
+//!   pooling, batching with backpressure, outlier-driven decremental learning,
+//!   and the incremental KRR/KBR engines themselves (intrinsic and empirical
+//!   space), all in pure Rust on the request path.
+//! * **L2** — the paper's update equations as JAX graphs
+//!   (`python/compile/model.py`), AOT-lowered to HLO text at build time.
+//! * **L1** — Pallas kernels for the compute hot-spots
+//!   (`python/compile/kernels/`), lowered into the same HLO.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT CPU client
+//! (`xla` crate) and transparently falls back to the native [`linalg`]
+//! implementations when shapes do not match the canonical artifact shapes.
+//!
+//! See `examples/` for full workloads and `rust/benches/paper_tables.rs` for
+//! the reproduction of every table and figure in the paper's evaluation.
+
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod error;
+pub mod par;
+pub mod util;
+
+pub mod linalg;
+
+pub mod baselines;
+pub mod kbr;
+pub mod kernels;
+pub mod krr;
+
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod streaming;
+
+pub mod testutil;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,334 @@
+//! Blocked, multi-threaded dense matrix products.
+//!
+//! The hot loop is a row-major micro-kernel over a packed B panel; rows of C
+//! are distributed across threads via [`crate::par::parallel_for`].  This is
+//! the native fallback for the AOT GEMM artifacts and the engine used by all
+//! maintained-inverse updates (J up to 2024 in the paper's configs).
+
+use crate::ensure_shape;
+use crate::error::Result;
+use crate::linalg::matrix::{dot, Mat};
+use crate::par;
+
+/// Cache-block sizes for the packed GEMM (tuned on this container; see
+/// EXPERIMENTS.md §Perf).
+const MC: usize = 64; // rows of A per panel
+const KC: usize = 256; // depth per panel
+const MIN_PAR_ROWS: usize = 16;
+
+/// `C = A * B` (new allocation).
+pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    ensure_shape!(
+        a.cols() == b.rows(),
+        "gemm::matmul",
+        "a is {:?}, b is {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_into(1.0, a, b, 0.0, &mut c)?;
+    Ok(c)
+}
+
+/// `C = A * B^T` (new allocation).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
+    ensure_shape!(
+        a.cols() == b.cols(),
+        "gemm::matmul_nt",
+        "a is {:?}, b^T is {:?}",
+        a.shape(),
+        b.shape()
+    );
+    // B^T in row-major == rows of B are columns of B^T: inner product of
+    // rows, which is the cache-friendly case — no packing needed.
+    let m = a.rows();
+    let n = b.rows();
+    let mut c = Mat::zeros(m, n);
+    let a_ref = &a;
+    let b_ref = &b;
+    let cols = n;
+    let data = c.as_mut_slice();
+    let dptr = SendSlice(data.as_mut_ptr());
+    par::parallel_for(m, MIN_PAR_ROWS, |lo, hi| {
+        let p = dptr;
+        for i in lo..hi {
+            let ai = a_ref.row(i);
+            for j in 0..n {
+                // SAFETY: disjoint row ranges per chunk.
+                unsafe { *p.0.add(i * cols + j) = dot(ai, b_ref.row(j)) };
+            }
+        }
+    });
+    Ok(c)
+}
+
+/// `C = A^T * B` (new allocation), A: (k, m), B: (k, n) -> C: (m, n).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
+    ensure_shape!(
+        a.rows() == b.rows(),
+        "gemm::matmul_tn",
+        "a^T is {:?}, b is {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let at = a.transpose();
+    matmul(&at, b)
+}
+
+/// General `C = alpha * A * B + beta * C`, blocked and parallel over C rows.
+pub fn gemm_into(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
+    ensure_shape!(
+        a.cols() == b.rows() && c.rows() == a.rows() && c.cols() == b.cols(),
+        "gemm::gemm_into",
+        "a {:?} * b {:?} -> c {:?}",
+        a.shape(),
+        b.shape(),
+        c.shape()
+    );
+    let (m, k) = a.shape();
+    let n = b.cols();
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.as_mut_slice().fill(0.0);
+        } else {
+            c.scale(beta);
+        }
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return Ok(());
+    }
+    let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+    par::parallel_for(m, MIN_PAR_ROWS, |row_lo, row_hi| {
+        let p = cptr;
+        // panel over K for cache reuse of B rows
+        for kb in (0..k).step_by(KC) {
+            let k_hi = (kb + KC).min(k);
+            for ib in (row_lo..row_hi).step_by(MC) {
+                let i_hi = (ib + MC).min(row_hi);
+                for i in ib..i_hi {
+                    let arow = a.row(i);
+                    // SAFETY: each thread owns disjoint C rows.
+                    let crow =
+                        unsafe { std::slice::from_raw_parts_mut(p.0.add(i * n), n) };
+                    for kk in kb..k_hi {
+                        let aik = alpha * arow[kk];
+                        if aik != 0.0 {
+                            let brow = b.row(kk);
+                            // axpy: crow += aik * brow  (vectorizes)
+                            for (cv, bv) in crow.iter_mut().zip(brow) {
+                                *cv += aik * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Symmetric rank-N update: `C = A * A^T` (C symmetric, computed fully).
+pub fn syrk(a: &Mat) -> Result<Mat> {
+    let m = a.rows();
+    let mut c = Mat::zeros(m, m);
+    let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+    par::parallel_for(m, MIN_PAR_ROWS, |lo, hi| {
+        let p = cptr;
+        for i in lo..hi {
+            let ai = a.row(i);
+            for j in 0..=i {
+                let v = dot(ai, a.row(j));
+                // SAFETY: row i written only by its owner; (j,i) mirror may
+                // belong to another thread's row j — handled after the loop.
+                unsafe { *p.0.add(i * m + j) = v };
+            }
+        }
+    });
+    // mirror lower triangle to upper
+    for i in 0..m {
+        for j in 0..i {
+            c[(j, i)] = c[(i, j)];
+        }
+    }
+    Ok(c)
+}
+
+/// Matrix-vector product `y = A x`.
+pub fn gemv(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
+    ensure_shape!(
+        a.cols() == x.len(),
+        "gemm::gemv",
+        "a is {:?}, x has {}",
+        a.shape(),
+        x.len()
+    );
+    Ok(par::parallel_map(a.rows(), 512, |i| dot(a.row(i), x)))
+}
+
+/// `y = A^T x` with A: (n, m), x: (n,) -> y: (m,).
+pub fn gemv_t(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
+    ensure_shape!(
+        a.rows() == x.len(),
+        "gemm::gemv_t",
+        "a^T is {:?}, x has {}",
+        a.shape(),
+        x.len()
+    );
+    let mut y = vec![0.0; a.cols()];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi != 0.0 {
+            for (yv, av) in y.iter_mut().zip(a.row(i)) {
+                *yv += xi * av;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Outer-product accumulate: `C += alpha * x y^T`.
+pub fn ger(c: &mut Mat, alpha: f64, x: &[f64], y: &[f64]) -> Result<()> {
+    ensure_shape!(
+        c.rows() == x.len() && c.cols() == y.len(),
+        "gemm::ger",
+        "c is {:?}, x has {}, y has {}",
+        c.shape(),
+        x.len(),
+        y.len()
+    );
+    for (i, &xi) in x.iter().enumerate() {
+        let axi = alpha * xi;
+        if axi != 0.0 {
+            for (cv, yv) in c.row_mut(i).iter_mut().zip(y) {
+                *cv += axi * yv;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Raw-pointer Send wrapper (disjoint writes guaranteed by the callers).
+#[derive(Clone, Copy)]
+struct SendSlice(*mut f64);
+unsafe impl Send for SendSlice {}
+unsafe impl Sync for SendSlice {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn randm(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.gaussian())
+    }
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (7, 3, 5), (65, 130, 33), (128, 64, 256)] {
+            let a = randm(m, k, 1);
+            let b = randm(k, n, 2);
+            let got = matmul(&a, &b).unwrap();
+            let want = naive(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-9, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches() {
+        let a = randm(33, 21, 3);
+        let b = randm(47, 21, 4);
+        let got = matmul_nt(&a, &b).unwrap();
+        let want = naive(&a, &b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn matmul_tn_matches() {
+        let a = randm(21, 33, 5);
+        let b = randm(21, 13, 6);
+        let got = matmul_tn(&a, &b).unwrap();
+        let want = naive(&a.transpose(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let a = randm(10, 8, 7);
+        let b = randm(8, 6, 8);
+        let mut c = randm(10, 6, 9);
+        let c0 = c.clone();
+        gemm_into(2.0, &a, &b, 0.5, &mut c).unwrap();
+        let mut want = naive(&a, &b);
+        want.scale(2.0);
+        let mut c0s = c0;
+        c0s.scale(0.5);
+        want.axpy(1.0, &c0s).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn syrk_matches() {
+        let a = randm(37, 12, 10);
+        let got = syrk(&a).unwrap();
+        let want = naive(&a, &a.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn gemv_matches() {
+        let a = randm(23, 17, 11);
+        let mut rng = Rng::new(12);
+        let x = rng.gaussian_vec(17);
+        let y = gemv(&a, &x).unwrap();
+        for i in 0..23 {
+            let want = dot(a.row(i), &x);
+            assert!((y[i] - want).abs() < 1e-10);
+        }
+        let xt = rng.gaussian_vec(23);
+        let yt = gemv_t(&a, &xt).unwrap();
+        let want = gemv(&a.transpose(), &xt).unwrap();
+        for (g, w) in yt.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn ger_accumulates() {
+        let mut c = Mat::zeros(3, 4);
+        let x = [1.0, 2.0, 3.0];
+        let y = [1.0, 0.0, -1.0, 2.0];
+        ger(&mut c, 2.0, &x, &y).unwrap();
+        assert_eq!(c[(2, 3)], 12.0);
+        assert_eq!(c[(1, 2)], -4.0);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(matmul(&a, &b).is_err());
+        assert!(gemv(&a, &[0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 4);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape(), (0, 4));
+    }
+}

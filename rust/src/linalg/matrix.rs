@@ -1,0 +1,521 @@
+//! `Mat`: a dense, row-major, f64 matrix with the small API surface the
+//! incremental-KRR engines need. Deliberately simple — contiguous `Vec<f64>`
+//! storage, explicit shapes, panics only in `debug_assert`s; fallible ops
+//! return [`crate::error::Result`].
+
+use crate::ensure_shape;
+use crate::error::Result;
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat({}x{})", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for r in 0..rmax {
+            write!(f, "  [")?;
+            for c in 0..cmax {
+                write!(f, "{:>10.4}", self[(r, c)])?;
+            }
+            writeln!(f, "{}]", if cmax < self.cols { " ..." } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  ...")?;
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Wrap an existing buffer (len must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        ensure_shape!(
+            data.len() == rows * cols,
+            "Mat::from_vec",
+            "len {} != {}x{}",
+            data.len(),
+            rows,
+            cols
+        );
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Self { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// True when square.
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw data slice (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw data slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the raw buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow one row.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy one column out.
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        debug_assert!(c < self.cols);
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out[(c, r)] = self[(r, c)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy of selected rows, in the given order.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Copy of selected columns, in the given order.
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            for (j, &c) in idx.iter().enumerate() {
+                out[(r, j)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Mat) -> Result<Mat> {
+        ensure_shape!(
+            self.rows == other.rows,
+            "Mat::hcat",
+            "rows {} != {}",
+            self.rows,
+            other.rows
+        );
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        Ok(out)
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Mat) -> Result<Mat> {
+        ensure_shape!(
+            self.cols == other.cols,
+            "Mat::vcat",
+            "cols {} != {}",
+            self.cols,
+            other.cols
+        );
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Append one row in place.
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        ensure_shape!(
+            row.len() == self.cols || self.rows == 0,
+            "Mat::push_row",
+            "row len {} != cols {}",
+            row.len(),
+            self.cols
+        );
+        if self.rows == 0 {
+            self.cols = row.len();
+        }
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Remove rows by index (any order; deduplicated), preserving the order
+    /// of the remaining rows. Returns the removed rows as a new Mat in
+    /// ascending original-index order.
+    pub fn remove_rows(&mut self, idx: &[usize]) -> Result<Mat> {
+        let mut sorted: Vec<usize> = idx.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if let Some(&max) = sorted.last() {
+            ensure_shape!(
+                max < self.rows,
+                "Mat::remove_rows",
+                "index {} >= rows {}",
+                max,
+                self.rows
+            );
+        }
+        let removed = self.select_rows(&sorted);
+        if sorted.is_empty() {
+            return Ok(removed);
+        }
+        let keep_rows = self.rows - sorted.len();
+        // in-place compaction: shift kept rows down over removed ones
+        // (no allocation; one memmove per kept row after the first removal)
+        let cols = self.cols;
+        let mut dst = sorted[0];
+        let mut it = sorted.iter().peekable();
+        for r in sorted[0]..self.rows {
+            if it.peek() == Some(&&r) {
+                it.next();
+                continue;
+            }
+            if dst != r {
+                self.data.copy_within(r * cols..(r + 1) * cols, dst * cols);
+            }
+            dst += 1;
+        }
+        self.data.truncate(keep_rows * cols);
+        self.rows = keep_rows;
+        Ok(removed)
+    }
+
+    /// Submatrix copy `[r0..r1, c0..c1)`.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        debug_assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for r in r0..r1 {
+            out.row_mut(r - r0)
+                .copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) -> Result<()> {
+        ensure_shape!(
+            self.shape() == other.shape(),
+            "Mat::axpy",
+            "{:?} != {:?}",
+            self.shape(),
+            other.shape()
+        );
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Symmetrize in place: `A = (A + A^T) / 2` (drift control for the
+    /// maintained inverses, which are SPD in exact arithmetic).
+    pub fn symmetrize(&mut self) {
+        debug_assert!(self.is_square());
+        let n = self.rows;
+        for r in 0..n {
+            for c in (r + 1)..n {
+                let v = 0.5 * (self[(r, c)] + self[(c, r)]);
+                self[(r, c)] = v;
+                self[(c, r)] = v;
+            }
+        }
+    }
+
+    /// `A + alpha*I` (must be square).
+    pub fn add_diag(&mut self, alpha: f64) -> Result<()> {
+        ensure_shape!(self.is_square(), "Mat::add_diag", "not square: {:?}", self.shape());
+        for i in 0..self.rows {
+            self[(i, i)] += alpha;
+        }
+        Ok(())
+    }
+
+    /// Row sums as a vector (`A e^T`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|r| self.row(r).iter().sum()).collect()
+    }
+
+    /// Column sums as a vector (`e A`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (o, v) in out.iter_mut().zip(self.row(r)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Check all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled for ILP; LLVM vectorizes this well.
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x` over slices.
+#[inline]
+pub fn axpy_slice(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[allow(clippy::needless_range_loop)]
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Mat::from_fn(3, 4, |r, c| (r * 10 + c) as f64);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let mut m = Mat::eye(3);
+        m.add_diag(0.5).unwrap();
+        assert_eq!(m[(0, 0)], 1.5);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(37, 53, |r, c| (r * 53 + c) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.transpose(), m);
+        assert_eq!(t[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn hcat_vcat() {
+        let a = Mat::from_fn(2, 2, |r, c| (r + c) as f64);
+        let b = Mat::from_fn(2, 1, |_, _| 9.0);
+        let h = a.hcat(&b).unwrap();
+        assert_eq!(h.shape(), (2, 3));
+        assert_eq!(h[(1, 2)], 9.0);
+        let v = a.vcat(&a).unwrap();
+        assert_eq!(v.shape(), (4, 2));
+        assert!(a.hcat(&Mat::zeros(3, 1)).is_err());
+    }
+
+    #[test]
+    fn push_remove_rows() {
+        let mut m = Mat::zeros(0, 0);
+        m.push_row(&[1.0, 2.0]).unwrap();
+        m.push_row(&[3.0, 4.0]).unwrap();
+        m.push_row(&[5.0, 6.0]).unwrap();
+        assert_eq!(m.shape(), (3, 2));
+        let removed = m.remove_rows(&[1]).unwrap();
+        assert_eq!(removed.row(0), &[3.0, 4.0]);
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m.row(1), &[5.0, 6.0]);
+        assert!(m.remove_rows(&[5]).is_err());
+    }
+
+    #[test]
+    fn remove_rows_unsorted_dedup() {
+        let mut m = Mat::from_fn(5, 1, |r, _| r as f64);
+        let removed = m.remove_rows(&[3, 1, 3]).unwrap();
+        assert_eq!(removed.col(0), vec![1.0, 3.0]);
+        assert_eq!(m.col(0), vec![0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn select_and_block() {
+        let m = Mat::from_fn(4, 4, |r, c| (r * 4 + c) as f64);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.row(0)[0], 8.0);
+        assert_eq!(s.row(1)[0], 0.0);
+        let b = m.block(1, 3, 2, 4);
+        assert_eq!(b.shape(), (2, 2));
+        assert_eq!(b[(0, 0)], 6.0);
+        let c = m.select_cols(&[3, 1]);
+        assert_eq!(c[(0, 0)], 3.0);
+        assert_eq!(c[(0, 1)], 1.0);
+    }
+
+    #[test]
+    fn sums_and_norms() {
+        let m = Mat::from_fn(2, 3, |_, _| 1.0);
+        assert_eq!(m.row_sums(), vec![3.0, 3.0]);
+        assert_eq!(m.col_sums(), vec![2.0, 2.0, 2.0]);
+        assert!((m.fro_norm() - 6.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetrize() {
+        let mut m = Mat::from_fn(3, 3, |r, c| (r * 3 + c) as f64);
+        m.symmetrize();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(m[(r, c)], m[(c, r)]);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_unrolled() {
+        let a: Vec<f64> = (0..103).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..103).map(|i| (i * 2) as f64).collect();
+        let want: f64 = (0..103).map(|i| (i * i * 2) as f64).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Mat::from_vec(2, 2, vec![0.0; 3]).is_err());
+        assert!(Mat::from_vec(2, 2, vec![0.0; 4]).is_ok());
+    }
+}

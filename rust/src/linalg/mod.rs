@@ -1,0 +1,20 @@
+//! Dense linear-algebra substrate (from scratch; f64, row-major).
+//!
+//! The paper's update rules are rank-k corrections of maintained inverses;
+//! everything they need lives here:
+//!
+//! * [`matrix`] — the `Mat` container and views;
+//! * [`gemm`] — blocked, multi-threaded matrix multiply / SYRK / GEMV;
+//! * [`solve`] — Cholesky and LU factorizations, triangular solves, SPD and
+//!   general inverses;
+//! * [`woodbury`] — the paper's eq. (13)–(15) batched up/down-dates and the
+//!   eq. (22)/(27)–(30) bordered grow/shrink rules for empirical space.
+
+pub mod gemm;
+pub mod matrix;
+pub mod solve;
+pub mod sparse;
+pub mod woodbury;
+
+pub use matrix::Mat;
+pub use sparse::SparseMat;

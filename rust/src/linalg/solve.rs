@@ -1,0 +1,346 @@
+//! Factorizations and solves: Cholesky (SPD), LU with partial pivoting,
+//! triangular solves, inverses, log-determinant.
+//!
+//! The nonincremental baselines call [`spd_inverse`]/[`solve_spd`] on every
+//! retrain (the O(N^3)/O(J^3) cost the paper's incremental rules avoid);
+//! the incremental engines call them once at bootstrap.
+
+use crate::ensure_shape;
+use crate::error::{Error, Result};
+use crate::linalg::matrix::{dot, Mat};
+
+/// Cholesky factorization `A = L L^T` (lower).  Fails if a pivot is not
+/// strictly positive (A not SPD up to roundoff).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    ensure_shape!(a.is_square(), "solve::cholesky", "not square: {:?}", a.shape());
+    let n = a.rows();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let s = dot(&l.row(i)[..j], &l.row(j)[..j]);
+            if i == j {
+                let d = a[(i, i)] - s;
+                if d <= 0.0 || !d.is_finite() {
+                    return Err(Error::numerical(
+                        "cholesky",
+                        format!("non-positive pivot {d:.3e} at row {i}"),
+                    ));
+                }
+                l[(i, j)] = d.sqrt();
+            } else {
+                l[(i, j)] = (a[(i, j)] - s) / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L x = b` (L lower-triangular) in place.
+pub fn forward_sub(l: &Mat, b: &mut [f64]) -> Result<()> {
+    ensure_shape!(
+        l.is_square() && l.rows() == b.len(),
+        "solve::forward_sub",
+        "l {:?}, b {}",
+        l.shape(),
+        b.len()
+    );
+    for i in 0..b.len() {
+        let s = dot(&l.row(i)[..i], &b[..i]);
+        b[i] = (b[i] - s) / l[(i, i)];
+    }
+    Ok(())
+}
+
+/// Solve `L^T x = b` (L lower-triangular, solving with its transpose) in place.
+pub fn backward_sub_t(l: &Mat, b: &mut [f64]) -> Result<()> {
+    ensure_shape!(
+        l.is_square() && l.rows() == b.len(),
+        "solve::backward_sub_t",
+        "l {:?}, b {}",
+        l.shape(),
+        b.len()
+    );
+    let n = b.len();
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * b[k];
+        }
+        b[i] = s / l[(i, i)];
+    }
+    Ok(())
+}
+
+/// Solve SPD system `A x = b` via Cholesky.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(a)?;
+    let mut x = b.to_vec();
+    forward_sub(&l, &mut x)?;
+    backward_sub_t(&l, &mut x)?;
+    Ok(x)
+}
+
+/// SPD inverse via Cholesky: solves A X = I column by column.
+pub fn spd_inverse(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut col = vec![0.0; n];
+    for j in 0..n {
+        col.fill(0.0);
+        col[j] = 1.0;
+        forward_sub(&l, &mut col)?;
+        backward_sub_t(&l, &mut col)?;
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    // exact-arithmetic symmetry, enforce against roundoff drift
+    inv.symmetrize();
+    Ok(inv)
+}
+
+/// log(det(A)) for SPD A (via Cholesky).
+pub fn spd_logdet(a: &Mat) -> Result<f64> {
+    let l = cholesky(a)?;
+    Ok(2.0 * (0..a.rows()).map(|i| l[(i, i)].ln()).sum::<f64>())
+}
+
+/// LU decomposition with partial pivoting: returns (LU packed, perm, sign).
+pub struct Lu {
+    /// Packed L (unit diagonal, below) and U (on/above diagonal).
+    pub lu: Mat,
+    /// Row permutation: row i of LU corresponds to row perm[i] of A.
+    pub perm: Vec<usize>,
+    /// Permutation sign (+1/-1), for determinants.
+    pub sign: f64,
+}
+
+/// Factor a general square matrix.
+pub fn lu_decompose(a: &Mat) -> Result<Lu> {
+    ensure_shape!(a.is_square(), "solve::lu", "not square: {:?}", a.shape());
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+    for k in 0..n {
+        // pivot
+        let mut p = k;
+        let mut best = lu[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = lu[(i, k)].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best == 0.0 || !best.is_finite() {
+            return Err(Error::numerical("lu", format!("singular at column {k}")));
+        }
+        if p != k {
+            // swap rows k and p
+            for c in 0..n {
+                let t = lu[(k, c)];
+                lu[(k, c)] = lu[(p, c)];
+                lu[(p, c)] = t;
+            }
+            perm.swap(k, p);
+            sign = -sign;
+        }
+        let pivot = lu[(k, k)];
+        for i in (k + 1)..n {
+            let f = lu[(i, k)] / pivot;
+            lu[(i, k)] = f;
+            if f != 0.0 {
+                // row_i -= f * row_k for columns k+1..n
+                let (rk, ri) = {
+                    // split borrows: copy row k segment
+                    let rk: Vec<f64> = lu.row(k)[k + 1..].to_vec();
+                    (rk, lu.row_mut(i))
+                };
+                for (c, rkv) in rk.iter().enumerate() {
+                    ri[k + 1 + c] -= f * rkv;
+                }
+            }
+        }
+    }
+    Ok(Lu { lu, perm, sign })
+}
+
+impl Lu {
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.lu.rows();
+        ensure_shape!(b.len() == n, "solve::lu_solve", "b has {}, need {}", b.len(), n);
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        // forward (unit lower)
+        for i in 0..n {
+            let s = dot(&self.lu.row(i)[..i], &x[..i]);
+            x[i] -= s;
+        }
+        // backward (upper)
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        Ok(x)
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        self.sign * (0..self.lu.rows()).map(|i| self.lu[(i, i)]).product::<f64>()
+    }
+}
+
+/// General inverse via LU.
+pub fn inverse(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    let lu = lu_decompose(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e.fill(0.0);
+        e[j] = 1.0;
+        let col = lu.solve(&e)?;
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Solve a small dense system `A x = B` for matrix RHS (used for the H x H
+/// Woodbury core, H ~ 6).
+pub fn solve_mat(a: &Mat, b: &Mat) -> Result<Mat> {
+    ensure_shape!(
+        a.is_square() && a.rows() == b.rows(),
+        "solve::solve_mat",
+        "a {:?}, b {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let lu = lu_decompose(a)?;
+    let mut out = Mat::zeros(b.rows(), b.cols());
+    for j in 0..b.cols() {
+        let col = lu.solve(&b.col(j))?;
+        for i in 0..b.rows() {
+            out[(i, j)] = col[i];
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, syrk};
+    use crate::util::prng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut s = syrk(&a).unwrap();
+        s.scale(1.0 / n as f64);
+        s.add_diag(1.0).unwrap();
+        s
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(20, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul(&l, &l.transpose()).unwrap();
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_spd_works() {
+        let a = spd(15, 2);
+        let mut rng = Rng::new(3);
+        let x_true = rng.gaussian_vec(15);
+        let b = crate::linalg::gemm::gemv(&a, &x_true).unwrap();
+        let x = solve_spd(&a, &b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let a = spd(25, 4);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv).unwrap();
+        assert!(prod.max_abs_diff(&Mat::eye(25)) < 1e-9);
+        // symmetric
+        assert!(inv.max_abs_diff(&inv.transpose()) < 1e-12);
+    }
+
+    #[test]
+    fn logdet_matches_lu_det() {
+        let a = spd(10, 5);
+        let ld = spd_logdet(&a).unwrap();
+        let lu = lu_decompose(&a).unwrap();
+        assert!((ld - lu.det().ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lu_solve_general() {
+        let mut rng = Rng::new(6);
+        let a = Mat::from_fn(12, 12, |_, _| rng.gaussian());
+        let x_true = rng.gaussian_vec(12);
+        let b = crate::linalg::gemm::gemv(&a, &x_true).unwrap();
+        let lu = lu_decompose(&a).unwrap();
+        let x = lu.solve(&b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 1.0;
+        // third row all zeros -> singular
+        assert!(lu_decompose(&a).is_err());
+    }
+
+    #[test]
+    fn inverse_general() {
+        let mut rng = Rng::new(7);
+        let a = Mat::from_fn(9, 9, |r, c| rng.gaussian() + if r == c { 3.0 } else { 0.0 });
+        let inv = inverse(&a).unwrap();
+        let prod = matmul(&a, &inv).unwrap();
+        assert!(prod.max_abs_diff(&Mat::eye(9)) < 1e-9);
+    }
+
+    #[test]
+    fn solve_mat_small_core() {
+        let a = spd(6, 8);
+        let mut rng = Rng::new(9);
+        let b = Mat::from_fn(6, 4, |_, _| rng.gaussian());
+        let x = solve_mat(&a, &b).unwrap();
+        let rec = matmul(&a, &x).unwrap();
+        assert!(rec.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn det_sign_permutation() {
+        // [[0,1],[1,0]] has det -1
+        let mut a = Mat::zeros(2, 2);
+        a[(0, 1)] = 1.0;
+        a[(1, 0)] = 1.0;
+        let lu = lu_decompose(&a).unwrap();
+        assert!((lu.det() + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,353 @@
+//! The paper's maintained-inverse update rules.
+//!
+//! * [`incdec`] — eq. (15): one-shot batched up/down-date of `S^-1` by
+//!   `|C|` additions and `|R|` removals (rank-H Woodbury, H = |C| + |R|).
+//! * [`bordered_grow`] — eq. (28): grow `Q^-1` by a block of new samples
+//!   (block bordered-inverse / Schur complement).
+//! * [`bordered_shrink`] — eq. (29): shrink `Q^-1` by removing samples.
+//!
+//! All three avoid the O(n^3) fresh inverse: `incdec` costs O(J^2 H + H^3),
+//! grow costs O(N^2 |C|), shrink costs O(N^2 |R|).
+
+use crate::ensure_shape;
+use crate::error::{Error, Result};
+use crate::linalg::gemm::{gemm_into, matmul, matmul_nt, matmul_tn};
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::solve_mat;
+
+/// Reusable workspace for [`incdec_into`] so the hot path allocates nothing
+/// after warm-up.
+#[derive(Clone, Default)]
+pub struct IncDecWork {
+    t: Option<Mat>,
+    w: Option<Mat>,
+}
+
+/// Batched incremental/decremental update (paper eq. 15):
+///
+/// `S'^-1 = S^-1 - S^-1 Φ_H (I + Φ_H' S^-1 Φ_H)^-1 Φ_H' S^-1`
+///
+/// with `Φ_H` of shape (J, H) and `signs[h] ∈ {+1, -1}` marking column h as
+/// incremental (+) or decremental (−); `Φ_H'` is `diag(signs) Φ_H^T`.
+/// Zero columns are exact no-ops (used by the AOT artifact to pad batches).
+pub fn incdec(s_inv: &Mat, phi_h: &Mat, signs: &[f64]) -> Result<Mat> {
+    let mut out = s_inv.clone();
+    let mut work = IncDecWork::default();
+    incdec_into(&mut out, phi_h, signs, &mut work)?;
+    Ok(out)
+}
+
+/// In-place variant of [`incdec`]: updates `s_inv` directly.
+pub fn incdec_into(
+    s_inv: &mut Mat,
+    phi_h: &Mat,
+    signs: &[f64],
+    work: &mut IncDecWork,
+) -> Result<()> {
+    let j = s_inv.rows();
+    let h = phi_h.cols();
+    ensure_shape!(
+        s_inv.is_square() && phi_h.rows() == j && signs.len() == h,
+        "woodbury::incdec",
+        "s_inv {:?}, phi_h {:?}, signs {}",
+        s_inv.shape(),
+        phi_h.shape(),
+        signs.len()
+    );
+    if h == 0 {
+        return Ok(());
+    }
+    for &s in signs {
+        if s != 1.0 && s != -1.0 {
+            return Err(Error::InvalidUpdate(format!("sign {s} not in {{+1,-1}}")));
+        }
+    }
+    // T = S^-1 Φ_H  (J, H) — computed as row-dots against Φ_H^T so the
+    // inner loops run over contiguous length-J slices instead of length-H
+    // strided columns (≈2x on the J=253/H=6 hot path; EXPERIMENTS.md §Perf).
+    let phi_t = phi_h.transpose(); // (H, J)
+    let t = matmul_nt(s_inv, &phi_t)?;
+    // core = I + diag(s) Φ_H^T T                    (H, H)
+    let pht_t = matmul_tn(phi_h, &t)?;
+    let mut core = Mat::eye(h);
+    for r in 0..h {
+        for c in 0..h {
+            core[(r, c)] += signs[r] * pht_t[(r, c)];
+        }
+    }
+    // W = core^-1 diag(s) T^T                       (H, J)
+    let mut st_t = t.transpose();
+    for r in 0..h {
+        let s = signs[r];
+        if s != 1.0 {
+            for v in st_t.row_mut(r) {
+                *v *= s;
+            }
+        }
+    }
+    let w = solve_mat(&core, &st_t).map_err(|_| {
+        Error::InvalidUpdate(format!(
+            "Woodbury core singular: batch of {h} conflicts with current state \
+             (removing samples not in the set, or |H| too large)"
+        ))
+    })?;
+    // S'^-1 = S^-1 - T W   (rank-H correction — the L1 kernel's job on TPU)
+    gemm_into(-1.0, &t, &w, 1.0, s_inv)?;
+    // exact-arithmetic symmetric for symmetric batches; fight drift
+    s_inv.symmetrize();
+    work.t = Some(t);
+    work.w = Some(w);
+    Ok(())
+}
+
+/// Bordered grow (paper eq. 28): given `Q^-1` (N, N), the cross-kernel block
+/// `eta` (N, C) and the new-block kernel `q_cc` (C, C) (already including
+/// the ridge on its diagonal), return the (N+C, N+C) inverse of
+/// `[[Q, eta], [eta^T, q_cc]]`.
+pub fn bordered_grow(q_inv: &Mat, eta: &Mat, q_cc: &Mat) -> Result<Mat> {
+    let n = q_inv.rows();
+    let c = q_cc.rows();
+    ensure_shape!(
+        q_inv.is_square() && eta.rows() == n && eta.cols() == c && q_cc.is_square(),
+        "woodbury::bordered_grow",
+        "q_inv {:?}, eta {:?}, q_cc {:?}",
+        q_inv.shape(),
+        eta.shape(),
+        q_cc.shape()
+    );
+    // G = -Q^-1 eta          (N, C)     [paper eq. 23, matrix version]
+    let mut g = matmul(q_inv, eta)?;
+    g.scale(-1.0);
+    // Z = q_cc - eta^T Q^-1 eta = q_cc + eta^T G    (C, C)
+    let mut z = q_cc.clone();
+    let etg = matmul_tn(eta, &g)?;
+    z.axpy(1.0, &etg)?;
+    let z_inv = crate::linalg::solve::spd_inverse(&z).map_err(|_| {
+        Error::InvalidUpdate("grow block Schur complement not SPD".to_string())
+    })?;
+    // assemble [[Q^-1 + G Z^-1 G^T, G Z^-1], [Z^-1 G^T, Z^-1]]
+    let gz = matmul(&g, &z_inv)?; // (N, C)
+    let mut out = Mat::zeros(n + c, n + c);
+    // top-left
+    let gzgt = crate::linalg::gemm::matmul_nt(&gz, &g)?; // G Z^-1 G^T
+    for r in 0..n {
+        let o = out.row_mut(r);
+        let q = q_inv.row(r);
+        let x = gzgt.row(r);
+        for i in 0..n {
+            o[i] = q[i] + x[i];
+        }
+        for i in 0..c {
+            o[n + i] = gz[(r, i)];
+        }
+    }
+    for r in 0..c {
+        for i in 0..n {
+            out[(n + r, i)] = gz[(i, r)];
+        }
+        for i in 0..c {
+            out[(n + r, n + i)] = z_inv[(r, i)];
+        }
+    }
+    Ok(out)
+}
+
+/// Bordered shrink (paper eq. 29): remove the samples at `remove_idx` from a
+/// maintained `Q^-1`.  Works for any index set by block-partitioning `Q^-1`
+/// into kept (Θ), cross (ξ_R) and removed (θ_R) parts:
+///
+/// `Q'^-1 = Θ − ξ_R θ_R^-1 ξ_R^T`
+///
+/// Cost O(N^2 |R|).  Per §III.B, when |R| approaches the residual size a
+/// fresh inverse is cheaper — the [`crate::krr::advisor`] makes that call.
+pub fn bordered_shrink(q_inv: &Mat, remove_idx: &[usize]) -> Result<Mat> {
+    let n = q_inv.rows();
+    let mut rem: Vec<usize> = remove_idx.to_vec();
+    rem.sort_unstable();
+    rem.dedup();
+    ensure_shape!(
+        q_inv.is_square() && rem.iter().all(|&i| i < n),
+        "woodbury::bordered_shrink",
+        "q_inv {:?}, remove {:?}",
+        q_inv.shape(),
+        remove_idx
+    );
+    if rem.len() == n {
+        return Ok(Mat::zeros(0, 0));
+    }
+    if rem.is_empty() {
+        return Ok(q_inv.clone());
+    }
+    let keep: Vec<usize> = (0..n).filter(|i| !rem.contains(i)).collect();
+    let theta = sub_matrix(q_inv, &keep, &keep);
+    let xi = sub_matrix(q_inv, &keep, &rem); // (K, R)
+    let theta_r = sub_matrix(q_inv, &rem, &rem); // (R, R)
+    // W = theta_r^-1 xi^T  -> correction = xi W
+    let w = solve_mat(&theta_r, &xi.transpose()).map_err(|_| {
+        Error::InvalidUpdate("shrink block theta_R singular".to_string())
+    })?;
+    let mut out = theta;
+    gemm_into(-1.0, &xi, &w, 1.0, &mut out)?;
+    out.symmetrize();
+    Ok(out)
+}
+
+/// Copy a general submatrix by row/col index lists.
+pub fn sub_matrix(a: &Mat, rows: &[usize], cols: &[usize]) -> Mat {
+    let mut out = Mat::zeros(rows.len(), cols.len());
+    for (i, &r) in rows.iter().enumerate() {
+        let arow = a.row(r);
+        let orow = out.row_mut(i);
+        for (j, &c) in cols.iter().enumerate() {
+            orow[j] = arow[c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul_nt, syrk};
+    use crate::linalg::solve::spd_inverse;
+    use crate::util::prng::Rng;
+
+    fn spd(n: usize, seed: u64, jitter: f64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut s = syrk(&a).unwrap();
+        s.scale(1.0 / n as f64);
+        s.add_diag(jitter).unwrap();
+        s
+    }
+
+    #[test]
+    fn incdec_matches_fresh_inverse() {
+        let j = 30;
+        let s = spd(j, 1, 30.0);
+        let s_inv = spd_inverse(&s).unwrap();
+        let mut rng = Rng::new(2);
+        let phi_h = Mat::from_fn(j, 6, |_, _| 0.3 * rng.gaussian());
+        let signs = [1.0, 1.0, 1.0, 1.0, -1.0, -1.0];
+        let got = incdec(&s_inv, &phi_h, &signs).unwrap();
+        // fresh: S' = S + sum signs * phi phi^T
+        let mut s_new = s.clone();
+        for h in 0..6 {
+            let col = phi_h.col(h);
+            crate::linalg::gemm::ger(&mut s_new, signs[h], &col, &col).unwrap();
+        }
+        let want = spd_inverse(&s_new).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-8, "diff={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn incdec_pure_incremental_and_decremental() {
+        let j = 20;
+        let s = spd(j, 3, 25.0);
+        let s_inv = spd_inverse(&s).unwrap();
+        let mut rng = Rng::new(4);
+        let phi = Mat::from_fn(j, 3, |_, _| 0.2 * rng.gaussian());
+        // inc then dec with the same columns must round-trip
+        let up = incdec(&s_inv, &phi, &[1.0; 3]).unwrap();
+        let down = incdec(&up, &phi, &[-1.0; 3]).unwrap();
+        assert!(down.max_abs_diff(&s_inv) < 1e-8);
+    }
+
+    #[test]
+    fn incdec_empty_batch_noop() {
+        let s_inv = spd_inverse(&spd(8, 5, 10.0)).unwrap();
+        let got = incdec(&s_inv, &Mat::zeros(8, 0), &[]).unwrap();
+        assert!(got.max_abs_diff(&s_inv) < 1e-15);
+    }
+
+    #[test]
+    fn incdec_zero_columns_are_noop() {
+        let j = 12;
+        let s_inv = spd_inverse(&spd(j, 6, 12.0)).unwrap();
+        let mut rng = Rng::new(7);
+        let phi2 = Mat::from_fn(j, 2, |_, _| 0.2 * rng.gaussian());
+        let phi6 = phi2.hcat(&Mat::zeros(j, 4)).unwrap();
+        let a = incdec(&s_inv, &phi2, &[1.0, -1.0]).unwrap();
+        let b = incdec(&s_inv, &phi6, &[1.0, -1.0, 1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-10);
+    }
+
+    #[test]
+    fn incdec_rejects_bad_signs() {
+        let s_inv = Mat::eye(4);
+        let phi = Mat::zeros(4, 1);
+        assert!(incdec(&s_inv, &phi, &[0.5]).is_err());
+    }
+
+    #[test]
+    fn bordered_grow_matches_fresh() {
+        let n = 15;
+        let c = 4;
+        let mut rng = Rng::new(8);
+        // full SPD (N+C) matrix, then treat leading N as current
+        let full = spd(n + c, 9, 20.0);
+        let q = full.block(0, n, 0, n);
+        let eta = full.block(0, n, n, n + c);
+        let qcc = full.block(n, n + c, n, n + c);
+        let q_inv = spd_inverse(&q).unwrap();
+        let got = bordered_grow(&q_inv, &eta, &qcc).unwrap();
+        let want = spd_inverse(&full).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-8, "diff={}", got.max_abs_diff(&want));
+        let _ = &mut rng;
+    }
+
+    #[test]
+    fn bordered_shrink_matches_fresh() {
+        let n = 18;
+        let full = spd(n, 10, 15.0);
+        let full_inv = spd_inverse(&full).unwrap();
+        let rem = vec![2usize, 7, 11];
+        let got = bordered_shrink(&full_inv, &rem).unwrap();
+        let keep: Vec<usize> = (0..n).filter(|i| !rem.contains(i)).collect();
+        let sub = sub_matrix(&full, &keep, &keep);
+        let want = spd_inverse(&sub).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-8);
+    }
+
+    #[test]
+    fn grow_then_shrink_roundtrip() {
+        let n = 12;
+        let c = 3;
+        let full = spd(n + c, 11, 18.0);
+        let q = full.block(0, n, 0, n);
+        let q_inv = spd_inverse(&q).unwrap();
+        let eta = full.block(0, n, n, n + c);
+        let qcc = full.block(n, n + c, n, n + c);
+        let grown = bordered_grow(&q_inv, &eta, &qcc).unwrap();
+        let rem: Vec<usize> = (n..n + c).collect();
+        let back = bordered_shrink(&grown, &rem).unwrap();
+        assert!(back.max_abs_diff(&q_inv) < 1e-8);
+    }
+
+    #[test]
+    fn shrink_all_and_none() {
+        let q_inv = spd_inverse(&spd(5, 12, 8.0)).unwrap();
+        assert_eq!(bordered_shrink(&q_inv, &[]).unwrap().shape(), (5, 5));
+        assert_eq!(
+            bordered_shrink(&q_inv, &[0, 1, 2, 3, 4]).unwrap().shape(),
+            (0, 0)
+        );
+    }
+
+    #[test]
+    fn incdec_large_batch_still_correct() {
+        // |H| > J is mathematically fine (just not efficient) — check math.
+        let j = 6;
+        let s = spd(j, 13, 40.0);
+        let s_inv = spd_inverse(&s).unwrap();
+        let mut rng = Rng::new(14);
+        let phi = Mat::from_fn(j, 10, |_, _| 0.1 * rng.gaussian());
+        let signs = [1.0; 10];
+        let got = incdec(&s_inv, &phi, &signs).unwrap();
+        let mut s_new = s.clone();
+        let ppt = matmul_nt(&phi, &phi).unwrap();
+        s_new.axpy(1.0, &ppt).unwrap();
+        let want = spd_inverse(&s_new).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-8);
+    }
+}

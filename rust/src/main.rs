@@ -1,0 +1,197 @@
+//! mikrr — leader binary: the streaming coordinator CLI.
+//!
+//! Subcommands:
+//! * `serve`    — run the full streaming pipeline (sensors -> sink ->
+//!   batcher -> multiple inc/dec updates) on a synthetic workload and
+//!   report throughput/latency.
+//! * `eval`     — one paper-style experiment (dataset x kernel),
+//!   printing the per-round log10 table rows.
+//! * `info`     — environment/artifact report.
+//!
+//! The full table/figure reproduction lives in `cargo bench`
+//! (`rust/benches/paper_tables.rs`) and `examples/paper_eval.rs`.
+
+use mikrr::cli::{App, Arg};
+use mikrr::config::Space;
+use mikrr::coordinator::experiment::{run_krr, Strategy};
+use mikrr::coordinator::{Coordinator, CoordinatorConfig};
+use mikrr::data::synth;
+use mikrr::error::Error;
+use mikrr::kernels::Kernel;
+use mikrr::krr::classification_accuracy;
+use mikrr::metrics::Timer;
+use mikrr::streaming::batcher::BatchPolicy;
+use mikrr::streaming::outlier::OutlierConfig;
+use mikrr::streaming::sink::SinkNode;
+use mikrr::streaming::source::{SensorNode, SourceConfig};
+
+fn app() -> App {
+    App::new("mikrr", "multiple incremental/decremental KRR coordinator")
+        .subcommand(
+            App::new("serve", "run the streaming coordinator on a synthetic sensor fleet")
+                .arg(Arg::flag("train", "initial training size").default("2000"))
+                .arg(Arg::flag("stream", "streamed samples per sensor").default("200"))
+                .arg(Arg::flag("sensors", "number of sensor nodes").default("4"))
+                .arg(Arg::flag("dim", "feature dimension").default("21"))
+                .arg(Arg::flag("kernel", "poly2|poly3|rbf|linear").default("poly2"))
+                .arg(Arg::flag("batch", "max multiple-update batch size").default("4"))
+                .arg(Arg::flag("outlier-rate", "injected outlier fraction").default("0.02"))
+                .arg(Arg::flag("seed", "rng seed").default("7"))
+                .arg(Arg::switch("uncertainty", "serve KBR predictive variance too")),
+        )
+        .subcommand(
+            App::new("eval", "run one paper-style incremental experiment")
+                .arg(Arg::flag("dataset", "ecg|drt").default("ecg"))
+                .arg(Arg::flag("kernel", "poly2|poly3|rbf").default("poly2"))
+                .arg(Arg::flag("train", "initial training size").default("2000"))
+                .arg(Arg::flag("rounds", "rounds of +4/-2").default("10"))
+                .arg(Arg::flag("seed", "rng seed").default("7"))
+                .arg(Arg::switch("skip-none", "skip the slow full-retrain baseline")),
+        )
+        .subcommand(App::new("info", "environment and artifact report"))
+}
+
+fn main() {
+    let matches = match app().parse(std::env::args().skip(1)) {
+        Ok(m) => m,
+        Err(Error::Config(help)) => {
+            eprintln!("{help}");
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match matches.cmd() {
+        "serve" => cmd_serve(&matches),
+        "eval" => cmd_eval(&matches),
+        "info" => cmd_info(),
+        _ => {
+            println!("{}", app().help());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_kernel(name: &str) -> Result<Kernel, Error> {
+    Kernel::parse(name).ok_or_else(|| Error::Config(format!("unknown kernel {name:?}")))
+}
+
+fn cmd_serve(m: &mikrr::cli::Matches) -> Result<(), Error> {
+    let train: usize = m.get_parse("train")?;
+    let stream: usize = m.get_parse("stream")?;
+    let sensors: usize = m.get_parse("sensors")?;
+    let dim: usize = m.get_parse("dim")?;
+    let batch: usize = m.get_parse("batch")?;
+    let outlier_rate: f64 = m.get_parse("outlier-rate")?;
+    let seed: u64 = m.get_parse("seed")?;
+    let kernel = parse_kernel(m.get("kernel").unwrap())?;
+
+    println!(
+        "mikrr serve: train={train} stream={stream}x{sensors} dim={dim} kernel={kernel:?}"
+    );
+    let base = synth::ecg_like(train, dim, seed);
+    let cfg = CoordinatorConfig {
+        kernel,
+        ridge: 0.5,
+        space: None,
+        batch: BatchPolicy {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_millis(20),
+        },
+        outlier: Some(OutlierConfig::default()),
+        with_uncertainty: m.is_set("uncertainty"),
+        snapshot_rollback: false,
+    };
+    let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, cfg)?;
+    println!("space routed: {:?}", coordinator.space());
+
+    let mut sink = SinkNode::new(64);
+    let mut handles = Vec::new();
+    for sid in 0..sensors {
+        let shard = synth::ecg_like(stream, dim, seed ^ ((sid as u64 + 1) << 8));
+        let scfg = SourceConfig {
+            source_id: sid,
+            outlier_rate,
+            delay: None,
+            seed: seed + sid as u64,
+        };
+        handles.push(SensorNode::new(shard, scfg).spawn(sink.sender()));
+    }
+    let t = Timer::start();
+    let outcomes = coordinator.run(&mut sink, usize::MAX)?;
+    let wall = t.elapsed();
+    for h in handles {
+        h.join().map_err(|_| Error::Stream("sensor thread panicked".into()))?;
+    }
+    let added: usize = outcomes.iter().map(|o| o.added).sum();
+    let removed: usize = outcomes.iter().map(|o| o.removed).sum();
+    println!(
+        "processed {added} arrivals / removed {removed} outliers in {} rounds, \
+         {wall:.3}s wall ({:.0} samples/s)",
+        outcomes.len(),
+        added as f64 / wall.max(1e-9)
+    );
+    println!("update latency: {}", coordinator.update_latency.summary());
+    println!("counters: {}", coordinator.counters.render());
+
+    // accuracy sanity on held-out data
+    let test = synth::ecg_like(1000, dim, seed ^ 0xFEED);
+    let pred = coordinator.handle().predict(&test.x)?;
+    println!(
+        "held-out accuracy: {:.2}%",
+        100.0 * classification_accuracy(&pred, &test.y)
+    );
+    Ok(())
+}
+
+fn cmd_eval(m: &mikrr::cli::Matches) -> Result<(), Error> {
+    let dataset = m.get("dataset").unwrap().to_string();
+    let kernel = parse_kernel(m.get("kernel").unwrap())?;
+    let train: usize = m.get_parse("train")?;
+    let rounds: usize = m.get_parse("rounds")?;
+    let seed: u64 = m.get_parse("seed")?;
+    let space = if dataset == "drt" { Space::Empirical } else { Space::Intrinsic };
+
+    let data = match dataset.as_str() {
+        "ecg" => synth::ecg_like(train + rounds * 4 + 1000, 21, seed),
+        "drt" => synth::drt_like(train + rounds * 4 + 160, 10_000, 0.01, seed),
+        other => return Err(Error::Config(format!("unknown dataset {other:?}"))),
+    };
+    let strategies: Vec<Strategy> = if m.is_set("skip-none") {
+        vec![Strategy::Multiple, Strategy::Single]
+    } else {
+        vec![Strategy::Multiple, Strategy::Single, Strategy::None]
+    };
+    let report = run_krr(&data, &kernel, 0.5, space, train, rounds, 4, 2, seed, &strategies)?;
+    println!("{}", report.record.render_table(&format!("{dataset} / {kernel:?}")));
+    println!("{}", report.record.render_curves("cumulative"));
+    println!(
+        "improvement (multiple vs single): {:.2}x ; accuracy {:.2}% ; strategies agree: {}",
+        report.record.improvement_fold("multiple", "single"),
+        100.0 * report.accuracy,
+        report.strategies_agree
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), Error> {
+    println!("mikrr {}", mikrr::version());
+    println!("threads: {}", mikrr::par::num_threads());
+    match mikrr::runtime::artifact_dir() {
+        Some(dir) => {
+            println!("artifacts: {}", dir.display());
+            match mikrr::runtime::PjrtRuntime::load_dir(&dir) {
+                Ok(rt) => println!("  loaded+compiled: {:?}", rt.names()),
+                Err(e) => println!("  load failed: {e}"),
+            }
+        }
+        None => println!("artifacts: not found (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,253 @@
+//! Metrics: wall-clock timers, per-round records matching the paper's
+//! log10-seconds reporting, cumulative curves (the figures) and table
+//! renderers (the tables).
+
+use crate::util::{fmt_secs, log10_time};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A simple scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Seconds elapsed.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart, returning the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let dt = self.elapsed();
+        self.start = Instant::now();
+        dt
+    }
+}
+
+/// Per-strategy per-round timing record for one experiment
+/// (one paper table: rows = strategies, columns = rounds).
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    /// Strategy name -> per-round seconds.
+    pub rounds: BTreeMap<String, Vec<f64>>,
+    /// Column labels (the paper uses the post-round sample counts).
+    pub labels: Vec<String>,
+}
+
+impl RoundRecord {
+    /// Record one round's time for a strategy.
+    pub fn push(&mut self, strategy: &str, seconds: f64) {
+        self.rounds.entry(strategy.to_string()).or_default().push(seconds);
+    }
+
+    /// Per-round log10 seconds for a strategy (paper table rows).
+    pub fn log10_rounds(&self, strategy: &str) -> Vec<f64> {
+        self.rounds
+            .get(strategy)
+            .map(|v| v.iter().map(|&s| log10_time(s)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Cumulative log10 seconds (paper figure curves).
+    pub fn cumulative_log10(&self, strategy: &str) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut acc = 0.0;
+        if let Some(v) = self.rounds.get(strategy) {
+            for &s in v {
+                acc += s;
+                out.push(log10_time(acc));
+            }
+        }
+        out
+    }
+
+    /// Mean per-round seconds (paper Table IX / XII cells).
+    pub fn mean_seconds(&self, strategy: &str) -> f64 {
+        self.rounds
+            .get(strategy)
+            .map(|v| crate::util::stats::mean(v))
+            .unwrap_or(0.0)
+    }
+
+    /// Improvement fold of `a` over `b` (paper: multiple vs single).
+    pub fn improvement_fold(&self, fast: &str, slow: &str) -> f64 {
+        let f = self.mean_seconds(fast);
+        let s = self.mean_seconds(slow);
+        if f <= 0.0 {
+            0.0
+        } else {
+            s / f
+        }
+    }
+
+    /// Render as a paper-style table (log10 per round).
+    pub fn render_table(&self, title: &str) -> String {
+        let mut t = crate::benchlib::Table::new(title, self.labels.clone());
+        for name in self.rounds.keys() {
+            t.row(name.clone(), self.log10_rounds(name));
+        }
+        t.render()
+    }
+
+    /// Render cumulative curves as ASCII series (one line per strategy).
+    pub fn render_curves(&self, title: &str) -> String {
+        let mut out = format!("\n--- {title} (cumulative log10 s) ---\n");
+        for name in self.rounds.keys() {
+            let c = self.cumulative_log10(name);
+            let cells: Vec<String> = c.iter().map(|v| format!("{v:>9.4}")).collect();
+            out.push_str(&format!("{:<10} {}\n", name, cells.join(" ")));
+        }
+        out
+    }
+}
+
+/// Lightweight named-counter registry for the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    /// Increment a counter.
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Add to a counter.
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.map.entry(name.to_string()).or_default() += v;
+    }
+
+    /// Read a counter.
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    /// Render all counters.
+    pub fn render(&self) -> String {
+        self.map
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Histogram of durations with fixed log-spaced buckets (for latency
+/// reporting in the serving example).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    /// New histogram with ns..10s log buckets.
+    pub fn new() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1e-7;
+        while b < 10.0 {
+            bounds.push(b);
+            b *= 10.0_f64.powf(0.25);
+        }
+        let n = bounds.len();
+        Self { bounds, counts: vec![0; n + 1], samples: Vec::new() }
+    }
+
+    /// Record one duration (seconds).
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self.bounds.partition_point(|&b| b < seconds);
+        self.counts[idx] += 1;
+        self.samples.push(seconds);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Percentile over raw samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.samples, p)
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} p50={} p95={} p99={} max={}",
+            self.count(),
+            fmt_secs(self.percentile(50.0)),
+            fmt_secs(self.percentile(95.0)),
+            fmt_secs(self.percentile(99.0)),
+            fmt_secs(crate::util::stats::max(&self.samples)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_record_math() {
+        let mut r = RoundRecord::default();
+        r.labels = vec!["100".into(), "102".into()];
+        r.push("multiple", 0.1);
+        r.push("multiple", 0.1);
+        r.push("single", 0.4);
+        r.push("single", 0.4);
+        let l = r.log10_rounds("multiple");
+        assert!((l[0] + 1.0).abs() < 1e-9);
+        let c = r.cumulative_log10("multiple");
+        assert!((c[1] - (0.2f64).log10()).abs() < 1e-9);
+        assert!((r.improvement_fold("multiple", "single") - 4.0).abs() < 1e-9);
+        let tbl = r.render_table("Table T");
+        assert!(tbl.contains("multiple"));
+        let curves = r.render_curves("Fig F");
+        assert!(curves.contains("single"));
+    }
+
+    #[test]
+    fn counters() {
+        let mut c = Counters::default();
+        c.inc("updates");
+        c.add("updates", 2);
+        assert_eq!(c.get("updates"), 3);
+        assert_eq!(c.get("missing"), 0);
+        assert!(c.render().contains("updates=3"));
+    }
+
+    #[test]
+    fn latency_hist() {
+        let mut h = LatencyHist::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        assert!(p50 > 4e-4 && p50 < 6e-4, "p50={p50}");
+        assert!(h.summary().contains("p99"));
+    }
+
+    #[test]
+    fn timer_measures() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let lap = t.lap();
+        assert!(lap >= 0.002);
+        assert!(t.elapsed() < lap);
+    }
+}

@@ -1,0 +1,141 @@
+//! Scoped data-parallel helpers over `std::thread` (no external runtime).
+//!
+//! The offline crate set has no rayon/tokio, so this module provides the
+//! minimal parallel substrate the linalg kernels and the streaming pipeline
+//! need: a `parallel_for` over index ranges with static chunking, and a
+//! `parallel_map` over slices.  Threads are spawned per call via
+//! `std::thread::scope`; for the matrix sizes in this system (J up to 2024)
+//! spawn overhead is amortized by making chunks coarse, and the hot path can
+//! opt out below a work threshold.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `MIKRR_THREADS` env override, else
+/// available parallelism, capped at 16.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("MIKRR_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(16)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `body(chunk_start, chunk_end)` in parallel over `0..n`, splitting into
+/// contiguous chunks, one per worker.  `body` must be `Sync` (it is shared).
+/// Falls back to a single inline call when `n` is small or 1 worker.
+pub fn parallel_for<F>(n: usize, min_parallel: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads();
+    if workers <= 1 || n < min_parallel {
+        body(0, n);
+        return;
+    }
+    let workers = workers.min(n);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(lo, hi));
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>`; `f(i)` must be independent
+/// per index.  Order is preserved.
+pub fn parallel_map<T, F>(n: usize, min_parallel: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_for(n, min_parallel, |lo, hi| {
+            let p = out_ptr; // copy the Send wrapper into the closure
+            for i in lo..hi {
+                // SAFETY: chunks are disjoint index ranges, each index is
+                // written exactly once, and `out` outlives the scope.
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Raw-pointer wrapper that is Send+Copy; safe because `parallel_for` chunks
+/// are disjoint.
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 10_000;
+        let counter = AtomicU64::new(0);
+        parallel_for(n, 1, |lo, hi| {
+            for i in lo..hi {
+                counter.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            }
+        });
+        let expect: u64 = (1..=n as u64).sum();
+        assert_eq!(counter.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn small_n_inline() {
+        let hit = AtomicU64::new(0);
+        parallel_for(3, 1000, |lo, hi| {
+            assert_eq!((lo, hi), (0, 3));
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(1000, 1, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn zero_n() {
+        parallel_for(0, 1, |_, _| panic!("must not run"));
+        let v: Vec<usize> = parallel_map(0, 1, |i| i);
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,165 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `manifest.txt` with one line per
+//! artifact:
+//!
+//! ```text
+//! artifact woodbury_incdec inputs=f32[253,253];f32[253,6];f32[6] outputs=f32[253,253]
+//! ```
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Dtype + dims of one tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Element type ("f32", "f64", "i32").
+    pub dtype: String,
+    /// Dimensions (empty = scalar).
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse "f32[253,6]" or "f32[]".
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| Error::Artifact(format!("bad tensor spec {s:?}")))?;
+        let dims_s = rest
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Artifact(format!("bad tensor spec {s:?}")))?;
+        let dims = if dims_s.is_empty() {
+            Vec::new()
+        } else {
+            dims_s
+                .split(',')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::Artifact(format!("bad dim {d:?} in {s:?}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype: dtype.to_string(), dims })
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact's interface.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Artifact / entry name.
+    pub name: String,
+    /// Input tensor specs, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs (the HLO returns a tuple).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// name -> spec
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next();
+            if tag != Some("artifact") {
+                return Err(Error::Artifact(format!(
+                    "line {}: expected 'artifact', got {tag:?}",
+                    lineno + 1
+                )));
+            }
+            let name = parts
+                .next()
+                .ok_or_else(|| Error::Artifact(format!("line {}: missing name", lineno + 1)))?
+                .to_string();
+            let mut inputs = Vec::new();
+            let mut outputs = Vec::new();
+            for p in parts {
+                if let Some(v) = p.strip_prefix("inputs=") {
+                    inputs = parse_specs(v)?;
+                } else if let Some(v) = p.strip_prefix("outputs=") {
+                    outputs = parse_specs(v)?;
+                } else {
+                    return Err(Error::Artifact(format!(
+                        "line {}: unknown field {p:?}",
+                        lineno + 1
+                    )));
+                }
+            }
+            artifacts.insert(name.clone(), ArtifactSpec { name, inputs, outputs });
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Load from `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text)
+    }
+
+    /// Lookup.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+}
+
+fn parse_specs(v: &str) -> Result<Vec<TensorSpec>> {
+    if v.is_empty() {
+        return Ok(Vec::new());
+    }
+    v.split(';').map(TensorSpec::parse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tensor_specs() {
+        let t = TensorSpec::parse("f32[253,6]").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.dims, vec![253, 6]);
+        assert_eq!(t.numel(), 1518);
+        let s = TensorSpec::parse("f32[]").unwrap();
+        assert!(s.dims.is_empty());
+        assert_eq!(s.numel(), 1);
+        assert!(TensorSpec::parse("f32253").is_err());
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let text = "# comment\n\
+            artifact woodbury_incdec inputs=f32[253,253];f32[253,6];f32[6] outputs=f32[253,253]\n\
+            artifact krr_refresh inputs=f32[253,253];f32[253];f32[253];f32[];f32[] outputs=f32[253];f32[]\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let w = m.get("woodbury_incdec").unwrap();
+        assert_eq!(w.inputs.len(), 3);
+        assert_eq!(w.outputs[0].dims, vec![253, 253]);
+        let k = m.get("krr_refresh").unwrap();
+        assert_eq!(k.inputs[3].dims, Vec::<usize>::new());
+        assert_eq!(k.outputs.len(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("nonsense line\n").is_err());
+        assert!(Manifest::parse("artifact x bogus=1\n").is_err());
+    }
+}

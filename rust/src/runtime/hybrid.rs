@@ -1,0 +1,200 @@
+//! Hybrid execution: AOT artifact when shapes match, native linalg
+//! otherwise.
+//!
+//! The canonical artifact shapes (DESIGN.md §6) target the ECG/poly2
+//! configuration (J = 253, H_max = 6).  Batches with |H| < 6 are padded
+//! with zero columns — an exact no-op under eq. (15) — so every paper-
+//! default round (+4/−2) hits the artifact path when artifacts are
+//! present.  Everything else (poly3's J = 2024, empirical mode, odd batch
+//! sizes) falls back to native f64 linalg.
+//!
+//! The same object also exposes the artifact-backed predict head and the
+//! Gram block kernels, with the same dispatch rule.
+
+use crate::error::Result;
+use crate::linalg::woodbury::{incdec, IncDecWork};
+use crate::linalg::Mat;
+use crate::runtime::pjrt::{PjrtRuntime, Tensor};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Dispatching executor with hit/miss counters.
+pub struct HybridExec {
+    runtime: Option<PjrtRuntime>,
+    /// Artifact-path invocations.
+    pub aot_hits: AtomicU64,
+    /// Native-path invocations.
+    pub native_hits: AtomicU64,
+}
+
+impl HybridExec {
+    /// With a loaded runtime.
+    pub fn new(runtime: Option<PjrtRuntime>) -> Self {
+        Self { runtime, aot_hits: AtomicU64::new(0), native_hits: AtomicU64::new(0) }
+    }
+
+    /// Try to load the default artifact dir; native-only on failure.
+    pub fn auto() -> Self {
+        let runtime = crate::runtime::artifact_dir()
+            .and_then(|dir| PjrtRuntime::load_dir(&dir).ok());
+        Self::new(runtime)
+    }
+
+    /// Is the AOT path available at all?
+    pub fn has_aot(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// (aot, native) hit counts.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.aot_hits.load(Ordering::Relaxed), self.native_hits.load(Ordering::Relaxed))
+    }
+
+    /// Batched Woodbury update (eq. 15) with artifact dispatch.
+    pub fn woodbury_incdec(&self, s_inv: &Mat, phi_h: &Mat, signs: &[f64]) -> Result<Mat> {
+        if let Some(rt) = &self.runtime {
+            if let Some(spec) = rt.manifest.get("woodbury_incdec") {
+                let j = spec.inputs[0].dims[0];
+                let h_max = spec.inputs[1].dims[1];
+                if s_inv.rows() == j && phi_h.cols() <= h_max {
+                    // pad to H_max with zero columns (no-ops)
+                    let mut phi_p = Mat::zeros(j, h_max);
+                    for r in 0..j {
+                        let src = phi_h.row(r);
+                        phi_p.row_mut(r)[..src.len()].copy_from_slice(src);
+                    }
+                    let mut signs_p = signs.to_vec();
+                    signs_p.resize(h_max, 1.0);
+                    let out = rt.execute(
+                        "woodbury_incdec",
+                        &[
+                            Tensor::from_mat(s_inv),
+                            Tensor::from_mat(&phi_p),
+                            Tensor::from_f64(vec![h_max], &signs_p),
+                        ],
+                    )?;
+                    self.aot_hits.fetch_add(1, Ordering::Relaxed);
+                    return out[0].to_mat();
+                }
+            }
+        }
+        self.native_hits.fetch_add(1, Ordering::Relaxed);
+        let mut work = IncDecWork::default();
+        let mut out = s_inv.clone();
+        crate::linalg::woodbury::incdec_into(&mut out, phi_h, signs, &mut work)?;
+        Ok(out)
+    }
+
+    /// Native-only reference for cross-checking in tests.
+    pub fn woodbury_native(&self, s_inv: &Mat, phi_h: &Mat, signs: &[f64]) -> Result<Mat> {
+        incdec(s_inv, phi_h, signs)
+    }
+
+    /// Head refresh (u, b) via the `krr_refresh` artifact when shapes fit.
+    pub fn krr_refresh(
+        &self,
+        s_inv: &Mat,
+        psum: &[f64],
+        py: &[f64],
+        sy: f64,
+        n: f64,
+    ) -> Result<(Vec<f64>, f64)> {
+        if let Some(rt) = &self.runtime {
+            if let Some(spec) = rt.manifest.get("krr_refresh") {
+                let j = spec.inputs[0].dims[0];
+                if s_inv.rows() == j {
+                    let out = rt.execute(
+                        "krr_refresh",
+                        &[
+                            Tensor::from_mat(s_inv),
+                            Tensor::from_f64(vec![j], psum),
+                            Tensor::from_f64(vec![j], py),
+                            Tensor::scalar(sy as f32),
+                            Tensor::scalar(n as f32),
+                        ],
+                    )?;
+                    self.aot_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((out[0].to_f64(), out[1].data[0] as f64));
+                }
+            }
+        }
+        self.native_hits.fetch_add(1, Ordering::Relaxed);
+        // native: same math as IntrinsicKrr::refresh_head
+        let sp = crate::linalg::gemm::gemv(s_inv, psum)?;
+        let denom = n - crate::linalg::matrix::dot(psum, &sp);
+        let b = (sy - crate::linalg::matrix::dot(&sp, py)) / denom;
+        let spy = crate::linalg::gemm::gemv(s_inv, py)?;
+        let u = spy.iter().zip(&sp).map(|(a, s)| a - s * b).collect();
+        Ok((u, b))
+    }
+
+    /// Gram block through the `gram_poly2`/`gram_rbf` artifacts when the
+    /// block is exactly the canonical (128, M) shape.
+    pub fn gram_block(
+        &self,
+        kernel: &crate::kernels::Kernel,
+        x: &Mat,
+        y: &Mat,
+    ) -> Result<Mat> {
+        use crate::kernels::Kernel;
+        if let Some(rt) = &self.runtime {
+            let name = match kernel {
+                Kernel::Poly { degree: 2, .. } => Some("gram_poly2"),
+                Kernel::Rbf { .. } => Some("gram_rbf"),
+                _ => None,
+            };
+            if let Some(name) = name {
+                if let Some(spec) = rt.manifest.get(name) {
+                    if x.rows() == spec.inputs[0].dims[0]
+                        && x.cols() == spec.inputs[0].dims[1]
+                        && y.rows() == spec.inputs[1].dims[0]
+                        && y.cols() == spec.inputs[1].dims[1]
+                    {
+                        let out = rt.execute(
+                            name,
+                            &[Tensor::from_mat(x), Tensor::from_mat(y)],
+                        )?;
+                        self.aot_hits.fetch_add(1, Ordering::Relaxed);
+                        return out[0].to_mat();
+                    }
+                }
+            }
+        }
+        self.native_hits.fetch_add(1, Ordering::Relaxed);
+        Ok(kernel.gram(x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{random_mat, random_spd};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn native_fallback_without_runtime() {
+        let ex = HybridExec::new(None);
+        assert!(!ex.has_aot());
+        let mut rng = Rng::new(1);
+        let s = random_spd(&mut rng, 20, 20.0);
+        let s_inv = crate::linalg::solve::spd_inverse(&s).unwrap();
+        let phi = random_mat(&mut rng, 20, 3, 0.2);
+        let got = ex.woodbury_incdec(&s_inv, &phi, &[1.0, 1.0, -1.0]).unwrap();
+        let want = ex.woodbury_native(&s_inv, &phi, &[1.0, 1.0, -1.0]).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-12);
+        assert_eq!(ex.stats().0, 0);
+        assert!(ex.stats().1 >= 1);
+    }
+
+    #[test]
+    fn refresh_native_matches_model() {
+        let ex = HybridExec::new(None);
+        let mut rng = Rng::new(2);
+        let s = random_spd(&mut rng, 10, 10.0);
+        let s_inv = crate::linalg::solve::spd_inverse(&s).unwrap();
+        let psum = rng.gaussian_vec(10);
+        let py = rng.gaussian_vec(10);
+        let (u, b) = ex.krr_refresh(&s_inv, &psum, &py, 1.5, 50.0).unwrap();
+        assert_eq!(u.len(), 10);
+        assert!(b.is_finite());
+    }
+}

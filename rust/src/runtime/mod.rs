@@ -1,0 +1,48 @@
+//! The AOT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client
+//! (`xla` crate), and executes them from the L3 hot path.
+//!
+//! [`hybrid::HybridExec`] is the piece the engines actually use: it
+//! dispatches to an AOT executable when the live shapes match the
+//! artifact's canonical shapes (padding batches with zero columns, which
+//! eq. 15 treats as no-ops) and falls back to the native [`crate::linalg`]
+//! path otherwise.  Integration tests assert the two paths agree.
+
+pub mod artifacts;
+pub mod hybrid;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+pub use hybrid::HybridExec;
+pub use pjrt::PjrtRuntime;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `MIKRR_ARTIFACTS` env override, else
+/// `artifacts/` relative to the current dir or the crate manifest dir.
+pub fn artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("MIKRR_ARTIFACTS") {
+        let pb = std::path::PathBuf::from(p);
+        if pb.join("manifest.txt").exists() {
+            return Some(pb);
+        }
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let pb = std::path::Path::new(base).join(DEFAULT_ARTIFACT_DIR);
+        if pb.join("manifest.txt").exists() {
+            return Some(pb);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn artifact_dir_resolves_when_built() {
+        // `make artifacts` must have run for the integration suite; the
+        // unit test only checks the lookup does not panic.
+        let _ = super::artifact_dir();
+    }
+}

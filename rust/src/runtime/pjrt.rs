@@ -1,0 +1,158 @@
+//! PJRT CPU wrapper over the `xla` crate: load HLO text, compile once,
+//! execute many times.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids which xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactSpec, Manifest};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Host-side tensor (f32, row-major) crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    /// Dims (empty = scalar).
+    pub dims: Vec<usize>,
+    /// Row-major data.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    /// From an f64 slice (converted) with dims.
+    pub fn from_f64(dims: Vec<usize>, data: &[f64]) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        Self { dims, data: data.iter().map(|&v| v as f32).collect() }
+    }
+
+    /// From a row-major [`crate::linalg::Mat`].
+    pub fn from_mat(m: &crate::linalg::Mat) -> Self {
+        Self::from_f64(vec![m.rows(), m.cols()], m.as_slice())
+    }
+
+    /// Into f64 data.
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&v| v as f64).collect()
+    }
+
+    /// Into a [`crate::linalg::Mat`] (requires 2 dims).
+    pub fn to_mat(&self) -> Result<crate::linalg::Mat> {
+        if self.dims.len() != 2 {
+            return Err(Error::Runtime(format!("tensor dims {:?} not a matrix", self.dims)));
+        }
+        crate::linalg::Mat::from_vec(self.dims[0], self.dims[1], self.to_f64())
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.dims.is_empty() {
+        // 0-d scalar: reshape to []
+        lit.reshape(&[]).map_err(wrap)
+    } else {
+        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(wrap)
+    }
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(wrap)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(wrap)?;
+    Ok(Tensor { dims, data })
+}
+
+fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A compiled artifact.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The PJRT runtime: one CPU client + all compiled artifacts.
+pub struct PjrtRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    compiled: BTreeMap<String, Compiled>,
+    /// The manifest the artifacts were loaded from.
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact in `dir` (per its manifest) and compile.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let mut compiled = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )
+            .map_err(wrap)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap)?;
+            compiled.insert(name.clone(), Compiled { exe, spec: spec.clone() });
+        }
+        Ok(Self { client, compiled, manifest })
+    }
+
+    /// Names of loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.compiled.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact with host tensors; returns the output tuple.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let c = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))?;
+        if inputs.len() != c.spec.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                c.spec.inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&c.spec.inputs).enumerate() {
+            if t.dims != s.dims {
+                return Err(Error::Artifact(format!(
+                    "{name}: input {i} dims {:?} != manifest {:?}",
+                    t.dims, s.dims
+                )));
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
+        let bufs = c.exe.execute::<xla::Literal>(&lits).map_err(wrap)?;
+        let result = bufs[0][0].to_literal_sync().map_err(wrap)?;
+        // AOT lowers with return_tuple=True — decompose
+        let parts = result.to_tuple().map_err(wrap)?;
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let m = crate::linalg::Mat::from_fn(3, 2, |r, c| (r * 2 + c) as f64);
+        let t = Tensor::from_mat(&m);
+        assert_eq!(t.dims, vec![3, 2]);
+        let back = t.to_mat().unwrap();
+        assert!(back.max_abs_diff(&m) < 1e-6);
+        assert!(Tensor::scalar(1.5).to_mat().is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Batching policy: group pooled events into multiple-update batches.
+//!
+//! The paper's core efficiency lever is issuing ONE rank-|H| update instead
+//! of |H| rank-1 updates; the batcher decides |H| by a size/time policy,
+//! bounded by the advisor's §II.B rule (|H| < J).
+
+use super::StreamEvent;
+use crate::streaming::sink::SinkNode;
+use std::time::{Duration, Instant};
+
+/// Size/time batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Flush when this many events are pending (must be >= 1).
+    pub max_batch: usize,
+    /// Flush when the oldest pending event has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(50) }
+    }
+}
+
+/// Pull-side batcher over a [`SinkNode`].
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: Vec<StreamEvent>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    /// New with a policy.
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        Self { policy, pending: Vec::new(), oldest: None }
+    }
+
+    /// Pull the next batch from the sink.  Returns an empty vec when the
+    /// stream has gone quiet for `max_wait` with nothing pending.
+    pub fn next_batch(&mut self, sink: &mut SinkNode) -> Vec<StreamEvent> {
+        loop {
+            let need = self.policy.max_batch - self.pending.len();
+            let wait = match self.oldest {
+                None => self.policy.max_wait,
+                Some(t0) => self
+                    .policy
+                    .max_wait
+                    .checked_sub(t0.elapsed())
+                    .unwrap_or(Duration::ZERO),
+            };
+            let got = sink.drain(need, wait);
+            if !got.is_empty() && self.oldest.is_none() {
+                self.oldest = Some(Instant::now());
+            }
+            self.pending.extend(got);
+            let deadline_hit = self
+                .oldest
+                .map(|t0| t0.elapsed() >= self.policy.max_wait)
+                .unwrap_or(false);
+            if self.pending.len() >= self.policy.max_batch
+                || (deadline_hit && !self.pending.is_empty())
+            {
+                self.oldest = None;
+                return std::mem::take(&mut self.pending);
+            }
+            if self.pending.is_empty() && deadline_hit {
+                return Vec::new();
+            }
+            if self.pending.is_empty() && self.oldest.is_none() {
+                // nothing arrived within max_wait
+                return Vec::new();
+            }
+        }
+    }
+
+    /// Number of events currently held.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::streaming::source::{SensorNode, SourceConfig};
+
+    #[test]
+    fn batches_by_size() {
+        let mut sink = SinkNode::new(64);
+        let shard = synth::ecg_like(10, 3, 1);
+        let h = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(100) });
+        let mut total = 0;
+        let mut batches = 0;
+        loop {
+            let batch = b.next_batch(&mut sink);
+            if batch.is_empty() {
+                break;
+            }
+            assert!(batch.len() <= 4);
+            total += batch.len();
+            batches += 1;
+        }
+        assert_eq!(total, 10);
+        assert!(batches >= 3);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn empty_stream_times_out() {
+        let mut sink = SinkNode::new(4);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
+        let batch = b.next_batch(&mut sink);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let mut sink = SinkNode::new(4);
+        let shard = synth::ecg_like(3, 3, 2);
+        let h = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(30) });
+        let batch = b.next_batch(&mut sink);
+        assert_eq!(batch.len(), 3); // flushed by deadline, not size
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,39 @@
+//! The streaming substrate: sensor sources, sink-node pooling (paper
+//! Fig. 1), batching with backpressure, and residual-based outlier
+//! detection that feeds the decremental path.
+//!
+//! Threading model: each [`source::SensorNode`] runs on its own thread and
+//! pushes into a bounded channel (backpressure = blocking send); the
+//! [`sink::SinkNode`] fans the channels into one pooled stream; the
+//! [`batcher::Batcher`] groups pooled events into multiple-update batches
+//! by size/time policy.  All of it is std-only (`mpsc` + threads).
+
+pub mod batcher;
+pub mod outlier;
+pub mod sink;
+pub mod source;
+
+/// One labelled observation travelling through the pipeline.
+#[derive(Clone, Debug)]
+pub struct StreamEvent {
+    /// Feature vector.
+    pub x: Vec<f64>,
+    /// Target / label.
+    pub y: f64,
+    /// Originating sensor id.
+    pub source_id: usize,
+    /// Per-source sequence number.
+    pub seq: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_holds_payload() {
+        let e = StreamEvent { x: vec![1.0, 2.0], y: -1.0, source_id: 3, seq: 9 };
+        assert_eq!(e.x.len(), 2);
+        assert_eq!(e.source_id, 3);
+    }
+}

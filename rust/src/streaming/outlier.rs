@@ -1,0 +1,140 @@
+//! Residual-based outlier detection — the producer of decremental work.
+//!
+//! The paper motivates decremental learning as "removal of unnecessary
+//! outliers".  This detector scores training samples by their
+//! leave-in residual |y_i − f(x_i)| in robust z-score units (median/MAD),
+//! and nominates the worst offenders for removal, which the coordinator
+//! folds into the same batched update as the arriving samples.
+
+use crate::error::Result;
+use crate::krr::KrrModel;
+use crate::linalg::Mat;
+
+/// Detector configuration.
+#[derive(Clone, Debug)]
+pub struct OutlierConfig {
+    /// Robust z-score threshold (MAD units) above which a sample is an
+    /// outlier candidate.
+    pub z_threshold: f64,
+    /// Cap on removals nominated per call (keeps |R| inside the §III.B
+    /// bound and the batch budget).
+    pub max_removals: usize,
+}
+
+impl Default for OutlierConfig {
+    fn default() -> Self {
+        Self { z_threshold: 4.0, max_removals: 2 }
+    }
+}
+
+/// A nominated removal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutlierVerdict {
+    /// Index into the current training set.
+    pub index: usize,
+    /// Robust z-score of the residual.
+    pub score: f64,
+}
+
+/// Score all training samples and nominate outliers.
+///
+/// `x`/`y` must be the model's current training set, in the model's
+/// current index order.
+pub fn detect(
+    model: &dyn KrrModel,
+    x: &Mat,
+    y: &[f64],
+    cfg: &OutlierConfig,
+) -> Result<Vec<OutlierVerdict>> {
+    assert_eq!(x.rows(), y.len());
+    if y.is_empty() {
+        return Ok(Vec::new());
+    }
+    let pred = model.predict(x)?;
+    detect_scored(&pred, y, cfg)
+}
+
+/// Fast path: score from precomputed predictions (the coordinator uses the
+/// engine's stored-feature `predict_training`, avoiding re-mapping the
+/// whole training set every round).
+pub fn detect_scored(
+    pred: &[f64],
+    y: &[f64],
+    cfg: &OutlierConfig,
+) -> Result<Vec<OutlierVerdict>> {
+    assert_eq!(pred.len(), y.len());
+    let resid: Vec<f64> = pred.iter().zip(y).map(|(p, t)| (p - t).abs()).collect();
+    // robust scale: median + MAD
+    let med = crate::util::stats::median(&resid);
+    let dev: Vec<f64> = resid.iter().map(|r| (r - med).abs()).collect();
+    let mad = crate::util::stats::median(&dev).max(1e-12);
+    let mut verdicts: Vec<OutlierVerdict> = resid
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &r)| {
+            let score = (r - med) / (1.4826 * mad);
+            (score > cfg.z_threshold).then_some(OutlierVerdict { index: i, score })
+        })
+        .collect();
+    verdicts.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    verdicts.truncate(cfg.max_removals);
+    Ok(verdicts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+    use crate::krr::intrinsic::IntrinsicKrr;
+    use crate::linalg::matrix::dot;
+    use crate::util::prng::Rng;
+
+    fn data_with_outliers(n: usize, m: usize, n_out: usize, seed: u64) -> (Mat, Vec<f64>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f64> = rng.gaussian_vec(m);
+        let x = Mat::from_fn(n, m, |_, _| 0.5 * rng.gaussian());
+        let mut y: Vec<f64> = (0..n)
+            .map(|i| dot(x.row(i), &w) + 0.02 * rng.gaussian())
+            .collect();
+        let mut idx = Vec::new();
+        for k in 0..n_out {
+            let i = (k * 7 + 3) % n;
+            y[i] += 30.0; // gross label corruption
+            idx.push(i);
+        }
+        (x, y, idx)
+    }
+
+    #[test]
+    fn detects_injected_outliers() {
+        let (x, y, inj) = data_with_outliers(60, 4, 2, 1);
+        let model = IntrinsicKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+        let cfg = OutlierConfig { z_threshold: 4.0, max_removals: 4 };
+        let got = detect(&model, &x, &y, &cfg).unwrap();
+        let got_idx: Vec<usize> = got.iter().map(|v| v.index).collect();
+        for i in inj {
+            assert!(got_idx.contains(&i), "missed injected outlier {i}: {got_idx:?}");
+        }
+    }
+
+    #[test]
+    fn clean_data_yields_nothing() {
+        let (x, y, _) = data_with_outliers(50, 4, 0, 2);
+        let model = IntrinsicKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+        let got = detect(&model, &x, &y, &OutlierConfig::default()).unwrap();
+        assert!(got.len() <= 1, "clean data flagged {got:?}");
+    }
+
+    #[test]
+    fn respects_max_removals() {
+        let (x, y, _) = data_with_outliers(80, 4, 10, 3);
+        let model = IntrinsicKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+        let cfg = OutlierConfig { z_threshold: 2.0, max_removals: 3 };
+        let got = detect(&model, &x, &y, &cfg).unwrap();
+        assert!(got.len() <= 3);
+        // sorted by severity
+        for w in got.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Test support: tolerance assertions and a seeded property-testing harness
+//! (proptest-lite — the offline crate set has no proptest).
+//!
+//! The harness runs a property over many seeded random cases; on failure it
+//! reports the failing case number and seed so the case can be replayed
+//! deterministically with `Cases::only(seed)`.
+
+use crate::linalg::Mat;
+use crate::util::prng::Rng;
+
+/// Assert two scalars are close (absolute + relative tolerance).
+#[track_caller]
+pub fn assert_close(got: f64, want: f64, tol: f64) {
+    let denom = 1.0_f64.max(want.abs());
+    assert!(
+        (got - want).abs() <= tol * denom,
+        "assert_close failed: got {got}, want {want}, tol {tol} (denom {denom})"
+    );
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_vec_close(got: &[f64], want: &[f64], tol: f64) {
+    assert_eq!(got.len(), want.len(), "length mismatch: {} vs {}", got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let denom = 1.0_f64.max(w.abs());
+        assert!(
+            (g - w).abs() <= tol * denom,
+            "assert_vec_close failed at index {i}: got {g}, want {w}, tol {tol}"
+        );
+    }
+}
+
+/// Assert two matrices are elementwise close.
+#[track_caller]
+pub fn assert_mat_close(got: &Mat, want: &Mat, tol: f64) {
+    assert_eq!(got.shape(), want.shape(), "shape mismatch");
+    let scale = 1.0_f64.max(want.fro_norm() / (want.rows().max(1) as f64));
+    let diff = got.max_abs_diff(want);
+    assert!(
+        diff <= tol * scale,
+        "assert_mat_close failed: max |diff| = {diff:.3e} > {tol:.1e} * {scale:.3e}"
+    );
+}
+
+/// Property-test case generator/driver.
+pub struct Cases {
+    n_cases: usize,
+    base_seed: u64,
+    only: Option<u64>,
+}
+
+impl Cases {
+    /// Run `n_cases` cases derived from `base_seed`.
+    pub fn new(n_cases: usize, base_seed: u64) -> Self {
+        Self { n_cases, base_seed, only: None }
+    }
+
+    /// Replay a single failing seed.
+    pub fn only(seed: u64) -> Self {
+        Self { n_cases: 1, base_seed: 0, only: Some(seed) }
+    }
+
+    /// Run the property.  The closure gets a per-case RNG; panic = failure.
+    #[track_caller]
+    pub fn run(&self, mut prop: impl FnMut(&mut Rng)) {
+        if let Some(seed) = self.only {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+            return;
+        }
+        for case in 0..self.n_cases {
+            let seed = self
+                .base_seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case as u64);
+            let mut rng = Rng::new(seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut rng)
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property failed at case {case}/{} (replay with \
+                     Cases::only({seed})): {msg}",
+                    self.n_cases
+                );
+            }
+        }
+    }
+}
+
+/// Random SPD matrix of size n with given diagonal dominance.
+pub fn random_spd(rng: &mut Rng, n: usize, jitter: f64) -> Mat {
+    let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+    let mut s = crate::linalg::gemm::syrk(&a).unwrap();
+    s.scale(1.0 / n.max(1) as f64);
+    s.add_diag(jitter).unwrap();
+    s
+}
+
+/// Random general matrix.
+pub fn random_mat(rng: &mut Rng, r: usize, c: usize, scale: f64) -> Mat {
+    Mat::from_fn(r, c, |_, _| scale * rng.gaussian())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_assertions_pass() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9);
+        assert_vec_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "assert_close failed")]
+    fn close_assertions_fail() {
+        assert_close(1.0, 2.0, 1e-9);
+    }
+
+    #[test]
+    fn cases_run_deterministic() {
+        let mut sum1 = 0u64;
+        Cases::new(10, 5).run(|rng| {
+            sum1 = sum1.wrapping_add(rng.next_u64());
+        });
+        let mut sum2 = 0u64;
+        Cases::new(10, 5).run(|rng| {
+            sum2 = sum2.wrapping_add(rng.next_u64());
+        });
+        assert_eq!(sum1, sum2);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn cases_report_failure() {
+        Cases::new(5, 1).run(|rng| {
+            // fail on some case
+            assert!(rng.uniform() < -1.0, "always fails");
+        });
+    }
+
+    #[test]
+    fn random_spd_is_spd() {
+        let mut rng = Rng::new(3);
+        let s = random_spd(&mut rng, 12, 1.0);
+        assert!(crate::linalg::solve::cholesky(&s).is_ok());
+    }
+}

@@ -1,0 +1,46 @@
+//! Small shared utilities: PRNG, statistics helpers, formatting.
+
+pub mod prng;
+pub mod stats;
+
+/// Format a duration in seconds with adaptive precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// log10 that maps non-positive inputs to a large negative sentinel, matching
+/// the paper's log10-seconds reporting without NaNs for sub-resolution times.
+pub fn log10_time(seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        -9.0
+    } else {
+        seconds.log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-5).ends_with("us"));
+        assert!(fmt_secs(5e-2).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn log10_guard() {
+        assert_eq!(log10_time(0.0), -9.0);
+        assert!((log10_time(100.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,130 @@
+//! End-to-end streaming tests: sensor fleet -> sink -> batcher ->
+//! coordinator, with outlier injection exercising the decremental path,
+//! concurrent prediction traffic, and failure handling.
+
+use mikrr::coordinator::{Coordinator, CoordinatorConfig};
+use mikrr::data::synth;
+use mikrr::kernels::Kernel;
+use mikrr::krr::classification_accuracy;
+use mikrr::streaming::batcher::BatchPolicy;
+use mikrr::streaming::outlier::OutlierConfig;
+use mikrr::streaming::sink::SinkNode;
+use mikrr::streaming::source::{SensorNode, SourceConfig};
+use std::time::Duration;
+
+fn coordinator_cfg(batch: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        kernel: Kernel::poly(2, 1.0),
+        ridge: 0.5,
+        space: None,
+        batch: BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(40) },
+        outlier: Some(OutlierConfig { z_threshold: 6.0, max_removals: 2 }),
+        with_uncertainty: false,
+        snapshot_rollback: false,
+    }
+}
+
+#[test]
+fn full_pipeline_with_outlier_injection() {
+    let dim = 10;
+    let base = synth::ecg_like(600, dim, 1);
+    let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, coordinator_cfg(4)).unwrap();
+
+    let mut sink = SinkNode::new(64);
+    let mut handles = Vec::new();
+    for sid in 0..3 {
+        let shard = synth::ecg_like(40, dim, 100 + sid as u64);
+        let cfg = SourceConfig {
+            source_id: sid,
+            outlier_rate: 0.1, // 10% corrupted samples
+            delay: None,
+            seed: 50 + sid as u64,
+        };
+        handles.push(SensorNode::new(shard, cfg).spawn(sink.sender()));
+    }
+    let outcomes = coordinator.run(&mut sink, usize::MAX).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let added: usize = outcomes.iter().map(|o| o.added).sum();
+    assert_eq!(added, 120, "all streamed samples processed");
+    assert_eq!(sink.pooled(), 120);
+    // model stayed accurate despite corrupted arrivals (outlier removal
+    // keeps pruning the worst offenders)
+    let test = synth::ecg_like(500, dim, 999);
+    let pred = coordinator.handle().predict(&test.x).unwrap();
+    let acc = classification_accuracy(&pred, &test.y);
+    assert!(acc > 0.85, "post-stream accuracy {acc}");
+}
+
+#[test]
+fn prediction_traffic_during_updates() {
+    let dim = 8;
+    let base = synth::ecg_like(300, dim, 2);
+    let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, coordinator_cfg(4)).unwrap();
+    let handle = coordinator.handle();
+
+    // reader thread hammers predictions while the coordinator updates
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop_r = std::sync::Arc::clone(&stop);
+    let reader = std::thread::spawn(move || {
+        let queries = synth::ecg_like(16, dim, 3);
+        let mut served = 0usize;
+        while !stop_r.load(std::sync::atomic::Ordering::Relaxed) {
+            let p = handle.predict(&queries.x).unwrap();
+            assert!(p.iter().all(|v| v.is_finite()));
+            served += 1;
+        }
+        served
+    });
+
+    let mut sink = SinkNode::new(32);
+    let shard = synth::ecg_like(60, dim, 4);
+    let src = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
+    coordinator.run(&mut sink, usize::MAX).unwrap();
+    src.join().unwrap();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let served = reader.join().unwrap();
+    assert!(served > 0, "reader made progress during updates");
+}
+
+#[test]
+fn uncertainty_pipeline_end_to_end() {
+    let dim = 8;
+    let base = synth::ecg_like(250, dim, 5);
+    let mut cfg = coordinator_cfg(4);
+    cfg.with_uncertainty = true;
+    let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, cfg).unwrap();
+
+    let mut sink = SinkNode::new(32);
+    let shard = synth::ecg_like(24, dim, 6);
+    let src = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
+    coordinator.run(&mut sink, usize::MAX).unwrap();
+    src.join().unwrap();
+
+    let test = synth::ecg_like(20, dim, 7);
+    let (mu, var) = coordinator
+        .handle()
+        .predict_with_uncertainty(&test.x)
+        .unwrap();
+    assert_eq!(mu.len(), 20);
+    assert!(var.iter().all(|&v| v > 0.0));
+    // KBR variance must be >= the noise floor
+    assert!(var.iter().all(|&v| v >= 0.0099));
+}
+
+#[test]
+fn counters_and_latency_are_recorded() {
+    let dim = 6;
+    let base = synth::ecg_like(200, dim, 8);
+    let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, coordinator_cfg(6)).unwrap();
+    let mut sink = SinkNode::new(32);
+    let shard = synth::ecg_like(30, dim, 9);
+    let src = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
+    let outcomes = coordinator.run(&mut sink, usize::MAX).unwrap();
+    src.join().unwrap();
+    assert_eq!(coordinator.counters.get("rounds") as usize, outcomes.len());
+    assert_eq!(coordinator.counters.get("added"), 30);
+    assert_eq!(coordinator.update_latency.count(), outcomes.len());
+    assert!(coordinator.record.rounds.contains_key("multiple"));
+}

@@ -1,0 +1,143 @@
+//! Cross-module integration tests: experiment driver, accuracy invariance
+//! at realistic (scaled) sizes, advisor routing, end-to-end performance
+//! ordering (multiple < single per round).
+
+use mikrr::config::Space;
+use mikrr::coordinator::experiment::{run_kbr, run_krr, Strategy};
+use mikrr::data::synth;
+use mikrr::kbr::KbrHyper;
+use mikrr::kernels::Kernel;
+use mikrr::krr::advisor::Advisor;
+use mikrr::krr::{classification_accuracy, KrrModel};
+
+#[test]
+fn ecg_poly2_all_strategies_agree_and_multiple_wins() {
+    let data = synth::ecg_like(1800, 21, 11);
+    let report = run_krr(
+        &data,
+        &Kernel::poly(2, 1.0),
+        0.5,
+        Space::Intrinsic,
+        1200,
+        5,
+        4,
+        2,
+        11,
+        &[Strategy::Multiple, Strategy::Single, Strategy::None],
+    )
+    .unwrap();
+    assert!(report.strategies_agree, "strategies disagree");
+    assert!(report.accuracy > 0.85, "accuracy {}", report.accuracy);
+    // the paper's ordering: multiple < single < none per-round mean
+    let m = report.record.mean_seconds("multiple");
+    let s = report.record.mean_seconds("single");
+    let n = report.record.mean_seconds("none");
+    assert!(m < s, "multiple {m} !< single {s}");
+    assert!(s < n, "single {s} !< none {n}");
+}
+
+#[test]
+fn drt_rbf_empirical_strategies_agree() {
+    let data = synth::drt_like(360, 2_000, 0.01, 12);
+    let report = run_krr(
+        &data,
+        &Kernel::rbf_radius(50.0),
+        0.5,
+        Space::Empirical,
+        240,
+        5,
+        4,
+        2,
+        12,
+        &[Strategy::Multiple, Strategy::Single, Strategy::None],
+    )
+    .unwrap();
+    assert!(report.strategies_agree);
+    let m = report.record.mean_seconds("multiple");
+    let n = report.record.mean_seconds("none");
+    assert!(m < n, "multiple {m} !< none {n}");
+}
+
+#[test]
+fn kbr_multiple_beats_single() {
+    let data = synth::ecg_like(900, 21, 13);
+    let report = run_kbr(
+        &data,
+        &Kernel::poly(2, 1.0),
+        KbrHyper::default(),
+        600,
+        5,
+        4,
+        2,
+        13,
+        true,
+    )
+    .unwrap();
+    assert!(report.strategies_agree);
+    let m = report.record.mean_seconds("multiple");
+    let s = report.record.mean_seconds("single");
+    assert!(m < s, "multiple {m} !< single {s}");
+}
+
+#[test]
+fn advisor_routes_paper_regimes() {
+    let adv = Advisor::default();
+    // ECG: N >> M -> intrinsic for poly kernels
+    assert_eq!(
+        adv.choose_space(&Kernel::poly(2, 1.0), 83_226, 21, 4, 2).space,
+        Space::Intrinsic
+    );
+    // DRT: M >> N -> empirical
+    assert_eq!(
+        adv.choose_space(&Kernel::poly(2, 1.0), 640, 1_000_000, 4, 2).space,
+        Space::Empirical
+    );
+    // RBF always empirical
+    assert_eq!(
+        adv.choose_space(&Kernel::rbf_radius(50.0), 83_226, 21, 4, 2).space,
+        Space::Empirical
+    );
+}
+
+#[test]
+fn forgetting_long_stream_stays_numerically_sound() {
+    // 40 rounds of +4/-2 on one engine: the maintained inverse must not
+    // drift (predictions stay finite and accurate).
+    use mikrr::krr::intrinsic::IntrinsicKrr;
+    let data = synth::ecg_like(1000, 10, 14);
+    let base = data.subset(&(0..500).collect::<Vec<_>>());
+    let mut model = IntrinsicKrr::fit(&base.x, &base.y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+    let mut rng = mikrr::util::prng::Rng::new(14);
+    let mut next = 500;
+    for _ in 0..40 {
+        let idx: Vec<usize> = (next..next + 4).collect();
+        next += 4;
+        if next + 4 > data.len() {
+            break;
+        }
+        let rem = rng.sample_indices(model.n_samples(), 2);
+        model
+            .inc_dec(&data.x.select_rows(&idx), &data.y_rows(&idx), &rem)
+            .unwrap();
+    }
+    assert!(model.s_inv().is_finite(), "maintained inverse drifted to non-finite");
+    let test = synth::ecg_like(400, 10, 15);
+    let pred = model.predict(&test.x).unwrap();
+    let acc = classification_accuracy(&pred, &test.y);
+    assert!(acc > 0.80, "accuracy after 40 rounds {acc}");
+}
+
+#[test]
+fn failure_injection_invalid_rounds_leave_engine_usable() {
+    use mikrr::krr::empirical::EmpiricalKrr;
+    use mikrr::linalg::Mat;
+    let data = synth::ecg_like(100, 6, 16);
+    let mut model = EmpiricalKrr::fit(&data.x, &data.y, &Kernel::rbf_radius(2.0), 0.5).unwrap();
+    // invalid removal index must error but not poison the state
+    assert!(model.inc_dec(&Mat::zeros(0, 6), &[], &[999]).is_err());
+    let extra = synth::ecg_like(4, 6, 17);
+    model.inc_dec(&extra.x, &extra.y, &[0]).unwrap();
+    assert_eq!(model.n_samples(), 103);
+    let pred = model.predict(&data.x).unwrap();
+    assert!(pred.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,264 @@
+//! Property-based tests over the paper's mathematical invariants
+//! (DESIGN.md §7), using the seeded `testutil::Cases` harness.
+//!
+//! Replay a failing case with `Cases::only(<seed>)` — the failure message
+//! carries the seed.
+
+use mikrr::kbr::{KbrHyper, KbrModel};
+use mikrr::kernels::Kernel;
+use mikrr::krr::empirical::EmpiricalKrr;
+use mikrr::krr::intrinsic::IntrinsicKrr;
+use mikrr::krr::KrrModel;
+use mikrr::linalg::gemm::ger;
+use mikrr::linalg::solve::spd_inverse;
+use mikrr::linalg::woodbury::{bordered_grow, bordered_shrink, incdec, sub_matrix};
+use mikrr::linalg::Mat;
+use mikrr::testutil::{assert_mat_close, assert_vec_close, random_mat, random_spd, Cases};
+use mikrr::util::prng::Rng;
+
+fn random_regression(rng: &mut Rng, n: usize, m: usize) -> (Mat, Vec<f64>) {
+    let w = rng.gaussian_vec(m);
+    let x = random_mat(rng, n, m, 0.5);
+    let y: Vec<f64> = (0..n)
+        .map(|i| mikrr::linalg::matrix::dot(x.row(i), &w) + 0.05 * rng.gaussian())
+        .collect();
+    (x, y)
+}
+
+/// eq. 15: batched Woodbury up/down-date == fresh inverse of the updated S.
+#[test]
+fn prop_woodbury_incdec_matches_fresh_inverse() {
+    Cases::new(40, 0xA1).run(|rng| {
+        let j = 3 + rng.below(40);
+        let nc = rng.below(7);
+        let nr = rng.below(4);
+        if nc + nr == 0 {
+            return;
+        }
+        let s = random_spd(rng, j, j as f64);
+        let s_inv = spd_inverse(&s).unwrap();
+        let phi = random_mat(rng, j, nc + nr, 0.25);
+        let mut signs = vec![1.0; nc];
+        signs.extend(vec![-1.0; nr]);
+        let got = incdec(&s_inv, &phi, &signs).unwrap();
+        let mut s_new = s.clone();
+        for h in 0..nc + nr {
+            let col = phi.col(h);
+            ger(&mut s_new, signs[h], &col, &col).unwrap();
+        }
+        let want = spd_inverse(&s_new).unwrap();
+        assert_mat_close(&got, &want, 1e-6);
+    });
+}
+
+/// inc(C) followed by dec(C) of the same columns is the identity.
+#[test]
+fn prop_incdec_roundtrip_identity() {
+    Cases::new(30, 0xA2).run(|rng| {
+        let j = 2 + rng.below(30);
+        let k = 1 + rng.below(5);
+        let s_inv = spd_inverse(&random_spd(rng, j, 2.0 * j as f64)).unwrap();
+        let phi = random_mat(rng, j, k, 0.2);
+        let up = incdec(&s_inv, &phi, &vec![1.0; k]).unwrap();
+        let back = incdec(&up, &phi, &vec![-1.0; k]).unwrap();
+        assert_mat_close(&back, &s_inv, 1e-7);
+    });
+}
+
+/// eq. 28/29: bordered grow + shrink against fresh inverses, any index set.
+#[test]
+fn prop_bordered_grow_shrink_match_fresh() {
+    Cases::new(30, 0xA3).run(|rng| {
+        let n = 4 + rng.below(20);
+        let c = 1 + rng.below(4);
+        let full = random_spd(rng, n + c, (n + c) as f64);
+        let q = full.block(0, n, 0, n);
+        let eta = full.block(0, n, n, n + c);
+        let qcc = full.block(n, n + c, n, n + c);
+        let grown = bordered_grow(&spd_inverse(&q).unwrap(), &eta, &qcc).unwrap();
+        assert_mat_close(&grown, &spd_inverse(&full).unwrap(), 1e-6);
+
+        // shrink a random subset
+        let r = 1 + rng.below(n / 2);
+        let rem = {
+            let mut v = rng.sample_indices(n + c, r);
+            v.sort_unstable();
+            v
+        };
+        let shrunk = bordered_shrink(&grown, &rem).unwrap();
+        let keep: Vec<usize> = (0..n + c).filter(|i| !rem.contains(i)).collect();
+        let want = spd_inverse(&sub_matrix(&full, &keep, &keep)).unwrap();
+        assert_mat_close(&shrunk, &want, 1e-6);
+    });
+}
+
+/// The central claim: multiple inc/dec == retrain, intrinsic space.
+#[test]
+fn prop_intrinsic_incdec_equals_retrain() {
+    Cases::new(15, 0xA4).run(|rng| {
+        let m = 2 + rng.below(5);
+        let n = 25 + rng.below(30);
+        let kernel = Kernel::poly(2, 1.0);
+        let (x, y) = random_regression(rng, n, m);
+        let mut model = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let nc = 1 + rng.below(6);
+        let (xc, yc) = random_regression(rng, nc, m);
+        let rem = {
+            let k = rng.below(3).min(n - 1);
+            let mut v = rng.sample_indices(n, k);
+            v.sort_unstable();
+            v
+        };
+        model.inc_dec(&xc, &yc, &rem).unwrap();
+
+        let mut x2 = x.clone();
+        let mut y2 = y.clone();
+        x2.remove_rows(&rem).unwrap();
+        for (i, &ri) in rem.iter().enumerate() {
+            y2.remove(ri - i);
+        }
+        let x2 = x2.vcat(&xc).unwrap();
+        y2.extend_from_slice(&yc);
+        let fresh = IntrinsicKrr::fit(&x2, &y2, &kernel, 0.5).unwrap();
+        assert_vec_close(model.weights(), fresh.weights(), 1e-6);
+    });
+}
+
+/// Same claim in empirical space, including RBF kernels.
+#[test]
+fn prop_empirical_incdec_equals_retrain() {
+    Cases::new(12, 0xA5).run(|rng| {
+        let m = 2 + rng.below(5);
+        let n = 20 + rng.below(20);
+        let kernel = if rng.coin(0.5) {
+            Kernel::rbf_radius(2.0)
+        } else {
+            Kernel::poly(3, 1.0)
+        };
+        let (x, y) = random_regression(rng, n, m);
+        let mut model = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let nc = 1 + rng.below(5);
+        let (xc, yc) = random_regression(rng, nc, m);
+        let rem = {
+            let k = rng.below(3).min(n - 1);
+            let mut v = rng.sample_indices(n, k);
+            v.sort_unstable();
+            v
+        };
+        model.inc_dec(&xc, &yc, &rem).unwrap();
+
+        let mut x2 = x.clone();
+        let mut y2 = y.clone();
+        x2.remove_rows(&rem).unwrap();
+        for (i, &ri) in rem.iter().enumerate() {
+            y2.remove(ri - i);
+        }
+        let x2 = x2.vcat(&xc).unwrap();
+        y2.extend_from_slice(&yc);
+        let fresh = EmpiricalKrr::fit(&x2, &y2, &kernel, 0.5).unwrap();
+        assert_vec_close(model.dual_weights(), fresh.dual_weights(), 1e-5);
+    });
+}
+
+/// Intrinsic and empirical modes are the same estimator for poly kernels.
+#[test]
+fn prop_modes_agree_for_poly() {
+    Cases::new(12, 0xA6).run(|rng| {
+        let m = 2 + rng.below(4);
+        let n = 20 + rng.below(20);
+        let (x, y) = random_regression(rng, n, m);
+        let (xt, _) = random_regression(rng, 8, m);
+        let kernel = Kernel::poly(2, 1.0);
+        let intr = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let emp = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let pi = intr.predict(&xt).unwrap();
+        let pe = emp.predict(&xt).unwrap();
+        assert_vec_close(&pi, &pe, 1e-5);
+    });
+}
+
+/// KBR incremental posterior == batch posterior on the edited set.
+#[test]
+fn prop_kbr_incremental_equals_batch() {
+    Cases::new(10, 0xA7).run(|rng| {
+        let m = 2 + rng.below(4);
+        let n = 15 + rng.below(20);
+        let kernel = Kernel::poly(2, 1.0);
+        let (x, y) = random_regression(rng, n, m);
+        let nc = 1 + rng.below(5);
+        let (xc, yc) = random_regression(rng, nc, m);
+        let mut inc = KbrModel::fit(&x, &y, &kernel, KbrHyper::default()).unwrap();
+        let rem = {
+            let k = rng.below(3).min(n - 1);
+            let mut v = rng.sample_indices(n, k);
+            v.sort_unstable();
+            v
+        };
+        inc.inc_dec(&xc, &yc, &rem).unwrap();
+
+        let mut x2 = x.clone();
+        let mut y2 = y.clone();
+        x2.remove_rows(&rem).unwrap();
+        for (i, &ri) in rem.iter().enumerate() {
+            y2.remove(ri - i);
+        }
+        let x2 = x2.vcat(&xc).unwrap();
+        y2.extend_from_slice(&yc);
+        let batch = KbrModel::fit(&x2, &y2, &kernel, KbrHyper::default()).unwrap();
+        assert_vec_close(inc.posterior_mean(), batch.posterior_mean(), 1e-5);
+        assert_mat_close(inc.posterior_cov(), batch.posterior_cov(), 1e-5);
+    });
+}
+
+/// One fused +C/−R round == dec-then-inc as separate batched ops
+/// (eq. 30's ordering composes with eq. 15).
+#[test]
+fn prop_fused_round_equals_sequential_batches() {
+    Cases::new(12, 0xA8).run(|rng| {
+        let m = 3;
+        let n = 25 + rng.below(15);
+        let kernel = Kernel::poly(2, 1.0);
+        let (x, y) = random_regression(rng, n, m);
+        let (xc, yc) = random_regression(rng, 4, m);
+        let rem = {
+            let mut v = rng.sample_indices(n, 2);
+            v.sort_unstable();
+            v
+        };
+        let mut fused = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        fused.inc_dec(&xc, &yc, &rem).unwrap();
+        let mut seq = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        seq.inc_dec(&Mat::zeros(0, m), &[], &rem).unwrap();
+        seq.inc_dec(&xc, &yc, &[]).unwrap();
+        assert_vec_close(fused.weights(), seq.weights(), 1e-7);
+    });
+}
+
+/// The two KRR spaces agree through whole update sequences, not just fits.
+#[test]
+fn prop_spaces_agree_through_updates() {
+    Cases::new(8, 0xA9).run(|rng| {
+        let m = 3;
+        let n = 20;
+        let kernel = Kernel::poly(2, 1.0);
+        let (x, y) = random_regression(rng, n, m);
+        let (xt, _) = random_regression(rng, 6, m);
+        let mut intr = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let mut emp = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let mut n_cur = n;
+        for _ in 0..3 {
+            let (xc, yc) = random_regression(rng, 3, m);
+            let rem = {
+                let mut v = rng.sample_indices(n_cur, 1);
+                v.sort_unstable();
+                v
+            };
+            intr.inc_dec(&xc, &yc, &rem).unwrap();
+            emp.inc_dec(&xc, &yc, &rem).unwrap();
+            n_cur += 2;
+        }
+        let pi = intr.predict(&xt).unwrap();
+        let pe = emp.predict(&xt).unwrap();
+        assert_vec_close(&pi, &pe, 1e-5);
+    });
+}

@@ -1,0 +1,243 @@
+//! AOT-runtime integration: load the `artifacts/` bundle, execute every
+//! artifact through PJRT, and cross-check against the native f64 linalg
+//! path (the hybrid dispatch contract).
+//!
+//! Requires `make artifacts` to have run; tests skip (pass with a notice)
+//! when no artifact dir is present so `cargo test` works on a fresh
+//! checkout.
+
+use mikrr::kernels::Kernel;
+use mikrr::linalg::solve::spd_inverse;
+use mikrr::linalg::Mat;
+use mikrr::runtime::pjrt::{PjrtRuntime, Tensor};
+use mikrr::runtime::HybridExec;
+use mikrr::testutil::{random_mat, random_spd};
+use mikrr::util::prng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = mikrr::runtime::artifact_dir()?;
+    Some(PjrtRuntime::load_dir(&dir).expect("artifacts present but failed to load"))
+}
+
+macro_rules! need_runtime {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// A well-conditioned S^-1 shaped like the real maintained state.
+fn canonical_state(j: usize, rng: &mut Rng) -> Mat {
+    let s = random_spd(rng, j, 50.0);
+    spd_inverse(&s).unwrap()
+}
+
+#[test]
+fn all_manifest_artifacts_compiled() {
+    let rt = need_runtime!();
+    for name in [
+        "phi_poly2",
+        "woodbury_incdec",
+        "krr_refresh",
+        "gram_poly2",
+        "gram_rbf",
+        "kbr_update",
+        "predict_batch",
+        "kbr_predict",
+    ] {
+        assert!(rt.names().contains(&name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn woodbury_artifact_matches_native() {
+    let rt = need_runtime!();
+    let mut rng = Rng::new(1);
+    let j = 253;
+    let s_inv = canonical_state(j, &mut rng);
+    let phi_h = random_mat(&mut rng, j, 6, 0.05);
+    let signs = [1.0, 1.0, 1.0, 1.0, -1.0, -1.0];
+    let out = rt
+        .execute(
+            "woodbury_incdec",
+            &[
+                Tensor::from_mat(&s_inv),
+                Tensor::from_mat(&phi_h),
+                Tensor::from_f64(vec![6], &signs),
+            ],
+        )
+        .unwrap();
+    let got = out[0].to_mat().unwrap();
+    let want = mikrr::linalg::woodbury::incdec(&s_inv, &phi_h, &signs).unwrap();
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 5e-4, "AOT vs native diff {diff}"); // f32 artifact vs f64 native
+}
+
+#[test]
+fn phi_poly2_artifact_matches_native() {
+    let rt = need_runtime!();
+    let mut rng = Rng::new(2);
+    let x = random_mat(&mut rng, 6, 21, 0.5);
+    let out = rt.execute("phi_poly2", &[Tensor::from_mat(&x)]).unwrap();
+    let got = out[0].to_mat().unwrap();
+    let table = Kernel::poly(2, 1.0).feature_table(21).unwrap();
+    let want = table.map(&x);
+    assert_eq!(got.shape(), (6, 253));
+    // check k(x,y) identity instead of coordinate order (enumeration order
+    // matches by construction, verify both):
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-3, "feature map diff {diff}");
+}
+
+#[test]
+fn gram_artifacts_match_native() {
+    let rt = need_runtime!();
+    let mut rng = Rng::new(3);
+    let x = random_mat(&mut rng, 128, 21, 0.5);
+    let y = random_mat(&mut rng, 128, 21, 0.5);
+    for (name, kernel) in [
+        ("gram_poly2", Kernel::poly(2, 1.0)),
+        ("gram_rbf", Kernel::rbf_radius(50.0)),
+    ] {
+        let out = rt
+            .execute(name, &[Tensor::from_mat(&x), Tensor::from_mat(&y)])
+            .unwrap();
+        let got = out[0].to_mat().unwrap();
+        let want = kernel.gram(&x, &y);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "{name} diff {diff}");
+    }
+}
+
+#[test]
+fn krr_refresh_artifact_matches_native() {
+    let rt = need_runtime!();
+    let mut rng = Rng::new(4);
+    let j = 253;
+    let s_inv = canonical_state(j, &mut rng);
+    let psum = rng.gaussian_vec(j);
+    let py = rng.gaussian_vec(j);
+    let (sy, n) = (3.7, 500.0);
+    let out = rt
+        .execute(
+            "krr_refresh",
+            &[
+                Tensor::from_mat(&s_inv),
+                Tensor::from_f64(vec![j], &psum),
+                Tensor::from_f64(vec![j], &py),
+                Tensor::scalar(sy as f32),
+                Tensor::scalar(n as f32),
+            ],
+        )
+        .unwrap();
+    let u_got = out[0].to_f64();
+    let b_got = out[1].data[0] as f64;
+    let ex = HybridExec::new(None);
+    let (u_want, b_want) = ex.krr_refresh(&s_inv, &psum, &py, sy, n).unwrap();
+    for (g, w) in u_got.iter().zip(&u_want) {
+        assert!((g - w).abs() < 5e-4, "{g} vs {w}");
+    }
+    assert!((b_got - b_want).abs() < 5e-4);
+}
+
+#[test]
+fn predict_batch_artifact() {
+    let rt = need_runtime!();
+    let mut rng = Rng::new(5);
+    let u = rng.gaussian_vec(253);
+    let b = 0.25;
+    let phi_star = random_mat(&mut rng, 64, 253, 0.2);
+    let out = rt
+        .execute(
+            "predict_batch",
+            &[
+                Tensor::from_f64(vec![253], &u),
+                Tensor::scalar(b as f32),
+                Tensor::from_mat(&phi_star),
+            ],
+        )
+        .unwrap();
+    let got = out[0].to_f64();
+    let want = mikrr::linalg::gemm::gemv(&phi_star, &u).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - (w + b)).abs() < 2e-3, "{g} vs {}", w + b);
+    }
+}
+
+#[test]
+fn kbr_artifacts_run_and_are_consistent() {
+    let rt = need_runtime!();
+    let mut rng = Rng::new(6);
+    let j = 253;
+    let cov = canonical_state(j, &mut rng);
+    let phi_h = random_mat(&mut rng, j, 6, 0.02);
+    let signs = [1.0, 1.0, 1.0, 1.0, -1.0, -1.0];
+    let phi_y = rng.gaussian_vec(j);
+    let out = rt
+        .execute(
+            "kbr_update",
+            &[
+                Tensor::from_mat(&cov),
+                Tensor::from_mat(&phi_h),
+                Tensor::from_f64(vec![6], &signs),
+                Tensor::from_f64(vec![j], &phi_y),
+            ],
+        )
+        .unwrap();
+    let cov_new = out[0].to_mat().unwrap();
+    let mean_new = out[1].to_f64();
+    assert_eq!(cov_new.shape(), (j, j));
+    assert_eq!(mean_new.len(), j);
+    // native reference (sigma_b2 = 0.01 baked into the artifact)
+    let sb = 0.01f64;
+    let mut scaled = phi_h.clone();
+    scaled.scale(1.0 / sb.sqrt());
+    let cov_want = mikrr::linalg::woodbury::incdec(&cov, &scaled, &signs).unwrap();
+    let diff = cov_new.max_abs_diff(&cov_want);
+    assert!(diff < 5e-3, "kbr_update cov diff {diff}");
+
+    // predictive head consistency
+    let phi_star = random_mat(&mut rng, 64, j, 0.1);
+    let outp = rt
+        .execute(
+            "kbr_predict",
+            &[
+                Tensor::from_mat(&cov_new),
+                Tensor::from_f64(vec![j], &mean_new),
+                Tensor::from_mat(&phi_star),
+            ],
+        )
+        .unwrap();
+    let mu = outp[0].to_f64();
+    let psi = outp[1].to_f64();
+    assert_eq!(mu.len(), 64);
+    assert!(psi.iter().all(|&v| v >= 0.009), "variance floor violated");
+}
+
+#[test]
+fn hybrid_dispatch_uses_aot_for_canonical_shapes() {
+    let Some(dir) = mikrr::runtime::artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let ex = HybridExec::new(Some(PjrtRuntime::load_dir(&dir).unwrap()));
+    let mut rng = Rng::new(7);
+    // canonical J=253, H=4 (padded to 6 internally)
+    let s_inv = canonical_state(253, &mut rng);
+    let phi_h = random_mat(&mut rng, 253, 4, 0.05);
+    let signs = [1.0, 1.0, -1.0, -1.0];
+    let got = ex.woodbury_incdec(&s_inv, &phi_h, &signs).unwrap();
+    assert_eq!(ex.stats().0, 1, "expected AOT hit");
+    let want = ex.woodbury_native(&s_inv, &phi_h, &signs).unwrap();
+    assert!(got.max_abs_diff(&want) < 5e-4);
+    // non-canonical J: must fall back
+    let s_small = canonical_state(50, &mut rng);
+    let phi_small = random_mat(&mut rng, 50, 2, 0.05);
+    ex.woodbury_incdec(&s_small, &phi_small, &[1.0, -1.0]).unwrap();
+    assert_eq!(ex.stats().1, 1, "expected native fallback");
+}
