@@ -54,6 +54,9 @@ fn main() -> Result<(), mikrr::error::Error> {
         };
         handles.push(SensorNode::new(shard, scfg).spawn(sink.sender()));
     }
+    // all sender handles are out: seal so the stream drains to completion
+    // the instant the fleet finishes (no trailing max_wait timeout)
+    sink.seal();
 
     // a prediction client running against the live model
     let handle = coordinator.handle();

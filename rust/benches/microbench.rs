@@ -8,20 +8,46 @@
 //! * `gram_block_sweep`      — Gram construction cost vs block size.
 //! * `aot_vs_native`         — the canonical woodbury update through the
 //!   AOT artifact vs the native f64 path.
+//! * `incplace`              — the in-place maintained-inverse engine vs
+//!   the seed-equivalent allocating path (BENCH_incplace.json: round
+//!   latency p50/p99, allocations per round, speedup).
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
+//!
+//! Results are also written to `BENCH_microbench.json` (and the in-place
+//! engine comparison to `BENCH_incplace.json`) so the perf trajectory is
+//! tracked across PRs.
+//!
+//! Runs single-threaded by default (exported `MIKRR_THREADS=1` unless the
+//! caller sets it): latency percentiles are stable, the allocating-vs-
+//! in-place comparison is apples to apples, and the allocations-per-round
+//! measurement reflects the engines' contract rather than scoped-thread
+//! spawns. Override by setting `MIKRR_THREADS` explicitly.
 
 use mikrr::benchlib::{black_box, Bencher};
 use mikrr::kernels::Kernel;
+use mikrr::krr::intrinsic::IntrinsicKrr;
+use mikrr::krr::KrrModel;
 use mikrr::linalg::solve::spd_inverse;
-use mikrr::linalg::woodbury::{bordered_shrink, incdec, sub_matrix};
+use mikrr::linalg::woodbury::{bordered_shrink, incdec, incdec_into, sub_matrix, IncDecWork};
 use mikrr::linalg::Mat;
 use mikrr::runtime::HybridExec;
 use mikrr::testutil::{random_mat, random_spd};
+use mikrr::util::alloc_counter::{self, CountingAlloc};
 use mikrr::util::prng::Rng;
 
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
 fn main() {
+    if std::env::var("MIKRR_THREADS").is_err() {
+        // must happen before any parallel call: num_threads() caches
+        #[allow(unused_unsafe)]
+        unsafe {
+            std::env::set_var("MIKRR_THREADS", "1")
+        };
+    }
     let mut b = Bencher::from_args(std::env::args().skip(1));
     let mut rng = Rng::new(1);
 
@@ -125,6 +151,61 @@ fn main() {
         });
     }
 
+    // ---- in-place maintained-inverse engine (BENCH_incplace.json) ----
+    // Baseline = the seed's allocating round: a fresh (J, J) copy of the
+    // maintained inverse plus cold T/W/core buffers every call. In-place =
+    // the same rank-6 update written into the live buffer with a warm
+    // workspace. Signs +3/−3 over duplicated columns make each round an
+    // exact identity, so the in-place state stays perfectly conditioned
+    // over any number of iterations.
+    let mut allocs_per_round = -1.0f64;
+    {
+        let phi3 = random_mat(&mut rng, j, 3, 0.05);
+        let phi6 = phi3.hcat(&phi3).unwrap();
+        let signs = [1.0, 1.0, 1.0, -1.0, -1.0, -1.0];
+        b.bench("incplace/incdec_alloc_J253_H6", || {
+            black_box(incdec(&s_inv, &phi6, &signs).unwrap());
+        });
+        let mut s_live = s_inv.clone();
+        let mut work = IncDecWork::default();
+        incdec_into(&mut s_live, &phi6, &signs, &mut work).unwrap(); // warm
+        b.bench("incplace/incdec_inplace_J253_H6", || {
+            incdec_into(&mut s_live, &phi6, &signs, &mut work).unwrap();
+        });
+
+        // model-level steady state at the paper's J=253: +4/−4 rounds
+        if b.enabled("incplace/intrinsic_round_J253") {
+            let d = mikrr::data::synth::ecg_like(600, 21, 9);
+            let mut model =
+                IntrinsicKrr::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+            let pool: Vec<_> = (0..16)
+                .map(|k| mikrr::data::synth::ecg_like(4, 21, 50 + k))
+                .collect();
+            let rem = [0usize, 1, 2, 3];
+            let mut iter = 0usize;
+            // warm the workspaces, then count allocations outside the timer
+            for _ in 0..4 {
+                let batch = &pool[iter % pool.len()];
+                model.inc_dec(&batch.x, &batch.y, &rem).unwrap();
+                iter += 1;
+            }
+            let a0 = alloc_counter::count();
+            let counted = 20usize;
+            for _ in 0..counted {
+                let batch = &pool[iter % pool.len()];
+                model.inc_dec(&batch.x, &batch.y, &rem).unwrap();
+                iter += 1;
+            }
+            allocs_per_round =
+                (alloc_counter::count() - a0) as f64 / counted as f64;
+            b.bench("incplace/intrinsic_round_J253", || {
+                let batch = &pool[iter % pool.len()];
+                model.inc_dec(&batch.x, &batch.y, &rem).unwrap();
+                iter += 1;
+            });
+        }
+    }
+
     // ---- substrate hot spots ----
     {
         let table = Kernel::poly(2, 1.0).feature_table(21).unwrap();
@@ -141,6 +222,39 @@ fn main() {
         b.bench("spd_inverse/253", || {
             black_box(spd_inverse(&spd).unwrap());
         });
+    }
+
+    // ---- machine-readable reports ----
+    let mut extras: Vec<(&str, f64)> =
+        vec![("threads", mikrr::par::num_threads() as f64)];
+    if allocs_per_round >= 0.0 {
+        extras.push(("allocs_per_round_intrinsic_J253", allocs_per_round));
+    }
+    if let (Some(alloc), Some(inplace)) = (
+        b.summary("incplace/incdec_alloc_J253_H6"),
+        b.summary("incplace/incdec_inplace_J253_H6"),
+    ) {
+        let speedup = alloc.mean() / inplace.mean().max(1e-12);
+        extras.push(("speedup_incdec_inplace_J253_H6", speedup));
+        println!(
+            "\nincplace: in-place rank-6 round {speedup:.2}x the allocating path \
+             ({} -> {})",
+            mikrr::util::fmt_secs(alloc.mean()),
+            mikrr::util::fmt_secs(inplace.mean()),
+        );
+    }
+    let mut inc_report = Bencher::new(mikrr::benchlib::BenchConfig::default()).quiet();
+    inc_report.results = b
+        .results
+        .iter()
+        .filter(|s| s.name.starts_with("incplace/"))
+        .cloned()
+        .collect();
+    if let Err(e) = inc_report.write_json("BENCH_incplace.json", &extras) {
+        eprintln!("(could not write BENCH_incplace.json: {e})");
+    }
+    if let Err(e) = b.write_json("BENCH_microbench.json", &extras) {
+        eprintln!("(could not write BENCH_microbench.json: {e})");
     }
 
     println!("\nmicrobench done ({} benchmarks).", b.results.len());

@@ -147,5 +147,28 @@ fn main() {
         }
     }
 
+    // machine-readable report: cell wall-times plus per-strategy means
+    // (round latency summaries live in each cell's RoundRecord; the JSON
+    // carries the cross-PR comparable aggregates)
+    let mut extras: Vec<(String, f64)> = Vec::new();
+    for &(id, m, s, n, f) in &krr_summaries {
+        let key = id.split_whitespace().next().unwrap_or(id);
+        extras.push((format!("{key}.multiple_s"), m));
+        extras.push((format!("{key}.single_s"), s));
+        extras.push((format!("{key}.none_s"), n));
+        extras.push((format!("{key}.fold"), f));
+    }
+    for &(id, m, s, f) in &kbr_summaries {
+        let key = id.split_whitespace().next().unwrap_or(id);
+        extras.push((format!("{key}.multiple_s"), m));
+        extras.push((format!("{key}.single_s"), s));
+        extras.push((format!("{key}.fold"), f));
+    }
+    let extras_ref: Vec<(&str, f64)> =
+        extras.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    if let Err(e) = b.write_json("BENCH_paper_tables.json", &extras_ref) {
+        eprintln!("(could not write BENCH_paper_tables.json: {e})");
+    }
+
     println!("\npaper_tables done ({} cells).", b.results.len());
 }

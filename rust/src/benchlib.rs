@@ -44,6 +44,27 @@ impl Summary {
         stats::min(&self.samples)
     }
 
+    /// Percentile `p` in [0, 100] (nearest-rank over sorted samples).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    /// Median round latency (p50), seconds.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Tail round latency (p99), seconds.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
     /// One-line human rendering.
     pub fn render(&self) -> String {
         format!(
@@ -178,6 +199,69 @@ impl Bencher {
         self.results.push(summary);
         self.results.last()
     }
+
+    /// Look up a collected summary by exact name.
+    pub fn summary(&self, name: &str) -> Option<&Summary> {
+        self.results.iter().find(|s| s.name == name)
+    }
+
+    /// Write every collected result — plus free-form top-level numeric
+    /// `extra` fields — as machine-readable JSON, so the perf trajectory
+    /// (round latency p50/p99, allocations per round, speedups) is tracked
+    /// across PRs in versioned `BENCH_*.json` files. Hand-rolled writer:
+    /// the offline crate set has no serde.
+    pub fn write_json(&self, path: &str, extra: &[(&str, f64)]) -> std::io::Result<()> {
+        let mut out = String::from("{\n  \"benchmarks\": [");
+        for (i, s) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"samples\": {}, \"mean_s\": {}, \
+                 \"p50_s\": {}, \"p99_s\": {}, \"min_s\": {}, \"stddev_s\": {}}}",
+                json_escape(&s.name),
+                s.samples.len(),
+                json_f64(s.mean()),
+                json_f64(s.p50()),
+                json_f64(s.p99()),
+                json_f64(s.min()),
+                json_f64(s.stddev()),
+            ));
+        }
+        out.push_str("\n  ],\n  \"extra\": {");
+        for (i, (k, v)) in extra.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{}\": {}", json_escape(k), json_f64(*v)));
+        }
+        out.push_str("\n  }\n}\n");
+        std::fs::write(path, out)
+    }
+}
+
+/// Minimal JSON string escaping (our bench ids only need quotes/backslash,
+/// but be safe about control characters too).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON-safe float rendering (JSON has no NaN/Inf literals).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
 }
 
 /// Paper-style table renderer: a header row of column labels and named rows
@@ -281,5 +365,40 @@ mod tests {
         b.bench_once("one", || std::thread::sleep(std::time::Duration::from_millis(1)));
         assert_eq!(b.results[0].samples.len(), 1);
         assert!(b.results[0].mean() >= 0.001);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s = Summary {
+            name: "p".into(),
+            samples: (1..=100).map(|i| i as f64).collect(),
+        };
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.p50() - 50.0).abs() <= 1.0);
+        assert!(s.p99() >= 98.0);
+        let empty = Summary { name: "e".into(), samples: vec![] };
+        assert_eq!(empty.p50(), 0.0);
+    }
+
+    #[test]
+    fn write_json_emits_machine_readable_report() {
+        let mut b = Bencher::new(BenchConfig::default()).quiet();
+        b.results.push(Summary {
+            name: "alpha/one \"quoted\"".into(),
+            samples: vec![0.001, 0.002, 0.003],
+        });
+        let path = std::env::temp_dir().join("mikrr_bench_test.json");
+        let path = path.to_str().unwrap();
+        b.write_json(path, &[("allocs_per_round", 0.0), ("speedup", 2.5)])
+            .unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"benchmarks\""));
+        assert!(text.contains("alpha/one \\\"quoted\\\""));
+        assert!(text.contains("\"p50_s\""));
+        assert!(text.contains("\"p99_s\""));
+        assert!(text.contains("\"allocs_per_round\": 0e0"));
+        assert!(text.contains("\"speedup\": 2.5e0"));
+        std::fs::remove_file(path).ok();
     }
 }

@@ -33,6 +33,8 @@ pub struct Engine {
     y: Vec<f64>,
     kernel: Kernel,
     ridge: f64,
+    /// Reused sorted-removal scratch for the mirror-store edits.
+    rem_scratch: Vec<usize>,
 }
 
 /// Opaque snapshot for rollback.
@@ -67,6 +69,7 @@ impl Engine {
             y: y.to_vec(),
             kernel: kernel.clone(),
             ridge,
+            rem_scratch: Vec::new(),
         })
     }
 
@@ -128,7 +131,9 @@ impl Engine {
     }
 
     /// One batched multiple inc/dec round across KRR (and KBR if present),
-    /// keeping the raw stores in sync.
+    /// keeping the raw stores in sync. The engines and the mirror stores
+    /// all edit in place inside reserved capacity, so a steady-state round
+    /// leaves no allocation traffic behind.
     pub fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
         match &mut self.krr {
             KrrEngine::Intrinsic(m) => m.inc_dec(x_new, y_new, remove_idx)?,
@@ -138,15 +143,16 @@ impl Engine {
             kbr.inc_dec(x_new, y_new, remove_idx)?;
         }
         // mirror into the raw stores
-        let mut rem: Vec<usize> = remove_idx.to_vec();
-        rem.sort_unstable();
-        rem.dedup();
-        self.x.remove_rows(&rem)?;
-        for (i, &ri) in rem.iter().enumerate() {
+        self.rem_scratch.clear();
+        self.rem_scratch.extend_from_slice(remove_idx);
+        self.rem_scratch.sort_unstable();
+        self.rem_scratch.dedup();
+        self.x.drop_rows_sorted(&self.rem_scratch)?;
+        for (i, &ri) in self.rem_scratch.iter().enumerate() {
             self.y.remove(ri - i);
         }
         if x_new.rows() > 0 {
-            self.x = self.x.vcat(x_new)?;
+            self.x.push_rows(x_new)?;
             self.y.extend_from_slice(y_new);
         }
         Ok(())

@@ -26,12 +26,29 @@
 
 use crate::error::{Error, Result};
 use crate::kernels::{Kernel, MonomialTable};
-use crate::linalg::gemm::gemv;
+use crate::linalg::gemm::{gemv, gemv_into};
 use crate::linalg::matrix::{axpy_slice, dot};
 use crate::linalg::solve::{spd_inverse, spd_logdet};
 use crate::linalg::woodbury::{incdec_into, IncDecWork};
 use crate::linalg::Mat;
 use crate::ensure_shape;
+
+/// Per-model workspace: every intermediate an `inc_dec` round needs, kept
+/// warm across rounds so the steady-state posterior update performs zero
+/// heap allocations (see `linalg::woodbury`'s workspace contract).
+#[derive(Clone, Default)]
+struct KbrWork {
+    /// Sorted, deduplicated removal set.
+    rem: Vec<usize>,
+    /// Mapped insertion block Φ_C (C, J).
+    phi_c: Mat,
+    /// Scaled update columns Φ_H / σ_b (J, C + R).
+    phi_h: Mat,
+    /// Column signs (+1 insert / −1 remove).
+    signs: Vec<f64>,
+    /// Woodbury scratch.
+    incdec: IncDecWork,
+}
 
 /// Prior/noise hyperparameters (paper §V: both 0.01).
 #[derive(Clone, Copy, Debug)]
@@ -87,7 +104,7 @@ pub struct KbrModel {
     y: Vec<f64>,
     /// Running Phi^T y (J,).
     py: Vec<f64>,
-    work: IncDecWork,
+    work: KbrWork,
 }
 
 impl KbrModel {
@@ -137,11 +154,14 @@ impl KbrModel {
             phi,
             y: y.to_vec(),
             py,
-            work: IncDecWork::default(),
+            work: KbrWork::default(),
         })
     }
 
     /// One batched incremental/decremental posterior update (eq. 43-44).
+    /// Steady state performs zero heap allocations: the scaled Φ_H, signs
+    /// and Woodbury scratch live in the per-model workspace, the covariance
+    /// update is in place, and the stores edit inside reserved capacity.
     pub fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
         ensure_shape!(
             x_new.rows() == y_new.len(),
@@ -150,10 +170,11 @@ impl KbrModel {
             x_new.rows(),
             y_new.len()
         );
-        let mut rem: Vec<usize> = remove_idx.to_vec();
-        rem.sort_unstable();
-        rem.dedup();
-        if let Some(&mx) = rem.last() {
+        self.work.rem.clear();
+        self.work.rem.extend_from_slice(remove_idx);
+        self.work.rem.sort_unstable();
+        self.work.rem.dedup();
+        if let Some(&mx) = self.work.rem.last() {
             if mx >= self.y.len() {
                 return Err(Error::InvalidUpdate(format!(
                     "remove index {mx} >= n {}",
@@ -162,48 +183,52 @@ impl KbrModel {
             }
         }
         let c = x_new.rows();
-        let r = rem.len();
+        let r = self.work.rem.len();
         if c + r == 0 {
             return Ok(());
         }
         let j = self.table.j();
-        let phi_c = self.table.map(x_new); // (C, J)
+        self.table.map_into_mat(x_new, &mut self.work.phi_c); // (C, J)
         // Phi_H scaled by 1/sigma_b so the precision shift matches eq. 43
         let inv_sb = 1.0 / self.hyper.sigma_b2.sqrt();
-        let mut phi_h = Mat::zeros(j, c + r);
+        self.work.phi_h.resize_scratch(j, c + r);
         for row in 0..c {
-            let src = phi_c.row(row);
             for jj in 0..j {
-                phi_h[(jj, row)] = src[jj] * inv_sb;
+                self.work.phi_h[(jj, row)] = self.work.phi_c[(row, jj)] * inv_sb;
             }
         }
-        for (col, &ri) in rem.iter().enumerate() {
-            let src = self.phi.row(ri);
+        for col in 0..r {
+            let ri = self.work.rem[col];
             for jj in 0..j {
-                phi_h[(jj, c + col)] = src[jj] * inv_sb;
+                self.work.phi_h[(jj, c + col)] = self.phi[(ri, jj)] * inv_sb;
             }
         }
-        let mut signs = vec![1.0; c];
-        signs.extend(std::iter::repeat_n(-1.0, r));
-        incdec_into(&mut self.cov, &phi_h, &signs, &mut self.work)?;
+        self.work.signs.clear();
+        self.work.signs.extend(std::iter::repeat_n(1.0, c));
+        self.work.signs.extend(std::iter::repeat_n(-1.0, r));
+        incdec_into(
+            &mut self.cov,
+            &self.work.phi_h,
+            &self.work.signs,
+            &mut self.work.incdec,
+        )?;
         // maintain Phi^T y and the stores
         for row in 0..c {
-            axpy_slice(y_new[row], phi_c.row(row), &mut self.py);
+            axpy_slice(y_new[row], self.work.phi_c.row(row), &mut self.py);
         }
-        for &ri in &rem {
-            let src = self.phi.row(ri).to_vec();
-            axpy_slice(-self.y[ri], &src, &mut self.py);
+        for &ri in &self.work.rem {
+            axpy_slice(-self.y[ri], self.phi.row(ri), &mut self.py);
         }
-        self.phi.remove_rows(&rem)?;
-        for (i, &ri) in rem.iter().enumerate() {
+        self.phi.drop_rows_sorted(&self.work.rem)?;
+        for (i, &ri) in self.work.rem.iter().enumerate() {
             self.y.remove(ri - i);
         }
         for row in 0..c {
-            self.phi.push_row(phi_c.row(row))?;
+            self.phi.push_row(self.work.phi_c.row(row))?;
             self.y.push(y_new[row]);
         }
         // mean refresh (eq. 44)
-        self.mean = gemv(&self.cov, &self.py)?;
+        gemv_into(&self.cov, &self.py, &mut self.mean)?;
         for m in &mut self.mean {
             *m /= self.hyper.sigma_b2;
         }

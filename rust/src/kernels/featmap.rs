@@ -94,10 +94,18 @@ impl MonomialTable {
 
     /// Map a batch: X (B, M) -> Phi (B, J), parallel over rows.
     pub fn map(&self, x: &Mat) -> Mat {
+        let mut out = Mat::default();
+        self.map_into_mat(x, &mut out);
+        out
+    }
+
+    /// [`MonomialTable::map`] written into a caller-provided matrix
+    /// (reshaped as needed; allocation-free with warm capacity).
+    pub fn map_into_mat(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols(), self.m, "featmap: input dim {} != {}", x.cols(), self.m);
         let b = x.rows();
         let j = self.j();
-        let mut out = Mat::zeros(b, j);
+        out.resize_scratch(b, j);
         let optr = SendPtr(out.as_mut_slice().as_mut_ptr());
         par::parallel_for(b, 8, |lo, hi| {
             let p = optr;
@@ -107,7 +115,6 @@ impl MonomialTable {
                 self.map_into(x.row(r), row);
             }
         });
-        out
     }
 }
 

@@ -7,30 +7,47 @@
 //! `python/compile/kernels/gram.py`.
 
 use crate::kernels::Kernel;
-use crate::linalg::gemm::matmul_nt;
+use crate::linalg::gemm::matmul_nt_into;
 use crate::linalg::matrix::dot;
 use crate::linalg::Mat;
 use crate::par;
 
+/// Reusable scratch for [`gram_into`] (the RBF path's row norms), so the
+/// engines' steady-state Gram construction allocates nothing.
+#[derive(Clone, Default)]
+pub struct GramWork {
+    xn: Vec<f64>,
+    yn: Vec<f64>,
+}
+
 /// K[i,j] = k(x_i, y_j); x: (N, M), y: (P, M) -> (N, P).
 pub fn gram(kernel: &Kernel, x: &Mat, y: &Mat) -> Mat {
+    let mut out = Mat::default();
+    gram_into(kernel, x, y, &mut out, &mut GramWork::default());
+    out
+}
+
+/// [`gram`] written into a caller-provided matrix, drawing auxiliary
+/// buffers from `work` (allocation-free once both are warm).
+pub fn gram_into(kernel: &Kernel, x: &Mat, y: &Mat, out: &mut Mat, work: &mut GramWork) {
     assert_eq!(x.cols(), y.cols(), "gram: feature dims differ");
+    matmul_nt_into(x, y, out).expect("shapes checked");
     match *kernel {
-        Kernel::Linear => matmul_nt(x, y).expect("shapes checked"),
+        Kernel::Linear => {}
         Kernel::Poly { degree, coef0 } => {
-            let mut k = matmul_nt(x, y).expect("shapes checked");
             let d = degree as i32;
-            for v in k.as_mut_slice() {
+            for v in out.as_mut_slice() {
                 *v = (*v + coef0).powi(d);
             }
-            k
         }
         Kernel::Rbf { gamma } => {
-            let mut k = matmul_nt(x, y).expect("shapes checked");
-            let xn: Vec<f64> = (0..x.rows()).map(|i| dot(x.row(i), x.row(i))).collect();
-            let yn: Vec<f64> = (0..y.rows()).map(|i| dot(y.row(i), y.row(i))).collect();
+            work.xn.clear();
+            work.xn.extend((0..x.rows()).map(|i| dot(x.row(i), x.row(i))));
+            work.yn.clear();
+            work.yn.extend((0..y.rows()).map(|i| dot(y.row(i), y.row(i))));
             let p = y.rows();
-            let kptr = SendPtr(k.as_mut_slice().as_mut_ptr());
+            let (xn, yn) = (&work.xn, &work.yn);
+            let kptr = SendPtr(out.as_mut_slice().as_mut_ptr());
             par::parallel_for(x.rows(), 32, |lo, hi| {
                 let ptr = kptr;
                 for i in lo..hi {
@@ -43,7 +60,6 @@ pub fn gram(kernel: &Kernel, x: &Mat, y: &Mat) -> Mat {
                     }
                 }
             });
-            k
         }
     }
 }
@@ -53,6 +69,12 @@ pub fn gram_symmetric(kernel: &Kernel, x: &Mat) -> Mat {
     let mut k = gram(kernel, x, x);
     k.symmetrize();
     k
+}
+
+/// [`gram_symmetric`] written into a caller-provided matrix.
+pub fn gram_symmetric_into(kernel: &Kernel, x: &Mat, out: &mut Mat, work: &mut GramWork) {
+    gram_into(kernel, x, x, out, work);
+    out.symmetrize();
 }
 
 /// Cross-kernel row: k(x_query, each row of X) — the prediction hot path.
@@ -76,6 +98,7 @@ unsafe impl Sync for SendPtr {}
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::matmul_nt;
     use crate::util::prng::Rng;
 
     fn randm(r: usize, c: usize, seed: u64) -> Mat {

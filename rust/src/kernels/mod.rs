@@ -9,6 +9,7 @@ pub mod featmap;
 pub mod gram;
 
 pub use featmap::MonomialTable;
+pub use gram::GramWork;
 
 use crate::linalg::matrix::dot;
 use crate::linalg::Mat;

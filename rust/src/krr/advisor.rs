@@ -116,9 +116,13 @@ impl Advisor {
     /// this many pending ops before issuing one multiple update.  Chosen as
     /// the batch size where the per-sample cost of the batched update stops
     /// improving materially (diminishing returns past ~sqrt(J), capped by
-    /// the §II.B bound).
+    /// the §II.B bound).  For tiny J the §II.B cap can fall below the
+    /// batching floor of 2, so the floor yields to the cap — `clamp` panics
+    /// on unordered bounds.
     pub fn recommended_flush(&self, j: usize) -> usize {
-        ((j as f64).sqrt() as usize).clamp(2, self.max_intrinsic_batch(j))
+        let cap = self.max_intrinsic_batch(j);
+        let floor = 2.min(cap);
+        ((j as f64).sqrt() as usize).clamp(floor, cap)
     }
 }
 
@@ -166,6 +170,24 @@ mod tests {
         assert_eq!(adv.max_intrinsic_batch(1), 1);
         let f = adv.recommended_flush(253);
         assert!((2..=252).contains(&f));
+    }
+
+    #[test]
+    fn recommended_flush_tiny_j_does_not_panic() {
+        // regression: j <= 2 gives max_intrinsic_batch(j) == 1 < 2, which
+        // used to panic clamp() with "min > max"
+        let adv = Advisor::default();
+        for j in [1usize, 2, 3] {
+            let f = adv.recommended_flush(j);
+            assert!(
+                f >= 1 && f <= adv.max_intrinsic_batch(j),
+                "j={j}: flush {f} outside [1, {}]",
+                adv.max_intrinsic_batch(j)
+            );
+        }
+        assert_eq!(adv.recommended_flush(1), 1);
+        assert_eq!(adv.recommended_flush(2), 1);
+        assert_eq!(adv.recommended_flush(3), 2);
     }
 
     #[test]

@@ -11,13 +11,35 @@
 //! M=10^6).
 
 use crate::error::{Error, Result};
+use crate::kernels::gram::{gram_into, gram_symmetric_into, GramWork};
 use crate::kernels::Kernel;
-use crate::linalg::gemm::gemv;
+use crate::linalg::gemm::{gemv, gemv_into};
 use crate::linalg::matrix::dot;
 use crate::linalg::solve::spd_inverse;
-use crate::linalg::woodbury::{bordered_grow, bordered_shrink};
+use crate::linalg::woodbury::{bordered_grow_into, bordered_shrink_into, BorderWork};
 use crate::linalg::Mat;
 use crate::{ensure_shape, krr::KrrModel};
+
+/// Per-model workspace: every intermediate an `inc_dec` round needs, kept
+/// warm across rounds so the steady-state update performs zero heap
+/// allocations (see `linalg::woodbury`'s workspace contract).
+#[derive(Clone, Default)]
+struct EmpiricalWork {
+    /// Sorted, deduplicated removal set.
+    rem: Vec<usize>,
+    /// Bordered grow/shrink scratch.
+    border: BorderWork,
+    /// Gram-row-norm scratch (RBF path).
+    gram: GramWork,
+    /// Cross-kernel block η = K(X, X_C) (N, C).
+    eta: Mat,
+    /// New-block kernel K(X_C, X_C) + ρI (C, C).
+    q_cc: Mat,
+    /// Head refresh: v = Q^-1 e.
+    v: Vec<f64>,
+    /// Head refresh: Q^-1 y.
+    qy: Vec<f64>,
+}
 
 /// Empirical-space incremental KRR engine.
 #[derive(Clone)]
@@ -34,6 +56,7 @@ pub struct EmpiricalKrr {
     a: Vec<f64>,
     /// Bias b.
     b: f64,
+    work: EmpiricalWork,
 }
 
 impl EmpiricalKrr {
@@ -60,24 +83,34 @@ impl EmpiricalKrr {
             q_inv,
             a: vec![0.0; y.len()],
             b: 0.0,
+            work: EmpiricalWork::default(),
         };
         model.refresh_head()?;
         Ok(model)
     }
 
-    /// (a, b) from Q^-1 (paper eq. 18-19) — O(N^2).
+    /// (a, b) from Q^-1 (paper eq. 18-19) — O(N^2), allocation-free with a
+    /// warm workspace.
     fn refresh_head(&mut self) -> Result<()> {
         let n = self.y.len();
         ensure_shape!(self.q_inv.rows() == n, "refresh_head", "q_inv {:?} vs n {}", self.q_inv.shape(), n);
         // v = Q^-1 e ; b = (y.v) / (e.v) ; a = Q^-1 y - b v
-        let v = self.q_inv.row_sums();
-        let ev: f64 = v.iter().sum();
+        self.q_inv.row_sums_into(&mut self.work.v);
+        let ev: f64 = self.work.v.iter().sum();
         if ev.abs() < 1e-14 {
             return Err(Error::numerical("refresh_head", format!("e Q^-1 e = {ev:.3e}")));
         }
-        self.b = dot(&self.y, &v) / ev;
-        let qy = gemv(&self.q_inv, &self.y)?;
-        self.a = qy.iter().zip(&v).map(|(q, vi)| q - self.b * vi).collect();
+        self.b = dot(&self.y, &self.work.v) / ev;
+        gemv_into(&self.q_inv, &self.y, &mut self.work.qy)?;
+        let b = self.b;
+        self.a.clear();
+        self.a.extend(
+            self.work
+                .qy
+                .iter()
+                .zip(&self.work.v)
+                .map(|(q, vi)| q - b * vi),
+        );
         Ok(())
     }
 
@@ -135,6 +168,11 @@ impl KrrModel for EmpiricalKrr {
         Ok(out)
     }
 
+    /// One batched `+|C|/−|R|` round: eq. (29) shrink then eq. (28) grow,
+    /// both written into the maintained buffer. Steady state performs zero
+    /// heap allocations — the Gram blocks, Schur scratch and head buffers
+    /// all live in the per-model workspace, and `q_inv` shrinks and regrows
+    /// inside its reserved capacity.
     fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
         ensure_shape!(
             x_new.rows() == y_new.len(),
@@ -143,10 +181,11 @@ impl KrrModel for EmpiricalKrr {
             x_new.rows(),
             y_new.len()
         );
-        let mut rem: Vec<usize> = remove_idx.to_vec();
-        rem.sort_unstable();
-        rem.dedup();
-        if let Some(&mx) = rem.last() {
+        self.work.rem.clear();
+        self.work.rem.extend_from_slice(remove_idx);
+        self.work.rem.sort_unstable();
+        self.work.rem.dedup();
+        if let Some(&mx) = self.work.rem.last() {
             if mx >= self.y.len() {
                 return Err(Error::InvalidUpdate(format!(
                     "remove index {mx} >= n {}",
@@ -155,42 +194,49 @@ impl KrrModel for EmpiricalKrr {
             }
         }
         let c = x_new.rows();
-        if c + rem.len() == 0 {
+        let r = self.work.rem.len();
+        if c + r == 0 {
             return Ok(());
         }
-        if self.y.len() + c <= rem.len() {
+        if self.y.len() + c <= r {
             return Err(Error::InvalidUpdate(
                 "update would leave an empty training set".into(),
             ));
         }
         // 1) decremental shrink first (paper's eq. 30 ordering)
-        if !rem.is_empty() {
+        if r > 0 {
             // §III.B guard: shrinking needs |R| < residual size; otherwise a
             // fresh inverse of the kept block is cheaper AND always valid.
-            let residual = self.y.len() - rem.len();
-            if rem.len() >= residual {
-                // direct recompute path
-                let keep: Vec<usize> =
-                    (0..self.y.len()).filter(|i| !rem.contains(i)).collect();
+            let residual = self.y.len() - r;
+            if r >= residual {
+                // direct recompute path (rare; allowed to allocate)
+                let keep: Vec<usize> = (0..self.y.len())
+                    .filter(|i| !self.work.rem.contains(i))
+                    .collect();
                 let xk = self.x.select_rows(&keep);
                 let mut q = self.kernel.gram_symmetric(&xk);
                 q.add_diag(self.rho)?;
                 self.q_inv = spd_inverse(&q)?;
             } else {
-                self.q_inv = bordered_shrink(&self.q_inv, &rem)?;
+                bordered_shrink_into(&mut self.q_inv, &self.work.rem, &mut self.work.border)?;
             }
-            self.x.remove_rows(&rem)?;
-            for (i, &ri) in rem.iter().enumerate() {
+            self.x.drop_rows_sorted(&self.work.rem)?;
+            for (i, &ri) in self.work.rem.iter().enumerate() {
                 self.y.remove(ri - i);
             }
         }
         // 2) incremental grow by the new block (eq. 28)
         if c > 0 {
-            let eta = self.kernel.gram(&self.x, x_new); // (N, C)
-            let mut q_cc = self.kernel.gram_symmetric(x_new); // (C, C)
-            q_cc.add_diag(self.rho)?;
-            self.q_inv = bordered_grow(&self.q_inv, &eta, &q_cc)?;
-            self.x = self.x.vcat(x_new)?;
+            gram_into(&self.kernel, &self.x, x_new, &mut self.work.eta, &mut self.work.gram);
+            gram_symmetric_into(&self.kernel, x_new, &mut self.work.q_cc, &mut self.work.gram);
+            self.work.q_cc.add_diag(self.rho)?;
+            bordered_grow_into(
+                &mut self.q_inv,
+                &self.work.eta,
+                &self.work.q_cc,
+                &mut self.work.border,
+            )?;
+            self.x.push_rows(x_new)?;
             self.y.extend_from_slice(y_new);
         }
         self.refresh_head()

@@ -18,12 +18,33 @@
 
 use crate::error::{Error, Result};
 use crate::kernels::{Kernel, MonomialTable};
-use crate::linalg::gemm::gemv;
+use crate::linalg::gemm::{gemv, gemv_into};
 use crate::linalg::matrix::dot;
 use crate::linalg::solve::spd_inverse;
 use crate::linalg::woodbury::{incdec_into, IncDecWork};
 use crate::linalg::Mat;
 use crate::{ensure_shape, krr::KrrModel};
+
+/// Per-model workspace: every intermediate an `inc_dec` round needs, kept
+/// warm across rounds so the steady-state update performs zero heap
+/// allocations (see `linalg::woodbury`'s workspace contract).
+#[derive(Clone, Default)]
+struct IntrinsicWork {
+    /// Sorted, deduplicated removal set.
+    rem: Vec<usize>,
+    /// Mapped insertion block Φ_C (C, J).
+    phi_c: Mat,
+    /// Update columns Φ_H (J, C + R).
+    phi_h: Mat,
+    /// Column signs (+1 insert / −1 remove).
+    signs: Vec<f64>,
+    /// Woodbury scratch.
+    incdec: IncDecWork,
+    /// Head refresh: S^-1 psum.
+    sp: Vec<f64>,
+    /// Head refresh: S^-1 py.
+    spy: Vec<f64>,
+}
 
 /// Intrinsic-space incremental KRR engine.
 #[derive(Clone)]
@@ -47,7 +68,7 @@ pub struct IntrinsicKrr {
     u: Vec<f64>,
     /// Bias b.
     b: f64,
-    work: IncDecWork,
+    work: IntrinsicWork,
 }
 
 impl IntrinsicKrr {
@@ -98,27 +119,27 @@ impl IntrinsicKrr {
             sy,
             u: vec![0.0; j],
             b: 0.0,
-            work: IncDecWork::default(),
+            work: IntrinsicWork::default(),
         };
         model.refresh_head()?;
         Ok(model)
     }
 
-    /// Recover (u, b) from the maintained state — O(J^2).
+    /// Recover (u, b) from the maintained state — O(J^2), allocation-free
+    /// with a warm workspace.
     fn refresh_head(&mut self) -> Result<()> {
         let n = self.y.len() as f64;
-        let sp = gemv(&self.s_inv, &self.psum)?; // S^-1 psum
-        let denom = n - dot(&self.psum, &sp);
+        gemv_into(&self.s_inv, &self.psum, &mut self.work.sp)?; // S^-1 psum
+        let denom = n - dot(&self.psum, &self.work.sp);
         if denom.abs() < 1e-12 {
             return Err(Error::numerical("refresh_head", format!("denom {denom:.3e}")));
         }
-        self.b = (self.sy - dot(&sp, &self.py)) / denom;
-        let spy = gemv(&self.s_inv, &self.py)?;
-        self.u = spy
-            .iter()
-            .zip(&sp)
-            .map(|(a, s)| a - s * self.b)
-            .collect();
+        self.b = (self.sy - dot(&self.work.sp, &self.py)) / denom;
+        gemv_into(&self.s_inv, &self.py, &mut self.work.spy)?;
+        let b = self.b;
+        self.u.clear();
+        self.u
+            .extend(self.work.spy.iter().zip(&self.work.sp).map(|(a, s)| a - s * b));
         Ok(())
     }
 
@@ -187,6 +208,10 @@ impl KrrModel for IntrinsicKrr {
         Ok(out)
     }
 
+    /// One batched `+|C|/−|R|` round. Steady state performs zero heap
+    /// allocations: Φ_C/Φ_H/signs live in the per-model workspace, the
+    /// Woodbury update is in place, and the stores shrink and grow inside
+    /// their reserved capacity.
     fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
         ensure_shape!(
             x_new.rows() == y_new.len(),
@@ -195,10 +220,11 @@ impl KrrModel for IntrinsicKrr {
             x_new.rows(),
             y_new.len()
         );
-        let mut rem: Vec<usize> = remove_idx.to_vec();
-        rem.sort_unstable();
-        rem.dedup();
-        if let Some(&mx) = rem.last() {
+        self.work.rem.clear();
+        self.work.rem.extend_from_slice(remove_idx);
+        self.work.rem.sort_unstable();
+        self.work.rem.dedup();
+        if let Some(&mx) = self.work.rem.last() {
             if mx >= self.y.len() {
                 return Err(Error::InvalidUpdate(format!(
                     "remove index {mx} >= n {}",
@@ -207,7 +233,7 @@ impl KrrModel for IntrinsicKrr {
             }
         }
         let c = x_new.rows();
-        let r = rem.len();
+        let r = self.work.rem.len();
         if c + r == 0 {
             return Ok(());
         }
@@ -218,42 +244,52 @@ impl KrrModel for IntrinsicKrr {
         }
         let j = self.table.j();
         // build Φ_H: (J, C + R) — new mapped rows then removed stored rows
-        let phi_c = self.table.map(x_new); // (C, J)
-        let mut phi_h = Mat::zeros(j, c + r);
-        for (col, row) in (0..c).zip(0..c) {
+        self.table.map_into_mat(x_new, &mut self.work.phi_c); // (C, J)
+        self.work.phi_h.resize_scratch(j, c + r);
+        for row in 0..c {
             for jj in 0..j {
-                phi_h[(jj, col)] = phi_c[(row, jj)];
+                self.work.phi_h[(jj, row)] = self.work.phi_c[(row, jj)];
             }
         }
-        for (col, &ri) in rem.iter().enumerate() {
-            let src = self.phi.row(ri);
+        for col in 0..r {
+            let ri = self.work.rem[col];
             for jj in 0..j {
-                phi_h[(jj, c + col)] = src[jj];
+                self.work.phi_h[(jj, c + col)] = self.phi[(ri, jj)];
             }
         }
-        let mut signs = vec![1.0; c];
-        signs.extend(std::iter::repeat_n(-1.0, r));
-        // ONE batched Woodbury update (paper eq. 15)
-        incdec_into(&mut self.s_inv, &phi_h, &signs, &mut self.work)?;
+        self.work.signs.clear();
+        self.work.signs.extend(std::iter::repeat_n(1.0, c));
+        self.work.signs.extend(std::iter::repeat_n(-1.0, r));
+        // ONE batched Woodbury update (paper eq. 15), in place
+        incdec_into(
+            &mut self.s_inv,
+            &self.work.phi_h,
+            &self.work.signs,
+            &mut self.work.incdec,
+        )?;
         // maintain the sums
         for row in 0..c {
-            crate::linalg::matrix::axpy_slice(1.0, phi_c.row(row), &mut self.psum);
-            crate::linalg::matrix::axpy_slice(y_new[row], phi_c.row(row), &mut self.py);
+            crate::linalg::matrix::axpy_slice(1.0, self.work.phi_c.row(row), &mut self.psum);
+            crate::linalg::matrix::axpy_slice(
+                y_new[row],
+                self.work.phi_c.row(row),
+                &mut self.py,
+            );
         }
-        for &ri in &rem {
-            let src = self.phi.row(ri).to_vec();
-            crate::linalg::matrix::axpy_slice(-1.0, &src, &mut self.psum);
-            crate::linalg::matrix::axpy_slice(-self.y[ri], &src, &mut self.py);
+        for &ri in &self.work.rem {
+            crate::linalg::matrix::axpy_slice(-1.0, self.phi.row(ri), &mut self.psum);
+            crate::linalg::matrix::axpy_slice(-self.y[ri], self.phi.row(ri), &mut self.py);
         }
-        self.sy += y_new.iter().sum::<f64>() - rem.iter().map(|&i| self.y[i]).sum::<f64>();
-        // edit the stores: remove rows (descending) then append new
-        self.phi.remove_rows(&rem)?;
-        for (i, &ri) in rem.iter().enumerate() {
+        self.sy += y_new.iter().sum::<f64>()
+            - self.work.rem.iter().map(|&i| self.y[i]).sum::<f64>();
+        // edit the stores: compact out removed rows, then append new ones
+        self.phi.drop_rows_sorted(&self.work.rem)?;
+        for (i, &ri) in self.work.rem.iter().enumerate() {
             // remove from y by index, adjusting for prior removals
             self.y.remove(ri - i);
         }
         for row in 0..c {
-            self.phi.push_row(phi_c.row(row))?;
+            self.phi.push_row(self.work.phi_c.row(row))?;
             self.y.push(y_new[row]);
         }
         self.refresh_head()

@@ -18,6 +18,14 @@ const MIN_PAR_ROWS: usize = 16;
 
 /// `C = A * B` (new allocation).
 pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    let mut c = Mat::default();
+    matmul_into(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// `C = A * B` written into a caller-provided matrix (reshaped as needed;
+/// allocation-free once `c`'s capacity is warm).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.cols() == b.rows(),
         "gemm::matmul",
@@ -25,13 +33,20 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
         a.shape(),
         b.shape()
     );
-    let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_into(1.0, a, b, 0.0, &mut c)?;
-    Ok(c)
+    c.resize_scratch(a.rows(), b.cols());
+    gemm_into(1.0, a, b, 0.0, c)
 }
 
 /// `C = A * B^T` (new allocation).
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
+    let mut c = Mat::default();
+    matmul_nt_into(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// `C = A * B^T` written into a caller-provided matrix (reshaped as
+/// needed; allocation-free once `c`'s capacity is warm).
+pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.cols() == b.cols(),
         "gemm::matmul_nt",
@@ -43,7 +58,7 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
     // rows, which is the cache-friendly case — no packing needed.
     let m = a.rows();
     let n = b.rows();
-    let mut c = Mat::zeros(m, n);
+    c.resize_scratch(m, n);
     let a_ref = &a;
     let b_ref = &b;
     let cols = n;
@@ -59,7 +74,63 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
             }
         }
     });
-    Ok(c)
+    Ok(())
+}
+
+/// `C[0..A.rows, 0..B.rows] += alpha * A B^T` — accumulate into the leading
+/// block of a (possibly larger) `C`. This is the in-place bordered-grow's
+/// top-left rank-|C| correction: the maintained inverse has already been
+/// restrided to its grown shape and the update lands directly in it.
+pub fn gemm_nt_acc_block(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
+    ensure_shape!(
+        a.cols() == b.cols() && c.rows() >= a.rows() && c.cols() >= b.rows(),
+        "gemm::gemm_nt_acc_block",
+        "a {:?}, b^T {:?}, c {:?}",
+        a.shape(),
+        b.shape(),
+        c.shape()
+    );
+    let n = b.rows();
+    let c_cols = c.cols();
+    let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+    par::parallel_for(a.rows(), MIN_PAR_ROWS, |lo, hi| {
+        let p = cptr;
+        for i in lo..hi {
+            let ai = a.row(i);
+            // SAFETY: disjoint C rows per chunk.
+            let crow = unsafe { std::slice::from_raw_parts_mut(p.0.add(i * c_cols), n) };
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv += alpha * dot(ai, b.row(j));
+            }
+        }
+    });
+    Ok(())
+}
+
+/// `C += alpha * A^T B` with A: (k, m), B: (k, n), C: (m, n). Serial —
+/// used for the small Schur blocks of the bordered updates.
+pub fn gemm_tn_acc(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
+    ensure_shape!(
+        a.rows() == b.rows() && c.rows() == a.cols() && c.cols() == b.cols(),
+        "gemm::gemm_tn_acc",
+        "a^T {:?}, b {:?}, c {:?}",
+        a.shape(),
+        b.shape(),
+        c.shape()
+    );
+    for k in 0..a.rows() {
+        for i in 0..a.cols() {
+            let f = alpha * a[(k, i)];
+            if f != 0.0 {
+                let base = k * b.cols();
+                let brow = &b.as_slice()[base..base + b.cols()];
+                for (cv, bv) in c.row_mut(i).iter_mut().zip(brow) {
+                    *cv += f * bv;
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// `C = A^T * B` (new allocation), A: (k, m), B: (k, n) -> C: (m, n).
@@ -155,6 +226,14 @@ pub fn syrk(a: &Mat) -> Result<Mat> {
 
 /// Matrix-vector product `y = A x`.
 pub fn gemv(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
+    let mut y = Vec::new();
+    gemv_into(a, x, &mut y)?;
+    Ok(y)
+}
+
+/// `y = A x` written into a caller-provided buffer (resized; no allocation
+/// once its capacity is warm).
+pub fn gemv_into(a: &Mat, x: &[f64], y: &mut Vec<f64>) -> Result<()> {
     ensure_shape!(
         a.cols() == x.len(),
         "gemm::gemv",
@@ -162,7 +241,18 @@ pub fn gemv(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
         a.shape(),
         x.len()
     );
-    Ok(par::parallel_map(a.rows(), 512, |i| dot(a.row(i), x)))
+    let m = a.rows();
+    y.clear();
+    y.resize(m, 0.0);
+    let yptr = SendSlice(y.as_mut_ptr());
+    par::parallel_for(m, 512, |lo, hi| {
+        let p = yptr;
+        for i in lo..hi {
+            // SAFETY: disjoint index ranges per chunk.
+            unsafe { *p.0.add(i) = dot(a.row(i), x) };
+        }
+    });
+    Ok(())
 }
 
 /// `y = A^T x` with A: (n, m), x: (n,) -> y: (m,).
@@ -330,5 +420,54 @@ mod tests {
         let b = Mat::zeros(5, 4);
         let c = matmul(&a, &b).unwrap();
         assert_eq!(c.shape(), (0, 4));
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let a = randm(12, 9, 20);
+        let b = randm(9, 7, 21);
+        let bt = randm(14, 9, 22);
+        let mut c = Mat::default();
+        matmul_into(&a, &b, &mut c).unwrap();
+        assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-9);
+        // reuse the same scratch for a different shape
+        matmul_nt_into(&a, &bt, &mut c).unwrap();
+        assert!(c.max_abs_diff(&naive(&a, &bt.transpose())) < 1e-9);
+        let mut y = Vec::new();
+        let mut rng = Rng::new(23);
+        let x = rng.gaussian_vec(9);
+        gemv_into(&a, &x, &mut y).unwrap();
+        assert_eq!(y, gemv(&a, &x).unwrap());
+    }
+
+    #[test]
+    fn nt_acc_block_updates_leading_block() {
+        let a = randm(5, 3, 24);
+        let b = randm(4, 3, 25);
+        let mut c = Mat::from_fn(8, 8, |_, _| 1.0);
+        gemm_nt_acc_block(2.0, &a, &b, &mut c).unwrap();
+        let want = naive(&a, &b.transpose());
+        for i in 0..8 {
+            for j in 0..8 {
+                let expect = if i < 5 && j < 4 { 1.0 + 2.0 * want[(i, j)] } else { 1.0 };
+                assert!((c[(i, j)] - expect).abs() < 1e-9, "({i},{j})");
+            }
+        }
+        assert!(gemm_nt_acc_block(1.0, &randm(9, 3, 1), &b, &mut c).is_err());
+    }
+
+    #[test]
+    fn tn_acc_matches_naive() {
+        let a = randm(6, 4, 26);
+        let b = randm(6, 5, 27);
+        let mut c = Mat::from_fn(4, 5, |_, _| 0.5);
+        gemm_tn_acc(3.0, &a, &b, &mut c).unwrap();
+        let mut want = naive(&a.transpose(), &b);
+        want.scale(3.0);
+        for i in 0..4 {
+            for j in 0..5 {
+                assert!((c[(i, j)] - 0.5 - want[(i, j)]).abs() < 1e-9);
+            }
+        }
     }
 }

@@ -2,6 +2,15 @@
 //! incremental-KRR engines need. Deliberately simple — contiguous `Vec<f64>`
 //! storage, explicit shapes, panics only in `debug_assert`s; fallible ops
 //! return [`crate::error::Result`].
+//!
+//! Beyond the basic container, `Mat` carries a `Vec`-style reserved capacity
+//! so the maintained-inverse engines can resize without reallocating:
+//! [`Mat::grow_inplace`] / [`Mat::shrink_inplace`] restride the buffer for
+//! row/col append and truncation, [`Mat::compact`] gathers an index-set
+//! submatrix forward into the same buffer, and [`Mat::resize_scratch`]
+//! repurposes a matrix as an overwrite-target workspace. All of them are
+//! allocation-free once the backing buffer has warmed up to the workload's
+//! peak size (growth beyond capacity reserves with amortized doubling).
 
 use crate::ensure_shape;
 use crate::error::Result;
@@ -12,6 +21,12 @@ pub struct Mat {
     rows: usize,
     cols: usize,
     data: Vec<f64>,
+}
+
+impl Default for Mat {
+    fn default() -> Self {
+        Self { rows: 0, cols: 0, data: Vec::new() }
+    }
 }
 
 impl std::fmt::Debug for Mat {
@@ -138,20 +153,10 @@ impl Mat {
         (0..self.rows).map(|r| self[(r, c)]).collect()
     }
 
-    /// Transposed copy.
+    /// Transposed copy (blocked for cache friendliness).
     pub fn transpose(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
-        // blocked transpose for cache friendliness
-        const B: usize = 32;
-        for rb in (0..self.rows).step_by(B) {
-            for cb in (0..self.cols).step_by(B) {
-                for r in rb..(rb + B).min(self.rows) {
-                    for c in cb..(cb + B).min(self.cols) {
-                        out[(c, r)] = self[(r, c)];
-                    }
-                }
-            }
-        }
+        let mut out = Mat::default();
+        self.transpose_into(&mut out);
         out
     }
 
@@ -240,12 +245,27 @@ impl Mat {
             );
         }
         let removed = self.select_rows(&sorted);
+        self.drop_rows_sorted(&sorted)?;
+        Ok(removed)
+    }
+
+    /// Remove rows by a sorted, deduplicated index list, preserving the
+    /// order of the remaining rows. The allocation-free core of
+    /// [`Mat::remove_rows`]: compacts in place (one memmove per kept row
+    /// after the first removal) and never touches the heap.
+    pub fn drop_rows_sorted(&mut self, sorted: &[usize]) -> Result<()> {
+        debug_assert!(sorted.windows(2).all(|w| w[0] < w[1]));
         if sorted.is_empty() {
-            return Ok(removed);
+            return Ok(());
         }
+        ensure_shape!(
+            sorted[sorted.len() - 1] < self.rows,
+            "Mat::drop_rows_sorted",
+            "index {} >= rows {}",
+            sorted[sorted.len() - 1],
+            self.rows
+        );
         let keep_rows = self.rows - sorted.len();
-        // in-place compaction: shift kept rows down over removed ones
-        // (no allocation; one memmove per kept row after the first removal)
         let cols = self.cols;
         let mut dst = sorted[0];
         let mut it = sorted.iter().peekable();
@@ -261,7 +281,161 @@ impl Mat {
         }
         self.data.truncate(keep_rows * cols);
         self.rows = keep_rows;
-        Ok(removed)
+        Ok(())
+    }
+
+    /// Append all rows of `other` in place (an in-place [`Mat::vcat`]).
+    /// Amortized allocation-free: reserves with doubling when the backing
+    /// buffer is outgrown, so steady-state appends never reallocate.
+    pub fn push_rows(&mut self, other: &Mat) -> Result<()> {
+        ensure_shape!(
+            other.cols == self.cols || self.rows == 0,
+            "Mat::push_rows",
+            "cols {} != {}",
+            other.cols,
+            self.cols
+        );
+        if self.rows == 0 {
+            self.cols = other.cols;
+        }
+        self.reserve_total(self.data.len() + other.data.len());
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+        Ok(())
+    }
+
+    /// Reserved element capacity of the backing buffer.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Ensure the backing buffer can hold `total` elements without a
+    /// further reallocation. Grows with amortized doubling (at least 2x the
+    /// current capacity) so repeated small growths cost O(1) amortized.
+    pub fn reserve_total(&mut self, total: usize) {
+        if total > self.data.capacity() {
+            let target = total.max(self.data.capacity() * 2);
+            self.data.reserve_exact(target - self.data.len());
+        }
+    }
+
+    /// Grow to `(new_rows, new_cols)` in place, keeping existing entries in
+    /// their (row, col) positions and zero-filling the new cells. Restrides
+    /// the row-major buffer without reallocating when capacity suffices;
+    /// otherwise reserves with amortized doubling.
+    pub fn grow_inplace(&mut self, new_rows: usize, new_cols: usize) -> Result<()> {
+        ensure_shape!(
+            new_rows >= self.rows && new_cols >= self.cols,
+            "Mat::grow_inplace",
+            "({}, {}) -> ({}, {}) shrinks",
+            self.rows,
+            self.cols,
+            new_rows,
+            new_cols
+        );
+        let (old_rows, old_cols) = (self.rows, self.cols);
+        self.reserve_total(new_rows * new_cols);
+        self.data.resize(new_rows * new_cols, 0.0);
+        if new_cols > old_cols {
+            // restride back-to-front: each row's destination only overlaps
+            // sources of rows already moved
+            for r in (1..old_rows).rev() {
+                self.data
+                    .copy_within(r * old_cols..(r + 1) * old_cols, r * new_cols);
+            }
+            // zero the exposed column tails (stale pre-restride bytes)
+            for r in 0..old_rows {
+                self.data[r * new_cols + old_cols..(r + 1) * new_cols].fill(0.0);
+            }
+        }
+        self.rows = new_rows;
+        self.cols = new_cols;
+        Ok(())
+    }
+
+    /// Shrink to the leading `(new_rows, new_cols)` block in place (drops
+    /// trailing rows/cols). Never allocates; capacity is retained for later
+    /// regrowth.
+    pub fn shrink_inplace(&mut self, new_rows: usize, new_cols: usize) -> Result<()> {
+        ensure_shape!(
+            new_rows <= self.rows && new_cols <= self.cols,
+            "Mat::shrink_inplace",
+            "({}, {}) -> ({}, {}) grows",
+            self.rows,
+            self.cols,
+            new_rows,
+            new_cols
+        );
+        let old_cols = self.cols;
+        if new_cols < old_cols {
+            // forward restride: each source range sits at or after its
+            // destination, so earlier writes never clobber pending reads
+            for r in 1..new_rows {
+                self.data
+                    .copy_within(r * old_cols..r * old_cols + new_cols, r * new_cols);
+            }
+        }
+        self.data.truncate(new_rows * new_cols);
+        self.rows = new_rows;
+        self.cols = new_cols;
+        Ok(())
+    }
+
+    /// Compact to the submatrix selected by sorted, strictly-increasing
+    /// row/col index sets, in place and without allocating. Every source
+    /// element sits at or after its destination in the row-major buffer, so
+    /// a single forward gather pass is safe.
+    pub fn compact(&mut self, keep_rows: &[usize], keep_cols: &[usize]) -> Result<()> {
+        debug_assert!(keep_rows.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(keep_cols.windows(2).all(|w| w[0] < w[1]));
+        ensure_shape!(
+            keep_rows.last().is_none_or(|&r| r < self.rows)
+                && keep_cols.last().is_none_or(|&c| c < self.cols),
+            "Mat::compact",
+            "keep sets exceed shape {:?}",
+            self.shape()
+        );
+        let old_cols = self.cols;
+        let mut dst = 0usize;
+        for &r in keep_rows {
+            let base = r * old_cols;
+            for &c in keep_cols {
+                self.data[dst] = self.data[base + c];
+                dst += 1;
+            }
+        }
+        self.data.truncate(dst);
+        self.rows = keep_rows.len();
+        self.cols = keep_cols.len();
+        Ok(())
+    }
+
+    /// Reshape as an overwrite target: the logical shape becomes
+    /// `(rows, cols)` and the contents are unspecified (callers must fully
+    /// overwrite). Allocation-free once the buffer has warmed to the
+    /// workload's peak size — this is how the update workspaces are reused.
+    pub fn resize_scratch(&mut self, rows: usize, cols: usize) {
+        self.reserve_total(rows * cols);
+        self.data.resize(rows * cols, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Transposed copy written into a caller-provided matrix (reshaped as
+    /// needed; allocation-free with warm capacity).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.resize_scratch(self.cols, self.rows);
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out[(c, r)] = self[(r, c)];
+                    }
+                }
+            }
+        }
     }
 
     /// Submatrix copy `[r0..r1, c0..c1)`.
@@ -337,7 +511,16 @@ impl Mat {
 
     /// Row sums as a vector (`A e^T`).
     pub fn row_sums(&self) -> Vec<f64> {
-        (0..self.rows).map(|r| self.row(r).iter().sum()).collect()
+        let mut out = Vec::new();
+        self.row_sums_into(&mut out);
+        out
+    }
+
+    /// Row sums written into a caller-provided buffer (resized; no
+    /// allocation once its capacity is warm).
+    pub fn row_sums_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend((0..self.rows).map(|r| self.row(r).iter().sum::<f64>()));
     }
 
     /// Column sums as a vector (`e A`).
@@ -517,5 +700,126 @@ mod tests {
     fn from_vec_checks_len() {
         assert!(Mat::from_vec(2, 2, vec![0.0; 3]).is_err());
         assert!(Mat::from_vec(2, 2, vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn grow_inplace_preserves_and_zero_fills() {
+        let mut m = Mat::from_fn(3, 2, |r, c| (r * 2 + c + 1) as f64);
+        m.grow_inplace(5, 4).unwrap();
+        assert_eq!(m.shape(), (5, 4));
+        for r in 0..3 {
+            for c in 0..2 {
+                assert_eq!(m[(r, c)], (r * 2 + c + 1) as f64);
+            }
+            for c in 2..4 {
+                assert_eq!(m[(r, c)], 0.0, "tail ({r},{c})");
+            }
+        }
+        for r in 3..5 {
+            assert!(m.row(r).iter().all(|&v| v == 0.0));
+        }
+        assert!(m.grow_inplace(2, 2).is_err());
+    }
+
+    #[test]
+    fn grow_inplace_within_capacity_does_not_realloc() {
+        let mut m = Mat::zeros(2, 2);
+        m.reserve_total(100);
+        let cap = m.capacity();
+        let ptr = m.as_slice().as_ptr();
+        m.grow_inplace(6, 6).unwrap();
+        assert_eq!(m.capacity(), cap);
+        assert_eq!(m.as_slice().as_ptr(), ptr);
+    }
+
+    #[test]
+    fn reserve_total_doubles() {
+        let mut m = Mat::zeros(2, 2);
+        let c0 = m.capacity();
+        m.reserve_total(c0 + 1);
+        assert!(m.capacity() >= 2 * c0);
+    }
+
+    #[test]
+    fn shrink_inplace_keeps_leading_block() {
+        let mut m = Mat::from_fn(4, 4, |r, c| (r * 4 + c) as f64);
+        let cap = m.capacity();
+        m.shrink_inplace(2, 3).unwrap();
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.capacity(), cap, "capacity retained for regrowth");
+        assert!(m.shrink_inplace(3, 3).is_err());
+    }
+
+    #[test]
+    fn grow_shrink_roundtrip_inplace() {
+        let orig = Mat::from_fn(5, 5, |r, c| (r * 5 + c) as f64);
+        let mut m = orig.clone();
+        m.grow_inplace(8, 8).unwrap();
+        m.shrink_inplace(5, 5).unwrap();
+        assert_eq!(m, orig);
+    }
+
+    #[test]
+    fn compact_gathers_index_sets() {
+        let mut m = Mat::from_fn(5, 5, |r, c| (r * 10 + c) as f64);
+        m.compact(&[0, 2, 4], &[1, 3]).unwrap();
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.row(0), &[1.0, 3.0]);
+        assert_eq!(m.row(1), &[21.0, 23.0]);
+        assert_eq!(m.row(2), &[41.0, 43.0]);
+        assert!(m.compact(&[5], &[0]).is_err());
+    }
+
+    #[test]
+    fn compact_to_empty() {
+        let mut m = Mat::from_fn(3, 3, |_, _| 1.0);
+        m.compact(&[], &[]).unwrap();
+        assert_eq!(m.shape(), (0, 0));
+    }
+
+    #[test]
+    fn drop_rows_sorted_matches_remove_rows() {
+        let mut a = Mat::from_fn(6, 2, |r, _| r as f64);
+        let mut b = a.clone();
+        a.remove_rows(&[1, 4]).unwrap();
+        b.drop_rows_sorted(&[1, 4]).unwrap();
+        assert_eq!(a, b);
+        assert!(b.drop_rows_sorted(&[9]).is_err());
+    }
+
+    #[test]
+    fn push_rows_appends() {
+        let mut m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f64);
+        let extra = Mat::from_fn(2, 3, |r, c| (100 + r * 3 + c) as f64);
+        m.push_rows(&extra).unwrap();
+        assert_eq!(m.shape(), (4, 3));
+        assert_eq!(m.row(2), extra.row(0));
+        assert!(m.push_rows(&Mat::zeros(1, 2)).is_err());
+        let mut empty = Mat::zeros(0, 0);
+        empty.push_rows(&extra).unwrap();
+        assert_eq!(empty.shape(), (2, 3));
+    }
+
+    #[test]
+    fn resize_scratch_and_transpose_into_reuse() {
+        let mut scratch = Mat::default();
+        scratch.resize_scratch(4, 3);
+        assert_eq!(scratch.shape(), (4, 3));
+        let m = Mat::from_fn(7, 2, |r, c| (r * 2 + c) as f64);
+        m.transpose_into(&mut scratch);
+        assert_eq!(scratch.shape(), (2, 7));
+        assert_eq!(scratch, m.transpose());
+    }
+
+    #[test]
+    fn row_sums_into_reuses_buffer() {
+        let m = Mat::from_fn(3, 2, |_, _| 2.0);
+        let mut buf = Vec::with_capacity(8);
+        m.row_sums_into(&mut buf);
+        assert_eq!(buf, vec![4.0, 4.0, 4.0]);
+        m.row_sums_into(&mut buf);
+        assert_eq!(buf.len(), 3);
     }
 }

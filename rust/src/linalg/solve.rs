@@ -12,9 +12,18 @@ use crate::linalg::matrix::{dot, Mat};
 /// Cholesky factorization `A = L L^T` (lower).  Fails if a pivot is not
 /// strictly positive (A not SPD up to roundoff).
 pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let mut l = Mat::default();
+    cholesky_into(a, &mut l)?;
+    Ok(l)
+}
+
+/// [`cholesky`] writing into a caller-provided factor buffer (reshaped and
+/// zeroed; allocation-free once its capacity is warm).
+pub fn cholesky_into(a: &Mat, l: &mut Mat) -> Result<()> {
     ensure_shape!(a.is_square(), "solve::cholesky", "not square: {:?}", a.shape());
     let n = a.rows();
-    let mut l = Mat::zeros(n, n);
+    l.resize_scratch(n, n);
+    l.as_mut_slice().fill(0.0);
     for i in 0..n {
         for j in 0..=i {
             let s = dot(&l.row(i)[..j], &l.row(j)[..j]);
@@ -32,7 +41,7 @@ pub fn cholesky(a: &Mat) -> Result<Mat> {
             }
         }
     }
-    Ok(l)
+    Ok(())
 }
 
 /// Solve `L x = b` (L lower-triangular) in place.
@@ -82,22 +91,37 @@ pub fn solve_spd(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
 
 /// SPD inverse via Cholesky: solves A X = I column by column.
 pub fn spd_inverse(a: &Mat) -> Result<Mat> {
+    let mut inv = Mat::default();
+    spd_inverse_into(a, &mut inv, &mut Mat::default(), &mut Vec::new())?;
+    Ok(inv)
+}
+
+/// [`spd_inverse`] writing into caller-provided output and scratch buffers
+/// (`l` holds the Cholesky factor, `col` one solve column). Allocation-free
+/// once the buffers' capacities are warm.
+pub fn spd_inverse_into(
+    a: &Mat,
+    out: &mut Mat,
+    l: &mut Mat,
+    col: &mut Vec<f64>,
+) -> Result<()> {
     let n = a.rows();
-    let l = cholesky(a)?;
-    let mut inv = Mat::zeros(n, n);
-    let mut col = vec![0.0; n];
+    cholesky_into(a, l)?;
+    out.resize_scratch(n, n);
+    col.clear();
+    col.resize(n, 0.0);
     for j in 0..n {
         col.fill(0.0);
         col[j] = 1.0;
-        forward_sub(&l, &mut col)?;
-        backward_sub_t(&l, &mut col)?;
+        forward_sub(l, col)?;
+        backward_sub_t(l, col)?;
         for i in 0..n {
-            inv[(i, j)] = col[i];
+            out[(i, j)] = col[i];
         }
     }
     // exact-arithmetic symmetry, enforce against roundoff drift
-    inv.symmetrize();
-    Ok(inv)
+    out.symmetrize();
+    Ok(())
 }
 
 /// log(det(A)) for SPD A (via Cholesky).
@@ -215,22 +239,88 @@ pub fn inverse(a: &Mat) -> Result<Mat> {
 /// Solve a small dense system `A x = B` for matrix RHS (used for the H x H
 /// Woodbury core, H ~ 6).
 pub fn solve_mat(a: &Mat, b: &Mat) -> Result<Mat> {
+    let mut lu = a.clone();
+    let mut x = b.clone();
+    lu_solve_mat_in_place(&mut lu, &mut x)?;
+    Ok(x)
+}
+
+/// Solve `A X = B` fully in place: `a` is destroyed (overwritten by its LU
+/// factors) and `b` is overwritten with the solution. Partial pivoting with
+/// the row swaps applied to both sides as they happen, so no permutation
+/// vector is needed — the whole solve performs zero heap allocations. This
+/// is the workhorse of the in-place Woodbury/Schur updates.
+pub fn lu_solve_mat_in_place(a: &mut Mat, b: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.is_square() && a.rows() == b.rows(),
-        "solve::solve_mat",
+        "solve::lu_solve_mat_in_place",
         "a {:?}, b {:?}",
         a.shape(),
         b.shape()
     );
-    let lu = lu_decompose(a)?;
-    let mut out = Mat::zeros(b.rows(), b.cols());
-    for j in 0..b.cols() {
-        let col = lu.solve(&b.col(j))?;
-        for i in 0..b.rows() {
-            out[(i, j)] = col[i];
+    let n = a.rows();
+    let bc = b.cols();
+    for k in 0..n {
+        // pivot
+        let mut p = k;
+        let mut best = a[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = a[(i, k)].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best == 0.0 || !best.is_finite() {
+            return Err(Error::numerical(
+                "lu_solve_mat_in_place",
+                format!("singular at column {k}"),
+            ));
+        }
+        if p != k {
+            let ad = a.as_mut_slice();
+            for c in 0..n {
+                ad.swap(k * n + c, p * n + c);
+            }
+            let bd = b.as_mut_slice();
+            for c in 0..bc {
+                bd.swap(k * bc + c, p * bc + c);
+            }
+        }
+        // eliminate below the pivot, applying the same row ops to B
+        let pivot = a[(k, k)];
+        for i in (k + 1)..n {
+            let f = a[(i, k)] / pivot;
+            a[(i, k)] = f;
+            if f != 0.0 {
+                for c in (k + 1)..n {
+                    let v = a[(k, c)];
+                    a[(i, c)] -= f * v;
+                }
+                for c in 0..bc {
+                    let v = b[(k, c)];
+                    b[(i, c)] -= f * v;
+                }
+            }
         }
     }
-    Ok(out)
+    // back substitution over rows of B (contiguous row operations)
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            let f = a[(i, k)];
+            if f != 0.0 {
+                for c in 0..bc {
+                    let v = b[(k, c)];
+                    b[(i, c)] -= f * v;
+                }
+            }
+        }
+        let d = a[(i, i)];
+        for c in 0..bc {
+            b[(i, c)] /= d;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -332,6 +422,40 @@ mod tests {
         let x = solve_mat(&a, &b).unwrap();
         let rec = matmul(&a, &x).unwrap();
         assert!(rec.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn lu_solve_mat_in_place_matches_and_pivots() {
+        // a general (non-SPD) system exercising the pivoting path
+        let mut rng = Rng::new(10);
+        let a = Mat::from_fn(7, 7, |_, _| rng.gaussian());
+        let b = Mat::from_fn(7, 3, |_, _| rng.gaussian());
+        let mut lu = a.clone();
+        let mut x = b.clone();
+        lu_solve_mat_in_place(&mut lu, &mut x).unwrap();
+        let rec = matmul(&a, &x).unwrap();
+        assert!(rec.max_abs_diff(&b) < 1e-8);
+        // singular input rejected
+        let mut sing = Mat::zeros(3, 3);
+        sing[(0, 0)] = 1.0;
+        sing[(1, 1)] = 1.0;
+        let mut rhs = Mat::zeros(3, 1);
+        assert!(lu_solve_mat_in_place(&mut sing, &mut rhs).is_err());
+    }
+
+    #[test]
+    fn spd_inverse_into_reuses_buffers() {
+        let a = spd(9, 11);
+        let mut out = Mat::default();
+        let mut l = Mat::default();
+        let mut col = Vec::new();
+        spd_inverse_into(&a, &mut out, &mut l, &mut col).unwrap();
+        assert!(out.max_abs_diff(&spd_inverse(&a).unwrap()) < 1e-12);
+        // second use with a different size reshapes the same buffers
+        let b = spd(5, 12);
+        spd_inverse_into(&b, &mut out, &mut l, &mut col).unwrap();
+        let prod = matmul(&b, &out).unwrap();
+        assert!(prod.max_abs_diff(&Mat::eye(5)) < 1e-9);
     }
 
     #[test]

@@ -1,26 +1,51 @@
-//! The paper's maintained-inverse update rules.
+//! The paper's maintained-inverse update rules, as an in-place engine.
 //!
-//! * [`incdec`] — eq. (15): one-shot batched up/down-date of `S^-1` by
-//!   `|C|` additions and `|R|` removals (rank-H Woodbury, H = |C| + |R|).
-//! * [`bordered_grow`] — eq. (28): grow `Q^-1` by a block of new samples
-//!   (block bordered-inverse / Schur complement).
-//! * [`bordered_shrink`] — eq. (29): shrink `Q^-1` by removing samples.
+//! * [`incdec_into`] — eq. (15): one batched up/down-date of `S^-1` by
+//!   `|C|` additions and `|R|` removals (rank-H Woodbury, H = |C| + |R|),
+//!   written directly into the maintained buffer.
+//! * [`bordered_grow_into`] — eq. (28): grow `Q^-1` by a block of new
+//!   samples (block bordered-inverse / Schur complement), restriding the
+//!   existing buffer in place.
+//! * [`bordered_shrink_into`] — eq. (29): shrink `Q^-1` by removing any
+//!   index set, compacting the existing buffer in place.
 //!
 //! All three avoid the O(n^3) fresh inverse: `incdec` costs O(J^2 H + H^3),
 //! grow costs O(N^2 |C|), shrink costs O(N^2 |R|).
+//!
+//! # Workspace contract
+//!
+//! The `_into` variants take a workspace ([`IncDecWork`] / [`BorderWork`])
+//! holding every intermediate the update needs. The buffers are resized
+//! logically on each call but keep their backing storage, so a workspace
+//! reused across rounds stops allocating as soon as it has seen the
+//! workload's peak shapes — typically after the first round. The first
+//! call (and any call that grows past the previous peak |H|, N, or |C|)
+//! does allocate; "allocates nothing" holds only for a *warm* workspace in
+//! steady state, as asserted by `tests/alloc_count.rs`. The convenience
+//! wrappers ([`incdec`], [`bordered_grow`], [`bordered_shrink`]) construct
+//! a fresh workspace and output copy per call and are for tests and
+//! one-shot use — never for the hot path.
 
 use crate::ensure_shape;
 use crate::error::{Error, Result};
-use crate::linalg::gemm::{gemm_into, matmul, matmul_nt, matmul_tn};
+use crate::linalg::gemm::{
+    gemm_into, gemm_nt_acc_block, gemm_tn_acc, matmul_into, matmul_nt_into,
+};
 use crate::linalg::matrix::Mat;
-use crate::linalg::solve::solve_mat;
+use crate::linalg::solve::{lu_solve_mat_in_place, spd_inverse_into};
 
-/// Reusable workspace for [`incdec_into`] so the hot path allocates nothing
-/// after warm-up.
+/// Reusable workspace for [`incdec_into`]: pre-sized `Φ_H^T`, `T`, `W` and
+/// core buffers (see the module-level workspace contract).
 #[derive(Clone, Default)]
 pub struct IncDecWork {
-    t: Option<Mat>,
-    w: Option<Mat>,
+    /// Φ_H^T (H, J).
+    phi_t: Mat,
+    /// T = S^-1 Φ_H (J, H).
+    t: Mat,
+    /// diag(s) T^T, overwritten with W = core^-1 diag(s) T^T (H, J).
+    w: Mat,
+    /// I + diag(s) Φ_H^T T (H, H); destroyed by the in-place LU solve.
+    core: Mat,
 }
 
 /// Batched incremental/decremental update (paper eq. 15):
@@ -30,6 +55,9 @@ pub struct IncDecWork {
 /// with `Φ_H` of shape (J, H) and `signs[h] ∈ {+1, -1}` marking column h as
 /// incremental (+) or decremental (−); `Φ_H'` is `diag(signs) Φ_H^T`.
 /// Zero columns are exact no-ops (used by the AOT artifact to pad batches).
+///
+/// Convenience wrapper: copies `s_inv` and builds a cold workspace. The hot
+/// path is [`incdec_into`] with a reused workspace.
 pub fn incdec(s_inv: &Mat, phi_h: &Mat, signs: &[f64]) -> Result<Mat> {
     let mut out = s_inv.clone();
     let mut work = IncDecWork::default();
@@ -37,7 +65,9 @@ pub fn incdec(s_inv: &Mat, phi_h: &Mat, signs: &[f64]) -> Result<Mat> {
     Ok(out)
 }
 
-/// In-place variant of [`incdec`]: updates `s_inv` directly.
+/// In-place variant of [`incdec`]: updates `s_inv` directly, drawing every
+/// intermediate from `work` (zero heap allocations once `work` is warm).
+/// On error `s_inv` is left unmodified.
 pub fn incdec_into(
     s_inv: &mut Mat,
     phi_h: &Mat,
@@ -65,46 +95,95 @@ pub fn incdec_into(
     // T = S^-1 Φ_H  (J, H) — computed as row-dots against Φ_H^T so the
     // inner loops run over contiguous length-J slices instead of length-H
     // strided columns (≈2x on the J=253/H=6 hot path; EXPERIMENTS.md §Perf).
-    let phi_t = phi_h.transpose(); // (H, J)
-    let t = matmul_nt(s_inv, &phi_t)?;
+    phi_h.transpose_into(&mut work.phi_t); // (H, J)
+    matmul_nt_into(s_inv, &work.phi_t, &mut work.t)?;
     // core = I + diag(s) Φ_H^T T                    (H, H)
-    let pht_t = matmul_tn(phi_h, &t)?;
-    let mut core = Mat::eye(h);
-    for r in 0..h {
-        for c in 0..h {
-            core[(r, c)] += signs[r] * pht_t[(r, c)];
-        }
-    }
-    // W = core^-1 diag(s) T^T                       (H, J)
-    let mut st_t = t.transpose();
+    matmul_into(&work.phi_t, &work.t, &mut work.core)?;
     for r in 0..h {
         let s = signs[r];
         if s != 1.0 {
-            for v in st_t.row_mut(r) {
+            for v in work.core.row_mut(r) {
+                *v *= s;
+            }
+        }
+        work.core[(r, r)] += 1.0;
+    }
+    // W = core^-1 diag(s) T^T                       (H, J)
+    work.t.transpose_into(&mut work.w);
+    for r in 0..h {
+        let s = signs[r];
+        if s != 1.0 {
+            for v in work.w.row_mut(r) {
                 *v *= s;
             }
         }
     }
-    let w = solve_mat(&core, &st_t).map_err(|_| {
+    lu_solve_mat_in_place(&mut work.core, &mut work.w).map_err(|_| {
         Error::InvalidUpdate(format!(
             "Woodbury core singular: batch of {h} conflicts with current state \
              (removing samples not in the set, or |H| too large)"
         ))
     })?;
     // S'^-1 = S^-1 - T W   (rank-H correction — the L1 kernel's job on TPU)
-    gemm_into(-1.0, &t, &w, 1.0, s_inv)?;
+    gemm_into(-1.0, &work.t, &work.w, 1.0, s_inv)?;
     // exact-arithmetic symmetric for symmetric batches; fight drift
     s_inv.symmetrize();
-    work.t = Some(t);
-    work.w = Some(w);
     Ok(())
+}
+
+/// Reusable workspace for [`bordered_grow_into`] / [`bordered_shrink_into`]
+/// (see the module-level workspace contract). One `BorderWork` serves both
+/// directions, so an engine alternating grow and shrink carries a single
+/// workspace.
+#[derive(Clone, Default)]
+pub struct BorderWork {
+    /// Grow: G = -Q^-1 η (N, C).
+    g: Mat,
+    /// Grow: Schur complement Z = q_cc - η^T Q^-1 η (C, C).
+    z: Mat,
+    /// Grow: Z^-1 (C, C).
+    z_inv: Mat,
+    /// Grow: G Z^-1 (N, C).
+    gz: Mat,
+    /// Cholesky factor scratch for the Z inverse.
+    l: Mat,
+    /// Column scratch for the Z inverse.
+    col: Vec<f64>,
+    /// Shrink: sorted, deduplicated removal set.
+    rem: Vec<usize>,
+    /// Shrink: complement (kept) index set.
+    keep: Vec<usize>,
+    /// Shrink: ξ_R = Q^-1[keep, rem] (K, R).
+    xi: Mat,
+    /// Shrink: ξ_R^T, overwritten with W = θ_R^-1 ξ_R^T (R, K).
+    w: Mat,
+    /// Shrink: θ_R = Q^-1[rem, rem] (R, R); destroyed by the LU solve.
+    theta_r: Mat,
 }
 
 /// Bordered grow (paper eq. 28): given `Q^-1` (N, N), the cross-kernel block
 /// `eta` (N, C) and the new-block kernel `q_cc` (C, C) (already including
 /// the ridge on its diagonal), return the (N+C, N+C) inverse of
 /// `[[Q, eta], [eta^T, q_cc]]`.
+///
+/// Convenience wrapper over [`bordered_grow_into`] (copies the input and
+/// builds a cold workspace).
 pub fn bordered_grow(q_inv: &Mat, eta: &Mat, q_cc: &Mat) -> Result<Mat> {
+    let mut out = q_inv.clone();
+    bordered_grow_into(&mut out, eta, q_cc, &mut BorderWork::default())?;
+    Ok(out)
+}
+
+/// In-place bordered grow: restrides `q_inv`'s buffer to (N+C, N+C) —
+/// without reallocating when its reserved capacity suffices — and writes
+/// the rank-|C| top-left correction plus the new borders directly into it.
+/// Zero heap allocations once `q_inv`'s capacity and `work` are warm.
+pub fn bordered_grow_into(
+    q_inv: &mut Mat,
+    eta: &Mat,
+    q_cc: &Mat,
+    work: &mut BorderWork,
+) -> Result<()> {
     let n = q_inv.rows();
     let c = q_cc.rows();
     ensure_shape!(
@@ -115,41 +194,39 @@ pub fn bordered_grow(q_inv: &Mat, eta: &Mat, q_cc: &Mat) -> Result<Mat> {
         eta.shape(),
         q_cc.shape()
     );
+    if c == 0 {
+        return Ok(());
+    }
     // G = -Q^-1 eta          (N, C)     [paper eq. 23, matrix version]
-    let mut g = matmul(q_inv, eta)?;
-    g.scale(-1.0);
+    matmul_into(q_inv, eta, &mut work.g)?;
+    work.g.scale(-1.0);
     // Z = q_cc - eta^T Q^-1 eta = q_cc + eta^T G    (C, C)
-    let mut z = q_cc.clone();
-    let etg = matmul_tn(eta, &g)?;
-    z.axpy(1.0, &etg)?;
-    let z_inv = crate::linalg::solve::spd_inverse(&z).map_err(|_| {
-        Error::InvalidUpdate("grow block Schur complement not SPD".to_string())
-    })?;
-    // assemble [[Q^-1 + G Z^-1 G^T, G Z^-1], [Z^-1 G^T, Z^-1]]
-    let gz = matmul(&g, &z_inv)?; // (N, C)
-    let mut out = Mat::zeros(n + c, n + c);
-    // top-left
-    let gzgt = crate::linalg::gemm::matmul_nt(&gz, &g)?; // G Z^-1 G^T
+    work.z.resize_scratch(c, c);
+    work.z.as_mut_slice().copy_from_slice(q_cc.as_slice());
+    gemm_tn_acc(1.0, eta, &work.g, &mut work.z)?;
+    spd_inverse_into(&work.z, &mut work.z_inv, &mut work.l, &mut work.col).map_err(
+        |_| Error::InvalidUpdate("grow block Schur complement not SPD".to_string()),
+    )?;
+    matmul_into(&work.g, &work.z_inv, &mut work.gz)?; // G Z^-1 (N, C)
+    // restride the maintained buffer; existing entries stay in the top-left
+    q_inv.grow_inplace(n + c, n + c)?;
+    // top-left += G Z^-1 G^T (rank-|C| correction, straight into the block)
+    gemm_nt_acc_block(1.0, &work.gz, &work.g, q_inv)?;
+    // borders: [.., G Z^-1; Z^-1 G^T, Z^-1]
     for r in 0..n {
-        let o = out.row_mut(r);
-        let q = q_inv.row(r);
-        let x = gzgt.row(r);
-        for i in 0..n {
-            o[i] = q[i] + x[i];
-        }
-        for i in 0..c {
-            o[n + i] = gz[(r, i)];
-        }
+        let row = q_inv.row_mut(r);
+        row[n..n + c].copy_from_slice(work.gz.row(r));
     }
     for r in 0..c {
         for i in 0..n {
-            out[(n + r, i)] = gz[(i, r)];
+            q_inv[(n + r, i)] = work.gz[(i, r)];
         }
-        for i in 0..c {
-            out[(n + r, n + i)] = z_inv[(r, i)];
-        }
+        let row = q_inv.row_mut(n + r);
+        row[n..n + c].copy_from_slice(work.z_inv.row(r));
     }
-    Ok(out)
+    // exact-arithmetic symmetric; fight drift like the other updates
+    q_inv.symmetrize();
+    Ok(())
 }
 
 /// Bordered shrink (paper eq. 29): remove the samples at `remove_idx` from a
@@ -160,41 +237,82 @@ pub fn bordered_grow(q_inv: &Mat, eta: &Mat, q_cc: &Mat) -> Result<Mat> {
 ///
 /// Cost O(N^2 |R|).  Per §III.B, when |R| approaches the residual size a
 /// fresh inverse is cheaper — the [`crate::krr::advisor`] makes that call.
+///
+/// Convenience wrapper over [`bordered_shrink_into`] (copies the input and
+/// builds a cold workspace).
 pub fn bordered_shrink(q_inv: &Mat, remove_idx: &[usize]) -> Result<Mat> {
+    let mut out = q_inv.clone();
+    bordered_shrink_into(&mut out, remove_idx, &mut BorderWork::default())?;
+    Ok(out)
+}
+
+/// In-place bordered shrink: gathers the ξ_R/θ_R blocks into the
+/// workspace, compacts `q_inv` to the kept index set inside its own buffer
+/// (a forward gather — no reallocation, capacity retained for regrowth),
+/// then applies the rank-|R| correction directly. Zero heap allocations
+/// once `work` is warm.
+pub fn bordered_shrink_into(
+    q_inv: &mut Mat,
+    remove_idx: &[usize],
+    work: &mut BorderWork,
+) -> Result<()> {
     let n = q_inv.rows();
-    let mut rem: Vec<usize> = remove_idx.to_vec();
-    rem.sort_unstable();
-    rem.dedup();
+    work.rem.clear();
+    work.rem.extend_from_slice(remove_idx);
+    work.rem.sort_unstable();
+    work.rem.dedup();
     ensure_shape!(
-        q_inv.is_square() && rem.iter().all(|&i| i < n),
+        q_inv.is_square() && work.rem.last().is_none_or(|&i| i < n),
         "woodbury::bordered_shrink",
         "q_inv {:?}, remove {:?}",
         q_inv.shape(),
         remove_idx
     );
-    if rem.len() == n {
-        return Ok(Mat::zeros(0, 0));
+    let r = work.rem.len();
+    if r == n {
+        return q_inv.shrink_inplace(0, 0);
     }
-    if rem.is_empty() {
-        return Ok(q_inv.clone());
+    if r == 0 {
+        return Ok(());
     }
-    let keep: Vec<usize> = (0..n).filter(|i| !rem.contains(i)).collect();
-    let theta = sub_matrix(q_inv, &keep, &keep);
-    let xi = sub_matrix(q_inv, &keep, &rem); // (K, R)
-    let theta_r = sub_matrix(q_inv, &rem, &rem); // (R, R)
-    // W = theta_r^-1 xi^T  -> correction = xi W
-    let w = solve_mat(&theta_r, &xi.transpose()).map_err(|_| {
+    work.keep.clear();
+    {
+        // complement of the sorted removal set, by a single merge sweep
+        let mut next = 0usize;
+        for i in 0..n {
+            if next < r && work.rem[next] == i {
+                next += 1;
+            } else {
+                work.keep.push(i);
+            }
+        }
+    }
+    // gather the cross and removed blocks BEFORE compacting the buffer
+    sub_matrix_into(q_inv, &work.keep, &work.rem, &mut work.xi); // (K, R)
+    sub_matrix_into(q_inv, &work.rem, &work.rem, &mut work.theta_r); // (R, R)
+    work.xi.transpose_into(&mut work.w); // ξ_R^T (R, K)
+    // W = θ_R^-1 ξ_R^T (in place; θ_R destroyed)
+    lu_solve_mat_in_place(&mut work.theta_r, &mut work.w).map_err(|_| {
         Error::InvalidUpdate("shrink block theta_R singular".to_string())
     })?;
-    let mut out = theta;
-    gemm_into(-1.0, &xi, &w, 1.0, &mut out)?;
-    out.symmetrize();
-    Ok(out)
+    // compact to Θ inside the same buffer, then apply the correction
+    q_inv.compact(&work.keep, &work.keep)?;
+    gemm_into(-1.0, &work.xi, &work.w, 1.0, q_inv)?;
+    q_inv.symmetrize();
+    Ok(())
 }
 
 /// Copy a general submatrix by row/col index lists.
 pub fn sub_matrix(a: &Mat, rows: &[usize], cols: &[usize]) -> Mat {
-    let mut out = Mat::zeros(rows.len(), cols.len());
+    let mut out = Mat::default();
+    sub_matrix_into(a, rows, cols, &mut out);
+    out
+}
+
+/// [`sub_matrix`] written into a caller-provided matrix (reshaped as
+/// needed; allocation-free with warm capacity).
+pub fn sub_matrix_into(a: &Mat, rows: &[usize], cols: &[usize], out: &mut Mat) {
+    out.resize_scratch(rows.len(), cols.len());
     for (i, &r) in rows.iter().enumerate() {
         let arow = a.row(r);
         let orow = out.row_mut(i);
@@ -202,7 +320,6 @@ pub fn sub_matrix(a: &Mat, rows: &[usize], cols: &[usize]) -> Mat {
             orow[j] = arow[c];
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -332,6 +449,77 @@ mod tests {
             bordered_shrink(&q_inv, &[0, 1, 2, 3, 4]).unwrap().shape(),
             (0, 0)
         );
+    }
+
+    #[test]
+    fn incdec_into_reused_workspace_matches_oneshot() {
+        let j = 24;
+        let s = spd(j, 20, 25.0);
+        let mut live = spd_inverse(&s).unwrap();
+        let mut reference = live.clone();
+        let mut work = IncDecWork::default();
+        let mut rng = Rng::new(21);
+        for round in 0..6 {
+            let h = 2 + round % 3;
+            let phi = Mat::from_fn(j, h, |_, _| 0.2 * rng.gaussian());
+            let mut signs = vec![1.0; h];
+            if h > 1 {
+                signs[h - 1] = -1.0;
+            }
+            incdec_into(&mut live, &phi, &signs, &mut work).unwrap();
+            reference = incdec(&reference, &phi, &signs).unwrap();
+            assert!(live.max_abs_diff(&reference) < 1e-12, "round {round}");
+        }
+    }
+
+    #[test]
+    fn bordered_grow_into_reuses_buffer() {
+        let n = 12;
+        let c = 3;
+        let full = spd(n + c, 22, 18.0);
+        let q = full.block(0, n, 0, n);
+        let eta = full.block(0, n, n, n + c);
+        let qcc = full.block(n, n + c, n, n + c);
+        let mut live = spd_inverse(&q).unwrap();
+        live.reserve_total((n + c) * (n + c));
+        let ptr = live.as_slice().as_ptr();
+        let mut work = BorderWork::default();
+        bordered_grow_into(&mut live, &eta, &qcc, &mut work).unwrap();
+        assert_eq!(live.as_slice().as_ptr(), ptr, "no reallocation");
+        let want = spd_inverse(&full).unwrap();
+        assert!(live.max_abs_diff(&want) < 1e-8);
+    }
+
+    #[test]
+    fn bordered_shrink_into_compacts_in_buffer() {
+        let n = 14;
+        let full = spd(n, 23, 14.0);
+        let mut live = spd_inverse(&full).unwrap();
+        let cap = live.capacity();
+        let ptr = live.as_slice().as_ptr();
+        let mut work = BorderWork::default();
+        bordered_shrink_into(&mut live, &[1, 6, 9], &mut work).unwrap();
+        assert_eq!(live.shape(), (n - 3, n - 3));
+        assert_eq!(live.capacity(), cap, "capacity retained");
+        assert_eq!(live.as_slice().as_ptr(), ptr, "no reallocation");
+        let want = bordered_shrink(&spd_inverse(&full).unwrap(), &[1, 6, 9]).unwrap();
+        assert!(live.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn grow_shrink_alternating_shares_workspace() {
+        // one BorderWork serving both directions across rounds
+        let n = 10;
+        let full = spd(n + 2, 24, 16.0);
+        let q = full.block(0, n, 0, n);
+        let mut live = spd_inverse(&q).unwrap();
+        let mut work = BorderWork::default();
+        let eta = full.block(0, n, n, n + 2);
+        let qcc = full.block(n, n + 2, n, n + 2);
+        bordered_grow_into(&mut live, &eta, &qcc, &mut work).unwrap();
+        bordered_shrink_into(&mut live, &[n, n + 1], &mut work).unwrap();
+        let want = spd_inverse(&q).unwrap();
+        assert!(live.max_abs_diff(&want) < 1e-8);
     }
 
     #[test]

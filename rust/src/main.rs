@@ -123,6 +123,9 @@ fn cmd_serve(m: &mikrr::cli::Matches) -> Result<(), Error> {
         };
         handles.push(SensorNode::new(shard, scfg).spawn(sink.sender()));
     }
+    // all sender handles are out: seal so the run loop ends the moment the
+    // sensors finish instead of burning a final max_wait timeout
+    sink.seal();
     let t = Timer::start();
     let outcomes = coordinator.run(&mut sink, usize::MAX)?;
     let wall = t.elapsed();

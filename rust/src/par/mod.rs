@@ -10,8 +10,18 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Hard ceiling on worker threads: past this, the scoped-spawn overhead
+/// outweighs the extra cores for the matrix sizes this system runs.
+pub const MAX_THREADS: usize = 16;
+
 /// Number of worker threads to use: `MIKRR_THREADS` env override, else
-/// available parallelism, capped at 16.
+/// available parallelism — the [`MAX_THREADS`] cap applies to both, so an
+/// oversized override cannot oversubscribe the scoped-spawn pools.
+///
+/// The value is computed once and cached for the life of the process:
+/// changing `MIKRR_THREADS` after the first parallel call has no effect.
+/// Set it before touching any parallel code path (tests that need the
+/// single-threaded path set it at process start).
 pub fn num_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let c = CACHED.load(Ordering::Relaxed);
@@ -26,8 +36,8 @@ pub fn num_threads() -> usize {
             std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1)
-                .min(16)
-        });
+        })
+        .min(MAX_THREADS);
     CACHED.store(n, Ordering::Relaxed);
     n
 }
@@ -137,5 +147,14 @@ mod tests {
         parallel_for(0, 1, |_, _| panic!("must not run"));
         let v: Vec<usize> = parallel_map(0, 1, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn num_threads_capped_and_stable() {
+        // regression: the MIKRR_THREADS override used to bypass the cap
+        let n = num_threads();
+        assert!((1..=MAX_THREADS).contains(&n), "n={n}");
+        // cached: later calls return the same value
+        assert_eq!(num_threads(), n);
     }
 }

@@ -38,7 +38,10 @@ impl Batcher {
     }
 
     /// Pull the next batch from the sink.  Returns an empty vec when the
-    /// stream has gone quiet for `max_wait` with nothing pending.
+    /// stream has gone quiet for `max_wait` with nothing pending, or
+    /// immediately — flushing any partial batch — once a sealed sink's
+    /// sources have all disconnected (nothing can arrive anymore, so
+    /// waiting out the deadline would be pure latency).
     pub fn next_batch(&mut self, sink: &mut SinkNode) -> Vec<StreamEvent> {
         loop {
             let need = self.policy.max_batch - self.pending.len();
@@ -55,6 +58,10 @@ impl Batcher {
                 self.oldest = Some(Instant::now());
             }
             self.pending.extend(got);
+            if sink.is_disconnected() {
+                self.oldest = None;
+                return std::mem::take(&mut self.pending);
+            }
             let deadline_hit = self
                 .oldest
                 .map(|t0| t0.elapsed() >= self.policy.max_wait)
@@ -125,6 +132,33 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(30) });
         let batch = b.next_batch(&mut sink);
         assert_eq!(batch.len(), 3); // flushed by deadline, not size
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn disconnect_flushes_partial_batch_without_waiting() {
+        // a sealed sink whose sources finish must not make the batcher burn
+        // max_wait: the partial batch flushes as soon as disconnect is seen
+        let mut sink = SinkNode::new(8);
+        let shard = synth::ecg_like(3, 3, 3);
+        let h = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
+        sink.seal();
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(5),
+        });
+        let t0 = std::time::Instant::now();
+        let batch = b.next_batch(&mut sink);
+        assert_eq!(batch.len(), 3, "partial batch flushed on disconnect");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "next_batch waited out max_wait: {:?}",
+            t0.elapsed()
+        );
+        // stream is over: subsequent calls return empty immediately
+        let t1 = std::time::Instant::now();
+        assert!(b.next_batch(&mut sink).is_empty());
+        assert!(t1.elapsed() < Duration::from_millis(100));
         h.join().unwrap();
     }
 }

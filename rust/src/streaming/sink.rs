@@ -8,13 +8,21 @@
 
 use super::StreamEvent;
 use crate::metrics::Counters;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::time::Duration;
 
 /// The fusion-center pooling point.
 pub struct SinkNode {
     rx: Receiver<StreamEvent>,
-    tx_template: SyncSender<StreamEvent>,
+    /// The template sender handles are cloned from; dropped by [`seal`].
+    /// While it is held the channel can never disconnect, so an unsealed
+    /// sink always waits out its full receive timeout after sources finish.
+    ///
+    /// [`seal`]: SinkNode::seal
+    tx_template: Option<SyncSender<StreamEvent>>,
+    /// Set once a receive observes the channel disconnected (sealed sink,
+    /// all source handles dropped).
+    disconnected: bool,
     /// Per-source receive counts and totals.
     pub counters: Counters,
 }
@@ -24,38 +32,67 @@ impl SinkNode {
     /// (backpressure: senders block when the pool is full).
     pub fn new(capacity: usize) -> Self {
         let (tx, rx) = sync_channel(capacity.max(1));
-        Self { rx, tx_template: tx, counters: Counters::default() }
+        Self {
+            rx,
+            tx_template: Some(tx),
+            disconnected: false,
+            counters: Counters::default(),
+        }
     }
 
     /// A sender handle for one sensor node (clone per source).
+    ///
+    /// # Panics
+    /// After [`SinkNode::seal`] — handing out senders to a sealed sink
+    /// would silently reconnect a stream the owner declared finished.
     pub fn sender(&self) -> SyncSender<StreamEvent> {
-        self.tx_template.clone()
+        self.tx_template
+            .as_ref()
+            .expect("SinkNode::sender called after seal()")
+            .clone()
     }
 
-    /// Drop the sink's own sender so `recv` terminates once all sources
-    /// finish.  Call after all `sender()` handles are handed out.
+    /// Drop the sink's own template sender so the channel disconnects — and
+    /// receives return promptly — once all source handles are dropped.
+    /// Call after all `sender()` handles are handed out.
     pub fn seal(&mut self) {
-        // Replace the template with a dummy disconnected sender by swapping
-        // in a fresh channel's tx that we immediately drop the rx of — not
-        // possible with mpsc; instead we rely on `recv_deadline` users or
-        // explicit counts. Simplest correct approach: nothing to do if all
-        // users use `recv_timeout`/`drain`. Kept for API clarity.
+        self.tx_template = None;
     }
 
-    /// Blocking receive with timeout; counts the event.
+    /// Whether [`SinkNode::seal`] has been called.
+    pub fn is_sealed(&self) -> bool {
+        self.tx_template.is_none()
+    }
+
+    /// Whether the channel has disconnected (sealed + every source handle
+    /// dropped). Once true, no event can ever arrive again.
+    pub fn is_disconnected(&self) -> bool {
+        self.disconnected
+    }
+
+    /// Blocking receive with timeout; counts the event.  Returns `None`
+    /// immediately (not after the timeout) once the stream disconnects.
     pub fn recv_timeout(&mut self, timeout: Duration) -> Option<StreamEvent> {
+        if self.disconnected {
+            return None;
+        }
         match self.rx.recv_timeout(timeout) {
             Ok(ev) => {
                 self.counters.inc(&format!("source.{}", ev.source_id));
                 self.counters.inc("pooled");
                 Some(ev)
             }
-            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                self.disconnected = true;
+                None
+            }
         }
     }
 
     /// Drain up to `max` events without blocking longer than `timeout` for
-    /// the first one (subsequent reads are non-blocking).
+    /// the first one (subsequent reads are non-blocking).  Returns promptly
+    /// once the stream disconnects.
     pub fn drain(&mut self, max: usize, timeout: Duration) -> Vec<StreamEvent> {
         let mut out = Vec::new();
         if max == 0 {
@@ -70,7 +107,11 @@ impl SinkNode {
                         self.counters.inc("pooled");
                         out.push(ev);
                     }
-                    Err(_) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        self.disconnected = true;
+                        break;
+                    }
+                    Err(TryRecvError::Empty) => break,
                 }
             }
         }
@@ -120,5 +161,52 @@ mod tests {
         let mut sink = SinkNode::new(4);
         assert!(sink.recv_timeout(Duration::from_millis(10)).is_none());
         assert!(sink.drain(5, Duration::from_millis(10)).is_empty());
+    }
+
+    #[test]
+    fn sealed_sink_disconnects_promptly_after_sources_finish() {
+        let mut sink = SinkNode::new(16);
+        let shard = synth::ecg_like(10, 3, 20);
+        let h = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
+        sink.seal();
+        assert!(sink.is_sealed());
+        // consume the stream; the generous timeout must NOT be burned once
+        // the source thread exits and drops its handle
+        let t0 = std::time::Instant::now();
+        let mut got = 0;
+        loop {
+            let evs = sink.drain(32, Duration::from_secs(5));
+            if evs.is_empty() {
+                break;
+            }
+            got += evs.len();
+        }
+        h.join().unwrap();
+        assert_eq!(got, 10);
+        assert!(sink.is_disconnected());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "drain burned the timeout after disconnect: {:?}",
+            t0.elapsed()
+        );
+        // every subsequent receive is an immediate None
+        let t1 = std::time::Instant::now();
+        assert!(sink.recv_timeout(Duration::from_secs(5)).is_none());
+        assert!(t1.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    #[should_panic(expected = "after seal")]
+    fn sender_after_seal_panics() {
+        let mut sink = SinkNode::new(4);
+        sink.seal();
+        let _ = sink.sender();
+    }
+
+    #[test]
+    fn unsealed_sink_never_disconnects() {
+        let mut sink = SinkNode::new(4);
+        assert!(sink.recv_timeout(Duration::from_millis(10)).is_none());
+        assert!(!sink.is_disconnected());
     }
 }

@@ -1,0 +1,71 @@
+//! A counting global allocator for asserting allocation-freedom.
+//!
+//! The maintained-inverse engines promise zero heap allocations per
+//! steady-state `inc_dec` round (see `linalg::woodbury`'s workspace
+//! contract). That promise is only worth having if it is *measured*:
+//! binaries that want to verify it install [`CountingAlloc`] as their
+//! global allocator and diff [`count`] around the section under test.
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: mikrr::util::alloc_counter::CountingAlloc = CountingAlloc;
+//!
+//! let before = alloc_counter::count();
+//! hot_path();
+//! assert_eq!(alloc_counter::count() - before, 0);
+//! ```
+//!
+//! Counts allocation *events* (alloc / realloc / alloc_zeroed), not bytes —
+//! for a zero-allocation assertion the event count is the sharper signal.
+//! The counter is process-global and monotonic; concurrent threads all
+//! bump it, so pin `MIKRR_THREADS=1` (before any parallel call) when
+//! asserting exact zeros.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATION_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper that counts allocation events.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATION_EVENTS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATION_EVENTS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATION_EVENTS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+/// Total allocation events since process start (0 unless [`CountingAlloc`]
+/// is installed as the global allocator).
+pub fn count() -> u64 {
+    ALLOCATION_EVENTS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_is_monotonic() {
+        // the lib's test binary does not install the allocator, so we only
+        // check the counter API itself
+        let a = count();
+        let b = count();
+        assert!(b >= a);
+    }
+}

@@ -1,5 +1,8 @@
-//! Small shared utilities: PRNG, statistics helpers, formatting.
+//! Small shared utilities: PRNG, statistics helpers, formatting, and the
+//! allocation-counting allocator used to verify the zero-allocation
+//! contract of the maintained-inverse engines.
 
+pub mod alloc_counter;
 pub mod prng;
 pub mod stats;
 

@@ -1,0 +1,147 @@
+//! The zero-allocation contract, measured: steady-state `inc_dec` on every
+//! maintained-inverse engine must not touch the heap.
+//!
+//! A counting global allocator diffs allocation events around warmed-up
+//! update rounds. `MIKRR_THREADS=1` pins the single-threaded path (scoped
+//! thread spawns allocate; the contract is defined for the inline path —
+//! see `par::num_threads`'s caching note). Everything lives in ONE `#[test]`
+//! so no sibling test thread allocates concurrently during the measured
+//! sections.
+
+use mikrr::kbr::{KbrHyper, KbrModel};
+use mikrr::kernels::Kernel;
+use mikrr::krr::empirical::EmpiricalKrr;
+use mikrr::krr::intrinsic::IntrinsicKrr;
+use mikrr::krr::KrrModel;
+use mikrr::linalg::matrix::dot;
+use mikrr::linalg::Mat;
+use mikrr::util::alloc_counter::{self, CountingAlloc};
+use mikrr::util::prng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn data(n: usize, m: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f64> = rng.gaussian_vec(m);
+    let x = Mat::from_fn(n, m, |_, _| 0.5 * rng.gaussian());
+    let y: Vec<f64> = (0..n)
+        .map(|i| dot(x.row(i), &w) + 0.05 * rng.gaussian())
+        .collect();
+    (x, y)
+}
+
+/// Warm `round` up, then measure allocation events across `measured` more
+/// executions and return the total.
+fn steady_state_allocs(mut round: impl FnMut(), warmup: usize, measured: usize) -> u64 {
+    for _ in 0..warmup {
+        round();
+    }
+    let before = alloc_counter::count();
+    for _ in 0..measured {
+        round();
+    }
+    alloc_counter::count() - before
+}
+
+#[test]
+fn steady_state_inc_dec_is_allocation_free() {
+    // must run before ANY parallel code path: num_threads() caches on first
+    // use, and thread spawns would otherwise count as allocations
+    #[allow(unused_unsafe)]
+    unsafe {
+        std::env::set_var("MIKRR_THREADS", "1")
+    };
+
+    let rounds = 8usize;
+    let batch = 4usize;
+    // pre-build a pool of insertion batches so the rounds themselves only
+    // read; +4/−4 (removing the oldest rows) keeps N constant, which is the
+    // steady state the contract is about
+    let pool: Vec<(Mat, Vec<f64>)> = (0..12).map(|k| data(batch, 4, 100 + k)).collect();
+    let rem: Vec<usize> = (0..batch).collect();
+
+    // --- IntrinsicKrr (poly2, J = 15) ---
+    {
+        let (x, y) = data(40, 4, 1);
+        let mut model = IntrinsicKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+        let mut k = 0usize;
+        let allocs = steady_state_allocs(
+            || {
+                let (xc, yc) = &pool[k % pool.len()];
+                k += 1;
+                model.inc_dec(xc, yc, &rem).unwrap();
+            },
+            4,
+            rounds,
+        );
+        assert_eq!(
+            allocs, 0,
+            "IntrinsicKrr steady-state inc_dec allocated {allocs} times \
+             over {rounds} rounds"
+        );
+        assert_eq!(model.n_samples(), 40);
+    }
+
+    // --- EmpiricalKrr, poly kernel ---
+    {
+        let (x, y) = data(40, 4, 2);
+        let mut model = EmpiricalKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+        let mut k = 0usize;
+        let allocs = steady_state_allocs(
+            || {
+                let (xc, yc) = &pool[k % pool.len()];
+                k += 1;
+                model.inc_dec(xc, yc, &rem).unwrap();
+            },
+            4,
+            rounds,
+        );
+        assert_eq!(
+            allocs, 0,
+            "EmpiricalKrr (poly) steady-state inc_dec allocated {allocs} times"
+        );
+    }
+
+    // --- EmpiricalKrr, RBF kernel (exercises the Gram norm scratch) ---
+    {
+        let (x, y) = data(40, 4, 3);
+        let mut model = EmpiricalKrr::fit(&x, &y, &Kernel::rbf_radius(2.0), 0.5).unwrap();
+        let mut k = 0usize;
+        let allocs = steady_state_allocs(
+            || {
+                let (xc, yc) = &pool[k % pool.len()];
+                k += 1;
+                model.inc_dec(xc, yc, &rem).unwrap();
+            },
+            4,
+            rounds,
+        );
+        assert_eq!(
+            allocs, 0,
+            "EmpiricalKrr (rbf) steady-state inc_dec allocated {allocs} times"
+        );
+    }
+
+    // --- KbrModel (posterior update) ---
+    {
+        let (x, y) = data(30, 4, 4);
+        let mut model =
+            KbrModel::fit(&x, &y, &Kernel::poly(2, 1.0), KbrHyper::default()).unwrap();
+        let mut k = 0usize;
+        let allocs = steady_state_allocs(
+            || {
+                let (xc, yc) = &pool[k % pool.len()];
+                k += 1;
+                model.inc_dec(xc, yc, &rem).unwrap();
+            },
+            4,
+            rounds,
+        );
+        assert_eq!(
+            allocs, 0,
+            "KbrModel steady-state inc_dec allocated {allocs} times"
+        );
+        assert_eq!(model.n_samples(), 30);
+    }
+}

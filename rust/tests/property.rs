@@ -11,7 +11,10 @@ use mikrr::krr::intrinsic::IntrinsicKrr;
 use mikrr::krr::KrrModel;
 use mikrr::linalg::gemm::ger;
 use mikrr::linalg::solve::spd_inverse;
-use mikrr::linalg::woodbury::{bordered_grow, bordered_shrink, incdec, sub_matrix};
+use mikrr::linalg::woodbury::{
+    bordered_grow, bordered_grow_into, bordered_shrink, bordered_shrink_into, incdec,
+    incdec_into, sub_matrix, BorderWork, IncDecWork,
+};
 use mikrr::linalg::Mat;
 use mikrr::testutil::{assert_mat_close, assert_vec_close, random_mat, random_spd, Cases};
 use mikrr::util::prng::Rng;
@@ -232,6 +235,82 @@ fn prop_fused_round_equals_sequential_batches() {
         seq.inc_dec(&xc, &yc, &[]).unwrap();
         assert_vec_close(fused.weights(), seq.weights(), 1e-7);
     });
+}
+
+/// Long-horizon drift: ONE maintained inverse pushed through 120
+/// alternating grow / incdec / shrink rounds of the in-place engine,
+/// sharing one BorderWork + IncDecWork throughout. After every round the
+/// inverse must be exactly symmetric (each update symmetrizes); every
+/// tenth round it must still agree with a fresh inverse of the explicitly
+/// tracked matrix.
+#[test]
+fn prop_long_horizon_grow_shrink_incdec_drift() {
+    let mut rng = Rng::new(0xD0);
+    let n0 = 24;
+    // S kept explicitly (the ground truth); s_inv maintained incrementally
+    let mut s_full = random_spd(&mut rng, n0, 40.0);
+    let mut s_inv = spd_inverse(&s_full).unwrap();
+    let mut border = BorderWork::default();
+    let mut incwork = IncDecWork::default();
+    for round in 0..120 {
+        let n = s_full.rows();
+        match round % 3 {
+            0 => {
+                // grow by 2: extend S with a diagonally dominant block so
+                // the bordered system stays SPD
+                let eta = random_mat(&mut rng, n, 2, 0.2);
+                let mut qcc = random_mat(&mut rng, 2, 2, 0.2);
+                qcc.symmetrize();
+                qcc.add_diag(40.0).unwrap();
+                bordered_grow_into(&mut s_inv, &eta, &qcc, &mut border).unwrap();
+                s_full.grow_inplace(n + 2, n + 2).unwrap();
+                for r in 0..n {
+                    for c in 0..2 {
+                        s_full[(r, n + c)] = eta[(r, c)];
+                        s_full[(n + c, r)] = eta[(r, c)];
+                    }
+                }
+                for r in 0..2 {
+                    for c in 0..2 {
+                        s_full[(n + r, n + c)] = qcc[(r, c)];
+                    }
+                }
+            }
+            1 => {
+                // rank-4 incdec: +2/−2 small columns (S stays PD: the
+                // downdate norm is far below the diagonal dominance)
+                let phi = random_mat(&mut rng, n, 4, 0.15);
+                let signs = [1.0, 1.0, -1.0, -1.0];
+                incdec_into(&mut s_inv, &phi, &signs, &mut incwork).unwrap();
+                for h in 0..4 {
+                    let col = phi.col(h);
+                    ger(&mut s_full, signs[h], &col, &col).unwrap();
+                }
+            }
+            _ => {
+                // shrink by 2 random distinct indices (size returns to n0)
+                let i0 = rng.below(n);
+                let mut i1 = rng.below(n);
+                if i1 == i0 {
+                    i1 = (i1 + 1) % n;
+                }
+                let mut rem = [i0, i1];
+                rem.sort_unstable();
+                bordered_shrink_into(&mut s_inv, &rem, &mut border).unwrap();
+                let keep: Vec<usize> =
+                    (0..n).filter(|i| !rem.contains(i)).collect();
+                s_full.compact(&keep, &keep).unwrap();
+            }
+        }
+        assert_eq!(s_inv.shape(), s_full.shape(), "round {round}");
+        // exact symmetry: every in-place update ends in symmetrize()
+        let sym_err = s_inv.max_abs_diff(&s_inv.transpose());
+        assert!(sym_err < 1e-15, "round {round}: symmetry drift {sym_err:.3e}");
+        if round % 10 == 9 || round == 119 {
+            let fresh = spd_inverse(&s_full).unwrap();
+            assert_mat_close(&s_inv, &fresh, 1e-6);
+        }
+    }
 }
 
 /// The two KRR spaces agree through whole update sequences, not just fits.
