@@ -11,25 +11,36 @@
 //! * `incplace`              — the in-place maintained-inverse engine vs
 //!   the seed-equivalent allocating path (BENCH_incplace.json: round
 //!   latency p50/p99, allocations per round, speedup).
+//! * `core/*`                — the SIMD-packed compute core: J=2024 SPD
+//!   factorization (blocked vs scalar reference), symmetric Gram through
+//!   the SYRK route vs the general path, packed GEMM, blocked LU. The
+//!   blocked-vs-naive pairs feed `speedup_*` extras; a child re-run of the
+//!   same section at full thread count (`BENCH_microbench_mt.json`) feeds
+//!   the `mt_speedup_*` extras, so BENCH_microbench.json reports both the
+//!   algorithmic and the multi-threaded gains.
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
 //!
 //! Results are also written to `BENCH_microbench.json` (and the in-place
 //! engine comparison to `BENCH_incplace.json`) so the perf trajectory is
-//! tracked across PRs.
+//! tracked across PRs; every report carries an `env` block (threads,
+//! MIKRR_THREADS, build profile) for cross-run comparability.
 //!
 //! Runs single-threaded by default (exported `MIKRR_THREADS=1` unless the
 //! caller sets it): latency percentiles are stable, the allocating-vs-
 //! in-place comparison is apples to apples, and the allocations-per-round
-//! measurement reflects the engines' contract rather than scoped-thread
-//! spawns. Override by setting `MIKRR_THREADS` explicitly.
+//! measurement reflects the engines' contract rather than pool dispatch.
+//! The multi-threaded picture comes from the `core/*` child process, which
+//! runs with the override removed (all cores, capped by the pool).
 
 use mikrr::benchlib::{black_box, Bencher};
 use mikrr::kernels::Kernel;
 use mikrr::krr::intrinsic::IntrinsicKrr;
 use mikrr::krr::KrrModel;
-use mikrr::linalg::solve::spd_inverse;
+use mikrr::linalg::solve::{
+    cholesky, cholesky_naive, lu_decompose, lu_decompose_naive, spd_inverse,
+};
 use mikrr::linalg::woodbury::{bordered_shrink, incdec, incdec_into, sub_matrix, IncDecWork};
 use mikrr::linalg::Mat;
 use mikrr::runtime::HybridExec;
@@ -40,8 +51,87 @@ use mikrr::util::prng::Rng;
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
 
+/// The compute-core section: shared between the (default) single-threaded
+/// parent and the multi-threaded child re-run.
+fn core_benches(b: &mut Bencher, rng: &mut Rng) {
+    // (a) J=2024 SPD factorization (the paper's poly3 intrinsic dim):
+    // blocked right-looking Cholesky vs the scalar reference
+    if b.enabled("core/spd_factor_2024_naive") || b.enabled("core/spd_factor_2024_blocked") {
+        let spd_big = random_spd(rng, 2024, 50.0);
+        b.bench("core/spd_factor_2024_naive", || {
+            black_box(cholesky_naive(&spd_big).unwrap());
+        });
+        b.bench("core/spd_factor_2024_blocked", || {
+            black_box(cholesky(&spd_big).unwrap());
+        });
+    }
+    // (b) symmetric Gram construction: general path (cross-gram +
+    // symmetrize, the PR 1 route) vs the SYRK route
+    let x = random_mat(rng, 512, 21, 0.5);
+    for kernel in [Kernel::poly(2, 1.0), Kernel::rbf_radius(50.0)] {
+        let name = match &kernel {
+            Kernel::Poly { .. } => "poly2",
+            Kernel::Rbf { .. } => "rbf",
+            _ => "other",
+        };
+        b.bench(&format!("core/gram_sym_general_512_{name}"), || {
+            let mut k = mikrr::kernels::gram::gram(&kernel, &x, &x);
+            k.symmetrize();
+            black_box(k);
+        });
+        b.bench(&format!("core/gram_sym_syrk_512_{name}"), || {
+            black_box(mikrr::kernels::gram::gram_symmetric(&kernel, &x));
+        });
+    }
+    // packed GEMM at a cache-hostile cube
+    if b.enabled("core/gemm_512x512x512") {
+        let a = random_mat(rng, 512, 512, 1.0);
+        let c = random_mat(rng, 512, 512, 1.0);
+        b.bench("core/gemm_512x512x512", || {
+            black_box(mikrr::linalg::gemm::matmul(&a, &c).unwrap());
+        });
+    }
+    // blocked LU vs the scalar reference (general baselines / determinants)
+    if b.enabled("core/lu_factor_1024_naive") || b.enabled("core/lu_factor_1024_blocked") {
+        let g = {
+            let mut g = random_mat(rng, 1024, 1024, 1.0);
+            g.add_diag(8.0).unwrap();
+            g
+        };
+        b.bench("core/lu_factor_1024_naive", || {
+            black_box(lu_decompose_naive(&g).unwrap());
+        });
+        b.bench("core/lu_factor_1024_blocked", || {
+            black_box(lu_decompose(&g).unwrap());
+        });
+    }
+}
+
+/// Pull `"mean_s"` for a named benchmark out of one of our own
+/// `BENCH_*.json` reports (hand-rolled — the offline crate set has no
+/// serde, and the format is ours).
+fn bench_mean_from_json(text: &str, name: &str) -> Option<f64> {
+    let tag = format!("\"name\": \"{name}\"");
+    let at = text.find(&tag)?;
+    let rest = &text[at + tag.len()..];
+    let key = "\"mean_s\": ";
+    let kat = rest.find(key)?;
+    let tail = &rest[kat + key.len()..];
+    let end = tail.find([',', '}'])?;
+    tail[..end].trim().parse().ok()
+}
+
+/// First numeric value following `key` (for the env block's thread count).
+fn json_number_after(text: &str, key: &str) -> Option<f64> {
+    let at = text.find(key)?;
+    let tail = &text[at + key.len()..];
+    let end = tail.find([',', '}', '\n'])?;
+    tail[..end].trim().parse().ok()
+}
+
 fn main() {
-    if std::env::var("MIKRR_THREADS").is_err() {
+    let mt_child = std::env::var("MIKRR_BENCH_MT_CHILD").is_ok();
+    if !mt_child && std::env::var("MIKRR_THREADS").is_err() {
         // must happen before any parallel call: num_threads() caches
         #[allow(unused_unsafe)]
         unsafe {
@@ -50,6 +140,21 @@ fn main() {
     }
     let mut b = Bencher::from_args(std::env::args().skip(1));
     let mut rng = Rng::new(1);
+
+    if mt_child {
+        // child mode: the compute-core section only, at full thread count
+        core_benches(&mut b, &mut rng);
+        let extras = [("threads", mikrr::par::num_threads() as f64)];
+        if let Err(e) = b.write_json("BENCH_microbench_mt.json", &extras) {
+            eprintln!("(could not write BENCH_microbench_mt.json: {e})");
+        }
+        println!(
+            "\nmt child done ({} benchmarks, {} threads).",
+            b.results.len(),
+            mikrr::par::num_threads()
+        );
+        return;
+    }
 
     // ---- woodbury batch-size sweep (J = 253, the paper's poly2 dim) ----
     let j = 253;
@@ -224,6 +329,9 @@ fn main() {
         });
     }
 
+    // ---- the SIMD-packed compute core (ISSUE 2 acceptance gates) ----
+    core_benches(&mut b, &mut rng);
+
     // ---- machine-readable reports ----
     let mut extras: Vec<(&str, f64)> =
         vec![("threads", mikrr::par::num_threads() as f64)];
@@ -243,6 +351,84 @@ fn main() {
             mikrr::util::fmt_secs(inplace.mean()),
         );
     }
+    // blocked-vs-naive (same thread count) speedups for the compute core
+    for (key, slow, fast) in [
+        (
+            "speedup_spd_factor_2024",
+            "core/spd_factor_2024_naive",
+            "core/spd_factor_2024_blocked",
+        ),
+        (
+            "speedup_lu_factor_1024",
+            "core/lu_factor_1024_naive",
+            "core/lu_factor_1024_blocked",
+        ),
+        (
+            "speedup_gram_sym_512_poly2",
+            "core/gram_sym_general_512_poly2",
+            "core/gram_sym_syrk_512_poly2",
+        ),
+        (
+            "speedup_gram_sym_512_rbf",
+            "core/gram_sym_general_512_rbf",
+            "core/gram_sym_syrk_512_rbf",
+        ),
+    ] {
+        if let (Some(s), Some(f)) = (b.summary(slow), b.summary(fast)) {
+            let speedup = s.mean() / f.mean().max(1e-12);
+            extras.push((key, speedup));
+            println!(
+                "core: {fast} {speedup:.2}x the reference ({} -> {})",
+                mikrr::util::fmt_secs(s.mean()),
+                mikrr::util::fmt_secs(f.mean()),
+            );
+        }
+    }
+
+    // ---- multi-threaded compute-core child (BENCH_microbench_mt.json) ----
+    // gate on what actually ran: any active --filter is forwarded so the
+    // child measures the same subset
+    if b.results.iter().any(|s| s.name.starts_with("core/")) {
+        match std::env::current_exe() {
+            Ok(exe) => {
+                let mut cmd = std::process::Command::new(exe);
+                cmd.env_remove("MIKRR_THREADS")
+                    .env("MIKRR_BENCH_MT_CHILD", "1");
+                cmd.args(std::env::args().skip(1));
+                println!("\nspawning multi-threaded compute-core child...");
+                match cmd.status() {
+                    Ok(s) if s.success() => {
+                        if let Ok(text) =
+                            std::fs::read_to_string("BENCH_microbench_mt.json")
+                        {
+                            for (key, name) in [
+                                ("mt_speedup_spd_factor_2024", "core/spd_factor_2024_blocked"),
+                                ("mt_speedup_lu_factor_1024", "core/lu_factor_1024_blocked"),
+                                ("mt_speedup_gram_sym_512_rbf", "core/gram_sym_syrk_512_rbf"),
+                                ("mt_speedup_gemm_512", "core/gemm_512x512x512"),
+                            ] {
+                                if let (Some(st), Some(mt)) = (
+                                    b.summary(name).map(|s| s.mean()),
+                                    bench_mean_from_json(&text, name),
+                                ) {
+                                    let speedup = st / mt.max(1e-12);
+                                    extras.push((key, speedup));
+                                    println!("core mt: {name} {speedup:.2}x single-threaded");
+                                }
+                            }
+                            if let Some(t) = json_number_after(&text, "\"threads\": ") {
+                                extras.push(("mt_threads", t));
+                            }
+                        }
+                    }
+                    Ok(s) => eprintln!("(mt child exited with {s})"),
+                    Err(e) => eprintln!("(could not spawn mt child: {e})"),
+                }
+            }
+            Err(e) => eprintln!("(current_exe failed: {e})"),
+        }
+    }
+
     let mut inc_report = Bencher::new(mikrr::benchlib::BenchConfig::default()).quiet();
     inc_report.results = b
         .results

@@ -210,6 +210,10 @@ impl Bencher {
     /// (round latency p50/p99, allocations per round, speedups) is tracked
     /// across PRs in versioned `BENCH_*.json` files. Hand-rolled writer:
     /// the offline crate set has no serde.
+    ///
+    /// Every report carries an `env` block (worker-pool lane count, the raw
+    /// `MIKRR_THREADS` override if any, and the build profile) so entries
+    /// from different runs are comparable across the perf trajectory.
     pub fn write_json(&self, path: &str, extra: &[(&str, f64)]) -> std::io::Result<()> {
         let mut out = String::from("{\n  \"benchmarks\": [");
         for (i, s) in self.results.iter().enumerate() {
@@ -228,7 +232,24 @@ impl Bencher {
                 json_f64(s.stddev()),
             ));
         }
-        out.push_str("\n  ],\n  \"extra\": {");
+        out.push_str("\n  ],\n  \"env\": {");
+        out.push_str(&format!("\n    \"threads\": {},", crate::par::num_threads()));
+        match std::env::var("MIKRR_THREADS") {
+            Ok(v) => out.push_str(&format!(
+                "\n    \"mikrr_threads\": \"{}\",",
+                json_escape(&v)
+            )),
+            Err(_) => out.push_str("\n    \"mikrr_threads\": null,"),
+        }
+        out.push_str(&format!(
+            "\n    \"max_threads_cap\": {},",
+            crate::par::MAX_THREADS
+        ));
+        out.push_str(&format!(
+            "\n    \"profile\": \"{}\"",
+            if cfg!(debug_assertions) { "debug" } else { "release" }
+        ));
+        out.push_str("\n  },\n  \"extra\": {");
         for (i, (k, v)) in extra.iter().enumerate() {
             if i > 0 {
                 out.push(',');
@@ -399,6 +420,14 @@ mod tests {
         assert!(text.contains("\"p99_s\""));
         assert!(text.contains("\"allocs_per_round\": 0e0"));
         assert!(text.contains("\"speedup\": 2.5e0"));
+        // env block: thread count, override, build profile — the fields
+        // that make BENCH_*.json entries comparable across the trajectory
+        assert!(text.contains("\"env\""));
+        assert!(text.contains("\"threads\": "));
+        assert!(text.contains("\"mikrr_threads\""));
+        assert!(text.contains("\"max_threads_cap\""));
+        let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+        assert!(text.contains(&format!("\"profile\": \"{profile}\"")));
         std::fs::remove_file(path).ok();
     }
 }

@@ -128,7 +128,9 @@ impl KbrModel {
         })?;
         let phi = table.map(x); // (N, J)
         let j = table.j();
-        // precision = I/sigma_u^2 + Phi^T Phi / sigma_b^2
+        // precision = I/sigma_u^2 + Phi^T Phi / sigma_b^2 — SYRK on the
+        // transposed store (half the flops; the O(NJ) transpose is noise
+        // next to the O(NJ^2) product)
         let phit = phi.transpose();
         let mut prec = crate::linalg::gemm::syrk(&phit)?;
         prec.scale(1.0 / hyper.sigma_b2);
@@ -263,7 +265,9 @@ impl KbrModel {
     pub fn log_marginal_likelihood(&self) -> Result<f64> {
         // p(y|Phi) = N(0, sigma_u^2 Phi^T Phi + sigma_b^2 I)  (N-dim)
         let n = self.y.len();
-        let k = crate::linalg::gemm::matmul_nt(&self.phi, &self.phi)?; // (N,N)
+        // Phi Phi^T is symmetric: SYRK route, half the flops of the
+        // general product
+        let k = crate::linalg::gemm::syrk(&self.phi)?; // (N,N)
         let mut c = k;
         c.scale(self.hyper.sigma_u2);
         c.add_diag(self.hyper.sigma_b2)?;

@@ -5,9 +5,17 @@
 //! map), RBF through the expanded-norm identity; both tile over output
 //! blocks and parallelize over rows, mirroring the BlockSpec schedule of
 //! `python/compile/kernels/gram.py`.
+//!
+//! The **symmetric** path (`K(X, X)`) routes through
+//! [`crate::linalg::gemm::syrk_into`]: the inner products cost half the
+//! flops of the general product, and for RBF the transcendental map runs on
+//! the lower triangle only (halving the `exp` calls) before mirroring. The
+//! expanded norm `‖x‖² + ‖y‖² − 2xᵀy` is clamped at zero before `exp` on
+//! both paths: cancellation can push the squared distance of near-duplicate
+//! points a hair negative, which would otherwise inflate `exp` above 1.
 
 use crate::kernels::Kernel;
-use crate::linalg::gemm::matmul_nt_into;
+use crate::linalg::gemm::{matmul_nt_into, syrk_into};
 use crate::linalg::matrix::dot;
 use crate::linalg::Mat;
 use crate::par;
@@ -55,6 +63,8 @@ pub fn gram_into(kernel: &Kernel, x: &Mat, y: &Mat, out: &mut Mat, work: &mut Gr
                     let row =
                         unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * p), p) };
                     for (j, v) in row.iter_mut().enumerate() {
+                        // clamp: cancellation can drive the expanded norm of
+                        // near-duplicate points a hair negative
                         let d2 = (xn[i] + yn[j] - 2.0 * *v).max(0.0);
                         *v = (-gamma * d2).exp();
                     }
@@ -64,17 +74,68 @@ pub fn gram_into(kernel: &Kernel, x: &Mat, y: &Mat, out: &mut Mat, work: &mut Gr
     }
 }
 
-/// Symmetric Gram K(x, x), exploiting symmetry for the scalar map.
+/// Symmetric Gram K(x, x) via the SYRK path: half the inner-product flops,
+/// and (for RBF) half the `exp` calls of the general route.
 pub fn gram_symmetric(kernel: &Kernel, x: &Mat) -> Mat {
-    let mut k = gram(kernel, x, x);
-    k.symmetrize();
+    let mut k = Mat::default();
+    gram_symmetric_into(kernel, x, &mut k, &mut GramWork::default());
     k
 }
 
-/// [`gram_symmetric`] written into a caller-provided matrix.
+/// [`gram_symmetric`] written into a caller-provided matrix. The result is
+/// exactly symmetric by construction (the lower triangle is computed once
+/// and mirrored), so no `symmetrize` drift-control pass is needed.
 pub fn gram_symmetric_into(kernel: &Kernel, x: &Mat, out: &mut Mat, work: &mut GramWork) {
-    gram_into(kernel, x, x, out, work);
-    out.symmetrize();
+    let n = x.rows();
+    // X X^T at half the flops; exactly symmetric on return
+    syrk_into(1.0, x, 0.0, out).expect("fresh square output");
+    match *kernel {
+        Kernel::Linear => {}
+        Kernel::Poly { degree, coef0 } => {
+            // the scalar map is cheap — apply to the full (symmetric)
+            // matrix; equal inputs give bitwise-equal outputs
+            let d = degree as i32;
+            for v in out.as_mut_slice() {
+                *v = (*v + coef0).powi(d);
+            }
+        }
+        Kernel::Rbf { gamma } => {
+            // row norms are the diagonal of X X^T — copy them out before
+            // the map overwrites the diagonal
+            work.xn.clear();
+            work.xn.extend((0..n).map(|i| out[(i, i)]));
+            let xn = &work.xn;
+            let kptr = SendPtr(out.as_mut_slice().as_mut_ptr());
+            // transcendental map on the lower triangle only
+            par::parallel_for(n, 32, |lo, hi| {
+                let ptr = kptr;
+                for i in lo..hi {
+                    // SAFETY: disjoint rows per chunk.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.0.add(i * n), i + 1)
+                    };
+                    let xni = xn[i];
+                    for (j, v) in row.iter_mut().enumerate() {
+                        // same clamp as the general path (see module docs);
+                        // on the diagonal the identity is exact: d2 = 0
+                        let d2 = (xni + xn[j] - 2.0 * *v).max(0.0);
+                        *v = (-gamma * d2).exp();
+                    }
+                }
+            });
+            // mirror lower -> upper (writes strict upper, reads strict
+            // lower produced by the completed pass above)
+            par::parallel_for(n, 256, |lo, hi| {
+                let ptr = kptr;
+                for i in lo..hi {
+                    for j in i + 1..n {
+                        // SAFETY: disjoint (i, j>i) writes per chunk.
+                        unsafe { *ptr.0.add(i * n + j) = *ptr.0.add(j * n + i) };
+                    }
+                }
+            });
+        }
+    }
 }
 
 /// Cross-kernel row: k(x_query, each row of X) — the prediction hot path.
@@ -127,12 +188,73 @@ mod tests {
     }
 
     #[test]
+    fn gram_symmetric_matches_pointwise_eval() {
+        // the SYRK route against the defining formula, every kernel
+        let x = randm(21, 6, 11);
+        for kernel in [Kernel::Linear, Kernel::poly(2, 1.0), Kernel::poly(3, 1.0), Kernel::rbf_radius(2.0)] {
+            let k = gram_symmetric(&kernel, &x);
+            assert_eq!(k.shape(), (21, 21));
+            for i in 0..21 {
+                for j in 0..21 {
+                    let want = kernel.eval(x.row(i), x.row(j));
+                    assert!(
+                        (k[(i, j)] - want).abs() < 1e-10,
+                        "{kernel:?} ({i},{j}): {} vs {want}",
+                        k[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn symmetric_gram_is_symmetric_unit_diag_rbf() {
         let x = randm(19, 5, 3);
         let k = gram_symmetric(&Kernel::rbf_radius(1.0), &x);
         assert!(k.max_abs_diff(&k.transpose()) < 1e-14);
         for i in 0..19 {
             assert!((k[(i, i)] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rbf_near_duplicates_clamped_to_valid_range() {
+        // rows with large norms that are (near-)duplicates: the expanded
+        // norm ‖x‖²+‖y‖²−2xᵀy cancels catastrophically and can come out a
+        // hair negative, which without the clamp gives exp(+ε) > 1
+        let m = 9;
+        let mut x = Mat::from_fn(12, m, |r, c| 1.0e6 * ((r * m + c) as f64).sin());
+        // row 1 = exact duplicate of row 0; row 2 = near-duplicate
+        for c in 0..m {
+            x[(1, c)] = x[(0, c)];
+            x[(2, c)] = x[(0, c)] + 1e-8;
+        }
+        for kernel in [Kernel::rbf_radius(2.0), Kernel::rbf_radius(50.0)] {
+            let ks = gram_symmetric(&kernel, &x);
+            let kg = gram(&kernel, &x, &x);
+            for k in [&ks, &kg] {
+                assert!(k.is_finite(), "{kernel:?}: non-finite entries");
+                for i in 0..12 {
+                    for j in 0..12 {
+                        assert!(
+                            k[(i, j)] <= 1.0 && k[(i, j)] >= 0.0,
+                            "{kernel:?} ({i},{j}) = {} out of (0, 1]",
+                            k[(i, j)]
+                        );
+                    }
+                }
+                // exact duplicate: kernel value exactly 1 under the clamp
+                assert_eq!(k[(0, 1)], 1.0, "{kernel:?} duplicate rows");
+                assert_eq!(k[(1, 0)], 1.0, "{kernel:?} duplicate rows");
+            }
+            // near-duplicate: the true kernel value is ~1; the expanded
+            // norm carries ~1e-4 absolute cancellation noise at these
+            // magnitudes, but the clamp guarantees it stays a valid kernel
+            // value just below 1 instead of exp(+noise) > 1
+            for k in [&ks, &kg] {
+                assert!(k[(0, 2)] > 0.99, "{kernel:?}: {}", k[(0, 2)]);
+                assert!(k[(1, 2)] > 0.99, "{kernel:?}: {}", k[(1, 2)]);
+            }
         }
     }
 

@@ -209,12 +209,15 @@ impl KrrModel for EmpiricalKrr {
             // fresh inverse of the kept block is cheaper AND always valid.
             let residual = self.y.len() - r;
             if r >= residual {
-                // direct recompute path (rare; allowed to allocate)
+                // direct recompute path (rare; allowed to allocate) —
+                // symmetric Gram through the SYRK route, reusing the
+                // model's norm scratch
                 let keep: Vec<usize> = (0..self.y.len())
                     .filter(|i| !self.work.rem.contains(i))
                     .collect();
                 let xk = self.x.select_rows(&keep);
-                let mut q = self.kernel.gram_symmetric(&xk);
+                let mut q = Mat::default();
+                gram_symmetric_into(&self.kernel, &xk, &mut q, &mut self.work.gram);
                 q.add_diag(self.rho)?;
                 self.q_inv = spd_inverse(&q)?;
             } else {

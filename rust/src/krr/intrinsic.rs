@@ -93,7 +93,10 @@ impl IntrinsicKrr {
         })?;
         let phi = table.map(x); // (N, J)
         let j = table.j();
-        // S = Φ^T Φ + ρI  — syrk on the transposed store
+        // S = Φ^T Φ + ρI — SYRK on the transposed store (half the flops of
+        // the general product; the O(NJ) transpose is noise next to the
+        // O(NJ^2) product, and the blocked-parallel Cholesky behind
+        // spd_inverse takes it from there)
         let phit = phi.transpose();
         let mut s = crate::linalg::gemm::syrk(&phit)?;
         s.add_diag(rho)?;

@@ -1,20 +1,56 @@
 //! Blocked, multi-threaded dense matrix products.
 //!
-//! The hot loop is a row-major micro-kernel over a packed B panel; rows of C
-//! are distributed across threads via [`crate::par::parallel_for`].  This is
-//! the native fallback for the AOT GEMM artifacts and the engine used by all
-//! maintained-inverse updates (J up to 2024 in the paper's configs).
+//! Two engines share the row-parallel dispatch (rows of C are distributed
+//! across the [`crate::par`] worker pool):
+//!
+//! * a **packed GEMM** for large products — A and B are repacked into
+//!   contiguous MR×kc / kc×NR micro-panels (zero-padded at the edges) and
+//!   multiplied by an explicitly unrolled 4×8 register-tile micro-kernel.
+//!   The 32 accumulators fill exactly the 16-ymm AVX2 register budget, and
+//!   the portable `f64` array form lowers to two 256-bit FMAs per row on
+//!   any autovectorizing backend. Blocking is MC×KC×NC (A panel resident in
+//!   L2, B panel shared across the row sweep, C streamed);
+//! * an **axpy kernel** for small/skinny products (the rank-|H| update
+//!   algebra: k ≤ a few dozen), where packing overhead would dominate and
+//!   streaming B rows is already cache-resident.
+//!
+//! [`syrk_into`] computes symmetric rank-k products (`C = αAAᵀ + βC`) at
+//! half the flops by filling only the lower triangle (4×4 register-tiled
+//! row dots) and mirroring. Packing buffers are thread-local and reused, so
+//! steady-state calls perform no heap allocation on any path (measured
+//! before/after numbers in EXPERIMENTS.md §Perf).
+//!
+//! This is the native fallback for the AOT GEMM artifacts and the engine
+//! used by all maintained-inverse updates (J up to 2024 in the paper's
+//! configs).
 
 use crate::ensure_shape;
 use crate::error::Result;
 use crate::linalg::matrix::{dot, Mat};
 use crate::par;
+use std::cell::RefCell;
 
+/// Micro-tile rows (A panel height).
+const MR: usize = 4;
+/// Micro-tile columns (B panel width); MR×NR accumulators = 16 ymm.
+const NR: usize = 8;
 /// Cache-block sizes for the packed GEMM (tuned on this container; see
-/// EXPERIMENTS.md §Perf).
-const MC: usize = 64; // rows of A per panel
+/// EXPERIMENTS.md §Perf). MC is a multiple of MR, NC a multiple of NR.
+const MC: usize = 64; // rows of A per packed panel
 const KC: usize = 256; // depth per panel
+const NC: usize = 256; // cols of B per packed panel
 const MIN_PAR_ROWS: usize = 16;
+/// Below this flop volume (or depth) the axpy kernel wins: packing costs
+/// O(mk + kn) writes that only amortize over a large k sweep.
+const PACKED_MIN_FLOPS: usize = 1 << 21;
+const PACKED_MIN_K: usize = 32;
+
+thread_local! {
+    /// Per-thread packed-A panel (MC×KC), reused across calls.
+    static PACK_A: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread packed-B panel (KC×NC), reused across calls.
+    static PACK_B: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
 
 /// `C = A * B` (new allocation).
 pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
@@ -147,6 +183,8 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
 }
 
 /// General `C = alpha * A * B + beta * C`, blocked and parallel over C rows.
+/// Large products take the packed 4×8 micro-kernel path; small/skinny ones
+/// (the update algebra) the streaming axpy path — see the module docs.
 pub fn gemm_into(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.cols() == b.rows() && c.rows() == a.rows() && c.cols() == b.cols(),
@@ -165,62 +203,288 @@ pub fn gemm_into(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) -> Result
             c.scale(beta);
         }
     }
-    if m == 0 || n == 0 || k == 0 {
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
         return Ok(());
     }
+    let packed = k >= PACKED_MIN_K
+        && m >= MR
+        && n >= NR
+        && m.saturating_mul(n).saturating_mul(k) >= PACKED_MIN_FLOPS;
     let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
-    par::parallel_for(m, MIN_PAR_ROWS, |row_lo, row_hi| {
-        let p = cptr;
-        // panel over K for cache reuse of B rows
-        for kb in (0..k).step_by(KC) {
-            let k_hi = (kb + KC).min(k);
-            for ib in (row_lo..row_hi).step_by(MC) {
-                let i_hi = (ib + MC).min(row_hi);
-                for i in ib..i_hi {
-                    let arow = a.row(i);
-                    // SAFETY: each thread owns disjoint C rows.
-                    let crow =
-                        unsafe { std::slice::from_raw_parts_mut(p.0.add(i * n), n) };
-                    for kk in kb..k_hi {
-                        let aik = alpha * arow[kk];
-                        if aik != 0.0 {
-                            let brow = b.row(kk);
-                            // axpy: crow += aik * brow  (vectorizes)
-                            for (cv, bv) in crow.iter_mut().zip(brow) {
-                                *cv += aik * bv;
-                            }
+    if packed {
+        gemm_packed(alpha, a, b, cptr, m, n);
+    } else {
+        par::parallel_for(m, MIN_PAR_ROWS, |row_lo, row_hi| {
+            gemm_axpy_rows(alpha, a, b, cptr, n, row_lo, row_hi);
+        });
+    }
+    Ok(())
+}
+
+/// Streaming axpy kernel: `C[rows] += alpha * A[rows] * B`, KC/MC panel
+/// loop over B rows. Wins for small k where packing cannot amortize.
+fn gemm_axpy_rows(alpha: f64, a: &Mat, b: &Mat, cptr: SendSlice, n: usize, row_lo: usize, row_hi: usize) {
+    let k = a.cols();
+    for kb in (0..k).step_by(KC) {
+        let k_hi = (kb + KC).min(k);
+        for ib in (row_lo..row_hi).step_by(MC) {
+            let i_hi = (ib + MC).min(row_hi);
+            for i in ib..i_hi {
+                let arow = a.row(i);
+                // SAFETY: each thread owns disjoint C rows.
+                let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+                for kk in kb..k_hi {
+                    let aik = alpha * arow[kk];
+                    if aik != 0.0 {
+                        let brow = b.row(kk);
+                        // axpy: crow += aik * brow  (vectorizes)
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
                         }
                     }
                 }
+            }
+        }
+    }
+}
+
+/// Packed engine: `C += alpha * A * B`. The caller packs each KC×NC B
+/// panel **once** into its thread-local buffer and shares it (read-only)
+/// across a row-parallel sweep — one dispatch per panel is cheap on the
+/// persistent pool, and it avoids multiplying the packing bandwidth by the
+/// lane count. Each lane packs only its own MC×KC A blocks.
+fn gemm_packed(alpha: f64, a: &Mat, b: &Mat, cptr: SendSlice, m: usize, n: usize) {
+    let k = a.cols();
+    PACK_B.with(|pb| {
+        let mut bpack = pb.borrow_mut();
+        if bpack.len() < NC * KC {
+            bpack.resize(NC * KC, 0.0);
+        }
+        for kb in (0..k).step_by(KC) {
+            let kc = KC.min(k - kb);
+            for nb in (0..n).step_by(NC) {
+                let nc = NC.min(n - nb);
+                pack_b(b, kb, kc, nb, nc, &mut bpack[..]);
+                let bshared: &[f64] = &bpack;
+                par::parallel_for(m, MIN_PAR_ROWS, |row_lo, row_hi| {
+                    PACK_A.with(|pa| {
+                        let mut apack = pa.borrow_mut();
+                        if apack.len() < MC * KC {
+                            apack.resize(MC * KC, 0.0);
+                        }
+                        let mut ib = row_lo;
+                        while ib < row_hi {
+                            let mc = MC.min(row_hi - ib);
+                            pack_a(a, ib, mc, kb, kc, &mut apack[..]);
+                            macro_kernel(
+                                alpha, &apack[..], bshared, mc, nc, kc, cptr, n, ib, nb,
+                            );
+                            ib += MC;
+                        }
+                    });
+                });
+            }
+        }
+    });
+}
+
+/// Pack `A[ib..ib+mc, kb..kb+kc]` into MR-row micro-panels, k-major within
+/// a panel (`panel[kk*MR + r]`), zero-padding partial row panels so the
+/// micro-kernel never branches on height.
+fn pack_a(a: &Mat, ib: usize, mc: usize, kb: usize, kc: usize, apack: &mut [f64]) {
+    let mut p = 0;
+    while p < mc {
+        let pr = MR.min(mc - p);
+        let panel = &mut apack[(p / MR) * MR * kc..][..MR * kc];
+        if pr < MR {
+            panel.fill(0.0);
+        }
+        for r in 0..pr {
+            let arow = &a.row(ib + p + r)[kb..kb + kc];
+            for (kk, &v) in arow.iter().enumerate() {
+                panel[kk * MR + r] = v;
+            }
+        }
+        p += MR;
+    }
+}
+
+/// Pack `B[kb..kb+kc, nb..nb+nc]` into NR-column micro-panels, k-major
+/// within a panel (`panel[kk*NR + j]`), zero-padding partial column panels.
+fn pack_b(b: &Mat, kb: usize, kc: usize, nb: usize, nc: usize, bpack: &mut [f64]) {
+    let mut q = 0;
+    while q < nc {
+        let pn = NR.min(nc - q);
+        let panel = &mut bpack[(q / NR) * NR * kc..][..NR * kc];
+        if pn < NR {
+            panel.fill(0.0);
+        }
+        for kk in 0..kc {
+            let brow = &b.row(kb + kk)[nb + q..nb + q + pn];
+            panel[kk * NR..kk * NR + pn].copy_from_slice(brow);
+        }
+        q += NR;
+    }
+}
+
+/// The register-tile micro-kernel: a full MR×NR rank-kc product from packed
+/// panels. 32 f64 accumulators (exactly the AVX2 ymm budget); the j loop
+/// lowers to two 256-bit FMAs per row.
+#[inline(always)]
+fn micro_kernel_4x8(apanel: &[f64], bpanel: &[f64], kc: usize) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (a4, b8) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)).take(kc) {
+        for r in 0..MR {
+            let ar = a4[r];
+            for j in 0..NR {
+                acc[r][j] += ar * b8[j];
+            }
+        }
+    }
+    acc
+}
+
+/// Sweep the packed panels with the micro-kernel and accumulate
+/// `alpha * acc` into C (partial edge tiles write only their live cells).
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    alpha: f64,
+    apack: &[f64],
+    bpack: &[f64],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    cptr: SendSlice,
+    ldc: usize,
+    ib: usize,
+    nb: usize,
+) {
+    let mut p = 0;
+    while p < mc {
+        let pr = MR.min(mc - p);
+        let apanel = &apack[(p / MR) * MR * kc..][..MR * kc];
+        let mut q = 0;
+        while q < nc {
+            let pn = NR.min(nc - q);
+            let bpanel = &bpack[(q / NR) * NR * kc..][..NR * kc];
+            let acc = micro_kernel_4x8(apanel, bpanel, kc);
+            for (r, acc_row) in acc.iter().enumerate().take(pr) {
+                // SAFETY: row ib+p+r lies inside this thread's exclusive
+                // row range.
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(cptr.0.add((ib + p + r) * ldc + nb + q), pn)
+                };
+                for (cv, av) in crow.iter_mut().zip(&acc_row[..pn]) {
+                    *cv += alpha * av;
+                }
+            }
+            q += NR;
+        }
+        p += MR;
+    }
+}
+
+/// Symmetric rank-k update `C = alpha * A * A^T + beta * C` (C symmetric,
+/// fully mirrored on return) at **half the flops** of the general product:
+/// only the lower triangle is computed, with a 4×4 register-tiled row-dot
+/// kernel, then mirrored in a second parallel pass.
+///
+/// With `beta == 0` the output is reshaped (`resize_scratch`) so warm
+/// buffers are reused allocation-free; with `beta != 0` the shape must
+/// already match.
+pub fn syrk_into(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
+    let m = a.rows();
+    if beta == 0.0 {
+        c.resize_scratch(m, m);
+        c.as_mut_slice().fill(0.0);
+    } else {
+        ensure_shape!(
+            c.rows() == m && c.cols() == m,
+            "gemm::syrk_into",
+            "a {:?} -> c {:?} with beta {beta}",
+            a.shape(),
+            c.shape()
+        );
+        if beta != 1.0 {
+            c.scale(beta);
+        }
+    }
+    if m == 0 || a.cols() == 0 || alpha == 0.0 {
+        // C = beta*C already applied; mirror not needed (input symmetric or
+        // freshly zeroed)
+        return Ok(());
+    }
+    let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+    par::parallel_for(m, MIN_PAR_ROWS, |lo, hi| {
+        syrk_lower_rows(alpha, a, cptr, m, lo, hi);
+    });
+    // mirror lower -> upper: pass 2 writes only the strict upper triangle
+    // and reads only the strict lower, written in the completed pass 1
+    par::parallel_for(m, 256, |lo, hi| {
+        let p = cptr;
+        for i in lo..hi {
+            for j in i + 1..m {
+                // SAFETY: disjoint (i, j>i) writes; reads are from pass 1.
+                unsafe { *p.0.add(i * m + j) = *p.0.add(j * m + i) };
             }
         }
     });
     Ok(())
 }
 
-/// Symmetric rank-N update: `C = A * A^T` (C symmetric, computed fully).
-pub fn syrk(a: &Mat) -> Result<Mat> {
-    let m = a.rows();
-    let mut c = Mat::zeros(m, m);
-    let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
-    par::parallel_for(m, MIN_PAR_ROWS, |lo, hi| {
-        let p = cptr;
-        for i in lo..hi {
-            let ai = a.row(i);
-            for j in 0..=i {
-                let v = dot(ai, a.row(j));
-                // SAFETY: row i written only by its owner; (j,i) mirror may
-                // belong to another thread's row j — handled after the loop.
-                unsafe { *p.0.add(i * m + j) = v };
+/// Lower-triangle accumulation for rows `[lo, hi)`: 4×4 blocks of row dots
+/// sharing operand loads across the tile.
+fn syrk_lower_rows(alpha: f64, a: &Mat, cptr: SendSlice, m: usize, lo: usize, hi: usize) {
+    const BR: usize = 4;
+    let mut i0 = lo;
+    while i0 < hi {
+        let ir = BR.min(hi - i0);
+        let mut j0 = 0;
+        while j0 < i0 + ir {
+            let jr = BR.min(i0 + ir - j0);
+            let acc = syrk_dot_block(a, i0, ir, j0, jr);
+            for (r, acc_row) in acc.iter().enumerate().take(ir) {
+                let i = i0 + r;
+                for (s, acc_v) in acc_row.iter().enumerate().take(jr) {
+                    let j = j0 + s;
+                    if j <= i {
+                        // SAFETY: row i belongs to this thread's range.
+                        unsafe {
+                            *cptr.0.add(i * m + j) += alpha * acc_v;
+                        }
+                    }
+                }
+            }
+            j0 += BR;
+        }
+        i0 += BR;
+    }
+}
+
+/// 4×4 block of row dot products `A[i0+r] · A[j0+s]` (edge blocks duplicate
+/// the last live row; callers ignore the dead lanes).
+#[inline(always)]
+fn syrk_dot_block(a: &Mat, i0: usize, ir: usize, j0: usize, jr: usize) -> [[f64; 4]; 4] {
+    let k = a.cols();
+    let ai: [&[f64]; 4] = std::array::from_fn(|r| &a.row(i0 + r.min(ir - 1))[..k]);
+    let aj: [&[f64]; 4] = std::array::from_fn(|s| &a.row(j0 + s.min(jr - 1))[..k]);
+    let mut acc = [[0.0f64; 4]; 4];
+    for kk in 0..k {
+        let av: [f64; 4] = std::array::from_fn(|r| ai[r][kk]);
+        let bv: [f64; 4] = std::array::from_fn(|s| aj[s][kk]);
+        for r in 0..4 {
+            for s in 0..4 {
+                acc[r][s] += av[r] * bv[s];
             }
         }
-    });
-    // mirror lower triangle to upper
-    for i in 0..m {
-        for j in 0..i {
-            c[(j, i)] = c[(i, j)];
-        }
     }
+    acc
+}
+
+/// Symmetric rank-N update: `C = A * A^T` (new allocation, fully mirrored).
+pub fn syrk(a: &Mat) -> Result<Mat> {
+    let mut c = Mat::default();
+    syrk_into(1.0, a, 0.0, &mut c)?;
     Ok(c)
 }
 
@@ -338,6 +602,40 @@ mod tests {
     }
 
     #[test]
+    fn packed_path_matches_naive() {
+        // shapes over the packed-path thresholds, including non-multiples
+        // of MR/NR/KC that exercise zero-padded edge tiles
+        for &(m, k, n) in &[(192, 128, 96), (193, 130, 97), (68, 300, 105)] {
+            assert!(
+                k >= PACKED_MIN_K && m * n * k >= PACKED_MIN_FLOPS,
+                "({m},{k},{n}) must exercise the packed engine"
+            );
+            let a = randm(m, k, 3);
+            let b = randm(k, n, 4);
+            let got = matmul(&a, &b).unwrap();
+            let want = naive(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-8, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_alpha_beta_accumulate() {
+        let (m, k, n) = (160, 140, 112);
+        let a = randm(m, k, 5);
+        let b = randm(k, n, 6);
+        let mut c = randm(m, n, 7);
+        let c0 = c.clone();
+        gemm_into(-1.5, &a, &b, 2.0, &mut c).unwrap();
+        let want = naive(&a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let expect = 2.0 * c0[(i, j)] - 1.5 * want[(i, j)];
+                assert!((c[(i, j)] - expect).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
     fn matmul_nt_matches() {
         let a = randm(33, 21, 3);
         let b = randm(47, 21, 4);
@@ -376,6 +674,39 @@ mod tests {
         let got = syrk(&a).unwrap();
         let want = naive(&a, &a.transpose());
         assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn syrk_into_alpha_beta_and_edges() {
+        // sizes straddling the 4×4 tile boundaries
+        for &(m, k) in &[(1, 1), (4, 4), (5, 3), (37, 12), (64, 21), (130, 7)] {
+            let a = randm(m, k, 11);
+            let mut c = Mat::default();
+            syrk_into(1.0, &a, 0.0, &mut c).unwrap();
+            let want = naive(&a, &a.transpose());
+            assert!(c.max_abs_diff(&want) < 1e-9, "({m},{k})");
+            // exact symmetry by construction (mirrored, not recomputed)
+            for i in 0..m {
+                for j in 0..i {
+                    assert_eq!(c[(i, j)], c[(j, i)], "({m},{k}) at ({i},{j})");
+                }
+            }
+        }
+        // alpha/beta accumulate form
+        let a = randm(23, 9, 12);
+        let mut c = syrk(&randm(23, 5, 13)).unwrap();
+        let c0 = c.clone();
+        syrk_into(0.5, &a, 2.0, &mut c).unwrap();
+        let want = naive(&a, &a.transpose());
+        for i in 0..23 {
+            for j in 0..23 {
+                let expect = 2.0 * c0[(i, j)] + 0.5 * want[(i, j)];
+                assert!((c[(i, j)] - expect).abs() < 1e-9, "({i},{j})");
+            }
+        }
+        // beta != 0 with a mismatched shape must error
+        let mut bad = Mat::zeros(5, 5);
+        assert!(syrk_into(1.0, &a, 1.0, &mut bad).is_err());
     }
 
     #[test]
@@ -420,6 +751,8 @@ mod tests {
         let b = Mat::zeros(5, 4);
         let c = matmul(&a, &b).unwrap();
         assert_eq!(c.shape(), (0, 4));
+        let e = syrk(&Mat::zeros(0, 3)).unwrap();
+        assert_eq!(e.shape(), (0, 0));
     }
 
     #[test]

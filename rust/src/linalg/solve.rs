@@ -1,13 +1,35 @@
-//! Factorizations and solves: Cholesky (SPD), LU with partial pivoting,
-//! triangular solves, inverses, log-determinant.
+//! Factorizations and solves: blocked Cholesky (SPD), blocked LU with
+//! partial pivoting, triangular solves, inverses, log-determinant.
 //!
 //! The nonincremental baselines call [`spd_inverse`]/[`solve_spd`] on every
 //! retrain (the O(N^3)/O(J^3) cost the paper's incremental rules avoid);
-//! the incremental engines call them once at bootstrap.
+//! the incremental engines call them once at bootstrap and on periodic
+//! refactorization. Both factorizations are **right-looking blocked**
+//! variants: a small in-cache diagonal factor, a panel solve, and a
+//! trailing update that is a SYRK/GEMM panel product distributed over the
+//! [`crate::par`] worker pool — so bootstrap and baseline costs scale with
+//! cores instead of running on one (before/after numbers in EXPERIMENTS.md
+//! §Perf). The scalar reference implementations are kept as
+//! [`cholesky_naive`]/[`lu_decompose_naive`] for tests and benches.
 
 use crate::ensure_shape;
 use crate::error::{Error, Result};
 use crate::linalg::matrix::{dot, Mat};
+use crate::par;
+use std::cell::RefCell;
+
+/// Panel width for the blocked factorizations: the NB×NB diagonal block and
+/// an NB-wide panel row stay L1/L2-resident while the trailing update
+/// streams.
+const NB: usize = 64;
+/// Below this size the blocked machinery is pure overhead (the Woodbury
+/// cores are ~(|C|+|R|)² — a few dozen elements).
+const MIN_BLOCKED: usize = 96;
+
+thread_local! {
+    /// Per-thread column scratch for the parallel SPD inverse solves.
+    static SOLVE_COL: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Cholesky factorization `A = L L^T` (lower).  Fails if a pivot is not
 /// strictly positive (A not SPD up to roundoff).
@@ -17,13 +39,147 @@ pub fn cholesky(a: &Mat) -> Result<Mat> {
     Ok(l)
 }
 
-/// [`cholesky`] writing into a caller-provided factor buffer (reshaped and
-/// zeroed; allocation-free once its capacity is warm).
+/// [`cholesky`] writing into a caller-provided factor buffer (reshaped;
+/// allocation-free once its capacity is warm). Right-looking blocked: for
+/// each NB panel, factor the diagonal block in cache, solve the
+/// sub-diagonal panel rows in parallel, then apply the rank-NB trailing
+/// SYRK update in parallel over rows.
 pub fn cholesky_into(a: &Mat, l: &mut Mat) -> Result<()> {
     ensure_shape!(a.is_square(), "solve::cholesky", "not square: {:?}", a.shape());
     let n = a.rows();
     l.resize_scratch(n, n);
-    l.as_mut_slice().fill(0.0);
+    // seed L with the lower triangle of A (zero strict upper): the blocked
+    // sweep then updates in place
+    for i in 0..n {
+        let (ar, lr) = (a.row(i), l.row_mut(i));
+        lr[..=i].copy_from_slice(&ar[..=i]);
+        lr[i + 1..].fill(0.0);
+    }
+    if n < MIN_BLOCKED {
+        return chol_diag_block(l, 0, n);
+    }
+    let mut kb = 0;
+    while kb < n {
+        let nb = NB.min(n - kb);
+        chol_diag_block(l, kb, nb)?;
+        let panel_end = kb + nb;
+        if panel_end == n {
+            break;
+        }
+        // panel solve: L21 L11^T = A21 (rows panel_end..n, cols kb..panel_end).
+        // All access goes through the raw pointer: no `&Mat` may alias the
+        // buffer while another lane writes it.
+        {
+            let lptr = SendSlice(l.as_mut_slice().as_mut_ptr());
+            let rows = n - panel_end;
+            par::parallel_for(rows, 8, |lo, hi| {
+                let p = lptr;
+                for i in panel_end + lo..panel_end + hi {
+                    // SAFETY: row i is exclusively owned by this chunk; the
+                    // diagonal-block rows read below are disjoint from it
+                    // and read-only in this phase.
+                    let irow =
+                        unsafe { std::slice::from_raw_parts_mut(p.0.add(i * n + kb), nb) };
+                    for j in kb..panel_end {
+                        let jrow = unsafe {
+                            std::slice::from_raw_parts(p.0.add(j * n + kb), j - kb)
+                        };
+                        let s = dot(&irow[..j - kb], jrow);
+                        let d = unsafe { *p.0.add(j * n + j) };
+                        irow[j - kb] = (irow[j - kb] - s) / d;
+                    }
+                }
+            });
+        }
+        // trailing SYRK update: A22 -= L21 L21^T (lower triangle only),
+        // parallel over rows; reads touch only panel columns [kb, panel_end)
+        // which this phase never writes
+        {
+            let lptr = SendSlice(l.as_mut_slice().as_mut_ptr());
+            let rows = n - panel_end;
+            par::parallel_for(rows, 8, |lo, hi| {
+                trailing_syrk_rows(lptr, n, kb, panel_end, panel_end + lo, panel_end + hi);
+            });
+        }
+        kb = panel_end;
+    }
+    Ok(())
+}
+
+/// Unblocked Cholesky of the in-place diagonal block
+/// `L[off..off+nb, off..off+nb]` (which already carries all trailing
+/// updates from previous panels, so dots start at column `off`).
+fn chol_diag_block(l: &mut Mat, off: usize, nb: usize) -> Result<()> {
+    for i in off..off + nb {
+        for j in off..=i {
+            let s = dot(&l.row(i)[off..j], &l.row(j)[off..j]);
+            let v = l[(i, j)] - s;
+            if i == j {
+                if v <= 0.0 || !v.is_finite() {
+                    return Err(Error::numerical(
+                        "cholesky",
+                        format!("non-positive pivot {v:.3e} at row {i}"),
+                    ));
+                }
+                l[(i, j)] = v.sqrt();
+            } else {
+                l[(i, j)] = v / l[(j, j)];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Rank-nb trailing update rows `[lo, hi)`:
+/// `L[i][j] -= L[i][kb..pe] · L[j][kb..pe]` for `pe <= j <= i`, 2-row
+/// blocked to share the `L[j]` panel loads. Raw-pointer access only — the
+/// panel segments read here (columns `[kb, pe)`) are never written in this
+/// phase, and writes target columns `>= pe` of exclusively-owned rows.
+fn trailing_syrk_rows(lptr: SendSlice, n: usize, kb: usize, pe: usize, lo: usize, hi: usize) {
+    let p = lptr;
+    let nb = pe - kb;
+    let mut i = lo;
+    while i < hi {
+        let pair = i + 1 < hi;
+        // SAFETY: panel segments are read-only in this phase; the write
+        // targets below never overlap them (column ranges are disjoint).
+        let ri0 = unsafe { std::slice::from_raw_parts(p.0.add(i * n + kb), nb) };
+        let ri1 = if pair {
+            unsafe { std::slice::from_raw_parts(p.0.add((i + 1) * n + kb), nb) }
+        } else {
+            ri0
+        };
+        let top = if pair { i + 1 } else { i };
+        let mut j = pe;
+        while j <= top {
+            let rj = unsafe { std::slice::from_raw_parts(p.0.add(j * n + kb), nb) };
+            let mut s0 = 0.0;
+            let mut s1 = 0.0;
+            for ((&a0, &a1), &b) in ri0.iter().zip(ri1).zip(rj) {
+                s0 += a0 * b;
+                s1 += a1 * b;
+            }
+            // SAFETY: rows [lo, hi) are exclusively owned by this chunk.
+            unsafe {
+                if j <= i {
+                    *p.0.add(i * n + j) -= s0;
+                }
+                if pair && j <= i + 1 {
+                    *p.0.add((i + 1) * n + j) -= s1;
+                }
+            }
+            j += 1;
+        }
+        i += 2;
+    }
+}
+
+/// Scalar reference Cholesky (the pre-blocked implementation), kept for
+/// property tests and the before/after benches.
+pub fn cholesky_naive(a: &Mat) -> Result<Mat> {
+    ensure_shape!(a.is_square(), "solve::cholesky_naive", "not square: {:?}", a.shape());
+    let n = a.rows();
+    let mut l = Mat::zeros(n, n);
     for i in 0..n {
         for j in 0..=i {
             let s = dot(&l.row(i)[..j], &l.row(j)[..j]);
@@ -41,7 +197,7 @@ pub fn cholesky_into(a: &Mat, l: &mut Mat) -> Result<()> {
             }
         }
     }
-    Ok(())
+    Ok(l)
 }
 
 /// Solve `L x = b` (L lower-triangular) in place.
@@ -98,7 +254,13 @@ pub fn spd_inverse(a: &Mat) -> Result<Mat> {
 
 /// [`spd_inverse`] writing into caller-provided output and scratch buffers
 /// (`l` holds the Cholesky factor, `col` one solve column). Allocation-free
-/// once the buffers' capacities are warm.
+/// once the buffers' capacities are warm (the parallel path draws extra
+/// per-worker columns from thread-local scratch, likewise reused).
+///
+/// The unit-vector solves are independent per column, so large inverses
+/// distribute them over the worker pool; because `A^-1` is symmetric each
+/// solution is written as a **row** of the output (contiguous stores), and
+/// the final `symmetrize` absorbs roundoff asymmetry exactly as before.
 pub fn spd_inverse_into(
     a: &Mat,
     out: &mut Mat,
@@ -108,16 +270,39 @@ pub fn spd_inverse_into(
     let n = a.rows();
     cholesky_into(a, l)?;
     out.resize_scratch(n, n);
-    col.clear();
-    col.resize(n, 0.0);
-    for j in 0..n {
-        col.fill(0.0);
-        col[j] = 1.0;
-        forward_sub(l, col)?;
-        backward_sub_t(l, col)?;
-        for i in 0..n {
-            out[(i, j)] = col[i];
+    if par::num_threads() <= 1 || n < MIN_BLOCKED {
+        // serial path: the caller's scratch column, zero heap traffic
+        col.clear();
+        col.resize(n, 0.0);
+        for j in 0..n {
+            col.fill(0.0);
+            col[j] = 1.0;
+            forward_sub(l, col)?;
+            backward_sub_t(l, col)?;
+            out.row_mut(j).copy_from_slice(col);
         }
+    } else {
+        let optr = SendSlice(out.as_mut_slice().as_mut_ptr());
+        let lref = &*l;
+        par::parallel_for(n, 1, |lo, hi| {
+            SOLVE_COL.with(|c| {
+                let mut col = c.borrow_mut();
+                col.clear();
+                col.resize(n, 0.0);
+                for j in lo..hi {
+                    col.fill(0.0);
+                    col[j] = 1.0;
+                    // factor is triangular with positive diagonal: the
+                    // substitutions cannot fail past the shape checks
+                    let _ = forward_sub(lref, &mut col);
+                    let _ = backward_sub_t(lref, &mut col);
+                    // SAFETY: row j is exclusively owned by this chunk.
+                    let orow =
+                        unsafe { std::slice::from_raw_parts_mut(optr.0.add(j * n), n) };
+                    orow.copy_from_slice(&col);
+                }
+            });
+        });
     }
     // exact-arithmetic symmetry, enforce against roundoff drift
     out.symmetrize();
@@ -140,15 +325,138 @@ pub struct Lu {
     pub sign: f64,
 }
 
-/// Factor a general square matrix.
+/// Factor a general square matrix: right-looking blocked LU with partial
+/// pivoting. The NB-wide panel factors serially (pivot search spans the
+/// full column height), then the U12 triangular solve distributes over
+/// column stripes and the rank-NB trailing GEMM update over rows.
 pub fn lu_decompose(a: &Mat) -> Result<Lu> {
     ensure_shape!(a.is_square(), "solve::lu", "not square: {:?}", a.shape());
     let n = a.rows();
     let mut lu = a.clone();
     let mut perm: Vec<usize> = (0..n).collect();
     let mut sign = 1.0;
+    let mut kb = 0;
+    while kb < n {
+        let nb = NB.min(n - kb);
+        let panel_end = kb + nb;
+        // --- panel factorization (columns kb..panel_end, full row swaps) ---
+        for k in kb..panel_end {
+            let mut p = k;
+            let mut best = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best == 0.0 || !best.is_finite() {
+                return Err(Error::numerical("lu", format!("singular at column {k}")));
+            }
+            if p != k {
+                let d = lu.as_mut_slice();
+                for c in 0..n {
+                    d.swap(k * n + c, p * n + c);
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[(k, k)];
+            // eliminate below the pivot, touching only panel columns; the
+            // columns right of the panel are updated by the blocked phases
+            let d = lu.as_mut_slice();
+            let (head, rest) = d.split_at_mut((k + 1) * n);
+            let prow_seg = &head[k * n + k + 1..k * n + panel_end];
+            for i in (k + 1)..n {
+                let base = (i - k - 1) * n;
+                let f = rest[base + k] / pivot;
+                rest[base + k] = f;
+                if f != 0.0 {
+                    let irow = &mut rest[base + k + 1..base + panel_end];
+                    for (iv, &pv) in irow.iter_mut().zip(prow_seg) {
+                        *iv -= f * pv;
+                    }
+                }
+            }
+        }
+        if panel_end == n {
+            break;
+        }
+        // --- U12 = L11^{-1} A12: unit-lower triangular solve, parallel over
+        // column stripes (each stripe updates rows kb..panel_end in place) ---
+        {
+            let cols = n - panel_end;
+            let luptr = SendSlice(lu.as_mut_slice().as_mut_ptr());
+            par::parallel_for(cols, 64, |clo, chi| {
+                let p = luptr;
+                let (c0, c1) = (panel_end + clo, panel_end + chi);
+                for k in kb..panel_end {
+                    for i in (k + 1)..panel_end {
+                        // SAFETY: each stripe owns columns [c0, c1) of rows
+                        // kb..panel_end exclusively; the multiplier at
+                        // (i, k) lives left of every stripe (read-only in
+                        // this phase).
+                        unsafe {
+                            let f = *p.0.add(i * n + k);
+                            if f != 0.0 {
+                                for c in c0..c1 {
+                                    let kv = *p.0.add(k * n + c);
+                                    *p.0.add(i * n + c) -= f * kv;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        // --- trailing GEMM update: A22 -= L21 * U12, parallel over rows ---
+        {
+            let rows = n - panel_end;
+            let luptr = SendSlice(lu.as_mut_slice().as_mut_ptr());
+            par::parallel_for(rows, 8, |lo, hi| {
+                let p = luptr;
+                for i in panel_end + lo..panel_end + hi {
+                    // SAFETY: row i is exclusively owned by this chunk; its
+                    // multiplier segment (columns < panel_end) and the U12
+                    // panel rows read below are disjoint from the written
+                    // tail and read-only in this phase.
+                    let irow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            p.0.add(i * n + panel_end),
+                            n - panel_end,
+                        )
+                    };
+                    for k in kb..panel_end {
+                        let f = unsafe { *p.0.add(i * n + k) };
+                        if f != 0.0 {
+                            let krow = unsafe {
+                                std::slice::from_raw_parts(
+                                    p.0.add(k * n + panel_end),
+                                    n - panel_end,
+                                )
+                            };
+                            for (iv, &kv) in irow.iter_mut().zip(krow) {
+                                *iv -= f * kv;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        kb = panel_end;
+    }
+    Ok(Lu { lu, perm, sign })
+}
+
+/// Scalar reference LU (the pre-blocked implementation), kept for property
+/// tests and the before/after benches.
+pub fn lu_decompose_naive(a: &Mat) -> Result<Lu> {
+    ensure_shape!(a.is_square(), "solve::lu_naive", "not square: {:?}", a.shape());
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
     for k in 0..n {
-        // pivot
         let mut p = k;
         let mut best = lu[(k, k)].abs();
         for i in (k + 1)..n {
@@ -162,11 +470,9 @@ pub fn lu_decompose(a: &Mat) -> Result<Lu> {
             return Err(Error::numerical("lu", format!("singular at column {k}")));
         }
         if p != k {
-            // swap rows k and p
+            let d = lu.as_mut_slice();
             for c in 0..n {
-                let t = lu[(k, c)];
-                lu[(k, c)] = lu[(p, c)];
-                lu[(p, c)] = t;
+                d.swap(k * n + c, p * n + c);
             }
             perm.swap(k, p);
             sign = -sign;
@@ -176,14 +482,9 @@ pub fn lu_decompose(a: &Mat) -> Result<Lu> {
             let f = lu[(i, k)] / pivot;
             lu[(i, k)] = f;
             if f != 0.0 {
-                // row_i -= f * row_k for columns k+1..n
-                let (rk, ri) = {
-                    // split borrows: copy row k segment
-                    let rk: Vec<f64> = lu.row(k)[k + 1..].to_vec();
-                    (rk, lu.row_mut(i))
-                };
-                for (c, rkv) in rk.iter().enumerate() {
-                    ri[k + 1 + c] -= f * rkv;
+                for c in (k + 1)..n {
+                    let v = lu[(k, c)];
+                    lu[(i, c)] -= f * v;
                 }
             }
         }
@@ -249,7 +550,9 @@ pub fn solve_mat(a: &Mat, b: &Mat) -> Result<Mat> {
 /// factors) and `b` is overwritten with the solution. Partial pivoting with
 /// the row swaps applied to both sides as they happen, so no permutation
 /// vector is needed — the whole solve performs zero heap allocations. This
-/// is the workhorse of the in-place Woodbury/Schur updates.
+/// is the workhorse of the in-place Woodbury/Schur updates; the systems it
+/// sees are the (|C|+|R|)-sized update cores, far below the blocked-LU
+/// crossover, so it stays deliberately scalar.
 pub fn lu_solve_mat_in_place(a: &mut Mat, b: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.is_square() && a.rows() == b.rows(),
@@ -323,6 +626,12 @@ pub fn lu_solve_mat_in_place(a: &mut Mat, b: &mut Mat) -> Result<()> {
     Ok(())
 }
 
+/// Raw-pointer Send wrapper (disjoint writes guaranteed by the callers).
+#[derive(Clone, Copy)]
+struct SendSlice(*mut f64);
+unsafe impl Send for SendSlice {}
+unsafe impl Sync for SendSlice {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,10 +656,33 @@ mod tests {
     }
 
     #[test]
+    fn blocked_cholesky_matches_naive_across_panel_edges() {
+        // sizes below, at, and straddling the NB panel boundary, plus one
+        // with several panels and a partial tail
+        for &(n, seed) in &[(95, 2), (96, 3), (97, 4), (128, 5), (200, 6), (257, 7)] {
+            let a = spd(n, seed);
+            let got = cholesky(&a).unwrap();
+            let want = cholesky_naive(&a).unwrap();
+            assert!(
+                got.max_abs_diff(&want) < 1e-10,
+                "n={n}: blocked vs naive diff {}",
+                got.max_abs_diff(&want)
+            );
+            let rec = matmul(&got, &got.transpose()).unwrap();
+            assert!(rec.max_abs_diff(&a) < 1e-8, "n={n} reconstruction");
+        }
+    }
+
+    #[test]
     fn cholesky_rejects_indefinite() {
         let mut a = Mat::eye(3);
         a[(2, 2)] = -1.0;
         assert!(cholesky(&a).is_err());
+        assert!(cholesky_naive(&a).is_err());
+        // blocked path must reject too (indefinite leaks into a later panel)
+        let mut big = spd(150, 8);
+        big[(120, 120)] = -50.0;
+        assert!(cholesky(&big).is_err());
     }
 
     #[test]
@@ -376,6 +708,17 @@ mod tests {
     }
 
     #[test]
+    fn spd_inverse_parallel_path_matches() {
+        // size over MIN_BLOCKED so the row-parallel solves run when the
+        // pool is active (inline when MIKRR_THREADS=1 — same code result)
+        let a = spd(140, 9);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv).unwrap();
+        assert!(prod.max_abs_diff(&Mat::eye(140)) < 1e-8);
+        assert!(inv.max_abs_diff(&inv.transpose()) < 1e-12);
+    }
+
+    #[test]
     fn logdet_matches_lu_det() {
         let a = spd(10, 5);
         let ld = spd_logdet(&a).unwrap();
@@ -397,12 +740,45 @@ mod tests {
     }
 
     #[test]
+    fn blocked_lu_matches_naive_across_panel_edges() {
+        for &(n, seed) in &[(63, 10), (64, 11), (65, 12), (130, 13), (200, 14)] {
+            let mut rng = Rng::new(seed);
+            let a = Mat::from_fn(n, n, |r, c| {
+                rng.gaussian() + if r == c { 2.0 } else { 0.0 }
+            });
+            let got = lu_decompose(&a).unwrap();
+            let want = lu_decompose_naive(&a).unwrap();
+            assert_eq!(got.perm, want.perm, "n={n} permutations diverge");
+            assert_eq!(got.sign, want.sign, "n={n}");
+            assert!(
+                got.lu.max_abs_diff(&want.lu) < 1e-9,
+                "n={n}: blocked vs naive LU diff {}",
+                got.lu.max_abs_diff(&want.lu)
+            );
+            // and the factorization actually solves
+            let x_true = rng.gaussian_vec(n);
+            let b = crate::linalg::gemm::gemv(&a, &x_true).unwrap();
+            let x = got.solve(&b).unwrap();
+            for (g, w) in x.iter().zip(&x_true) {
+                assert!((g - w).abs() < 1e-6, "n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn lu_rejects_singular() {
         let mut a = Mat::zeros(3, 3);
         a[(0, 0)] = 1.0;
         a[(1, 1)] = 1.0;
         // third row all zeros -> singular
         assert!(lu_decompose(&a).is_err());
+        assert!(lu_decompose_naive(&a).is_err());
+        // blocked path: rank deficiency appearing after the first panel
+        let mut big = Mat::eye(100);
+        for c in 0..100 {
+            big[(80, c)] = big[(79, c)];
+        }
+        assert!(lu_decompose(&big).is_err());
     }
 
     #[test]

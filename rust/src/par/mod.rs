@@ -1,26 +1,50 @@
-//! Scoped data-parallel helpers over `std::thread` (no external runtime).
+//! Data-parallel helpers over a **persistent worker pool** (no external
+//! runtime).
 //!
 //! The offline crate set has no rayon/tokio, so this module provides the
 //! minimal parallel substrate the linalg kernels and the streaming pipeline
-//! need: a `parallel_for` over index ranges with static chunking, and a
-//! `parallel_map` over slices.  Threads are spawned per call via
-//! `std::thread::scope`; for the matrix sizes in this system (J up to 2024)
-//! spawn overhead is amortized by making chunks coarse, and the hot path can
-//! opt out below a work threshold.
+//! need: a [`parallel_for`] over index ranges and a [`parallel_map`] over
+//! slices.
+//!
+//! # Pool architecture
+//!
+//! Workers are spawned **once**, on the first multi-threaded call, and live
+//! for the rest of the process (`num_threads() - 1` of them; the calling
+//! thread always participates as the remaining lane). Each `parallel_for`
+//! publishes one stack-allocated job descriptor — a type-erased closure
+//! pointer plus an atomic chunk cursor — onto a shared queue, wakes the
+//! workers, claims chunks itself, then parks until every worker ticket has
+//! drained. Chunks are claimed dynamically (`fetch_add` on the cursor) so
+//! uneven bodies load-balance, and a steady-state dispatch performs no heap
+//! allocation (the queue's ring buffer is reused across calls).
+//!
+//! This replaces the per-call `std::thread::scope` spawning of earlier
+//! revisions, which cost ~100µs per call — longer than an entire small-J
+//! update round. Nested `parallel_for` from inside a worker runs inline
+//! (single lane): the pool is flat by design, which both avoids queue
+//! deadlock and keeps the thread count bounded by [`num_threads`].
+//!
+//! `MIKRR_THREADS=1` (or a single-core host) means the pool is never built
+//! and every call runs inline on the caller — the allocation-free path the
+//! engines' zero-allocation contract is measured on.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
 
-/// Hard ceiling on worker threads: past this, the scoped-spawn overhead
-/// outweighs the extra cores for the matrix sizes this system runs.
+/// Hard ceiling on pool lanes (caller + workers): past this, queue
+/// contention and memory-bandwidth saturation outweigh extra cores for the
+/// matrix sizes this system runs (J up to 2024).
 pub const MAX_THREADS: usize = 16;
 
-/// Number of worker threads to use: `MIKRR_THREADS` env override, else
+/// Number of parallel lanes to use: `MIKRR_THREADS` env override, else
 /// available parallelism — the [`MAX_THREADS`] cap applies to both, so an
-/// oversized override cannot oversubscribe the scoped-spawn pools.
+/// oversized override cannot oversubscribe the pool.
 ///
 /// The value is computed once and cached for the life of the process:
-/// changing `MIKRR_THREADS` after the first parallel call has no effect.
-/// Set it before touching any parallel code path (tests that need the
+/// changing `MIKRR_THREADS` after the first parallel call has no effect,
+/// and the worker pool (sized from this value) is never resized. Set it
+/// before touching any parallel code path (tests that need the
 /// single-threaded path set it at process start).
 pub fn num_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
@@ -42,9 +66,143 @@ pub fn num_threads() -> usize {
     n
 }
 
-/// Run `body(chunk_start, chunk_end)` in parallel over `0..n`, splitting into
-/// contiguous chunks, one per worker.  `body` must be `Sync` (it is shared).
-/// Falls back to a single inline call when `n` is small or 1 worker.
+/// Dynamic chunking granularity: chunks per lane. >1 so uneven bodies
+/// (e.g. triangular updates) load-balance; small enough that the atomic
+/// cursor is uncontended relative to chunk work.
+const CHUNKS_PER_LANE: usize = 4;
+
+/// One dispatched `parallel_for`, shared between the caller and the pool.
+/// Lives on the caller's stack for the duration of the call; the caller
+/// blocks until `pending` reaches zero, which is what makes the lifetime
+/// erasure in [`parallel_for`] sound.
+struct JobShared {
+    /// Type-erased `&body` (caller lifetime transmuted away).
+    body: *const (dyn Fn(usize, usize) + Sync),
+    /// Next unclaimed index.
+    next: AtomicUsize,
+    /// Exclusive end of the index range.
+    n: usize,
+    /// Chunk granularity for the cursor.
+    chunk: usize,
+    /// Worker tickets not yet fully processed.
+    pending: AtomicUsize,
+    /// Set when any lane's body panicked; remaining lanes stop claiming
+    /// and the caller re-panics after the tickets drain.
+    panicked: AtomicBool,
+    /// Caller to unpark when the last ticket drains.
+    caller: std::thread::Thread,
+}
+
+// SAFETY: all mutation goes through the atomics; `body` is only called
+// (never mutated) and points at a `Sync` closure.
+unsafe impl Sync for JobShared {}
+
+/// A queued reference to a [`JobShared`], sendable to workers. The pointee
+/// outlives the ticket: the publishing caller blocks until `pending` hits
+/// zero, and workers never touch the job after their decrement.
+#[derive(Clone, Copy)]
+struct Ticket(*const JobShared);
+unsafe impl Send for Ticket {}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Ticket>>,
+    available: Condvar,
+}
+
+struct Pool {
+    shared: &'static PoolShared,
+    /// Worker thread count (lanes minus the caller).
+    workers: usize,
+}
+
+thread_local! {
+    static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn in_pool_worker() -> bool {
+    IS_POOL_WORKER.with(|f| f.get())
+}
+
+/// The process-wide pool, built lazily on the first multi-threaded call.
+/// `None` when `num_threads() == 1` (no workers to spawn).
+fn pool() -> Option<&'static Pool> {
+    static POOL: OnceLock<Option<Pool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let workers = num_threads().saturating_sub(1);
+        if workers == 0 {
+            return None;
+        }
+        let shared: &'static PoolShared = Box::leak(Box::new(PoolShared {
+            queue: Mutex::new(VecDeque::with_capacity(4 * workers)),
+            available: Condvar::new(),
+        }));
+        for w in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("mikrr-worker-{w}"))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn mikrr pool worker");
+        }
+        Some(Pool { shared, workers })
+    })
+    .as_ref()
+}
+
+fn worker_loop(shared: &'static PoolShared) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let ticket = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = shared.available.wait(q).expect("pool queue poisoned");
+            }
+        };
+        // SAFETY: the publishing caller keeps the JobShared alive until
+        // `pending` reaches zero; we decrement only after the last access.
+        let job = unsafe { &*ticket.0 };
+        // Contain body panics: the worker must survive (it serves every
+        // future job) and the ticket must still drain or the caller would
+        // park forever. The caller re-raises after the drain; the original
+        // message has already gone through the panic hook to stderr.
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_chunks(job)));
+        if outcome.is_err() {
+            job.panicked.store(true, Ordering::Release);
+        }
+        // Clone the (Arc-backed) handle BEFORE the decrement: the moment
+        // `pending` hits zero the caller may return and pop its stack frame.
+        let caller = job.caller.clone();
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            caller.unpark();
+        }
+    }
+}
+
+/// Claim and run chunks until the cursor is exhausted (or another lane
+/// panicked — no point finishing a doomed job).
+fn run_chunks(job: &JobShared) {
+    // SAFETY: `body` outlives the job (see `parallel_for`).
+    let body = unsafe { &*job.body };
+    loop {
+        if job.panicked.load(Ordering::Relaxed) {
+            break;
+        }
+        let start = job.next.fetch_add(job.chunk, Ordering::Relaxed);
+        if start >= job.n {
+            break;
+        }
+        let end = (start + job.chunk).min(job.n);
+        body(start, end);
+    }
+}
+
+/// Run `body(chunk_start, chunk_end)` in parallel over `0..n`, splitting
+/// into contiguous chunks claimed dynamically by the pool workers and the
+/// calling thread. `body` must be `Sync` (it is shared). Falls back to a
+/// single inline call when `n < min_parallel`, only 1 lane is configured,
+/// or the caller is itself a pool worker (no nested parallelism).
 pub fn parallel_for<F>(n: usize, min_parallel: usize, body: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -52,24 +210,63 @@ where
     if n == 0 {
         return;
     }
-    let workers = num_threads();
-    if workers <= 1 || n < min_parallel {
+    if num_threads() <= 1 || n < min_parallel || in_pool_worker() {
         body(0, n);
         return;
     }
-    let workers = workers.min(n);
-    let chunk = n.div_ceil(workers);
-    std::thread::scope(|s| {
-        for w in 0..workers {
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let body = &body;
-            s.spawn(move || body(lo, hi));
+    let Some(pool) = pool() else {
+        body(0, n);
+        return;
+    };
+    // Never queue more tickets than there are chunks to claim.
+    let helpers = pool.workers.min(n.saturating_sub(1));
+    if helpers == 0 {
+        body(0, n);
+        return;
+    }
+    let lanes = helpers + 1;
+    let chunk = n.div_ceil(lanes * CHUNKS_PER_LANE).max(1);
+    let body_ref: &(dyn Fn(usize, usize) + Sync) = &body;
+    // SAFETY: we erase the borrow's lifetime to store it in JobShared, and
+    // re-establish soundness by blocking below until every ticket has been
+    // consumed — no worker can touch `body` after this function returns.
+    let body_erased: *const (dyn Fn(usize, usize) + Sync) =
+        unsafe { std::mem::transmute(body_ref) };
+    let job = JobShared {
+        body: body_erased,
+        next: AtomicUsize::new(0),
+        n,
+        chunk,
+        pending: AtomicUsize::new(helpers),
+        panicked: AtomicBool::new(false),
+        caller: std::thread::current(),
+    };
+    {
+        let mut q = pool.shared.queue.lock().expect("pool queue poisoned");
+        for _ in 0..helpers {
+            q.push_back(Ticket(&job));
         }
-    });
+    }
+    pool.shared.available.notify_all();
+    // The caller is a full lane: claim chunks alongside the workers. A
+    // panic here must still wait for the tickets to drain — workers hold
+    // pointers into this stack frame — so catch, drain, then re-raise.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_chunks(&job)));
+    if outcome.is_err() {
+        job.panicked.store(true, Ordering::Release);
+    }
+    // Wait for every ticket to drain. The Acquire load pairs with the
+    // workers' AcqRel decrement, making their body writes visible here.
+    // `park` can wake spuriously (or from a stale token), hence the loop.
+    while job.pending.load(Ordering::Acquire) != 0 {
+        std::thread::park();
+    }
+    if let Err(payload) = outcome {
+        std::panic::resume_unwind(payload);
+    }
+    if job.panicked.load(Ordering::Acquire) {
+        panic!("parallel_for: a worker lane panicked (original panic above)");
+    }
 }
 
 /// Parallel map over `0..n` producing a `Vec<T>`; `f(i)` must be independent
@@ -86,7 +283,7 @@ where
             let p = out_ptr; // copy the Send wrapper into the closure
             for i in lo..hi {
                 // SAFETY: chunks are disjoint index ranges, each index is
-                // written exactly once, and `out` outlives the scope.
+                // written exactly once, and `out` outlives the call.
                 unsafe { *p.0.add(i) = f(i) };
             }
         });
@@ -156,5 +353,76 @@ mod tests {
         assert!((1..=MAX_THREADS).contains(&n), "n={n}");
         // cached: later calls return the same value
         assert_eq!(num_threads(), n);
+    }
+
+    #[test]
+    fn pool_survives_many_dispatches() {
+        // the pool is persistent: thousands of small dispatches must all
+        // complete and produce exact results (exercises ticket reuse and
+        // the park/unpark handshake under churn)
+        for round in 0..2_000u64 {
+            let counter = AtomicU64::new(0);
+            parallel_for(64, 1, |lo, hi| {
+                counter.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), 64, "round {round}");
+        }
+    }
+
+    #[test]
+    fn nested_parallel_for_runs_inline_and_completes() {
+        // nested calls from pool workers must not deadlock: the inner call
+        // runs inline on whichever lane executes the outer body
+        let counter = AtomicU64::new(0);
+        parallel_for(32, 1, |lo, hi| {
+            for _ in lo..hi {
+                parallel_for(10, 1, |ilo, ihi| {
+                    counter.fetch_add((ihi - ilo) as u64, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 320);
+    }
+
+    #[test]
+    fn body_panic_propagates_and_pool_survives() {
+        // a panicking body must surface to the caller (as with the old
+        // scoped spawns) without wedging or killing the persistent pool
+        let r = std::panic::catch_unwind(|| {
+            parallel_for(1024, 1, |lo, _| {
+                if lo == 0 {
+                    panic!("deliberate test panic in parallel body");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic did not propagate");
+        // the pool must still serve jobs afterwards
+        let counter = AtomicU64::new(0);
+        parallel_for(256, 1, |lo, hi| {
+            counter.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 256);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        // multiple user threads dispatching at once: jobs interleave on the
+        // shared queue and every caller sees its own exact result
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let counter = AtomicU64::new(0);
+                    for _ in 0..200 {
+                        parallel_for(128, 1, |lo, hi| {
+                            counter.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+                        });
+                    }
+                    assert_eq!(counter.load(Ordering::Relaxed), 200 * 128, "caller {t}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }
