@@ -13,11 +13,15 @@
 //!   latency p50/p99, allocations per round, speedup).
 //! * `core/*`                — the SIMD-packed compute core: J=2024 SPD
 //!   factorization (blocked vs scalar reference), symmetric Gram through
-//!   the SYRK route vs the general path, packed GEMM, blocked LU. The
-//!   blocked-vs-naive pairs feed `speedup_*` extras; a child re-run of the
-//!   same section at full thread count (`BENCH_microbench_mt.json`) feeds
-//!   the `mt_speedup_*` extras, so BENCH_microbench.json reports both the
-//!   algorithmic and the multi-threaded gains.
+//!   the SYRK route vs the general path, packed GEMM, blocked LU, packed
+//!   NT vs the row-dot fallback (`core/gemm_nt_packed_vs_axpy`), the SYRK
+//!   macro-kernel vs the dot-tile path (`core/syrk_macro_1024`), and
+//!   blocked TRSM vs per-column substitution
+//!   (`core/trsm_blocked_vs_scalar`). The blocked-vs-naive pairs feed
+//!   `speedup_*` extras; a child re-run of the same section at full thread
+//!   count (`BENCH_microbench_mt.json`) feeds the `mt_speedup_*` extras,
+//!   so BENCH_microbench.json reports both the algorithmic and the
+//!   multi-threaded gains.
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
@@ -103,6 +107,62 @@ fn core_benches(b: &mut Bencher, rng: &mut Rng) {
         });
         b.bench("core/lu_factor_1024_blocked", || {
             black_box(lu_decompose(&g).unwrap());
+        });
+    }
+    // (c) NT product over the dispatch crossover: the row-dot fallback vs
+    // the packed transpose-aware engine (same shape, same thread count)
+    if b.enabled("core/gemm_nt_packed_vs_axpy") {
+        use mikrr::linalg::gemm::{matmul_nt_dots_into, matmul_nt_into};
+        let a = random_mat(rng, 384, 512, 0.5);
+        let bt = random_mat(rng, 320, 512, 0.5);
+        let mut c = Mat::default();
+        b.bench("core/gemm_nt_packed_vs_axpy/axpy_384x320_k512", || {
+            matmul_nt_dots_into(&a, &bt, &mut c).unwrap();
+            black_box(&c);
+        });
+        b.bench("core/gemm_nt_packed_vs_axpy/packed_384x320_k512", || {
+            matmul_nt_into(&a, &bt, &mut c).unwrap();
+            black_box(&c);
+        });
+    }
+    // (d) SYRK macro-kernel vs the 4×4 dot-tile path at a Gram-build shape
+    if b.enabled("core/syrk_macro_1024") {
+        use mikrr::linalg::gemm::{syrk_into, syrk_tiled_into};
+        let a = random_mat(rng, 1024, 192, 0.5);
+        let mut c = Mat::default();
+        b.bench("core/syrk_macro_1024/tiled", || {
+            syrk_tiled_into(1.0, &a, 0.0, &mut c).unwrap();
+            black_box(&c);
+        });
+        b.bench("core/syrk_macro_1024/macro", || {
+            syrk_into(1.0, &a, 0.0, &mut c).unwrap();
+            black_box(&c);
+        });
+    }
+    // (e) blocked TRSM vs per-column scalar substitution (the SPD-inverse
+    // inner loop before/after this PR)
+    if b.enabled("core/trsm_blocked_vs_scalar") {
+        use mikrr::linalg::gemm::trsm_lower_into;
+        use mikrr::linalg::solve::forward_sub;
+        let spd = random_spd(rng, 768, 50.0);
+        let l = cholesky(&spd).unwrap();
+        let b0 = random_mat(rng, 768, 768, 0.5);
+        let mut col = vec![0.0; 768];
+        b.bench("core/trsm_blocked_vs_scalar/scalar_768", || {
+            for j in 0..768 {
+                for (i, c) in col.iter_mut().enumerate() {
+                    *c = b0[(i, j)];
+                }
+                forward_sub(&l, &mut col).unwrap();
+            }
+            black_box(&col);
+        });
+        let mut x = Mat::default();
+        b.bench("core/trsm_blocked_vs_scalar/blocked_768", || {
+            x.resize_scratch(768, 768);
+            x.as_mut_slice().copy_from_slice(b0.as_slice());
+            trsm_lower_into(&l, false, &mut x).unwrap();
+            black_box(&x);
         });
     }
 }
@@ -373,6 +433,21 @@ fn main() {
             "core/gram_sym_general_512_rbf",
             "core/gram_sym_syrk_512_rbf",
         ),
+        (
+            "speedup_gemm_nt_packed",
+            "core/gemm_nt_packed_vs_axpy/axpy_384x320_k512",
+            "core/gemm_nt_packed_vs_axpy/packed_384x320_k512",
+        ),
+        (
+            "speedup_syrk_macro_1024",
+            "core/syrk_macro_1024/tiled",
+            "core/syrk_macro_1024/macro",
+        ),
+        (
+            "speedup_trsm_blocked",
+            "core/trsm_blocked_vs_scalar/scalar_768",
+            "core/trsm_blocked_vs_scalar/blocked_768",
+        ),
     ] {
         if let (Some(s), Some(f)) = (b.summary(slow), b.summary(fast)) {
             let speedup = s.mean() / f.mean().max(1e-12);
@@ -406,6 +481,15 @@ fn main() {
                                 ("mt_speedup_lu_factor_1024", "core/lu_factor_1024_blocked"),
                                 ("mt_speedup_gram_sym_512_rbf", "core/gram_sym_syrk_512_rbf"),
                                 ("mt_speedup_gemm_512", "core/gemm_512x512x512"),
+                                (
+                                    "mt_speedup_gemm_nt_packed",
+                                    "core/gemm_nt_packed_vs_axpy/packed_384x320_k512",
+                                ),
+                                ("mt_speedup_syrk_macro_1024", "core/syrk_macro_1024/macro"),
+                                (
+                                    "mt_speedup_trsm_blocked",
+                                    "core/trsm_blocked_vs_scalar/blocked_768",
+                                ),
                             ] {
                                 if let (Some(st), Some(mt)) = (
                                     b.summary(name).map(|s| s.mean()),

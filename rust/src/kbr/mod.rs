@@ -128,12 +128,11 @@ impl KbrModel {
         })?;
         let phi = table.map(x); // (N, J)
         let j = table.j();
-        // precision = I/sigma_u^2 + Phi^T Phi / sigma_b^2 — SYRK on the
-        // transposed store (half the flops; the O(NJ) transpose is noise
-        // next to the O(NJ^2) product)
-        let phit = phi.transpose();
-        let mut prec = crate::linalg::gemm::syrk(&phit)?;
-        prec.scale(1.0 / hyper.sigma_b2);
+        // precision = I/sigma_u^2 + Phi^T Phi / sigma_b^2 — transpose-side
+        // SYRK straight off the row-major store (half the flops, no
+        // materialized Phi^T; the noise scale folds into alpha)
+        let mut prec = Mat::default();
+        crate::linalg::gemm::syrk_t_into(1.0 / hyper.sigma_b2, &phi, 0.0, &mut prec)?;
         prec.add_diag(1.0 / hyper.sigma_u2)?;
         let cov = spd_inverse(&prec)?;
         let mut py = vec![0.0; j];

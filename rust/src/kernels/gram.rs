@@ -4,7 +4,11 @@
 //! Poly/linear kernels go through the GEMM path (`X Y^T` then the scalar
 //! map), RBF through the expanded-norm identity; both tile over output
 //! blocks and parallelize over rows, mirroring the BlockSpec schedule of
-//! `python/compile/kernels/gram.py`.
+//! `python/compile/kernels/gram.py`. The cross-Gram `X Y^T` rides the
+//! shape-adaptive dispatch in [`crate::linalg::gemm::dispatch`]: typical
+//! sensor blocks (feature dim M ≤ a few dozen) stream on the row-dot
+//! kernel, while wide-feature datasets (M past the crossover) pack and run
+//! the 4×8 micro-kernel — no tuning at this call site.
 //!
 //! The **symmetric** path (`K(X, X)`) routes through
 //! [`crate::linalg::gemm::syrk_into`]: the inner products cost half the

@@ -15,7 +15,7 @@ use crate::kernels::gram::{gram_into, gram_symmetric_into, GramWork};
 use crate::kernels::Kernel;
 use crate::linalg::gemm::{gemv, gemv_into};
 use crate::linalg::matrix::dot;
-use crate::linalg::solve::spd_inverse;
+use crate::linalg::solve::{spd_inverse, spd_inverse_into};
 use crate::linalg::woodbury::{bordered_grow_into, bordered_shrink_into, BorderWork};
 use crate::linalg::Mat;
 use crate::{ensure_shape, krr::KrrModel};
@@ -39,6 +39,12 @@ struct EmpiricalWork {
     v: Vec<f64>,
     /// Head refresh: Q^-1 y.
     qy: Vec<f64>,
+    /// §III.B direct-recompute scratch: the kept-block Gram.
+    q_kept: Mat,
+    /// §III.B direct-recompute scratch: Cholesky factor for the inverse.
+    l: Mat,
+    /// §III.B direct-recompute scratch: one solve column.
+    col: Vec<f64>,
 }
 
 /// Empirical-space incremental KRR engine.
@@ -209,17 +215,28 @@ impl KrrModel for EmpiricalKrr {
             // fresh inverse of the kept block is cheaper AND always valid.
             let residual = self.y.len() - r;
             if r >= residual {
-                // direct recompute path (rare; allowed to allocate) —
-                // symmetric Gram through the SYRK route, reusing the
-                // model's norm scratch
+                // direct recompute path (rare; the row gather may allocate)
+                // — symmetric Gram through the SYRK route and an in-place
+                // fresh inverse, reusing the model's scratch buffers; the
+                // maintained buffer keeps its reserved capacity for the
+                // regrowth that follows
                 let keep: Vec<usize> = (0..self.y.len())
                     .filter(|i| !self.work.rem.contains(i))
                     .collect();
                 let xk = self.x.select_rows(&keep);
-                let mut q = Mat::default();
-                gram_symmetric_into(&self.kernel, &xk, &mut q, &mut self.work.gram);
-                q.add_diag(self.rho)?;
-                self.q_inv = spd_inverse(&q)?;
+                gram_symmetric_into(
+                    &self.kernel,
+                    &xk,
+                    &mut self.work.q_kept,
+                    &mut self.work.gram,
+                );
+                self.work.q_kept.add_diag(self.rho)?;
+                spd_inverse_into(
+                    &self.work.q_kept,
+                    &mut self.q_inv,
+                    &mut self.work.l,
+                    &mut self.work.col,
+                )?;
             } else {
                 bordered_shrink_into(&mut self.q_inv, &self.work.rem, &mut self.work.border)?;
             }

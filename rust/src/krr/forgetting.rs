@@ -63,8 +63,9 @@ impl ForgettingKrr {
             Error::Config("forgetting KRR needs a finite intrinsic dimension".into())
         })?;
         let phi = table.map(x);
-        let phit = phi.transpose();
-        let mut s = crate::linalg::gemm::syrk(&phit)?;
+        // transpose-side SYRK: S = Φ^T Φ straight off the row-major store
+        let mut s = crate::linalg::matrix::Mat::default();
+        crate::linalg::gemm::syrk_t_into(1.0, &phi, 0.0, &mut s)?;
         s.add_diag(rho)?;
         let s_inv = spd_inverse(&s)?;
         let mut py = vec![0.0; table.j()];

@@ -93,12 +93,13 @@ impl IntrinsicKrr {
         })?;
         let phi = table.map(x); // (N, J)
         let j = table.j();
-        // S = Φ^T Φ + ρI — SYRK on the transposed store (half the flops of
-        // the general product; the O(NJ) transpose is noise next to the
-        // O(NJ^2) product, and the blocked-parallel Cholesky behind
-        // spd_inverse takes it from there)
-        let phit = phi.transpose();
-        let mut s = crate::linalg::gemm::syrk(&phit)?;
+        // S = Φ^T Φ + ρI — transpose-side SYRK straight off the row-major
+        // store (half the flops of the general product, no materialized
+        // Φ^T: the packed engine reads Φ transpose-aware above the
+        // dispatch crossover, and the blocked-parallel Cholesky + TRSM
+        // behind spd_inverse take it from there)
+        let mut s = Mat::default();
+        crate::linalg::gemm::syrk_t_into(1.0, &phi, 0.0, &mut s)?;
         s.add_diag(rho)?;
         let s_inv = spd_inverse(&s)?;
         let psum = phi.col_sums();

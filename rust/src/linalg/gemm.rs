@@ -1,24 +1,36 @@
-//! Blocked, multi-threaded dense matrix products.
+//! Blocked, multi-threaded dense BLAS-3: one shape-adaptive packed engine
+//! behind every product, triangular solve, and symmetric update.
 //!
-//! Two engines share the row-parallel dispatch (rows of C are distributed
-//! across the [`crate::par`] worker pool):
+//! # The two engines
 //!
-//! * a **packed GEMM** for large products — A and B are repacked into
-//!   contiguous MR×kc / kc×NR micro-panels (zero-padded at the edges) and
-//!   multiplied by an explicitly unrolled 4×8 register-tile micro-kernel.
-//!   The 32 accumulators fill exactly the 16-ymm AVX2 register budget, and
-//!   the portable `f64` array form lowers to two 256-bit FMAs per row on
-//!   any autovectorizing backend. Blocking is MC×KC×NC (A panel resident in
-//!   L2, B panel shared across the row sweep, C streamed);
-//! * an **axpy kernel** for small/skinny products (the rank-|H| update
-//!   algebra: k ≤ a few dozen), where packing overhead would dominate and
-//!   streaming B rows is already cache-resident.
+//! * the **packed engine** ([`gemm_packed_raw`]) — operands are repacked
+//!   into contiguous MR×kc / kc×NR micro-panels (zero-padded at the edges,
+//!   transpose-aware: either side can be read as itself or its transpose)
+//!   and multiplied by an explicitly unrolled 4×8 register-tile
+//!   micro-kernel. The 32 accumulators fill exactly the 16-ymm AVX2
+//!   register budget, and the portable `f64` array form lowers to two
+//!   256-bit FMAs per row on any autovectorizing backend. Blocking is
+//!   MC×KC×NC (A panel resident in L2, B panel packed once and shared
+//!   across the row-parallel sweep, C streamed). The same driver serves
+//!   NN, NT, TN products and — with `lower_only` — the SYRK macro-kernel
+//!   and the factorizations' trailing updates, so a J=2024 Gram build or
+//!   trailing panel no longer re-reads its operand from memory per tile;
+//! * the **streaming fallbacks** — axpy row sweeps (NN/TN), row-dot loops
+//!   (NT), and 4×4 dot tiles (SYRK) for the small/skinny products of the
+//!   rank-|H| update algebra, where packing overhead would dominate and
+//!   the operands are already cache-resident.
 //!
-//! [`syrk_into`] computes symmetric rank-k products (`C = αAAᵀ + βC`) at
-//! half the flops by filling only the lower triangle (4×4 register-tiled
-//! row dots) and mirroring. Packing buffers are thread-local and reused, so
-//! steady-state calls perform no heap allocation on any path (measured
-//! before/after numbers in EXPERIMENTS.md §Perf).
+//! Which engine runs is decided centrally by [`dispatch`] — the single
+//! reference for every crossover threshold in this crate. The blocked,
+//! parallel TRSM family ([`trsm_lower_into`], [`trsm_lower_t_into`],
+//! [`trsm_right_into`]) solves triangular systems block by block and
+//! routes its trailing rank-NB updates through the same dispatch, which is
+//! what `solve.rs`'s blocked Cholesky/LU panel phases and the BLAS-3 SPD
+//! inverse call instead of per-column scalar substitution.
+//!
+//! Packing buffers are thread-local and reused, so steady-state calls
+//! perform no heap allocation on any path (measured before/after numbers
+//! in EXPERIMENTS.md §Perf).
 //!
 //! This is the native fallback for the AOT GEMM artifacts and the engine
 //! used by all maintained-inverse updates (J up to 2024 in the paper's
@@ -34,22 +46,117 @@ use std::cell::RefCell;
 const MR: usize = 4;
 /// Micro-tile columns (B panel width); MR×NR accumulators = 16 ymm.
 const NR: usize = 8;
-/// Cache-block sizes for the packed GEMM (tuned on this container; see
+/// Cache-block sizes for the packed engine (tuned on this container; see
 /// EXPERIMENTS.md §Perf). MC is a multiple of MR, NC a multiple of NR.
 const MC: usize = 64; // rows of A per packed panel
 const KC: usize = 256; // depth per panel
 const NC: usize = 256; // cols of B per packed panel
 const MIN_PAR_ROWS: usize = 16;
-/// Below this flop volume (or depth) the axpy kernel wins: packing costs
-/// O(mk + kn) writes that only amortize over a large k sweep.
-const PACKED_MIN_FLOPS: usize = 1 << 21;
-const PACKED_MIN_K: usize = 32;
+/// Diagonal-block width for the blocked triangular solves: one
+/// TRSM_NB×TRSM_NB block is solved in cache, then the remaining
+/// right-hand-side rows take a rank-TRSM_NB GEMM update through
+/// [`dispatch`].
+const TRSM_NB: usize = 64;
+/// Minimum RHS columns per parallel stripe in the TRSM diagonal solves.
+const TRSM_MIN_COLS: usize = 64;
+
+/// Kernel-selection thresholds — **the** crossover reference for every
+/// dense BLAS-3 entry point in the crate.
+///
+/// A product `C (m×n) += A' (m×k) B' (k×n)` takes the packed micro-kernel
+/// path iff [`use_packed`]`(m, n, k)`:
+///
+/// * `m·n·k ≥ 2^21` multiply-adds ([`PACKED_MIN_FLOPS`]): packing costs
+///   O(mk + kn) extra writes plus panel bookkeeping, which only amortizes
+///   over a deep k sweep — below ~2M flops the streaming kernels win on
+///   measured wall clock (`core/gemm_nt_packed_vs_axpy` et al. in
+///   `BENCH_microbench.json`);
+/// * `k ≥ 32` ([`PACKED_MIN_K`]): shallower products never reuse a packed
+///   element often enough to pay for its two copies (the rank-|H| update
+///   algebra has k = |H| ≤ a few dozen — it stays on the axpy/dot path by
+///   design);
+/// * `m ≥ MR = 4` and `n ≥ NR = 8`: anything smaller cannot fill one
+///   register tile.
+///
+/// Per-kernel shapes route as:
+///
+/// | kernel | (m, n, k) passed to [`use_packed`] |
+/// |---|---|
+/// | `gemm_into` (NN), `matmul_nt_into` (NT), `gemm_tn_acc` (TN) | product shape |
+/// | `syrk_into` / `syrk_t_into` | (m, m, k) — the full square, half of which is computed |
+/// | TRSM trailing update | (remaining rows, nrhs, TRSM_NB = 64) |
+/// | Cholesky/LU trailing update (`solve.rs`) | (trailing rows, trailing cols, NB = 64) |
+///
+/// Consequences worth knowing: a J=2024 maintained-inverse round with
+/// |H| = 6 keeps every product on the streaming path (k = 6), while the
+/// same round's bootstrap factorization (k = 64 panels over a 2024² tile)
+/// is entirely packed. The measured crossovers are tracked by the
+/// `core/*` microbenches; re-tune the constants against
+/// `BENCH_microbench.json` when the container hardware changes.
+pub mod dispatch {
+    /// Minimum `m·n·k` multiply-add volume for the packed engine.
+    pub const PACKED_MIN_FLOPS: usize = 1 << 21;
+    /// Minimum product depth k for the packed engine.
+    pub const PACKED_MIN_K: usize = 32;
+
+    /// Should a `(m×k)·(k×n)` product take the packed micro-kernel path?
+    /// (See the module docs for the rationale behind each term.)
+    #[inline]
+    pub fn use_packed(m: usize, n: usize, k: usize) -> bool {
+        k >= PACKED_MIN_K
+            && m >= super::MR
+            && n >= super::NR
+            && m.saturating_mul(n).saturating_mul(k) >= PACKED_MIN_FLOPS
+    }
+}
 
 thread_local! {
     /// Per-thread packed-A panel (MC×KC), reused across calls.
     static PACK_A: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
     /// Per-thread packed-B panel (KC×NC), reused across calls.
     static PACK_B: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Read-only raw view of a row-major block: base pointer + leading
+/// dimension. The packed engine and the TRSM family use it to address
+/// disjoint blocks of a buffer that is concurrently written elsewhere
+/// (callers guarantee the disjointness).
+#[derive(Clone, Copy)]
+pub(crate) struct RawMat {
+    ptr: *const f64,
+    ld: usize,
+}
+unsafe impl Send for RawMat {}
+unsafe impl Sync for RawMat {}
+
+impl RawMat {
+    /// View of a whole matrix.
+    pub(crate) fn of(m: &Mat) -> Self {
+        Self { ptr: m.as_slice().as_ptr(), ld: m.cols() }
+    }
+
+    /// View rooted at `(r0, c0)` of a row-major buffer with leading
+    /// dimension `ld`.
+    ///
+    /// # Safety
+    /// `ptr` must point at a live buffer of at least `(r0+1)·ld` elements;
+    /// every index later passed to the view must stay inside the buffer.
+    pub(crate) unsafe fn from_raw(ptr: *const f64, ld: usize, r0: usize, c0: usize) -> Self {
+        Self { ptr: ptr.add(r0 * ld + c0), ld }
+    }
+
+    #[inline(always)]
+    unsafe fn at(self, r: usize, c: usize) -> f64 {
+        *self.ptr.add(r * self.ld + c)
+    }
+
+    /// Row segment `[c0, c0+len)` of row `r`. The slice borrows `self` so
+    /// it cannot (visibly) outlive the view — the caller still guarantees
+    /// the underlying buffer outlives the view itself.
+    #[inline(always)]
+    unsafe fn row(&self, r: usize, c0: usize, len: usize) -> &[f64] {
+        std::slice::from_raw_parts(self.ptr.add(r * self.ld + c0), len)
+    }
 }
 
 /// `C = A * B` (new allocation).
@@ -81,7 +188,10 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
 }
 
 /// `C = A * B^T` written into a caller-provided matrix (reshaped as
-/// needed; allocation-free once `c`'s capacity is warm).
+/// needed; allocation-free once `c`'s capacity is warm). Above the
+/// [`dispatch`] crossover B is packed transpose-aware and the product runs
+/// on the 4×8 micro-kernel; below it the row-dot kernel
+/// ([`matmul_nt_dots_into`]) streams rows of both operands.
 pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.cols() == b.cols(),
@@ -90,8 +200,46 @@ pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
         a.shape(),
         b.shape()
     );
-    // B^T in row-major == rows of B are columns of B^T: inner product of
-    // rows, which is the cache-friendly case — no packing needed.
+    let (m, k) = a.shape();
+    let n = b.rows();
+    if dispatch::use_packed(m, n, k) {
+        c.resize_scratch(m, n);
+        c.as_mut_slice().fill(0.0);
+        let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+        // SAFETY: a and b are distinct (immutable) matrices; c rows are
+        // written by exactly one chunk each.
+        unsafe {
+            gemm_packed_raw(
+                1.0,
+                RawMat::of(a),
+                false,
+                RawMat::of(b),
+                true,
+                m,
+                n,
+                k,
+                cptr,
+                n,
+                false,
+            );
+        }
+        return Ok(());
+    }
+    matmul_nt_dots_into(a, b, c)
+}
+
+/// The NT row-dot kernel: `C = A * B^T` as inner products of rows, which
+/// is already the cache-friendly case — no packing. This is the
+/// below-crossover fallback of [`matmul_nt_into`], public as the reference
+/// side of the `core/gemm_nt_packed_vs_axpy` microbench.
+pub fn matmul_nt_dots_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
+    ensure_shape!(
+        a.cols() == b.cols(),
+        "gemm::matmul_nt_dots",
+        "a is {:?}, b^T is {:?}",
+        a.shape(),
+        b.shape()
+    );
     let m = a.rows();
     let n = b.rows();
     c.resize_scratch(m, n);
@@ -117,6 +265,8 @@ pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
 /// block of a (possibly larger) `C`. This is the in-place bordered-grow's
 /// top-left rank-|C| correction: the maintained inverse has already been
 /// restrided to its grown shape and the update lands directly in it.
+/// Routes through [`dispatch`] like every other product (large grow blocks
+/// take the packed engine; the typical small-|C| rounds stay on row dots).
 pub fn gemm_nt_acc_block(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.cols() == b.cols() && c.rows() >= a.rows() && c.cols() >= b.rows(),
@@ -126,10 +276,30 @@ pub fn gemm_nt_acc_block(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()
         b.shape(),
         c.shape()
     );
+    let (m, k) = a.shape();
     let n = b.rows();
     let c_cols = c.cols();
     let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
-    par::parallel_for(a.rows(), MIN_PAR_ROWS, |lo, hi| {
+    if dispatch::use_packed(m, n, k) {
+        // SAFETY: operands distinct from c; disjoint C rows per chunk.
+        unsafe {
+            gemm_packed_raw(
+                alpha,
+                RawMat::of(a),
+                false,
+                RawMat::of(b),
+                true,
+                m,
+                n,
+                k,
+                cptr,
+                c_cols,
+                false,
+            );
+        }
+        return Ok(());
+    }
+    par::parallel_for(m, MIN_PAR_ROWS, |lo, hi| {
         let p = cptr;
         for i in lo..hi {
             let ai = a.row(i);
@@ -143,8 +313,11 @@ pub fn gemm_nt_acc_block(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()
     Ok(())
 }
 
-/// `C += alpha * A^T B` with A: (k, m), B: (k, n), C: (m, n). Serial —
-/// used for the small Schur blocks of the bordered updates.
+/// `C += alpha * A^T B` with A: (k, m), B: (k, n), C: (m, n). Above the
+/// [`dispatch`] crossover A is packed transpose-aware (contiguous copies —
+/// Aᵀ's micro-panel rows are A's stored rows) and the product runs on the
+/// packed engine; the small Schur blocks of the bordered updates stay on
+/// the serial axpy sweep.
 pub fn gemm_tn_acc(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.rows() == b.rows() && c.rows() == a.cols() && c.cols() == b.cols(),
@@ -154,11 +327,33 @@ pub fn gemm_tn_acc(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
         b.shape(),
         c.shape()
     );
-    for k in 0..a.rows() {
-        for i in 0..a.cols() {
-            let f = alpha * a[(k, i)];
+    let (k, m) = a.shape();
+    let n = b.cols();
+    if dispatch::use_packed(m, n, k) {
+        let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+        // SAFETY: operands distinct from c; disjoint C rows per chunk.
+        unsafe {
+            gemm_packed_raw(
+                alpha,
+                RawMat::of(a),
+                true,
+                RawMat::of(b),
+                false,
+                m,
+                n,
+                k,
+                cptr,
+                n,
+                false,
+            );
+        }
+        return Ok(());
+    }
+    for kk in 0..k {
+        for i in 0..m {
+            let f = alpha * a[(kk, i)];
             if f != 0.0 {
-                let base = k * b.cols();
+                let base = kk * b.cols();
                 let brow = &b.as_slice()[base..base + b.cols()];
                 for (cv, bv) in c.row_mut(i).iter_mut().zip(brow) {
                     *cv += f * bv;
@@ -170,6 +365,11 @@ pub fn gemm_tn_acc(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
 }
 
 /// `C = A^T * B` (new allocation), A: (k, m), B: (k, n) -> C: (m, n).
+/// Above the [`dispatch`] crossover the transpose-aware packed engine runs
+/// directly off A's storage; below it, the (allocating) explicit transpose
+/// keeps the product on the row-parallel axpy engine — `gemm_tn_acc`'s
+/// serial sweep is sized for the tiny Schur cores, not for a wide shallow
+/// product.
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
     ensure_shape!(
         a.rows() == b.rows(),
@@ -178,13 +378,20 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
         a.shape(),
         b.shape()
     );
+    let (k, m) = a.shape();
+    if dispatch::use_packed(m, b.cols(), k) {
+        let mut c = Mat::zeros(m, b.cols());
+        gemm_tn_acc(1.0, a, b, &mut c)?;
+        return Ok(c);
+    }
     let at = a.transpose();
     matmul(&at, b)
 }
 
 /// General `C = alpha * A * B + beta * C`, blocked and parallel over C rows.
-/// Large products take the packed 4×8 micro-kernel path; small/skinny ones
-/// (the update algebra) the streaming axpy path — see the module docs.
+/// Products over the [`dispatch`] crossover take the packed 4×8
+/// micro-kernel path; small/skinny ones (the update algebra) the streaming
+/// axpy path.
 pub fn gemm_into(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
     ensure_shape!(
         a.cols() == b.rows() && c.rows() == a.rows() && c.cols() == b.cols(),
@@ -206,13 +413,25 @@ pub fn gemm_into(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) -> Result
     if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
         return Ok(());
     }
-    let packed = k >= PACKED_MIN_K
-        && m >= MR
-        && n >= NR
-        && m.saturating_mul(n).saturating_mul(k) >= PACKED_MIN_FLOPS;
     let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
-    if packed {
-        gemm_packed(alpha, a, b, cptr, m, n);
+    if dispatch::use_packed(m, n, k) {
+        // SAFETY: a and b are distinct (immutable) matrices; c rows are
+        // written by exactly one chunk each.
+        unsafe {
+            gemm_packed_raw(
+                alpha,
+                RawMat::of(a),
+                false,
+                RawMat::of(b),
+                false,
+                m,
+                n,
+                k,
+                cptr,
+                n,
+                false,
+            );
+        }
     } else {
         par::parallel_for(m, MIN_PAR_ROWS, |row_lo, row_hi| {
             gemm_axpy_rows(alpha, a, b, cptr, n, row_lo, row_hi);
@@ -248,50 +467,109 @@ fn gemm_axpy_rows(alpha: f64, a: &Mat, b: &Mat, cptr: SendSlice, n: usize, row_l
     }
 }
 
-/// Packed engine: `C += alpha * A * B`. The caller packs each KC×NC B
-/// panel **once** into its thread-local buffer and shares it (read-only)
-/// across a row-parallel sweep — one dispatch per panel is cheap on the
+/// The packed engine: `C[i, j] += alpha * Σ_kk A'[i, kk] * B'[kk, j]` with
+/// `A' = A` (or `Aᵀ` when `ta`) and `B' = B` (or `Bᵀ` when `tb`), all
+/// indices local to the views' roots. The caller packs each KC×NC B panel
+/// **once** into its thread-local buffer and shares it (read-only) across
+/// a row-parallel sweep — one dispatch per panel is cheap on the
 /// persistent pool, and it avoids multiplying the packing bandwidth by the
 /// lane count. Each lane packs only its own MC×KC A blocks.
-fn gemm_packed(alpha: f64, a: &Mat, b: &Mat, cptr: SendSlice, m: usize, n: usize) {
-    let k = a.cols();
+///
+/// With `lower_only`, only elements with local `i >= j` are written — the
+/// SYRK macro path and the factorizations' trailing updates, whose C block
+/// is rooted on the diagonal so the local condition is exactly the global
+/// triangle.
+///
+/// # Safety
+/// * `a` must cover `(m, k)` (or `(k, m)` when `ta`) and `b` `(k, n)` (or
+///   `(n, k)` when `tb`) readable elements;
+/// * `c` must cover `m` rows of stride `ldc >= n` writable elements, and
+///   no other thread may read or write them for the duration of the call;
+/// * the regions read through `a`/`b` must be disjoint from the region
+///   written through `c` (they may share one allocation).
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_packed_raw(
+    alpha: f64,
+    a: RawMat,
+    ta: bool,
+    b: RawMat,
+    tb: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: SendSlice,
+    ldc: usize,
+    lower_only: bool,
+) {
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
     PACK_B.with(|pb| {
         let mut bpack = pb.borrow_mut();
         if bpack.len() < NC * KC {
             bpack.resize(NC * KC, 0.0);
         }
-        for kb in (0..k).step_by(KC) {
+        let mut kb = 0;
+        while kb < k {
             let kc = KC.min(k - kb);
-            for nb in (0..n).step_by(NC) {
+            let mut nb = 0;
+            while nb < n {
+                if lower_only && nb >= m {
+                    // every remaining panel sits strictly above the diagonal
+                    break;
+                }
                 let nc = NC.min(n - nb);
-                pack_b(b, kb, kc, nb, nc, &mut bpack[..]);
+                // SAFETY: forwarded from the caller's contract.
+                unsafe { pack_b_panel(b, tb, kb, kc, nb, nc, &mut bpack) };
                 let bshared: &[f64] = &bpack;
-                par::parallel_for(m, MIN_PAR_ROWS, |row_lo, row_hi| {
+                let row_start = if lower_only { nb } else { 0 };
+                par::parallel_for(m - row_start, MIN_PAR_ROWS, |lo, hi| {
                     PACK_A.with(|pa| {
                         let mut apack = pa.borrow_mut();
                         if apack.len() < MC * KC {
                             apack.resize(MC * KC, 0.0);
                         }
-                        let mut ib = row_lo;
+                        let mut ib = row_start + lo;
+                        let row_hi = row_start + hi;
                         while ib < row_hi {
                             let mc = MC.min(row_hi - ib);
-                            pack_a(a, ib, mc, kb, kc, &mut apack[..]);
-                            macro_kernel(
-                                alpha, &apack[..], bshared, mc, nc, kc, cptr, n, ib, nb,
-                            );
+                            // SAFETY: forwarded from the caller's contract;
+                            // rows [ib, ib+mc) belong to this chunk alone.
+                            unsafe {
+                                pack_a_panel(a, ta, ib, mc, kb, kc, &mut apack);
+                                macro_kernel(
+                                    alpha, &apack, bshared, mc, nc, kc, c, ldc, ib, nb,
+                                    lower_only,
+                                );
+                            }
                             ib += MC;
                         }
                     });
                 });
+                nb += NC;
             }
+            kb += KC;
         }
     });
 }
 
-/// Pack `A[ib..ib+mc, kb..kb+kc]` into MR-row micro-panels, k-major within
-/// a panel (`panel[kk*MR + r]`), zero-padding partial row panels so the
-/// micro-kernel never branches on height.
-fn pack_a(a: &Mat, ib: usize, mc: usize, kb: usize, kc: usize, apack: &mut [f64]) {
+/// Pack logical `A'[ib..ib+mc, kb..kb+kc]` into MR-row micro-panels,
+/// k-major within a panel (`panel[kk*MR + r]`), zero-padding partial row
+/// panels so the micro-kernel never branches on height. With `trans`, the
+/// logical element `(i, kk)` is `src[kk, i]`, which makes each panel fill
+/// a contiguous copy of `src`'s stored rows.
+///
+/// # Safety
+/// Every addressed `src` element must be in bounds and readable.
+unsafe fn pack_a_panel(
+    src: RawMat,
+    trans: bool,
+    ib: usize,
+    mc: usize,
+    kb: usize,
+    kc: usize,
+    apack: &mut [f64],
+) {
     let mut p = 0;
     while p < mc {
         let pr = MR.min(mc - p);
@@ -299,19 +577,40 @@ fn pack_a(a: &Mat, ib: usize, mc: usize, kb: usize, kc: usize, apack: &mut [f64]
         if pr < MR {
             panel.fill(0.0);
         }
-        for r in 0..pr {
-            let arow = &a.row(ib + p + r)[kb..kb + kc];
-            for (kk, &v) in arow.iter().enumerate() {
-                panel[kk * MR + r] = v;
+        if trans {
+            for kk in 0..kc {
+                let srow = src.row(kb + kk, ib + p, pr);
+                panel[kk * MR..kk * MR + pr].copy_from_slice(srow);
+            }
+        } else {
+            for r in 0..pr {
+                let arow = src.row(ib + p + r, kb, kc);
+                for (kk, &v) in arow.iter().enumerate() {
+                    panel[kk * MR + r] = v;
+                }
             }
         }
         p += MR;
     }
 }
 
-/// Pack `B[kb..kb+kc, nb..nb+nc]` into NR-column micro-panels, k-major
-/// within a panel (`panel[kk*NR + j]`), zero-padding partial column panels.
-fn pack_b(b: &Mat, kb: usize, kc: usize, nb: usize, nc: usize, bpack: &mut [f64]) {
+/// Pack logical `B'[kb..kb+kc, nb..nb+nc]` into NR-column micro-panels,
+/// k-major within a panel (`panel[kk*NR + j]`), zero-padding partial
+/// column panels. With `trans`, the logical element `(kk, j)` is
+/// `src[j, kk]` — the NT case, where B's stored rows are the columns of
+/// `Bᵀ`.
+///
+/// # Safety
+/// Every addressed `src` element must be in bounds and readable.
+unsafe fn pack_b_panel(
+    src: RawMat,
+    trans: bool,
+    kb: usize,
+    kc: usize,
+    nb: usize,
+    nc: usize,
+    bpack: &mut [f64],
+) {
     let mut q = 0;
     while q < nc {
         let pn = NR.min(nc - q);
@@ -319,9 +618,18 @@ fn pack_b(b: &Mat, kb: usize, kc: usize, nb: usize, nc: usize, bpack: &mut [f64]
         if pn < NR {
             panel.fill(0.0);
         }
-        for kk in 0..kc {
-            let brow = &b.row(kb + kk)[nb + q..nb + q + pn];
-            panel[kk * NR..kk * NR + pn].copy_from_slice(brow);
+        if trans {
+            for j in 0..pn {
+                let srow = src.row(nb + q + j, kb, kc);
+                for (kk, &v) in srow.iter().enumerate() {
+                    panel[kk * NR + j] = v;
+                }
+            }
+        } else {
+            for kk in 0..kc {
+                let brow = src.row(kb + kk, nb + q, pn);
+                panel[kk * NR..kk * NR + pn].copy_from_slice(brow);
+            }
         }
         q += NR;
     }
@@ -345,9 +653,15 @@ fn micro_kernel_4x8(apanel: &[f64], bpanel: &[f64], kc: usize) -> [[f64; NR]; MR
 }
 
 /// Sweep the packed panels with the micro-kernel and accumulate
-/// `alpha * acc` into C (partial edge tiles write only their live cells).
+/// `alpha * acc` into C (partial edge tiles write only their live cells;
+/// with `lower_only`, each row additionally clips to local columns
+/// `j <= i`).
+///
+/// # Safety
+/// Forwarded from [`gemm_packed_raw`]: the addressed C rows belong to the
+/// calling chunk alone.
 #[allow(clippy::too_many_arguments)]
-fn macro_kernel(
+unsafe fn macro_kernel(
     alpha: f64,
     apack: &[f64],
     bpack: &[f64],
@@ -358,6 +672,7 @@ fn macro_kernel(
     ldc: usize,
     ib: usize,
     nb: usize,
+    lower_only: bool,
 ) {
     let mut p = 0;
     while p < mc {
@@ -365,16 +680,30 @@ fn macro_kernel(
         let apanel = &apack[(p / MR) * MR * kc..][..MR * kc];
         let mut q = 0;
         while q < nc {
+            if lower_only && nb + q > ib + p + pr - 1 {
+                // the whole tile (and every later one in this row block)
+                // sits strictly above the diagonal
+                break;
+            }
             let pn = NR.min(nc - q);
             let bpanel = &bpack[(q / NR) * NR * kc..][..NR * kc];
             let acc = micro_kernel_4x8(apanel, bpanel, kc);
             for (r, acc_row) in acc.iter().enumerate().take(pr) {
-                // SAFETY: row ib+p+r lies inside this thread's exclusive
-                // row range.
-                let crow = unsafe {
-                    std::slice::from_raw_parts_mut(cptr.0.add((ib + p + r) * ldc + nb + q), pn)
+                let gi = ib + p + r;
+                let gj0 = nb + q;
+                let live = if lower_only {
+                    if gj0 > gi {
+                        continue;
+                    }
+                    pn.min(gi + 1 - gj0)
+                } else {
+                    pn
                 };
-                for (cv, av) in crow.iter_mut().zip(&acc_row[..pn]) {
+                // SAFETY: row gi lies inside this thread's exclusive row
+                // range.
+                let crow =
+                    unsafe { std::slice::from_raw_parts_mut(cptr.0.add(gi * ldc + gj0), live) };
+                for (cv, av) in crow.iter_mut().zip(&acc_row[..live]) {
                     *cv += alpha * av;
                 }
             }
@@ -384,16 +713,36 @@ fn macro_kernel(
     }
 }
 
+/// Mirror the strict lower triangle into the strict upper one (pass 2 of
+/// the SYRK family: writes only `j > i`, reads only the completed `j < i`).
+fn mirror_lower_to_upper(cptr: SendSlice, m: usize) {
+    par::parallel_for(m, 256, |lo, hi| {
+        let p = cptr;
+        for i in lo..hi {
+            for j in i + 1..m {
+                // SAFETY: disjoint (i, j>i) writes; reads are from pass 1.
+                unsafe { *p.0.add(i * m + j) = *p.0.add(j * m + i) };
+            }
+        }
+    });
+}
+
 /// Symmetric rank-k update `C = alpha * A * A^T + beta * C` (C symmetric,
 /// fully mirrored on return) at **half the flops** of the general product:
-/// only the lower triangle is computed, with a 4×4 register-tiled row-dot
-/// kernel, then mirrored in a second parallel pass.
+/// only the lower triangle is computed, then mirrored in a second parallel
+/// pass. Above the [`dispatch`] crossover the triangle runs on the packed
+/// macro-kernel (A is packed once per panel as both operands — the J=2024
+/// Gram build stops re-reading A from memory per tile); below it, on 4×4
+/// register-tiled row dots ([`syrk_tiled_into`]).
 ///
 /// With `beta == 0` the output is reshaped (`resize_scratch`) so warm
 /// buffers are reused allocation-free; with `beta != 0` the shape must
 /// already match.
 pub fn syrk_into(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
-    let m = a.rows();
+    let (m, k) = a.shape();
+    if !dispatch::use_packed(m, m, k) {
+        return syrk_tiled_into(alpha, a, beta, c);
+    }
     if beta == 0.0 {
         c.resize_scratch(m, m);
         c.as_mut_slice().fill(0.0);
@@ -409,26 +758,133 @@ pub fn syrk_into(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
             c.scale(beta);
         }
     }
+    if alpha == 0.0 {
+        // C = beta*C already applied; mirror not needed (input symmetric)
+        return Ok(());
+    }
+    let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+    // SAFETY: a is a distinct (immutable) matrix; C rows are written by
+    // exactly one chunk each; the C block is rooted on the diagonal.
+    unsafe {
+        gemm_packed_raw(
+            alpha,
+            RawMat::of(a),
+            false,
+            RawMat::of(a),
+            true,
+            m,
+            m,
+            k,
+            cptr,
+            m,
+            true,
+        );
+    }
+    mirror_lower_to_upper(cptr, m);
+    Ok(())
+}
+
+/// [`syrk_into`] pinned to the 4×4 dot-tile kernel regardless of shape —
+/// the below-crossover path, public as the reference side of the
+/// `core/syrk_macro_1024` microbench and the property tests.
+pub fn syrk_tiled_into(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
+    let m = a.rows();
+    if beta == 0.0 {
+        c.resize_scratch(m, m);
+        c.as_mut_slice().fill(0.0);
+    } else {
+        ensure_shape!(
+            c.rows() == m && c.cols() == m,
+            "gemm::syrk_tiled_into",
+            "a {:?} -> c {:?} with beta {beta}",
+            a.shape(),
+            c.shape()
+        );
+        if beta != 1.0 {
+            c.scale(beta);
+        }
+    }
     if m == 0 || a.cols() == 0 || alpha == 0.0 {
-        // C = beta*C already applied; mirror not needed (input symmetric or
-        // freshly zeroed)
         return Ok(());
     }
     let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
     par::parallel_for(m, MIN_PAR_ROWS, |lo, hi| {
         syrk_lower_rows(alpha, a, cptr, m, lo, hi);
     });
-    // mirror lower -> upper: pass 2 writes only the strict upper triangle
-    // and reads only the strict lower, written in the completed pass 1
-    par::parallel_for(m, 256, |lo, hi| {
-        let p = cptr;
+    mirror_lower_to_upper(cptr, m);
+    Ok(())
+}
+
+/// Transpose-side symmetric rank-k update `C = alpha * A^T A + beta * C`
+/// with A: (k, m) -> C: (m, m), fully mirrored. This is the Gram/scatter
+/// build straight off a row-major sample store (`S = Φ^T Φ`): no
+/// transposed copy of Φ is materialized — above the [`dispatch`] crossover
+/// the packed engine reads A transpose-aware (its micro-panels are
+/// contiguous copies of A's stored rows), below it a serial rank-1 row
+/// sweep accumulates the lower triangle.
+pub fn syrk_t_into(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) -> Result<()> {
+    let (k, m) = a.shape();
+    if beta == 0.0 {
+        c.resize_scratch(m, m);
+        c.as_mut_slice().fill(0.0);
+    } else {
+        ensure_shape!(
+            c.rows() == m && c.cols() == m,
+            "gemm::syrk_t_into",
+            "a^T {:?} -> c {:?} with beta {beta}",
+            a.shape(),
+            c.shape()
+        );
+        if beta != 1.0 {
+            c.scale(beta);
+        }
+    }
+    if m == 0 || k == 0 || alpha == 0.0 {
+        return Ok(());
+    }
+    if dispatch::use_packed(m, m, k) {
+        let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+        // SAFETY: a is a distinct (immutable) matrix; C rows are written by
+        // exactly one chunk each; the C block is rooted on the diagonal.
+        unsafe {
+            gemm_packed_raw(
+                alpha,
+                RawMat::of(a),
+                true,
+                RawMat::of(a),
+                false,
+                m,
+                m,
+                k,
+                cptr,
+                m,
+                true,
+            );
+        }
+        mirror_lower_to_upper(cptr, m);
+        return Ok(());
+    }
+    // below the crossover (shallow k or a small product): axpy sweep over
+    // the stored rows of A, lower triangle only, parallel over C rows —
+    // the k-gate argues against packing, not against using the pool (a
+    // wide-m, few-sample scatter build is still O(k·m²/2) work)
+    let cptr = SendSlice(c.as_mut_slice().as_mut_ptr());
+    par::parallel_for(m, MIN_PAR_ROWS, |lo, hi| {
         for i in lo..hi {
-            for j in i + 1..m {
-                // SAFETY: disjoint (i, j>i) writes; reads are from pass 1.
-                unsafe { *p.0.add(i * m + j) = *p.0.add(j * m + i) };
+            // SAFETY: row i belongs to this chunk alone; `a` is read-only.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * m), i + 1) };
+            for kk in 0..k {
+                let row = a.row(kk);
+                let f = alpha * row[i];
+                if f != 0.0 {
+                    for (cv, &v) in crow.iter_mut().zip(&row[..=i]) {
+                        *cv += f * v;
+                    }
+                }
             }
         }
     });
+    mirror_lower_to_upper(cptr, m);
     Ok(())
 }
 
@@ -486,6 +942,292 @@ pub fn syrk(a: &Mat) -> Result<Mat> {
     let mut c = Mat::default();
     syrk_into(1.0, a, 0.0, &mut c)?;
     Ok(c)
+}
+
+/// Solve `L X = B` in place (the solution overwrites `b`) with `L`
+/// lower-triangular; `unit` selects an implicit unit diagonal. Blocked and
+/// parallel: each TRSM_NB diagonal block is solved with the RHS split over
+/// parallel column stripes, then the remaining RHS rows take one
+/// rank-TRSM_NB GEMM update that routes through [`dispatch`] — so a large
+/// triangular solve spends almost all its flops in the packed micro-kernel
+/// instead of per-column scalar substitution.
+pub fn trsm_lower_into(l: &Mat, unit: bool, b: &mut Mat) -> Result<()> {
+    ensure_shape!(
+        l.is_square() && l.rows() == b.rows(),
+        "gemm::trsm_lower",
+        "l {:?}, b {:?}",
+        l.shape(),
+        b.shape()
+    );
+    let n = l.rows();
+    let nrhs = b.cols();
+    if n == 0 || nrhs == 0 {
+        return Ok(());
+    }
+    // SAFETY: l and b are distinct matrices; internal writes are disjoint.
+    unsafe {
+        trsm_lower_raw(
+            RawMat::of(l),
+            n,
+            unit,
+            SendSlice(b.as_mut_slice().as_mut_ptr()),
+            nrhs,
+            nrhs,
+        );
+    }
+    Ok(())
+}
+
+/// Solve `L^T X = B` in place (backward counterpart of
+/// [`trsm_lower_into`]; `L` is still stored lower-triangular).
+pub fn trsm_lower_t_into(l: &Mat, unit: bool, b: &mut Mat) -> Result<()> {
+    ensure_shape!(
+        l.is_square() && l.rows() == b.rows(),
+        "gemm::trsm_lower_t",
+        "l {:?}, b {:?}",
+        l.shape(),
+        b.shape()
+    );
+    let n = l.rows();
+    let nrhs = b.cols();
+    if n == 0 || nrhs == 0 {
+        return Ok(());
+    }
+    // SAFETY: l and b are distinct matrices; internal writes are disjoint.
+    unsafe {
+        trsm_lower_t_raw(
+            RawMat::of(l),
+            n,
+            unit,
+            SendSlice(b.as_mut_slice().as_mut_ptr()),
+            nrhs,
+            nrhs,
+        );
+    }
+    Ok(())
+}
+
+/// Solve `X L^T = B` in place on the rows of `b` (each row independently
+/// solves `L x^T = b^T` by forward substitution) — the Cholesky panel
+/// solve, parallel over rows.
+pub fn trsm_right_into(b: &mut Mat, l: &Mat, unit: bool) -> Result<()> {
+    ensure_shape!(
+        l.is_square() && b.cols() == l.rows(),
+        "gemm::trsm_right",
+        "b {:?}, l {:?}",
+        b.shape(),
+        l.shape()
+    );
+    let n = l.rows();
+    let rows = b.rows();
+    if n == 0 || rows == 0 {
+        return Ok(());
+    }
+    // SAFETY: l and b are distinct matrices; each row is written by exactly
+    // one chunk.
+    unsafe {
+        trsm_right_raw(
+            RawMat::of(l),
+            n,
+            unit,
+            SendSlice(b.as_mut_slice().as_mut_ptr()),
+            n,
+            rows,
+        );
+    }
+    Ok(())
+}
+
+/// Raw [`trsm_lower_into`]: `b` is `n` rows of `nrhs` live columns with
+/// row stride `ldb`.
+///
+/// # Safety
+/// `l` must cover an (n, n) readable block, `b` `n` writable rows of
+/// stride `ldb >= nrhs`; the region read through `l` must be disjoint from
+/// the region written through `b` (they may share one allocation), and no
+/// other thread may touch either for the duration of the call.
+pub(crate) unsafe fn trsm_lower_raw(
+    l: RawMat,
+    n: usize,
+    unit: bool,
+    b: SendSlice,
+    ldb: usize,
+    nrhs: usize,
+) {
+    let mut kb = 0;
+    while kb < n {
+        let nbk = TRSM_NB.min(n - kb);
+        // diagonal-block solve on rows [kb, kb+nbk), parallel over disjoint
+        // RHS column stripes
+        par::parallel_for(nrhs, TRSM_MIN_COLS, |c0, c1| {
+            for i in kb..kb + nbk {
+                // SAFETY: columns [c0, c1) of every row belong to this
+                // chunk alone; row j below is already fully solved.
+                let brow =
+                    unsafe { std::slice::from_raw_parts_mut(b.0.add(i * ldb + c0), c1 - c0) };
+                for j in kb..i {
+                    let f = unsafe { l.at(i, j) };
+                    if f != 0.0 {
+                        let bj = unsafe {
+                            std::slice::from_raw_parts(b.0.add(j * ldb + c0), c1 - c0)
+                        };
+                        for (x, &v) in brow.iter_mut().zip(bj) {
+                            *x -= f * v;
+                        }
+                    }
+                }
+                if !unit {
+                    let d = unsafe { l.at(i, i) };
+                    for x in brow.iter_mut() {
+                        *x /= d;
+                    }
+                }
+            }
+        });
+        let pe = kb + nbk;
+        if pe < n {
+            // trailing update: B[pe.., :] -= L[pe.., kb..pe] * B[kb..pe, :]
+            let m2 = n - pe;
+            // SAFETY: the solved rows [kb, pe) are read-only from here on;
+            // the written rows [pe, n) are disjoint from them and from l.
+            let a2 = unsafe { RawMat::from_raw(l.ptr, l.ld, pe, kb) };
+            let b2 = unsafe { RawMat::from_raw(b.0 as *const f64, ldb, kb, 0) };
+            let c2 = SendSlice(unsafe { b.0.add(pe * ldb) });
+            if dispatch::use_packed(m2, nrhs, nbk) {
+                unsafe {
+                    gemm_packed_raw(-1.0, a2, false, b2, false, m2, nrhs, nbk, c2, ldb, false);
+                }
+            } else {
+                unsafe { trsm_trailing_axpy(a2, false, b2, m2, nbk, c2, ldb, nrhs) };
+            }
+        }
+        kb = pe;
+    }
+}
+
+/// Trailing-update fallback shared by the blocked TRSMs: `C -= A' * B` as
+/// a parallel axpy row sweep, with `A' = A` or `Aᵀ` when `ta` — mirroring
+/// the flag the packed arm passes to [`gemm_packed_raw`].
+///
+/// # Safety
+/// Same disjointness contract as [`gemm_packed_raw`] (with `alpha = -1`).
+#[allow(clippy::too_many_arguments)]
+unsafe fn trsm_trailing_axpy(
+    a: RawMat,
+    ta: bool,
+    b: RawMat,
+    m: usize,
+    k: usize,
+    c: SendSlice,
+    ldc: usize,
+    nrhs: usize,
+) {
+    par::parallel_for(m, 8, |lo, hi| {
+        for i in lo..hi {
+            // SAFETY: row i belongs to this chunk alone; a and b are
+            // read-only here.
+            let crow = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * ldc), nrhs) };
+            for kk in 0..k {
+                let f = unsafe { if ta { a.at(kk, i) } else { a.at(i, kk) } };
+                if f != 0.0 {
+                    let brow = unsafe { b.row(kk, 0, nrhs) };
+                    for (cv, &v) in crow.iter_mut().zip(brow) {
+                        *cv -= f * v;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Raw [`trsm_lower_t_into`] (solves `L^T X = B`), blocked bottom-up.
+///
+/// # Safety
+/// Same contract as [`trsm_lower_raw`].
+pub(crate) unsafe fn trsm_lower_t_raw(
+    l: RawMat,
+    n: usize,
+    unit: bool,
+    b: SendSlice,
+    ldb: usize,
+    nrhs: usize,
+) {
+    let mut ke = n;
+    while ke > 0 {
+        let kb = ke.saturating_sub(TRSM_NB);
+        // diagonal-block backward solve on rows [kb, ke)
+        par::parallel_for(nrhs, TRSM_MIN_COLS, |c0, c1| {
+            for i in (kb..ke).rev() {
+                // SAFETY: columns [c0, c1) of every row belong to this
+                // chunk alone; row j below is already fully solved.
+                let brow =
+                    unsafe { std::slice::from_raw_parts_mut(b.0.add(i * ldb + c0), c1 - c0) };
+                for j in i + 1..ke {
+                    let f = unsafe { l.at(j, i) };
+                    if f != 0.0 {
+                        let bj = unsafe {
+                            std::slice::from_raw_parts(b.0.add(j * ldb + c0), c1 - c0)
+                        };
+                        for (x, &v) in brow.iter_mut().zip(bj) {
+                            *x -= f * v;
+                        }
+                    }
+                }
+                if !unit {
+                    let d = unsafe { l.at(i, i) };
+                    for x in brow.iter_mut() {
+                        *x /= d;
+                    }
+                }
+            }
+        });
+        if kb > 0 {
+            // trailing update: B[0..kb, :] -= L[kb..ke, 0..kb]^T * X[kb..ke, :]
+            let k2 = ke - kb;
+            // SAFETY: the solved rows [kb, ke) are read-only from here on;
+            // the written rows [0, kb) are disjoint from them and from l.
+            let a2 = unsafe { RawMat::from_raw(l.ptr, l.ld, kb, 0) };
+            let b2 = unsafe { RawMat::from_raw(b.0 as *const f64, ldb, kb, 0) };
+            let c2 = SendSlice(b.0);
+            if dispatch::use_packed(kb, nrhs, k2) {
+                unsafe {
+                    gemm_packed_raw(-1.0, a2, true, b2, false, kb, nrhs, k2, c2, ldb, false);
+                }
+            } else {
+                unsafe { trsm_trailing_axpy(a2, true, b2, kb, k2, c2, ldb, nrhs) };
+            }
+        }
+        ke = kb;
+    }
+}
+
+/// Raw [`trsm_right_into`]: each of the `rows` rows of `b` (width `n`,
+/// row stride `ldb`) independently solves `L x^T = b^T` by forward
+/// substitution against the (n, n) lower-triangular `l`.
+///
+/// # Safety
+/// Same contract as [`trsm_lower_raw`] (with `b` holding `rows` rows of
+/// `n` live columns).
+pub(crate) unsafe fn trsm_right_raw(
+    l: RawMat,
+    n: usize,
+    unit: bool,
+    b: SendSlice,
+    ldb: usize,
+    rows: usize,
+) {
+    par::parallel_for(rows, 8, |lo, hi| {
+        for i in lo..hi {
+            // SAFETY: row i belongs to this chunk alone; l is read-only.
+            let xrow = unsafe { std::slice::from_raw_parts_mut(b.0.add(i * ldb), n) };
+            for j in 0..n {
+                let lrow = unsafe { l.row(j, 0, j) };
+                let s = dot(&xrow[..j], lrow);
+                let v = xrow[j] - s;
+                xrow[j] = if unit { v } else { v / unsafe { l.at(j, j) } };
+            }
+        }
+    });
 }
 
 /// Matrix-vector product `y = A x`.
@@ -562,11 +1304,12 @@ pub fn ger(c: &mut Mat, alpha: f64, x: &[f64], y: &[f64]) -> Result<()> {
 
 /// Raw-pointer Send wrapper (disjoint writes guaranteed by the callers).
 #[derive(Clone, Copy)]
-struct SendSlice(*mut f64);
+pub(crate) struct SendSlice(pub(crate) *mut f64);
 unsafe impl Send for SendSlice {}
 unsafe impl Sync for SendSlice {}
 
 #[cfg(test)]
+#[allow(clippy::needless_range_loop)]
 mod tests {
     use super::*;
     use crate::util::prng::Rng;
@@ -607,7 +1350,7 @@ mod tests {
         // of MR/NR/KC that exercise zero-padded edge tiles
         for &(m, k, n) in &[(192, 128, 96), (193, 130, 97), (68, 300, 105)] {
             assert!(
-                k >= PACKED_MIN_K && m * n * k >= PACKED_MIN_FLOPS,
+                dispatch::use_packed(m, n, k),
                 "({m},{k},{n}) must exercise the packed engine"
             );
             let a = randm(m, k, 3);
@@ -645,12 +1388,49 @@ mod tests {
     }
 
     #[test]
+    fn matmul_nt_packed_matches_dots() {
+        // over the crossover: the packed transpose-aware B path against the
+        // row-dot kernel and the naive reference, edge tiles included
+        for &(m, k, n) in &[(96, 192, 120), (131, 67, 250)] {
+            assert!(dispatch::use_packed(m, n, k), "({m},{k},{n})");
+            let a = randm(m, k, 8);
+            let b = randm(n, k, 9);
+            let got = matmul_nt(&a, &b).unwrap();
+            let mut dots = Mat::default();
+            matmul_nt_dots_into(&a, &b, &mut dots).unwrap();
+            assert!(got.max_abs_diff(&dots) < 1e-9, "({m},{k},{n}) packed vs dots");
+            let want = naive(&a, &b.transpose());
+            assert!(got.max_abs_diff(&want) < 1e-8, "({m},{k},{n}) vs naive");
+        }
+    }
+
+    #[test]
     fn matmul_tn_matches() {
         let a = randm(21, 33, 5);
         let b = randm(21, 13, 6);
         let got = matmul_tn(&a, &b).unwrap();
         let want = naive(&a.transpose(), &b);
         assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn gemm_tn_acc_packed_matches_naive() {
+        // over the crossover: the transpose-aware A packing path
+        for &(k, m, n) in &[(150, 120, 130), (260, 70, 131)] {
+            assert!(dispatch::use_packed(m, n, k), "({k},{m},{n})");
+            let a = randm(k, m, 10);
+            let b = randm(k, n, 11);
+            let mut c = randm(m, n, 12);
+            let c0 = c.clone();
+            gemm_tn_acc(1.5, &a, &b, &mut c).unwrap();
+            let want = naive(&a.transpose(), &b);
+            for i in 0..m {
+                for j in 0..n {
+                    let expect = c0[(i, j)] + 1.5 * want[(i, j)];
+                    assert!((c[(i, j)] - expect).abs() < 1e-8, "({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]
@@ -707,6 +1487,165 @@ mod tests {
         // beta != 0 with a mismatched shape must error
         let mut bad = Mat::zeros(5, 5);
         assert!(syrk_into(1.0, &a, 1.0, &mut bad).is_err());
+    }
+
+    #[test]
+    fn syrk_macro_path_matches_tiled() {
+        // over the crossover: the packed lower-only macro-kernel against
+        // the 4×4 dot-tile path, across edge-tile shapes
+        for &(m, k) in &[(160, 90), (201, 55), (97, 260)] {
+            assert!(dispatch::use_packed(m, m, k), "({m},{k})");
+            let a = randm(m, k, 14);
+            let mut c = Mat::default();
+            syrk_into(1.0, &a, 0.0, &mut c).unwrap();
+            let mut want = Mat::default();
+            syrk_tiled_into(1.0, &a, 0.0, &mut want).unwrap();
+            assert!(c.max_abs_diff(&want) < 1e-9, "({m},{k})");
+            for i in 0..m {
+                for j in 0..i {
+                    assert_eq!(c[(i, j)], c[(j, i)], "({m},{k}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_t_matches_explicit_transpose() {
+        // both sides of the dispatch: small (rank-1 sweep) and packed
+        for &(k, m) in &[(9, 6), (40, 25), (180, 140)] {
+            let a = randm(k, m, 15);
+            let mut c = Mat::default();
+            syrk_t_into(1.0, &a, 0.0, &mut c).unwrap();
+            let want = naive(&a.transpose(), &a);
+            assert!(c.max_abs_diff(&want) < 1e-8, "({k},{m})");
+            for i in 0..m {
+                for j in 0..i {
+                    assert_eq!(c[(i, j)], c[(j, i)], "({k},{m}) at ({i},{j})");
+                }
+            }
+        }
+        // alpha/beta accumulate form
+        let a = randm(12, 8, 16);
+        let mut c = syrk(&randm(8, 5, 17)).unwrap();
+        let c0 = c.clone();
+        syrk_t_into(0.5, &a, 2.0, &mut c).unwrap();
+        let want = naive(&a.transpose(), &a);
+        for i in 0..8 {
+            for j in 0..8 {
+                let expect = 2.0 * c0[(i, j)] + 0.5 * want[(i, j)];
+                assert!((c[(i, j)] - expect).abs() < 1e-9, "({i},{j})");
+            }
+        }
+        let mut bad = Mat::zeros(3, 3);
+        assert!(syrk_t_into(1.0, &a, 1.0, &mut bad).is_err());
+    }
+
+    #[test]
+    fn trsm_lower_matches_substitution() {
+        // sizes below, at, and over the TRSM block width, wide and narrow
+        // RHS (narrow = trailing updates stay on the axpy fallback, wide at
+        // n=256 = packed trailing)
+        for &(n, nrhs, seed) in &[(5, 3, 20), (64, 40, 21), (130, 7, 22), (256, 256, 23)] {
+            let spd = {
+                let g = randm(n, n, seed);
+                let mut s = syrk(&g).unwrap();
+                s.scale(1.0 / n as f64);
+                s.add_diag(1.0).unwrap();
+                s
+            };
+            let l = crate::linalg::solve::cholesky(&spd).unwrap();
+            let b0 = randm(n, nrhs, seed + 100);
+            // forward: L X = B against per-column forward substitution
+            let mut x = b0.clone();
+            trsm_lower_into(&l, false, &mut x).unwrap();
+            let mut want = Mat::zeros(n, nrhs);
+            let mut col = vec![0.0; n];
+            for j in 0..nrhs {
+                for i in 0..n {
+                    col[i] = b0[(i, j)];
+                }
+                crate::linalg::solve::forward_sub(&l, &mut col).unwrap();
+                for i in 0..n {
+                    want[(i, j)] = col[i];
+                }
+            }
+            assert!(x.max_abs_diff(&want) < 1e-9, "forward n={n} nrhs={nrhs}");
+            // backward: L^T X = B against per-column backward substitution
+            let mut xt = b0.clone();
+            trsm_lower_t_into(&l, false, &mut xt).unwrap();
+            let mut want_t = Mat::zeros(n, nrhs);
+            for j in 0..nrhs {
+                for i in 0..n {
+                    col[i] = b0[(i, j)];
+                }
+                crate::linalg::solve::backward_sub_t(&l, &mut col).unwrap();
+                for i in 0..n {
+                    want_t[(i, j)] = col[i];
+                }
+            }
+            assert!(xt.max_abs_diff(&want_t) < 1e-9, "backward n={n} nrhs={nrhs}");
+            // residual check: L X == B
+            let rec = matmul(&l, &x).unwrap();
+            assert!(rec.max_abs_diff(&b0) < 1e-8, "residual n={n} nrhs={nrhs}");
+        }
+    }
+
+    #[test]
+    fn trsm_right_solves_panel() {
+        // X L^T = B row solves (the Cholesky panel shape)
+        let n = 48;
+        let rows = 70;
+        let spd = {
+            let g = randm(n, n, 30);
+            let mut s = syrk(&g).unwrap();
+            s.scale(1.0 / n as f64);
+            s.add_diag(1.0).unwrap();
+            s
+        };
+        let l = crate::linalg::solve::cholesky(&spd).unwrap();
+        let b0 = randm(rows, n, 31);
+        let mut x = b0.clone();
+        trsm_right_into(&mut x, &l, false).unwrap();
+        // X L^T == B
+        let rec = matmul_nt(&x, &l).unwrap();
+        assert!(rec.max_abs_diff(&b0) < 1e-8);
+    }
+
+    #[test]
+    fn trsm_unit_diagonal() {
+        // unit-lower solve (the LU panel case): diagonal never read
+        let n = 90;
+        let mut l = Mat::eye(n);
+        let mut rng = Rng::new(32);
+        for i in 0..n {
+            l[(i, i)] = 1.0;
+            for j in 0..i {
+                l[(i, j)] = 0.3 * rng.gaussian();
+            }
+        }
+        let b0 = randm(n, 33, 33);
+        let mut x = b0.clone();
+        trsm_lower_into(&l, true, &mut x).unwrap();
+        let rec = matmul(&l, &x).unwrap();
+        assert!(rec.max_abs_diff(&b0) < 1e-9);
+        // poisoned diagonal must not matter for the unit solve
+        let mut lp = l.clone();
+        for i in 0..n {
+            lp[(i, i)] = f64::NAN;
+        }
+        let mut xp = b0.clone();
+        trsm_lower_into(&lp, true, &mut xp).unwrap();
+        assert!(xp.max_abs_diff(&x) < 1e-12);
+    }
+
+    #[test]
+    fn trsm_shape_errors() {
+        let l = Mat::zeros(3, 3);
+        let mut b = Mat::zeros(4, 2);
+        assert!(trsm_lower_into(&l, false, &mut b).is_err());
+        assert!(trsm_lower_t_into(&l, false, &mut b).is_err());
+        let mut br = Mat::zeros(2, 4);
+        assert!(trsm_right_into(&mut br, &l, false).is_err());
     }
 
     #[test]
@@ -787,6 +1726,26 @@ mod tests {
             }
         }
         assert!(gemm_nt_acc_block(1.0, &randm(9, 3, 1), &b, &mut c).is_err());
+    }
+
+    #[test]
+    fn nt_acc_block_packed_leading_block() {
+        // the packed arm with ldc > n: a large leading block inside a
+        // larger C — the in-place bordered-grow shape
+        let (m, k, n) = (140, 120, 96);
+        assert!(dispatch::use_packed(m, n, k));
+        let a = randm(m, k, 26);
+        let b = randm(n, k, 27);
+        let mut c = Mat::from_fn(150, 150, |_, _| 1.0);
+        gemm_nt_acc_block(2.0, &a, &b, &mut c).unwrap();
+        let want = naive(&a, &b.transpose());
+        for i in 0..150 {
+            for j in 0..150 {
+                let expect =
+                    if i < m && j < n { 1.0 + 2.0 * want[(i, j)] } else { 1.0 };
+                assert!((c[(i, j)] - expect).abs() < 1e-8, "({i},{j})");
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! everything they need lives here:
 //!
 //! * [`matrix`] — the `Mat` container and views;
-//! * [`gemm`] — blocked, multi-threaded matrix multiply / SYRK / GEMV;
+//! * [`gemm`] — blocked, multi-threaded BLAS-3 behind one shape-adaptive
+//!   packed dispatch ([`gemm::dispatch`]): NN/NT/TN multiply, SYRK (both
+//!   sides), blocked TRSM, GEMV;
 //! * [`solve`] — Cholesky and LU factorizations, triangular solves, SPD and
 //!   general inverses;
 //! * [`woodbury`] — the paper's eq. (13)–(15) batched up/down-dates and the

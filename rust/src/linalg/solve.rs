@@ -5,18 +5,22 @@
 //! retrain (the O(N^3)/O(J^3) cost the paper's incremental rules avoid);
 //! the incremental engines call them once at bootstrap and on periodic
 //! refactorization. Both factorizations are **right-looking blocked**
-//! variants: a small in-cache diagonal factor, a panel solve, and a
-//! trailing update that is a SYRK/GEMM panel product distributed over the
-//! [`crate::par`] worker pool — so bootstrap and baseline costs scale with
-//! cores instead of running on one (before/after numbers in EXPERIMENTS.md
-//! §Perf). The scalar reference implementations are kept as
-//! [`cholesky_naive`]/[`lu_decompose_naive`] for tests and benches.
+//! variants: a small in-cache diagonal factor, a panel solve through the
+//! blocked TRSM family in [`crate::linalg::gemm`], and a trailing
+//! SYRK/GEMM update that routes through the shape-adaptive packed
+//! dispatch ([`crate::linalg::gemm::dispatch`]) — so bootstrap and
+//! baseline costs scale with cores *and* run the packed 4×8 micro-kernel
+//! above the crossover (before/after numbers in EXPERIMENTS.md §Perf).
+//! Large SPD inverses are two blocked TRSMs against the identity instead
+//! of per-column scalar substitution. The scalar reference implementations
+//! are kept as [`cholesky_naive`]/[`lu_decompose_naive`] for tests and
+//! benches.
 
 use crate::ensure_shape;
 use crate::error::{Error, Result};
+use crate::linalg::gemm::{self, dispatch};
 use crate::linalg::matrix::{dot, Mat};
 use crate::par;
-use std::cell::RefCell;
 
 /// Panel width for the blocked factorizations: the NB×NB diagonal block and
 /// an NB-wide panel row stay L1/L2-resident while the trailing update
@@ -25,11 +29,6 @@ const NB: usize = 64;
 /// Below this size the blocked machinery is pure overhead (the Woodbury
 /// cores are ~(|C|+|R|)² — a few dozen elements).
 const MIN_BLOCKED: usize = 96;
-
-thread_local! {
-    /// Per-thread column scratch for the parallel SPD inverse solves.
-    static SOLVE_COL: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
-}
 
 /// Cholesky factorization `A = L L^T` (lower).  Fails if a pivot is not
 /// strictly positive (A not SPD up to roundoff).
@@ -66,40 +65,46 @@ pub fn cholesky_into(a: &Mat, l: &mut Mat) -> Result<()> {
         if panel_end == n {
             break;
         }
-        // panel solve: L21 L11^T = A21 (rows panel_end..n, cols kb..panel_end).
-        // All access goes through the raw pointer: no `&Mat` may alias the
-        // buffer while another lane writes it.
+        // panel solve: L21 L11^T = A21 (rows panel_end..n, cols kb..panel_end)
+        // — a right-side TRSM against the freshly factored diagonal block.
+        // All access goes through raw views: no `&Mat` may alias the buffer
+        // while another lane writes it.
         {
-            let lptr = SendSlice(l.as_mut_slice().as_mut_ptr());
+            let base = l.as_mut_slice().as_mut_ptr();
             let rows = n - panel_end;
-            par::parallel_for(rows, 8, |lo, hi| {
-                let p = lptr;
-                for i in panel_end + lo..panel_end + hi {
-                    // SAFETY: row i is exclusively owned by this chunk; the
-                    // diagonal-block rows read below are disjoint from it
-                    // and read-only in this phase.
-                    let irow =
-                        unsafe { std::slice::from_raw_parts_mut(p.0.add(i * n + kb), nb) };
-                    for j in kb..panel_end {
-                        let jrow = unsafe {
-                            std::slice::from_raw_parts(p.0.add(j * n + kb), j - kb)
-                        };
-                        let s = dot(&irow[..j - kb], jrow);
-                        let d = unsafe { *p.0.add(j * n + j) };
-                        irow[j - kb] = (irow[j - kb] - s) / d;
-                    }
-                }
-            });
+            // SAFETY: the written L21 rows [panel_end, n) and the read L11
+            // rows [kb, panel_end) are disjoint row ranges of the buffer,
+            // and each L21 row is owned by exactly one chunk.
+            unsafe {
+                let l11 = gemm::RawMat::from_raw(base, n, kb, kb);
+                let b21 = gemm::SendSlice(base.add(panel_end * n + kb));
+                gemm::trsm_right_raw(l11, nb, false, b21, n, rows);
+            }
         }
-        // trailing SYRK update: A22 -= L21 L21^T (lower triangle only),
-        // parallel over rows; reads touch only panel columns [kb, panel_end)
-        // which this phase never writes
+        // trailing SYRK update: A22 -= L21 L21^T (lower triangle only).
+        // Reads touch only panel columns [kb, panel_end) which this phase
+        // never writes; above the dispatch crossover the update runs on the
+        // packed lower-only macro-kernel, below it on the 2-row dot sweep.
         {
-            let lptr = SendSlice(l.as_mut_slice().as_mut_ptr());
             let rows = n - panel_end;
-            par::parallel_for(rows, 8, |lo, hi| {
-                trailing_syrk_rows(lptr, n, kb, panel_end, panel_end + lo, panel_end + hi);
-            });
+            if dispatch::use_packed(rows, rows, nb) {
+                let base = l.as_mut_slice().as_mut_ptr();
+                // SAFETY: read columns [kb, panel_end) and written columns
+                // [panel_end, n) are disjoint; the C block is rooted on the
+                // diagonal, so `lower_only` clips to the global triangle.
+                unsafe {
+                    let l21 = gemm::RawMat::from_raw(base, n, panel_end, kb);
+                    let c22 = gemm::SendSlice(base.add(panel_end * n + panel_end));
+                    gemm::gemm_packed_raw(
+                        -1.0, l21, false, l21, true, rows, rows, nb, c22, n, true,
+                    );
+                }
+            } else {
+                let lptr = gemm::SendSlice(l.as_mut_slice().as_mut_ptr());
+                par::parallel_for(rows, 8, |lo, hi| {
+                    trailing_syrk_rows(lptr, n, kb, panel_end, panel_end + lo, panel_end + hi);
+                });
+            }
         }
         kb = panel_end;
     }
@@ -135,7 +140,7 @@ fn chol_diag_block(l: &mut Mat, off: usize, nb: usize) -> Result<()> {
 /// blocked to share the `L[j]` panel loads. Raw-pointer access only — the
 /// panel segments read here (columns `[kb, pe)`) are never written in this
 /// phase, and writes target columns `>= pe` of exclusively-owned rows.
-fn trailing_syrk_rows(lptr: SendSlice, n: usize, kb: usize, pe: usize, lo: usize, hi: usize) {
+fn trailing_syrk_rows(lptr: gemm::SendSlice, n: usize, kb: usize, pe: usize, lo: usize, hi: usize) {
     let p = lptr;
     let nb = pe - kb;
     let mut i = lo;
@@ -254,13 +259,15 @@ pub fn spd_inverse(a: &Mat) -> Result<Mat> {
 
 /// [`spd_inverse`] writing into caller-provided output and scratch buffers
 /// (`l` holds the Cholesky factor, `col` one solve column). Allocation-free
-/// once the buffers' capacities are warm (the parallel path draws extra
-/// per-worker columns from thread-local scratch, likewise reused).
+/// once the buffers' capacities are warm.
 ///
-/// The unit-vector solves are independent per column, so large inverses
-/// distribute them over the worker pool; because `A^-1` is symmetric each
-/// solution is written as a **row** of the output (contiguous stores), and
-/// the final `symmetrize` absorbs roundoff asymmetry exactly as before.
+/// Small systems (the Woodbury update cores) solve unit columns serially
+/// against the caller's scratch — zero heap traffic on the hot path. Large
+/// inverses are BLAS-3: `L X = I` then `L^T A^-1 = X` as two blocked TRSMs
+/// ([`gemm::trsm_lower_into`] / [`gemm::trsm_lower_t_into`]) whose trailing
+/// rank-NB updates ride the packed dispatch, replacing the former
+/// per-column scalar substitution. The final `symmetrize` absorbs roundoff
+/// asymmetry exactly as before.
 pub fn spd_inverse_into(
     a: &Mat,
     out: &mut Mat,
@@ -270,8 +277,9 @@ pub fn spd_inverse_into(
     let n = a.rows();
     cholesky_into(a, l)?;
     out.resize_scratch(n, n);
-    if par::num_threads() <= 1 || n < MIN_BLOCKED {
-        // serial path: the caller's scratch column, zero heap traffic
+    if n < MIN_BLOCKED {
+        // serial path: the caller's scratch column, zero heap traffic;
+        // A^-1 is symmetric so each solution is stored as a row
         col.clear();
         col.resize(n, 0.0);
         for j in 0..n {
@@ -282,27 +290,14 @@ pub fn spd_inverse_into(
             out.row_mut(j).copy_from_slice(col);
         }
     } else {
-        let optr = SendSlice(out.as_mut_slice().as_mut_ptr());
-        let lref = &*l;
-        par::parallel_for(n, 1, |lo, hi| {
-            SOLVE_COL.with(|c| {
-                let mut col = c.borrow_mut();
-                col.clear();
-                col.resize(n, 0.0);
-                for j in lo..hi {
-                    col.fill(0.0);
-                    col[j] = 1.0;
-                    // factor is triangular with positive diagonal: the
-                    // substitutions cannot fail past the shape checks
-                    let _ = forward_sub(lref, &mut col);
-                    let _ = backward_sub_t(lref, &mut col);
-                    // SAFETY: row j is exclusively owned by this chunk.
-                    let orow =
-                        unsafe { std::slice::from_raw_parts_mut(optr.0.add(j * n), n) };
-                    orow.copy_from_slice(&col);
-                }
-            });
-        });
+        out.as_mut_slice().fill(0.0);
+        for j in 0..n {
+            out[(j, j)] = 1.0;
+        }
+        // the factor is triangular with a strictly positive diagonal, so
+        // the solves cannot fail past the (already satisfied) shape checks
+        gemm::trsm_lower_into(l, false, out)?;
+        gemm::trsm_lower_t_into(l, false, out)?;
     }
     // exact-arithmetic symmetry, enforce against roundoff drift
     out.symmetrize();
@@ -382,66 +377,72 @@ pub fn lu_decompose(a: &Mat) -> Result<Lu> {
         if panel_end == n {
             break;
         }
-        // --- U12 = L11^{-1} A12: unit-lower triangular solve, parallel over
-        // column stripes (each stripe updates rows kb..panel_end in place) ---
+        // --- U12 = L11^{-1} A12: unit-lower TRSM on the in-place panel
+        // (one TRSM_NB diagonal block; parallel over RHS column stripes) ---
         {
             let cols = n - panel_end;
-            let luptr = SendSlice(lu.as_mut_slice().as_mut_ptr());
-            par::parallel_for(cols, 64, |clo, chi| {
-                let p = luptr;
-                let (c0, c1) = (panel_end + clo, panel_end + chi);
-                for k in kb..panel_end {
-                    for i in (k + 1)..panel_end {
-                        // SAFETY: each stripe owns columns [c0, c1) of rows
-                        // kb..panel_end exclusively; the multiplier at
-                        // (i, k) lives left of every stripe (read-only in
-                        // this phase).
-                        unsafe {
-                            let f = *p.0.add(i * n + k);
+            let base = lu.as_mut_slice().as_mut_ptr();
+            // SAFETY: the read L11 multipliers (columns [kb, panel_end))
+            // and the written U12 block (columns [panel_end, n) of rows
+            // kb..panel_end) occupy disjoint column ranges; stripes own
+            // disjoint columns.
+            unsafe {
+                let l11 = gemm::RawMat::from_raw(base, n, kb, kb);
+                let b12 = gemm::SendSlice(base.add(kb * n + panel_end));
+                gemm::trsm_lower_raw(l11, nb, true, b12, n, cols);
+            }
+        }
+        // --- trailing GEMM update: A22 -= L21 * U12 — packed above the
+        // dispatch crossover, axpy row sweep below ---
+        {
+            let rows = n - panel_end;
+            let cols = n - panel_end;
+            if dispatch::use_packed(rows, cols, nb) {
+                let base = lu.as_mut_slice().as_mut_ptr();
+                // SAFETY: L21 (columns < panel_end of the written rows) and
+                // U12 (rows < panel_end of the written columns) are both
+                // disjoint from the written A22 block; each A22 row is
+                // owned by exactly one chunk.
+                unsafe {
+                    let l21 = gemm::RawMat::from_raw(base, n, panel_end, kb);
+                    let u12 = gemm::RawMat::from_raw(base, n, kb, panel_end);
+                    let c22 = gemm::SendSlice(base.add(panel_end * n + panel_end));
+                    gemm::gemm_packed_raw(
+                        -1.0, l21, false, u12, false, rows, cols, nb, c22, n, false,
+                    );
+                }
+            } else {
+                let luptr = gemm::SendSlice(lu.as_mut_slice().as_mut_ptr());
+                par::parallel_for(rows, 8, |lo, hi| {
+                    let p = luptr;
+                    for i in panel_end + lo..panel_end + hi {
+                        // SAFETY: row i is exclusively owned by this chunk;
+                        // its multiplier segment (columns < panel_end) and
+                        // the U12 panel rows read below are disjoint from
+                        // the written tail and read-only in this phase.
+                        let irow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                p.0.add(i * n + panel_end),
+                                n - panel_end,
+                            )
+                        };
+                        for k in kb..panel_end {
+                            let f = unsafe { *p.0.add(i * n + k) };
                             if f != 0.0 {
-                                for c in c0..c1 {
-                                    let kv = *p.0.add(k * n + c);
-                                    *p.0.add(i * n + c) -= f * kv;
+                                let krow = unsafe {
+                                    std::slice::from_raw_parts(
+                                        p.0.add(k * n + panel_end),
+                                        n - panel_end,
+                                    )
+                                };
+                                for (iv, &kv) in irow.iter_mut().zip(krow) {
+                                    *iv -= f * kv;
                                 }
                             }
                         }
                     }
-                }
-            });
-        }
-        // --- trailing GEMM update: A22 -= L21 * U12, parallel over rows ---
-        {
-            let rows = n - panel_end;
-            let luptr = SendSlice(lu.as_mut_slice().as_mut_ptr());
-            par::parallel_for(rows, 8, |lo, hi| {
-                let p = luptr;
-                for i in panel_end + lo..panel_end + hi {
-                    // SAFETY: row i is exclusively owned by this chunk; its
-                    // multiplier segment (columns < panel_end) and the U12
-                    // panel rows read below are disjoint from the written
-                    // tail and read-only in this phase.
-                    let irow = unsafe {
-                        std::slice::from_raw_parts_mut(
-                            p.0.add(i * n + panel_end),
-                            n - panel_end,
-                        )
-                    };
-                    for k in kb..panel_end {
-                        let f = unsafe { *p.0.add(i * n + k) };
-                        if f != 0.0 {
-                            let krow = unsafe {
-                                std::slice::from_raw_parts(
-                                    p.0.add(k * n + panel_end),
-                                    n - panel_end,
-                                )
-                            };
-                            for (iv, &kv) in irow.iter_mut().zip(krow) {
-                                *iv -= f * kv;
-                            }
-                        }
-                    }
-                }
-            });
+                });
+            }
         }
         kb = panel_end;
     }
@@ -625,12 +626,6 @@ pub fn lu_solve_mat_in_place(a: &mut Mat, b: &mut Mat) -> Result<()> {
     }
     Ok(())
 }
-
-/// Raw-pointer Send wrapper (disjoint writes guaranteed by the callers).
-#[derive(Clone, Copy)]
-struct SendSlice(*mut f64);
-unsafe impl Send for SendSlice {}
-unsafe impl Sync for SendSlice {}
 
 #[cfg(test)]
 mod tests {

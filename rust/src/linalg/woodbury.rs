@@ -12,6 +12,13 @@
 //! All three avoid the O(n^3) fresh inverse: `incdec` costs O(J^2 H + H^3),
 //! grow costs O(N^2 |C|), shrink costs O(N^2 |R|).
 //!
+//! Every product below goes through the shape-adaptive dispatch in
+//! [`crate::linalg::gemm::dispatch`]: the typical small-|H| rounds (k =
+//! |C| + |R| ≤ a few dozen) stay on the streaming axpy/row-dot kernels by
+//! design, while a large batch against a large maintained inverse (e.g. a
+//! wide grow block at J = 2024) crosses into the packed 4×8 micro-kernel
+//! automatically — no per-call-site tuning.
+//!
 //! # Workspace contract
 //!
 //! The `_into` variants take a workspace ([`IncDecWork`] / [`BorderWork`])
@@ -95,6 +102,8 @@ pub fn incdec_into(
     // T = S^-1 Φ_H  (J, H) — computed as row-dots against Φ_H^T so the
     // inner loops run over contiguous length-J slices instead of length-H
     // strided columns (≈2x on the J=253/H=6 hot path; EXPERIMENTS.md §Perf).
+    // For |H| past the dispatch crossover the same call rides the packed
+    // NT engine instead.
     phi_h.transpose_into(&mut work.phi_t); // (H, J)
     matmul_nt_into(s_inv, &work.phi_t, &mut work.t)?;
     // core = I + diag(s) Φ_H^T T                    (H, H)
@@ -198,6 +207,8 @@ pub fn bordered_grow_into(
         return Ok(());
     }
     // G = -Q^-1 eta          (N, C)     [paper eq. 23, matrix version]
+    // (small |C| streams on the axpy kernel; wide grow blocks at large N
+    // cross into the packed engine — gemm::dispatch decides)
     matmul_into(q_inv, eta, &mut work.g)?;
     work.g.scale(-1.0);
     // Z = q_cc - eta^T Q^-1 eta = q_cc + eta^T G    (C, C)

@@ -24,6 +24,16 @@
 //! (single lane): the pool is flat by design, which both avoids queue
 //! deadlock and keeps the thread count bounded by [`num_threads`].
 //!
+//! Both sides of the handshake use a **spin-then-park backoff**: an idle
+//! worker first busy-polls the queue-length counter for [`SPIN_ITERS`]
+//! pause cycles before parking on the condvar, and a dispatching caller
+//! likewise spins briefly before `thread::park`. Back-to-back sub-100µs
+//! dispatches (the skinny update shapes of a small-J round) therefore hand
+//! work over without a futex wake per call; a pool that goes quiet parks
+//! within tens of microseconds and burns nothing. The lane count itself is
+//! computed once ([`num_threads`] caches it) and frozen into the pool at
+//! build time.
+//!
 //! `MIKRR_THREADS=1` (or a single-core host) means the pool is never built
 //! and every call runs inline on the caller — the allocation-free path the
 //! engines' zero-allocation contract is measured on.
@@ -71,6 +81,13 @@ pub fn num_threads() -> usize {
 /// cursor is uncontended relative to chunk work.
 const CHUNKS_PER_LANE: usize = 4;
 
+/// Busy-poll iterations before an idle lane falls back to blocking
+/// (worker: condvar wait; caller: `thread::park`). One iteration is an
+/// atomic load plus a `spin_loop` hint — the budget covers a few tens of
+/// microseconds, which spans the inter-dispatch gap of the small-J update
+/// rounds without noticeably occupying a core when the pool goes idle.
+const SPIN_ITERS: usize = 1 << 14;
+
 /// One dispatched `parallel_for`, shared between the caller and the pool.
 /// Lives on the caller's stack for the duration of the call; the caller
 /// blocks until `pending` reaches zero, which is what makes the lifetime
@@ -107,12 +124,16 @@ unsafe impl Send for Ticket {}
 struct PoolShared {
     queue: Mutex<VecDeque<Ticket>>,
     available: Condvar,
+    /// Tickets currently queued (kept in sync under the queue lock): lets
+    /// idle workers spin-poll for work without touching the mutex.
+    queued: AtomicUsize,
 }
 
 struct Pool {
     shared: &'static PoolShared,
-    /// Worker thread count (lanes minus the caller).
-    workers: usize,
+    /// Cached lane count (spawned workers + the caller), frozen at build
+    /// time so a dispatch never re-derives it from the environment.
+    lanes: usize,
 }
 
 thread_local! {
@@ -135,6 +156,7 @@ fn pool() -> Option<&'static Pool> {
         let shared: &'static PoolShared = Box::leak(Box::new(PoolShared {
             queue: Mutex::new(VecDeque::with_capacity(4 * workers)),
             available: Condvar::new(),
+            queued: AtomicUsize::new(0),
         }));
         for w in 0..workers {
             std::thread::Builder::new()
@@ -142,23 +164,40 @@ fn pool() -> Option<&'static Pool> {
                 .spawn(move || worker_loop(shared))
                 .expect("failed to spawn mikrr pool worker");
         }
-        Some(Pool { shared, workers })
+        Some(Pool { shared, lanes: workers + 1 })
     })
     .as_ref()
+}
+
+/// Claim the next ticket: spin-poll the queue-length counter first (a
+/// sub-100µs dispatch cadence is served without futex traffic), then park
+/// on the condvar.
+fn next_ticket(shared: &'static PoolShared) -> Ticket {
+    for _ in 0..SPIN_ITERS {
+        if shared.queued.load(Ordering::Acquire) > 0 {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            if let Some(t) = q.pop_front() {
+                shared.queued.fetch_sub(1, Ordering::Relaxed);
+                return t;
+            }
+            // another lane won the race: keep spinning
+        }
+        std::hint::spin_loop();
+    }
+    let mut q = shared.queue.lock().expect("pool queue poisoned");
+    loop {
+        if let Some(t) = q.pop_front() {
+            shared.queued.fetch_sub(1, Ordering::Relaxed);
+            return t;
+        }
+        q = shared.available.wait(q).expect("pool queue poisoned");
+    }
 }
 
 fn worker_loop(shared: &'static PoolShared) {
     IS_POOL_WORKER.with(|f| f.set(true));
     loop {
-        let ticket = {
-            let mut q = shared.queue.lock().expect("pool queue poisoned");
-            loop {
-                if let Some(t) = q.pop_front() {
-                    break t;
-                }
-                q = shared.available.wait(q).expect("pool queue poisoned");
-            }
-        };
+        let ticket = next_ticket(shared);
         // SAFETY: the publishing caller keeps the JobShared alive until
         // `pending` reaches zero; we decrement only after the last access.
         let job = unsafe { &*ticket.0 };
@@ -219,11 +258,13 @@ where
         return;
     };
     // Never queue more tickets than there are chunks to claim.
-    let helpers = pool.workers.min(n.saturating_sub(1));
+    let helpers = (pool.lanes - 1).min(n.saturating_sub(1));
     if helpers == 0 {
         body(0, n);
         return;
     }
+    // active lanes for this call: the helpers plus the caller (fewer than
+    // pool.lanes when n is small)
     let lanes = helpers + 1;
     let chunk = n.div_ceil(lanes * CHUNKS_PER_LANE).max(1);
     let body_ref: &(dyn Fn(usize, usize) + Sync) = &body;
@@ -246,6 +287,9 @@ where
         for _ in 0..helpers {
             q.push_back(Ticket(&job));
         }
+        // publish the new length while still holding the lock: spinning
+        // workers see it immediately, parked ones get the notify below
+        pool.shared.queued.fetch_add(helpers, Ordering::Release);
     }
     pool.shared.available.notify_all();
     // The caller is a full lane: claim chunks alongside the workers. A
@@ -257,9 +301,17 @@ where
     }
     // Wait for every ticket to drain. The Acquire load pairs with the
     // workers' AcqRel decrement, making their body writes visible here.
-    // `park` can wake spuriously (or from a stale token), hence the loop.
+    // Spin first — the tail of a small dispatch drains in microseconds —
+    // then park. `park` can wake spuriously (or from a stale token), hence
+    // the loop.
+    let mut spins = 0usize;
     while job.pending.load(Ordering::Acquire) != 0 {
-        std::thread::park();
+        if spins < SPIN_ITERS {
+            spins += 1;
+            std::hint::spin_loop();
+        } else {
+            std::thread::park();
+        }
     }
     if let Err(payload) = outcome {
         std::panic::resume_unwind(payload);

@@ -1,6 +1,8 @@
 //! The AOT runtime: loads the HLO-text artifacts produced by
 //! `python/compile/aot.py`, compiles them once on the PJRT CPU client
-//! (`xla` crate), and executes them from the L3 hot path.
+//! (`xla` crate, behind the off-by-default `pjrt` cargo feature — without
+//! it a stub runtime reports itself unavailable and everything runs on the
+//! native linalg path), and executes them from the L3 hot path.
 //!
 //! [`hybrid::HybridExec`] is the piece the engines actually use: it
 //! dispatches to an AOT executable when the live shapes match the

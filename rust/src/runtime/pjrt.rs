@@ -4,9 +4,20 @@
 //! HLO **text** is the interchange format (not serialized protos): jax
 //! >= 0.5 emits 64-bit instruction ids which xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate is not part of the offline crate set, so the whole
+//! runtime sits behind the off-by-default `pjrt` cargo feature. Without it
+//! this module compiles a **stub** [`PjrtRuntime`] whose `load_dir` always
+//! fails with a descriptive error — [`crate::runtime::HybridExec`] then
+//! stays on the native f64 linalg path, which is the production
+//! configuration in this container. The host-side [`Tensor`] type is
+//! feature-independent (tests and the hybrid dispatch use it either way).
 
 use crate::error::{Error, Result};
-use crate::runtime::artifacts::{ArtifactSpec, Manifest};
+#[cfg(feature = "pjrt")]
+use crate::runtime::artifacts::ArtifactSpec;
+use crate::runtime::artifacts::Manifest;
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -50,6 +61,7 @@ impl Tensor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(&t.data);
     if t.dims.is_empty() {
@@ -61,6 +73,7 @@ fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape().map_err(wrap)?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -68,17 +81,20 @@ fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
     Ok(Tensor { dims, data })
 }
 
+#[cfg(feature = "pjrt")]
 fn wrap(e: xla::Error) -> Error {
     Error::Runtime(e.to_string())
 }
 
 /// A compiled artifact.
+#[cfg(feature = "pjrt")]
 struct Compiled {
     exe: xla::PjRtLoadedExecutable,
     spec: ArtifactSpec,
 }
 
 /// The PJRT runtime: one CPU client + all compiled artifacts.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -87,6 +103,7 @@ pub struct PjrtRuntime {
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Load every artifact in `dir` (per its manifest) and compile.
     pub fn load_dir(dir: &Path) -> Result<Self> {
@@ -142,6 +159,39 @@ impl PjrtRuntime {
     }
 }
 
+/// Feature-off stub: same API surface, but can never be constructed —
+/// [`PjrtRuntime::load_dir`] always errors, so `HybridExec::auto()` falls
+/// back to the native path and the accessors below are statically
+/// unreachable (the uninhabited field proves it to the compiler).
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    /// The manifest the artifacts were loaded from.
+    pub manifest: Manifest,
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load_dir(_dir: &Path) -> Result<Self> {
+        Err(Error::Runtime(
+            "built without the `pjrt` feature: enable it (and vendor the \
+             offline `xla` crate — see rust/Cargo.toml) to load AOT artifacts"
+                .to_string(),
+        ))
+    }
+
+    /// Names of loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        match self.never {}
+    }
+
+    /// Execute an artifact with host tensors; returns the output tuple.
+    pub fn execute(&self, _name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match self.never {}
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +204,13 @@ mod tests {
         let back = t.to_mat().unwrap();
         assert!(back.max_abs_diff(&m) < 1e-6);
         assert!(Tensor::scalar(1.5).to_mat().is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_dir_always_errors() {
+        let err = PjrtRuntime::load_dir(Path::new("/nonexistent")).err();
+        let msg = err.expect("stub must refuse to load").to_string();
+        assert!(msg.contains("pjrt"), "unhelpful stub error: {msg}");
     }
 }

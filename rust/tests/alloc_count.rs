@@ -144,4 +144,45 @@ fn steady_state_inc_dec_is_allocation_free() {
         );
         assert_eq!(model.n_samples(), 30);
     }
+
+    // --- packed BLAS-3 + blocked TRSM, 1-thread path: once the output
+    // buffers and the thread-local packing panels are warm, the kernels
+    // must not touch the heap either (they sit under every engine above) ---
+    {
+        use mikrr::linalg::gemm::{dispatch, matmul_into, syrk_into, trsm_lower_into};
+        use mikrr::linalg::solve::cholesky_into;
+
+        let n = 160; // over the packed crossover: 160^3 >= 2^21, k >= 32
+        assert!(dispatch::use_packed(n, n, n));
+        let mut rng = Rng::new(50);
+        let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let b = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let spd = {
+            let mut s = Mat::default();
+            syrk_into(1.0 / n as f64, &a, 0.0, &mut s).unwrap();
+            s.add_diag(1.0).unwrap();
+            s
+        };
+        let mut c = Mat::default();
+        let mut l = Mat::default();
+        let mut rhs = b.clone();
+        // warm: packing panels, output scratch, factor buffer
+        matmul_into(&a, &b, &mut c).unwrap();
+        cholesky_into(&spd, &mut l).unwrap();
+        trsm_lower_into(&l, false, &mut rhs).unwrap();
+        let allocs = steady_state_allocs(
+            || {
+                matmul_into(&a, &b, &mut c).unwrap();
+                syrk_into(1.0, &a, 0.0, &mut c).unwrap();
+                cholesky_into(&spd, &mut l).unwrap();
+                trsm_lower_into(&l, false, &mut rhs).unwrap();
+            },
+            1,
+            3,
+        );
+        assert_eq!(
+            allocs, 0,
+            "warm packed gemm/syrk/cholesky/trsm allocated {allocs} times"
+        );
+    }
 }

@@ -1,6 +1,8 @@
-//! Property tests for the SIMD-packed compute core: packed GEMM, SYRK, and
-//! the blocked parallel factorizations, validated against the scalar
-//! references.
+//! Property tests for the SIMD-packed compute core: the shape-adaptive
+//! packed dispatch (NN/NT/TN products, SYRK macro-kernel, transpose-side
+//! SYRK), the blocked TRSM family, and the blocked parallel
+//! factorizations, all validated against the scalar references across
+//! skinny, square, and J=2024-shaped inputs.
 //!
 //! This binary deliberately does NOT pin `MIKRR_THREADS`: on a multi-core
 //! host the blocked kernels dispatch onto the persistent worker pool while
@@ -11,9 +13,14 @@
 //! bitwise reproducible — asserted separately below.) To pin the inline
 //! path instead, run with `MIKRR_THREADS=1`.
 
-use mikrr::linalg::gemm::{matmul, matmul_nt_into, syrk, syrk_into};
+use mikrr::linalg::gemm::{
+    dispatch, gemm_tn_acc, matmul, matmul_nt, matmul_nt_dots_into, matmul_nt_into, matmul_tn,
+    syrk, syrk_into, syrk_t_into, syrk_tiled_into, trsm_lower_into, trsm_lower_t_into,
+    trsm_right_into,
+};
 use mikrr::linalg::solve::{
-    cholesky, cholesky_naive, lu_decompose, lu_decompose_naive, spd_inverse,
+    backward_sub_t, cholesky, cholesky_naive, forward_sub, lu_decompose, lu_decompose_naive,
+    spd_inverse,
 };
 use mikrr::linalg::Mat;
 use mikrr::testutil::{assert_mat_close, random_mat, random_spd, Cases};
@@ -122,6 +129,156 @@ fn parallel_kernels_are_bitwise_deterministic() {
     let i1 = spd_inverse(&spd).unwrap();
     let i2 = spd_inverse(&spd).unwrap();
     assert!(i1 == i2, "spd_inverse not reproducible");
+}
+
+/// Packed NT products (`A B^T`) match the row-dot reference to 1e-10
+/// across random shapes straddling the dispatch crossover, plus fixed
+/// skinny / square / J=2024-shaped cases pinned to the packed engine.
+#[test]
+fn prop_packed_nt_matches_rowdots() {
+    Cases::new(20, 0xC1).run(|rng| {
+        let m = 1 + rng.below(160);
+        let n = 1 + rng.below(160);
+        let k = 1 + rng.below(280);
+        let a = random_mat(rng, m, k, 0.6);
+        let b = random_mat(rng, n, k, 0.6);
+        let got = matmul_nt(&a, &b).unwrap();
+        let mut want = Mat::default();
+        matmul_nt_dots_into(&a, &b, &mut want).unwrap();
+        assert_mat_close(&got, &want, 1e-10);
+    });
+    // pinned to the packed engine: skinny (tall × narrow, the J=2024
+    // update-algebra shape), square, and wide
+    let mut rng = mikrr::util::prng::Rng::new(0xC2);
+    for &(m, k, n) in &[(2024, 40, 48), (160, 160, 160), (48, 300, 200)] {
+        assert!(dispatch::use_packed(m, n, k), "({m},{k},{n}) must be packed");
+        let a = random_mat(&mut rng, m, k, 0.5);
+        let b = random_mat(&mut rng, n, k, 0.5);
+        let got = matmul_nt(&a, &b).unwrap();
+        let mut want = Mat::default();
+        matmul_nt_dots_into(&a, &b, &mut want).unwrap();
+        assert_mat_close(&got, &want, 1e-10);
+    }
+}
+
+/// Packed TN products (`A^T B` accumulate) match the explicit-transpose
+/// reference to 1e-10 on both sides of the crossover.
+#[test]
+fn prop_packed_tn_matches_reference() {
+    Cases::new(20, 0xC3).run(|rng| {
+        let k = 1 + rng.below(280);
+        let m = 1 + rng.below(140);
+        let n = 1 + rng.below(140);
+        let a = random_mat(rng, k, m, 0.6);
+        let b = random_mat(rng, k, n, 0.6);
+        let mut c = random_mat(rng, m, n, 0.3);
+        let mut want = matmul(&a.transpose(), &b).unwrap();
+        want.scale(1.5);
+        want.axpy(1.0, &c).unwrap();
+        gemm_tn_acc(1.5, &a, &b, &mut c).unwrap();
+        assert_mat_close(&c, &want, 1e-10);
+        // the allocating wrapper takes the same dispatch
+        let tn = matmul_tn(&a, &b).unwrap();
+        assert_mat_close(&tn, &matmul(&a.transpose(), &b).unwrap(), 1e-10);
+    });
+}
+
+/// The SYRK macro-kernel (packed lower-only path) matches the 4×4
+/// dot-tile reference to 1e-10, including a J=2024-shaped Gram build, and
+/// stays exactly symmetric.
+#[test]
+fn prop_syrk_macro_matches_tiled() {
+    Cases::new(15, 0xC4).run(|rng| {
+        let m = 1 + rng.below(200);
+        let k = 1 + rng.below(220);
+        let a = random_mat(rng, m, k, 0.6);
+        let mut got = Mat::default();
+        syrk_into(1.0, &a, 0.0, &mut got).unwrap();
+        let mut want = Mat::default();
+        syrk_tiled_into(1.0, &a, 0.0, &mut want).unwrap();
+        assert_mat_close(&got, &want, 1e-10);
+        for i in 0..m {
+            for j in 0..i {
+                assert_eq!(got[(i, j)], got[(j, i)], "asymmetric at ({i},{j})");
+            }
+        }
+    });
+    // the paper's poly3 intrinsic dimension: a (2024, 40) panel product
+    // through the macro-kernel
+    let mut rng = mikrr::util::prng::Rng::new(0xC5);
+    let a = random_mat(&mut rng, 2024, 40, 0.4);
+    assert!(dispatch::use_packed(a.rows(), a.rows(), a.cols()));
+    let mut got = Mat::default();
+    syrk_into(1.0, &a, 0.0, &mut got).unwrap();
+    let mut want = Mat::default();
+    syrk_tiled_into(1.0, &a, 0.0, &mut want).unwrap();
+    assert_mat_close(&got, &want, 1e-10);
+}
+
+/// The transpose-side SYRK (`A^T A`, the scatter/precision build) matches
+/// the explicit-transpose reference on both sides of the crossover.
+#[test]
+fn prop_syrk_t_matches_reference() {
+    Cases::new(15, 0xC6).run(|rng| {
+        let k = 1 + rng.below(220);
+        let m = 1 + rng.below(160);
+        let a = random_mat(rng, k, m, 0.6);
+        let mut got = Mat::default();
+        syrk_t_into(1.0, &a, 0.0, &mut got).unwrap();
+        let want = syrk(&a.transpose()).unwrap();
+        assert_mat_close(&got, &want, 1e-10);
+    });
+}
+
+/// Blocked TRSM (forward, backward, and right-side) matches per-column /
+/// per-row scalar substitution to 1e-10 across sizes straddling the block
+/// width, including RHS widths that push the trailing update onto the
+/// packed engine.
+#[test]
+fn prop_trsm_matches_substitution() {
+    Cases::new(10, 0xC7).run(|rng| {
+        let n = 2 + rng.below(260);
+        let nrhs = 1 + rng.below(200);
+        let spd = random_spd(rng, n, n as f64);
+        let l = cholesky(&spd).unwrap();
+        let b0 = random_mat(rng, n, nrhs, 0.8);
+        let mut col = vec![0.0; n];
+        // forward: L X = B
+        let mut x = b0.clone();
+        trsm_lower_into(&l, false, &mut x).unwrap();
+        let mut want = Mat::zeros(n, nrhs);
+        for j in 0..nrhs {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = b0[(i, j)];
+            }
+            forward_sub(&l, &mut col).unwrap();
+            for (i, c) in col.iter().enumerate() {
+                want[(i, j)] = *c;
+            }
+        }
+        assert_mat_close(&x, &want, 1e-10);
+        // backward: L^T X = B
+        let mut xt = b0.clone();
+        trsm_lower_t_into(&l, false, &mut xt).unwrap();
+        let mut want_t = Mat::zeros(n, nrhs);
+        for j in 0..nrhs {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = b0[(i, j)];
+            }
+            backward_sub_t(&l, &mut col).unwrap();
+            for (i, c) in col.iter().enumerate() {
+                want_t[(i, j)] = *c;
+            }
+        }
+        assert_mat_close(&xt, &want_t, 1e-10);
+        // right-side: X L^T = B, checked by residual
+        let rows = 1 + rng.below(120);
+        let br = random_mat(rng, rows, n, 0.8);
+        let mut xr = br.clone();
+        trsm_right_into(&mut xr, &l, false).unwrap();
+        let rec = matmul_nt(&xr, &l).unwrap();
+        assert_mat_close(&rec, &br, 1e-9);
+    });
 }
 
 /// The factorizations behind the engines' bootstrap agree end-to-end: a
