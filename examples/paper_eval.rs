@@ -72,7 +72,11 @@ fn main() -> Result<(), Error> {
     for (id, data, kernel, space, train) in krr_cells {
         eprintln!("running {id} ...");
         let report = run_krr(data, &kernel, 0.5, space, train, rounds, 4, 2, seed, &strategies)?;
-        let title = format!("{id} (acc {:.2}%, agree {})", 100.0 * report.accuracy, report.strategies_agree);
+        let title = format!(
+            "{id} (acc {:.2}%, agree {})",
+            100.0 * report.accuracy,
+            report.strategies_agree
+        );
         println!("{}", report.record.render_table(&title));
         println!("{}", report.record.render_curves(&format!("{id} cumulative")));
         cells.push(Cell { id, title, report });
@@ -84,7 +88,8 @@ fn main() -> Result<(), Error> {
         ("T11/F8 KBR-ECG-poly3", Kernel::poly(3, 1.0)),
     ] {
         eprintln!("running {id} ...");
-        let report = run_kbr(&ecg, &kernel, KbrHyper::default(), train_ecg, rounds, 4, 2, seed, true)?;
+        let report =
+            run_kbr(&ecg, &kernel, KbrHyper::default(), train_ecg, rounds, 4, 2, seed, true)?;
         let title = format!("{id} (agree {})", report.strategies_agree);
         println!("{}", report.record.render_table(&title));
         println!("{}", report.record.render_curves(&format!("{id} cumulative")));

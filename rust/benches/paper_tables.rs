@@ -58,12 +58,14 @@ fn main() {
     let strategies = [Strategy::Multiple, Strategy::Single, Strategy::None];
 
     // ----- Tables IV-VIII / Figures 2-6 (KRR) -----
+    let ecg_n = sz.ecg_train;
+    let drt_n = sz.drt_train;
     let krr_cells: [(&str, bool, Kernel, Space, usize); 5] = [
-        ("ecg_poly2 [Table IV / Fig 2]", true, Kernel::poly(2, 1.0), Space::Intrinsic, sz.ecg_train),
-        ("ecg_poly3 [Table V / Fig 3]", true, Kernel::poly(3, 1.0), Space::Intrinsic, sz.ecg_train),
-        ("drt_poly2 [Table VI / Fig 4]", false, Kernel::poly(2, 1.0), Space::Empirical, sz.drt_train),
-        ("drt_poly3 [Table VII / Fig 5]", false, Kernel::poly(3, 1.0), Space::Empirical, sz.drt_train),
-        ("drt_rbf   [Table VIII / Fig 6]", false, Kernel::rbf_radius(50.0), Space::Empirical, sz.drt_train),
+        ("ecg_poly2 [Table IV / Fig 2]", true, Kernel::poly(2, 1.0), Space::Intrinsic, ecg_n),
+        ("ecg_poly3 [Table V / Fig 3]", true, Kernel::poly(3, 1.0), Space::Intrinsic, ecg_n),
+        ("drt_poly2 [Table VI / Fig 4]", false, Kernel::poly(2, 1.0), Space::Empirical, drt_n),
+        ("drt_poly3 [Table VII / Fig 5]", false, Kernel::poly(3, 1.0), Space::Empirical, drt_n),
+        ("drt_rbf [Table VIII / Fig 6]", false, Kernel::rbf_radius(50.0), Space::Empirical, drt_n),
     ];
     let mut krr_summaries = Vec::new();
     for (id, is_ecg, kernel, space, train) in krr_cells {
@@ -121,8 +123,18 @@ fn main() {
         let mut report = None;
         b.bench_once(id, || {
             report = Some(
-                run_kbr(data, &kernel, KbrHyper::default(), sz.ecg_train, sz.rounds, 4, 2, seed, true)
-                    .expect("kbr cell failed"),
+                run_kbr(
+                    data,
+                    &kernel,
+                    KbrHyper::default(),
+                    sz.ecg_train,
+                    sz.rounds,
+                    4,
+                    2,
+                    seed,
+                    true,
+                )
+                .expect("kbr cell failed"),
             );
         });
         let report = report.unwrap();

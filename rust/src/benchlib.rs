@@ -212,8 +212,9 @@ impl Bencher {
     /// the offline crate set has no serde.
     ///
     /// Every report carries an `env` block (worker-pool lane count, the raw
-    /// `MIKRR_THREADS` override if any, and the build profile) so entries
-    /// from different runs are comparable across the perf trajectory.
+    /// `MIKRR_THREADS` override if any, the number of pinned worker lanes,
+    /// the dispatch-tuning source, and the build profile) so entries from
+    /// different runs are comparable across the perf trajectory.
     pub fn write_json(&self, path: &str, extra: &[(&str, f64)]) -> std::io::Result<()> {
         let mut out = String::from("{\n  \"benchmarks\": [");
         for (i, s) in self.results.iter().enumerate() {
@@ -244,6 +245,14 @@ impl Bencher {
         out.push_str(&format!(
             "\n    \"max_threads_cap\": {},",
             crate::par::MAX_THREADS
+        ));
+        out.push_str(&format!(
+            "\n    \"pinned_lanes\": {},",
+            crate::par::pinned_lanes()
+        ));
+        out.push_str(&format!(
+            "\n    \"tuning\": \"{}\",",
+            json_escape(crate::linalg::gemm::dispatch::tune::source())
         ));
         out.push_str(&format!(
             "\n    \"profile\": \"{}\"",
@@ -426,6 +435,8 @@ mod tests {
         assert!(text.contains("\"threads\": "));
         assert!(text.contains("\"mikrr_threads\""));
         assert!(text.contains("\"max_threads_cap\""));
+        assert!(text.contains("\"pinned_lanes\": "));
+        assert!(text.contains("\"tuning\": \""));
         let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
         assert!(text.contains(&format!("\"profile\": \"{profile}\"")));
         std::fs::remove_file(path).ok();

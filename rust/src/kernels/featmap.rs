@@ -185,7 +185,8 @@ mod tests {
     fn defining_identity_phi_dot_phi_is_kernel() {
         // phi(x).phi(y) == (x.y + c)^d for random data, several (m, d, c)
         let mut rng = Rng::new(1);
-        for &(m, d, c) in &[(1usize, 2usize, 1.0f64), (3, 2, 1.0), (5, 3, 1.0), (4, 2, 2.0), (6, 1, 0.5)] {
+        let cases = [(1usize, 2usize, 1.0f64), (3, 2, 1.0), (5, 3, 1.0), (4, 2, 2.0), (6, 1, 0.5)];
+        for &(m, d, c) in &cases {
             let t = MonomialTable::new(m, d, c);
             let x: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
             let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();

@@ -175,7 +175,12 @@ mod tests {
     fn gram_matches_pointwise_eval() {
         let x = randm(23, 7, 1);
         let y = randm(17, 7, 2);
-        for kernel in [Kernel::Linear, Kernel::poly(2, 1.0), Kernel::poly(3, 1.0), Kernel::rbf_radius(2.0)] {
+        for kernel in [
+            Kernel::Linear,
+            Kernel::poly(2, 1.0),
+            Kernel::poly(3, 1.0),
+            Kernel::rbf_radius(2.0),
+        ] {
             let k = gram(&kernel, &x, &y);
             assert_eq!(k.shape(), (23, 17));
             for i in [0usize, 9, 22] {
@@ -195,7 +200,12 @@ mod tests {
     fn gram_symmetric_matches_pointwise_eval() {
         // the SYRK route against the defining formula, every kernel
         let x = randm(21, 6, 11);
-        for kernel in [Kernel::Linear, Kernel::poly(2, 1.0), Kernel::poly(3, 1.0), Kernel::rbf_radius(2.0)] {
+        for kernel in [
+            Kernel::Linear,
+            Kernel::poly(2, 1.0),
+            Kernel::poly(3, 1.0),
+            Kernel::rbf_radius(2.0),
+        ] {
             let k = gram_symmetric(&kernel, &x);
             assert_eq!(k.shape(), (21, 21));
             for i in 0..21 {

@@ -99,7 +99,13 @@ impl EmpiricalKrr {
     /// warm workspace.
     fn refresh_head(&mut self) -> Result<()> {
         let n = self.y.len();
-        ensure_shape!(self.q_inv.rows() == n, "refresh_head", "q_inv {:?} vs n {}", self.q_inv.shape(), n);
+        ensure_shape!(
+            self.q_inv.rows() == n,
+            "refresh_head",
+            "q_inv {:?} vs n {}",
+            self.q_inv.shape(),
+            n
+        );
         // v = Q^-1 e ; b = (y.v) / (e.v) ; a = Q^-1 y - b v
         self.q_inv.row_sums_into(&mut self.work.v);
         let ev: f64 = self.work.v.iter().sum();

@@ -73,7 +73,12 @@ impl SparseEmpiricalKrr {
     }
 
     /// One batched +|C|/−|R| round (eq. 30 ordering: shrink then grow).
-    pub fn inc_dec(&mut self, x_new: &SparseMat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+    pub fn inc_dec(
+        &mut self,
+        x_new: &SparseMat,
+        y_new: &[f64],
+        remove_idx: &[usize],
+    ) -> Result<()> {
         ensure_shape!(
             x_new.rows() == y_new.len() && x_new.cols() == self.x.cols(),
             "SparseEmpiricalKrr::inc_dec",

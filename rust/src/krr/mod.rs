@@ -52,7 +52,9 @@ pub fn classification_accuracy(pred: &[f64], y: &[f64]) -> f64 {
     let hits = pred
         .iter()
         .zip(y)
-        .filter(|(p, t)| (p.is_sign_positive() && **t > 0.0) || (p.is_sign_negative() && **t <= 0.0))
+        .filter(|(p, t)| {
+            (p.is_sign_positive() && **t > 0.0) || (p.is_sign_negative() && **t <= 0.0)
+        })
         .count();
     hits as f64 / pred.len() as f64
 }

@@ -94,19 +94,161 @@ const TRSM_MIN_COLS: usize = 64;
 /// `core/*` microbenches; re-tune the constants against
 /// `BENCH_microbench.json` when the container hardware changes.
 pub mod dispatch {
-    /// Minimum `m·n·k` multiply-add volume for the packed engine.
+    /// Code-default minimum `m·n·k` multiply-add volume for the packed
+    /// engine (overridable via the [`tune`] table).
     pub const PACKED_MIN_FLOPS: usize = 1 << 21;
-    /// Minimum product depth k for the packed engine.
+    /// Code-default minimum product depth k for the packed engine
+    /// (overridable via the [`tune`] table).
     pub const PACKED_MIN_K: usize = 32;
 
     /// Should a `(m×k)·(k×n)` product take the packed micro-kernel path?
-    /// (See the module docs for the rationale behind each term.)
+    /// (See the module docs for the rationale behind each term.) The
+    /// crossover constants come from the startup calibration table
+    /// ([`tune::table`]); the register-tile minima `MR`/`NR` are
+    /// structural and never tuned.
     #[inline]
     pub fn use_packed(m: usize, n: usize, k: usize) -> bool {
-        k >= PACKED_MIN_K
+        let t = tune::table();
+        k >= t.packed_min_k
             && m >= super::MR
             && n >= super::NR
-            && m.saturating_mul(n).saturating_mul(k) >= PACKED_MIN_FLOPS
+            && m.saturating_mul(n).saturating_mul(k) >= t.packed_min_flops
+    }
+
+    pub mod tune {
+        //! Startup calibration for the dispatch crossovers.
+        //!
+        //! The checked-in `rust/tuning.toml` carries the measured (or, until
+        //! the first CI bench run, default) crossover constants, so the
+        //! first `BENCH_microbench.json` produced by the CI `bench` job can
+        //! re-tune [`use_packed`](super::use_packed) **without touching
+        //! code**: edit the table, commit, done. The parser is hand-rolled
+        //! (the offline crate set has no toml/serde) and accepts the subset
+        //! the table uses — `[section]` headers, integer `key = value`
+        //! pairs, `#` comments. Unknown keys are ignored (forward
+        //! compatibility); unparsable or zero values keep their code
+        //! default, so a mangled table can never turn a kernel off.
+        //!
+        //! Resolution order, frozen on first use (like `par::num_threads`):
+        //! `MIKRR_TUNING=<path>` explicit override (`0`/`off`/`none` forces
+        //! the code defaults), then `tuning.toml` in the working directory
+        //! (bench/CI runs from `rust/`), then `rust/tuning.toml` (repo
+        //! root), then the build-time manifest directory. When nothing is
+        //! found the code defaults in [`Tuning::defaults`] apply — deleting
+        //! the table is always safe.
+
+        use std::sync::OnceLock;
+
+        /// Code-default LU-panel pivot-search parallel threshold (column
+        /// height).
+        pub const LU_PIVOT_PAR_ROWS: usize = 512;
+        /// Code-default LU-panel fused scale+rank-1 parallel threshold
+        /// (column height).
+        pub const LU_GER_PAR_ROWS: usize = 96;
+
+        /// The calibration constants read by the dispatch decisions.
+        #[derive(Clone, Debug, PartialEq, Eq)]
+        pub struct Tuning {
+            /// Minimum `m·n·k` volume for the packed engine.
+            pub packed_min_flops: usize,
+            /// Minimum product depth k for the packed engine.
+            pub packed_min_k: usize,
+            /// LU panel: pivot search reduces per-lane partial maxima
+            /// above this column height.
+            pub lu_pivot_par_rows: usize,
+            /// LU panel: the fused scale+rank-1 update dispatches on the
+            /// pool above this column height.
+            pub lu_ger_par_rows: usize,
+        }
+
+        impl Tuning {
+            /// The compiled-in defaults (used verbatim when no table is
+            /// found).
+            pub const fn defaults() -> Self {
+                Self {
+                    packed_min_flops: super::PACKED_MIN_FLOPS,
+                    packed_min_k: super::PACKED_MIN_K,
+                    lu_pivot_par_rows: LU_PIVOT_PAR_ROWS,
+                    lu_ger_par_rows: LU_GER_PAR_ROWS,
+                }
+            }
+        }
+
+        /// Parse a tuning table. Exposed at crate level for the unit
+        /// tests; production callers go through [`table`].
+        pub(crate) fn parse(text: &str) -> Tuning {
+            let mut t = Tuning::defaults();
+            let mut section = "";
+            for raw in text.lines() {
+                let line = raw.split('#').next().unwrap_or("").trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if let Some(s) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                    section = s.trim();
+                    continue;
+                }
+                let Some((key, val)) = line.split_once('=') else {
+                    continue;
+                };
+                let Ok(v) = val.trim().parse::<usize>() else {
+                    continue;
+                };
+                if v == 0 {
+                    // zero thresholds are never meaningful; keep the default
+                    continue;
+                }
+                match (section, key.trim()) {
+                    ("dispatch", "packed_min_flops") => t.packed_min_flops = v,
+                    ("dispatch", "packed_min_k") => t.packed_min_k = v,
+                    ("lu_panel", "pivot_par_rows") => t.lu_pivot_par_rows = v,
+                    ("lu_panel", "ger_par_rows") => t.lu_ger_par_rows = v,
+                    _ => {}
+                }
+            }
+            t
+        }
+
+        fn load() -> (Tuning, String) {
+            if let Ok(p) = std::env::var("MIKRR_TUNING") {
+                if matches!(p.as_str(), "0" | "off" | "none") {
+                    return (Tuning::defaults(), "defaults (MIKRR_TUNING=off)".into());
+                }
+                return match std::fs::read_to_string(&p) {
+                    Ok(text) => (parse(&text), p),
+                    Err(_) => (Tuning::defaults(), format!("defaults ({p} unreadable)")),
+                };
+            }
+            let candidates = [
+                "tuning.toml",
+                "rust/tuning.toml",
+                concat!(env!("CARGO_MANIFEST_DIR"), "/tuning.toml"),
+            ];
+            for p in candidates {
+                if let Ok(text) = std::fs::read_to_string(p) {
+                    return (parse(&text), p.to_string());
+                }
+            }
+            (Tuning::defaults(), "defaults (no tuning.toml)".into())
+        }
+
+        fn entry() -> &'static (Tuning, String) {
+            static TABLE: OnceLock<(Tuning, String)> = OnceLock::new();
+            TABLE.get_or_init(load)
+        }
+
+        /// The process-wide table, read once on the first dispatch
+        /// decision and frozen thereafter.
+        pub fn table() -> &'static Tuning {
+            &entry().0
+        }
+
+        /// Where [`table`] came from — a path, or a `defaults (...)`
+        /// marker. Recorded in the bench reports' `env` block so
+        /// trajectory entries are comparable.
+        pub fn source() -> &'static str {
+            &entry().1
+        }
     }
 }
 
@@ -442,7 +584,15 @@ pub fn gemm_into(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) -> Result
 
 /// Streaming axpy kernel: `C[rows] += alpha * A[rows] * B`, KC/MC panel
 /// loop over B rows. Wins for small k where packing cannot amortize.
-fn gemm_axpy_rows(alpha: f64, a: &Mat, b: &Mat, cptr: SendSlice, n: usize, row_lo: usize, row_hi: usize) {
+fn gemm_axpy_rows(
+    alpha: f64,
+    a: &Mat,
+    b: &Mat,
+    cptr: SendSlice,
+    n: usize,
+    row_lo: usize,
+    row_hi: usize,
+) {
     let k = a.cols();
     for kb in (0..k).step_by(KC) {
         let k_hi = (kb + KC).min(k);
@@ -1302,6 +1452,93 @@ pub fn ger(c: &mut Mat, alpha: f64, x: &[f64], y: &[f64]) -> Result<()> {
     Ok(())
 }
 
+/// Fused LU-panel column step (a "scaled GER"): for every row `i` in
+/// `[k+1, n)` of the row-major buffer `base` (leading dimension `ld`),
+/// divide the multiplier through by the pivot and apply the rank-1 panel
+/// update in one pass over the row:
+///
+/// ```text
+/// f = base[i, k] / pivot;   base[i, k] = f;
+/// base[i, k+1..pe] -= f * base[k, k+1..pe]
+/// ```
+///
+/// This is the inner kernel of the packed parallel LU panel factorization
+/// (`solve`'s panel phase): rows are processed in MR-high blocks so the
+/// pivot-row segment is loaded once per block, and the update loop runs NR
+/// wide — the same 4×8 register-tile shape as [`micro_kernel_4x8`], which
+/// the autovectorizer lowers to two 256-bit FMAs per row. The multiplier
+/// uses a **division** by the pivot (not a reciprocal multiply) and each
+/// element sees exactly the ops of the scalar reference in the same order,
+/// so the factored panel is bitwise identical to `lu_decompose_naive`'s —
+/// downstream pivot decisions can never diverge between the paths.
+/// Parallel over rows above `min_par_rows` (`usize::MAX` pins the serial
+/// reference path; chunk boundaries cannot change the result — rows are
+/// independent).
+///
+/// # Safety
+/// `base` must cover `n` rows of stride `ld >= pe`; rows `[k+1, n)` of
+/// columns `[k, pe)` are written (each row by exactly one chunk), row `k`
+/// is read-only, and no other thread may touch any of them for the
+/// duration of the call.
+pub(crate) unsafe fn ger_panel(
+    base: SendSlice,
+    ld: usize,
+    k: usize,
+    pe: usize,
+    n: usize,
+    pivot: f64,
+    min_par_rows: usize,
+) {
+    if k + 1 >= n {
+        return;
+    }
+    let rows = n - (k + 1);
+    let width = pe - (k + 1);
+    par::parallel_for(rows, min_par_rows, |lo, hi| {
+        // SAFETY: row k is read-only in this phase; rows [k+1+lo, k+1+hi)
+        // belong to this chunk alone.
+        let prow = unsafe { std::slice::from_raw_parts(base.0.add(k * ld + k + 1), width) };
+        let mut i = k + 1 + lo;
+        let end = k + 1 + hi;
+        while i < end {
+            let bh = MR.min(end - i);
+            // multipliers for the MR-row block (division: bitwise parity
+            // with the scalar reference)
+            let mut f = [0.0f64; MR];
+            for (r, fr) in f.iter_mut().enumerate().take(bh) {
+                // SAFETY: column k of row i+r is owned by this chunk.
+                unsafe {
+                    let p = base.0.add((i + r) * ld + k);
+                    *fr = *p / pivot;
+                    *p = *fr;
+                }
+            }
+            for (r, &fr) in f.iter().enumerate().take(bh) {
+                if fr == 0.0 {
+                    continue;
+                }
+                // SAFETY: the row segment is owned by this chunk and
+                // disjoint from `prow` (row k < i + r).
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(base.0.add((i + r) * ld + k + 1), width)
+                };
+                // NR-wide main loop + remainder, mirroring the micro-kernel
+                let mut cchunks = crow.chunks_exact_mut(NR);
+                let mut pchunks = prow.chunks_exact(NR);
+                for (cv8, pv8) in (&mut cchunks).zip(&mut pchunks) {
+                    for (cv, pv) in cv8.iter_mut().zip(pv8) {
+                        *cv -= fr * pv;
+                    }
+                }
+                for (cv, pv) in cchunks.into_remainder().iter_mut().zip(pchunks.remainder()) {
+                    *cv -= fr * pv;
+                }
+            }
+            i += bh;
+        }
+    });
+}
+
 /// Raw-pointer Send wrapper (disjoint writes guaranteed by the callers).
 #[derive(Clone, Copy)]
 pub(crate) struct SendSlice(pub(crate) *mut f64);
@@ -1759,6 +1996,99 @@ mod tests {
         for i in 0..4 {
             for j in 0..5 {
                 assert!((c[(i, j)] - 0.5 - want[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn tuning_parse_overrides_and_defaults() {
+        use dispatch::tune::{parse, Tuning};
+        // full table: every key lands
+        let t = parse(
+            "# comment\n[dispatch]\npacked_min_flops = 4096 # inline\npacked_min_k=8\n\
+             [lu_panel]\npivot_par_rows = 256\nger_par_rows = 32\n",
+        );
+        assert_eq!(t.packed_min_flops, 4096);
+        assert_eq!(t.packed_min_k, 8);
+        assert_eq!(t.lu_pivot_par_rows, 256);
+        assert_eq!(t.lu_ger_par_rows, 32);
+        // empty / comment-only text: pure defaults
+        assert_eq!(parse(""), Tuning::defaults());
+        assert_eq!(parse("# nothing here\n"), Tuning::defaults());
+        // garbage values, zero thresholds, unknown keys and sections:
+        // defaults survive untouched
+        let g = parse(
+            "[dispatch]\npacked_min_k = banana\npacked_min_flops = 0\nfuture_key = 7\n\
+             [unknown_section]\npivot_par_rows = 3\nnot a kv line\n",
+        );
+        assert_eq!(g, Tuning::defaults());
+        // keys outside any section are ignored, not misattributed
+        let s = parse("packed_min_k = 2\n[dispatch]\npacked_min_k = 16\n");
+        assert_eq!(s.packed_min_k, 16);
+    }
+
+    #[test]
+    fn tuning_table_drives_use_packed() {
+        // the live table must carry the crossover `use_packed` applies:
+        // shapes exactly at the table's thresholds flip the decision
+        let t = dispatch::tune::table();
+        assert!(t.packed_min_k >= 1 && t.packed_min_flops >= 1);
+        // deep enough and voluminous enough: packed
+        let k = t.packed_min_k.max(32);
+        let mn = (t.packed_min_flops / k).max(1);
+        let side = (mn as f64).sqrt().ceil() as usize + MR + NR;
+        assert!(dispatch::use_packed(side, side, k));
+        // one below the k gate: never packed
+        assert!(!dispatch::use_packed(side, side, t.packed_min_k - 1));
+        // source is always a non-empty marker or path
+        assert!(!dispatch::tune::source().is_empty());
+    }
+
+    #[test]
+    fn ger_panel_matches_scalar_reference() {
+        // the fused scale+rank-1 panel step must be bitwise identical to
+        // the scalar loop, across widths straddling the NR unroll and
+        // heights straddling the MR blocks
+        for &(n, k, pe, seed) in &[
+            (37, 3, 20, 40u64),
+            (64, 0, 64, 41),
+            (130, 7, 8, 42), // width 0: scaling only
+            (41, 11, 41, 43),
+        ] {
+            let a0 = randm(n, pe.max(12), seed);
+            let ld = a0.cols();
+            let pivot = a0[(k, k)];
+            // scalar reference
+            let mut want = a0.clone();
+            for i in k + 1..n {
+                let f = want[(i, k)] / pivot;
+                want[(i, k)] = f;
+                if f != 0.0 {
+                    for c in k + 1..pe {
+                        let v = want[(k, c)];
+                        want[(i, c)] -= f * v;
+                    }
+                }
+            }
+            // fused kernel, forced inline (serial) and dispatched paths
+            for min_par in [usize::MAX, 1] {
+                let mut got = a0.clone();
+                // SAFETY: exclusive borrow of `got`; row k is never written.
+                unsafe {
+                    ger_panel(
+                        SendSlice(got.as_mut_slice().as_mut_ptr()),
+                        ld,
+                        k,
+                        pe,
+                        n,
+                        pivot,
+                        min_par,
+                    );
+                }
+                assert!(
+                    got == want,
+                    "(n={n}, k={k}, pe={pe}, min_par={min_par}) not bitwise identical"
+                );
             }
         }
     }

@@ -12,9 +12,22 @@
 //! baseline costs scale with cores *and* run the packed 4×8 micro-kernel
 //! above the crossover (before/after numbers in EXPERIMENTS.md §Perf).
 //! Large SPD inverses are two blocked TRSMs against the identity instead
-//! of per-column scalar substitution. The scalar reference implementations
-//! are kept as [`cholesky_naive`]/[`lu_decompose_naive`] for tests and
-//! benches.
+//! of per-column scalar substitution.
+//!
+//! Since PR 4 the **LU panel itself is packed and parallel** — the last
+//! factorization phase that used to run as a serial scalar loop. Pivot
+//! search reduces per-lane partial maxima through the persistent pool
+//! (deterministically: stripe order decides ties, so the choice is bitwise
+//! identical to the scalar scan), row swaps are applied lazily (panel
+//! columns immediately, the outside columns in one batched parallel pass
+//! per panel), and the panel's fused scale+rank-1 column updates run on
+//! `gemm::ger_panel`'s 4×8 register tiles. The parallel thresholds come
+//! from the startup tuning table ([`dispatch::tune`]). The scalar
+//! reference implementations are kept as
+//! [`cholesky_naive`]/[`lu_decompose_naive`] for tests and benches, and
+//! [`lu_panel_factor`]/[`lu_panel_factor_scalar`] expose the panel pair
+//! for the `core/lu_panel_packed` microbench and the panel property
+//! tests.
 
 use crate::ensure_shape;
 use crate::error::{Error, Result};
@@ -320,60 +333,77 @@ pub struct Lu {
     pub sign: f64,
 }
 
+impl Default for Lu {
+    fn default() -> Self {
+        Self { lu: Mat::default(), perm: Vec::new(), sign: 1.0 }
+    }
+}
+
+/// One factored LU panel (see [`lu_panel_factor`]).
+pub struct LuPanel {
+    /// `ipiv[j]` = the row swapped into panel row `j` at panel column `j`.
+    pub ipiv: Vec<usize>,
+    /// Sign of the recorded row permutation (+1/-1).
+    pub sign: f64,
+}
+
 /// Factor a general square matrix: right-looking blocked LU with partial
-/// pivoting. The NB-wide panel factors serially (pivot search spans the
-/// full column height), then the U12 triangular solve distributes over
-/// column stripes and the rank-NB trailing GEMM update over rows.
+/// pivoting. See [`lu_decompose_into`] for the scheme.
 pub fn lu_decompose(a: &Mat) -> Result<Lu> {
+    let mut out = Lu::default();
+    lu_decompose_into(a, &mut out)?;
+    Ok(out)
+}
+
+/// [`lu_decompose`] writing into a caller-provided [`Lu`] (factor buffer
+/// and permutation reshaped; allocation-free once their capacities are
+/// warm — the panel machinery keeps its pivot scratch on the stack, which
+/// is what `rust/tests/alloc_count.rs` measures).
+///
+/// Right-looking blocked with a **packed parallel panel**: per-lane
+/// partial-maxima pivot search reduced deterministically through the pool,
+/// lazy row swaps (panel columns during the panel, the outside columns in
+/// one batched parallel pass per panel — the LAPACK `getf2`/`laswp`
+/// split), and the panel's fused scale+rank-1 updates on
+/// [`gemm::ger_panel`]'s 4×8 register tiles. The U12 triangular solve then
+/// distributes over column stripes and the rank-NB trailing GEMM update
+/// over rows, both through the packed [`dispatch`] above the crossover.
+///
+/// Parity with [`lu_decompose_naive`]: the panel machinery itself (pivot
+/// scan, swaps, column updates) is bitwise identical, and so is the
+/// axpy-path trailing update (same per-element subtraction order), so
+/// below the packed crossover the whole factorization — permutation
+/// included — matches naive bitwise. Above the crossover the packed
+/// trailing GEMM accumulates in register tiles (different rounding order),
+/// so later-panel values agree only to roundoff and a pivot near-tie could
+/// in principle resolve differently; the blocked-vs-naive property tests
+/// assert exact `perm` equality only on axpy-path sizes and tolerance
+/// elsewhere.
+pub fn lu_decompose_into(a: &Mat, out: &mut Lu) -> Result<()> {
     ensure_shape!(a.is_square(), "solve::lu", "not square: {:?}", a.shape());
     let n = a.rows();
-    let mut lu = a.clone();
-    let mut perm: Vec<usize> = (0..n).collect();
-    let mut sign = 1.0;
+    out.lu.resize_scratch(n, n);
+    out.lu.as_mut_slice().copy_from_slice(a.as_slice());
+    out.perm.clear();
+    out.perm.extend(0..n);
+    out.sign = 1.0;
+    let lu = &mut out.lu;
+    // panel pivot rows, stack-resident (NB is small and fixed)
+    let mut ipiv = [0usize; NB];
     let mut kb = 0;
     while kb < n {
         let nb = NB.min(n - kb);
         let panel_end = kb + nb;
-        // --- panel factorization (columns kb..panel_end, full row swaps) ---
-        for k in kb..panel_end {
-            let mut p = k;
-            let mut best = lu[(k, k)].abs();
-            for i in (k + 1)..n {
-                let v = lu[(i, k)].abs();
-                if v > best {
-                    best = v;
-                    p = i;
-                }
-            }
-            if best == 0.0 || !best.is_finite() {
-                return Err(Error::numerical("lu", format!("singular at column {k}")));
-            }
-            if p != k {
-                let d = lu.as_mut_slice();
-                for c in 0..n {
-                    d.swap(k * n + c, p * n + c);
-                }
-                perm.swap(k, p);
-                sign = -sign;
-            }
-            let pivot = lu[(k, k)];
-            // eliminate below the pivot, touching only panel columns; the
-            // columns right of the panel are updated by the blocked phases
-            let d = lu.as_mut_slice();
-            let (head, rest) = d.split_at_mut((k + 1) * n);
-            let prow_seg = &head[k * n + k + 1..k * n + panel_end];
-            for i in (k + 1)..n {
-                let base = (i - k - 1) * n;
-                let f = rest[base + k] / pivot;
-                rest[base + k] = f;
-                if f != 0.0 {
-                    let irow = &mut rest[base + k + 1..base + panel_end];
-                    for (iv, &pv) in irow.iter_mut().zip(prow_seg) {
-                        *iv -= f * pv;
-                    }
-                }
-            }
+        // --- packed parallel panel factorization (lazy swaps) ---
+        {
+            let base = lu.as_mut_slice().as_mut_ptr();
+            // SAFETY: `lu` is exclusively borrowed; the panel phase touches
+            // rows [kb, n) of columns [kb, panel_end) only.
+            unsafe { lu_panel_raw(base, n, n, kb, nb, &mut ipiv[..nb], true)? };
         }
+        // --- propagate the panel's row swaps to the outside columns and
+        // to perm/sign (same swap order as the scalar reference) ---
+        apply_panel_swaps(lu, kb, nb, &ipiv[..nb], &mut out.perm, &mut out.sign);
         if panel_end == n {
             break;
         }
@@ -446,7 +476,221 @@ pub fn lu_decompose(a: &Mat) -> Result<Lu> {
         }
         kb = panel_end;
     }
-    Ok(Lu { lu, perm, sign })
+    Ok(())
+}
+
+/// Factor the leading `nb`-column panel of `a` (all rows) in place with
+/// the **packed parallel** machinery of [`lu_decompose_into`]: per-lane
+/// partial-maxima pivot search plus [`gemm::ger_panel`]'s fused
+/// scale+rank-1 updates, with the parallel thresholds from
+/// [`dispatch::tune`]. Row swaps are applied to the panel columns only —
+/// the lazy-swap contract of the blocked sweep; columns of `a` past `nb`
+/// (if any) are untouched. Public as the measured side of the
+/// `core/lu_panel_packed` microbench and the panel property tests;
+/// [`lu_panel_factor_scalar`] is the serial reference with identical
+/// semantics (and bitwise-identical output).
+pub fn lu_panel_factor(a: &mut Mat, nb: usize) -> Result<LuPanel> {
+    lu_panel_factor_impl(a, nb, true)
+}
+
+/// Serial reference for [`lu_panel_factor`]: scalar pivot scan, inline
+/// column updates, same lazy-swap semantics.
+pub fn lu_panel_factor_scalar(a: &mut Mat, nb: usize) -> Result<LuPanel> {
+    lu_panel_factor_impl(a, nb, false)
+}
+
+fn lu_panel_factor_impl(a: &mut Mat, nb: usize, parallel: bool) -> Result<LuPanel> {
+    ensure_shape!(
+        nb >= 1 && nb <= a.cols() && nb <= a.rows(),
+        "solve::lu_panel",
+        "panel width {nb} vs a {:?}",
+        a.shape()
+    );
+    let (n, ld) = a.shape();
+    let mut ipiv = vec![0usize; nb];
+    // SAFETY: `a` is exclusively borrowed; the panel touches rows [0, n)
+    // of columns [0, nb) only.
+    unsafe { lu_panel_raw(a.as_mut_slice().as_mut_ptr(), ld, n, 0, nb, &mut ipiv, parallel)? };
+    let mut sign = 1.0;
+    for (j, &p) in ipiv.iter().enumerate() {
+        if p != j {
+            sign = -sign;
+        }
+    }
+    Ok(LuPanel { ipiv, sign })
+}
+
+/// Factor the panel rows `[kb, n)` × columns `[kb, kb+nb)` of the
+/// row-major buffer `base` (leading dimension `ld`) in place with partial
+/// pivoting. `ipiv[j]` records the global row swapped into `kb + j`; the
+/// swaps are applied **only to the panel's own columns** (lazy — the
+/// caller propagates them to the outside columns afterwards, see
+/// [`apply_panel_swaps`]). With `parallel`, the pivot search reduces
+/// per-lane partial maxima over the persistent pool and the fused
+/// scale+rank-1 column updates run on [`gemm::ger_panel`]; without it,
+/// both stay serial. The two paths are bitwise identical — every element
+/// sees the same operations in the same order, and tie-breaks in the
+/// pivot reduction follow stripe order (= row order).
+///
+/// # Safety
+/// `base` must cover `n` rows of stride `ld >= kb + nb`; rows `[kb, n)`
+/// of columns `[kb, kb + nb)` must be exclusively owned by the caller for
+/// the duration of the call.
+unsafe fn lu_panel_raw(
+    base: *mut f64,
+    ld: usize,
+    n: usize,
+    kb: usize,
+    nb: usize,
+    ipiv: &mut [usize],
+    parallel: bool,
+) -> Result<()> {
+    let t = dispatch::tune::table();
+    debug_assert_eq!(ipiv.len(), nb);
+    for (j, piv) in ipiv.iter_mut().enumerate() {
+        let k = kb + j;
+        let par_search = parallel && n - k >= t.lu_pivot_par_rows;
+        let (best, p) = pivot_search(base, ld, k, n, par_search);
+        if best == 0.0 || !best.is_finite() {
+            return Err(Error::numerical("lu", format!("singular at column {k}")));
+        }
+        *piv = p;
+        if p != k {
+            // lazy swap: the panel's own columns only
+            for c in kb..kb + nb {
+                std::ptr::swap(base.add(k * ld + c), base.add(p * ld + c));
+            }
+        }
+        let pivot = *base.add(k * ld + k);
+        let min_par = if parallel { t.lu_ger_par_rows } else { usize::MAX };
+        // fused multiplier scaling + rank-1 update of the remaining panel
+        // columns (4×8 register tiles; parallel over rows when worthwhile)
+        gemm::ger_panel(gemm::SendSlice(base), ld, k, kb + nb, n, pivot, min_par);
+    }
+    Ok(())
+}
+
+/// Partial-pivot search on column `k`, rows `[k, n)`: returns the maximum
+/// |value| and the **first** row attaining it (the scalar scan's
+/// tie-break). With `parallel`, the rows split into [`par::MAX_THREADS`]
+/// ordered stripes whose per-lane partial maxima land in a stack array
+/// (one writer per slot), then reduce serially in stripe order — which
+/// lane ran which stripe can never change the winner, so the decision is
+/// bitwise identical to the serial scan.
+unsafe fn pivot_search(
+    base: *const f64,
+    ld: usize,
+    k: usize,
+    n: usize,
+    parallel: bool,
+) -> (f64, usize) {
+    // A NaN pivot seed poisons the scalar scan's running maximum (every
+    // later comparison is false), which the error path then reports —
+    // return it directly so both paths agree on NaN input.
+    let diag = (*base.add(k * ld + k)).abs();
+    if diag.is_nan() {
+        return (diag, k);
+    }
+    const SLOTS: usize = par::MAX_THREADS;
+    let rows = n - k;
+    if !parallel || rows < 2 * SLOTS {
+        return pivot_scan(base, ld, k, k, n);
+    }
+    let span = rows.div_ceil(SLOTS);
+    let mut part = [(f64::NEG_INFINITY, usize::MAX); SLOTS];
+    let pptr = par::SendPtr(part.as_mut_ptr());
+    let bptr = par::SendPtr(base as *mut f64);
+    par::parallel_for(SLOTS, 1, |lo, hi| {
+        for s in lo..hi {
+            let r0 = k + s * span;
+            let r1 = (r0 + span).min(n);
+            if r0 >= r1 {
+                continue;
+            }
+            // SAFETY: slot s has exactly one writer; the scan only reads
+            // the caller-owned column.
+            unsafe { *pptr.0.add(s) = pivot_scan(bptr.0, ld, k, r0, r1) };
+        }
+    });
+    // ordered reduction: strictly-greater keeps the lowest-index maximum,
+    // exactly like the serial scan
+    let mut best = (f64::NEG_INFINITY, k);
+    for &(v, at) in part.iter() {
+        if v > best.0 {
+            best = (v, at);
+        }
+    }
+    best
+}
+
+/// Serial max-|value| scan of column `k` over rows `[r0, r1)` (first-max
+/// tie-break, matching the scalar reference).
+unsafe fn pivot_scan(base: *const f64, ld: usize, k: usize, r0: usize, r1: usize) -> (f64, usize) {
+    let mut best = f64::NEG_INFINITY;
+    let mut at = r0;
+    for i in r0..r1 {
+        let v = (*base.add(i * ld + k)).abs();
+        if v > best {
+            best = v;
+            at = i;
+        }
+    }
+    (best, at)
+}
+
+/// Propagate a factored panel's row swaps (recorded in `ipiv`) to the
+/// columns **outside** the panel — the already-factored L block `[0, kb)`
+/// and the trailing block `[kb+nb, n)` — in one batched pass, parallel
+/// over column stripes. Each stripe applies every swap in panel order, so
+/// the result equals the scalar reference's immediate full-row swaps.
+/// Updates `perm` and `sign` in the same order.
+fn apply_panel_swaps(
+    lu: &mut Mat,
+    kb: usize,
+    nb: usize,
+    ipiv: &[usize],
+    perm: &mut [usize],
+    sign: &mut f64,
+) {
+    let n = lu.rows();
+    for (j, &p) in ipiv.iter().enumerate() {
+        let k = kb + j;
+        if p != k {
+            perm.swap(k, p);
+            *sign = -*sign;
+        }
+    }
+    let right = n - (kb + nb);
+    let outside = kb + right;
+    if outside == 0 {
+        return;
+    }
+    let base = gemm::SendSlice(lu.as_mut_slice().as_mut_ptr());
+    par::parallel_for(outside, 512, |lo, hi| {
+        // the stripe [lo, hi) of the concatenated outside columns: left
+        // block [0, kb), then right block [kb+nb, n)
+        let (l0, l1) = (lo.min(kb), hi.min(kb));
+        let (r0, r1) = (
+            kb + nb + lo.saturating_sub(kb),
+            kb + nb + hi.saturating_sub(kb),
+        );
+        for (j, &p) in ipiv.iter().enumerate() {
+            let k = kb + j;
+            if p == k {
+                continue;
+            }
+            // SAFETY: rows k != p; the stripe's columns belong to this
+            // chunk alone, and swaps within a column apply in panel order.
+            unsafe {
+                for c in l0..l1 {
+                    std::ptr::swap(base.0.add(k * n + c), base.0.add(p * n + c));
+                }
+                for c in r0..r1 {
+                    std::ptr::swap(base.0.add(k * n + c), base.0.add(p * n + c));
+                }
+            }
+        }
+    });
 }
 
 /// Scalar reference LU (the pre-blocked implementation), kept for property
@@ -758,6 +1002,61 @@ mod tests {
                 assert!((g - w).abs() < 1e-6, "n={n}");
             }
         }
+    }
+
+    #[test]
+    fn lu_decompose_into_reuses_buffers_and_matches_naive() {
+        let mut out = Lu::default();
+        let mut rng = Rng::new(60);
+        // shrinking and growing sizes reshape the same buffers; the packed
+        // parallel panel must keep pivoting bitwise-identical to naive
+        for &n in &[90usize, 40, 150, 64] {
+            let a = Mat::from_fn(n, n, |r, c| {
+                rng.gaussian() + if r == c { 2.5 } else { 0.0 }
+            });
+            lu_decompose_into(&a, &mut out).unwrap();
+            let want = lu_decompose_naive(&a).unwrap();
+            assert_eq!(out.perm, want.perm, "n={n}: pivoting diverged");
+            assert_eq!(out.sign, want.sign, "n={n}");
+            assert!(
+                out.lu.max_abs_diff(&want.lu) < 1e-9,
+                "n={n}: into vs naive diff {}",
+                out.lu.max_abs_diff(&want.lu)
+            );
+        }
+    }
+
+    #[test]
+    fn lu_panel_factor_solves_square_panel() {
+        // a full-width panel (nb = n) is a complete LU factorization with
+        // lazy semantics: applying ipiv to b then L/U solves must recover x
+        let n = 48;
+        let mut rng = Rng::new(61);
+        let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut f = a.clone();
+        let panel = lu_panel_factor(&mut f, n).unwrap();
+        // rebuild the Lu form: ipiv (applied in order) -> perm
+        let mut perm: Vec<usize> = (0..n).collect();
+        for (j, &p) in panel.ipiv.iter().enumerate() {
+            perm.swap(j, p);
+        }
+        let lu = Lu { lu: f, perm, sign: panel.sign };
+        let x_true = rng.gaussian_vec(n);
+        let b = crate::linalg::gemm::gemv(&a, &x_true).unwrap();
+        let x = lu.solve(&b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-7);
+        }
+        // the scalar reference produces the identical factorization
+        let mut fs = a.clone();
+        let ps = lu_panel_factor_scalar(&mut fs, n).unwrap();
+        assert_eq!(ps.ipiv, panel.ipiv);
+        assert_eq!(ps.sign, panel.sign);
+        assert!(lu.lu == fs, "packed and scalar panels must be bitwise identical");
+        // shape errors
+        let mut bad = Mat::zeros(3, 3);
+        assert!(lu_panel_factor(&mut bad, 4).is_err());
+        assert!(lu_panel_factor(&mut bad, 0).is_err());
     }
 
     #[test]

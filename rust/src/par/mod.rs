@@ -12,11 +12,10 @@
 //! for the rest of the process (`num_threads() - 1` of them; the calling
 //! thread always participates as the remaining lane). Each `parallel_for`
 //! publishes one stack-allocated job descriptor — a type-erased closure
-//! pointer plus an atomic chunk cursor — onto a shared queue, wakes the
-//! workers, claims chunks itself, then parks until every worker ticket has
-//! drained. Chunks are claimed dynamically (`fetch_add` on the cursor) so
-//! uneven bodies load-balance, and a steady-state dispatch performs no heap
-//! allocation (the queue's ring buffer is reused across calls).
+//! pointer plus per-lane atomic chunk cursors — onto a shared queue, wakes
+//! the workers, claims chunks itself, then parks until every worker ticket
+//! has drained. A steady-state dispatch performs no heap allocation (the
+//! queue's ring buffer is reused across calls).
 //!
 //! This replaces the per-call `std::thread::scope` spawning of earlier
 //! revisions, which cost ~100µs per call — longer than an entire small-J
@@ -24,15 +23,50 @@
 //! (single lane): the pool is flat by design, which both avoids queue
 //! deadlock and keeps the thread count bounded by [`num_threads`].
 //!
+//! # Affinity-stable chunk claiming
+//!
+//! The index range of a job is split into one contiguous **slot** per
+//! active lane, each with its own claim cursor. A lane drains its home
+//! slot first — the caller always owns slot 0, worker `w` always prefers
+//! slot `1 + w % (slots - 1)` — and only then steals from the other slots
+//! in cyclic order. Because the home mapping depends only on the worker's
+//! (stable) pool id and the job's lane count, back-to-back dispatches over
+//! the same data hand each lane the **same index ranges** every time: the
+//! C rows and packed A panels a lane touched in the previous `KC` sweep of
+//! the packed GEMM engine are still hot in that lane's private cache when
+//! the next sweep dispatches. Uneven bodies still load-balance through the
+//! stealing pass, and every index is processed exactly once either way, so
+//! results are independent of which lane ran what.
+//!
+//! # Lane pinning (`MIKRR_PIN`)
+//!
+//! On Linux (x86_64/aarch64) each spawned worker pins itself to a distinct
+//! logical CPU at pool build via a raw `sched_setaffinity` syscall (the
+//! crate is dependency-free — no libc). Worker `w` takes core `w + 1`,
+//! leaving core 0 to the (unpinned) caller lane; on standard Linux
+//! enumerations the resulting contiguous low core ids keep the pool on one
+//! socket / shared LLC, which is what keeps the affinity-stable slot
+//! claiming above cache-effective across dispatches. When the host has
+//! fewer CPUs than lanes, pinning is skipped (doubling threads up on a
+//! core would be worse than the scheduler). `MIKRR_PIN=0` (or
+//! `off`/`false`) disables pinning — use it on oversubscribed or shared
+//! hosts; elsewhere the syscall shim is a no-op and the pool behaves as
+//! before. Pinning is best-effort: a rejected mask (e.g. a cgroup cpuset)
+//! is silently ignored.
+//!
+//! The lane count **and** the pin map are computed together, once, and
+//! frozen before the first dispatch ([`num_threads`] caches the shared
+//! geometry): changing `MIKRR_THREADS` or `MIKRR_PIN` mid-process can
+//! never desync chunk claiming from the pinned cores
+//! (`rust/tests/pool_pinning.rs` pins this down).
+//!
 //! Both sides of the handshake use a **spin-then-park backoff**: an idle
 //! worker first busy-polls the queue-length counter for [`SPIN_ITERS`]
 //! pause cycles before parking on the condvar, and a dispatching caller
 //! likewise spins briefly before `thread::park`. Back-to-back sub-100µs
 //! dispatches (the skinny update shapes of a small-J round) therefore hand
 //! work over without a futex wake per call; a pool that goes quiet parks
-//! within tens of microseconds and burns nothing. The lane count itself is
-//! computed once ([`num_threads`] caches it) and frozen into the pool at
-//! build time.
+//! within tens of microseconds and burns nothing.
 //!
 //! `MIKRR_THREADS=1` (or a single-core host) means the pool is never built
 //! and every call runs inline on the caller — the allocation-free path the
@@ -47,38 +81,164 @@ use std::sync::{Condvar, Mutex, OnceLock};
 /// matrix sizes this system runs (J up to 2024).
 pub const MAX_THREADS: usize = 16;
 
+/// The pool's frozen shape: lane count plus the per-worker pin map, read
+/// from the environment **once** and never recomputed — so a mid-process
+/// `MIKRR_THREADS`/`MIKRR_PIN` change cannot desync chunk claiming from
+/// the pinned cores.
+struct Geometry {
+    /// Parallel lanes (caller + spawned workers), capped by [`MAX_THREADS`].
+    lanes: usize,
+    /// Pin target (logical CPU id) for spawned worker `w`; empty when
+    /// pinning is disabled (`MIKRR_PIN=0`), unsupported on this platform,
+    /// or the pool is single-lane.
+    pin: Vec<usize>,
+}
+
+fn geometry() -> &'static Geometry {
+    static GEO: OnceLock<Geometry> = OnceLock::new();
+    GEO.get_or_init(|| {
+        let lanes = std::env::var("MIKRR_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+            .min(MAX_THREADS);
+        let pin = if lanes > 1 && affinity::SUPPORTED && pin_requested() {
+            let ncpu = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            build_pin_map(lanes, ncpu)
+        } else {
+            Vec::new()
+        };
+        Geometry { lanes, pin }
+    })
+}
+
+/// `MIKRR_PIN` gate: pinning defaults **on** where supported; `0`, `off`,
+/// or `false` disables it.
+fn pin_requested() -> bool {
+    !matches!(
+        std::env::var("MIKRR_PIN").as_deref(),
+        Ok("0") | Ok("off") | Ok("false")
+    )
+}
+
+/// Worker → logical-CPU map: worker `w` takes core `w + 1`, leaving core
+/// 0 with the (unpinned) caller lane — every pinned worker gets its own
+/// core. When the host has fewer CPUs than lanes (an oversized
+/// `MIKRR_THREADS` override), pinning is skipped entirely: hard-affining
+/// two compute threads to one core would be strictly worse than letting
+/// the scheduler balance them.
+fn build_pin_map(lanes: usize, ncpu: usize) -> Vec<usize> {
+    if ncpu < 2 || lanes > ncpu {
+        return Vec::new();
+    }
+    (0..lanes - 1).map(|w| w + 1).collect()
+}
+
 /// Number of parallel lanes to use: `MIKRR_THREADS` env override, else
 /// available parallelism — the [`MAX_THREADS`] cap applies to both, so an
 /// oversized override cannot oversubscribe the pool.
 ///
-/// The value is computed once and cached for the life of the process:
-/// changing `MIKRR_THREADS` after the first parallel call has no effect,
-/// and the worker pool (sized from this value) is never resized. Set it
-/// before touching any parallel code path (tests that need the
-/// single-threaded path set it at process start).
+/// The value is computed once — together with the [`pinned_lanes`] pin
+/// map — and cached for the life of the process: changing `MIKRR_THREADS`
+/// (or `MIKRR_PIN`) after the first parallel call has no effect, and the
+/// worker pool (sized from this value) is never resized. Set them before
+/// touching any parallel code path (tests that need the single-threaded
+/// path set the override at process start).
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let c = CACHED.load(Ordering::Relaxed);
-    if c != 0 {
-        return c;
+    geometry().lanes
+}
+
+/// Number of pool workers with a pinned core (0 when pinning is disabled
+/// via `MIKRR_PIN=0`, unsupported on this platform, or the pool is
+/// single-lane). Frozen together with [`num_threads`] on first use.
+pub fn pinned_lanes() -> usize {
+    geometry().pin.len()
+}
+
+/// Best-effort thread→core pinning via a raw `sched_setaffinity` syscall
+/// (the offline crate set has no libc). Linux x86_64/aarch64 only; the
+/// fallback module below makes every other target a no-op.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod affinity {
+    pub(super) const SUPPORTED: bool = true;
+
+    /// `cpu_set_t` is 1024 bits in the kernel ABI.
+    const CPU_SET_WORDS: usize = 16;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SCHED_SETAFFINITY: usize = 122;
+
+    /// Pin the calling thread to `cpu`. Errors are deliberately ignored
+    /// (the mask may fall outside the process's cgroup cpuset): pinning is
+    /// a performance hint, never a correctness requirement.
+    pub(super) fn pin_current_thread(cpu: usize) {
+        if cpu >= CPU_SET_WORDS * 64 {
+            return;
+        }
+        let mut mask = [0u64; CPU_SET_WORDS];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        // SAFETY: the syscall reads `mask` (alive for the duration of the
+        // call) and only mutates scheduler state; pid 0 = calling thread.
+        unsafe {
+            syscall3(
+                SYS_SCHED_SETAFFINITY,
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_ptr() as usize,
+            );
+        }
     }
-    let n = std::env::var("MIKRR_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
-        .min(MAX_THREADS);
-    CACHED.store(n, Ordering::Relaxed);
-    n
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall3(n: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") n => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall3(n: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod affinity {
+    pub(super) const SUPPORTED: bool = false;
+
+    pub(super) fn pin_current_thread(_cpu: usize) {}
 }
 
 /// Dynamic chunking granularity: chunks per lane. >1 so uneven bodies
 /// (e.g. triangular updates) load-balance; small enough that the atomic
-/// cursor is uncontended relative to chunk work.
+/// cursors are uncontended relative to chunk work.
 const CHUNKS_PER_LANE: usize = 4;
 
 /// Busy-poll iterations before an idle lane falls back to blocking
@@ -95,12 +255,18 @@ const SPIN_ITERS: usize = 1 << 14;
 struct JobShared {
     /// Type-erased `&body` (caller lifetime transmuted away).
     body: *const (dyn Fn(usize, usize) + Sync),
-    /// Next unclaimed index.
-    next: AtomicUsize,
     /// Exclusive end of the index range.
     n: usize,
-    /// Chunk granularity for the cursor.
+    /// Chunk granularity for the cursors.
     chunk: usize,
+    /// Active lane slots for this job (helpers + the caller).
+    slots: usize,
+    /// Indices per slot (chunk-aligned); the last slot clips to `n`.
+    span: usize,
+    /// Per-slot claim cursors (offsets within the slot's span). Slot `s`
+    /// owns indices `[s·span, min((s+1)·span, n))`; lanes drain their home
+    /// slot first and steal the rest (see the module docs).
+    cursors: [AtomicUsize; MAX_THREADS],
     /// Worker tickets not yet fully processed.
     pending: AtomicUsize,
     /// Set when any lane's body panicked; remaining lanes stop claiming
@@ -137,11 +303,25 @@ struct Pool {
 }
 
 thread_local! {
-    static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    /// This thread's pool worker id (`usize::MAX` = not a pool worker).
+    /// Doubles as the stable key for affinity-stable home-slot selection.
+    static POOL_LANE: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
 }
 
 fn in_pool_worker() -> bool {
-    IS_POOL_WORKER.with(|f| f.get())
+    POOL_LANE.with(|f| f.get()) != usize::MAX
+}
+
+/// The home slot this thread drains first for a job with `slots` active
+/// lanes: the caller owns slot 0; worker `w` prefers `1 + w % (slots - 1)`
+/// — stable per worker, so repeat dispatches re-touch the same indices.
+fn home_slot(slots: usize) -> usize {
+    let id = POOL_LANE.with(|f| f.get());
+    if id == usize::MAX || slots <= 1 {
+        0
+    } else {
+        1 + id % (slots - 1)
+    }
 }
 
 /// The process-wide pool, built lazily on the first multi-threaded call.
@@ -149,7 +329,8 @@ fn in_pool_worker() -> bool {
 fn pool() -> Option<&'static Pool> {
     static POOL: OnceLock<Option<Pool>> = OnceLock::new();
     POOL.get_or_init(|| {
-        let workers = num_threads().saturating_sub(1);
+        let geo = geometry();
+        let workers = geo.lanes.saturating_sub(1);
         if workers == 0 {
             return None;
         }
@@ -159,9 +340,10 @@ fn pool() -> Option<&'static Pool> {
             queued: AtomicUsize::new(0),
         }));
         for w in 0..workers {
+            let pin = geo.pin.get(w).copied();
             std::thread::Builder::new()
                 .name(format!("mikrr-worker-{w}"))
-                .spawn(move || worker_loop(shared))
+                .spawn(move || worker_loop(shared, w, pin))
                 .expect("failed to spawn mikrr pool worker");
         }
         Some(Pool { shared, lanes: workers + 1 })
@@ -194,8 +376,11 @@ fn next_ticket(shared: &'static PoolShared) -> Ticket {
     }
 }
 
-fn worker_loop(shared: &'static PoolShared) {
-    IS_POOL_WORKER.with(|f| f.set(true));
+fn worker_loop(shared: &'static PoolShared, id: usize, pin: Option<usize>) {
+    POOL_LANE.with(|f| f.set(id));
+    if let Some(cpu) = pin {
+        affinity::pin_current_thread(cpu);
+    }
     loop {
         let ticket = next_ticket(shared);
         // SAFETY: the publishing caller keeps the JobShared alive until
@@ -205,8 +390,9 @@ fn worker_loop(shared: &'static PoolShared) {
         // future job) and the ticket must still drain or the caller would
         // park forever. The caller re-raises after the drain; the original
         // message has already gone through the panic hook to stderr.
-        let outcome =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_chunks(job)));
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_chunks(job, home_slot(job.slots))
+        }));
         if outcome.is_err() {
             job.panicked.store(true, Ordering::Release);
         }
@@ -219,29 +405,38 @@ fn worker_loop(shared: &'static PoolShared) {
     }
 }
 
-/// Claim and run chunks until the cursor is exhausted (or another lane
-/// panicked — no point finishing a doomed job).
-fn run_chunks(job: &JobShared) {
+/// Claim and run chunks until every slot is exhausted (or another lane
+/// panicked — no point finishing a doomed job): the home slot first, then
+/// the remaining slots in cyclic order (work stealing).
+fn run_chunks(job: &JobShared, home: usize) {
     // SAFETY: `body` outlives the job (see `parallel_for`).
     let body = unsafe { &*job.body };
-    loop {
-        if job.panicked.load(Ordering::Relaxed) {
-            break;
+    'slots: for off in 0..job.slots {
+        let s = (home + off) % job.slots;
+        let base = s * job.span;
+        let end = ((s + 1) * job.span).min(job.n);
+        if base >= end {
+            continue;
         }
-        let start = job.next.fetch_add(job.chunk, Ordering::Relaxed);
-        if start >= job.n {
-            break;
+        loop {
+            if job.panicked.load(Ordering::Relaxed) {
+                break 'slots;
+            }
+            let start = base + job.cursors[s].fetch_add(job.chunk, Ordering::Relaxed);
+            if start >= end {
+                break;
+            }
+            body(start, (start + job.chunk).min(end));
         }
-        let end = (start + job.chunk).min(job.n);
-        body(start, end);
     }
 }
 
 /// Run `body(chunk_start, chunk_end)` in parallel over `0..n`, splitting
-/// into contiguous chunks claimed dynamically by the pool workers and the
-/// calling thread. `body` must be `Sync` (it is shared). Falls back to a
-/// single inline call when `n < min_parallel`, only 1 lane is configured,
-/// or the caller is itself a pool worker (no nested parallelism).
+/// into contiguous chunks claimed slot-first by the pool workers and the
+/// calling thread (see the module docs for the affinity-stable claiming
+/// scheme). `body` must be `Sync` (it is shared). Falls back to a single
+/// inline call when `n < min_parallel`, only 1 lane is configured, or the
+/// caller is itself a pool worker (no nested parallelism).
 pub fn parallel_for<F>(n: usize, min_parallel: usize, body: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -267,6 +462,8 @@ where
     // pool.lanes when n is small)
     let lanes = helpers + 1;
     let chunk = n.div_ceil(lanes * CHUNKS_PER_LANE).max(1);
+    // chunk-aligned slot width; span·lanes >= n, so every index has a slot
+    let span = n.div_ceil(lanes).div_ceil(chunk) * chunk;
     let body_ref: &(dyn Fn(usize, usize) + Sync) = &body;
     // SAFETY: we erase the borrow's lifetime to store it in JobShared, and
     // re-establish soundness by blocking below until every ticket has been
@@ -275,9 +472,11 @@ where
         unsafe { std::mem::transmute(body_ref) };
     let job = JobShared {
         body: body_erased,
-        next: AtomicUsize::new(0),
         n,
         chunk,
+        slots: lanes,
+        span,
+        cursors: [const { AtomicUsize::new(0) }; MAX_THREADS],
         pending: AtomicUsize::new(helpers),
         panicked: AtomicBool::new(false),
         caller: std::thread::current(),
@@ -292,10 +491,12 @@ where
         pool.shared.queued.fetch_add(helpers, Ordering::Release);
     }
     pool.shared.available.notify_all();
-    // The caller is a full lane: claim chunks alongside the workers. A
-    // panic here must still wait for the tickets to drain — workers hold
-    // pointers into this stack frame — so catch, drain, then re-raise.
-    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_chunks(&job)));
+    // The caller is a full lane (home slot 0): claim chunks alongside the
+    // workers. A panic here must still wait for the tickets to drain —
+    // workers hold pointers into this stack frame — so catch, drain, then
+    // re-raise.
+    let outcome =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_chunks(&job, 0)));
     if outcome.is_err() {
         job.panicked.store(true, Ordering::Release);
     }
@@ -344,8 +545,9 @@ where
 }
 
 /// Raw-pointer wrapper that is Send+Copy; safe because `parallel_for` chunks
-/// are disjoint.
-struct SendPtr<T>(*mut T);
+/// are disjoint. Crate-visible: the LU panel's per-slot pivot reduction
+/// (`linalg::solve`) uses it for its stack-resident partial-maxima array.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
         *self
@@ -371,6 +573,43 @@ mod tests {
         });
         let expect: u64 = (1..=n as u64).sum();
         assert_eq!(counter.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn slot_partition_covers_ragged_sizes() {
+        // exercise the per-slot cursors + stealing across sizes that leave
+        // empty or clipped slots (n barely over the lane count, primes,
+        // exact chunk multiples)
+        for n in [1usize, 2, 3, 5, 17, 63, 64, 65, 257, 1000] {
+            let counter = AtomicU64::new(0);
+            parallel_for(n, 1, |lo, hi| {
+                for i in lo..hi {
+                    counter.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                }
+            });
+            let expect: u64 = (1..=n as u64).sum();
+            assert_eq!(counter.load(Ordering::Relaxed), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn stealing_balances_uneven_bodies() {
+        // front-loaded cost: the first slot's chunks are ~100x the rest, so
+        // completion requires the other lanes to steal into slot 0's range
+        let n = 4_096;
+        let counter = AtomicU64::new(0);
+        parallel_for(n, 1, |lo, hi| {
+            for i in lo..hi {
+                let reps = if i < 256 { 100 } else { 1 };
+                let mut acc = 0u64;
+                for r in 0..reps {
+                    acc = acc.wrapping_add(std::hint::black_box(i as u64 + r));
+                }
+                std::hint::black_box(acc);
+                counter.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), n as u64);
     }
 
     #[test]
@@ -405,6 +644,23 @@ mod tests {
         assert!((1..=MAX_THREADS).contains(&n), "n={n}");
         // cached: later calls return the same value
         assert_eq!(num_threads(), n);
+        // the pin map is frozen with the lane count and never exceeds the
+        // worker count
+        let pinned = pinned_lanes();
+        assert!(pinned <= n.saturating_sub(1));
+        // cached: later calls return the same value
+        assert_eq!(pinned_lanes(), pinned);
+    }
+
+    #[test]
+    fn pin_map_assigns_distinct_worker_cores() {
+        // enough CPUs: every worker gets its own core, none takes core 0
+        let map = build_pin_map(5, 8);
+        assert_eq!(map, vec![1, 2, 3, 4]);
+        // more lanes than CPUs: pinning would double up cores — skip it
+        assert!(build_pin_map(6, 4).is_empty());
+        // single-CPU host: nothing to pin
+        assert!(build_pin_map(4, 1).is_empty());
     }
 
     #[test]

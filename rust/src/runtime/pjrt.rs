@@ -5,13 +5,18 @@
 //! >= 0.5 emits 64-bit instruction ids which xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
 //!
-//! The `xla` crate is not part of the offline crate set, so the whole
+//! The real `xla` crate is not part of the offline crate set, so the whole
 //! runtime sits behind the off-by-default `pjrt` cargo feature. Without it
 //! this module compiles a **stub** [`PjrtRuntime`] whose `load_dir` always
 //! fails with a descriptive error — [`crate::runtime::HybridExec`] then
 //! stays on the native f64 linalg path, which is the production
-//! configuration in this container. The host-side [`Tensor`] type is
-//! feature-independent (tests and the hybrid dispatch use it either way).
+//! configuration in this container. With the feature on, the `xla`
+//! dependency resolves to the in-tree API stub (`rust/vendor/xla`) unless
+//! repointed at the real wrapper — CI's `cargo check --features pjrt` lane
+//! type-checks this module against that surface so it cannot rot, and at
+//! run time the stub fails client construction, keeping the same native
+//! fallback. The host-side [`Tensor`] type is feature-independent (tests
+//! and the hybrid dispatch use it either way).
 
 use crate::error::{Error, Result};
 #[cfg(feature = "pjrt")]

@@ -99,7 +99,8 @@ mod tests {
         let mut sink = SinkNode::new(64);
         let shard = synth::ecg_like(10, 3, 1);
         let h = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(100) });
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(100) });
         let mut total = 0;
         let mut batches = 0;
         loop {
@@ -129,7 +130,8 @@ mod tests {
         let mut sink = SinkNode::new(4);
         let shard = synth::ecg_like(3, 3, 2);
         let h = SensorNode::new(shard, SourceConfig::default()).spawn(sink.sender());
-        let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(30) });
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(30) });
         let batch = b.next_batch(&mut sink);
         assert_eq!(batch.len(), 3); // flushed by deadline, not size
         h.join().unwrap();

@@ -89,7 +89,12 @@ mod tests {
     use crate::linalg::matrix::dot;
     use crate::util::prng::Rng;
 
-    fn data_with_outliers(n: usize, m: usize, n_out: usize, seed: u64) -> (Mat, Vec<f64>, Vec<usize>) {
+    fn data_with_outliers(
+        n: usize,
+        m: usize,
+        n_out: usize,
+        seed: u64,
+    ) -> (Mat, Vec<f64>, Vec<usize>) {
         let mut rng = Rng::new(seed);
         let w: Vec<f64> = rng.gaussian_vec(m);
         let x = Mat::from_fn(n, m, |_, _| 0.5 * rng.gaussian());

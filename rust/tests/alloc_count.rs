@@ -185,4 +185,28 @@ fn steady_state_inc_dec_is_allocation_free() {
             "warm packed gemm/syrk/cholesky/trsm allocated {allocs} times"
         );
     }
+
+    // --- packed parallel LU panel path, 1-thread: the full blocked LU
+    // (panel pivot search, lazy swaps, ger_panel updates, packed trailing
+    // GEMM) reuses the caller's Lu buffers and keeps its pivot scratch on
+    // the stack — zero heap traffic once warm ---
+    {
+        use mikrr::linalg::solve::{lu_decompose_into, Lu};
+
+        // n=256: the first panel's trailing update (192·192·64 ≈ 2.4M
+        // multiply-adds, k=64) sits over the packed-dispatch crossover
+        let n = 256;
+        let mut rng = Rng::new(51);
+        let g = Mat::from_fn(n, n, |r, c| {
+            rng.gaussian() + if r == c { 4.0 } else { 0.0 }
+        });
+        let mut lu = Lu::default();
+        lu_decompose_into(&g, &mut lu).unwrap(); // warm the factor + perm
+        let allocs = steady_state_allocs(|| lu_decompose_into(&g, &mut lu).unwrap(), 1, 3);
+        assert_eq!(
+            allocs, 0,
+            "warm packed LU panel path allocated {allocs} times"
+        );
+        assert_eq!(lu.perm.len(), n);
+    }
 }

@@ -20,7 +20,7 @@ use mikrr::linalg::gemm::{
 };
 use mikrr::linalg::solve::{
     backward_sub_t, cholesky, cholesky_naive, forward_sub, lu_decompose, lu_decompose_naive,
-    spd_inverse,
+    lu_panel_factor, lu_panel_factor_scalar, spd_inverse,
 };
 use mikrr::linalg::Mat;
 use mikrr::testutil::{assert_mat_close, random_mat, random_spd, Cases};
@@ -83,6 +83,92 @@ fn prop_blocked_lu_matches_naive() {
         assert_eq!(got.sign, want.sign, "n={n}");
         assert_mat_close(&got.lu, &want.lu, 1e-10);
     });
+}
+
+/// Packed parallel LU panel == the scalar reference: identical pivot rows
+/// (exact), identical sign, and **bitwise-identical** factors (the panel
+/// machinery performs the same operations in the same per-element order on
+/// both paths — a strictly stronger guarantee than the 1e-10 the blocked
+/// sweep needs).
+fn check_lu_panel(a0: &Mat, nb: usize) {
+    let mut packed = a0.clone();
+    let got = lu_panel_factor(&mut packed, nb).unwrap();
+    let mut scalar = a0.clone();
+    let want = lu_panel_factor_scalar(&mut scalar, nb).unwrap();
+    assert_eq!(
+        got.ipiv,
+        want.ipiv,
+        "({} x {}, nb={nb}) pivoting diverged",
+        a0.rows(),
+        a0.cols()
+    );
+    assert_eq!(got.sign, want.sign, "nb={nb}");
+    assert_mat_close(&packed, &scalar, 1e-10);
+    assert!(
+        packed == scalar,
+        "({} x {}, nb={nb}) packed panel not bitwise identical to scalar",
+        a0.rows(),
+        a0.cols()
+    );
+}
+
+/// LU panel property: random tall panels across heights and widths
+/// straddling every block boundary, with panels narrower than the buffer
+/// (ld > nb — the mid-factorization shape).
+#[test]
+fn prop_lu_panel_packed_matches_scalar() {
+    Cases::new(12, 0xD1).run(|rng| {
+        let n = 40 + rng.below(400);
+        let nb = 1 + rng.below(64);
+        let cols = nb + rng.below(20);
+        let a0 = random_mat(rng, n, cols, 1.0);
+        check_lu_panel(&a0, nb.min(n));
+    });
+}
+
+/// LU panel at the paper's J=2024 bootstrap height: a full NB=64 panel
+/// over 2024 rows (the exact shape the blocked factorization hands the
+/// panel machinery at the poly3 intrinsic dimension).
+#[test]
+fn lu_panel_packed_j2024_height() {
+    let mut rng = mikrr::util::prng::Rng::new(0xD2);
+    let tall = random_mat(&mut rng, 2024, 64, 0.7);
+    check_lu_panel(&tall, 64);
+}
+
+/// Near-singular panels: later columns are roundoff-scale perturbations of
+/// earlier ones, so post-elimination pivots decay toward 1e-9 and the
+/// pivot search must resolve near-ties — bitwise equality still required
+/// (both paths compare identical values in identical order).
+#[test]
+fn lu_panel_near_singular_resolves_ties_identically() {
+    let mut rng = mikrr::util::prng::Rng::new(0xD3);
+    let mut ns = random_mat(&mut rng, 500, 32, 1.0);
+    for j in 16..32 {
+        for i in 0..500 {
+            let base = ns[(i, j - 16)];
+            ns[(i, j)] = base + 1e-9 * rng.gaussian();
+        }
+    }
+    check_lu_panel(&ns, 32);
+    // tiny uniform scale: pivot magnitudes near the subnormal range
+    let mut tiny = random_mat(&mut rng, 300, 24, 1.0);
+    tiny.scale(1e-150);
+    check_lu_panel(&tiny, 24);
+}
+
+/// Permutation-heavy panels: magnitudes grow downward so nearly every
+/// column step swaps — the lazy-swap bookkeeping is exercised on every
+/// column, and the recorded pivot rows must still match the reference.
+#[test]
+fn lu_panel_permutation_heavy() {
+    let mut rng = mikrr::util::prng::Rng::new(0xD4);
+    let grad = Mat::from_fn(600, 48, |r, _c| (r + 1) as f64 * (1.0 + 0.1 * rng.gaussian()));
+    let mut probe = grad.clone();
+    let panel = lu_panel_factor(&mut probe, 48).unwrap();
+    let swaps = panel.ipiv.iter().enumerate().filter(|&(j, &p)| p != j).count();
+    assert!(swaps > 24, "only {swaps}/48 columns swapped — not permutation-heavy");
+    check_lu_panel(&grad, 48);
 }
 
 /// Packed GEMM (shapes over the packed-engine thresholds) against the

@@ -1,0 +1,63 @@
+//! Pool-geometry freeze regression: the lane count AND the pin map are
+//! read from the environment once, together, before the first dispatch —
+//! a mid-process `MIKRR_THREADS`/`MIKRR_PIN` change must never desync
+//! chunk claiming from the pinned cores (the bug class this guards: a
+//! pool built for N lanes claiming chunks with a later M-lane slot
+//! partition).
+//!
+//! Everything lives in ONE `#[test]` in its own binary: the env mutations
+//! must happen before any sibling test touches a parallel code path, and
+//! integration-test binaries are separate processes, so this cannot
+//! interfere with the rest of the suite.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[test]
+fn geometry_is_frozen_before_first_dispatch() {
+    // must run before ANY parallel call: the geometry caches on first use
+    #[allow(unused_unsafe)]
+    unsafe {
+        std::env::set_var("MIKRR_THREADS", "3");
+    }
+    assert_eq!(mikrr::par::num_threads(), 3);
+    let pinned0 = mikrr::par::pinned_lanes();
+    // at most one pin target per spawned worker (2 here); possibly 0 when
+    // pinning is unsupported or the host is single-core
+    assert!(pinned0 <= 2, "pinned_lanes {pinned0} > workers");
+
+    // drive the pool once so it is built on the frozen geometry
+    let warm = AtomicU64::new(0);
+    mikrr::par::parallel_for(256, 1, |lo, hi| {
+        warm.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+    });
+    assert_eq!(warm.load(Ordering::Relaxed), 256);
+
+    // mid-process override attempts must be inert: the lane count and the
+    // pin map were frozen together at first use
+    #[allow(unused_unsafe)]
+    unsafe {
+        std::env::set_var("MIKRR_THREADS", "9");
+        std::env::set_var("MIKRR_PIN", "0");
+    }
+    assert_eq!(mikrr::par::num_threads(), 3, "lane count must stay frozen");
+    assert_eq!(
+        mikrr::par::pinned_lanes(),
+        pinned0,
+        "pin map must stay frozen with the lane count"
+    );
+
+    // dispatches keep completing with exact coverage on the frozen
+    // geometry (a desynced slot partition would drop or double indices)
+    for n in [1usize, 7, 64, 257, 1000] {
+        for _ in 0..50 {
+            let counter = AtomicU64::new(0);
+            mikrr::par::parallel_for(n, 1, |lo, hi| {
+                for i in lo..hi {
+                    counter.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                }
+            });
+            let expect: u64 = (1..=n as u64).sum();
+            assert_eq!(counter.load(Ordering::Relaxed), expect, "n={n}");
+        }
+    }
+}

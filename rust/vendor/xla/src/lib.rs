@@ -1,0 +1,158 @@
+//! **API stub** for the `xla` crate (the xla_extension 0.5.1 wrapper) used
+//! by mikrr's `pjrt` feature.
+//!
+//! The real crate is not in the offline set, but the PJRT runtime code in
+//! `mikrr/src/runtime/pjrt.rs` must not rot unchecked behind its feature
+//! gate. This stub mirrors **exactly the surface that code compiles
+//! against** — types, method signatures, error plumbing — so
+//! `cargo check --features pjrt` keeps the real runtime honest without
+//! network access or native XLA libraries.
+//!
+//! At run time every fallible entry point fails: [`PjRtClient::cpu`]
+//! returns an error, so `PjrtRuntime::load_dir` fails and `HybridExec`
+//! falls back to the native f64 path — the same observable behavior as a
+//! feature-off build, but with the real runtime code compiled.
+//!
+//! To execute real AOT artifacts, repoint mikrr's `xla` path dependency at
+//! the vendored xla_extension wrapper (see `rust/Cargo.toml` and
+//! /opt/xla-example); this stub keeps signature parity with that wrapper,
+//! so the swap is a one-line manifest change.
+
+use std::fmt;
+
+/// Stub error returned by every fallible entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla API stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what} unavailable (API stub — vendor the real xla_extension wrapper to run AOT \
+         artifacts)"
+    )))
+}
+
+/// Host-side literal (mirrors `xla::Literal`).
+pub struct Literal {}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(_data: &[f32]) -> Self {
+        Self {}
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        stub_err("Literal::reshape")
+    }
+
+    /// The literal's array shape.
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        stub_err("Literal::array_shape")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        stub_err("Literal::to_vec")
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        stub_err("Literal::to_tuple")
+    }
+}
+
+/// Array shape: element dims (mirrors `xla::ArrayShape`).
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (mirrors `xla::HloModuleProto`).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(path: &str) -> Result<Self, Error> {
+        stub_err(&format!("HloModuleProto::from_text_file({path:?})"))
+    }
+}
+
+/// A computation handle (mirrors `xla::XlaComputation`).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self {}
+    }
+}
+
+/// A PJRT client (mirrors `xla::PjRtClient`).
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// CPU client — **always fails in the stub**, which is what keeps
+    /// `PjrtRuntime::load_dir` on the native-fallback path.
+    pub fn cpu() -> Result<Self, Error> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+/// A device buffer (mirrors `xla::PjRtBuffer`).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable (mirrors `xla::PjRtLoadedExecutable`).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_descriptively() {
+        let e = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub client must fail"),
+        };
+        assert!(e.to_string().contains("stub"), "{e}");
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.array_shape().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}
