@@ -1,0 +1,172 @@
+//! The sharded serving layer end to end: a sensor fleet streams into one
+//! fusion-center sink, a fan-out thread splits the pooled stream across
+//! per-shard sinks, K engine shards run fused inc/dec rounds on their
+//! slices and publish epoch snapshots, and a concurrent client fleet
+//! serves single-row predictions through the micro-batching front-end —
+//! reads never block on updates, and the headline is throughput under
+//! concurrent updates.
+//!
+//! Run: `cargo run --release --example serve_shard`
+
+use mikrr::coordinator::CoordinatorConfig;
+use mikrr::data::synth;
+use mikrr::kernels::Kernel;
+use mikrr::krr::classification_accuracy;
+use mikrr::metrics::Timer;
+use mikrr::serve::{
+    MicroBatchPolicy, MicroBatchServer, Placement, ServeConfig, ShardRouter,
+};
+use mikrr::streaming::batcher::BatchPolicy;
+use mikrr::streaming::fanout::spawn_fanout;
+use mikrr::streaming::outlier::OutlierConfig;
+use mikrr::streaming::sink::SinkNode;
+use mikrr::streaming::source::{SensorNode, SourceConfig};
+use std::time::Duration;
+
+fn main() -> Result<(), mikrr::error::Error> {
+    let dim = 21;
+    let shards = 4;
+    let sensors = 4;
+    let per_sensor = 100;
+
+    // bootstrap K shard engines on an initial pool (row i -> shard i mod K)
+    let base_data = synth::ecg_like(2_000, dim, 1);
+    let cfg = ServeConfig {
+        shards,
+        placement: Placement::RoundRobin,
+        base: CoordinatorConfig {
+            kernel: Kernel::poly(2, 1.0),
+            ridge: 0.5,
+            space: None,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(25) },
+            outlier: Some(OutlierConfig { z_threshold: 5.0, max_removals: 2 }),
+            with_uncertainty: true,
+            snapshot_rollback: false,
+        },
+    };
+    let t = Timer::start();
+    let mut router = ShardRouter::bootstrap(&base_data.x, &base_data.y, cfg)?;
+    println!(
+        "router up: {} shards in {:?} space, bootstrap {:.2}s, n = {} ({} per shard)",
+        router.num_shards(),
+        router.space(),
+        t.elapsed(),
+        router.n_samples(),
+        router.shard(0).n_samples(),
+    );
+
+    // sensor fleet -> one pooled sink -> fan-out into per-shard sinks
+    let mut pooled = SinkNode::new(64);
+    let mut sensor_handles = Vec::new();
+    for sid in 0..sensors {
+        let shard_data = synth::ecg_like(per_sensor, dim, 100 + sid as u64);
+        let scfg = SourceConfig {
+            source_id: sid,
+            outlier_rate: 0.05,
+            delay: Some(Duration::from_micros(200)),
+            seed: 30 + sid as u64,
+        };
+        sensor_handles.push(SensorNode::new(shard_data, scfg).spawn(pooled.sender()));
+    }
+    pooled.seal();
+    let mut shard_sinks: Vec<SinkNode> = (0..shards).map(|_| SinkNode::new(32)).collect();
+    let shard_txs: Vec<_> = shard_sinks.iter().map(|s| s.sender()).collect();
+    for s in &mut shard_sinks {
+        s.seal();
+    }
+    let mut rr = 0usize;
+    let fanout = spawn_fanout(pooled, shard_txs, move |_| {
+        let s = rr;
+        rr += 1;
+        s
+    });
+
+    // the micro-batched prediction front-end over the epoch-published
+    // read path, hammered by a client fleet while updates run
+    let server = MicroBatchServer::spawn(
+        router.handle(),
+        dim,
+        MicroBatchPolicy { max_rows: 64, max_wait: Duration::from_micros(500) },
+    );
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut client_handles = Vec::new();
+    for c in 0..3 {
+        let mut client = server.client();
+        let stop_c = std::sync::Arc::clone(&stop);
+        client_handles.push(std::thread::spawn(move || {
+            let queries = synth::ecg_like(64, 21, 500 + c);
+            let mut served = 0u64;
+            let mut lat = mikrr::metrics::LatencyHist::new();
+            let mut i = 0usize;
+            while !stop_c.load(std::sync::atomic::Ordering::Relaxed) {
+                let t = Timer::start();
+                let (_mu, _var) =
+                    client.predict_with_uncertainty(queries.x.row(i % 64)).unwrap();
+                lat.record(t.elapsed());
+                served += 1;
+                i += 1;
+            }
+            (served, lat)
+        }));
+    }
+
+    // drive shard rounds until the stream drains
+    let t = Timer::start();
+    let report = router.run_per_shard(&mut shard_sinks, usize::MAX)?;
+    let wall = t.elapsed();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for h in sensor_handles {
+        h.join().expect("sensor thread");
+    }
+    let forwarded = fanout.join().expect("fanout thread");
+
+    let mut total_served = 0u64;
+    for (c, h) in client_handles.into_iter().enumerate() {
+        let (served, lat) = h.join().expect("client thread");
+        total_served += served;
+        println!("client {c}: {served} predictions, latency {}", lat.summary());
+    }
+    let stats = server.shutdown();
+
+    let (added, removed) = (report.added(), report.removed());
+    println!(
+        "stream done: {forwarded} forwarded, {added} applied, {removed} outliers pruned, \
+         {} shard rounds ({} shard errors) in {wall:.2}s ({:.0} samples/s ingest)",
+        report.outcomes.len(),
+        report.errors.len(),
+        added as f64 / wall,
+    );
+    println!(
+        "serving under updates: {total_served} predictions ({:.0}/s) in {} micro-batches \
+         (largest {} rows); per-shard epochs now {:?}",
+        total_served as f64 / wall,
+        stats.batches,
+        stats.max_batch_rows,
+        router.handle().epochs(),
+    );
+
+    // one explicit outlier-eviction round across every shard
+    let evict = router.evict_outliers();
+    println!(
+        "eviction round: {} samples removed across {shards} shards",
+        evict.removed()
+    );
+
+    // held-out quality through the DC-KRR averaged read path
+    let test = synth::ecg_like(2_000, dim, 999);
+    let handle = router.handle();
+    let pred = handle.predict(&test.x)?;
+    println!(
+        "held-out accuracy after stream: {:.2}%",
+        100.0 * classification_accuracy(&pred, &test.y)
+    );
+    let (mu, var) = handle.predict_with_uncertainty(&test.x.block(0, 3, 0, dim))?;
+    println!(
+        "uncertainty fan-in sample: mu = {:?}, 95% half-widths = {:?}",
+        mu.iter().map(|m| (m * 100.0).round() / 100.0).collect::<Vec<_>>(),
+        var.iter()
+            .map(|v| (1.96 * v.sqrt() * 100.0).round() / 100.0)
+            .collect::<Vec<_>>(),
+    );
+    Ok(())
+}

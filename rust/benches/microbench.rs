@@ -25,6 +25,12 @@
 //!   multi-threaded gains. (`speedup_lu_panel_packed` is the one headline
 //!   computed serial-reference vs full-thread child: the packed panel's
 //!   win IS the parallelism.)
+//! * `serve/*`             — the sharded serving layer: B=64 per-request
+//!   uncertainty GEMVs vs one micro-batched BLAS-3 predict round
+//!   (`serve/microbatch_predict`, headline `speedup_serve_microbatch` —
+//!   perf-gated in CI), and the K=1 vs K=4 empirical-space shard update
+//!   round (`serve/shard_round`, `speedup_serve_shard_k4`: the same
+//!   logical +4/−4 round on one N=512 inverse vs four (N/4)² shards).
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
@@ -417,6 +423,91 @@ fn main() {
     // ---- the SIMD-packed compute core (ISSUE 2 acceptance gates) ----
     core_benches(&mut b, &mut rng);
 
+    // ---- serve/*: the sharded serving layer (ISSUE 5 gates) ----
+    // (a) micro-batched prediction: B=64 single-row uncertainty predicts
+    // (per-request covariance GEMV + per-call allocation) vs ONE 64-row
+    // batched predict_into — the (J,J)·(J,64) product sits over the packed
+    // dispatch crossover at the paper's J=253 (poly2, m=21)
+    if b.enabled("serve/microbatch_predict") {
+        use mikrr::coordinator::CoordinatorConfig;
+        use mikrr::serve::{Placement, RouterPredictWork, ServeConfig, ShardRouter};
+
+        let d = mikrr::data::synth::ecg_like(600, 21, 11);
+        let mut base = CoordinatorConfig::default_for(Kernel::poly(2, 1.0));
+        base.outlier = None;
+        base.with_uncertainty = true;
+        let router = ShardRouter::bootstrap(
+            &d.x,
+            &d.y,
+            ServeConfig { shards: 1, placement: Placement::RoundRobin, base },
+        )
+        .unwrap();
+        let h = router.handle();
+        let q = mikrr::data::synth::ecg_like(64, 21, 12);
+        let rows: Vec<Mat> = (0..64).map(|r| q.x.block(r, r + 1, 0, 21)).collect();
+        b.bench("serve/microbatch_predict/per_request_gemv_B64", || {
+            for row in &rows {
+                black_box(h.predict_with_uncertainty(row).unwrap());
+            }
+        });
+        let mut work = RouterPredictWork::default();
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        b.bench("serve/microbatch_predict/microbatch_gemm_B64", || {
+            h.predict_with_uncertainty_into(&q.x, &mut mean, &mut var, &mut work)
+                .unwrap();
+            black_box(&mean);
+        });
+    }
+    // (b) shard update round, empirical space (maintained state (N/K)^2
+    // per shard): one fused +4/−4 on N=512 vs the same round split across
+    // K=4 shards (+1/−1 each on N=128), applied sequentially — the flop
+    // ratio alone is N^2·8 vs 4·(N/4)^2·2 = 16x
+    if b.enabled("serve/shard_round") {
+        use mikrr::config::Space;
+        use mikrr::coordinator::CoordinatorConfig;
+        use mikrr::serve::{Placement, ServeConfig, ShardRouter};
+
+        let d = mikrr::data::synth::ecg_like(512, 8, 13);
+        let mk_router = |k: usize| {
+            let mut base = CoordinatorConfig::default_for(Kernel::poly(2, 1.0));
+            base.space = Some(Space::Empirical);
+            base.outlier = None;
+            ShardRouter::bootstrap(
+                &d.x,
+                &d.y,
+                ServeConfig { shards: k, placement: Placement::RoundRobin, base },
+            )
+            .unwrap()
+        };
+        // pool longer than the +4/−4 residency window (512/4 = 128
+        // rounds): a row is always evicted before its batch recurs, so the
+        // maintained empirical inverse never accumulates duplicate rows
+        let pool: Vec<_> = (0..160)
+            .map(|k| mikrr::data::synth::ecg_like(4, 8, 60 + k))
+            .collect();
+        let mut r1 = mk_router(1);
+        let mut it1 = 0usize;
+        b.bench("serve/shard_round/k1_n512_plus4_minus4", || {
+            let batch = &pool[it1 % pool.len()];
+            it1 += 1;
+            r1.shard_mut(0)
+                .apply_update(&batch.x, &batch.y, &[0, 1, 2, 3])
+                .unwrap();
+        });
+        let mut r4 = mk_router(4);
+        let mut it4 = 0usize;
+        b.bench("serve/shard_round/k4_n128_plus1_minus1", || {
+            let batch = &pool[it4 % pool.len()];
+            it4 += 1;
+            for s in 0..4 {
+                let x = batch.x.block(s, s + 1, 0, 8);
+                r4.shard_mut(s)
+                    .apply_update(&x, &batch.y[s..s + 1], &[0])
+                    .unwrap();
+            }
+        });
+    }
+
     // ---- machine-readable reports ----
     let mut extras: Vec<(&str, f64)> =
         vec![("threads", mikrr::par::num_threads() as f64)];
@@ -473,12 +564,22 @@ fn main() {
             "core/trsm_blocked_vs_scalar/scalar_768",
             "core/trsm_blocked_vs_scalar/blocked_768",
         ),
+        (
+            "speedup_serve_microbatch",
+            "serve/microbatch_predict/per_request_gemv_B64",
+            "serve/microbatch_predict/microbatch_gemm_B64",
+        ),
+        (
+            "speedup_serve_shard_k4",
+            "serve/shard_round/k1_n512_plus4_minus4",
+            "serve/shard_round/k4_n128_plus1_minus1",
+        ),
     ] {
         if let (Some(s), Some(f)) = (b.summary(slow), b.summary(fast)) {
             let speedup = s.mean() / f.mean().max(1e-12);
             extras.push((key, speedup));
             println!(
-                "core: {fast} {speedup:.2}x the reference ({} -> {})",
+                "perf: {fast} {speedup:.2}x the reference ({} -> {})",
                 mikrr::util::fmt_secs(s.mean()),
                 mikrr::util::fmt_secs(f.mean()),
             );

@@ -7,12 +7,23 @@
 
 use crate::config::Space;
 use crate::error::{Error, Result};
-use crate::kbr::{KbrHyper, KbrModel};
+use crate::kbr::{KbrHyper, KbrModel, KbrPredictWork};
 use crate::kernels::Kernel;
-use crate::krr::empirical::EmpiricalKrr;
-use crate::krr::intrinsic::IntrinsicKrr;
+use crate::krr::empirical::{EmpiricalKrr, EmpiricalPredictWork};
+use crate::krr::intrinsic::{IntrinsicKrr, IntrinsicPredictWork};
 use crate::krr::KrrModel;
 use crate::linalg::Mat;
+
+/// Caller-owned workspace for the engine's `*_into` prediction paths:
+/// holds the per-variant scratch so a warm serving loop predicts without
+/// touching the heap regardless of which space the engine routes to
+/// (measured in `rust/tests/alloc_count.rs`, 1-thread path).
+#[derive(Clone, Default)]
+pub struct EnginePredictWork {
+    intr: IntrinsicPredictWork,
+    emp: EmpiricalPredictWork,
+    kbr: KbrPredictWork,
+}
 
 /// Engine variants by operating space.
 #[derive(Clone)]
@@ -106,9 +117,11 @@ impl Engine {
         }
     }
 
-    /// Copy of the current training set (engine order).
-    pub fn training_view(&self) -> (Mat, Vec<f64>) {
-        (self.x.clone(), self.y.clone())
+    /// Borrow the current training set (engine order). Borrowed, not
+    /// cloned: the outlier-scoring hot path reads it every round, and an
+    /// owned copy was an O(N M) allocation per call.
+    pub fn training_view(&self) -> (&Mat, &[f64]) {
+        (&self.x, &self.y)
     }
 
     /// Borrow the training targets (engine order).
@@ -128,6 +141,35 @@ impl Engine {
         })?;
         let p = kbr.predict(x)?;
         Ok((p.mean, p.var))
+    }
+
+    /// [`Engine::predict`] written into a caller-provided buffer through a
+    /// warm workspace — the serving layer's allocation-free read path.
+    pub fn predict_into(
+        &self,
+        x: &Mat,
+        out: &mut Vec<f64>,
+        work: &mut EnginePredictWork,
+    ) -> Result<()> {
+        match &self.krr {
+            KrrEngine::Intrinsic(m) => m.predict_into(x, out, &mut work.intr),
+            KrrEngine::Empirical(m) => m.predict_into(x, out, &mut work.emp),
+        }
+    }
+
+    /// [`Engine::predict_with_uncertainty`] written into caller-provided
+    /// buffers through a warm workspace (requires the KBR twin).
+    pub fn predict_with_uncertainty_into(
+        &self,
+        x: &Mat,
+        mean: &mut Vec<f64>,
+        var: &mut Vec<f64>,
+        work: &mut EnginePredictWork,
+    ) -> Result<()> {
+        let kbr = self.kbr.as_ref().ok_or_else(|| {
+            Error::Config("uncertainty serving requires with_uncertainty=true".into())
+        })?;
+        kbr.predict_into(x, mean, var, &mut work.kbr)
     }
 
     /// One batched multiple inc/dec round across KRR (and KBR if present),

@@ -14,7 +14,11 @@
 //!
 //! The engine state sits behind a `RwLock`, so prediction traffic keeps
 //! flowing between (not during) updates — the write lock is held only for
-//! the O(J^2 H) update itself.
+//! the O(J^2 H) update itself. At serving scale even that window is too
+//! wide: [`bootstrap_sharded`] delegates the same round policy to the
+//! [`crate::serve`] layer, which partitions the stream across K engine
+//! replicas (per-shard fused updates + per-shard rollback) and serves
+//! reads from epoch-published snapshots that never touch the write path.
 
 pub mod engine;
 pub mod experiment;
@@ -225,6 +229,26 @@ impl Coordinator {
     }
 }
 
+/// Delegate a coordinator-style deployment to the sharded serving layer:
+/// the same round policy (`cfg`), but partitioned across `shards`
+/// independent engines with per-shard batching, per-shard rollback, and
+/// epoch-published reads. See [`crate::serve`] for the read/write
+/// semantics; this is the upgrade path once a single engine's update
+/// window starts gating prediction throughput.
+pub fn bootstrap_sharded(
+    x: &Mat,
+    y: &[f64],
+    cfg: CoordinatorConfig,
+    shards: usize,
+    placement: crate::serve::Placement,
+) -> Result<crate::serve::ShardRouter> {
+    crate::serve::ShardRouter::bootstrap(
+        x,
+        y,
+        crate::serve::ServeConfig { shards, placement, base: cfg },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +317,18 @@ mod tests {
         let test = synth::ecg_like(10, 8, 7);
         let preds = handle.predict(&test.x).unwrap();
         assert_eq!(preds.len(), 10);
+    }
+
+    #[test]
+    fn bootstrap_sharded_delegates_round_policy() {
+        let d = synth::ecg_like(120, 8, 9);
+        let r =
+            bootstrap_sharded(&d.x, &d.y, cfg(), 3, crate::serve::Placement::RoundRobin)
+                .unwrap();
+        assert_eq!(r.num_shards(), 3);
+        assert_eq!(r.n_samples(), 120);
+        let p = r.handle().predict(&d.x.block(0, 4, 0, 8)).unwrap();
+        assert_eq!(p.len(), 4);
     }
 
     #[test]

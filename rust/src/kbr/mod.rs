@@ -88,6 +88,18 @@ impl Predictive {
     }
 }
 
+/// Caller-owned workspace for [`KbrModel::predict_into`]: the mapped query
+/// block and the Σ Φ*ᵀ product, kept warm so steady-state uncertainty
+/// serving performs zero heap allocations (measured in
+/// `rust/tests/alloc_count.rs`).
+#[derive(Clone, Default)]
+pub struct KbrPredictWork {
+    /// Mapped query features Φ* (B, J).
+    phi_star: Mat,
+    /// Σ Φ*ᵀ (J, B) — the batched covariance product.
+    sc: Mat,
+}
+
 /// Incremental Kernelized Bayesian Regression engine (intrinsic space).
 #[derive(Clone)]
 pub struct KbrModel {
@@ -239,6 +251,25 @@ impl KbrModel {
     /// Posterior predictive distribution for a block of raw feature rows
     /// (eq. 45-50).
     pub fn predict(&self, x: &Mat) -> Result<Predictive> {
+        let mut mean = Vec::new();
+        let mut var = Vec::new();
+        self.predict_into(x, &mut mean, &mut var, &mut KbrPredictWork::default())?;
+        Ok(Predictive { mean, var })
+    }
+
+    /// [`KbrModel::predict`] written into caller-provided buffers, drawing
+    /// every intermediate from `work` — allocation-free once warm. The
+    /// variance column `Σ Φ*ᵀ` is built as ONE batched product over the
+    /// whole micro-batch (a packed GEMM above the dispatch crossover)
+    /// instead of B per-request covariance GEMVs, which is where the
+    /// serving layer's BLAS-3 win lives.
+    pub fn predict_into(
+        &self,
+        x: &Mat,
+        mean: &mut Vec<f64>,
+        var: &mut Vec<f64>,
+        work: &mut KbrPredictWork,
+    ) -> Result<()> {
         ensure_shape!(
             x.cols() == self.table.m,
             "KbrModel::predict",
@@ -246,17 +277,24 @@ impl KbrModel {
             x.cols(),
             self.table.m
         );
-        let phi_star = self.table.map(x); // (B, J)
-        let mean = gemv(&phi_star, &self.mean)?;
+        self.table.map_into_mat(x, &mut work.phi_star); // (B, J)
+        gemv_into(&work.phi_star, &self.mean, mean)?;
         // psi* = sigma_b^2 + diag(Phi* Sigma Phi*^T)
-        let sc = crate::linalg::gemm::matmul_nt(&self.cov, &phi_star)?; // (J, B)
-        let var = (0..phi_star.rows())
-            .map(|r| {
-                let q = dot(phi_star.row(r), &sc.col(r));
-                self.hyper.sigma_b2 + q.max(0.0)
-            })
-            .collect();
-        Ok(Predictive { mean, var })
+        crate::linalg::gemm::matmul_nt_into(&self.cov, &work.phi_star, &mut work.sc)?; // (J, B)
+        let b = work.phi_star.rows();
+        debug_assert_eq!(work.sc.rows(), work.phi_star.cols());
+        let sc = work.sc.as_slice();
+        var.clear();
+        for r in 0..b {
+            // Φ* row r (contiguous) · Σ Φ*ᵀ column r (stride B) — no
+            // materialized column copy
+            let mut q = 0.0;
+            for (jj, &p) in work.phi_star.row(r).iter().enumerate() {
+                q += p * sc[jj * b + r];
+            }
+            var.push(self.hyper.sigma_b2 + q.max(0.0));
+        }
+        Ok(())
     }
 
     /// GP log marginal likelihood log p(y | Phi) for the current training

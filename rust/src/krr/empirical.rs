@@ -13,7 +13,7 @@
 use crate::error::{Error, Result};
 use crate::kernels::gram::{gram_into, gram_symmetric_into, GramWork};
 use crate::kernels::Kernel;
-use crate::linalg::gemm::{gemv, gemv_into};
+use crate::linalg::gemm::gemv_into;
 use crate::linalg::matrix::dot;
 use crate::linalg::solve::{spd_inverse, spd_inverse_into};
 use crate::linalg::woodbury::{bordered_grow_into, bordered_shrink_into, BorderWork};
@@ -45,6 +45,17 @@ struct EmpiricalWork {
     l: Mat,
     /// §III.B direct-recompute scratch: one solve column.
     col: Vec<f64>,
+}
+
+/// Caller-owned workspace for [`EmpiricalKrr::predict_into`]: the cross
+/// Gram block and its norm scratch, kept warm so steady-state serving
+/// performs zero heap allocations (measured in `rust/tests/alloc_count.rs`).
+#[derive(Clone, Default)]
+pub struct EmpiricalPredictWork {
+    /// Query cross-kernel K(X*, X) (B, N).
+    k_star: Mat,
+    /// Gram row-norm scratch (RBF path).
+    gram: GramWork,
 }
 
 /// Empirical-space incremental KRR engine.
@@ -161,10 +172,18 @@ impl EmpiricalKrr {
     pub fn dec_one(&mut self, remove_idx: usize) -> Result<()> {
         self.inc_dec(&Mat::zeros(0, self.x.cols()), &[], &[remove_idx])
     }
-}
 
-impl KrrModel for EmpiricalKrr {
-    fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+    /// Batched prediction written into a caller-provided buffer, drawing
+    /// every intermediate from `work` — allocation-free once warm, which is
+    /// what the serving layer's micro-batch loop runs on. One round is ONE
+    /// cross-Gram build (a packed GEMM above the dispatch crossover) plus
+    /// one GEMV, instead of B per-request kernel-row sweeps.
+    pub fn predict_into(
+        &self,
+        x: &Mat,
+        out: &mut Vec<f64>,
+        work: &mut EmpiricalPredictWork,
+    ) -> Result<()> {
         ensure_shape!(
             x.cols() == self.x.cols(),
             "EmpiricalKrr::predict",
@@ -172,11 +191,19 @@ impl KrrModel for EmpiricalKrr {
             x.cols(),
             self.x.cols()
         );
-        let k_star = self.kernel.gram(x, &self.x); // (B, N)
-        let mut out = gemv(&k_star, &self.a)?;
-        for v in &mut out {
+        gram_into(&self.kernel, x, &self.x, &mut work.k_star, &mut work.gram); // (B, N)
+        gemv_into(&work.k_star, &self.a, out)?;
+        for v in out.iter_mut() {
             *v += self.b;
         }
+        Ok(())
+    }
+}
+
+impl KrrModel for EmpiricalKrr {
+    fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        self.predict_into(x, &mut out, &mut EmpiricalPredictWork::default())?;
         Ok(out)
     }
 

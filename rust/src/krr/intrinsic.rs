@@ -46,6 +46,15 @@ struct IntrinsicWork {
     spy: Vec<f64>,
 }
 
+/// Caller-owned workspace for [`IntrinsicKrr::predict_into`]: the mapped
+/// query block, kept warm so steady-state serving performs zero heap
+/// allocations (measured in `rust/tests/alloc_count.rs`).
+#[derive(Clone, Default)]
+pub struct IntrinsicPredictWork {
+    /// Mapped query features Φ* (B, J).
+    phi_star: Mat,
+}
+
 /// Intrinsic-space incremental KRR engine.
 #[derive(Clone)]
 pub struct IntrinsicKrr {
@@ -193,10 +202,18 @@ impl IntrinsicKrr {
     pub fn dec_one(&mut self, remove_idx: usize) -> Result<()> {
         self.inc_dec(&Mat::zeros(0, self.table.m), &[], &[remove_idx])
     }
-}
 
-impl KrrModel for IntrinsicKrr {
-    fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+    /// Batched prediction written into a caller-provided buffer, drawing
+    /// the mapped query block from `work` — allocation-free once warm (the
+    /// serving layer's micro-batch loop runs on this). One round is ONE
+    /// feature map over the batch plus one GEMV, instead of B per-request
+    /// map + dot passes.
+    pub fn predict_into(
+        &self,
+        x: &Mat,
+        out: &mut Vec<f64>,
+        work: &mut IntrinsicPredictWork,
+    ) -> Result<()> {
         ensure_shape!(
             x.cols() == self.table.m,
             "IntrinsicKrr::predict",
@@ -204,11 +221,19 @@ impl KrrModel for IntrinsicKrr {
             x.cols(),
             self.table.m
         );
-        let phi_star = self.table.map(x); // (B, J)
-        let mut out = gemv(&phi_star, &self.u)?;
-        for v in &mut out {
+        self.table.map_into_mat(x, &mut work.phi_star); // (B, J)
+        gemv_into(&work.phi_star, &self.u, out)?;
+        for v in out.iter_mut() {
             *v += self.b;
         }
+        Ok(())
+    }
+}
+
+impl KrrModel for IntrinsicKrr {
+    fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        self.predict_into(x, &mut out, &mut IntrinsicPredictWork::default())?;
         Ok(out)
     }
 

@@ -8,7 +8,9 @@
 //! * **L3 (this crate)** — the streaming coordinator: sensor sources, sink-node
 //!   pooling, batching with backpressure, outlier-driven decremental learning,
 //!   and the incremental KRR/KBR engines themselves (intrinsic and empirical
-//!   space), all in pure Rust on the request path.
+//!   space), all in pure Rust on the request path. The [`serve`] layer scales
+//!   this to serving traffic: K sharded engine replicas, epoch-published read
+//!   snapshots, and micro-batched prediction execution.
 //! * **L2** — the paper's update equations as JAX graphs
 //!   (`python/compile/model.py`), AOT-lowered to HLO text at build time.
 //! * **L1** — Pallas kernels for the compute hot-spots
@@ -39,6 +41,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod streaming;
 
 pub mod testutil;

@@ -1,0 +1,439 @@
+//! Micro-batched prediction front-end: concurrent single-row predict
+//! requests are coalesced into one batched predict per shard.
+//!
+//! A request fleet issuing individual predictions pays a per-request
+//! GEMV — for the KBR twin an O(J²) covariance product *per request* —
+//! plus per-call allocation and dispatch overhead. The micro-batcher
+//! collects whatever requests arrive within a short window (or until
+//! `max_rows`) and executes them as ONE batched `predict_into` through the
+//! router: the covariance product becomes a single (J, J)·(J, B) packed
+//! GEMM above the dispatch crossover, the feature map and cross-Gram
+//! builds amortize across the batch, and the worker's warm
+//! [`RouterPredictWork`] keeps the whole serving loop allocation-free
+//! (measured in `rust/tests/alloc_count.rs` on the `predict_into` paths).
+//!
+//! The batching window trades tail latency for throughput exactly like the
+//! update-side [`crate::streaming::batcher`]: `max_wait` bounds the added
+//! latency, `max_rows` bounds the batch.
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::router::{RouterHandle, RouterPredictWork};
+
+/// Batching policy for the prediction front-end.
+#[derive(Clone, Debug)]
+pub struct MicroBatchPolicy {
+    /// Execute once this many rows are pending.
+    pub max_rows: usize,
+    /// Execute once the first pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for MicroBatchPolicy {
+    fn default() -> Self {
+        // 64 rows puts the J=253 KBR covariance product over the packed
+        // dispatch crossover; 200us keeps the added latency below typical
+        // network jitter
+        Self { max_rows: 64, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// What a request wants back.
+#[derive(Clone, Copy)]
+enum Want {
+    Mean,
+    MeanVar,
+}
+
+type Reply = Result<(f64, Option<f64>)>;
+
+struct Request {
+    x: Vec<f64>,
+    want: Want,
+    resp: SyncSender<Reply>,
+}
+
+/// Worker inbox message: a request, or the server's stop marker (clients
+/// hold sender clones, so channel disconnect alone cannot signal
+/// shutdown while any client is alive).
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Worker-side statistics, returned by [`MicroBatchServer::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct MicroBatchStats {
+    /// Batched executions performed.
+    pub batches: u64,
+    /// Requests served (including per-request errors).
+    pub requests: u64,
+    /// Largest batch coalesced.
+    pub max_batch_rows: usize,
+}
+
+/// A blocking client onto the micro-batch server. Each client owns its
+/// response channel, so it is cheap and single-threaded by construction —
+/// mint one per request thread via [`MicroBatchServer::client`].
+pub struct PredictClient {
+    tx: SyncSender<Msg>,
+    resp_tx: SyncSender<Reply>,
+    resp_rx: Receiver<Reply>,
+}
+
+impl PredictClient {
+    /// Predict one observation (blocks until the batch it joined runs).
+    pub fn predict(&mut self, x: &[f64]) -> Result<f64> {
+        self.call(x, Want::Mean).map(|(m, _)| m)
+    }
+
+    /// Predict one observation with predictive variance (requires the
+    /// shards' KBR twins).
+    pub fn predict_with_uncertainty(&mut self, x: &[f64]) -> Result<(f64, f64)> {
+        let (m, v) = self.call(x, Want::MeanVar)?;
+        Ok((m, v.expect("MeanVar reply carries a variance")))
+    }
+
+    fn call(&mut self, x: &[f64], want: Want) -> Reply {
+        let req = Request { x: x.to_vec(), want, resp: self.resp_tx.clone() };
+        self.tx
+            .send(Msg::Req(req))
+            .map_err(|_| Error::Stream("prediction server is down".into()))?;
+        self.resp_rx
+            .recv()
+            .map_err(|_| Error::Stream("prediction server dropped the request".into()))?
+    }
+}
+
+/// The micro-batching prediction server: one worker thread coalescing
+/// requests into batched reads against the router's published epochs.
+pub struct MicroBatchServer {
+    tx: Option<SyncSender<Msg>>,
+    worker: Option<JoinHandle<MicroBatchStats>>,
+}
+
+impl MicroBatchServer {
+    /// Spawn the worker over a router read handle. `dim` is the feature
+    /// dimension every request row must have.
+    pub fn spawn(handle: RouterHandle, dim: usize, policy: MicroBatchPolicy) -> Self {
+        assert!(policy.max_rows >= 1, "max_rows must be >= 1");
+        let (tx, rx) = sync_channel::<Msg>(policy.max_rows.saturating_mul(4).max(16));
+        let worker = std::thread::spawn(move || worker_loop(handle, dim, policy, rx));
+        Self { tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Mint a client (one per request thread).
+    pub fn client(&self) -> PredictClient {
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let tx = self.tx.as_ref().expect("server already shut down").clone();
+        PredictClient { tx, resp_tx, resp_rx }
+    }
+
+    /// Stop the worker — it serves the batch in flight, drops any requests
+    /// queued behind the stop marker (their clients get a "dropped the
+    /// request" error), and returns its statistics. Works with clients
+    /// still alive (they hold sender clones, so this cannot rely on
+    /// channel disconnect); once the worker exits, every later client call
+    /// gets a "server is down" error.
+    pub fn shutdown(mut self) -> MicroBatchStats {
+        self.signal_stop();
+        self.worker
+            .take()
+            .expect("server already shut down")
+            .join()
+            .expect("microbatch worker panicked")
+    }
+
+    fn signal_stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+    }
+}
+
+impl Drop for MicroBatchServer {
+    fn drop(&mut self) {
+        self.signal_stop();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The worker's reusable batch-execution buffers (warm across batches, so
+/// steady-state serving is allocation-free).
+#[derive(Default)]
+struct BatchBuffers {
+    xb: Mat,
+    work: RouterPredictWork,
+    /// Validated requests of the batch being served (capacity retained).
+    valid: Vec<Request>,
+    /// KRR point predictions (the `predict` estimator).
+    mean: Vec<f64>,
+    /// KBR posterior-fan-in means (a DIFFERENT estimator — never used to
+    /// answer a plain `predict` request).
+    kmean: Vec<f64>,
+    var: Vec<f64>,
+}
+
+fn worker_loop(
+    handle: RouterHandle,
+    dim: usize,
+    policy: MicroBatchPolicy,
+    rx: Receiver<Msg>,
+) -> MicroBatchStats {
+    let mut stats = MicroBatchStats::default();
+    let mut batch: Vec<Request> = Vec::with_capacity(policy.max_rows);
+    let mut buf = BatchBuffers::default();
+    let mut stopping = false;
+    while !stopping {
+        // block for the first request of the batch
+        match rx.recv() {
+            Ok(Msg::Req(first)) => batch.push(first),
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+        // coalesce until the window closes, the batch fills, the server
+        // signals shutdown, or every sender is gone
+        let deadline = Instant::now() + policy.max_wait;
+        while batch.len() < policy.max_rows {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(Msg::Req(req)) => batch.push(req),
+                Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+            }
+        }
+        let rows = batch.len();
+        let served = serve_batch(&handle, dim, &mut batch, &mut buf);
+        stats.requests += served as u64;
+        stats.max_batch_rows = stats.max_batch_rows.max(rows);
+        stats.batches += 1;
+    }
+    stats
+}
+
+/// Run one coalesced batch: validate rows, execute the batched predict
+/// passes, and fan replies out. Mean requests are ALWAYS answered from the
+/// KRR point-prediction path and MeanVar requests from the KBR posterior
+/// fan-in — coalescing must never change which estimator answers a
+/// request, so a mixed batch runs both passes (each still batched over the
+/// whole block). Returns the number of requests replied to (including
+/// error replies).
+fn serve_batch(
+    handle: &RouterHandle,
+    dim: usize,
+    batch: &mut Vec<Request>,
+    buf: &mut BatchBuffers,
+) -> usize {
+    let total = batch.len();
+    buf.xb.resize_scratch(0, dim);
+    buf.valid.clear();
+    for req in batch.drain(..) {
+        if req.x.len() != dim {
+            let msg = format!("request row has dim {}, expected {dim}", req.x.len());
+            let _ = req.resp.send(Err(Error::shape("microbatch", msg)));
+            continue;
+        }
+        buf.xb.push_row(&req.x).expect("dims checked");
+        buf.valid.push(req);
+    }
+    if buf.valid.is_empty() {
+        return total;
+    }
+    let want_mean = buf.valid.iter().any(|r| matches!(r.want, Want::Mean));
+    let want_var = buf.valid.iter().any(|r| matches!(r.want, Want::MeanVar));
+    // each pass carries its own error so a failure on one estimator (e.g.
+    // no KBR twin) neither blocks the other nor gets rewritten
+    let mean_err: Option<Error> = if want_mean {
+        handle.predict_into(&buf.xb, &mut buf.mean, &mut buf.work).err()
+    } else {
+        None
+    };
+    let var_err: Option<Error> = if want_var {
+        handle
+            .predict_with_uncertainty_into(&buf.xb, &mut buf.kmean, &mut buf.var, &mut buf.work)
+            .err()
+    } else {
+        None
+    };
+    let (mean, kmean, var) = (&buf.mean, &buf.kmean, &buf.var);
+    for (i, req) in buf.valid.drain(..).enumerate() {
+        let reply: Reply = match req.want {
+            Want::Mean => match &mean_err {
+                None => Ok((mean[i], None)),
+                Some(e) => Err(replicate(e)),
+            },
+            Want::MeanVar => match &var_err {
+                None => Ok((kmean[i], Some(var[i]))),
+                Some(e) => Err(replicate(e)),
+            },
+        };
+        let _ = req.resp.send(reply);
+    }
+    total
+}
+
+/// Re-materialize a pass error for each affected request. [`Error`] is not
+/// `Clone` (its `Io` variant wraps `std::io::Error`), but preserving the
+/// variant matters to clients: a permanent `Config` problem (no KBR twin)
+/// must stay distinguishable from a transient transport failure.
+fn replicate(e: &Error) -> Error {
+    match e {
+        Error::Shape { context, detail } => {
+            Error::Shape { context: *context, detail: detail.clone() }
+        }
+        Error::Numerical { context, detail } => {
+            Error::Numerical { context: *context, detail: detail.clone() }
+        }
+        Error::InvalidUpdate(m) => Error::InvalidUpdate(m.clone()),
+        Error::Config(m) => Error::Config(m.clone()),
+        Error::Artifact(m) => Error::Artifact(m.clone()),
+        Error::Runtime(m) => Error::Runtime(m.clone()),
+        Error::Stream(m) => Error::Stream(m.clone()),
+        Error::Io(io) => Error::Stream(format!("io error: {io}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kernels::Kernel;
+    use crate::serve::router::{ServeConfig, ShardRouter};
+
+    fn router(uncertainty: bool) -> ShardRouter {
+        let d = synth::ecg_like(60, 5, 1);
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+        cfg.base.with_uncertainty = uncertainty;
+        ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap()
+    }
+
+    #[test]
+    fn single_requests_match_batched_read_path() {
+        let r = router(false);
+        let h = r.handle();
+        let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
+        let mut client = server.client();
+        let q = synth::ecg_like(6, 5, 2);
+        let direct = h.predict(&q.x).unwrap();
+        for i in 0..6 {
+            let got = client.predict(q.x.row(i)).unwrap();
+            crate::testutil::assert_close(got, direct[i], 1e-9);
+        }
+        drop(client);
+        let stats = server.shutdown();
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn uncertainty_requests_round_trip() {
+        let r = router(true);
+        let h = r.handle();
+        let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
+        let mut client = server.client();
+        let q = synth::ecg_like(4, 5, 3);
+        let (mu, sig) = h.predict_with_uncertainty(&q.x).unwrap();
+        for i in 0..4 {
+            let (m, v) = client.predict_with_uncertainty(q.x.row(i)).unwrap();
+            crate::testutil::assert_close(m, mu[i], 1e-9);
+            crate::testutil::assert_close(v, sig[i], 1e-9);
+            assert!(v > 0.0);
+        }
+    }
+
+    #[test]
+    fn mixed_batches_keep_estimators_separate() {
+        // a Mean request coalesced with a MeanVar request must still be
+        // answered by the KRR point predictor, not the KBR posterior mean
+        let r = router(true);
+        let h = r.handle();
+        let q = synth::ecg_like(2, 5, 6);
+        let direct_mean = h.predict(&q.x).unwrap();
+        let (dmu, dvar) = h.predict_with_uncertainty(&q.x).unwrap();
+        // max_rows 2 + a generous window forces the two concurrent
+        // requests into one batch
+        let server = MicroBatchServer::spawn(
+            h,
+            5,
+            MicroBatchPolicy { max_rows: 2, max_wait: Duration::from_secs(1) },
+        );
+        let mut c1 = server.client();
+        let mut c2 = server.client();
+        let row0 = q.x.row(0).to_vec();
+        let t = std::thread::spawn(move || c1.predict(&row0).unwrap());
+        let (m1, v1) = c2.predict_with_uncertainty(q.x.row(1)).unwrap();
+        let m0 = t.join().unwrap();
+        crate::testutil::assert_close(m0, direct_mean[0], 1e-9);
+        crate::testutil::assert_close(m1, dmu[1], 1e-9);
+        crate::testutil::assert_close(v1, dvar[1], 1e-9);
+    }
+
+    #[test]
+    fn wrong_dim_and_missing_twin_error_cleanly() {
+        let r = router(false);
+        let server = MicroBatchServer::spawn(r.handle(), 5, MicroBatchPolicy::default());
+        let mut client = server.client();
+        assert!(client.predict(&[1.0, 2.0]).is_err(), "wrong dim");
+        // mean requests still work after an error reply
+        let q = synth::ecg_like(1, 5, 4);
+        assert!(client.predict(q.x.row(0)).is_ok());
+        // no KBR twin: variance requests get the Config error (variant
+        // preserved through replicate()), without killing the server
+        let err = client.predict_with_uncertainty(q.x.row(0)).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "got {err:?}");
+        assert!(client.predict(q.x.row(0)).is_ok());
+    }
+
+    #[test]
+    fn shutdown_with_live_clients_does_not_deadlock() {
+        let r = router(false);
+        let server = MicroBatchServer::spawn(r.handle(), 5, MicroBatchPolicy::default());
+        let mut client = server.client();
+        let q = synth::ecg_like(1, 5, 7);
+        assert!(client.predict(q.x.row(0)).is_ok());
+        // the client still holds a live sender: shutdown must not rely on
+        // channel disconnect to stop the worker
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert!(client.predict(q.x.row(0)).is_err(), "post-shutdown calls error");
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce() {
+        let r = router(false);
+        let h = r.handle();
+        let server = MicroBatchServer::spawn(
+            h.clone(),
+            5,
+            MicroBatchPolicy { max_rows: 16, max_wait: Duration::from_millis(20) },
+        );
+        let q = synth::ecg_like(24, 5, 5);
+        let direct = h.predict(&q.x).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..3 {
+            let mut client = server.client();
+            let rows: Vec<Vec<f64>> =
+                (0..8).map(|i| q.x.row(t * 8 + i).to_vec()).collect();
+            joins.push(std::thread::spawn(move || {
+                rows.iter().map(|r| client.predict(r).unwrap()).collect::<Vec<f64>>()
+            }));
+        }
+        for (t, j) in joins.into_iter().enumerate() {
+            let got = j.join().unwrap();
+            crate::testutil::assert_vec_close(&got, &direct[t * 8..(t + 1) * 8], 1e-9);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 24);
+        assert!(stats.batches <= 24, "some coalescing expected under load");
+    }
+}

@@ -1,0 +1,46 @@
+//! The sharded serving layer: multi-engine shard routing with
+//! micro-batched prediction traffic.
+//!
+//! PRs 1–4 made the per-update compute core fully packed and parallel, so
+//! at serving scale the bottleneck moved **above** the engine: one
+//! maintained inverse behind one `RwLock` serializes every update against
+//! every read. This subsystem is the first where the headline metric is
+//! **throughput under concurrent updates** (requests/sec), not per-op
+//! latency, and it attacks the lock three ways:
+//!
+//! * **Sharding** ([`router`]) — the stream is partitioned across K
+//!   independent [`crate::coordinator::engine::Engine`] replicas
+//!   (round-robin or content-hash placement, per-shard batching), so each
+//!   shard runs the paper's fused inc/dec update (eq. 15 / eq. 30) on
+//!   1/K-sized state. Reads average the shard predictions — the
+//!   divide-and-conquer KRR estimator (You et al.) — and fuse the KBR
+//!   twins' posteriors by precision weighting. Bounding each shard's
+//!   working set is the same lever StreaMRAK pulls to keep streaming
+//!   kernel regression scalable.
+//! * **Epoch publishing** ([`publish`], [`shard`]) — every shard update
+//!   lands as an immutable `Arc` snapshot; readers serve the last
+//!   published epoch and *never* contend with the writer. An in-flight
+//!   update delays freshness by one epoch instead of blocking the read
+//!   fleet (the `RwLock` pattern it replaces did the opposite).
+//! * **Micro-batching** ([`microbatch`]) — concurrent single-row predict
+//!   requests coalesce into one batched `predict_into` per shard:
+//!   per-request GEMVs become one packed BLAS-3 product, and the warm
+//!   workspaces make the steady-state read path allocation-free.
+//!
+//! Bench coverage lives in `rust/benches/microbench.rs` (`serve/*`:
+//! micro-batched GEMM predict vs per-request GEMV, K=1 vs K=4 update
+//! rounds) with the `speedup_serve_microbatch` headline wired into the CI
+//! perf gate; see EXPERIMENTS.md §Perf and `examples/serve_shard.rs` for
+//! the end-to-end drive.
+
+pub mod microbatch;
+pub mod publish;
+pub mod router;
+pub mod shard;
+
+pub use microbatch::{MicroBatchPolicy, MicroBatchServer, MicroBatchStats, PredictClient};
+pub use publish::Epoch;
+pub use router::{
+    Placement, RoundReport, RouterHandle, RouterPredictWork, ServeConfig, ShardRouter,
+};
+pub use shard::{Shard, SnapshotHandle};

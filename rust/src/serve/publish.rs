@@ -1,0 +1,136 @@
+//! Epoch publishing: wait-free-for-practical-purposes snapshot reads under
+//! a continuously updating writer.
+//!
+//! The coordinator's [`crate::coordinator::ModelHandle`] serves reads
+//! through an `RwLock<Engine>` — correct, but the write guard is held for
+//! the whole O(J²H) update, so every predict issued during an update round
+//! blocks until the round finishes. At serving scale (the ROADMAP's
+//! millions-of-users regime) that turns each update into a latency spike
+//! across the entire read fleet.
+//!
+//! [`Epoch`] inverts the contract: the writer mutates a **private** copy of
+//! the state and, when a round completes, publishes an immutable
+//! [`Arc`] snapshot with a pointer swap. Readers load the current snapshot
+//! and compute against it lock-free — the only shared critical section is
+//! the swap/refcount itself (a few dozen nanoseconds under a `Mutex`; the
+//! offline crate set has no `arc-swap`, and a mutex held only for a
+//! pointer clone never sees meaningful contention). An in-flight update
+//! therefore *cannot* delay a read: readers simply keep serving the last
+//! published epoch until the next one lands, which is exactly the
+//! freshness semantics an incremental model update implies anyway.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A single-writer multi-reader epoch-published slot.
+///
+/// Epoch 0 is the bootstrap state; every [`Epoch::publish`] increments the
+/// counter. The epoch number and the snapshot are updated together inside
+/// the (pointer-swap-only) critical section, so
+/// [`Epoch::load_with_epoch`] returns a consistent pair.
+pub struct Epoch<T> {
+    slot: Mutex<Arc<T>>,
+    epoch: AtomicU64,
+}
+
+impl<T> Epoch<T> {
+    /// Wrap a bootstrap state as epoch 0.
+    pub fn new(initial: T) -> Self {
+        Self { slot: Mutex::new(Arc::new(initial)), epoch: AtomicU64::new(0) }
+    }
+
+    /// The most recently published snapshot. Never blocks on an in-flight
+    /// update: the lock guards only the pointer clone.
+    pub fn load(&self) -> Arc<T> {
+        self.slot.lock().expect("epoch slot poisoned").clone()
+    }
+
+    /// Snapshot and its epoch number, read consistently.
+    pub fn load_with_epoch(&self) -> (Arc<T>, u64) {
+        let g = self.slot.lock().expect("epoch slot poisoned");
+        (g.clone(), self.epoch.load(Ordering::Acquire))
+    }
+
+    /// Current epoch number (0 until the first publish).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Publish a new state, returning its epoch number. The value is
+    /// wrapped *outside* the critical section; readers that raced the swap
+    /// keep the previous snapshot (their `Arc` keeps it alive) and observe
+    /// the new one on their next load.
+    pub fn publish(&self, value: T) -> u64 {
+        self.publish_arc(Arc::new(value))
+    }
+
+    /// [`Epoch::publish`] for a pre-wrapped snapshot.
+    pub fn publish_arc(&self, value: Arc<T>) -> u64 {
+        let mut g = self.slot.lock().expect("epoch slot poisoned");
+        // keep the previous snapshot alive past the critical section: if
+        // this was its last reference, dropping it here would free the
+        // whole engine state while readers wait on the lock
+        let old = std::mem::replace(&mut *g, value);
+        // bumped inside the critical section so load_with_epoch is
+        // consistent; Release pairs with the Acquire loads above
+        let epoch = self.epoch.fetch_add(1, Ordering::Release) + 1;
+        drop(g);
+        drop(old);
+        epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Barrier;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn publish_bumps_epoch_and_swaps() {
+        let cell = Epoch::new(10usize);
+        assert_eq!(cell.epoch(), 0);
+        assert_eq!(*cell.load(), 10);
+        assert_eq!(cell.publish(11), 1);
+        let (v, e) = cell.load_with_epoch();
+        assert_eq!((*v, e), (11, 1));
+    }
+
+    #[test]
+    fn readers_keep_old_snapshot_alive_across_publish() {
+        let cell = Epoch::new(vec![1.0f64; 8]);
+        let held = cell.load();
+        cell.publish(vec![2.0; 8]);
+        // the pre-publish snapshot is still fully readable
+        assert_eq!(held[0], 1.0);
+        assert_eq!(cell.load()[0], 2.0);
+    }
+
+    #[test]
+    fn reads_are_served_while_an_update_is_in_flight() {
+        // deterministic in-flight window: the writer signals through a
+        // barrier right after it STARTS its (simulated, 200ms) update
+        // compute; the reader then loads immediately and must get the old
+        // epoch without waiting for the writer to finish.
+        let cell = Arc::new(Epoch::new(0usize));
+        let barrier = Arc::new(Barrier::new(2));
+        let (c, b) = (Arc::clone(&cell), Arc::clone(&barrier));
+        let writer = std::thread::spawn(move || {
+            b.wait();
+            // "the update": a long compute on the writer's private state
+            std::thread::sleep(Duration::from_millis(200));
+            c.publish(1)
+        });
+        barrier.wait();
+        let t0 = Instant::now();
+        let (v, e) = cell.load_with_epoch();
+        let dt = t0.elapsed();
+        assert_eq!((*v, e), (0, 0), "read must serve the last published epoch");
+        assert!(
+            dt < Duration::from_millis(100),
+            "read blocked behind the in-flight update: {dt:?}"
+        );
+        assert_eq!(writer.join().unwrap(), 1);
+        assert_eq!(*cell.load(), 1);
+    }
+}

@@ -1,0 +1,577 @@
+//! The shard router: K independent engines behind one ingest + read
+//! surface.
+//!
+//! # Write path
+//!
+//! Arrivals are placed onto shards by [`Placement`] (round-robin keeps
+//! shard sizes balanced; hash placement is content-sticky so replayed
+//! events land deterministically). Each shard batches its own slice and
+//! runs the paper's fused inc/dec round on J/K-sized state — in empirical
+//! space the maintained inverse shrinks from one N×N to K blocks of
+//! (N/K)², so a full router round costs ~1/K of the monolithic update
+//! even applied sequentially.
+//!
+//! # Read path
+//!
+//! [`RouterHandle::predict`] averages the K shard predictions — the
+//! divide-and-conquer KRR estimator (You et al., *Accurate, Fast and
+//! Scalable Kernel Ridge Regression on Parallel and Distributed Systems*):
+//! with data split uniformly at random, each shard is an unbiased
+//! estimator of the same regression function and the average concentrates
+//! around the full-data solution. For the KBR twin,
+//! [`RouterHandle::predict_with_uncertainty`] fuses shard posteriors by
+//! **precision weighting**: μ = Σₖ λₖ μₖ / Σₖ λₖ with λₖ = 1/σₖ², the
+//! minimum-variance unbiased combination of independent shard estimates,
+//! and σ̄² = K / Σₖ λₖ — the precision-weighted harmonic mean of shard
+//! variances, which stays on a single-model scale (each shard saw 1/K of
+//! the data but all share one prior; the product-of-experts 1/Σλ would
+//! double-count that prior K times and report overconfident intervals).
+//! Both reductions are exact identities at K = 1, which is what the parity
+//! tests anchor on.
+
+use crate::config::Space;
+use crate::coordinator::engine::EnginePredictWork;
+use crate::coordinator::{CoordinatorConfig, RoundOutcome};
+use crate::error::{Error, Result};
+use crate::kernels::Kernel;
+use crate::krr::advisor::Advisor;
+use crate::linalg::Mat;
+use crate::metrics::Counters;
+use crate::streaming::batcher::Batcher;
+use crate::streaming::sink::SinkNode;
+use crate::streaming::StreamEvent;
+
+use super::shard::{Shard, SnapshotHandle};
+
+/// How arrivals are placed onto shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Cycle through shards — balanced sizes, stream-order interleaving.
+    RoundRobin,
+    /// FNV-1a over the feature bytes — content-sticky (the same
+    /// observation always lands on the same shard, regardless of arrival
+    /// order or source).
+    Hash,
+}
+
+/// FNV-1a over the row's f64 bit patterns.
+fn hash_row(x: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in x {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Serving-layer configuration: shard count + placement on top of the
+/// per-engine round policy.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Number of independent engine replicas (K ≥ 1).
+    pub shards: usize,
+    /// Arrival placement policy.
+    pub placement: Placement,
+    /// Per-shard round policy (kernel, ridge, batching, outliers,
+    /// uncertainty twin, rollback) — the same knobs as the single-engine
+    /// coordinator.
+    pub base: CoordinatorConfig,
+}
+
+impl ServeConfig {
+    /// Round-robin defaults over the coordinator's default round policy.
+    pub fn default_for(kernel: Kernel, shards: usize) -> Self {
+        Self {
+            shards,
+            placement: Placement::RoundRobin,
+            base: CoordinatorConfig::default_for(kernel),
+        }
+    }
+}
+
+/// What one router round did, across all shards. Shards are independent:
+/// a failure on one never blocks (or unrecords) the rounds that the other
+/// shards already applied and published.
+#[derive(Debug, Default)]
+pub struct RoundReport {
+    /// Successful shard rounds, in shard order.
+    pub outcomes: Vec<RoundOutcome>,
+    /// Per-shard failures `(shard id, error)` from the same round. The
+    /// failing shard's batch was requeued or dropped per
+    /// [`Shard::flush`]'s policy.
+    pub errors: Vec<(usize, Error)>,
+}
+
+impl RoundReport {
+    /// Total samples added by the successful rounds.
+    pub fn added(&self) -> usize {
+        self.outcomes.iter().map(|o| o.added).sum()
+    }
+
+    /// Total samples removed by the successful rounds.
+    pub fn removed(&self) -> usize {
+        self.outcomes.iter().map(|o| o.removed).sum()
+    }
+
+    /// True when nothing happened (no outcomes, no errors).
+    pub fn is_empty(&self) -> bool {
+        self.outcomes.is_empty() && self.errors.is_empty()
+    }
+
+    /// Fold another report into this one.
+    pub fn merge(&mut self, mut other: RoundReport) {
+        self.outcomes.append(&mut other.outcomes);
+        self.errors.append(&mut other.errors);
+    }
+}
+
+/// Caller-owned workspace for the router's allocation-free read path.
+#[derive(Default)]
+pub struct RouterPredictWork {
+    engine: EnginePredictWork,
+    shard_out: Vec<f64>,
+    shard_mean: Vec<f64>,
+    shard_var: Vec<f64>,
+    acc_mean: Vec<f64>,
+    acc_prec: Vec<f64>,
+}
+
+/// Cloneable read front-end over all shards' published epochs.
+#[derive(Clone)]
+pub struct RouterHandle {
+    shards: Vec<SnapshotHandle>,
+}
+
+impl RouterHandle {
+    /// Number of shards behind this handle.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Read handle for one shard.
+    pub fn shard(&self, i: usize) -> &SnapshotHandle {
+        &self.shards[i]
+    }
+
+    /// Per-shard epoch numbers (freshness diagnostics).
+    pub fn epochs(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.epoch()).collect()
+    }
+
+    /// Total training samples across the last published epochs.
+    pub fn n_samples(&self) -> usize {
+        self.shards.iter().map(|s| s.n_samples()).sum()
+    }
+
+    /// DC-KRR averaged prediction across shards.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        self.predict_into(x, &mut out, &mut RouterPredictWork::default())?;
+        Ok(out)
+    }
+
+    /// [`RouterHandle::predict`] through a warm workspace: each shard
+    /// serves the whole micro-batch as one batched predict (BLAS-3 above
+    /// the dispatch crossover), and a warm round allocates nothing.
+    pub fn predict_into(
+        &self,
+        x: &Mat,
+        out: &mut Vec<f64>,
+        work: &mut RouterPredictWork,
+    ) -> Result<()> {
+        out.clear();
+        out.resize(x.rows(), 0.0);
+        for h in &self.shards {
+            let snap = h.snapshot();
+            snap.predict_into(x, &mut work.shard_out, &mut work.engine)?;
+            for (o, s) in out.iter_mut().zip(&work.shard_out) {
+                *o += s;
+            }
+        }
+        let k = self.shards.len() as f64;
+        for o in out.iter_mut() {
+            *o /= k;
+        }
+        Ok(())
+    }
+
+    /// Precision-weighted posterior fan-in across the shards' KBR twins
+    /// (see the module docs for the fusion rule).
+    pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        let mut mean = Vec::new();
+        let mut var = Vec::new();
+        self.predict_with_uncertainty_into(
+            x,
+            &mut mean,
+            &mut var,
+            &mut RouterPredictWork::default(),
+        )?;
+        Ok((mean, var))
+    }
+
+    /// [`RouterHandle::predict_with_uncertainty`] through a warm workspace.
+    pub fn predict_with_uncertainty_into(
+        &self,
+        x: &Mat,
+        mean: &mut Vec<f64>,
+        var: &mut Vec<f64>,
+        work: &mut RouterPredictWork,
+    ) -> Result<()> {
+        let b = x.rows();
+        work.acc_mean.clear();
+        work.acc_mean.resize(b, 0.0);
+        work.acc_prec.clear();
+        work.acc_prec.resize(b, 0.0);
+        for h in &self.shards {
+            let snap = h.snapshot();
+            snap.predict_with_uncertainty_into(
+                x,
+                &mut work.shard_mean,
+                &mut work.shard_var,
+                &mut work.engine,
+            )?;
+            let acc = work.acc_mean.iter_mut().zip(work.acc_prec.iter_mut());
+            for ((&m, &v), (am, ap)) in
+                work.shard_mean.iter().zip(&work.shard_var).zip(acc)
+            {
+                // shard variances are >= sigma_b^2 > 0 by construction
+                let lam = 1.0 / v;
+                *ap += lam;
+                *am += lam * m;
+            }
+        }
+        let k = self.shards.len() as f64;
+        mean.clear();
+        var.clear();
+        for (am, ap) in work.acc_mean.iter().zip(&work.acc_prec) {
+            mean.push(am / ap);
+            var.push(k / ap);
+        }
+        Ok(())
+    }
+}
+
+/// The multi-engine shard router.
+pub struct ShardRouter {
+    shards: Vec<Shard>,
+    placement: Placement,
+    rr: usize,
+    batcher: Batcher,
+    /// routed / rounds.
+    pub counters: Counters,
+}
+
+impl ShardRouter {
+    /// Partition the bootstrap set across K shards (row `i` → shard
+    /// `i mod K`, so every shard sees the full data distribution — the
+    /// uniform split the DC-KRR averaging argument needs) and fit one
+    /// engine per shard. Space is chosen once, by the advisor on the
+    /// per-shard problem size, unless the config overrides it.
+    pub fn bootstrap(x: &Mat, y: &[f64], cfg: ServeConfig) -> Result<Self> {
+        let k = cfg.shards;
+        if k == 0 {
+            return Err(Error::Config("ServeConfig.shards must be >= 1".into()));
+        }
+        if y.len() < 4 * k {
+            return Err(Error::Config(format!(
+                "bootstrap set of {} cannot seed {k} shards (need >= {})",
+                y.len(),
+                4 * k
+            )));
+        }
+        if cfg.base.batch.max_batch == 0 {
+            return Err(Error::Config(
+                "ServeConfig.base.batch.max_batch must be >= 1".into(),
+            ));
+        }
+        let per_shard = y.len() / k;
+        let space = cfg.base.space.unwrap_or_else(|| {
+            Advisor::default()
+                .choose_space(&cfg.base.kernel, per_shard, x.cols(), 4, 2)
+                .space
+        });
+        let mut shards = Vec::with_capacity(k);
+        for s in 0..k {
+            let idx: Vec<usize> = (s..y.len()).step_by(k).collect();
+            let xs = x.select_rows(&idx);
+            let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+            shards.push(Shard::bootstrap(s, &xs, &ys, &cfg.base, space)?);
+        }
+        // the global pull batcher fills every shard's batch in one round
+        let mut policy = cfg.base.batch.clone();
+        policy.max_batch = policy.max_batch.saturating_mul(k);
+        Ok(Self {
+            shards,
+            placement: cfg.placement,
+            rr: 0,
+            batcher: Batcher::new(policy),
+            counters: Counters::default(),
+        })
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The space every shard engine runs in.
+    pub fn space(&self) -> Space {
+        self.shards[0].handle().snapshot().space()
+    }
+
+    /// Borrow one shard (diagnostics).
+    pub fn shard(&self, i: usize) -> &Shard {
+        &self.shards[i]
+    }
+
+    /// Mutably borrow one shard (benches / explicit replay).
+    pub fn shard_mut(&mut self, i: usize) -> &mut Shard {
+        &mut self.shards[i]
+    }
+
+    /// Writer-side total training samples.
+    pub fn n_samples(&self) -> usize {
+        self.shards.iter().map(|s| s.n_samples()).sum()
+    }
+
+    /// A cloneable read front-end over all shards.
+    pub fn handle(&self) -> RouterHandle {
+        RouterHandle { shards: self.shards.iter().map(|s| s.handle()).collect() }
+    }
+
+    /// The shard an event is placed on.
+    pub fn route(&mut self, ev: &StreamEvent) -> usize {
+        let k = self.shards.len();
+        match self.placement {
+            Placement::RoundRobin => {
+                let s = self.rr % k;
+                self.rr = (self.rr + 1) % k;
+                s
+            }
+            Placement::Hash => (hash_row(&ev.x) % k as u64) as usize,
+        }
+    }
+
+    /// Route one arrival onto its shard's pending queue.
+    pub fn ingest(&mut self, ev: StreamEvent) {
+        let s = self.route(&ev);
+        self.counters.inc("routed");
+        self.shards[s].push(ev);
+    }
+
+    /// One router round: every shard with pending arrivals flushes one
+    /// batch through its fused update and publishes a new epoch. Shards
+    /// are independent — a failure on one is reported in the
+    /// [`RoundReport`] (its batch requeued or dropped per
+    /// [`Shard::flush`]) and never discards what the other shards already
+    /// applied and published.
+    pub fn update_round(&mut self) -> RoundReport {
+        let mut report = RoundReport::default();
+        for shard in &mut self.shards {
+            match shard.flush() {
+                Ok(Some(out)) => report.outcomes.push(out),
+                Ok(None) => {}
+                Err(e) => report.errors.push((shard.id(), e)),
+            }
+        }
+        if !report.outcomes.is_empty() {
+            self.counters.inc("rounds");
+        }
+        self.counters.add("shard_errors", report.errors.len() as u64);
+        report
+    }
+
+    /// An explicit insertion-free eviction round on every shard.
+    pub fn evict_outliers(&mut self) -> RoundReport {
+        let mut report = RoundReport::default();
+        for shard in &mut self.shards {
+            match shard.evict_outliers() {
+                Ok(out) => report.outcomes.push(out),
+                Err(e) => report.errors.push((shard.id(), e)),
+            }
+        }
+        self.counters.add("shard_errors", report.errors.len() as u64);
+        report
+    }
+
+    /// Pull-route-update loop over one pooled sink until the stream goes
+    /// quiet or `max_rounds` is reached (the sharded analogue of
+    /// [`crate::coordinator::Coordinator::run`]). Every applied outcome
+    /// and every per-shard error is in the returned report.
+    pub fn run(&mut self, sink: &mut SinkNode, max_rounds: usize) -> RoundReport {
+        let mut report = RoundReport::default();
+        for _ in 0..max_rounds {
+            let batch = self.batcher.next_batch(sink);
+            if batch.is_empty() {
+                break;
+            }
+            for ev in batch {
+                self.ingest(ev);
+            }
+            report.merge(self.update_round());
+        }
+        // drain whatever is still pending (e.g. a partial final batch);
+        // stop if an iteration makes no progress — a rolled-back batch
+        // that keeps failing must not livelock the drain
+        loop {
+            let pending: usize = self.shards.iter().map(|s| s.pending()).sum();
+            if pending == 0 {
+                break;
+            }
+            let round = self.update_round();
+            let after: usize = self.shards.iter().map(|s| s.pending()).sum();
+            let progressed = !round.outcomes.is_empty() || after < pending;
+            report.merge(round);
+            if !progressed {
+                break;
+            }
+        }
+        report
+    }
+
+    /// Round-driven loop over per-shard sinks (one sink per shard, fed by
+    /// [`crate::streaming::fanout`]): each round drains every shard's sink
+    /// into its pending queue and flushes. Ends once every sink has
+    /// disconnected and nothing is pending (or, once the sinks have
+    /// disconnected, when a round stops making progress — see
+    /// [`ShardRouter::run`]). `Err` only for a config mismatch.
+    pub fn run_per_shard(
+        &mut self,
+        sinks: &mut [SinkNode],
+        max_rounds: usize,
+    ) -> Result<RoundReport> {
+        if sinks.len() != self.shards.len() {
+            return Err(Error::Config(format!(
+                "{} sinks for {} shards",
+                sinks.len(),
+                self.shards.len()
+            )));
+        }
+        let mut report = RoundReport::default();
+        for _ in 0..max_rounds {
+            for (shard, sink) in self.shards.iter_mut().zip(sinks.iter_mut()) {
+                let want = shard.max_batch();
+                for ev in sink.drain(want, std::time::Duration::from_millis(5)) {
+                    self.counters.inc("routed");
+                    shard.push(ev);
+                }
+            }
+            let pending_before: usize = self.shards.iter().map(|s| s.pending()).sum();
+            let round = self.update_round();
+            let drained = sinks.iter().all(|s| s.is_disconnected());
+            let pending: usize = self.shards.iter().map(|s| s.pending()).sum();
+            let progressed = !round.outcomes.is_empty() || pending < pending_before;
+            report.merge(round);
+            if drained && (pending == 0 || !progressed) {
+                break;
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn ev(x: Vec<f64>, y: f64, seq: u64) -> StreamEvent {
+        StreamEvent { x, y, source_id: 0, seq }
+    }
+
+    #[test]
+    fn bootstrap_partitions_round_robin() {
+        let d = synth::ecg_like(62, 6, 1);
+        let r = ShardRouter::bootstrap(
+            &d.x,
+            &d.y,
+            ServeConfig::default_for(Kernel::poly(2, 1.0), 4),
+        )
+        .unwrap();
+        assert_eq!(r.num_shards(), 4);
+        // 62 = 16 + 16 + 15 + 15
+        let sizes: Vec<usize> = (0..4).map(|i| r.shard(i).n_samples()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 62);
+        assert!(sizes.iter().all(|&s| s == 15 || s == 16), "{sizes:?}");
+        assert_eq!(r.n_samples(), 62);
+    }
+
+    #[test]
+    fn bootstrap_rejects_degenerate_configs() {
+        let d = synth::ecg_like(10, 4, 2);
+        let cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 0);
+        assert!(ShardRouter::bootstrap(&d.x, &d.y, cfg).is_err());
+        let cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 8);
+        assert!(ShardRouter::bootstrap(&d.x, &d.y, cfg).is_err(), "10 rows / 8 shards");
+    }
+
+    #[test]
+    fn round_robin_and_hash_placement() {
+        let d = synth::ecg_like(40, 4, 3);
+        let mut r = ShardRouter::bootstrap(
+            &d.x,
+            &d.y,
+            ServeConfig::default_for(Kernel::poly(2, 1.0), 3),
+        )
+        .unwrap();
+        let e = ev(vec![1.0, 2.0, 3.0, 4.0], 0.5, 0);
+        let s: Vec<usize> = (0..6).map(|_| r.route(&e)).collect();
+        assert_eq!(s, vec![0, 1, 2, 0, 1, 2]);
+        // hash placement is content-sticky
+        r.placement = Placement::Hash;
+        let h1 = r.route(&e);
+        let h2 = r.route(&e);
+        assert_eq!(h1, h2);
+        assert!(h1 < 3);
+    }
+
+    #[test]
+    fn ingest_and_update_round_advance_epochs() {
+        let d = synth::ecg_like(48, 5, 4);
+        let extra = synth::ecg_like(8, 5, 5);
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+        cfg.base.outlier = None;
+        let mut r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+        for i in 0..8 {
+            r.ingest(ev(extra.x.row(i).to_vec(), extra.y[i], i as u64));
+        }
+        let report = r.update_round();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.added(), 8);
+        assert_eq!(r.n_samples(), 56);
+        assert_eq!(r.handle().epochs(), vec![1, 1]);
+        assert_eq!(r.counters.get("routed"), 8);
+    }
+
+    #[test]
+    fn k1_router_is_the_single_engine() {
+        use crate::coordinator::engine::Engine;
+        let d = synth::ecg_like(50, 5, 6);
+        let q = synth::ecg_like(7, 5, 7);
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 1);
+        cfg.base.with_uncertainty = true;
+        let r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+        let single = Engine::fit(
+            &d.x,
+            &d.y,
+            &Kernel::poly(2, 1.0),
+            0.5,
+            r.space(),
+            true,
+        )
+        .unwrap();
+        let h = r.handle();
+        crate::testutil::assert_vec_close(
+            &h.predict(&q.x).unwrap(),
+            &single.predict(&q.x).unwrap(),
+            1e-12,
+        );
+        // precision fan-in is an exact identity at K = 1
+        let (mu, var) = h.predict_with_uncertainty(&q.x).unwrap();
+        let (mu1, var1) = single.predict_with_uncertainty(&q.x).unwrap();
+        crate::testutil::assert_vec_close(&mu, &mu1, 1e-12);
+        crate::testutil::assert_vec_close(&var, &var1, 1e-12);
+    }
+}

@@ -1,0 +1,382 @@
+//! One serving shard: a private writer [`Engine`] plus an epoch-published
+//! read snapshot.
+//!
+//! The shard owns the paper's full per-engine round — outlier nomination on
+//! the current set, ONE fused inc/dec update (eq. 15 / eq. 30), optional
+//! snapshot rollback — over its J/K-sized slice of the stream, and after
+//! every successful round publishes an immutable [`Arc<Engine>`] snapshot
+//! through [`Epoch`]. Readers ([`SnapshotHandle`]) therefore never touch
+//! the writer's state: an in-flight update delays nothing, it only delays
+//! *freshness* by one epoch (see [`super::publish`] for the contrast with
+//! the coordinator's `RwLock` read path).
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::{CoordinatorConfig, RoundOutcome};
+use crate::ensure_shape;
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::metrics::{Counters, LatencyHist, Timer};
+use crate::streaming::outlier::detect_scored;
+use crate::streaming::StreamEvent;
+use std::sync::Arc;
+
+use super::publish::Epoch;
+
+/// A cloneable, lock-free-for-readers handle onto one shard's published
+/// model state.
+#[derive(Clone)]
+pub struct SnapshotHandle {
+    cell: Arc<Epoch<Engine>>,
+}
+
+impl SnapshotHandle {
+    /// The last published engine snapshot (readers compute against this
+    /// without ever contending with the shard's writer).
+    pub fn snapshot(&self) -> Arc<Engine> {
+        self.cell.load()
+    }
+
+    /// Snapshot + its epoch number, read consistently.
+    pub fn snapshot_with_epoch(&self) -> (Arc<Engine>, u64) {
+        self.cell.load_with_epoch()
+    }
+
+    /// Current epoch number (0 = bootstrap state, +1 per published round).
+    pub fn epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    /// Predict through the last published epoch.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        self.cell.load().predict(x)
+    }
+
+    /// Predictive mean + variance through the last published epoch
+    /// (requires the shard's KBR twin).
+    pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.cell.load().predict_with_uncertainty(x)
+    }
+
+    /// Training-set size of the last published epoch.
+    pub fn n_samples(&self) -> usize {
+        self.cell.load().n_samples()
+    }
+}
+
+/// One shard of the serving layer.
+pub struct Shard {
+    id: usize,
+    /// The writer's private engine — never read by serving traffic.
+    engine: Engine,
+    /// Published read snapshots.
+    cell: Arc<Epoch<Engine>>,
+    /// Round policy, inherited from the coordinator config.
+    cfg: CoordinatorConfig,
+    /// Arrivals routed here but not yet folded into an update.
+    pending: Vec<StreamEvent>,
+    /// Reused insertion-block assembly buffers.
+    x_new: Mat,
+    y_new: Vec<f64>,
+    /// rounds / added / removed / rollbacks / epochs.
+    pub counters: Counters,
+    /// Update-latency histogram (the write-path half of the throughput
+    /// headline; the read path never appears here by construction).
+    pub update_latency: LatencyHist,
+}
+
+impl Shard {
+    /// Fit a shard engine on its bootstrap slice and publish epoch 0.
+    pub fn bootstrap(
+        id: usize,
+        x: &Mat,
+        y: &[f64],
+        cfg: &CoordinatorConfig,
+        space: crate::config::Space,
+    ) -> Result<Self> {
+        let engine =
+            Engine::fit(x, y, &cfg.kernel, cfg.ridge, space, cfg.with_uncertainty)?;
+        let cell = Arc::new(Epoch::new(engine.clone()));
+        Ok(Self {
+            id,
+            engine,
+            cell,
+            cfg: cfg.clone(),
+            pending: Vec::new(),
+            x_new: Mat::default(),
+            y_new: Vec::new(),
+            counters: Counters::default(),
+            update_latency: LatencyHist::new(),
+        })
+    }
+
+    /// Shard id (its index in the router).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Writer-side training-set size (the next epoch's size).
+    pub fn n_samples(&self) -> usize {
+        self.engine.n_samples()
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.engine.dim()
+    }
+
+    /// Events routed here but not yet applied.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The shard's per-round batch cap (from the coordinator policy).
+    pub fn max_batch(&self) -> usize {
+        self.cfg.batch.max_batch
+    }
+
+    /// Queue one routed arrival for the next update round.
+    pub fn push(&mut self, ev: StreamEvent) {
+        self.pending.push(ev);
+    }
+
+    /// A read handle onto this shard's published epochs.
+    pub fn handle(&self) -> SnapshotHandle {
+        SnapshotHandle { cell: Arc::clone(&self.cell) }
+    }
+
+    /// Apply ONE fused round over an explicit batch of events: nominate
+    /// outliers on the current set, fold removals and insertions into a
+    /// single multiple inc/dec update (with per-shard snapshot rollback if
+    /// configured), then publish the new epoch.
+    pub fn apply_batch(&mut self, events: &[StreamEvent]) -> Result<RoundOutcome> {
+        let removals: Vec<usize> = match &self.cfg.outlier {
+            Some(ocfg) => {
+                let pred = self.engine.krr().predict_training()?;
+                detect_scored(&pred, self.engine.targets(), ocfg)?
+                    .into_iter()
+                    .map(|v| v.index)
+                    .collect()
+            }
+            None => Vec::new(),
+        };
+        let dim = self.engine.dim();
+        self.x_new.resize_scratch(0, dim);
+        self.y_new.clear();
+        for ev in events {
+            // validate here, where it is still an Err: the engines' feature
+            // maps assert on dimension and must never see a bad row
+            ensure_shape!(
+                ev.x.len() == dim,
+                "Shard::apply_batch",
+                "event (source {}, seq {}) has dim {}, expected {dim}",
+                ev.source_id,
+                ev.seq,
+                ev.x.len()
+            );
+            self.x_new.push_row(&ev.x)?;
+            self.y_new.push(ev.y);
+        }
+        self.update_and_publish(&removals)
+    }
+
+    /// Apply ONE fused round with an explicit insertion block and removal
+    /// set (no outlier detection) — the replay / bench / delegation entry.
+    pub fn apply_update(
+        &mut self,
+        x_new: &Mat,
+        y_new: &[f64],
+        remove_idx: &[usize],
+    ) -> Result<RoundOutcome> {
+        ensure_shape!(
+            x_new.rows() == 0 || x_new.cols() == self.engine.dim(),
+            "Shard::apply_update",
+            "insertion block has {} cols, expected {}",
+            x_new.cols(),
+            self.engine.dim()
+        );
+        if x_new.rows() > 0 {
+            self.x_new.resize_scratch(x_new.rows(), x_new.cols());
+            self.x_new.as_mut_slice().copy_from_slice(x_new.as_slice());
+        } else {
+            self.x_new.resize_scratch(0, self.engine.dim());
+        }
+        self.y_new.clear();
+        self.y_new.extend_from_slice(y_new);
+        self.update_and_publish(remove_idx)
+    }
+
+    /// Drain up to `max_batch` pending events through one fused round.
+    /// `Ok(None)` when nothing is pending (or everything drained was
+    /// malformed).
+    ///
+    /// Failure policy: malformed events (wrong dimension) can never
+    /// succeed, so they are discarded up front (`counters["rejected"]`)
+    /// instead of poisoning the queue. If the engine update itself fails,
+    /// the batch is requeued only when `snapshot_rollback` restored the
+    /// pre-round state — without a snapshot the engine may have partially
+    /// absorbed the batch (KRR updates before KBR inside
+    /// [`Engine::inc_dec`]), and retrying would double-apply it, so the
+    /// batch is dropped (`counters["dropped"]`) and the error surfaced.
+    pub fn flush(&mut self) -> Result<Option<RoundOutcome>> {
+        if self.pending.is_empty() {
+            return Ok(None);
+        }
+        let take = self.pending.len().min(self.cfg.batch.max_batch);
+        // drain the OLDEST events first (arrival order)
+        let mut batch: Vec<StreamEvent> = self.pending.drain(..take).collect();
+        let dim = self.engine.dim();
+        let before = batch.len();
+        batch.retain(|ev| ev.x.len() == dim);
+        if batch.len() < before {
+            self.counters.add("rejected", (before - batch.len()) as u64);
+        }
+        if batch.is_empty() {
+            return Ok(None);
+        }
+        match self.apply_batch(&batch) {
+            Ok(out) => Ok(Some(out)),
+            Err(e) => {
+                if self.cfg.snapshot_rollback {
+                    self.pending.splice(0..0, batch);
+                } else {
+                    self.counters.add("dropped", batch.len() as u64);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// An insertion-free round: outlier nomination + decremental update
+    /// only (the explicit eviction entry).
+    pub fn evict_outliers(&mut self) -> Result<RoundOutcome> {
+        self.apply_batch(&[])
+    }
+
+    /// The fused update on the writer engine + epoch publish. The insertion
+    /// block is whatever `x_new`/`y_new` currently hold.
+    fn update_and_publish(&mut self, removals: &[usize]) -> Result<RoundOutcome> {
+        let t = Timer::start();
+        let snapshot = self.cfg.snapshot_rollback.then(|| self.engine.snapshot());
+        match self.engine.inc_dec(&self.x_new, &self.y_new, removals) {
+            Ok(()) => {}
+            Err(e) => {
+                if let Some(snap) = snapshot {
+                    self.engine.restore(snap);
+                    self.counters.inc("rollbacks");
+                }
+                return Err(e);
+            }
+        }
+        // publish: the O(state) clone is the epoch snapshot itself; readers
+        // switch to it atomically and the writer keeps its private copy
+        let epoch = self.cell.publish(self.engine.clone());
+        let dt = t.elapsed();
+        let outcome = RoundOutcome {
+            added: self.y_new.len(),
+            removed: removals.len(),
+            update_secs: dt,
+            n_after: self.engine.n_samples(),
+        };
+        debug_assert!(epoch > 0);
+        self.counters.inc("rounds");
+        self.counters.add("added", outcome.added as u64);
+        self.counters.add("removed", outcome.removed as u64);
+        self.update_latency.record(dt);
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Space;
+    use crate::data::synth;
+    use crate::kernels::Kernel;
+    use crate::streaming::batcher::BatchPolicy;
+    use std::time::Duration;
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            kernel: Kernel::poly(2, 1.0),
+            ridge: 0.5,
+            space: None,
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(10) },
+            outlier: None,
+            with_uncertainty: false,
+            snapshot_rollback: false,
+        }
+    }
+
+    fn events(n: usize, dim: usize, seed: u64) -> Vec<StreamEvent> {
+        let d = synth::ecg_like(n, dim, seed);
+        (0..n)
+            .map(|i| StreamEvent {
+                x: d.x.row(i).to_vec(),
+                y: d.y[i],
+                source_id: 0,
+                seq: i as u64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rounds_publish_monotonic_epochs() {
+        let d = synth::ecg_like(40, 6, 1);
+        let mut s = Shard::bootstrap(0, &d.x, &d.y, &cfg(), Space::Intrinsic).unwrap();
+        let h = s.handle();
+        assert_eq!(h.epoch(), 0);
+        assert_eq!(h.n_samples(), 40);
+        for (round, ev) in events(8, 6, 2).chunks(4).enumerate() {
+            let out = s.apply_batch(ev).unwrap();
+            assert_eq!(out.added, 4);
+            assert_eq!(h.epoch(), round as u64 + 1);
+            assert_eq!(h.n_samples(), out.n_after);
+        }
+        assert_eq!(s.n_samples(), 48);
+    }
+
+    #[test]
+    fn flush_respects_batch_policy() {
+        let d = synth::ecg_like(30, 5, 3);
+        let mut s = Shard::bootstrap(0, &d.x, &d.y, &cfg(), Space::Intrinsic).unwrap();
+        for ev in events(6, 5, 4) {
+            s.push(ev);
+        }
+        let out = s.flush().unwrap().unwrap();
+        assert_eq!(out.added, 4, "max_batch caps one flush");
+        assert_eq!(s.pending(), 2);
+        let out = s.flush().unwrap().unwrap();
+        assert_eq!(out.added, 2);
+        assert!(s.flush().unwrap().is_none());
+    }
+
+    #[test]
+    fn failed_round_keeps_published_epoch_intact() {
+        let d = synth::ecg_like(30, 5, 5);
+        let mut s = Shard::bootstrap(0, &d.x, &d.y, &cfg(), Space::Intrinsic).unwrap();
+        let h = s.handle();
+        let p0 = h.predict(&d.x.block(0, 3, 0, 5)).unwrap();
+        // wrong-dimension event: the round errors before any engine edit
+        let bad = StreamEvent { x: vec![1.0; 3], y: 0.0, source_id: 0, seq: 0 };
+        assert!(s.apply_batch(std::slice::from_ref(&bad)).is_err());
+        assert_eq!(h.epoch(), 0, "failed round must not publish");
+        let p1 = h.predict(&d.x.block(0, 3, 0, 5)).unwrap();
+        crate::testutil::assert_vec_close(&p1, &p0, 1e-15);
+    }
+
+    #[test]
+    fn explicit_update_matches_engine_round() {
+        let d = synth::ecg_like(36, 5, 6);
+        let extra = synth::ecg_like(4, 5, 7);
+        let mut s = Shard::bootstrap(0, &d.x, &d.y, &cfg(), Space::Intrinsic).unwrap();
+        let mut reference =
+            Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false)
+                .unwrap();
+        s.apply_update(&extra.x, &extra.y, &[1, 3]).unwrap();
+        reference.inc_dec(&extra.x, &extra.y, &[1, 3]).unwrap();
+        let q = synth::ecg_like(5, 5, 8);
+        let ps = s.handle().predict(&q.x).unwrap();
+        let pr = reference.predict(&q.x).unwrap();
+        crate::testutil::assert_vec_close(&ps, &pr, 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! Fan-out: one pooled stream feeding per-shard sinks.
+//!
+//! The fusion-center [`SinkNode`] pools every sensor into one stream; the
+//! sharded serving layer wants K independent per-shard streams so each
+//! shard batches its own slice. [`spawn_fanout`] bridges the two: a
+//! forwarding thread drains the pooled sink and pushes each event down the
+//! shard channel the routing closure picks. Backpressure composes: a slow
+//! shard fills its bounded channel, the forwarder blocks, the pooled sink
+//! fills, and the sensors block — the same discipline as the rest of the
+//! pipeline.
+//!
+//! Seal the upstream sink (see [`SinkNode::seal`]) before spawning the
+//! forwarder if the stream is finite: the forwarder exits when the pooled
+//! stream disconnects (or when every shard receiver hangs up).
+
+use super::sink::SinkNode;
+use super::StreamEvent;
+use std::sync::mpsc::SyncSender;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Spawn a forwarding thread that routes every pooled event onto one of
+/// the shard channels. `route` returns a shard index (reduced modulo the
+/// channel count). A shard whose receiver hangs up is marked dead and its
+/// events are dropped from then on — the healthy shards keep receiving.
+/// Returns the forwarder handle; joining it yields the number of events
+/// forwarded (dead-shard drops excluded).
+pub fn spawn_fanout(
+    mut sink: SinkNode,
+    txs: Vec<SyncSender<StreamEvent>>,
+    mut route: impl FnMut(&StreamEvent) -> usize + Send + 'static,
+) -> JoinHandle<usize> {
+    assert!(!txs.is_empty(), "fanout needs at least one shard channel");
+    std::thread::spawn(move || {
+        let mut txs: Vec<Option<SyncSender<StreamEvent>>> =
+            txs.into_iter().map(Some).collect();
+        let mut alive = txs.len();
+        let mut forwarded = 0usize;
+        loop {
+            match sink.recv_timeout(Duration::from_millis(50)) {
+                Some(ev) => {
+                    let s = route(&ev) % txs.len();
+                    // a dead shard's events are dropped
+                    if let Some(tx) = &txs[s] {
+                        if tx.send(ev).is_ok() {
+                            forwarded += 1;
+                        } else {
+                            // receiver hung up: retire this shard only
+                            txs[s] = None;
+                            alive -= 1;
+                            if alive == 0 {
+                                break;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    if sink.is_disconnected() {
+                        break; // sealed upstream fully drained
+                    }
+                }
+            }
+        }
+        forwarded
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::streaming::source::{SensorNode, SourceConfig};
+
+    #[test]
+    fn splits_one_stream_across_shard_sinks() {
+        let mut pooled = SinkNode::new(16);
+        let mut handles = Vec::new();
+        for sid in 0..2 {
+            let shard = synth::ecg_like(20, 4, 10 + sid as u64);
+            let cfg = SourceConfig { source_id: sid, ..Default::default() };
+            handles.push(SensorNode::new(shard, cfg).spawn(pooled.sender()));
+        }
+        pooled.seal();
+        let mut shard_sinks: Vec<SinkNode> = (0..3).map(|_| SinkNode::new(16)).collect();
+        let txs: Vec<_> = shard_sinks.iter().map(|s| s.sender()).collect();
+        for s in &mut shard_sinks {
+            s.seal();
+        }
+        // round-robin routing via a stateful closure
+        let mut next = 0usize;
+        let fwd = spawn_fanout(pooled, txs, move |_| {
+            let s = next;
+            next += 1;
+            s
+        });
+        let mut got = vec![0usize; 3];
+        for (i, s) in shard_sinks.iter_mut().enumerate() {
+            loop {
+                let evs = s.drain(32, Duration::from_millis(500));
+                if evs.is_empty() && s.is_disconnected() {
+                    break;
+                }
+                got[i] += evs.len();
+            }
+        }
+        assert_eq!(fwd.join().unwrap(), 40);
+        assert_eq!(got.iter().sum::<usize>(), 40);
+        // round robin keeps the split balanced
+        assert!(got.iter().all(|&g| (13..=14).contains(&g)), "{got:?}");
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_shard_does_not_starve_healthy_shards() {
+        let mut pooled = SinkNode::new(16);
+        let d = synth::ecg_like(40, 3, 13);
+        let h = SensorNode::new(d, SourceConfig::default()).spawn(pooled.sender());
+        pooled.seal();
+        let mut healthy = SinkNode::new(64);
+        let dead = SinkNode::new(1);
+        let txs = vec![dead.sender(), healthy.sender()];
+        healthy.seal();
+        drop(dead); // shard 0's receiver is gone before anything flows
+        let mut next = 0usize;
+        let fwd = spawn_fanout(pooled, txs, move |_| {
+            let s = next;
+            next += 1;
+            s
+        });
+        let mut got = 0usize;
+        loop {
+            let evs = healthy.drain(32, Duration::from_millis(500));
+            if evs.is_empty() && healthy.is_disconnected() {
+                break;
+            }
+            got += evs.len();
+        }
+        assert_eq!(fwd.join().unwrap(), 20, "healthy shard's share forwarded");
+        assert_eq!(got, 20, "shard 1 must keep receiving after shard 0 dies");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn forwarder_stops_when_shard_receiver_hangs_up() {
+        let mut pooled = SinkNode::new(4);
+        let shard = synth::ecg_like(1000, 3, 12);
+        let h = SensorNode::new(shard, SourceConfig::default()).spawn(pooled.sender());
+        pooled.seal();
+        let shard_sink = SinkNode::new(1);
+        let tx = shard_sink.sender();
+        let fwd = spawn_fanout(pooled, vec![tx], |_| 0);
+        drop(shard_sink); // receiver gone: forwarder must exit promptly
+        let forwarded = fwd.join().unwrap();
+        assert!(forwarded < 1000);
+        h.join().unwrap();
+    }
+}

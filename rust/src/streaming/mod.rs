@@ -6,9 +6,12 @@
 //! pushes into a bounded channel (backpressure = blocking send); the
 //! [`sink::SinkNode`] fans the channels into one pooled stream; the
 //! [`batcher::Batcher`] groups pooled events into multiple-update batches
-//! by size/time policy.  All of it is std-only (`mpsc` + threads).
+//! by size/time policy; [`fanout::spawn_fanout`] re-splits the pooled
+//! stream into per-shard sinks for the [`crate::serve`] layer.  All of it
+//! is std-only (`mpsc` + threads).
 
 pub mod batcher;
+pub mod fanout;
 pub mod outlier;
 pub mod sink;
 pub mod source;

@@ -8,10 +8,10 @@
 //! so no sibling test thread allocates concurrently during the measured
 //! sections.
 
-use mikrr::kbr::{KbrHyper, KbrModel};
+use mikrr::kbr::{KbrHyper, KbrModel, KbrPredictWork};
 use mikrr::kernels::Kernel;
-use mikrr::krr::empirical::EmpiricalKrr;
-use mikrr::krr::intrinsic::IntrinsicKrr;
+use mikrr::krr::empirical::{EmpiricalKrr, EmpiricalPredictWork};
+use mikrr::krr::intrinsic::{IntrinsicKrr, IntrinsicPredictWork};
 use mikrr::krr::KrrModel;
 use mikrr::linalg::matrix::dot;
 use mikrr::linalg::Mat;
@@ -143,6 +143,79 @@ fn steady_state_inc_dec_is_allocation_free() {
             "KbrModel steady-state inc_dec allocated {allocs} times"
         );
         assert_eq!(model.n_samples(), 30);
+    }
+
+    // --- warm serving: the predict_into workspace paths that the serve
+    // layer's micro-batch loop runs on must not touch the heap either
+    // (1-thread path; batched B=16 reads against every engine kind) ---
+    {
+        let (x, y) = data(40, 4, 5);
+        let (xq, _) = data(16, 4, 6);
+
+        let intr = IntrinsicKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+        let mut w = IntrinsicPredictWork::default();
+        let mut out = Vec::new();
+        intr.predict_into(&xq, &mut out, &mut w).unwrap(); // warm
+        let allocs =
+            steady_state_allocs(|| intr.predict_into(&xq, &mut out, &mut w).unwrap(), 1, 4);
+        assert_eq!(allocs, 0, "warm IntrinsicKrr::predict_into allocated {allocs} times");
+
+        // RBF empirical path exercises the Gram norm scratch too
+        let emp = EmpiricalKrr::fit(&x, &y, &Kernel::rbf_radius(2.0), 0.5).unwrap();
+        let mut we = EmpiricalPredictWork::default();
+        emp.predict_into(&xq, &mut out, &mut we).unwrap(); // warm
+        let allocs =
+            steady_state_allocs(|| emp.predict_into(&xq, &mut out, &mut we).unwrap(), 1, 4);
+        assert_eq!(allocs, 0, "warm EmpiricalKrr::predict_into allocated {allocs} times");
+
+        let kbr = KbrModel::fit(&x, &y, &Kernel::poly(2, 1.0), KbrHyper::default()).unwrap();
+        let mut wk = KbrPredictWork::default();
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        kbr.predict_into(&xq, &mut mean, &mut var, &mut wk).unwrap(); // warm
+        let allocs = steady_state_allocs(
+            || kbr.predict_into(&xq, &mut mean, &mut var, &mut wk).unwrap(),
+            1,
+            4,
+        );
+        assert_eq!(allocs, 0, "warm KbrModel::predict_into allocated {allocs} times");
+        assert!(var.iter().all(|&v| v > 0.0));
+    }
+
+    // --- warm sharded serving: the router fan-in (snapshot load + K
+    // batched shard reads + averaging / precision weighting) through a
+    // warm RouterPredictWork is allocation-free end to end ---
+    {
+        use mikrr::coordinator::CoordinatorConfig;
+        use mikrr::serve::{RouterPredictWork, ServeConfig, ShardRouter};
+
+        let (x, y) = data(48, 4, 7);
+        let (xq, _) = data(16, 4, 8);
+        let mut base = CoordinatorConfig::default_for(Kernel::poly(2, 1.0));
+        base.outlier = None;
+        base.with_uncertainty = true;
+        let router = ShardRouter::bootstrap(
+            &x,
+            &y,
+            ServeConfig { shards: 2, placement: mikrr::serve::Placement::RoundRobin, base },
+        )
+        .unwrap();
+        let h = router.handle();
+        let mut w = RouterPredictWork::default();
+        let mut out = Vec::new();
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        h.predict_into(&xq, &mut out, &mut w).unwrap(); // warm
+        h.predict_with_uncertainty_into(&xq, &mut mean, &mut var, &mut w)
+            .unwrap(); // warm
+        let allocs = steady_state_allocs(
+            || {
+                h.predict_into(&xq, &mut out, &mut w).unwrap();
+                h.predict_with_uncertainty_into(&xq, &mut mean, &mut var, &mut w)
+                    .unwrap();
+            },
+            1,
+            4,
+        );
+        assert_eq!(allocs, 0, "warm RouterHandle serving path allocated {allocs} times");
     }
 
     // --- packed BLAS-3 + blocked TRSM, 1-thread path: once the output
