@@ -42,6 +42,7 @@ fn main() -> Result<(), mikrr::error::Error> {
             outlier: Some(OutlierConfig { z_threshold: 5.0, max_removals: 2 }),
             with_uncertainty: true,
             snapshot_rollback: false,
+            fold_eps: None,
         },
     };
     let t = Timer::start();

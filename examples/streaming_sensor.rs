@@ -31,6 +31,7 @@ fn main() -> Result<(), mikrr::error::Error> {
         outlier: Some(OutlierConfig { z_threshold: 5.0, max_removals: 2 }),
         with_uncertainty: false,
         snapshot_rollback: false,
+        fold_eps: None,
     };
     let t = Timer::start();
     let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, cfg)?;

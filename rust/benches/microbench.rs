@@ -31,6 +31,14 @@
 //!   perf-gated in CI), and the K=1 vs K=4 empirical-space shard update
 //!   round (`serve/shard_round`, `speedup_serve_shard_k4`: the same
 //!   logical +4/−4 round on one N=512 inverse vs four (N/4)² shards).
+//! * `multi/*`             — multi-output targets + duplicate folding
+//!   (ISSUE 6): one engine with a (J, 8) coefficient block answering a
+//!   256-row query as one packed GEMM vs 8 sequential D=1 GEMV engines
+//!   (`multi/predict_d8`, headline `speedup_multi_output_predict` —
+//!   perf-gated in CI), and the 50%-repeat hot-sensor stream where folded
+//!   rounds replace duplicate inserts with rank-1 multiplicity bumps
+//!   (`multi/fold_hot_sensors`, tracked `speedup_fold_hot_sensors`). The
+//!   run's target dim D and fold ratio are recorded in the env block.
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
@@ -508,6 +516,95 @@ fn main() {
         });
     }
 
+    // ---- multi/*: multi-output targets + duplicate folding (ISSUE 6) ----
+    // (a) D=8 packed predict: one engine with a (J, 8) coefficient block
+    // answering a 256-row query as ONE (256, J)·(J, 8) GEMM, vs 8
+    // independent D=1 engines each running a (256, J)·(J, 1) GEMV pass
+    let d_out = 8usize;
+    b.set_target_dim(d_out);
+    b.set_fold_ratio(0.5);
+    if b.enabled("multi/predict_d8") {
+        use mikrr::krr::intrinsic::IntrinsicPredictWork;
+        let d = mikrr::data::synth::ecg_like(600, 21, 21);
+        let ym = Mat::from_fn(600, d_out, |i, c| d.y[i] * (1.0 + 0.25 * c as f64));
+        let poly2 = Kernel::poly(2, 1.0);
+        let packed = IntrinsicKrr::fit_multi(&d.x, &ym, &poly2, 0.5).unwrap();
+        let singles: Vec<IntrinsicKrr> = (0..d_out)
+            .map(|c| IntrinsicKrr::fit(&d.x, &ym.col(c), &poly2, 0.5).unwrap())
+            .collect();
+        let q = mikrr::data::synth::ecg_like(256, 21, 22);
+        let mut work = IntrinsicPredictWork::default();
+        let mut out_vec = Vec::new();
+        b.bench("multi/predict_d8/sequential_gemv_x8", || {
+            for s in &singles {
+                s.predict_into(&q.x, &mut out_vec, &mut work).unwrap();
+                black_box(&out_vec);
+            }
+        });
+        let mut out_mat = Mat::default();
+        b.bench("multi/predict_d8/packed_gemm", || {
+            packed.predict_multi_into(&q.x, &mut out_mat, &mut work).unwrap();
+            black_box(&out_mat);
+        });
+    }
+    // (b) hot-sensor folding: rounds of 4 arrivals where rows 1/3 repeat a
+    // stored input. The folded engine turns the two repeats into rank-1
+    // multiplicity bumps and only inserts/evicts 2 rows per round; the
+    // unfolded engine pays the full rank-8 Woodbury (+4/−4). Each engine
+    // evicts exactly what it inserts, so both stores hold steady near
+    // N=600 over any number of bench iterations (a re-inserted repeat
+    // whose stored copy aged out simply folds again on the next cycle).
+    if b.enabled("multi/fold_hot_sensors") {
+        use mikrr::config::Space;
+        use mikrr::coordinator::engine::Engine;
+        let d = mikrr::data::synth::ecg_like(600, 21, 23);
+        let ym = Mat::from_vec(600, 1, d.y.clone()).unwrap();
+        let poly2 = Kernel::poly(2, 1.0);
+        let mk = |fold: bool| {
+            let mut e =
+                Engine::fit_multi(&d.x, &ym, &poly2, 0.5, Space::Intrinsic, false).unwrap();
+            e.set_fold_eps(if fold { Some(1e-12) } else { None });
+            e
+        };
+        // pre-built batches: rows 0/2 fresh, rows 1/3 exact repeats of
+        // stored rows 100.. (away from the head evictions)
+        let fresh = mikrr::data::synth::ecg_like(256, 21, 24);
+        let batches: Vec<(Mat, Mat)> = (0..64)
+            .map(|r| {
+                let mut xb = Mat::default();
+                let mut yb = Mat::default();
+                for k in 0..4 {
+                    if k % 2 == 0 {
+                        let i = (r * 2 + k / 2) % 256;
+                        xb.push_row(fresh.x.row(i)).unwrap();
+                        yb.push_row(&[fresh.y[i]]).unwrap();
+                    } else {
+                        let i = 100 + (r * 13 + k) % 400;
+                        xb.push_row(d.x.row(i)).unwrap();
+                        yb.push_row(&[d.y[i]]).unwrap();
+                    }
+                }
+                (xb, yb)
+            })
+            .collect();
+        let mut folded = mk(true);
+        let mut itf = 0usize;
+        let rem2 = [0usize, 1];
+        b.bench("multi/fold_hot_sensors/folded", || {
+            let (xb, yb) = &batches[itf % batches.len()];
+            folded.inc_dec_multi(xb, yb, &rem2).unwrap();
+            itf += 1;
+        });
+        let mut plain = mk(false);
+        let mut itp = 0usize;
+        let rem = [0usize, 1, 2, 3];
+        b.bench("multi/fold_hot_sensors/unfolded", || {
+            let (xb, yb) = &batches[itp % batches.len()];
+            plain.inc_dec_multi(xb, yb, &rem).unwrap();
+            itp += 1;
+        });
+    }
+
     // ---- machine-readable reports ----
     let mut extras: Vec<(&str, f64)> =
         vec![("threads", mikrr::par::num_threads() as f64)];
@@ -573,6 +670,16 @@ fn main() {
             "speedup_serve_shard_k4",
             "serve/shard_round/k1_n512_plus4_minus4",
             "serve/shard_round/k4_n128_plus1_minus1",
+        ),
+        (
+            "speedup_multi_output_predict",
+            "multi/predict_d8/sequential_gemv_x8",
+            "multi/predict_d8/packed_gemm",
+        ),
+        (
+            "speedup_fold_hot_sensors",
+            "multi/fold_hot_sensors/unfolded",
+            "multi/fold_hot_sensors/folded",
         ),
     ] {
         if let (Some(s), Some(f)) = (b.summary(slow), b.summary(fast)) {

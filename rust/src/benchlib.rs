@@ -104,6 +104,12 @@ pub struct Bencher {
     /// All summaries collected so far.
     pub results: Vec<Summary>,
     quiet: bool,
+    /// Target dimension D of the multi-output workloads in this run
+    /// (1 = scalar targets), recorded in the report's `env` block.
+    target_dim: usize,
+    /// Fraction of streamed rows that repeat a stored input (the
+    /// duplicate-folding workload knob), recorded in the `env` block.
+    fold_ratio: f64,
 }
 
 impl Bencher {
@@ -131,18 +137,30 @@ impl Bencher {
             }
             i += 1;
         }
-        Self { cfg, filter, results: Vec::new(), quiet: false }
+        Self { cfg, filter, results: Vec::new(), quiet: false, target_dim: 1, fold_ratio: 0.0 }
     }
 
     /// New with explicit config.
     pub fn new(cfg: BenchConfig) -> Self {
-        Self { cfg, filter: None, results: Vec::new(), quiet: false }
+        Self { cfg, filter: None, results: Vec::new(), quiet: false, target_dim: 1, fold_ratio: 0.0 }
     }
 
     /// Suppress per-bench output.
     pub fn quiet(mut self) -> Self {
         self.quiet = true;
         self
+    }
+
+    /// Record the target dimension D of this run's multi-output workloads
+    /// (written to the report's `env` block).
+    pub fn set_target_dim(&mut self, d: usize) {
+        self.target_dim = d;
+    }
+
+    /// Record the duplicate-input fold ratio of this run's streaming
+    /// workloads (written to the report's `env` block).
+    pub fn set_fold_ratio(&mut self, r: f64) {
+        self.fold_ratio = r;
     }
 
     /// Should this benchmark run under the current filter?
@@ -213,8 +231,10 @@ impl Bencher {
     ///
     /// Every report carries an `env` block (worker-pool lane count, the raw
     /// `MIKRR_THREADS` override if any, the number of pinned worker lanes,
-    /// the dispatch-tuning source, and the build profile) so entries from
-    /// different runs are comparable across the perf trajectory.
+    /// the dispatch-tuning source, the multi-output target dimension D and
+    /// the duplicate-input fold ratio of the run's workloads, and the build
+    /// profile) so entries from different runs are comparable across the
+    /// perf trajectory.
     pub fn write_json(&self, path: &str, extra: &[(&str, f64)]) -> std::io::Result<()> {
         let mut out = String::from("{\n  \"benchmarks\": [");
         for (i, s) in self.results.iter().enumerate() {
@@ -253,6 +273,11 @@ impl Bencher {
         out.push_str(&format!(
             "\n    \"tuning\": \"{}\",",
             json_escape(crate::linalg::gemm::dispatch::tune::source())
+        ));
+        out.push_str(&format!("\n    \"target_dim\": {},", self.target_dim));
+        out.push_str(&format!(
+            "\n    \"fold_ratio\": {},",
+            json_f64(self.fold_ratio)
         ));
         out.push_str(&format!(
             "\n    \"profile\": \"{}\"",
@@ -414,6 +439,8 @@ mod tests {
     #[test]
     fn write_json_emits_machine_readable_report() {
         let mut b = Bencher::new(BenchConfig::default()).quiet();
+        b.set_target_dim(8);
+        b.set_fold_ratio(0.5);
         b.results.push(Summary {
             name: "alpha/one \"quoted\"".into(),
             samples: vec![0.001, 0.002, 0.003],
@@ -437,6 +464,8 @@ mod tests {
         assert!(text.contains("\"max_threads_cap\""));
         assert!(text.contains("\"pinned_lanes\": "));
         assert!(text.contains("\"tuning\": \""));
+        assert!(text.contains("\"target_dim\": 8"));
+        assert!(text.contains("\"fold_ratio\": 5e-1"));
         let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
         assert!(text.contains(&format!("\"profile\": \"{profile}\"")));
         std::fs::remove_file(path).ok();

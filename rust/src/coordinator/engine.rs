@@ -4,12 +4,20 @@
 //! Snapshots are cheap-ish full copies of the maintained state (the state
 //! IS the model — S^-1/Q^-1 plus stores); the coordinator takes one before
 //! each numerically risky batched update and restores on failure.
+//!
+//! The engine carries `D = n_outputs()` target columns end-to-end behind
+//! ONE maintained inverse per space, and optionally folds (ε-near)
+//! duplicate incoming rows into multiplicity-weighted existing rows
+//! instead of growing the store ([`Engine::set_fold_eps`]): the fold plan
+//! is computed ONCE per round here, so the KRR engine, the KBR twin, and
+//! the raw mirrors all apply the *same* fold decision.
 
 use crate::config::Space;
 use crate::error::{Error, Result};
 use crate::kbr::{KbrHyper, KbrModel, KbrPredictWork};
 use crate::kernels::Kernel;
 use crate::krr::empirical::{EmpiricalKrr, EmpiricalPredictWork};
+use crate::krr::fold::{plan_folds_into, FoldPlan};
 use crate::krr::intrinsic::{IntrinsicKrr, IntrinsicPredictWork};
 use crate::krr::KrrModel;
 use crate::linalg::Mat;
@@ -41,11 +49,24 @@ pub struct Engine {
     /// Raw training features, kept in engine order (for outlier scoring
     /// and the empirical cross-kernels).
     x: Mat,
-    y: Vec<f64>,
+    /// Training targets, (N, D), multiplicity-averaged in engine order.
+    y: Mat,
+    /// Mirror of the engines' per-row duplicate multiplicities.
+    mult: Vec<f64>,
     kernel: Kernel,
     ridge: f64,
+    /// Duplicate-fold radius: `Some(eps)` folds incoming rows within
+    /// `eps` (Euclidean) of a stored row; `None` disables folding.
+    fold_eps: Option<f64>,
     /// Reused sorted-removal scratch for the mirror-store edits.
     rem_scratch: Vec<usize>,
+    /// Reused fold-plan scratch.
+    fold_plan: FoldPlan,
+    /// Fresh-row gather scratch for folded rounds.
+    x_fresh: Mat,
+    y_fresh: Mat,
+    /// D=1 shim scratch: `y_new` as a (B, 1) column.
+    y_shim: Mat,
 }
 
 /// Opaque snapshot for rollback.
@@ -54,7 +75,7 @@ pub struct Snapshot {
 }
 
 impl Engine {
-    /// Fit in the given space.
+    /// Fit in the given space (`D = 1`).
     pub fn fit(
         x: &Mat,
         y: &[f64],
@@ -63,12 +84,30 @@ impl Engine {
         space: Space,
         with_uncertainty: bool,
     ) -> Result<Self> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::fit_multi(x, &ym, kernel, ridge, space, with_uncertainty)
+    }
+
+    /// Fit in the given space with a `(N, D)` target matrix: one
+    /// factorization per maintained inverse, `D` coefficient columns.
+    pub fn fit_multi(
+        x: &Mat,
+        y: &Mat,
+        kernel: &Kernel,
+        ridge: f64,
+        space: Space,
+        with_uncertainty: bool,
+    ) -> Result<Self> {
         let krr = match space {
-            Space::Intrinsic => KrrEngine::Intrinsic(IntrinsicKrr::fit(x, y, kernel, ridge)?),
-            Space::Empirical => KrrEngine::Empirical(EmpiricalKrr::fit(x, y, kernel, ridge)?),
+            Space::Intrinsic => {
+                KrrEngine::Intrinsic(IntrinsicKrr::fit_multi(x, y, kernel, ridge)?)
+            }
+            Space::Empirical => {
+                KrrEngine::Empirical(EmpiricalKrr::fit_multi(x, y, kernel, ridge)?)
+            }
         };
         let kbr = if with_uncertainty {
-            Some(KbrModel::fit(x, y, kernel, KbrHyper::default())?)
+            Some(KbrModel::fit_multi(x, y, kernel, KbrHyper::default())?)
         } else {
             None
         };
@@ -77,10 +116,16 @@ impl Engine {
             kbr,
             space,
             x: x.clone(),
-            y: y.to_vec(),
+            y: y.clone(),
+            mult: vec![1.0; y.rows()],
             kernel: kernel.clone(),
             ridge,
+            fold_eps: None,
             rem_scratch: Vec::new(),
+            fold_plan: FoldPlan::default(),
+            x_fresh: Mat::default(),
+            y_fresh: Mat::default(),
+            y_shim: Mat::default(),
         })
     }
 
@@ -96,7 +141,12 @@ impl Engine {
 
     /// Training-set size.
     pub fn n_samples(&self) -> usize {
-        self.y.len()
+        self.y.rows()
+    }
+
+    /// Number of target columns D.
+    pub fn n_outputs(&self) -> usize {
+        self.y.cols()
     }
 
     /// Kernel.
@@ -109,6 +159,24 @@ impl Engine {
         self.ridge
     }
 
+    /// Enable (`Some(eps)`) or disable (`None`) duplicate-input folding
+    /// for subsequent [`Engine::inc_dec`] rounds. `eps = 0.0` folds exact
+    /// repeats only.
+    pub fn set_fold_eps(&mut self, eps: Option<f64>) {
+        self.fold_eps = eps;
+    }
+
+    /// The configured fold radius, if folding is enabled.
+    pub fn fold_eps(&self) -> Option<f64> {
+        self.fold_eps
+    }
+
+    /// Per-row duplicate multiplicities, engine order (all 1.0 unless
+    /// folding is enabled and duplicates arrived).
+    pub fn multiplicities(&self) -> &[f64] {
+        &self.mult
+    }
+
     /// Borrow the KRR model for read-side operations (outlier scoring).
     pub fn krr(&self) -> &dyn KrrModel {
         match &self.krr {
@@ -117,24 +185,34 @@ impl Engine {
         }
     }
 
-    /// Borrow the current training set (engine order). Borrowed, not
-    /// cloned: the outlier-scoring hot path reads it every round, and an
-    /// owned copy was an O(N M) allocation per call.
-    pub fn training_view(&self) -> (&Mat, &[f64]) {
+    /// Borrow the current training set (engine order): features and the
+    /// `(N, D)` target matrix. Borrowed, not cloned: the outlier-scoring
+    /// hot path reads it every round, and an owned copy was an O(N M)
+    /// allocation per call. This is THE accessor pair for the training
+    /// stores; the slice-only [`Engine::targets`] is a deprecated `D = 1`
+    /// shim over the same view.
+    pub fn training_view(&self) -> (&Mat, &Mat) {
         (&self.x, &self.y)
     }
 
-    /// Borrow the training targets (engine order).
+    /// Borrow the training targets (engine order), `D = 1` only.
+    #[deprecated(note = "use training_view(); this is the slice-only D=1 shim")]
     pub fn targets(&self) -> &[f64] {
-        &self.y
+        debug_assert_eq!(self.y.cols(), 1, "targets() is the D=1 view");
+        self.y.as_slice()
     }
 
-    /// Predict point estimates.
+    /// Predict point estimates (`D = 1`).
     pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
         self.krr().predict(x)
     }
 
-    /// Predict mean + variance (requires the KBR twin).
+    /// Predict all D output columns: `(B, D)` out.
+    pub fn predict_multi(&self, x: &Mat) -> Result<Mat> {
+        self.krr().predict_multi(x)
+    }
+
+    /// Predict mean + variance (requires the KBR twin, `D = 1`).
     pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
         let kbr = self.kbr.as_ref().ok_or_else(|| {
             Error::Config("uncertainty serving requires with_uncertainty=true".into())
@@ -143,8 +221,23 @@ impl Engine {
         Ok((p.mean, p.var))
     }
 
+    /// Multi-output mean + shared per-query variance (requires the KBR
+    /// twin).
+    pub fn predict_with_uncertainty_multi(&self, x: &Mat) -> Result<(Mat, Vec<f64>)> {
+        let mut mean = Mat::default();
+        let mut var = Vec::new();
+        self.predict_with_uncertainty_multi_into(
+            x,
+            &mut mean,
+            &mut var,
+            &mut EnginePredictWork::default(),
+        )?;
+        Ok((mean, var))
+    }
+
     /// [`Engine::predict`] written into a caller-provided buffer through a
-    /// warm workspace — the serving layer's allocation-free read path.
+    /// warm workspace — the serving layer's allocation-free read path
+    /// (`D = 1`).
     pub fn predict_into(
         &self,
         x: &Mat,
@@ -157,8 +250,22 @@ impl Engine {
         }
     }
 
+    /// Multi-output [`Engine::predict_into`]: ONE packed `(B, D)` GEMM
+    /// through the warm workspace. Allocation-free once warm.
+    pub fn predict_multi_into(
+        &self,
+        x: &Mat,
+        out: &mut Mat,
+        work: &mut EnginePredictWork,
+    ) -> Result<()> {
+        match &self.krr {
+            KrrEngine::Intrinsic(m) => m.predict_multi_into(x, out, &mut work.intr),
+            KrrEngine::Empirical(m) => m.predict_multi_into(x, out, &mut work.emp),
+        }
+    }
+
     /// [`Engine::predict_with_uncertainty`] written into caller-provided
-    /// buffers through a warm workspace (requires the KBR twin).
+    /// buffers through a warm workspace (requires the KBR twin, `D = 1`).
     pub fn predict_with_uncertainty_into(
         &self,
         x: &Mat,
@@ -172,30 +279,145 @@ impl Engine {
         kbr.predict_into(x, mean, var, &mut work.kbr)
     }
 
+    /// Multi-output [`Engine::predict_with_uncertainty_into`]: `(B, D)`
+    /// means, ONE shared variance per query row.
+    pub fn predict_with_uncertainty_multi_into(
+        &self,
+        x: &Mat,
+        mean: &mut Mat,
+        var: &mut Vec<f64>,
+        work: &mut EnginePredictWork,
+    ) -> Result<()> {
+        let kbr = self.kbr.as_ref().ok_or_else(|| {
+            Error::Config("uncertainty serving requires with_uncertainty=true".into())
+        })?;
+        kbr.predict_multi_into(x, mean, var, &mut work.kbr)
+    }
+
     /// One batched multiple inc/dec round across KRR (and KBR if present),
-    /// keeping the raw stores in sync. The engines and the mirror stores
-    /// all edit in place inside reserved capacity, so a steady-state round
-    /// leaves no allocation traffic behind.
+    /// keeping the raw stores in sync (`D = 1` surface). Steady state
+    /// performs zero heap allocations.
     pub fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
-        match &mut self.krr {
-            KrrEngine::Intrinsic(m) => m.inc_dec(x_new, y_new, remove_idx)?,
-            KrrEngine::Empirical(m) => m.inc_dec(x_new, y_new, remove_idx)?,
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "inc_dec is the D=1 surface; use inc_dec_multi".into(),
+            ));
         }
-        if let Some(kbr) = &mut self.kbr {
-            kbr.inc_dec(x_new, y_new, remove_idx)?;
+        let mut shim = std::mem::take(&mut self.y_shim);
+        shim.resize_scratch(y_new.len(), 1);
+        shim.as_mut_slice().copy_from_slice(y_new);
+        let out = self.inc_dec_multi(x_new, &shim, remove_idx);
+        self.y_shim = shim;
+        out
+    }
+
+    /// Multi-output inc/dec round: `y_new` is `(B, D)`. When folding is
+    /// enabled, incoming rows within `fold_eps` of a surviving stored row
+    /// fold into it as a multiplicity bump + rank-1 maintained-inverse
+    /// update (numerically equivalent to the unfolded insert) instead of
+    /// growing the store; the plan is computed once and shared by the KRR
+    /// engine, the KBR twin, and the raw mirrors.
+    pub fn inc_dec_multi(&mut self, x_new: &Mat, y_new: &Mat, remove_idx: &[usize]) -> Result<()> {
+        if x_new.rows() > 0 && y_new.cols() != self.y.cols() {
+            return Err(Error::Config(format!(
+                "y_new has {} cols, engine carries D = {}",
+                y_new.cols(),
+                self.y.cols()
+            )));
         }
-        // mirror into the raw stores
         self.rem_scratch.clear();
         self.rem_scratch.extend_from_slice(remove_idx);
         self.rem_scratch.sort_unstable();
         self.rem_scratch.dedup();
-        self.x.drop_rows_sorted(&self.rem_scratch)?;
-        for (i, &ri) in self.rem_scratch.iter().enumerate() {
-            self.y.remove(ri - i);
+        if let Some(&mx) = self.rem_scratch.last() {
+            if mx >= self.y.rows() {
+                return Err(Error::InvalidUpdate(format!(
+                    "remove index {mx} >= n {}",
+                    self.y.rows()
+                )));
+            }
         }
-        if x_new.rows() > 0 {
-            self.x.push_rows(x_new)?;
-            self.y.extend_from_slice(y_new);
+        let mut plan = std::mem::take(&mut self.fold_plan);
+        let folding = match self.fold_eps {
+            Some(eps) if x_new.rows() > 0 => {
+                plan_folds_into(&mut plan, &self.x, &self.rem_scratch, x_new, eps);
+                !plan.is_trivial()
+            }
+            _ => {
+                plan.fresh.clear();
+                plan.folds.clear();
+                false
+            }
+        };
+        let out = self.inc_dec_planned(x_new, y_new, &plan, folding);
+        self.fold_plan = plan;
+        out
+    }
+
+    /// How many incoming rows the most recent [`Engine::inc_dec`] round
+    /// folded into existing rows (0 when folding is disabled).
+    pub fn last_round_folds(&self) -> usize {
+        self.fold_plan.folds.len()
+    }
+
+    fn inc_dec_planned(
+        &mut self,
+        x_new: &Mat,
+        y_new: &Mat,
+        plan: &FoldPlan,
+        folding: bool,
+    ) -> Result<()> {
+        if folding {
+            // gather the fresh (non-folding) rows into warm scratch blocks
+            let m = x_new.cols();
+            let d = y_new.cols();
+            self.x_fresh.resize_scratch(plan.fresh.len(), m);
+            self.y_fresh.resize_scratch(plan.fresh.len(), d);
+            for (k, &b) in plan.fresh.iter().enumerate() {
+                self.x_fresh.row_mut(k).copy_from_slice(x_new.row(b));
+                self.y_fresh.row_mut(k).copy_from_slice(y_new.row(b));
+            }
+        }
+        let (xf, yf) = if folding {
+            (&self.x_fresh, &self.y_fresh)
+        } else {
+            (x_new, y_new)
+        };
+        match &mut self.krr {
+            KrrEngine::Intrinsic(mdl) => mdl.inc_dec_multi(xf, yf, &self.rem_scratch)?,
+            KrrEngine::Empirical(mdl) => mdl.inc_dec_multi(xf, yf, &self.rem_scratch)?,
+        }
+        if let Some(kbr) = &mut self.kbr {
+            kbr.inc_dec_multi(xf, yf, &self.rem_scratch)?;
+        }
+        // mirror the round into the raw stores
+        self.x.drop_rows_sorted(&self.rem_scratch)?;
+        self.y.drop_rows_sorted(&self.rem_scratch)?;
+        for (i, &ri) in self.rem_scratch.iter().enumerate() {
+            self.mult.remove(ri - i);
+        }
+        if xf.rows() > 0 {
+            self.x.push_rows(xf)?;
+            self.y.push_rows(yf)?;
+            self.mult.resize(self.mult.len() + xf.rows(), 1.0);
+        }
+        if folding {
+            match &mut self.krr {
+                KrrEngine::Intrinsic(mdl) => mdl.apply_folds(&plan.folds, x_new, y_new)?,
+                KrrEngine::Empirical(mdl) => mdl.apply_folds(&plan.folds, x_new, y_new)?,
+            }
+            if let Some(kbr) = &mut self.kbr {
+                kbr.apply_folds(&plan.folds, x_new, y_new)?;
+            }
+            // mirror the multiplicity bumps and target averaging
+            let d = self.y.cols();
+            for &(i, br) in &plan.folds {
+                let c = self.mult[i];
+                for dc in 0..d {
+                    self.y[(i, dc)] = (c * self.y[(i, dc)] + y_new[(br, dc)]) / (c + 1.0);
+                }
+                self.mult[i] = c + 1.0;
+            }
         }
         Ok(())
     }
@@ -224,6 +446,7 @@ mod tests {
             let e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, space, false).unwrap();
             assert_eq!(e.space(), space);
             assert_eq!(e.n_samples(), 60);
+            assert_eq!(e.n_outputs(), 1);
             let p = e.predict(&d.x.block(0, 5, 0, 6)).unwrap();
             assert_eq!(p.len(), 5);
         }
@@ -239,7 +462,7 @@ mod tests {
         assert_eq!(e.n_samples(), 42);
         let (xv, yv) = e.training_view();
         assert_eq!(xv.rows(), 42);
-        assert_eq!(yv.len(), 42);
+        assert_eq!(yv.rows(), 42);
         // last rows are the new samples
         assert_eq!(xv.row(41), extra.x.row(3));
     }
@@ -283,5 +506,68 @@ mod tests {
         let (mu, _) = e.predict_with_uncertainty(&d.x.block(0, 4, 0, 5)).unwrap();
         assert_eq!(mu.len(), 4);
         assert_eq!(e.n_samples(), 44);
+    }
+
+    #[test]
+    fn folding_matches_unfolded_engine_and_keeps_n() {
+        let d = synth::ecg_like(30, 5, 9);
+        let mut folded = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true)
+            .unwrap();
+        folded.set_fold_eps(Some(0.0));
+        let mut unfolded =
+            Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true).unwrap();
+        // a batch where rows 0 and 2 repeat stored rows 4 and 7
+        let fresh = synth::ecg_like(1, 5, 10);
+        let xb = Mat::from_fn(3, 5, |r, c| match r {
+            0 => d.x[(4, c)],
+            1 => fresh.x[(0, c)],
+            _ => d.x[(7, c)],
+        });
+        let yb = vec![0.3, fresh.y[0], -0.4];
+        folded.inc_dec(&xb, &yb, &[]).unwrap();
+        unfolded.inc_dec(&xb, &yb, &[]).unwrap();
+        assert_eq!(folded.n_samples(), 31, "two rows must fold");
+        assert_eq!(unfolded.n_samples(), 33);
+        assert_eq!(folded.multiplicities()[4], 2.0);
+        let q = d.x.block(0, 8, 0, 5);
+        let pf = folded.predict(&q).unwrap();
+        let pu = unfolded.predict(&q).unwrap();
+        crate::testutil::assert_vec_close(&pf, &pu, 1e-10);
+        let (mf, vf) = folded.predict_with_uncertainty(&q).unwrap();
+        let (mu, vu) = unfolded.predict_with_uncertainty(&q).unwrap();
+        crate::testutil::assert_vec_close(&mf, &mu, 1e-10);
+        crate::testutil::assert_vec_close(&vf, &vu, 1e-10);
+    }
+
+    #[test]
+    fn multi_output_engine_round_trip() {
+        let d = synth::ecg_like(30, 5, 11);
+        let d2 = synth::ecg_like(30, 5, 12);
+        let ym = Mat::from_fn(30, 2, |r, c| if c == 0 { d.y[r] } else { d2.y[r] });
+        let mut e = Engine::fit_multi(&d.x, &ym, &Kernel::poly(2, 1.0), 0.5, Space::Empirical, true)
+            .unwrap();
+        assert_eq!(e.n_outputs(), 2);
+        // D=1 surface must refuse on a multi-output engine
+        assert!(e.predict(&d.x.block(0, 3, 0, 5)).is_err());
+        let extra = synth::ecg_like(3, 5, 13);
+        let yb = Mat::from_fn(3, 2, |r, c| extra.y[r] * if c == 0 { 1.0 } else { -1.0 });
+        e.inc_dec_multi(&extra.x, &yb, &[1, 4]).unwrap();
+        assert_eq!(e.n_samples(), 31);
+        let p = e.predict_multi(&d.x.block(0, 4, 0, 5)).unwrap();
+        assert_eq!(p.shape(), (4, 2));
+        let (mean, var) = e.predict_with_uncertainty_multi(&d.x.block(0, 4, 0, 5)).unwrap();
+        assert_eq!(mean.shape(), (4, 2));
+        assert_eq!(var.len(), 4);
+        assert!(var.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_targets_shim_matches_training_view() {
+        let d = synth::ecg_like(15, 4, 14);
+        let e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false)
+            .unwrap();
+        let (_, yv) = e.training_view();
+        assert_eq!(e.targets(), yv.as_slice());
     }
 }

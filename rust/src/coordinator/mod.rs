@@ -29,7 +29,7 @@ use crate::kernels::Kernel;
 use crate::krr::advisor::Advisor;
 use crate::metrics::{Counters, LatencyHist, RoundRecord, Timer};
 use crate::streaming::batcher::{BatchPolicy, Batcher};
-use crate::streaming::outlier::{detect_scored, OutlierConfig};
+use crate::streaming::outlier::{detect_scored_multi, OutlierConfig};
 use crate::streaming::sink::SinkNode;
 use crate::streaming::StreamEvent;
 use engine::Engine;
@@ -57,6 +57,11 @@ pub struct CoordinatorConfig {
     /// (shape errors, singular Woodbury core), so this is belt-and-braces;
     /// off by default — it costs an O(N J) deep copy per round.
     pub snapshot_rollback: bool,
+    /// Duplicate-input fold radius: `Some(eps)` folds incoming rows within
+    /// `eps` (Euclidean) of a stored row into a multiplicity-weighted
+    /// existing row instead of growing the store (`0.0` = exact repeats
+    /// only); `None` disables folding.
+    pub fold_eps: Option<f64>,
 }
 
 impl CoordinatorConfig {
@@ -70,6 +75,7 @@ impl CoordinatorConfig {
             outlier: Some(OutlierConfig::default()),
             with_uncertainty: false,
             snapshot_rollback: false,
+            fold_eps: None,
         }
     }
 }
@@ -84,6 +90,11 @@ impl ModelHandle {
     /// Predict through the current model state.
     pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
         self.inner.read().expect("engine lock poisoned").predict(x)
+    }
+
+    /// Predict all D output columns: `(B, D)` out.
+    pub fn predict_multi(&self, x: &Mat) -> Result<Mat> {
+        self.inner.read().expect("engine lock poisoned").predict_multi(x)
     }
 
     /// Predictive mean + variance (requires `with_uncertainty`).
@@ -127,16 +138,25 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Bootstrap from an initial training set.  Space is chosen by the
-    /// advisor unless overridden.
+    /// Bootstrap from an initial training set (`D = 1`).  Space is chosen
+    /// by the advisor unless overridden.
     pub fn bootstrap(x: &Mat, y: &[f64], cfg: CoordinatorConfig) -> Result<Self> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::bootstrap_multi(x, &ym, cfg)
+    }
+
+    /// Bootstrap from an initial `(N, D)` training set.  Space is chosen
+    /// by the advisor unless overridden.
+    pub fn bootstrap_multi(x: &Mat, y: &Mat, cfg: CoordinatorConfig) -> Result<Self> {
         let advisor = Advisor::default();
         let space = cfg.space.unwrap_or_else(|| {
             advisor
                 .choose_space(&cfg.kernel, x.rows(), x.cols(), 4, 2)
                 .space
         });
-        let engine = Engine::fit(x, y, &cfg.kernel, cfg.ridge, space, cfg.with_uncertainty)?;
+        let mut engine =
+            Engine::fit_multi(x, y, &cfg.kernel, cfg.ridge, space, cfg.with_uncertainty)?;
+        engine.set_fold_eps(cfg.fold_eps);
         let batcher = Batcher::new(cfg.batch.clone());
         Ok(Self {
             cfg,
@@ -168,26 +188,37 @@ impl Coordinator {
         // 1) nominate decremental candidates on the CURRENT set
         let removals: Vec<usize> = match &self.cfg.outlier {
             Some(ocfg) => {
-                let pred = engine.krr().predict_training()?;
-                detect_scored(&pred, engine.targets(), ocfg)?
+                let pred = engine.krr().predict_training_multi()?;
+                detect_scored_multi(&pred, engine.training_view().1, ocfg)?
                     .into_iter()
                     .map(|v| v.index)
                     .collect()
             }
             None => Vec::new(),
         };
-        // 2) assemble the insertion block
+        // 2) assemble the insertion block across all D target columns
         let dim = engine.dim();
+        let d = engine.n_outputs();
         let mut x_new = Mat::zeros(0, dim);
-        let mut y_new = Vec::with_capacity(batch.len());
+        let mut y_new = Mat::zeros(0, d);
+        let mut y_row = Vec::with_capacity(d);
         for ev in batch {
+            if ev.n_outputs() != d {
+                return Err(crate::error::Error::Config(format!(
+                    "event carries {} target columns, engine expects D = {d}",
+                    ev.n_outputs()
+                )));
+            }
             x_new.push_row(&ev.x)?;
-            y_new.push(ev.y);
+            y_row.clear();
+            y_row.push(ev.y);
+            y_row.extend_from_slice(&ev.y_tail);
+            y_new.push_row(&y_row)?;
         }
         // 3) one fused multiple inc/dec update (opt-in snapshot rollback;
         //    engines fail before mutation for all realistic error paths)
         let snapshot = self.cfg.snapshot_rollback.then(|| engine.snapshot());
-        match engine.inc_dec(&x_new, &y_new, &removals) {
+        match engine.inc_dec_multi(&x_new, &y_new, &removals) {
             Ok(()) => {}
             Err(e) => {
                 if let Some(snap) = snapshot {
@@ -197,6 +228,7 @@ impl Coordinator {
                 return Err(e);
             }
         }
+        let folded = engine.last_round_folds();
         let dt = t.elapsed();
         let outcome = RoundOutcome {
             added: batch.len(),
@@ -208,6 +240,7 @@ impl Coordinator {
         self.counters.inc("rounds");
         self.counters.add("added", outcome.added as u64);
         self.counters.add("removed", outcome.removed as u64);
+        self.counters.add("folded", folded as u64);
         self.update_latency.record(dt);
         self.record.push("multiple", dt);
         self.record.labels.push(outcome.n_after.to_string());
@@ -265,6 +298,7 @@ mod tests {
             outlier: Some(OutlierConfig { z_threshold: 5.0, max_removals: 2 }),
             with_uncertainty: false,
             snapshot_rollback: true,
+            fold_eps: None,
         }
     }
 
@@ -281,12 +315,7 @@ mod tests {
         let extra = synth::ecg_like(4, 8, 3);
         let mut c = Coordinator::bootstrap(&d.x, &d.y, cfg()).unwrap();
         let events: Vec<StreamEvent> = (0..4)
-            .map(|i| StreamEvent {
-                x: extra.x.row(i).to_vec(),
-                y: extra.y[i],
-                source_id: 0,
-                seq: i as u64,
-            })
+            .map(|i| StreamEvent::single(extra.x.row(i).to_vec(), extra.y[i], 0, i as u64))
             .collect();
         let before = c.handle().n_samples();
         let out = c.apply_batch(&events).unwrap();

@@ -13,7 +13,13 @@
 //! Adding |C| / removing |R| samples shifts the posterior *precision* by
 //! `sigma_b^-2 Phi_H Phi_H'`, so the covariance updates with the same
 //! batched Woodbury rule as KRR (eq. 43) and the mean refreshes from the
-//! maintained `Phi y^T` running sum (eq. 44).  The predictive distribution
+//! maintained `Phi y^T` running sum (eq. 44).  The posterior precision is
+//! independent of the targets, so all `D` output columns share the ONE
+//! maintained covariance: the mean becomes a `(J, D)` matrix refreshed by
+//! a single GEMM, and the per-query predictive variance is shared across
+//! outputs.  Duplicate-fold multiplicities enter the precision the same
+//! way repeated rows would (`c_i` copies of `φ_i φ_iᵀ / σ_b²`), so a fold
+//! is one rank-1 precision increment.  The predictive distribution
 //! (eq. 45-50) gives calibrated uncertainty:
 //!
 //! ```text
@@ -26,7 +32,7 @@
 
 use crate::error::{Error, Result};
 use crate::kernels::{Kernel, MonomialTable};
-use crate::linalg::gemm::{gemv, gemv_into};
+use crate::linalg::gemm::{gemv_into, ger, matmul_into};
 use crate::linalg::matrix::{axpy_slice, dot};
 use crate::linalg::solve::{spd_inverse, spd_logdet};
 use crate::linalg::woodbury::{incdec_into, IncDecWork};
@@ -48,6 +54,8 @@ struct KbrWork {
     signs: Vec<f64>,
     /// Woodbury scratch.
     incdec: IncDecWork,
+    /// D=1 shim scratch: `y_new` as a (B, 1) column.
+    y_shim: Mat,
 }
 
 /// Prior/noise hyperparameters (paper §V: both 0.01).
@@ -65,6 +73,18 @@ impl Default for KbrHyper {
     }
 }
 
+/// `(lo, hi)` bounds of the central ~95% credible interval (1.96 sigma)
+/// for each `(mean, var)` pair, written into a caller-provided buffer —
+/// the allocation-free core shared by [`Predictive::interval95_into`] and
+/// the serve layer's uncertainty fan-in.
+pub fn interval95_from_into(mean: &[f64], var: &[f64], out: &mut Vec<(f64, f64)>) {
+    out.clear();
+    out.extend(mean.iter().zip(var).map(|(m, v)| {
+        let hw = 1.96 * v.max(0.0).sqrt();
+        (m - hw, m + hw)
+    }));
+}
+
 /// A Gaussian predictive distribution per query point.
 #[derive(Clone, Debug)]
 pub struct Predictive {
@@ -75,17 +95,30 @@ pub struct Predictive {
 }
 
 impl Predictive {
-    /// Central credible interval half-widths at ~95% (1.96 sigma).
+    /// Central credible interval bounds at ~95% (1.96 sigma).
     pub fn interval95(&self) -> Vec<(f64, f64)> {
-        self.mean
-            .iter()
-            .zip(&self.var)
-            .map(|(m, v)| {
-                let hw = 1.96 * v.max(0.0).sqrt();
-                (m - hw, m + hw)
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.interval95_into(&mut out);
+        out
     }
+
+    /// [`Predictive::interval95`] written into a caller-provided buffer —
+    /// allocation-free once `out` has capacity (the serve layer's warm
+    /// uncertainty path).
+    pub fn interval95_into(&self, out: &mut Vec<(f64, f64)>) {
+        interval95_from_into(&self.mean, &self.var, out);
+    }
+}
+
+/// A multi-output Gaussian predictive distribution: per-query mean row
+/// across `D` outputs, ONE shared variance per query (the posterior
+/// precision is target-independent, so all outputs see the same psi*).
+#[derive(Clone, Debug)]
+pub struct PredictiveMulti {
+    /// Posterior predictive means, (B, D).
+    pub mean: Mat,
+    /// Shared posterior predictive variances psi* (B,).
+    pub var: Vec<f64>,
 }
 
 /// Caller-owned workspace for [`KbrModel::predict_into`]: the mapped query
@@ -106,31 +139,45 @@ pub struct KbrModel {
     kernel: Kernel,
     table: MonomialTable,
     hyper: KbrHyper,
-    /// Posterior covariance Sigma_{u|y,Phi} (J, J).
+    /// Posterior covariance Sigma_{u|y,Phi} (J, J) — shared by all D
+    /// output columns (the precision never sees the targets).
     cov: Mat,
-    /// Posterior mean mu_{u|y,Phi} (J,).
-    mean: Vec<f64>,
+    /// Posterior means, one column per output (J, D).
+    mean: Mat,
     /// Mapped training features (N, J) — needed for decremental columns.
     phi: Mat,
-    /// Targets.
-    y: Vec<f64>,
-    /// Running Phi^T y (J,).
-    py: Vec<f64>,
+    /// Targets, multiplicity-averaged, (N, D).
+    y: Mat,
+    /// Per-row duplicate multiplicities c_i (all 1.0 until a fold).
+    mult: Vec<f64>,
+    /// Running Phi^T C Ȳ (J, D).
+    py: Mat,
     work: KbrWork,
 }
 
 impl KbrModel {
-    /// Fit the batch posterior from scratch (eq. 41-42): O(N J^2 + J^3).
+    /// Fit the batch posterior from scratch (eq. 41-42): O(N J^2 + J^3),
+    /// `D = 1`.
     pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, hyper: KbrHyper) -> Result<Self> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::fit_multi(x, &ym, kernel, hyper)
+    }
+
+    /// Fit the batch posterior with a `(N, D)` target matrix: one
+    /// precision factorization, `D` mean columns.
+    pub fn fit_multi(x: &Mat, y: &Mat, kernel: &Kernel, hyper: KbrHyper) -> Result<Self> {
         ensure_shape!(
-            x.rows() == y.len(),
+            x.rows() == y.rows(),
             "KbrModel::fit",
             "x has {} rows, y has {}",
             x.rows(),
-            y.len()
+            y.rows()
         );
         if hyper.sigma_u2 <= 0.0 || hyper.sigma_b2 <= 0.0 {
             return Err(Error::Config("KBR variances must be > 0".into()));
+        }
+        if y.cols() == 0 {
+            return Err(Error::Config("target matrix needs >= 1 column".into()));
         }
         let table = kernel.feature_table(x.cols()).ok_or_else(|| {
             Error::Config(format!(
@@ -140,6 +187,7 @@ impl KbrModel {
         })?;
         let phi = table.map(x); // (N, J)
         let j = table.j();
+        let d = y.cols();
         // precision = I/sigma_u^2 + Phi^T Phi / sigma_b^2 — transpose-side
         // SYRK straight off the row-major store (half the flops, no
         // materialized Phi^T; the noise scale folds into alpha)
@@ -147,17 +195,14 @@ impl KbrModel {
         crate::linalg::gemm::syrk_t_into(1.0 / hyper.sigma_b2, &phi, 0.0, &mut prec)?;
         prec.add_diag(1.0 / hyper.sigma_u2)?;
         let cov = spd_inverse(&prec)?;
-        let mut py = vec![0.0; j];
-        for (r, &yr) in y.iter().enumerate() {
-            axpy_slice(yr, phi.row(r), &mut py);
+        // PY = Phi^T Y: all D right-hand sides in one TN product
+        let mut py = Mat::zeros(j, d);
+        crate::linalg::gemm::gemm_tn_acc(1.0, &phi, y, &mut py)?;
+        let mut mean = Mat::default();
+        matmul_into(&cov, &py, &mut mean)?;
+        for m in mean.as_mut_slice() {
+            *m /= hyper.sigma_b2;
         }
-        let mean = {
-            let mut v = gemv(&cov, &py)?;
-            for m in &mut v {
-                *m /= hyper.sigma_b2;
-            }
-            v
-        };
         Ok(Self {
             kernel: kernel.clone(),
             table,
@@ -165,33 +210,61 @@ impl KbrModel {
             cov,
             mean,
             phi,
-            y: y.to_vec(),
+            y: y.clone(),
+            mult: vec![1.0; y.rows()],
             py,
             work: KbrWork::default(),
         })
     }
 
-    /// One batched incremental/decremental posterior update (eq. 43-44).
-    /// Steady state performs zero heap allocations: the scaled Φ_H, signs
-    /// and Woodbury scratch live in the per-model workspace, the covariance
-    /// update is in place, and the stores edit inside reserved capacity.
+    /// One batched incremental/decremental posterior update (eq. 43-44),
+    /// `D = 1` surface. Steady state performs zero heap allocations.
     pub fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "inc_dec is the D=1 surface; use inc_dec_multi".into(),
+            ));
+        }
+        let mut shim = std::mem::take(&mut self.work.y_shim);
+        shim.resize_scratch(y_new.len(), 1);
+        shim.as_mut_slice().copy_from_slice(y_new);
+        let out = self.inc_dec_multi(x_new, &shim, remove_idx);
+        self.work.y_shim = shim;
+        out
+    }
+
+    /// One batched incremental/decremental posterior update (eq. 43-44)
+    /// over all `D` output columns. Steady state performs zero heap
+    /// allocations: the scaled Φ_H, signs and Woodbury scratch live in the
+    /// per-model workspace, the covariance update is in place, and the
+    /// stores edit inside reserved capacity. A multiplicity-`c` row leaves
+    /// through a `√c/σ_b`-scaled column.
+    pub fn inc_dec_multi(&mut self, x_new: &Mat, y_new: &Mat, remove_idx: &[usize]) -> Result<()> {
         ensure_shape!(
-            x_new.rows() == y_new.len(),
+            x_new.rows() == y_new.rows(),
             "KbrModel::inc_dec",
             "x_new {} rows, y_new {}",
             x_new.rows(),
-            y_new.len()
+            y_new.rows()
         );
+        if x_new.rows() > 0 {
+            ensure_shape!(
+                y_new.cols() == self.y.cols(),
+                "KbrModel::inc_dec",
+                "y_new has {} cols, engine carries D = {}",
+                y_new.cols(),
+                self.y.cols()
+            );
+        }
         self.work.rem.clear();
         self.work.rem.extend_from_slice(remove_idx);
         self.work.rem.sort_unstable();
         self.work.rem.dedup();
         if let Some(&mx) = self.work.rem.last() {
-            if mx >= self.y.len() {
+            if mx >= self.y.rows() {
                 return Err(Error::InvalidUpdate(format!(
                     "remove index {mx} >= n {}",
-                    self.y.len()
+                    self.y.rows()
                 )));
             }
         }
@@ -202,7 +275,9 @@ impl KbrModel {
         }
         let j = self.table.j();
         self.table.map_into_mat(x_new, &mut self.work.phi_c); // (C, J)
-        // Phi_H scaled by 1/sigma_b so the precision shift matches eq. 43
+        // Phi_H scaled by 1/sigma_b so the precision shift matches eq. 43;
+        // a multiplicity-c row carries √c of extra scale (its whole
+        // precision share leaves in one ±1-signed rank-1 term)
         let inv_sb = 1.0 / self.hyper.sigma_b2.sqrt();
         self.work.phi_h.resize_scratch(j, c + r);
         for row in 0..c {
@@ -212,8 +287,9 @@ impl KbrModel {
         }
         for col in 0..r {
             let ri = self.work.rem[col];
+            let w = self.mult[ri].sqrt() * inv_sb;
             for jj in 0..j {
-                self.work.phi_h[(jj, c + col)] = self.phi[(ri, jj)] * inv_sb;
+                self.work.phi_h[(jj, c + col)] = self.phi[(ri, jj)] * w;
             }
         }
         self.work.signs.clear();
@@ -225,31 +301,87 @@ impl KbrModel {
             &self.work.signs,
             &mut self.work.incdec,
         )?;
-        // maintain Phi^T y and the stores
+        // maintain Phi^T C Y and the stores
         for row in 0..c {
-            axpy_slice(y_new[row], self.work.phi_c.row(row), &mut self.py);
+            ger(&mut self.py, 1.0, self.work.phi_c.row(row), y_new.row(row))?;
         }
         for &ri in &self.work.rem {
-            axpy_slice(-self.y[ri], self.phi.row(ri), &mut self.py);
+            ger(&mut self.py, -self.mult[ri], self.phi.row(ri), self.y.row(ri))?;
         }
         self.phi.drop_rows_sorted(&self.work.rem)?;
+        self.y.drop_rows_sorted(&self.work.rem)?;
         for (i, &ri) in self.work.rem.iter().enumerate() {
-            self.y.remove(ri - i);
+            self.mult.remove(ri - i);
         }
         for row in 0..c {
             self.phi.push_row(self.work.phi_c.row(row))?;
-            self.y.push(y_new[row]);
+            self.y.push_row(y_new.row(row))?;
+            self.mult.push(1.0);
         }
-        // mean refresh (eq. 44)
-        gemv_into(&self.cov, &self.py, &mut self.mean)?;
-        for m in &mut self.mean {
+        self.refresh_mean()
+    }
+
+    /// Fold duplicates into multiplicity-weighted rows: each target row
+    /// gains one more `φ_i φ_iᵀ / σ_b²` precision share (ONE batched
+    /// rank-|F| Woodbury increment over the unscaled stored rows), and the
+    /// running `Φᵀ C Ȳ` absorbs the new observation — identical posterior
+    /// to the unfolded insert. Allocation-free once warm.
+    pub fn apply_folds(&mut self, folds: &[(usize, usize)], _x_new: &Mat, y_new: &Mat) -> Result<()> {
+        if folds.is_empty() {
+            return Ok(());
+        }
+        let n = self.y.rows();
+        let d = self.y.cols();
+        let j = self.table.j();
+        let inv_sb = 1.0 / self.hyper.sigma_b2.sqrt();
+        self.work.phi_h.resize_scratch(j, folds.len());
+        for (k, &(i, br)) in folds.iter().enumerate() {
+            ensure_shape!(
+                i < n && br < y_new.rows(),
+                "KbrModel::apply_folds",
+                "fold ({i}, {br}) out of range (n = {n}, batch = {})",
+                y_new.rows()
+            );
+            ensure_shape!(
+                y_new.cols() == d,
+                "KbrModel::apply_folds",
+                "y_new has {} cols, engine carries D = {d}",
+                y_new.cols()
+            );
+            for jj in 0..j {
+                self.work.phi_h[(jj, k)] = self.phi[(i, jj)] * inv_sb;
+            }
+        }
+        self.work.signs.clear();
+        self.work.signs.extend(std::iter::repeat_n(1.0, folds.len()));
+        incdec_into(
+            &mut self.cov,
+            &self.work.phi_h,
+            &self.work.signs,
+            &mut self.work.incdec,
+        )?;
+        for &(i, br) in folds {
+            let c = self.mult[i];
+            ger(&mut self.py, 1.0, self.phi.row(i), y_new.row(br))?;
+            for dc in 0..d {
+                self.y[(i, dc)] = (c * self.y[(i, dc)] + y_new[(br, dc)]) / (c + 1.0);
+            }
+            self.mult[i] = c + 1.0;
+        }
+        self.refresh_mean()
+    }
+
+    /// Mean refresh (eq. 44): ONE `(J, J)·(J, D)` GEMM for all outputs.
+    fn refresh_mean(&mut self) -> Result<()> {
+        matmul_into(&self.cov, &self.py, &mut self.mean)?;
+        for m in self.mean.as_mut_slice() {
             *m /= self.hyper.sigma_b2;
         }
         Ok(())
     }
 
     /// Posterior predictive distribution for a block of raw feature rows
-    /// (eq. 45-50).
+    /// (eq. 45-50), `D = 1`.
     pub fn predict(&self, x: &Mat) -> Result<Predictive> {
         let mut mean = Vec::new();
         let mut var = Vec::new();
@@ -257,12 +389,21 @@ impl KbrModel {
         Ok(Predictive { mean, var })
     }
 
+    /// Multi-output posterior predictive distribution: `(B, D)` means and
+    /// the shared per-query variance column.
+    pub fn predict_multi(&self, x: &Mat) -> Result<PredictiveMulti> {
+        let mut mean = Mat::default();
+        let mut var = Vec::new();
+        self.predict_multi_into(x, &mut mean, &mut var, &mut KbrPredictWork::default())?;
+        Ok(PredictiveMulti { mean, var })
+    }
+
     /// [`KbrModel::predict`] written into caller-provided buffers, drawing
     /// every intermediate from `work` — allocation-free once warm. The
     /// variance column `Σ Φ*ᵀ` is built as ONE batched product over the
     /// whole micro-batch (a packed GEMM above the dispatch crossover)
     /// instead of B per-request covariance GEMVs, which is where the
-    /// serving layer's BLAS-3 win lives.
+    /// serving layer's BLAS-3 win lives. `D = 1` only.
     pub fn predict_into(
         &self,
         x: &Mat,
@@ -270,6 +411,11 @@ impl KbrModel {
         var: &mut Vec<f64>,
         work: &mut KbrPredictWork,
     ) -> Result<()> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "predict_into is the D=1 surface; use predict_multi_into".into(),
+            ));
+        }
         ensure_shape!(
             x.cols() == self.table.m,
             "KbrModel::predict",
@@ -278,8 +424,35 @@ impl KbrModel {
             self.table.m
         );
         self.table.map_into_mat(x, &mut work.phi_star); // (B, J)
-        gemv_into(&work.phi_star, &self.mean, mean)?;
-        // psi* = sigma_b^2 + diag(Phi* Sigma Phi*^T)
+        gemv_into(&work.phi_star, self.mean.as_slice(), mean)?;
+        self.variance_into(var, work)
+    }
+
+    /// Multi-output [`KbrModel::predict_into`]: `mean` becomes `(B, D)`
+    /// via ONE packed `(B, J)·(J, D)` GEMM, `var` the shared per-query
+    /// variance. Allocation-free once warm.
+    pub fn predict_multi_into(
+        &self,
+        x: &Mat,
+        mean: &mut Mat,
+        var: &mut Vec<f64>,
+        work: &mut KbrPredictWork,
+    ) -> Result<()> {
+        ensure_shape!(
+            x.cols() == self.table.m,
+            "KbrModel::predict_multi",
+            "x has {} cols, expected {}",
+            x.cols(),
+            self.table.m
+        );
+        self.table.map_into_mat(x, &mut work.phi_star); // (B, J)
+        matmul_into(&work.phi_star, &self.mean, mean)?; // (B, D)
+        self.variance_into(var, work)
+    }
+
+    /// psi* = sigma_b^2 + diag(Phi* Sigma Phi*^T) from the mapped block
+    /// already sitting in `work.phi_star`.
+    fn variance_into(&self, var: &mut Vec<f64>, work: &mut KbrPredictWork) -> Result<()> {
         crate::linalg::gemm::matmul_nt_into(&self.cov, &work.phi_star, &mut work.sc)?; // (J, B)
         let b = work.phi_star.rows();
         debug_assert_eq!(work.sc.rows(), work.phi_star.cols());
@@ -297,11 +470,14 @@ impl KbrModel {
         Ok(())
     }
 
-    /// GP log marginal likelihood log p(y | Phi) for the current training
-    /// set (extension: evidence for hyperparameter checking).
+    /// GP log marginal likelihood log p(Y | Phi) for the current training
+    /// set, summed over the `D` independent output columns (extension:
+    /// evidence for hyperparameter checking). With folded rows this is the
+    /// evidence of the weighted store (multiplicity-averaged targets), a
+    /// diagnostics-path approximation of the unfolded stream's evidence.
     pub fn log_marginal_likelihood(&self) -> Result<f64> {
         // p(y|Phi) = N(0, sigma_u^2 Phi^T Phi + sigma_b^2 I)  (N-dim)
-        let n = self.y.len();
+        let n = self.y.rows();
         // Phi Phi^T is symmetric: SYRK route, half the flops of the
         // general product
         let k = crate::linalg::gemm::syrk(&self.phi)?; // (N,N)
@@ -309,13 +485,24 @@ impl KbrModel {
         c.scale(self.hyper.sigma_u2);
         c.add_diag(self.hyper.sigma_b2)?;
         let ld = spd_logdet(&c)?;
-        let alpha = crate::linalg::solve::solve_spd(&c, &self.y)?;
-        let quad = dot(&self.y, &alpha);
-        Ok(-0.5 * (quad + ld + n as f64 * (2.0 * std::f64::consts::PI).ln()))
+        let mut total = 0.0;
+        for dc in 0..self.y.cols() {
+            let ycol: Vec<f64> = (0..n).map(|i| self.y[(i, dc)]).collect();
+            let alpha = crate::linalg::solve::solve_spd(&c, &ycol)?;
+            let quad = dot(&ycol, &alpha);
+            total += -0.5 * (quad + ld + n as f64 * (2.0 * std::f64::consts::PI).ln());
+        }
+        Ok(total)
     }
 
-    /// Posterior mean vector (J,).
+    /// Posterior mean vector (J,) (`D = 1` view).
     pub fn posterior_mean(&self) -> &[f64] {
+        debug_assert_eq!(self.y.cols(), 1, "posterior_mean is the D=1 view");
+        self.mean.as_slice()
+    }
+
+    /// Posterior mean matrix, (J, D).
+    pub fn posterior_mean_multi(&self) -> &Mat {
         &self.mean
     }
 
@@ -326,7 +513,17 @@ impl KbrModel {
 
     /// Training-set size.
     pub fn n_samples(&self) -> usize {
-        self.y.len()
+        self.y.rows()
+    }
+
+    /// Number of target columns D.
+    pub fn n_outputs(&self) -> usize {
+        self.y.cols()
+    }
+
+    /// Per-row duplicate multiplicities (all 1.0 unless folds happened).
+    pub fn multiplicities(&self) -> &[f64] {
+        &self.mult
     }
 
     /// Kernel.
@@ -343,6 +540,7 @@ impl KbrModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm::gemv;
     use crate::testutil::{assert_mat_close, assert_vec_close};
     use crate::util::prng::Rng;
 
@@ -434,6 +632,10 @@ mod tests {
         for ((lo, hi), m) in p.interval95().iter().zip(&p.mean) {
             assert!(lo < m && m < hi);
         }
+        // the _into twin matches the allocating path exactly
+        let mut buf = Vec::new();
+        p.interval95_into(&mut buf);
+        assert_eq!(buf, p.interval95());
     }
 
     #[test]
@@ -458,5 +660,45 @@ mod tests {
         assert!(KbrModel::fit(&x, &y, &Kernel::poly(2, 1.0), bad).is_err());
         let mut m = KbrModel::fit(&x, &y, &Kernel::poly(2, 1.0), KbrHyper::default()).unwrap();
         assert!(m.inc_dec(&Mat::zeros(0, 3), &[], &[10]).is_err());
+    }
+
+    #[test]
+    fn multi_output_posterior_matches_independent_models() {
+        let kernel = Kernel::poly(2, 1.0);
+        let (x, y0) = data(25, 3, 11);
+        let (_, y1) = data(25, 3, 12);
+        let ym = Mat::from_fn(25, 2, |r, c| if c == 0 { y0[r] } else { y1[r] });
+        let multi = KbrModel::fit_multi(&x, &ym, &kernel, KbrHyper::default()).unwrap();
+        let m0 = KbrModel::fit(&x, &y0, &kernel, KbrHyper::default()).unwrap();
+        let m1 = KbrModel::fit(&x, &y1, &kernel, KbrHyper::default()).unwrap();
+        let (xt, _) = data(6, 3, 13);
+        let pm = multi.predict_multi(&xt).unwrap();
+        let p0 = m0.predict(&xt).unwrap();
+        let p1 = m1.predict(&xt).unwrap();
+        for r in 0..6 {
+            assert!((pm.mean[(r, 0)] - p0.mean[r]).abs() < 1e-10);
+            assert!((pm.mean[(r, 1)] - p1.mean[r]).abs() < 1e-10);
+            // one shared variance column, equal to both D=1 variances
+            assert!((pm.var[r] - p0.var[r]).abs() < 1e-12);
+            assert!((pm.var[r] - p1.var[r]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fold_equals_unfolded_duplicate_insert() {
+        let kernel = Kernel::poly(2, 1.0);
+        let (x, y) = data(20, 3, 14);
+        let mut folded = KbrModel::fit(&x, &y, &kernel, KbrHyper::default()).unwrap();
+        let xdup = Mat::from_fn(1, 3, |_, c| x[(4, c)]);
+        let ydup = Mat::from_vec(1, 1, vec![-0.2]).unwrap();
+        folded.apply_folds(&[(4, 0)], &xdup, &ydup).unwrap();
+        assert_eq!(folded.n_samples(), 20, "folding must not grow N");
+
+        let x_ref = x.vcat(&xdup).unwrap();
+        let mut y_ref = y.clone();
+        y_ref.push(-0.2);
+        let unfolded = KbrModel::fit(&x_ref, &y_ref, &kernel, KbrHyper::default()).unwrap();
+        assert_vec_close(folded.posterior_mean(), unfolded.posterior_mean(), 1e-10);
+        assert_mat_close(folded.posterior_cov(), unfolded.posterior_cov(), 1e-10);
     }
 }

@@ -1,10 +1,21 @@
 //! Empirical-space KRR (paper Section III).
 //!
-//! Maintains `Q^-1 = (K + ρI)^-1` (N x N) over the raw training samples.
-//! A `+|C|/−|R|` round removes first (eq. 29, block Schur shrink), then
-//! grows by the new block (eq. 28, bordered inverse) — the paper's eq. (30)
-//! fused ordering.  The `(a, b)` head follows eq. (18)–(19) from `Q^-1`
-//! directly in O(N^2).
+//! Maintains `Q^-1 = (K + ρ C^-1)^-1` (N x N) over the raw training
+//! samples, where `C = diag(c_i)` carries per-row multiplicities from
+//! duplicate-input folding (`C = I` until a fold happens — the paper's
+//! `K + ρI` exactly).  A `+|C|/−|R|` round removes first (eq. 29, block
+//! Schur shrink), then grows by the new block (eq. 28, bordered inverse)
+//! — the paper's eq. (30) fused ordering.  The `(A, b)` head follows
+//! eq. (18)–(19) from `Q^-1` directly in O(N^2 D): all `D` target columns
+//! share the one maintained inverse, so the per-round factorization work
+//! amortizes across outputs and multi-output predicts run as one packed
+//! GEMM.
+//!
+//! Duplicate folding: a repeated input row bumps `c_i` instead of growing
+//! N. Per the weighted normal equations the only state change is the
+//! ridge diagonal `ρ/c_i` and the multiplicity-averaged target `ȳ_i`, so
+//! a fold is ONE rank-1 Sherman–Morrison update of the maintained inverse
+//! — numerically equivalent to having inserted the duplicate row.
 //!
 //! This is the only mode applicable to RBF kernels (infinite intrinsic
 //! dimension) and the right choice when M ≫ N (e.g. Dorothea: N=800,
@@ -13,7 +24,7 @@
 use crate::error::{Error, Result};
 use crate::kernels::gram::{gram_into, gram_symmetric_into, GramWork};
 use crate::kernels::Kernel;
-use crate::linalg::gemm::gemv_into;
+use crate::linalg::gemm::{gemv_into, ger, matmul_into};
 use crate::linalg::matrix::dot;
 use crate::linalg::solve::{spd_inverse, spd_inverse_into};
 use crate::linalg::woodbury::{bordered_grow_into, bordered_shrink_into, BorderWork};
@@ -37,14 +48,19 @@ struct EmpiricalWork {
     q_cc: Mat,
     /// Head refresh: v = Q^-1 e.
     v: Vec<f64>,
-    /// Head refresh: Q^-1 y.
-    qy: Vec<f64>,
+    /// Head refresh: Q^-1 Y, (N, D).
+    qy: Mat,
     /// §III.B direct-recompute scratch: the kept-block Gram.
     q_kept: Mat,
     /// §III.B direct-recompute scratch: Cholesky factor for the inverse.
     l: Mat,
     /// §III.B direct-recompute scratch: one solve column.
     col: Vec<f64>,
+    /// Fold scratch: the touched Q^-1 column (rank-1 update input).
+    fold_col: Vec<f64>,
+    /// D=1 shim scratch: `y_new` as an (B, 1) column (taken/restored
+    /// around the `_multi` call so the slice API stays allocation-free).
+    y_shim: Mat,
 }
 
 /// Caller-owned workspace for [`EmpiricalKrr::predict_into`]: the cross
@@ -65,29 +81,41 @@ pub struct EmpiricalKrr {
     rho: f64,
     /// Raw training samples (N, M) — needed for cross-kernels of new data.
     x: Mat,
-    /// Training targets.
-    y: Vec<f64>,
-    /// Maintained (K + ρI)^-1, (N, N).
+    /// Training targets, multiplicity-averaged, (N, D).
+    y: Mat,
+    /// Per-row duplicate multiplicities c_i (all 1.0 until a fold).
+    mult: Vec<f64>,
+    /// Maintained (K + ρ C^-1)^-1, (N, N).
     q_inv: Mat,
-    /// Dual weights a (N,).
-    a: Vec<f64>,
-    /// Bias b.
-    b: f64,
+    /// Dual weights, (N, D) — one column per output, one shared inverse.
+    a: Mat,
+    /// Per-output bias (D,).
+    b: Vec<f64>,
     work: EmpiricalWork,
 }
 
 impl EmpiricalKrr {
-    /// Fit from scratch: O(N^2 M + N^3).
+    /// Fit from scratch: O(N^2 M + N^3), `D = 1`.
     pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, rho: f64) -> Result<Self> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::fit_multi(x, &ym, kernel, rho)
+    }
+
+    /// Fit from scratch with a `(N, D)` target matrix: one factorization,
+    /// `D` right-hand sides.
+    pub fn fit_multi(x: &Mat, y: &Mat, kernel: &Kernel, rho: f64) -> Result<Self> {
         ensure_shape!(
-            x.rows() == y.len(),
+            x.rows() == y.rows(),
             "EmpiricalKrr::fit",
             "x has {} rows, y has {}",
             x.rows(),
-            y.len()
+            y.rows()
         );
         if rho <= 0.0 {
             return Err(Error::Config("ridge rho must be > 0".into()));
+        }
+        if y.cols() == 0 {
+            return Err(Error::Config("target matrix needs >= 1 column".into()));
         }
         let mut q = kernel.gram_symmetric(x);
         q.add_diag(rho)?;
@@ -96,20 +124,22 @@ impl EmpiricalKrr {
             kernel: kernel.clone(),
             rho,
             x: x.clone(),
-            y: y.to_vec(),
+            y: y.clone(),
+            mult: vec![1.0; y.rows()],
             q_inv,
-            a: vec![0.0; y.len()],
-            b: 0.0,
+            a: Mat::zeros(y.rows(), y.cols()),
+            b: vec![0.0; y.cols()],
             work: EmpiricalWork::default(),
         };
         model.refresh_head()?;
         Ok(model)
     }
 
-    /// (a, b) from Q^-1 (paper eq. 18-19) — O(N^2), allocation-free with a
-    /// warm workspace.
+    /// (A, b) from Q^-1 (paper eq. 18-19, one column per output) —
+    /// O(N^2 D), allocation-free with a warm workspace.
     fn refresh_head(&mut self) -> Result<()> {
-        let n = self.y.len();
+        let n = self.y.rows();
+        let d = self.y.cols();
         ensure_shape!(
             self.q_inv.rows() == n,
             "refresh_head",
@@ -117,34 +147,53 @@ impl EmpiricalKrr {
             self.q_inv.shape(),
             n
         );
-        // v = Q^-1 e ; b = (y.v) / (e.v) ; a = Q^-1 y - b v
+        // v = Q^-1 e ; b_d = (y_d.v) / (e.v) ; a_d = (Q^-1 Y)_d - b_d v
         self.q_inv.row_sums_into(&mut self.work.v);
         let ev: f64 = self.work.v.iter().sum();
         if ev.abs() < 1e-14 {
             return Err(Error::numerical("refresh_head", format!("e Q^-1 e = {ev:.3e}")));
         }
-        self.b = dot(&self.y, &self.work.v) / ev;
-        gemv_into(&self.q_inv, &self.y, &mut self.work.qy)?;
-        let b = self.b;
-        self.a.clear();
-        self.a.extend(
-            self.work
-                .qy
-                .iter()
-                .zip(&self.work.v)
-                .map(|(q, vi)| q - b * vi),
-        );
+        self.b.clear();
+        self.b.resize(d, 0.0);
+        for i in 0..n {
+            let vi = self.work.v[i];
+            for (bd, &yv) in self.b.iter_mut().zip(self.y.row(i)) {
+                *bd += yv * vi;
+            }
+        }
+        for bd in self.b.iter_mut() {
+            *bd /= ev;
+        }
+        matmul_into(&self.q_inv, &self.y, &mut self.work.qy)?;
+        self.a.resize_scratch(n, d);
+        for i in 0..n {
+            let vi = self.work.v[i];
+            for dc in 0..d {
+                self.a[(i, dc)] = self.work.qy[(i, dc)] - self.b[dc] * vi;
+            }
+        }
         Ok(())
     }
 
-    /// Dual weights.
+    /// Dual weights (`D = 1` view; see [`Self::dual_weights_multi`]).
     pub fn dual_weights(&self) -> &[f64] {
+        debug_assert_eq!(self.y.cols(), 1, "dual_weights is the D=1 view");
+        self.a.as_slice()
+    }
+
+    /// Dual weight matrix, (N, D).
+    pub fn dual_weights_multi(&self) -> &Mat {
         &self.a
     }
 
-    /// Bias.
+    /// Bias (`D = 1` view).
     pub fn bias(&self) -> f64 {
-        self.b
+        self.b[0]
+    }
+
+    /// Per-output biases (D,).
+    pub fn bias_multi(&self) -> &[f64] {
+        &self.b
     }
 
     /// Kernel.
@@ -157,9 +206,21 @@ impl EmpiricalKrr {
         &self.q_inv
     }
 
-    /// Training targets.
-    pub fn targets(&self) -> &[f64] {
+    /// Training targets, multiplicity-averaged, (N, D).
+    pub fn targets_multi(&self) -> &Mat {
         &self.y
+    }
+
+    /// Training targets (`D = 1` view; the (N, 1) row-major buffer is the
+    /// target column).
+    pub fn targets(&self) -> &[f64] {
+        debug_assert_eq!(self.y.cols(), 1, "targets is the D=1 view");
+        self.y.as_slice()
+    }
+
+    /// Per-row duplicate multiplicities (all 1.0 unless folds happened).
+    pub fn multiplicities(&self) -> &[f64] {
+        &self.mult
     }
 
     /// Single incremental update (paper eq. 20-23 path).
@@ -177,13 +238,18 @@ impl EmpiricalKrr {
     /// every intermediate from `work` — allocation-free once warm, which is
     /// what the serving layer's micro-batch loop runs on. One round is ONE
     /// cross-Gram build (a packed GEMM above the dispatch crossover) plus
-    /// one GEMV, instead of B per-request kernel-row sweeps.
+    /// one GEMV, instead of B per-request kernel-row sweeps. `D = 1` only.
     pub fn predict_into(
         &self,
         x: &Mat,
         out: &mut Vec<f64>,
         work: &mut EmpiricalPredictWork,
     ) -> Result<()> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "predict_into is the D=1 surface; use predict_multi_into".into(),
+            ));
+        }
         ensure_shape!(
             x.cols() == self.x.cols(),
             "EmpiricalKrr::predict",
@@ -192,9 +258,36 @@ impl EmpiricalKrr {
             self.x.cols()
         );
         gram_into(&self.kernel, x, &self.x, &mut work.k_star, &mut work.gram); // (B, N)
-        gemv_into(&work.k_star, &self.a, out)?;
+        gemv_into(&work.k_star, self.a.as_slice(), out)?;
         for v in out.iter_mut() {
-            *v += self.b;
+            *v += self.b[0];
+        }
+        Ok(())
+    }
+
+    /// Multi-output batched prediction: `out` becomes `(B, D)`. The dual
+    /// application is ONE packed `(B, N)·(N, D)` GEMM over all outputs —
+    /// allocation-free once `out`/`work` are warm.
+    pub fn predict_multi_into(
+        &self,
+        x: &Mat,
+        out: &mut Mat,
+        work: &mut EmpiricalPredictWork,
+    ) -> Result<()> {
+        ensure_shape!(
+            x.cols() == self.x.cols(),
+            "EmpiricalKrr::predict_multi",
+            "x has {} cols, expected {}",
+            x.cols(),
+            self.x.cols()
+        );
+        gram_into(&self.kernel, x, &self.x, &mut work.k_star, &mut work.gram); // (B, N)
+        matmul_into(&work.k_star, &self.a, out)?; // (B, D)
+        let d = self.b.len();
+        for row in out.as_mut_slice().chunks_exact_mut(d) {
+            for (v, &bd) in row.iter_mut().zip(&self.b) {
+                *v += bd;
+            }
         }
         Ok(())
     }
@@ -207,28 +300,54 @@ impl KrrModel for EmpiricalKrr {
         Ok(out)
     }
 
-    /// One batched `+|C|/−|R|` round: eq. (29) shrink then eq. (28) grow,
-    /// both written into the maintained buffer. Steady state performs zero
-    /// heap allocations — the Gram blocks, Schur scratch and head buffers
-    /// all live in the per-model workspace, and `q_inv` shrinks and regrows
-    /// inside its reserved capacity.
     fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "inc_dec is the D=1 surface; use inc_dec_multi".into(),
+            ));
+        }
+        // route the slice through the (B, 1) scratch column; take/restore
+        // keeps the shim allocation-free once warm
+        let mut shim = std::mem::take(&mut self.work.y_shim);
+        shim.resize_scratch(y_new.len(), 1);
+        shim.as_mut_slice().copy_from_slice(y_new);
+        let out = self.inc_dec_multi(x_new, &shim, remove_idx);
+        self.work.y_shim = shim;
+        out
+    }
+
+    /// One batched `+|C|/−|R|` round: eq. (29) shrink then eq. (28) grow,
+    /// both written into the maintained buffer, all `D` target columns
+    /// riding the one inverse. Steady state performs zero heap allocations
+    /// — the Gram blocks, Schur scratch and head buffers all live in the
+    /// per-model workspace, and `q_inv` shrinks and regrows inside its
+    /// reserved capacity.
+    fn inc_dec_multi(&mut self, x_new: &Mat, y_new: &Mat, remove_idx: &[usize]) -> Result<()> {
         ensure_shape!(
-            x_new.rows() == y_new.len(),
+            x_new.rows() == y_new.rows(),
             "EmpiricalKrr::inc_dec",
             "x_new {} rows, y_new {}",
             x_new.rows(),
-            y_new.len()
+            y_new.rows()
         );
+        if x_new.rows() > 0 {
+            ensure_shape!(
+                y_new.cols() == self.y.cols(),
+                "EmpiricalKrr::inc_dec",
+                "y_new has {} cols, engine carries D = {}",
+                y_new.cols(),
+                self.y.cols()
+            );
+        }
         self.work.rem.clear();
         self.work.rem.extend_from_slice(remove_idx);
         self.work.rem.sort_unstable();
         self.work.rem.dedup();
         if let Some(&mx) = self.work.rem.last() {
-            if mx >= self.y.len() {
+            if mx >= self.y.rows() {
                 return Err(Error::InvalidUpdate(format!(
                     "remove index {mx} >= n {}",
-                    self.y.len()
+                    self.y.rows()
                 )));
             }
         }
@@ -237,7 +356,7 @@ impl KrrModel for EmpiricalKrr {
         if c + r == 0 {
             return Ok(());
         }
-        if self.y.len() + c <= r {
+        if self.y.rows() + c <= r {
             return Err(Error::InvalidUpdate(
                 "update would leave an empty training set".into(),
             ));
@@ -246,14 +365,14 @@ impl KrrModel for EmpiricalKrr {
         if r > 0 {
             // §III.B guard: shrinking needs |R| < residual size; otherwise a
             // fresh inverse of the kept block is cheaper AND always valid.
-            let residual = self.y.len() - r;
+            let residual = self.y.rows() - r;
             if r >= residual {
                 // direct recompute path (rare; the row gather may allocate)
                 // — symmetric Gram through the SYRK route and an in-place
                 // fresh inverse, reusing the model's scratch buffers; the
                 // maintained buffer keeps its reserved capacity for the
                 // regrowth that follows
-                let keep: Vec<usize> = (0..self.y.len())
+                let keep: Vec<usize> = (0..self.y.rows())
                     .filter(|i| !self.work.rem.contains(i))
                     .collect();
                 let xk = self.x.select_rows(&keep);
@@ -263,7 +382,10 @@ impl KrrModel for EmpiricalKrr {
                     &mut self.work.q_kept,
                     &mut self.work.gram,
                 );
-                self.work.q_kept.add_diag(self.rho)?;
+                // the ridge diagonal is ρ/c_i for multiplicity-weighted rows
+                for (knew, &kold) in keep.iter().enumerate() {
+                    self.work.q_kept[(knew, knew)] += self.rho / self.mult[kold];
+                }
                 spd_inverse_into(
                     &self.work.q_kept,
                     &mut self.q_inv,
@@ -274,11 +396,13 @@ impl KrrModel for EmpiricalKrr {
                 bordered_shrink_into(&mut self.q_inv, &self.work.rem, &mut self.work.border)?;
             }
             self.x.drop_rows_sorted(&self.work.rem)?;
+            self.y.drop_rows_sorted(&self.work.rem)?;
             for (i, &ri) in self.work.rem.iter().enumerate() {
-                self.y.remove(ri - i);
+                self.mult.remove(ri - i);
             }
         }
-        // 2) incremental grow by the new block (eq. 28)
+        // 2) incremental grow by the new block (eq. 28); fresh rows enter
+        // with multiplicity 1, so the new diagonal block gets the plain ρ
         if c > 0 {
             gram_into(&self.kernel, &self.x, x_new, &mut self.work.eta, &mut self.work.gram);
             gram_symmetric_into(&self.kernel, x_new, &mut self.work.q_cc, &mut self.work.gram);
@@ -290,17 +414,79 @@ impl KrrModel for EmpiricalKrr {
                 &mut self.work.border,
             )?;
             self.x.push_rows(x_new)?;
-            self.y.extend_from_slice(y_new);
+            self.y.push_rows(y_new)?;
+            self.mult.resize(self.mult.len() + c, 1.0);
         }
         self.refresh_head()
     }
 
     fn n_samples(&self) -> usize {
-        self.y.len()
+        self.y.rows()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.y.cols()
     }
 
     fn predict_training(&self) -> Result<Vec<f64>> {
         self.predict(&self.x)
+    }
+
+    fn predict_multi(&self, x: &Mat) -> Result<Mat> {
+        let mut out = Mat::default();
+        self.predict_multi_into(x, &mut out, &mut EmpiricalPredictWork::default())?;
+        Ok(out)
+    }
+
+    fn predict_training_multi(&self) -> Result<Mat> {
+        self.predict_multi(&self.x)
+    }
+
+    /// Fold duplicates: bumping `c_i -> c_i + 1` changes ONE ridge
+    /// diagonal entry by `δ = ρ/(c+1) − ρ/c`, so the maintained inverse
+    /// takes a rank-1 Sherman–Morrison update
+    /// `Q^-1 ← Q^-1 − (δ / (1 + δ q_ii)) q_i q_iᵀ` (q_i = i-th column of
+    /// Q^-1), and the stored target becomes the running average
+    /// `ȳ_i ← (c ȳ_i + y_new)/(c+1)`. Exactly the weighted normal
+    /// equations of the unfolded stream; allocation-free once warm.
+    fn apply_folds(&mut self, folds: &[(usize, usize)], _x_new: &Mat, y_new: &Mat) -> Result<()> {
+        if folds.is_empty() {
+            return Ok(());
+        }
+        let n = self.y.rows();
+        let d = self.y.cols();
+        for &(i, br) in folds {
+            ensure_shape!(
+                i < n && br < y_new.rows(),
+                "EmpiricalKrr::apply_folds",
+                "fold ({i}, {br}) out of range (n = {n}, batch = {})",
+                y_new.rows()
+            );
+            ensure_shape!(
+                y_new.cols() == d,
+                "EmpiricalKrr::apply_folds",
+                "y_new has {} cols, engine carries D = {d}",
+                y_new.cols()
+            );
+            let c = self.mult[i];
+            let delta = self.rho / (c + 1.0) - self.rho / c;
+            self.work.fold_col.clear();
+            self.work.fold_col.extend_from_slice(self.q_inv.row(i));
+            let denom = 1.0 + delta * self.work.fold_col[i];
+            if denom <= 1e-14 {
+                return Err(Error::numerical(
+                    "apply_folds",
+                    format!("Sherman-Morrison denominator {denom:.3e}"),
+                ));
+            }
+            let coef = delta / denom;
+            ger(&mut self.q_inv, -coef, &self.work.fold_col, &self.work.fold_col)?;
+            for dc in 0..d {
+                self.y[(i, dc)] = (c * self.y[(i, dc)] + y_new[(br, dc)]) / (c + 1.0);
+            }
+            self.mult[i] = c + 1.0;
+        }
+        self.refresh_head()
     }
 
     fn mode(&self) -> &'static str {
@@ -427,5 +613,48 @@ mod tests {
         assert!(m
             .inc_dec(&Mat::zeros(0, 3), &[], &(0..6).collect::<Vec<_>>())
             .is_err());
+    }
+
+    #[test]
+    fn multi_output_columns_match_independent_engines() {
+        let (x, y0) = data(30, 4, 11);
+        let (_, y1) = data(30, 4, 12);
+        let kernel = Kernel::rbf_radius(2.0);
+        let ym = Mat::from_fn(30, 2, |r, c| if c == 0 { y0[r] } else { y1[r] });
+        let multi = EmpiricalKrr::fit_multi(&x, &ym, &kernel, 0.5).unwrap();
+        let e0 = EmpiricalKrr::fit(&x, &y0, &kernel, 0.5).unwrap();
+        let e1 = EmpiricalKrr::fit(&x, &y1, &kernel, 0.5).unwrap();
+        let (xt, _) = data(9, 4, 13);
+        let pm = multi.predict_multi(&xt).unwrap();
+        let p0 = e0.predict(&xt).unwrap();
+        let p1 = e1.predict(&xt).unwrap();
+        for r in 0..9 {
+            assert_close(pm[(r, 0)], p0[r], 1e-10);
+            assert_close(pm[(r, 1)], p1[r], 1e-10);
+        }
+    }
+
+    #[test]
+    fn fold_equals_unfolded_duplicate_insert() {
+        let (x, y) = data(20, 4, 14);
+        let kernel = Kernel::rbf_radius(2.0);
+        let mut folded = EmpiricalKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        // fold two repeats of stored row 3 (fresh targets) into the store
+        let xdup = Mat::from_fn(2, 4, |_, c| x[(3, c)]);
+        let ydup = Mat::from_vec(2, 1, vec![0.7, -0.4]).unwrap();
+        folded.apply_folds(&[(3, 0), (3, 1)], &xdup, &ydup).unwrap();
+        assert_eq!(folded.n_samples(), 20, "folding must not grow N");
+        assert!((folded.multiplicities()[3] - 3.0).abs() < 1e-12);
+
+        // unfolded reference: the duplicates inserted as literal rows
+        let x_ref = x.vcat(&xdup).unwrap();
+        let mut y_ref = y.clone();
+        y_ref.extend_from_slice(&[0.7, -0.4]);
+        let unfolded = EmpiricalKrr::fit(&x_ref, &y_ref, &kernel, 0.5).unwrap();
+        let (xt, _) = data(8, 4, 15);
+        let pf = folded.predict(&xt).unwrap();
+        let pu = unfolded.predict(&xt).unwrap();
+        assert_vec_close(&pf, &pu, 1e-10);
+        assert_close(folded.bias(), unfolded.bias(), 1e-10);
     }
 }

@@ -5,11 +5,15 @@
 //!
 //! Same math as [`super::empirical`] (eq. 18–30) — the maintained `Q^-1`,
 //! bordered grow/shrink, and head refresh are shared through
-//! [`crate::linalg::woodbury`]; only the kernel evaluations differ.
+//! [`crate::linalg::woodbury`]; only the kernel evaluations differ. Like
+//! the dense engines, the coefficient path carries `D` target columns
+//! behind the ONE maintained inverse: `fit_multi` solves all `D`
+//! right-hand sides from one factorization, and the slice-based methods
+//! are thin `D = 1` shims.
 
 use crate::error::{Error, Result};
 use crate::kernels::Kernel;
-use crate::linalg::gemm::gemv;
+use crate::linalg::gemm::matmul_into;
 use crate::linalg::matrix::dot;
 use crate::linalg::solve::spd_inverse;
 use crate::linalg::sparse::SparseMat;
@@ -23,25 +27,38 @@ pub struct SparseEmpiricalKrr {
     rho: f64,
     /// Sparse training samples, engine order.
     x: SparseMat,
-    y: Vec<f64>,
-    /// Maintained (K + rho I)^-1.
+    /// Targets, (N, D).
+    y: Mat,
+    /// Maintained (K + rho I)^-1 — shared by all D output columns.
     q_inv: Mat,
-    a: Vec<f64>,
-    b: f64,
+    /// Dual coefficients, one column per output (N, D).
+    a: Mat,
+    /// Per-output bias (D,).
+    b: Vec<f64>,
 }
 
 impl SparseEmpiricalKrr {
-    /// Fit from scratch: O(N^2 nnz/row + N^3).
+    /// Fit from scratch: O(N^2 nnz/row + N^3), `D = 1`.
     pub fn fit(x: &SparseMat, y: &[f64], kernel: &Kernel, rho: f64) -> Result<Self> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::fit_multi(x, &ym, kernel, rho)
+    }
+
+    /// Fit with a `(N, D)` target matrix: one factorization, `D`
+    /// right-hand sides.
+    pub fn fit_multi(x: &SparseMat, y: &Mat, kernel: &Kernel, rho: f64) -> Result<Self> {
         ensure_shape!(
-            x.rows() == y.len(),
+            x.rows() == y.rows(),
             "SparseEmpiricalKrr::fit",
             "x has {} rows, y has {}",
             x.rows(),
-            y.len()
+            y.rows()
         );
         if rho <= 0.0 {
             return Err(Error::Config("ridge rho must be > 0".into()));
+        }
+        if y.cols() == 0 {
+            return Err(Error::Config("target matrix needs >= 1 column".into()));
         }
         let mut q = x.gram(x, kernel)?;
         q.symmetrize();
@@ -51,67 +68,110 @@ impl SparseEmpiricalKrr {
             kernel: kernel.clone(),
             rho,
             x: x.clone(),
-            y: y.to_vec(),
+            y: y.clone(),
             q_inv,
-            a: vec![0.0; y.len()],
-            b: 0.0,
+            a: Mat::zeros(y.rows(), y.cols()),
+            b: vec![0.0; y.cols()],
         };
         model.refresh_head()?;
         Ok(model)
     }
 
+    /// Head refresh over all D columns: eq. 21-22 with the shared
+    /// `v = Q^-1 e`.
     fn refresh_head(&mut self) -> Result<()> {
         let v = self.q_inv.row_sums();
         let ev: f64 = v.iter().sum();
         if ev.abs() < 1e-14 {
             return Err(Error::numerical("refresh_head", format!("e Q^-1 e = {ev:.3e}")));
         }
-        self.b = dot(&self.y, &v) / ev;
-        let qy = gemv(&self.q_inv, &self.y)?;
-        self.a = qy.iter().zip(&v).map(|(q, vi)| q - self.b * vi).collect();
+        let d = self.y.cols();
+        for bd in self.b.iter_mut() {
+            *bd = 0.0;
+        }
+        for (i, &vi) in v.iter().enumerate() {
+            for (bd, &yv) in self.b.iter_mut().zip(self.y.row(i)) {
+                *bd += vi * yv;
+            }
+        }
+        for bd in self.b.iter_mut() {
+            *bd /= ev;
+        }
+        let mut qy = Mat::default();
+        matmul_into(&self.q_inv, &self.y, &mut qy)?; // (N, D)
+        self.a.resize_scratch(self.y.rows(), d);
+        for (i, &vi) in v.iter().enumerate() {
+            for dc in 0..d {
+                self.a[(i, dc)] = qy[(i, dc)] - self.b[dc] * vi;
+            }
+        }
         Ok(())
     }
 
-    /// One batched +|C|/−|R| round (eq. 30 ordering: shrink then grow).
+    /// One batched +|C|/−|R| round (eq. 30 ordering: shrink then grow),
+    /// `D = 1`.
     pub fn inc_dec(
         &mut self,
         x_new: &SparseMat,
         y_new: &[f64],
         remove_idx: &[usize],
     ) -> Result<()> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "inc_dec is the D=1 surface; use inc_dec_multi".into(),
+            ));
+        }
+        let ym = Mat::from_vec(y_new.len(), 1, y_new.to_vec())?;
+        self.inc_dec_multi(x_new, &ym, remove_idx)
+    }
+
+    /// One batched +|C|/−|R| round over all `D` output columns.
+    pub fn inc_dec_multi(
+        &mut self,
+        x_new: &SparseMat,
+        y_new: &Mat,
+        remove_idx: &[usize],
+    ) -> Result<()> {
         ensure_shape!(
-            x_new.rows() == y_new.len() && x_new.cols() == self.x.cols(),
+            x_new.rows() == y_new.rows() && x_new.cols() == self.x.cols(),
             "SparseEmpiricalKrr::inc_dec",
-            "x_new {}x{}, y_new {}",
+            "x_new {}x{}, y_new {} rows",
             x_new.rows(),
             x_new.cols(),
-            y_new.len()
+            y_new.rows()
         );
+        if x_new.rows() > 0 {
+            ensure_shape!(
+                y_new.cols() == self.y.cols(),
+                "SparseEmpiricalKrr::inc_dec",
+                "y_new has {} cols, engine carries D = {}",
+                y_new.cols(),
+                self.y.cols()
+            );
+        }
         let mut rem: Vec<usize> = remove_idx.to_vec();
         rem.sort_unstable();
         rem.dedup();
         if let Some(&mx) = rem.last() {
-            if mx >= self.y.len() {
+            if mx >= self.y.rows() {
                 return Err(Error::InvalidUpdate(format!(
                     "remove index {mx} >= n {}",
-                    self.y.len()
+                    self.y.rows()
                 )));
             }
         }
         if x_new.rows() + rem.len() == 0 {
             return Ok(());
         }
-        if self.y.len() + x_new.rows() <= rem.len() {
+        if self.y.rows() + x_new.rows() <= rem.len() {
             return Err(Error::InvalidUpdate("update would empty the training set".into()));
         }
         // shrink
         if !rem.is_empty() {
             self.q_inv = bordered_shrink(&self.q_inv, &rem)?;
-            let keep: Vec<usize> = (0..self.y.len()).filter(|i| !rem.contains(i)).collect();
+            let keep: Vec<usize> = (0..self.y.rows()).filter(|i| !rem.contains(i)).collect();
             self.x = select_sparse_rows(&self.x, &keep)?;
-            for (i, &ri) in rem.iter().enumerate() {
-                self.y.remove(ri - i);
-            }
+            self.y.drop_rows_sorted(&rem)?;
         }
         // grow
         if x_new.rows() > 0 {
@@ -121,34 +181,67 @@ impl SparseEmpiricalKrr {
             q_cc.add_diag(self.rho)?;
             self.q_inv = bordered_grow(&self.q_inv, &eta, &q_cc)?;
             self.x = vcat_sparse(&self.x, x_new)?;
-            self.y.extend_from_slice(y_new);
+            self.y.push_rows(y_new)?;
         }
         self.refresh_head()
     }
 
-    /// Predict for sparse query rows.
+    /// Predict for sparse query rows, `D = 1`.
     pub fn predict(&self, x: &SparseMat) -> Result<Vec<f64>> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "predict is the D=1 surface; use predict_multi".into(),
+            ));
+        }
+        let out = self.predict_multi(x)?;
+        Ok(out.as_slice().to_vec())
+    }
+
+    /// Predict all D output columns for sparse query rows: ONE packed
+    /// `(B, N)·(N, D)` GEMM instead of D GEMVs.
+    pub fn predict_multi(&self, x: &SparseMat) -> Result<Mat> {
         let k_star = x.gram(&self.x, &self.kernel)?; // (B, N)
-        let mut out = gemv(&k_star, &self.a)?;
-        for v in &mut out {
-            *v += self.b;
+        let mut out = Mat::default();
+        matmul_into(&k_star, &self.a, &mut out)?;
+        let d = self.y.cols();
+        for row in out.as_mut_slice().chunks_exact_mut(d) {
+            for (v, &bd) in row.iter_mut().zip(&self.b) {
+                *v += bd;
+            }
         }
         Ok(out)
     }
 
-    /// Dual weights.
+    /// Dual weights (`D = 1` view).
     pub fn dual_weights(&self) -> &[f64] {
+        debug_assert_eq!(self.y.cols(), 1, "dual_weights is the D=1 view");
+        self.a.as_slice()
+    }
+
+    /// Dual weight matrix, (N, D).
+    pub fn dual_weights_multi(&self) -> &Mat {
         &self.a
     }
 
-    /// Bias.
+    /// Bias (`D = 1` view).
     pub fn bias(&self) -> f64 {
-        self.b
+        debug_assert_eq!(self.y.cols(), 1, "bias is the D=1 view");
+        self.b[0]
+    }
+
+    /// Per-output biases (D,).
+    pub fn bias_multi(&self) -> &[f64] {
+        &self.b
     }
 
     /// Training-set size.
     pub fn n_samples(&self) -> usize {
-        self.y.len()
+        self.y.rows()
+    }
+
+    /// Number of target columns D.
+    pub fn n_outputs(&self) -> usize {
+        self.y.cols()
     }
 }
 
@@ -224,5 +317,27 @@ mod tests {
         assert_eq!(model.n_samples(), 122);
         let p = model.predict(&xs).unwrap();
         assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn multi_output_columns_match_independent_engines() {
+        let (xs, y0) = drt_like_sparse(25, 300, 0.08, 7);
+        let (_, y1) = drt_like_sparse(25, 300, 0.08, 8);
+        let ym = Mat::from_fn(25, 2, |r, c| if c == 0 { y0[r] } else { y1[r] });
+        let kernel = Kernel::poly(2, 1.0);
+        let multi = SparseEmpiricalKrr::fit_multi(&xs, &ym, &kernel, 0.5).unwrap();
+        let e0 = SparseEmpiricalKrr::fit(&xs, &y0, &kernel, 0.5).unwrap();
+        let e1 = SparseEmpiricalKrr::fit(&xs, &y1, &kernel, 0.5).unwrap();
+        let (xt, _) = drt_like_sparse(5, 300, 0.08, 9);
+        let pm = multi.predict_multi(&xt).unwrap();
+        let p0 = e0.predict(&xt).unwrap();
+        let p1 = e1.predict(&xt).unwrap();
+        for r in 0..5 {
+            assert!((pm[(r, 0)] - p0[r]).abs() < 1e-10);
+            assert!((pm[(r, 1)] - p1[r]).abs() < 1e-10);
+        }
+        assert_eq!(multi.n_outputs(), 2);
+        assert!((multi.bias_multi()[0] - e0.bias()).abs() < 1e-10);
+        assert!((multi.bias_multi()[1] - e1.bias()).abs() < 1e-10);
     }
 }

@@ -1,0 +1,154 @@
+//! Duplicate-input fold planning: decide which incoming rows are
+//! (ε-near) repeats of rows the store already holds, so the engines can
+//! fold them into a multiplicity-weighted existing row instead of growing
+//! J — the incremental-GP idiom for hot-sensor traffic.
+//!
+//! The plan is computed once per round at the coordinator level so the
+//! KRR engine and its KBR twin apply the *same* fold decision; the
+//! engines then consume it through their `apply_folds` entry points.
+//! Planning is a dense scan (O(B·N·m)) against the pre-update store, and
+//! the plan's target indices are expressed in **post-update** coordinates
+//! (after the round's removals and insertions) so `apply_folds` can index
+//! the store directly.
+
+use crate::linalg::Mat;
+
+/// One round's fold decision, split into rows that enter the store fresh
+/// and rows that fold into an existing (or just-inserted) row.
+///
+/// Both vectors are reusable scratch: `plan_folds_into` clears them and
+/// refills without reallocating once warm.
+#[derive(Clone, Debug, Default)]
+pub struct FoldPlan {
+    /// Batch-row indices (into the incoming batch) inserted as new rows,
+    /// in batch order.
+    pub fresh: Vec<usize>,
+    /// `(store_index, batch_row)` pairs: `batch_row` folds into the row at
+    /// `store_index`, where `store_index` is the row's position *after*
+    /// this round's removals and fresh insertions have been applied.
+    pub folds: Vec<(usize, usize)>,
+}
+
+impl FoldPlan {
+    /// True when every incoming row enters fresh (folding is a no-op and
+    /// the round can take the plain `inc_dec` path).
+    pub fn is_trivial(&self) -> bool {
+        self.folds.is_empty()
+    }
+}
+
+/// Squared Euclidean distance between two equal-length rows.
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (&ai, &bi) in a.iter().zip(b) {
+        let d = ai - bi;
+        s += d * d;
+    }
+    s
+}
+
+/// Plan this round's folds.
+///
+/// * `x_store` — the engine's current (pre-update) training rows.
+/// * `rem` — sorted, deduplicated indices being removed this round; a
+///   removed row can never be a fold target.
+/// * `x_new` — the incoming batch.
+/// * `eps` — fold radius: a batch row within `eps` (Euclidean) of a
+///   surviving stored row (or of an earlier fresh row from the same
+///   batch) folds instead of inserting. `eps = 0.0` folds exact repeats
+///   only.
+///
+/// Matching is first-hit: stored rows are scanned in index order, then
+/// earlier fresh rows of the same batch. Fold targets are reported in
+/// post-update coordinates: a surviving stored row `i` lands at
+/// `i - |{r in rem : r < i}|`, and fresh row `k` of the batch lands at
+/// `(n - |rem|) + k`.
+pub fn plan_folds_into(
+    plan: &mut FoldPlan,
+    x_store: &Mat,
+    rem: &[usize],
+    x_new: &Mat,
+    eps: f64,
+) {
+    plan.fresh.clear();
+    plan.folds.clear();
+    let n = x_store.rows();
+    let survivors_base = n - rem.len();
+    let eps2 = eps * eps;
+    'rows: for b in 0..x_new.rows() {
+        let row = x_new.row(b);
+        for i in 0..n {
+            if rem.binary_search(&i).is_ok() {
+                continue;
+            }
+            if dist2(row, x_store.row(i)) <= eps2 {
+                let post = i - rem.partition_point(|&r| r < i);
+                plan.folds.push((post, b));
+                continue 'rows;
+            }
+        }
+        // within-batch repeats: match against already-accepted fresh rows
+        for (k, &fb) in plan.fresh.iter().enumerate() {
+            if dist2(row, x_new.row(fb)) <= eps2 {
+                plan.folds.push((survivors_base + k, b));
+                continue 'rows;
+            }
+        }
+        plan.fresh.push(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: &[&[f64]]) -> Mat {
+        let m = rows[0].len();
+        Mat::from_fn(rows.len(), m, |r, c| rows[r][c])
+    }
+
+    #[test]
+    fn exact_repeat_folds_into_store() {
+        let store = mat(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let batch = mat(&[&[3.0, 4.0], &[9.0, 9.0]]);
+        let mut plan = FoldPlan::default();
+        plan_folds_into(&mut plan, &store, &[], &batch, 0.0);
+        assert_eq!(plan.folds, vec![(1, 0)]);
+        assert_eq!(plan.fresh, vec![1]);
+    }
+
+    #[test]
+    fn removed_rows_are_not_targets_and_indices_shift() {
+        let store = mat(&[&[1.0, 0.0], &[2.0, 0.0], &[3.0, 0.0], &[4.0, 0.0]]);
+        // remove rows 0 and 2; batch row 0 repeats stored row 3 which
+        // lands at post-update index 3 - 2 = 1
+        let batch = mat(&[&[4.0, 0.0], &[2.0, 0.0]]);
+        let mut plan = FoldPlan::default();
+        plan_folds_into(&mut plan, &store, &[0, 2], &batch, 0.0);
+        assert_eq!(plan.folds, vec![(1, 0), (0, 1)]);
+        assert!(plan.fresh.is_empty());
+    }
+
+    #[test]
+    fn within_batch_repeat_folds_into_fresh_row() {
+        let store = mat(&[&[1.0, 0.0]]);
+        let batch = mat(&[&[7.0, 7.0], &[7.0, 7.0]]);
+        let mut plan = FoldPlan::default();
+        plan_folds_into(&mut plan, &store, &[], &batch, 0.0);
+        // fresh row 0 lands at (1 - 0) + 0 = 1; batch row 1 folds there
+        assert_eq!(plan.fresh, vec![0]);
+        assert_eq!(plan.folds, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn eps_near_rows_fold_exact_only_at_zero() {
+        let store = mat(&[&[1.0, 1.0]]);
+        let batch = mat(&[&[1.0, 1.0 + 1e-7]]);
+        let mut plan = FoldPlan::default();
+        plan_folds_into(&mut plan, &store, &[], &batch, 0.0);
+        assert!(plan.folds.is_empty(), "not an exact repeat");
+        plan_folds_into(&mut plan, &store, &[], &batch, 1e-6);
+        assert_eq!(plan.folds, vec![(0, 0)]);
+    }
+}

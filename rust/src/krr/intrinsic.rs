@@ -2,23 +2,30 @@
 //!
 //! Maintains the inverse regularized scatter matrix `S^-1` (J x J), the
 //! mapped feature store `Φ` (N x J, row per sample — needed to build the
-//! decremental columns), and the running sums that recover the `(u, b)`
-//! head from the bordered system of eq. (5) in O(J^2):
+//! decremental columns), and the running sums that recover the `(U, b)`
+//! head from the bordered system of eq. (5) in O(J^2 D):
 //!
 //! ```text
-//! psum = Φ^T e   (J,)      py = Φ^T y   (J,)      sy = e.y      n = N
-//! b = (sy − psum.S^-1 py) / (n − psum.S^-1 psum)
-//! u = S^-1 (py − psum b)
+//! psum = Φ^T C e  (J,)     PY = Φ^T C Ȳ  (J, D)     sy = e.C ȳ_d  (D,)
+//! w = Σ c_i
+//! b_d = (sy_d − psum.S^-1 PY_d) / (w − psum.S^-1 psum)
+//! U_d = S^-1 (PY_d − psum b_d)
 //! ```
 //!
-//! A `+|C|/−|R|` round is ONE rank-(|C|+|R|) Woodbury update (eq. 15) plus
+//! `C = diag(c_i)` carries duplicate-fold multiplicities (all 1 until a
+//! fold; then `S = Φ^T C Φ + ρI`, identical to the unfolded stream's
+//! scatter).  All `D` target columns share the ONE maintained inverse:
+//! fits pay one factorization plus `D` right-hand sides, and a
+//! `+|C|/−|R|` round is ONE rank-(|C|+|R|) Woodbury update (eq. 15) plus
 //! one head refresh — the "multiple incremental" strategy whose cost the
 //! paper's evaluation compares against single-instance updates and full
-//! retraining.
+//! retraining.  A weighted row is removed by scaling its update column
+//! with `√c_i` (the rank-1 term it contributed to the scatter), and a
+//! fold is a rank-1 *increment* with the unscaled stored row.
 
 use crate::error::{Error, Result};
 use crate::kernels::{Kernel, MonomialTable};
-use crate::linalg::gemm::{gemv, gemv_into};
+use crate::linalg::gemm::{gemm_tn_acc, gemv, gemv_into, ger, matmul_into};
 use crate::linalg::matrix::dot;
 use crate::linalg::solve::spd_inverse;
 use crate::linalg::woodbury::{incdec_into, IncDecWork};
@@ -42,8 +49,10 @@ struct IntrinsicWork {
     incdec: IncDecWork,
     /// Head refresh: S^-1 psum.
     sp: Vec<f64>,
-    /// Head refresh: S^-1 py.
-    spy: Vec<f64>,
+    /// Head refresh: S^-1 PY, (J, D).
+    spy: Mat,
+    /// D=1 shim scratch: `y_new` as a (B, 1) column.
+    y_shim: Mat,
 }
 
 /// Caller-owned workspace for [`IntrinsicKrr::predict_into`]: the mapped
@@ -61,38 +70,52 @@ pub struct IntrinsicKrr {
     kernel: Kernel,
     table: MonomialTable,
     rho: f64,
-    /// Maintained (Φ Φ^T + ρI)^-1, (J, J).
+    /// Maintained (Φ^T C Φ + ρI)^-1, (J, J).
     s_inv: Mat,
     /// Mapped training features, one row per sample (N, J).
     phi: Mat,
-    /// Training targets.
-    y: Vec<f64>,
-    /// Φ^T e (J,).
+    /// Training targets, multiplicity-averaged, (N, D).
+    y: Mat,
+    /// Per-row duplicate multiplicities c_i (all 1.0 until a fold).
+    mult: Vec<f64>,
+    /// Total observation weight Σ c_i (= unfolded sample count).
+    w_total: f64,
+    /// Φ^T C e (J,).
     psum: Vec<f64>,
-    /// Φ^T y (J,).
-    py: Vec<f64>,
-    /// e.y
-    sy: f64,
-    /// Weight vector u (J,).
-    u: Vec<f64>,
-    /// Bias b.
-    b: f64,
+    /// Φ^T C Ȳ (J, D).
+    py: Mat,
+    /// e.C ȳ per output (D,).
+    sy: Vec<f64>,
+    /// Weight matrix U (J, D) — one column per output.
+    u: Mat,
+    /// Per-output bias (D,).
+    b: Vec<f64>,
     work: IntrinsicWork,
 }
 
 impl IntrinsicKrr {
-    /// Fit from scratch: O(N J^2 + J^3).  This is also what the
+    /// Fit from scratch: O(N J^2 + J^3), `D = 1`.  This is also what the
     /// nonincremental baseline pays every round.
     pub fn fit(x: &Mat, y: &[f64], kernel: &Kernel, rho: f64) -> Result<Self> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::fit_multi(x, &ym, kernel, rho)
+    }
+
+    /// Fit from scratch with a `(N, D)` target matrix: one factorization,
+    /// `D` right-hand sides.
+    pub fn fit_multi(x: &Mat, y: &Mat, kernel: &Kernel, rho: f64) -> Result<Self> {
         ensure_shape!(
-            x.rows() == y.len(),
+            x.rows() == y.rows(),
             "IntrinsicKrr::fit",
             "x has {} rows, y has {}",
             x.rows(),
-            y.len()
+            y.rows()
         );
         if rho <= 0.0 {
             return Err(Error::Config("ridge rho must be > 0".into()));
+        }
+        if y.cols() == 0 {
+            return Err(Error::Config("target matrix needs >= 1 column".into()));
         }
         let table = kernel.feature_table(x.cols()).ok_or_else(|| {
             Error::Config(format!(
@@ -102,6 +125,7 @@ impl IntrinsicKrr {
         })?;
         let phi = table.map(x); // (N, J)
         let j = table.j();
+        let d = y.cols();
         // S = Φ^T Φ + ρI — transpose-side SYRK straight off the row-major
         // store (half the flops of the general product, no materialized
         // Φ^T: the packed engine reads Φ transpose-aware above the
@@ -112,47 +136,59 @@ impl IntrinsicKrr {
         s.add_diag(rho)?;
         let s_inv = spd_inverse(&s)?;
         let psum = phi.col_sums();
-        let py = {
-            let mut v = vec![0.0; j];
-            for (r, &yr) in y.iter().enumerate() {
-                crate::linalg::matrix::axpy_slice(yr, phi.row(r), &mut v);
-            }
-            v
-        };
-        let sy = y.iter().sum();
+        // PY = Φ^T Y: all D right-hand sides in one TN product
+        let mut py = Mat::zeros(j, d);
+        gemm_tn_acc(1.0, &phi, y, &mut py)?;
+        let sy = y.col_sums();
         let mut model = Self {
             kernel: kernel.clone(),
             table,
             rho,
             s_inv,
             phi,
-            y: y.to_vec(),
+            y: y.clone(),
+            mult: vec![1.0; y.rows()],
+            w_total: y.rows() as f64,
             psum,
             py,
             sy,
-            u: vec![0.0; j],
-            b: 0.0,
+            u: Mat::zeros(j, d),
+            b: vec![0.0; d],
             work: IntrinsicWork::default(),
         };
         model.refresh_head()?;
         Ok(model)
     }
 
-    /// Recover (u, b) from the maintained state — O(J^2), allocation-free
-    /// with a warm workspace.
+    /// Recover (U, b) from the maintained state — O(J^2 D),
+    /// allocation-free with a warm workspace.
     fn refresh_head(&mut self) -> Result<()> {
-        let n = self.y.len() as f64;
+        let d = self.y.cols();
         gemv_into(&self.s_inv, &self.psum, &mut self.work.sp)?; // S^-1 psum
-        let denom = n - dot(&self.psum, &self.work.sp);
+        let denom = self.w_total - dot(&self.psum, &self.work.sp);
         if denom.abs() < 1e-12 {
             return Err(Error::numerical("refresh_head", format!("denom {denom:.3e}")));
         }
-        self.b = (self.sy - dot(&self.work.sp, &self.py)) / denom;
-        gemv_into(&self.s_inv, &self.py, &mut self.work.spy)?;
-        let b = self.b;
-        self.u.clear();
-        self.u
-            .extend(self.work.spy.iter().zip(&self.work.sp).map(|(a, s)| a - s * b));
+        // b_d = (sy_d − sp.PY_d) / denom, accumulated column-wise
+        self.b.clear();
+        self.b.resize(d, 0.0);
+        for (jj, &spj) in self.work.sp.iter().enumerate() {
+            for (bd, &pyv) in self.b.iter_mut().zip(self.py.row(jj)) {
+                *bd += spj * pyv;
+            }
+        }
+        for (bd, &syd) in self.b.iter_mut().zip(&self.sy) {
+            *bd = (syd - *bd) / denom;
+        }
+        matmul_into(&self.s_inv, &self.py, &mut self.work.spy)?; // (J, D)
+        let j = self.work.sp.len();
+        self.u.resize_scratch(j, d);
+        for jj in 0..j {
+            let spj = self.work.sp[jj];
+            for dc in 0..d {
+                self.u[(jj, dc)] = self.work.spy[(jj, dc)] - spj * self.b[dc];
+            }
+        }
         Ok(())
     }
 
@@ -166,14 +202,25 @@ impl IntrinsicKrr {
         self.table.j()
     }
 
-    /// Weight vector (J,).
+    /// Weight vector (J,) (`D = 1` view; see [`Self::weights_multi`]).
     pub fn weights(&self) -> &[f64] {
+        debug_assert_eq!(self.y.cols(), 1, "weights is the D=1 view");
+        self.u.as_slice()
+    }
+
+    /// Weight matrix, (J, D).
+    pub fn weights_multi(&self) -> &Mat {
         &self.u
     }
 
-    /// Bias.
+    /// Bias (`D = 1` view).
     pub fn bias(&self) -> f64 {
-        self.b
+        self.b[0]
+    }
+
+    /// Per-output biases (D,).
+    pub fn bias_multi(&self) -> &[f64] {
+        &self.b
     }
 
     /// Kernel in use.
@@ -186,9 +233,20 @@ impl IntrinsicKrr {
         &self.s_inv
     }
 
-    /// Training targets.
-    pub fn targets(&self) -> &[f64] {
+    /// Training targets, multiplicity-averaged, (N, D).
+    pub fn targets_multi(&self) -> &Mat {
         &self.y
+    }
+
+    /// Training targets (`D = 1` view).
+    pub fn targets(&self) -> &[f64] {
+        debug_assert_eq!(self.y.cols(), 1, "targets is the D=1 view");
+        self.y.as_slice()
+    }
+
+    /// Per-row duplicate multiplicities (all 1.0 unless folds happened).
+    pub fn multiplicities(&self) -> &[f64] {
+        &self.mult
     }
 
     /// Single-sample incremental update (paper eq. 11) — used by the
@@ -207,13 +265,18 @@ impl IntrinsicKrr {
     /// the mapped query block from `work` — allocation-free once warm (the
     /// serving layer's micro-batch loop runs on this). One round is ONE
     /// feature map over the batch plus one GEMV, instead of B per-request
-    /// map + dot passes.
+    /// map + dot passes. `D = 1` only.
     pub fn predict_into(
         &self,
         x: &Mat,
         out: &mut Vec<f64>,
         work: &mut IntrinsicPredictWork,
     ) -> Result<()> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "predict_into is the D=1 surface; use predict_multi_into".into(),
+            ));
+        }
         ensure_shape!(
             x.cols() == self.table.m,
             "IntrinsicKrr::predict",
@@ -222,9 +285,36 @@ impl IntrinsicKrr {
             self.table.m
         );
         self.table.map_into_mat(x, &mut work.phi_star); // (B, J)
-        gemv_into(&work.phi_star, &self.u, out)?;
+        gemv_into(&work.phi_star, self.u.as_slice(), out)?;
         for v in out.iter_mut() {
-            *v += self.b;
+            *v += self.b[0];
+        }
+        Ok(())
+    }
+
+    /// Multi-output batched prediction: `out` becomes `(B, D)`. The weight
+    /// application is ONE packed `(B, J)·(J, D)` GEMM over all outputs —
+    /// allocation-free once `out`/`work` are warm.
+    pub fn predict_multi_into(
+        &self,
+        x: &Mat,
+        out: &mut Mat,
+        work: &mut IntrinsicPredictWork,
+    ) -> Result<()> {
+        ensure_shape!(
+            x.cols() == self.table.m,
+            "IntrinsicKrr::predict_multi",
+            "x has {} cols, expected {}",
+            x.cols(),
+            self.table.m
+        );
+        self.table.map_into_mat(x, &mut work.phi_star); // (B, J)
+        matmul_into(&work.phi_star, &self.u, out)?; // (B, D)
+        let d = self.b.len();
+        for row in out.as_mut_slice().chunks_exact_mut(d) {
+            for (v, &bd) in row.iter_mut().zip(&self.b) {
+                *v += bd;
+            }
         }
         Ok(())
     }
@@ -237,27 +327,52 @@ impl KrrModel for IntrinsicKrr {
         Ok(out)
     }
 
-    /// One batched `+|C|/−|R|` round. Steady state performs zero heap
+    fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "inc_dec is the D=1 surface; use inc_dec_multi".into(),
+            ));
+        }
+        let mut shim = std::mem::take(&mut self.work.y_shim);
+        shim.resize_scratch(y_new.len(), 1);
+        shim.as_mut_slice().copy_from_slice(y_new);
+        let out = self.inc_dec_multi(x_new, &shim, remove_idx);
+        self.work.y_shim = shim;
+        out
+    }
+
+    /// One batched `+|C|/−|R|` round, all `D` coefficient columns riding
+    /// the one Woodbury update. Steady state performs zero heap
     /// allocations: Φ_C/Φ_H/signs live in the per-model workspace, the
     /// Woodbury update is in place, and the stores shrink and grow inside
-    /// their reserved capacity.
-    fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()> {
+    /// their reserved capacity. A multiplicity-`c` row leaves through a
+    /// `√c`-scaled update column (the rank-1 scatter term it contributed).
+    fn inc_dec_multi(&mut self, x_new: &Mat, y_new: &Mat, remove_idx: &[usize]) -> Result<()> {
         ensure_shape!(
-            x_new.rows() == y_new.len(),
+            x_new.rows() == y_new.rows(),
             "IntrinsicKrr::inc_dec",
             "x_new {} rows, y_new {}",
             x_new.rows(),
-            y_new.len()
+            y_new.rows()
         );
+        if x_new.rows() > 0 {
+            ensure_shape!(
+                y_new.cols() == self.y.cols(),
+                "IntrinsicKrr::inc_dec",
+                "y_new has {} cols, engine carries D = {}",
+                y_new.cols(),
+                self.y.cols()
+            );
+        }
         self.work.rem.clear();
         self.work.rem.extend_from_slice(remove_idx);
         self.work.rem.sort_unstable();
         self.work.rem.dedup();
         if let Some(&mx) = self.work.rem.last() {
-            if mx >= self.y.len() {
+            if mx >= self.y.rows() {
                 return Err(Error::InvalidUpdate(format!(
                     "remove index {mx} >= n {}",
-                    self.y.len()
+                    self.y.rows()
                 )));
             }
         }
@@ -266,13 +381,15 @@ impl KrrModel for IntrinsicKrr {
         if c + r == 0 {
             return Ok(());
         }
-        if self.y.len() + c <= r {
+        if self.y.rows() + c <= r {
             return Err(Error::InvalidUpdate(
                 "update would leave an empty training set".into(),
             ));
         }
         let j = self.table.j();
         // build Φ_H: (J, C + R) — new mapped rows then removed stored rows
+        // (each removal column scaled by √c_i so ONE ±1-signed rank-1 term
+        // removes the row's whole multiplicity-weighted scatter share)
         self.table.map_into_mat(x_new, &mut self.work.phi_c); // (C, J)
         self.work.phi_h.resize_scratch(j, c + r);
         for row in 0..c {
@@ -282,8 +399,9 @@ impl KrrModel for IntrinsicKrr {
         }
         for col in 0..r {
             let ri = self.work.rem[col];
+            let w = self.mult[ri].sqrt();
             for jj in 0..j {
-                self.work.phi_h[(jj, c + col)] = self.phi[(ri, jj)];
+                self.work.phi_h[(jj, c + col)] = w * self.phi[(ri, jj)];
             }
         }
         self.work.signs.clear();
@@ -296,45 +414,131 @@ impl KrrModel for IntrinsicKrr {
             &self.work.signs,
             &mut self.work.incdec,
         )?;
-        // maintain the sums
+        // maintain the sums (before the store edits below invalidate rows)
         for row in 0..c {
             crate::linalg::matrix::axpy_slice(1.0, self.work.phi_c.row(row), &mut self.psum);
-            crate::linalg::matrix::axpy_slice(
-                y_new[row],
-                self.work.phi_c.row(row),
-                &mut self.py,
-            );
+            ger(&mut self.py, 1.0, self.work.phi_c.row(row), y_new.row(row))?;
+            for (s, &yv) in self.sy.iter_mut().zip(y_new.row(row)) {
+                *s += yv;
+            }
         }
         for &ri in &self.work.rem {
-            crate::linalg::matrix::axpy_slice(-1.0, self.phi.row(ri), &mut self.psum);
-            crate::linalg::matrix::axpy_slice(-self.y[ri], self.phi.row(ri), &mut self.py);
+            let ci = self.mult[ri];
+            crate::linalg::matrix::axpy_slice(-ci, self.phi.row(ri), &mut self.psum);
+            ger(&mut self.py, -ci, self.phi.row(ri), self.y.row(ri))?;
+            for (s, &yv) in self.sy.iter_mut().zip(self.y.row(ri)) {
+                *s -= ci * yv;
+            }
         }
-        self.sy += y_new.iter().sum::<f64>()
-            - self.work.rem.iter().map(|&i| self.y[i]).sum::<f64>();
+        self.w_total += c as f64
+            - self.work.rem.iter().map(|&i| self.mult[i]).sum::<f64>();
         // edit the stores: compact out removed rows, then append new ones
         self.phi.drop_rows_sorted(&self.work.rem)?;
+        self.y.drop_rows_sorted(&self.work.rem)?;
         for (i, &ri) in self.work.rem.iter().enumerate() {
-            // remove from y by index, adjusting for prior removals
-            self.y.remove(ri - i);
+            self.mult.remove(ri - i);
         }
         for row in 0..c {
             self.phi.push_row(self.work.phi_c.row(row))?;
-            self.y.push(y_new[row]);
+            self.y.push_row(y_new.row(row))?;
+            self.mult.push(1.0);
         }
         self.refresh_head()
     }
 
     fn n_samples(&self) -> usize {
-        self.y.len()
+        self.y.rows()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.y.cols()
     }
 
     fn predict_training(&self) -> Result<Vec<f64>> {
+        if self.y.cols() != 1 {
+            return Err(Error::Config(
+                "predict_training is the D=1 surface; use predict_training_multi".into(),
+            ));
+        }
         // stored mapped features make this O(N J) with no re-mapping
-        let mut out = gemv(&self.phi, &self.u)?;
+        let mut out = gemv(&self.phi, self.u.as_slice())?;
         for v in &mut out {
-            *v += self.b;
+            *v += self.b[0];
         }
         Ok(out)
+    }
+
+    fn predict_multi(&self, x: &Mat) -> Result<Mat> {
+        let mut out = Mat::default();
+        self.predict_multi_into(x, &mut out, &mut IntrinsicPredictWork::default())?;
+        Ok(out)
+    }
+
+    fn predict_training_multi(&self) -> Result<Mat> {
+        // stored mapped features: one (N, J)·(J, D) GEMM, no re-mapping
+        let mut out = Mat::default();
+        matmul_into(&self.phi, &self.u, &mut out)?;
+        let d = self.b.len();
+        for row in out.as_mut_slice().chunks_exact_mut(d) {
+            for (v, &bd) in row.iter_mut().zip(&self.b) {
+                *v += bd;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fold duplicates: the target row's scatter share grows by exactly
+    /// one more `φ_i φ_iᵀ`, so the whole round is ONE batched rank-|F|
+    /// Woodbury *increment* with the unscaled stored rows, plus the sum /
+    /// multiplicity / running-average maintenance — identical state to the
+    /// unfolded insert, at O(J^2 |F|) instead of store growth.
+    fn apply_folds(&mut self, folds: &[(usize, usize)], _x_new: &Mat, y_new: &Mat) -> Result<()> {
+        if folds.is_empty() {
+            return Ok(());
+        }
+        let n = self.y.rows();
+        let d = self.y.cols();
+        let j = self.table.j();
+        self.work.phi_h.resize_scratch(j, folds.len());
+        for (k, &(i, br)) in folds.iter().enumerate() {
+            ensure_shape!(
+                i < n && br < y_new.rows(),
+                "IntrinsicKrr::apply_folds",
+                "fold ({i}, {br}) out of range (n = {n}, batch = {})",
+                y_new.rows()
+            );
+            ensure_shape!(
+                y_new.cols() == d,
+                "IntrinsicKrr::apply_folds",
+                "y_new has {} cols, engine carries D = {d}",
+                y_new.cols()
+            );
+            for jj in 0..j {
+                self.work.phi_h[(jj, k)] = self.phi[(i, jj)];
+            }
+        }
+        self.work.signs.clear();
+        self.work.signs.extend(std::iter::repeat_n(1.0, folds.len()));
+        incdec_into(
+            &mut self.s_inv,
+            &self.work.phi_h,
+            &self.work.signs,
+            &mut self.work.incdec,
+        )?;
+        for &(i, br) in folds {
+            let c = self.mult[i];
+            crate::linalg::matrix::axpy_slice(1.0, self.phi.row(i), &mut self.psum);
+            ger(&mut self.py, 1.0, self.phi.row(i), y_new.row(br))?;
+            for (s, &yv) in self.sy.iter_mut().zip(y_new.row(br)) {
+                *s += yv;
+            }
+            for dc in 0..d {
+                self.y[(i, dc)] = (c * self.y[(i, dc)] + y_new[(br, dc)]) / (c + 1.0);
+            }
+            self.mult[i] = c + 1.0;
+            self.w_total += 1.0;
+        }
+        self.refresh_head()
     }
 
     fn mode(&self) -> &'static str {
@@ -454,5 +658,42 @@ mod tests {
         let u0 = m.weights().to_vec();
         m.inc_dec(&Mat::zeros(0, 3), &[], &[]).unwrap();
         assert_vec_close(m.weights(), &u0, 1e-15);
+    }
+
+    #[test]
+    fn multi_output_columns_match_independent_engines() {
+        let (x, y0) = data(30, 4, 10);
+        let (_, y1) = data(30, 4, 11);
+        let kernel = Kernel::poly(2, 1.0);
+        let ym = Mat::from_fn(30, 2, |r, c| if c == 0 { y0[r] } else { y1[r] });
+        let multi = IntrinsicKrr::fit_multi(&x, &ym, &kernel, 0.5).unwrap();
+        let e0 = IntrinsicKrr::fit(&x, &y0, &kernel, 0.5).unwrap();
+        let e1 = IntrinsicKrr::fit(&x, &y1, &kernel, 0.5).unwrap();
+        let (xt, _) = data(7, 4, 12);
+        let pm = multi.predict_multi(&xt).unwrap();
+        let p0 = e0.predict(&xt).unwrap();
+        let p1 = e1.predict(&xt).unwrap();
+        for r in 0..7 {
+            assert_close(pm[(r, 0)], p0[r], 1e-10);
+            assert_close(pm[(r, 1)], p1[r], 1e-10);
+        }
+    }
+
+    #[test]
+    fn fold_equals_unfolded_duplicate_insert() {
+        let (x, y) = data(24, 3, 13);
+        let kernel = Kernel::poly(2, 1.0);
+        let mut folded = IntrinsicKrr::fit(&x, &y, &kernel, 0.5).unwrap();
+        let xdup = Mat::from_fn(1, 3, |_, c| x[(5, c)]);
+        let ydup = Mat::from_vec(1, 1, vec![0.33]).unwrap();
+        folded.apply_folds(&[(5, 0)], &xdup, &ydup).unwrap();
+        assert_eq!(folded.n_samples(), 24, "folding must not grow N");
+
+        let x_ref = x.vcat(&xdup).unwrap();
+        let mut y_ref = y.clone();
+        y_ref.push(0.33);
+        let unfolded = IntrinsicKrr::fit(&x_ref, &y_ref, &kernel, 0.5).unwrap();
+        assert_vec_close(folded.weights(), unfolded.weights(), 1e-10);
+        assert_close(folded.bias(), unfolded.bias(), 1e-10);
     }
 }

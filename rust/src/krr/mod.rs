@@ -14,6 +14,7 @@
 pub mod advisor;
 pub mod empirical;
 pub mod empirical_sparse;
+pub mod fold;
 pub mod forgetting;
 pub mod intrinsic;
 
@@ -21,22 +22,53 @@ use crate::error::Result;
 use crate::linalg::Mat;
 
 /// Common interface over the two KRR operating modes.
+///
+/// Engines carry `D = n_outputs()` target columns behind ONE maintained
+/// inverse: the factorization amortizes across outputs, updates apply the
+/// Woodbury core to all coefficient columns at once, and multi-output
+/// predicts run as packed GEMMs. The slice-based methods are the `D = 1`
+/// surface (they error with [`crate::error::Error::Config`] on a
+/// multi-output engine); the `_multi` methods are the general path and
+/// are exact aliases at `D = 1`.
 pub trait KrrModel: Send {
-    /// Predict responses for a block of raw feature rows.
+    /// Predict responses for a block of raw feature rows (`D = 1` only).
     fn predict(&self, x: &Mat) -> Result<Vec<f64>>;
 
     /// One multiple incremental/decremental round: add the rows of
     /// `(x_new, y_new)`, remove the training samples at `remove_idx`
     /// (indices into the *current* training set), in a single batched
-    /// update.
+    /// update (`D = 1` only).
     fn inc_dec(&mut self, x_new: &Mat, y_new: &[f64], remove_idx: &[usize]) -> Result<()>;
 
     /// Current training-set size.
     fn n_samples(&self) -> usize;
 
+    /// Number of target columns `D` this engine carries.
+    fn n_outputs(&self) -> usize;
+
     /// Predictions over the engine's own training set (the outlier-scoring
-    /// hot path; engines override with stored-feature fast paths).
+    /// hot path; engines override with stored-feature fast paths)
+    /// (`D = 1` only).
     fn predict_training(&self) -> Result<Vec<f64>>;
+
+    /// Predict all `D` output columns for a block of rows: `(B, D)` out.
+    fn predict_multi(&self, x: &Mat) -> Result<Mat>;
+
+    /// Multi-output inc/dec round: `y_new` is `(B, D)`.
+    fn inc_dec_multi(&mut self, x_new: &Mat, y_new: &Mat, remove_idx: &[usize])
+        -> Result<()>;
+
+    /// Multi-output training predictions, `(N, D)`.
+    fn predict_training_multi(&self) -> Result<Mat>;
+
+    /// Fold duplicate rows into their multiplicity-weighted targets:
+    /// each `(store_index, batch_row)` pair (see [`fold::FoldPlan`]; the
+    /// store index is post-`inc_dec` for this round) bumps the target
+    /// row's multiplicity, averages its stored target, and applies the
+    /// equivalent rank-1 maintained-inverse update — numerically
+    /// equivalent to having inserted the duplicate unfolded.
+    fn apply_folds(&mut self, folds: &[(usize, usize)], x_new: &Mat, y_new: &Mat)
+        -> Result<()>;
 
     /// Human-readable mode name ("intrinsic"/"empirical").
     fn mode(&self) -> &'static str;

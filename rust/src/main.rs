@@ -107,6 +107,7 @@ fn cmd_serve(m: &mikrr::cli::Matches) -> Result<(), Error> {
         outlier: Some(OutlierConfig::default()),
         with_uncertainty: m.is_set("uncertainty"),
         snapshot_rollback: false,
+        fold_eps: None,
     };
     let mut coordinator = Coordinator::bootstrap(&base.x, &base.y, cfg)?;
     println!("space routed: {:?}", coordinator.space());

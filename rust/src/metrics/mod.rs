@@ -107,6 +107,72 @@ impl RoundRecord {
     }
 }
 
+/// Multi-output regression error report: one entry per target column
+/// plus the pooled (all columns flattened) figure.
+#[derive(Clone, Debug, Default)]
+pub struct MultiOutputError {
+    /// Per-column errors, length D.
+    pub per_column: Vec<f64>,
+    /// Pooled error over all N*D residuals.
+    pub pooled: f64,
+}
+
+fn multi_output_error(
+    pred: &crate::linalg::Mat,
+    truth: &crate::linalg::Mat,
+    rmse: bool,
+) -> crate::error::Result<MultiOutputError> {
+    if pred.shape() != truth.shape() {
+        return Err(crate::error::Error::Config(format!(
+            "metrics: prediction shape {:?} != truth shape {:?}",
+            pred.shape(),
+            truth.shape()
+        )));
+    }
+    let (n, d) = pred.shape();
+    if n == 0 || d == 0 {
+        return Err(crate::error::Error::Config(
+            "metrics: empty prediction matrix".into(),
+        ));
+    }
+    let mut per_column = vec![0.0; d];
+    for i in 0..n {
+        let (pr, tr) = (pred.row(i), truth.row(i));
+        for j in 0..d {
+            let e = pr[j] - tr[j];
+            per_column[j] += if rmse { e * e } else { e.abs() };
+        }
+    }
+    let pooled_sum: f64 = per_column.iter().sum();
+    let pooled = if rmse {
+        (pooled_sum / (n * d) as f64).sqrt()
+    } else {
+        pooled_sum / (n * d) as f64
+    };
+    for c in per_column.iter_mut() {
+        *c = if rmse { (*c / n as f64).sqrt() } else { *c / n as f64 };
+    }
+    Ok(MultiOutputError { per_column, pooled })
+}
+
+/// Root-mean-square error of an (N, D) prediction against (N, D) truth,
+/// per target column and pooled.
+pub fn rmse_multi(
+    pred: &crate::linalg::Mat,
+    truth: &crate::linalg::Mat,
+) -> crate::error::Result<MultiOutputError> {
+    multi_output_error(pred, truth, true)
+}
+
+/// Mean absolute error of an (N, D) prediction against (N, D) truth,
+/// per target column and pooled.
+pub fn mae_multi(
+    pred: &crate::linalg::Mat,
+    truth: &crate::linalg::Mat,
+) -> crate::error::Result<MultiOutputError> {
+    multi_output_error(pred, truth, false)
+}
+
 /// Lightweight named-counter registry for the coordinator.
 #[derive(Clone, Debug, Default)]
 pub struct Counters {
@@ -240,6 +306,25 @@ mod tests {
         let p50 = h.percentile(50.0);
         assert!(p50 > 4e-4 && p50 < 6e-4, "p50={p50}");
         assert!(h.summary().contains("p99"));
+    }
+
+    #[test]
+    fn multi_output_rmse_and_mae() {
+        use crate::linalg::Mat;
+        let pred = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let truth = Mat::from_vec(2, 2, vec![0.0, 2.0, 3.0, 2.0]).unwrap();
+        let r = rmse_multi(&pred, &truth).unwrap();
+        // col0 residuals (1, 0) -> rmse sqrt(0.5); col1 residuals (0, 2) -> sqrt(2)
+        assert!((r.per_column[0] - 0.5f64.sqrt()).abs() < 1e-12);
+        assert!((r.per_column[1] - 2.0f64.sqrt()).abs() < 1e-12);
+        assert!((r.pooled - (5.0f64 / 4.0).sqrt()).abs() < 1e-12);
+        let m = mae_multi(&pred, &truth).unwrap();
+        assert!((m.per_column[0] - 0.5).abs() < 1e-12);
+        assert!((m.per_column[1] - 1.0).abs() < 1e-12);
+        assert!((m.pooled - 0.75).abs() < 1e-12);
+        // shape mismatch rejected
+        let bad = Mat::zeros(3, 2);
+        assert!(rmse_multi(&pred, &bad).is_err());
     }
 
     #[test]

@@ -47,9 +47,18 @@ impl Default for MicroBatchPolicy {
 enum Want {
     Mean,
     MeanVar,
+    MeanMulti,
+    MeanVarMulti,
 }
 
-type Reply = Result<(f64, Option<f64>)>;
+/// Reply payload: scalar replies stay allocation-free on the send side;
+/// multi-output replies carry the request's D-column mean row.
+enum ReplyBody {
+    Scalar(f64, Option<f64>),
+    Multi(Vec<f64>, Option<f64>),
+}
+
+type Reply = Result<ReplyBody>;
 
 struct Request {
     x: Vec<f64>,
@@ -86,16 +95,47 @@ pub struct PredictClient {
 }
 
 impl PredictClient {
-    /// Predict one observation (blocks until the batch it joined runs).
+    /// Predict one observation (blocks until the batch it joined runs;
+    /// `D = 1` — errors on a multi-output deployment).
     pub fn predict(&mut self, x: &[f64]) -> Result<f64> {
-        self.call(x, Want::Mean).map(|(m, _)| m)
+        match self.call(x, Want::Mean)? {
+            ReplyBody::Scalar(m, _) => Ok(m),
+            ReplyBody::Multi(..) => unreachable!("Mean requests get scalar replies"),
+        }
     }
 
     /// Predict one observation with predictive variance (requires the
-    /// shards' KBR twins).
+    /// shards' KBR twins; `D = 1`).
     pub fn predict_with_uncertainty(&mut self, x: &[f64]) -> Result<(f64, f64)> {
-        let (m, v) = self.call(x, Want::MeanVar)?;
-        Ok((m, v.expect("MeanVar reply carries a variance")))
+        match self.call(x, Want::MeanVar)? {
+            ReplyBody::Scalar(m, v) => {
+                Ok((m, v.expect("MeanVar reply carries a variance")))
+            }
+            ReplyBody::Multi(..) => unreachable!("MeanVar requests get scalar replies"),
+        }
+    }
+
+    /// Predict all D output columns for one observation. Coalesced multi
+    /// requests are answered as ONE packed `(B, D)` round through the
+    /// router.
+    pub fn predict_multi(&mut self, x: &[f64]) -> Result<Vec<f64>> {
+        match self.call(x, Want::MeanMulti)? {
+            ReplyBody::Multi(m, _) => Ok(m),
+            ReplyBody::Scalar(..) => unreachable!("MeanMulti requests get multi replies"),
+        }
+    }
+
+    /// Predict all D output columns plus the shared predictive variance
+    /// for one observation (requires the shards' KBR twins).
+    pub fn predict_with_uncertainty_multi(&mut self, x: &[f64]) -> Result<(Vec<f64>, f64)> {
+        match self.call(x, Want::MeanVarMulti)? {
+            ReplyBody::Multi(m, v) => {
+                Ok((m, v.expect("MeanVarMulti reply carries a variance")))
+            }
+            ReplyBody::Scalar(..) => {
+                unreachable!("MeanVarMulti requests get multi replies")
+            }
+        }
     }
 
     fn call(&mut self, x: &[f64], want: Want) -> Reply {
@@ -178,6 +218,10 @@ struct BatchBuffers {
     /// answer a plain `predict` request).
     kmean: Vec<f64>,
     var: Vec<f64>,
+    /// Multi-output twins of the three buffers above, (B, D).
+    mean_mat: Mat,
+    kmean_mat: Mat,
+    var_multi: Vec<f64>,
 }
 
 fn worker_loop(
@@ -252,8 +296,11 @@ fn serve_batch(
     }
     let want_mean = buf.valid.iter().any(|r| matches!(r.want, Want::Mean));
     let want_var = buf.valid.iter().any(|r| matches!(r.want, Want::MeanVar));
+    let want_mmean = buf.valid.iter().any(|r| matches!(r.want, Want::MeanMulti));
+    let want_mvar = buf.valid.iter().any(|r| matches!(r.want, Want::MeanVarMulti));
     // each pass carries its own error so a failure on one estimator (e.g.
-    // no KBR twin) neither blocks the other nor gets rewritten
+    // no KBR twin, a D=1 request against a multi-output deployment)
+    // neither blocks the others nor gets rewritten
     let mean_err: Option<Error> = if want_mean {
         handle.predict_into(&buf.xb, &mut buf.mean, &mut buf.work).err()
     } else {
@@ -266,15 +313,44 @@ fn serve_batch(
     } else {
         None
     };
+    let mmean_err: Option<Error> = if want_mmean {
+        handle.predict_multi_into(&buf.xb, &mut buf.mean_mat, &mut buf.work).err()
+    } else {
+        None
+    };
+    let mvar_err: Option<Error> = if want_mvar {
+        handle
+            .predict_with_uncertainty_multi_into(
+                &buf.xb,
+                &mut buf.kmean_mat,
+                &mut buf.var_multi,
+                &mut buf.work,
+            )
+            .err()
+    } else {
+        None
+    };
     let (mean, kmean, var) = (&buf.mean, &buf.kmean, &buf.var);
+    let (mean_mat, kmean_mat, var_multi) = (&buf.mean_mat, &buf.kmean_mat, &buf.var_multi);
     for (i, req) in buf.valid.drain(..).enumerate() {
         let reply: Reply = match req.want {
             Want::Mean => match &mean_err {
-                None => Ok((mean[i], None)),
+                None => Ok(ReplyBody::Scalar(mean[i], None)),
                 Some(e) => Err(replicate(e)),
             },
             Want::MeanVar => match &var_err {
-                None => Ok((kmean[i], Some(var[i]))),
+                None => Ok(ReplyBody::Scalar(kmean[i], Some(var[i]))),
+                Some(e) => Err(replicate(e)),
+            },
+            Want::MeanMulti => match &mmean_err {
+                None => Ok(ReplyBody::Multi(mean_mat.row(i).to_vec(), None)),
+                Some(e) => Err(replicate(e)),
+            },
+            Want::MeanVarMulti => match &mvar_err {
+                None => Ok(ReplyBody::Multi(
+                    kmean_mat.row(i).to_vec(),
+                    Some(var_multi[i]),
+                )),
                 Some(e) => Err(replicate(e)),
             },
         };
@@ -435,5 +511,41 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.requests, 24);
         assert!(stats.batches <= 24, "some coalescing expected under load");
+    }
+
+    fn router_multi(uncertainty: bool) -> ShardRouter {
+        let d = synth::ecg_like(60, 5, 1);
+        let y = Mat::from_fn(60, 2, |i, j| if j == 0 { d.y[i] } else { 2.0 * d.y[i] - 0.5 });
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+        cfg.base.with_uncertainty = uncertainty;
+        ShardRouter::bootstrap_multi(&d.x, &y, cfg).unwrap()
+    }
+
+    #[test]
+    fn multi_output_requests_round_trip() {
+        let r = router_multi(true);
+        let h = r.handle();
+        let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
+        let mut client = server.client();
+        let q = synth::ecg_like(4, 5, 8);
+        let direct = h.predict_multi(&q.x).unwrap();
+        let mut work = RouterPredictWork::default();
+        let mut kmean = Mat::default();
+        let mut var = Vec::new();
+        h.predict_with_uncertainty_multi_into(&q.x, &mut kmean, &mut var, &mut work).unwrap();
+        for i in 0..4 {
+            let got = client.predict_multi(q.x.row(i)).unwrap();
+            assert_eq!(got.len(), 2);
+            crate::testutil::assert_vec_close(&got, direct.row(i), 1e-9);
+            let (m, v) = client.predict_with_uncertainty_multi(q.x.row(i)).unwrap();
+            crate::testutil::assert_vec_close(&m, kmean.row(i), 1e-9);
+            crate::testutil::assert_close(v, var[i], 1e-9);
+        }
+        // scalar requests against a D=2 deployment error cleanly (D=1 shim
+        // guard propagates through the coalesced batch) without killing
+        // concurrent multi traffic
+        let err = client.predict(q.x.row(0)).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "got {err:?}");
+        assert!(client.predict_multi(q.x.row(0)).is_ok());
     }
 }

@@ -136,6 +136,12 @@ pub struct RouterPredictWork {
     shard_var: Vec<f64>,
     acc_mean: Vec<f64>,
     acc_prec: Vec<f64>,
+    /// Multi-output shard scratch and accumulators, (B, D).
+    shard_mat: Mat,
+    acc_mat: Mat,
+    /// Fused mean/var staging for the interval read path.
+    fused_mean: Vec<f64>,
+    fused_var: Vec<f64>,
 }
 
 /// Cloneable read front-end over all shards' published epochs.
@@ -148,6 +154,30 @@ impl RouterHandle {
     /// Number of shards behind this handle.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The same handle with its shards visited in `order` — a test/debug
+    /// constructor: every fan-in reduction (DC-KRR average, precision
+    /// weighting) is permutation-invariant, and the shard-permutation
+    /// tests pin that down through this.
+    pub fn permuted(&self, order: &[usize]) -> Result<RouterHandle> {
+        if order.len() != self.shards.len() {
+            return Err(Error::Config(format!(
+                "permutation of {} entries over {} shards",
+                order.len(),
+                self.shards.len()
+            )));
+        }
+        let mut seen = vec![false; self.shards.len()];
+        for &i in order {
+            if i >= self.shards.len() || seen[i] {
+                return Err(Error::Config(format!("invalid shard permutation {order:?}")));
+            }
+            seen[i] = true;
+        }
+        Ok(RouterHandle {
+            shards: order.iter().map(|&i| self.shards[i].clone()).collect(),
+        })
     }
 
     /// Read handle for one shard.
@@ -192,6 +222,41 @@ impl RouterHandle {
         }
         let k = self.shards.len() as f64;
         for o in out.iter_mut() {
+            *o /= k;
+        }
+        Ok(())
+    }
+
+    /// DC-KRR averaged multi-output prediction across shards: `(B, D)`.
+    pub fn predict_multi(&self, x: &Mat) -> Result<Mat> {
+        let mut out = Mat::default();
+        self.predict_multi_into(x, &mut out, &mut RouterPredictWork::default())?;
+        Ok(out)
+    }
+
+    /// [`RouterHandle::predict_multi`] through a warm workspace: each
+    /// shard answers the whole micro-batch as ONE packed `(B, D)` GEMM and
+    /// the average accumulates in place. Allocation-free once warm.
+    pub fn predict_multi_into(
+        &self,
+        x: &Mat,
+        out: &mut Mat,
+        work: &mut RouterPredictWork,
+    ) -> Result<()> {
+        for (si, h) in self.shards.iter().enumerate() {
+            let snap = h.snapshot();
+            snap.predict_multi_into(x, &mut work.shard_mat, &mut work.engine)?;
+            if si == 0 {
+                out.resize_scratch(work.shard_mat.rows(), work.shard_mat.cols());
+                out.as_mut_slice().copy_from_slice(work.shard_mat.as_slice());
+            } else {
+                for (o, s) in out.as_mut_slice().iter_mut().zip(work.shard_mat.as_slice()) {
+                    *o += s;
+                }
+            }
+        }
+        let k = self.shards.len() as f64;
+        for o in out.as_mut_slice() {
             *o /= k;
         }
         Ok(())
@@ -251,6 +316,94 @@ impl RouterHandle {
         }
         Ok(())
     }
+
+    /// Multi-output precision-weighted fan-in: `(B, D)` fused means and
+    /// the shared per-query fused variance. The shard weights λₖ = 1/σₖ²
+    /// come from the shared variance column, so all D output columns of a
+    /// query row fuse with the SAME weights.
+    pub fn predict_with_uncertainty_multi(&self, x: &Mat) -> Result<(Mat, Vec<f64>)> {
+        let mut mean = Mat::default();
+        let mut var = Vec::new();
+        self.predict_with_uncertainty_multi_into(
+            x,
+            &mut mean,
+            &mut var,
+            &mut RouterPredictWork::default(),
+        )?;
+        Ok((mean, var))
+    }
+
+    /// [`RouterHandle::predict_with_uncertainty_multi`] through a warm
+    /// workspace. Allocation-free once warm.
+    pub fn predict_with_uncertainty_multi_into(
+        &self,
+        x: &Mat,
+        mean: &mut Mat,
+        var: &mut Vec<f64>,
+        work: &mut RouterPredictWork,
+    ) -> Result<()> {
+        let b = x.rows();
+        work.acc_prec.clear();
+        work.acc_prec.resize(b, 0.0);
+        for (si, h) in self.shards.iter().enumerate() {
+            let snap = h.snapshot();
+            snap.predict_with_uncertainty_multi_into(
+                x,
+                &mut work.shard_mat,
+                &mut work.shard_var,
+                &mut work.engine,
+            )?;
+            if si == 0 {
+                work.acc_mat.resize_scratch(b, work.shard_mat.cols());
+                work.acc_mat.as_mut_slice().fill(0.0);
+            }
+            for r in 0..b {
+                // shard variances are >= sigma_b^2 > 0 by construction
+                let lam = 1.0 / work.shard_var[r];
+                work.acc_prec[r] += lam;
+                for (a, &m) in work
+                    .acc_mat
+                    .row_mut(r)
+                    .iter_mut()
+                    .zip(work.shard_mat.row(r))
+                {
+                    *a += lam * m;
+                }
+            }
+        }
+        let k = self.shards.len() as f64;
+        let d = work.acc_mat.cols();
+        mean.resize_scratch(b, d);
+        var.clear();
+        for (r, &ap) in work.acc_prec.iter().enumerate() {
+            for (m, &a) in mean.row_mut(r).iter_mut().zip(work.acc_mat.row(r)) {
+                *m = a / ap;
+            }
+            var.push(k / ap);
+        }
+        Ok(())
+    }
+
+    /// ~95% credible intervals from the fused posterior, written into a
+    /// caller-provided buffer through [`crate::kbr::interval95_from_into`]
+    /// — the serve layer's allocation-free uncertainty fan-in (`D = 1`).
+    pub fn predict_interval95_into(
+        &self,
+        x: &Mat,
+        out: &mut Vec<(f64, f64)>,
+        work: &mut RouterPredictWork,
+    ) -> Result<()> {
+        let mut fused_mean = std::mem::take(&mut work.fused_mean);
+        let mut fused_var = std::mem::take(&mut work.fused_var);
+        let res =
+            self.predict_with_uncertainty_into(x, &mut fused_mean, &mut fused_var, work);
+        if res.is_ok() {
+            crate::kbr::interval95_from_into(&fused_mean, &fused_var, out);
+        }
+        work.fused_mean = fused_mean;
+        work.fused_var = fused_var;
+        res
+    }
 }
 
 /// The multi-engine shard router.
@@ -268,16 +421,24 @@ impl ShardRouter {
     /// `i mod K`, so every shard sees the full data distribution — the
     /// uniform split the DC-KRR averaging argument needs) and fit one
     /// engine per shard. Space is chosen once, by the advisor on the
-    /// per-shard problem size, unless the config overrides it.
+    /// per-shard problem size, unless the config overrides it (`D = 1`).
     pub fn bootstrap(x: &Mat, y: &[f64], cfg: ServeConfig) -> Result<Self> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::bootstrap_multi(x, &ym, cfg)
+    }
+
+    /// [`ShardRouter::bootstrap`] with a `(N, D)` target matrix: every
+    /// shard engine carries all D output columns behind its one maintained
+    /// inverse.
+    pub fn bootstrap_multi(x: &Mat, y: &Mat, cfg: ServeConfig) -> Result<Self> {
         let k = cfg.shards;
+        let n = y.rows();
         if k == 0 {
             return Err(Error::Config("ServeConfig.shards must be >= 1".into()));
         }
-        if y.len() < 4 * k {
+        if n < 4 * k {
             return Err(Error::Config(format!(
-                "bootstrap set of {} cannot seed {k} shards (need >= {})",
-                y.len(),
+                "bootstrap set of {n} cannot seed {k} shards (need >= {})",
                 4 * k
             )));
         }
@@ -286,7 +447,7 @@ impl ShardRouter {
                 "ServeConfig.base.batch.max_batch must be >= 1".into(),
             ));
         }
-        let per_shard = y.len() / k;
+        let per_shard = n / k;
         let space = cfg.base.space.unwrap_or_else(|| {
             Advisor::default()
                 .choose_space(&cfg.base.kernel, per_shard, x.cols(), 4, 2)
@@ -294,10 +455,10 @@ impl ShardRouter {
         });
         let mut shards = Vec::with_capacity(k);
         for s in 0..k {
-            let idx: Vec<usize> = (s..y.len()).step_by(k).collect();
+            let idx: Vec<usize> = (s..n).step_by(k).collect();
             let xs = x.select_rows(&idx);
-            let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
-            shards.push(Shard::bootstrap(s, &xs, &ys, &cfg.base, space)?);
+            let ys = y.select_rows(&idx);
+            shards.push(Shard::bootstrap_multi(s, &xs, &ys, &cfg.base, space)?);
         }
         // the global pull batcher fills every shard's batch in one round
         let mut policy = cfg.base.batch.clone();
@@ -478,7 +639,7 @@ mod tests {
     use crate::data::synth;
 
     fn ev(x: Vec<f64>, y: f64, seq: u64) -> StreamEvent {
-        StreamEvent { x, y, source_id: 0, seq }
+        StreamEvent::single(x, y, 0, seq)
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::ensure_shape;
 use crate::error::Result;
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LatencyHist, Timer};
-use crate::streaming::outlier::detect_scored;
+use crate::streaming::outlier::detect_scored_multi;
 use crate::streaming::StreamEvent;
 use std::sync::Arc;
 
@@ -46,15 +46,26 @@ impl SnapshotHandle {
         self.cell.epoch()
     }
 
-    /// Predict through the last published epoch.
+    /// Predict through the last published epoch (`D = 1`).
     pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
         self.cell.load().predict(x)
     }
 
+    /// Predict all D output columns through the last published epoch.
+    pub fn predict_multi(&self, x: &Mat) -> Result<Mat> {
+        self.cell.load().predict_multi(x)
+    }
+
     /// Predictive mean + variance through the last published epoch
-    /// (requires the shard's KBR twin).
+    /// (requires the shard's KBR twin, `D = 1`).
     pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
         self.cell.load().predict_with_uncertainty(x)
+    }
+
+    /// Multi-output predictive mean + shared per-query variance through
+    /// the last published epoch (requires the shard's KBR twin).
+    pub fn predict_with_uncertainty_multi(&self, x: &Mat) -> Result<(Mat, Vec<f64>)> {
+        self.cell.load().predict_with_uncertainty_multi(x)
     }
 
     /// Training-set size of the last published epoch.
@@ -74,9 +85,10 @@ pub struct Shard {
     cfg: CoordinatorConfig,
     /// Arrivals routed here but not yet folded into an update.
     pending: Vec<StreamEvent>,
-    /// Reused insertion-block assembly buffers.
+    /// Reused insertion-block assembly buffers (`y_new` is (B, D)).
     x_new: Mat,
-    y_new: Vec<f64>,
+    y_new: Mat,
+    y_row: Vec<f64>,
     /// rounds / added / removed / rollbacks / epochs.
     pub counters: Counters,
     /// Update-latency histogram (the write-path half of the throughput
@@ -85,7 +97,8 @@ pub struct Shard {
 }
 
 impl Shard {
-    /// Fit a shard engine on its bootstrap slice and publish epoch 0.
+    /// Fit a shard engine on its bootstrap slice and publish epoch 0
+    /// (`D = 1`).
     pub fn bootstrap(
         id: usize,
         x: &Mat,
@@ -93,8 +106,22 @@ impl Shard {
         cfg: &CoordinatorConfig,
         space: crate::config::Space,
     ) -> Result<Self> {
-        let engine =
-            Engine::fit(x, y, &cfg.kernel, cfg.ridge, space, cfg.with_uncertainty)?;
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+        Self::bootstrap_multi(id, x, &ym, cfg, space)
+    }
+
+    /// Fit a shard engine on its `(N, D)` bootstrap slice and publish
+    /// epoch 0.
+    pub fn bootstrap_multi(
+        id: usize,
+        x: &Mat,
+        y: &Mat,
+        cfg: &CoordinatorConfig,
+        space: crate::config::Space,
+    ) -> Result<Self> {
+        let mut engine =
+            Engine::fit_multi(x, y, &cfg.kernel, cfg.ridge, space, cfg.with_uncertainty)?;
+        engine.set_fold_eps(cfg.fold_eps);
         let cell = Arc::new(Epoch::new(engine.clone()));
         Ok(Self {
             id,
@@ -103,7 +130,8 @@ impl Shard {
             cfg: cfg.clone(),
             pending: Vec::new(),
             x_new: Mat::default(),
-            y_new: Vec::new(),
+            y_new: Mat::default(),
+            y_row: Vec::new(),
             counters: Counters::default(),
             update_latency: LatencyHist::new(),
         })
@@ -151,8 +179,8 @@ impl Shard {
     pub fn apply_batch(&mut self, events: &[StreamEvent]) -> Result<RoundOutcome> {
         let removals: Vec<usize> = match &self.cfg.outlier {
             Some(ocfg) => {
-                let pred = self.engine.krr().predict_training()?;
-                detect_scored(&pred, self.engine.targets(), ocfg)?
+                let pred = self.engine.krr().predict_training_multi()?;
+                detect_scored_multi(&pred, self.engine.training_view().1, ocfg)?
                     .into_iter()
                     .map(|v| v.index)
                     .collect()
@@ -160,8 +188,9 @@ impl Shard {
             None => Vec::new(),
         };
         let dim = self.engine.dim();
+        let d = self.engine.n_outputs();
         self.x_new.resize_scratch(0, dim);
-        self.y_new.clear();
+        self.y_new.resize_scratch(0, d);
         for ev in events {
             // validate here, where it is still an Err: the engines' feature
             // maps assert on dimension and must never see a bad row
@@ -173,20 +202,59 @@ impl Shard {
                 ev.seq,
                 ev.x.len()
             );
+            ensure_shape!(
+                ev.n_outputs() == d,
+                "Shard::apply_batch",
+                "event (source {}, seq {}) carries {} target columns, engine \
+                 expects D = {d}",
+                ev.source_id,
+                ev.seq,
+                ev.n_outputs()
+            );
             self.x_new.push_row(&ev.x)?;
-            self.y_new.push(ev.y);
+            self.y_row.clear();
+            self.y_row.push(ev.y);
+            self.y_row.extend_from_slice(&ev.y_tail);
+            self.y_new.push_row(&self.y_row)?;
         }
         self.update_and_publish(&removals)
     }
 
     /// Apply ONE fused round with an explicit insertion block and removal
-    /// set (no outlier detection) — the replay / bench / delegation entry.
+    /// set (no outlier detection) — the replay / bench / delegation entry
+    /// (`D = 1`).
     pub fn apply_update(
         &mut self,
         x_new: &Mat,
         y_new: &[f64],
         remove_idx: &[usize],
     ) -> Result<RoundOutcome> {
+        if self.engine.n_outputs() != 1 {
+            return Err(crate::error::Error::Config(
+                "apply_update is the D=1 surface; use apply_update_multi".into(),
+            ));
+        }
+        self.stage_x(x_new)?;
+        self.y_new.resize_scratch(y_new.len(), 1);
+        self.y_new.as_mut_slice().copy_from_slice(y_new);
+        self.update_and_publish(remove_idx)
+    }
+
+    /// Multi-output [`Shard::apply_update`]: `y_new` is `(B, D)`.
+    pub fn apply_update_multi(
+        &mut self,
+        x_new: &Mat,
+        y_new: &Mat,
+        remove_idx: &[usize],
+    ) -> Result<RoundOutcome> {
+        self.stage_x(x_new)?;
+        self.y_new.resize_scratch(y_new.rows(), y_new.cols());
+        self.y_new.as_mut_slice().copy_from_slice(y_new.as_slice());
+        self.update_and_publish(remove_idx)
+    }
+
+    /// Copy the insertion features into the warm staging buffer.
+    fn stage_x(&mut self, x_new: &Mat) -> Result<()> {
         ensure_shape!(
             x_new.rows() == 0 || x_new.cols() == self.engine.dim(),
             "Shard::apply_update",
@@ -200,9 +268,7 @@ impl Shard {
         } else {
             self.x_new.resize_scratch(0, self.engine.dim());
         }
-        self.y_new.clear();
-        self.y_new.extend_from_slice(y_new);
-        self.update_and_publish(remove_idx)
+        Ok(())
     }
 
     /// Drain up to `max_batch` pending events through one fused round.
@@ -225,8 +291,9 @@ impl Shard {
         // drain the OLDEST events first (arrival order)
         let mut batch: Vec<StreamEvent> = self.pending.drain(..take).collect();
         let dim = self.engine.dim();
+        let d = self.engine.n_outputs();
         let before = batch.len();
-        batch.retain(|ev| ev.x.len() == dim);
+        batch.retain(|ev| ev.x.len() == dim && ev.n_outputs() == d);
         if batch.len() < before {
             self.counters.add("rejected", (before - batch.len()) as u64);
         }
@@ -257,7 +324,7 @@ impl Shard {
     fn update_and_publish(&mut self, removals: &[usize]) -> Result<RoundOutcome> {
         let t = Timer::start();
         let snapshot = self.cfg.snapshot_rollback.then(|| self.engine.snapshot());
-        match self.engine.inc_dec(&self.x_new, &self.y_new, removals) {
+        match self.engine.inc_dec_multi(&self.x_new, &self.y_new, removals) {
             Ok(()) => {}
             Err(e) => {
                 if let Some(snap) = snapshot {
@@ -267,12 +334,13 @@ impl Shard {
                 return Err(e);
             }
         }
+        self.counters.add("folded", self.engine.last_round_folds() as u64);
         // publish: the O(state) clone is the epoch snapshot itself; readers
         // switch to it atomically and the writer keeps its private copy
         let epoch = self.cell.publish(self.engine.clone());
         let dt = t.elapsed();
         let outcome = RoundOutcome {
-            added: self.y_new.len(),
+            added: self.y_new.rows(),
             removed: removals.len(),
             update_secs: dt,
             n_after: self.engine.n_samples(),
@@ -304,18 +372,14 @@ mod tests {
             outlier: None,
             with_uncertainty: false,
             snapshot_rollback: false,
+            fold_eps: None,
         }
     }
 
     fn events(n: usize, dim: usize, seed: u64) -> Vec<StreamEvent> {
         let d = synth::ecg_like(n, dim, seed);
         (0..n)
-            .map(|i| StreamEvent {
-                x: d.x.row(i).to_vec(),
-                y: d.y[i],
-                source_id: 0,
-                seq: i as u64,
-            })
+            .map(|i| StreamEvent::single(d.x.row(i).to_vec(), d.y[i], 0, i as u64))
             .collect()
     }
 
@@ -357,7 +421,7 @@ mod tests {
         let h = s.handle();
         let p0 = h.predict(&d.x.block(0, 3, 0, 5)).unwrap();
         // wrong-dimension event: the round errors before any engine edit
-        let bad = StreamEvent { x: vec![1.0; 3], y: 0.0, source_id: 0, seq: 0 };
+        let bad = StreamEvent::single(vec![1.0; 3], 0.0, 0, 0);
         assert!(s.apply_batch(std::slice::from_ref(&bad)).is_err());
         assert_eq!(h.epoch(), 0, "failed round must not publish");
         let p1 = h.predict(&d.x.block(0, 3, 0, 5)).unwrap();

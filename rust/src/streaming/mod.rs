@@ -17,16 +17,46 @@ pub mod sink;
 pub mod source;
 
 /// One labelled observation travelling through the pipeline.
+///
+/// Multi-output targets split into `y` (output 0) plus `y_tail` (outputs
+/// `1..D`), so single-output traffic — the overwhelmingly common case —
+/// pays no layout change: `y_tail` stays empty and never allocates.
 #[derive(Clone, Debug)]
 pub struct StreamEvent {
     /// Feature vector.
     pub x: Vec<f64>,
-    /// Target / label.
+    /// Target / label (output column 0).
     pub y: f64,
+    /// Remaining target columns `1..D`; empty for single-output streams.
+    pub y_tail: Vec<f64>,
     /// Originating sensor id.
     pub source_id: usize,
     /// Per-source sequence number.
     pub seq: u64,
+}
+
+impl StreamEvent {
+    /// A single-output (`D = 1`) event.
+    pub fn single(x: Vec<f64>, y: f64, source_id: usize, seq: u64) -> Self {
+        Self { x, y, y_tail: Vec::new(), source_id, seq }
+    }
+
+    /// A multi-output event: `y_row` carries all `D >= 1` target columns.
+    pub fn multi(x: Vec<f64>, y_row: &[f64], source_id: usize, seq: u64) -> Self {
+        assert!(!y_row.is_empty(), "multi-output event needs >= 1 target");
+        Self {
+            x,
+            y: y_row[0],
+            y_tail: y_row[1..].to_vec(),
+            source_id,
+            seq,
+        }
+    }
+
+    /// Number of target columns this event carries.
+    pub fn n_outputs(&self) -> usize {
+        1 + self.y_tail.len()
+    }
 }
 
 #[cfg(test)]
@@ -35,8 +65,18 @@ mod tests {
 
     #[test]
     fn event_holds_payload() {
-        let e = StreamEvent { x: vec![1.0, 2.0], y: -1.0, source_id: 3, seq: 9 };
+        let e = StreamEvent::single(vec![1.0, 2.0], -1.0, 3, 9);
         assert_eq!(e.x.len(), 2);
         assert_eq!(e.source_id, 3);
+        assert_eq!(e.n_outputs(), 1);
+        assert!(e.y_tail.is_empty());
+    }
+
+    #[test]
+    fn multi_event_splits_head_and_tail() {
+        let e = StreamEvent::multi(vec![0.5], &[1.0, 2.0, 3.0], 0, 1);
+        assert_eq!(e.y, 1.0);
+        assert_eq!(e.y_tail, vec![2.0, 3.0]);
+        assert_eq!(e.n_outputs(), 3);
     }
 }

@@ -64,7 +64,34 @@ pub fn detect_scored(
 ) -> Result<Vec<OutlierVerdict>> {
     assert_eq!(pred.len(), y.len());
     let resid: Vec<f64> = pred.iter().zip(y).map(|(p, t)| (p - t).abs()).collect();
-    // robust scale: median + MAD
+    rank_residuals(resid, cfg)
+}
+
+/// Multi-output fast path: per-row residual = L2 norm of the D-column
+/// prediction error, which reduces to `|p - t|` at `D = 1` so the two
+/// paths score identically on single-output engines.
+pub fn detect_scored_multi(
+    pred: &Mat,
+    y: &Mat,
+    cfg: &OutlierConfig,
+) -> Result<Vec<OutlierVerdict>> {
+    assert_eq!(pred.shape(), y.shape());
+    let resid: Vec<f64> = (0..pred.rows())
+        .map(|i| {
+            let s: f64 = pred
+                .row(i)
+                .iter()
+                .zip(y.row(i))
+                .map(|(p, t)| (p - t) * (p - t))
+                .sum();
+            s.sqrt()
+        })
+        .collect();
+    rank_residuals(resid, cfg)
+}
+
+/// Robust z-score ranking (median + MAD) shared by the scored paths.
+fn rank_residuals(resid: Vec<f64>, cfg: &OutlierConfig) -> Result<Vec<OutlierVerdict>> {
     let med = crate::util::stats::median(&resid);
     let dev: Vec<f64> = resid.iter().map(|r| (r - med).abs()).collect();
     let mad = crate::util::stats::median(&dev).max(1e-12);
@@ -128,6 +155,19 @@ mod tests {
         let model = IntrinsicKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
         let got = detect(&model, &x, &y, &OutlierConfig::default()).unwrap();
         assert!(got.len() <= 1, "clean data flagged {got:?}");
+    }
+
+    #[test]
+    fn multi_path_matches_scalar_path_at_d1() {
+        let (x, y, _) = data_with_outliers(40, 4, 3, 4);
+        let model = IntrinsicKrr::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5).unwrap();
+        let pred = model.predict(&x).unwrap();
+        let cfg = OutlierConfig { z_threshold: 3.0, max_removals: 5 };
+        let scalar = detect_scored(&pred, &y, &cfg).unwrap();
+        let pm = Mat::from_vec(pred.len(), 1, pred.clone()).unwrap();
+        let ym = Mat::from_vec(y.len(), 1, y.clone()).unwrap();
+        let multi = detect_scored_multi(&pm, &ym, &cfg).unwrap();
+        assert_eq!(scalar, multi);
     }
 
     #[test]

@@ -58,7 +58,7 @@ impl SensorNode {
                 *v += 3.0 * rng.gaussian();
             }
         }
-        StreamEvent { x, y, source_id: self.cfg.source_id, seq }
+        StreamEvent::single(x, y, self.cfg.source_id, seq)
     }
 
     /// Spawn a thread pushing all events into `tx` (bounded — blocking send

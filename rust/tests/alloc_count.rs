@@ -1,5 +1,6 @@
 //! The zero-allocation contract, measured: steady-state `inc_dec` on every
-//! maintained-inverse engine must not touch the heap.
+//! maintained-inverse engine must not touch the heap — including folded
+//! (duplicate-input) rounds and multi-output (`D > 1`) rounds/reads.
 //!
 //! A counting global allocator diffs allocation events around warmed-up
 //! update rounds. `MIKRR_THREADS=1` pins the single-threaded path (scoped
@@ -143,6 +144,112 @@ fn steady_state_inc_dec_is_allocation_free() {
             "KbrModel steady-state inc_dec allocated {allocs} times"
         );
         assert_eq!(model.n_samples(), 30);
+    }
+
+    // --- duplicate-input folding (engine-level, KRR + KBR twin): a warm
+    // folding round — plan, fresh-row gather, rank-1 fold updates, and the
+    // multiplicity/ȳ mirrors — must stay off the heap too. Batches where
+    // rows 2/3 exactly repeat rows 0/1 plan 2 fresh + 2 within-batch folds
+    // every round regardless of store contents; evicting [0, 1] keeps N
+    // constant ---
+    {
+        use mikrr::config::Space;
+        use mikrr::coordinator::engine::Engine;
+
+        let (x, y) = data(40, 4, 9);
+        let mut eng =
+            Engine::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true).unwrap();
+        eng.set_fold_eps(Some(0.0));
+        // 12 distinct batches: warmup 4 + measured 8 rounds never reuse
+        // one, so a batch's rows can't exact-match a stored copy of itself
+        let fold_pool: Vec<(Mat, Vec<f64>)> = (0..12)
+            .map(|k| {
+                let (xb, yb) = data(2, 4, 200 + k);
+                let xf = Mat::from_fn(4, 4, |r, c| xb[(r % 2, c)]);
+                let yf = vec![yb[0], yb[1], yb[0] + 0.1, yb[1] - 0.1];
+                (xf, yf)
+            })
+            .collect();
+        let rem2 = [0usize, 1];
+        let mut k = 0usize;
+        let allocs = steady_state_allocs(
+            || {
+                let (xc, yc) = &fold_pool[k % fold_pool.len()];
+                k += 1;
+                eng.inc_dec(xc, yc, &rem2).unwrap();
+                assert_eq!(eng.last_round_folds(), 2);
+            },
+            4,
+            rounds,
+        );
+        assert_eq!(
+            allocs, 0,
+            "warm folding inc_dec (KRR + KBR twin) allocated {allocs} times"
+        );
+        assert_eq!(eng.n_samples(), 40);
+    }
+
+    // --- multi-output target path (D = 3): warm inc_dec_multi through one
+    // maintained inverse with D coefficient columns, then the packed
+    // (B, D) predict_multi_into / shared-variance uncertainty reads ---
+    {
+        use mikrr::config::Space;
+        use mikrr::coordinator::engine::{Engine, EnginePredictWork};
+
+        let (x, y) = data(40, 4, 20);
+        let dcols = 3usize;
+        let ym = Mat::from_fn(40, dcols, |i, c| (1.0 + 0.5 * c as f64) * y[i]);
+        let mut eng =
+            Engine::fit_multi(&x, &ym, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true)
+                .unwrap();
+
+        let mpool: Vec<(Mat, Mat)> = (0..12)
+            .map(|k| {
+                let (xb, yb) = data(batch, 4, 300 + k);
+                let yms = Mat::from_fn(batch, dcols, |i, c| (1.0 + 0.5 * c as f64) * yb[i]);
+                (xb, yms)
+            })
+            .collect();
+        let mut k = 0usize;
+        let allocs = steady_state_allocs(
+            || {
+                let (xc, yc) = &mpool[k % mpool.len()];
+                k += 1;
+                eng.inc_dec_multi(xc, yc, &rem).unwrap();
+            },
+            4,
+            rounds,
+        );
+        assert_eq!(
+            allocs, 0,
+            "warm multi-output inc_dec_multi (D = 3) allocated {allocs} times"
+        );
+        assert_eq!(eng.n_samples(), 40);
+        assert_eq!(eng.n_outputs(), dcols);
+
+        let (xq, _) = data(16, 4, 21);
+        let mut w = EnginePredictWork::default();
+        let mut out = Mat::default();
+        let mut mean = Mat::default();
+        let mut var = Vec::new();
+        eng.predict_multi_into(&xq, &mut out, &mut w).unwrap(); // warm
+        eng.predict_with_uncertainty_multi_into(&xq, &mut mean, &mut var, &mut w)
+            .unwrap(); // warm
+        let allocs = steady_state_allocs(
+            || {
+                eng.predict_multi_into(&xq, &mut out, &mut w).unwrap();
+                eng.predict_with_uncertainty_multi_into(&xq, &mut mean, &mut var, &mut w)
+                    .unwrap();
+            },
+            1,
+            4,
+        );
+        assert_eq!(
+            allocs, 0,
+            "warm multi-output predict paths (D = 3) allocated {allocs} times"
+        );
+        assert_eq!(out.shape(), (16, dcols));
+        assert!(var.iter().all(|&v| v > 0.0));
     }
 
     // --- warm serving: the predict_into workspace paths that the serve

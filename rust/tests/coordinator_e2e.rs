@@ -21,6 +21,7 @@ fn coordinator_cfg(batch: usize) -> CoordinatorConfig {
         outlier: Some(OutlierConfig { z_threshold: 6.0, max_removals: 2 }),
         with_uncertainty: false,
         snapshot_rollback: false,
+        fold_eps: None,
     }
 }
 

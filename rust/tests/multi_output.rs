@@ -1,0 +1,258 @@
+//! ISSUE 6 acceptance: multi-output parity and duplicate-input folding.
+//!
+//! * A D-output engine must equal D independent single-output engines to
+//!   1e-10 through fit, a mixed +C/−R round, and an eviction-only round —
+//!   on the empirical, intrinsic, sparse, and KBR paths.
+//! * A stream with 50% repeated rows folded through the engine must equal
+//!   the unfolded reference to 1e-10, with a strictly smaller store.
+
+use mikrr::config::Space;
+use mikrr::coordinator::engine::Engine;
+use mikrr::data::synth;
+use mikrr::kbr::{KbrHyper, KbrModel};
+use mikrr::kernels::Kernel;
+use mikrr::krr::empirical::EmpiricalKrr;
+use mikrr::krr::empirical_sparse::SparseEmpiricalKrr;
+use mikrr::krr::intrinsic::IntrinsicKrr;
+use mikrr::krr::KrrModel;
+use mikrr::linalg::{Mat, SparseMat};
+
+const D: usize = 3;
+
+/// Derive a (N, D) target matrix from one scalar label stream.
+fn multi_targets(y: &[f64], d: usize) -> Mat {
+    Mat::from_fn(y.len(), d, |i, j| {
+        (1.0 + 0.5 * j as f64) * y[i] + 0.1 * (j as f64) * (y[i] * y[i] - 0.5)
+    })
+}
+
+fn col_mat(y: &Mat, c: usize) -> Mat {
+    Mat::from_vec(y.rows(), 1, y.col(c)).unwrap()
+}
+
+/// Drive fit + a mixed inc/dec round + an eviction-only round through any
+/// trait engine, comparing the D-output engine against D singles.
+fn assert_trait_engine_parity<F>(fit: F, dim: usize)
+where
+    F: Fn(&Mat, &Mat) -> Box<dyn KrrModel>,
+{
+    let base = synth::ecg_like(80, dim, 3);
+    let ym = multi_targets(&base.y, D);
+    let mut multi = fit(&base.x, &ym);
+    let mut singles: Vec<Box<dyn KrrModel>> =
+        (0..D).map(|c| fit(&base.x, &col_mat(&ym, c))).collect();
+
+    let extra = synth::ecg_like(6, dim, 5);
+    let ye = multi_targets(&extra.y, D);
+    // round 1: mixed +6/−3
+    let rem1 = [1usize, 7, 40];
+    multi.inc_dec_multi(&extra.x, &ye, &rem1).unwrap();
+    for (c, s) in singles.iter_mut().enumerate() {
+        s.inc_dec_multi(&extra.x, &col_mat(&ye, c), &rem1).unwrap();
+    }
+    // round 2: eviction only
+    let none_x = Mat::zeros(0, dim);
+    let rem2 = [0usize, 4, 12, 60];
+    multi.inc_dec_multi(&none_x, &Mat::zeros(0, D), &rem2).unwrap();
+    for s in singles.iter_mut() {
+        s.inc_dec_multi(&none_x, &Mat::zeros(0, 1), &rem2).unwrap();
+    }
+
+    assert_eq!(multi.n_samples(), singles[0].n_samples());
+    assert_eq!(multi.n_outputs(), D);
+    let q = synth::ecg_like(30, dim, 9);
+    let pm = multi.predict_multi(&q.x).unwrap();
+    assert_eq!(pm.shape(), (30, D));
+    let tm = multi.predict_training_multi().unwrap();
+    for (c, s) in singles.iter().enumerate() {
+        let ps = s.predict(&q.x).unwrap();
+        mikrr::testutil::assert_vec_close(&pm.col(c), &ps, 1e-10);
+        let ts = s.predict_training().unwrap();
+        mikrr::testutil::assert_vec_close(&tm.col(c), &ts, 1e-10);
+    }
+}
+
+#[test]
+fn intrinsic_multi_matches_independent_singles() {
+    assert_trait_engine_parity(
+        |x, y| Box::new(IntrinsicKrr::fit_multi(x, y, &Kernel::poly(2, 1.0), 0.5).unwrap()),
+        8,
+    );
+}
+
+#[test]
+fn empirical_multi_matches_independent_singles() {
+    assert_trait_engine_parity(
+        |x, y| Box::new(EmpiricalKrr::fit_multi(x, y, &Kernel::rbf_radius(50.0), 0.7).unwrap()),
+        8,
+    );
+}
+
+#[test]
+fn sparse_multi_matches_independent_singles() {
+    let m = 5_000;
+    let (xs, ys) = synth::drt_like_sparse(60, m, 0.01, 3);
+    let ym = multi_targets(&ys, D);
+    let poly2 = Kernel::poly(2, 1.0);
+    let mut multi = SparseEmpiricalKrr::fit_multi(&xs, &ym, &poly2, 0.6).unwrap();
+    let mut singles: Vec<SparseEmpiricalKrr> = (0..D)
+        .map(|c| SparseEmpiricalKrr::fit_multi(&xs, &col_mat(&ym, c), &poly2, 0.6).unwrap())
+        .collect();
+
+    let (xe, ye_scalar) = synth::drt_like_sparse(4, m, 0.01, 7);
+    let ye = multi_targets(&ye_scalar, D);
+    let rem1 = [2usize, 30];
+    multi.inc_dec_multi(&xe, &ye, &rem1).unwrap();
+    for (c, s) in singles.iter_mut().enumerate() {
+        s.inc_dec_multi(&xe, &col_mat(&ye, c), &rem1).unwrap();
+    }
+    let empty = SparseMat::from_rows(0, m, Vec::new()).unwrap();
+    let rem2 = [0usize, 10, 45];
+    multi.inc_dec_multi(&empty, &Mat::zeros(0, D), &rem2).unwrap();
+    for s in singles.iter_mut() {
+        s.inc_dec_multi(&empty, &Mat::zeros(0, 1), &rem2).unwrap();
+    }
+
+    assert_eq!(multi.n_samples(), singles[0].n_samples());
+    assert_eq!(multi.n_outputs(), D);
+    let (q, _) = synth::drt_like_sparse(20, m, 0.01, 11);
+    let pm = multi.predict_multi(&q).unwrap();
+    for (c, s) in singles.iter().enumerate() {
+        let ps = s.predict(&q).unwrap();
+        mikrr::testutil::assert_vec_close(&pm.col(c), &ps, 1e-10);
+    }
+}
+
+#[test]
+fn kbr_multi_matches_independent_singles() {
+    let dim = 8;
+    let base = synth::ecg_like(60, dim, 13);
+    let ym = multi_targets(&base.y, D);
+    let poly2 = Kernel::poly(2, 1.0);
+    let hyper = KbrHyper::default();
+    let mut multi = KbrModel::fit_multi(&base.x, &ym, &poly2, hyper).unwrap();
+    let mut singles: Vec<KbrModel> = (0..D)
+        .map(|c| KbrModel::fit_multi(&base.x, &col_mat(&ym, c), &poly2, hyper).unwrap())
+        .collect();
+
+    let extra = synth::ecg_like(5, dim, 17);
+    let ye = multi_targets(&extra.y, D);
+    let rem1 = [3usize, 20];
+    multi.inc_dec_multi(&extra.x, &ye, &rem1).unwrap();
+    for (c, s) in singles.iter_mut().enumerate() {
+        s.inc_dec_multi(&extra.x, &col_mat(&ye, c), &rem1).unwrap();
+    }
+    let none_x = Mat::zeros(0, dim);
+    let rem2 = [1usize, 8, 30];
+    multi.inc_dec_multi(&none_x, &Mat::zeros(0, D), &rem2).unwrap();
+    for s in singles.iter_mut() {
+        s.inc_dec_multi(&none_x, &Mat::zeros(0, 1), &rem2).unwrap();
+    }
+
+    // posterior mean columns and the SHARED predictive variance
+    let q = synth::ecg_like(16, dim, 19);
+    let pm = multi.predict_multi(&q.x).unwrap();
+    assert_eq!(pm.mean.shape(), (16, D));
+    for (c, s) in singles.iter().enumerate() {
+        let ps = s.predict(&q.x).unwrap();
+        mikrr::testutil::assert_vec_close(&pm.mean.col(c), &ps.mean, 1e-10);
+        // the precision is target-independent: every single-output twin
+        // carries the exact same variance column
+        mikrr::testutil::assert_vec_close(&pm.var, &ps.var, 1e-10);
+    }
+}
+
+/// 50%-repeat stream: the folding engine must match the unfolded
+/// reference to 1e-10 while keeping its store strictly smaller.
+fn assert_folding_stream_parity(space: Space) {
+    let dim = 8;
+    let base = synth::ecg_like(70, dim, 23);
+    let ym = multi_targets(&base.y, 2);
+    let kernel = Kernel::poly(2, 1.0);
+    let mut folding = Engine::fit_multi(&base.x, &ym, &kernel, 0.5, space, true).unwrap();
+    folding.set_fold_eps(Some(0.0));
+    let mut plain = Engine::fit_multi(&base.x, &ym, &kernel, 0.5, space, true).unwrap();
+
+    let fresh = synth::ecg_like(40, dim, 29);
+    let yf = multi_targets(&fresh.y, 2);
+    for round in 0..8 {
+        let mut xb = Mat::default();
+        let mut yb = Mat::default();
+        for k in 0..4 {
+            if k % 2 == 0 {
+                let i = round * 2 + k / 2;
+                xb.push_row(fresh.x.row(i)).unwrap();
+                yb.push_row(yf.row(i)).unwrap();
+            } else {
+                // exact repeat of a stored row, re-delivering its stored
+                // (already multiplicity-averaged) target; drawn away from
+                // the head so evictions never hit a weighted row
+                let (xs, ys) = folding.training_view();
+                let j = 30 + (round * 7 + k) % 35;
+                let (xr, yr) = (xs.row(j).to_vec(), ys.row(j).to_vec());
+                xb.push_row(&xr).unwrap();
+                yb.push_row(&yr).unwrap();
+            }
+        }
+        let rem = [round];
+        folding.inc_dec_multi(&xb, &yb, &rem).unwrap();
+        plain.inc_dec_multi(&xb, &yb, &rem).unwrap();
+        assert_eq!(folding.last_round_folds(), 2, "round {round} should fold both repeats");
+    }
+
+    // folded store is strictly smaller; multiplicity mass is conserved
+    assert!(folding.n_samples() < plain.n_samples());
+    assert_eq!(plain.n_samples() - folding.n_samples(), 16);
+    let mass: f64 = folding.multiplicities().iter().sum();
+    assert!((mass - plain.n_samples() as f64).abs() < 1e-9);
+    assert!(folding.multiplicities().iter().any(|&c| c > 1.0));
+
+    // numerically equivalent posterior: predictions and uncertainty
+    let q = synth::ecg_like(25, dim, 31);
+    let pf = folding.predict_multi(&q.x).unwrap();
+    let pp = plain.predict_multi(&q.x).unwrap();
+    mikrr::testutil::assert_mat_close(&pf, &pp, 1e-10);
+    let (mf, vf) = folding.predict_with_uncertainty_multi(&q.x).unwrap();
+    let (mp, vp) = plain.predict_with_uncertainty_multi(&q.x).unwrap();
+    mikrr::testutil::assert_mat_close(&mf, &mp, 1e-10);
+    mikrr::testutil::assert_vec_close(&vf, &vp, 1e-10);
+}
+
+#[test]
+fn folding_stream_matches_unfolded_intrinsic() {
+    assert_folding_stream_parity(Space::Intrinsic);
+}
+
+#[test]
+fn folding_stream_matches_unfolded_empirical() {
+    assert_folding_stream_parity(Space::Empirical);
+}
+
+#[test]
+fn near_duplicate_folding_respects_epsilon() {
+    // ε-near repeats fold when within the tolerance and insert when not
+    let dim = 6;
+    let base = synth::ecg_like(40, dim, 37);
+    let ym = multi_targets(&base.y, 1);
+    let kernel = Kernel::poly(2, 1.0);
+    let mut e = Engine::fit_multi(&base.x, &ym, &kernel, 0.5, Space::Intrinsic, false).unwrap();
+    e.set_fold_eps(Some(1e-6));
+    let n0 = e.n_samples();
+
+    // within epsilon: folds
+    let mut near = base.x.row(10).to_vec();
+    near[0] += 1e-9;
+    let xb = Mat::from_vec(1, dim, near).unwrap();
+    let yb = Mat::from_vec(1, 1, vec![ym[(10, 0)]]).unwrap();
+    e.inc_dec_multi(&xb, &yb, &[]).unwrap();
+    assert_eq!(e.last_round_folds(), 1);
+    assert_eq!(e.n_samples(), n0);
+
+    // outside epsilon: inserts
+    let mut far = base.x.row(10).to_vec();
+    far[0] += 1e-3;
+    let xb = Mat::from_vec(1, dim, far).unwrap();
+    e.inc_dec_multi(&xb, &yb, &[]).unwrap();
+    assert_eq!(e.last_round_folds(), 0);
+    assert_eq!(e.n_samples(), n0 + 1);
+}

@@ -258,7 +258,7 @@ fn bad_event_does_not_corrupt_published_state() {
     let h = router.handle();
     let (xq, _) = data(4, 5, 1009);
     let p0 = h.predict(&xq).unwrap();
-    router.ingest(StreamEvent { x: vec![0.0; 2], y: 1.0, source_id: 0, seq: 0 });
+    router.ingest(StreamEvent::single(vec![0.0; 2], 1.0, 0, 0));
     let report = router.update_round();
     assert!(report.is_empty(), "a rejected event is not a round: {report:?}");
     assert_eq!(h.epochs(), vec![0], "rejected event must not publish");
@@ -269,6 +269,194 @@ fn bad_event_does_not_corrupt_published_state() {
         assert_eq!(a, b, "published state changed after a rejected event");
     }
     // direct apply_batch still surfaces the shape error to explicit callers
-    let bad = StreamEvent { x: vec![0.0; 2], y: 1.0, source_id: 0, seq: 1 };
+    let bad = StreamEvent::single(vec![0.0; 2], 1.0, 0, 1);
     assert!(router.shard_mut(0).apply_batch(&[bad]).is_err());
+}
+
+/// Multi-output targets derived from one scalar stream (D calibrated
+/// transforms of the same signal).
+fn multi_targets(y: &[f64], d: usize) -> Mat {
+    Mat::from_fn(y.len(), d, |i, j| (1.0 + 0.5 * j as f64) * y[i])
+}
+
+/// Satellite 3 — shard-permutation invariance. Both fan-in estimators are
+/// order-free reductions (DC-KRR: a sum divided by K; KBR: precision-
+/// weighted sums), so serving the same query through any permutation of
+/// the shard handles must agree to 1e-12. Seed-matrixed: three bootstrap
+/// seeds × three permutations each (reverse, rotation, and a fixed
+/// shuffle).
+#[test]
+fn fanin_is_invariant_under_shard_permutation() {
+    for seed in [11u64, 29, 53] {
+        let (x, y) = data(240, 5, seed);
+        let (xq, _) = data(16, 5, 2000 + seed);
+        let router = ShardRouter::bootstrap(&x, &y, serve_cfg(4, true)).unwrap();
+        let h = router.handle();
+        let base_mean = h.predict(&xq).unwrap();
+        let (base_mu, base_var) = h.predict_with_uncertainty(&xq).unwrap();
+        for order in [[3usize, 2, 1, 0], [1, 2, 3, 0], [2, 0, 3, 1]] {
+            let hp = h.permuted(&order).unwrap();
+            let mean = hp.predict(&xq).unwrap();
+            let (mu, var) = hp.predict_with_uncertainty(&xq).unwrap();
+            for i in 0..xq.rows() {
+                assert!(
+                    (mean[i] - base_mean[i]).abs() < 1e-12,
+                    "seed {seed} order {order:?}: DC-KRR mean drifted at row {i}"
+                );
+                assert!(
+                    (mu[i] - base_mu[i]).abs() < 1e-12,
+                    "seed {seed} order {order:?}: KBR fused mean drifted at row {i}"
+                );
+                assert!(
+                    (var[i] - base_var[i]).abs() < 1e-12,
+                    "seed {seed} order {order:?}: KBR fused variance drifted at row {i}"
+                );
+            }
+        }
+        // permuted() validates its input
+        assert!(h.permuted(&[0, 1, 2]).is_err(), "wrong length");
+        assert!(h.permuted(&[0, 1, 2, 2]).is_err(), "not a permutation");
+    }
+}
+
+/// The multi-output twin of `fanin_is_invariant_under_shard_permutation`:
+/// the packed (B, D) fan-in paths must be permutation-invariant too.
+#[test]
+fn multi_output_fanin_is_invariant_under_shard_permutation() {
+    for seed in [13u64, 31] {
+        let (x, y) = data(240, 5, seed);
+        let ym = multi_targets(&y, 4);
+        let (xq, _) = data(12, 5, 3000 + seed);
+        let router = ShardRouter::bootstrap_multi(&x, &ym, serve_cfg(4, true)).unwrap();
+        let h = router.handle();
+        let base_mean = h.predict_multi(&xq).unwrap();
+        let (base_mu, base_var) = h.predict_with_uncertainty_multi(&xq).unwrap();
+        for order in [[3usize, 2, 1, 0], [1, 2, 3, 0]] {
+            let hp = h.permuted(&order).unwrap();
+            let mean = hp.predict_multi(&xq).unwrap();
+            let (mu, var) = hp.predict_with_uncertainty_multi(&xq).unwrap();
+            for i in 0..xq.rows() {
+                for c in 0..4 {
+                    assert!((mean[(i, c)] - base_mean[(i, c)]).abs() < 1e-12);
+                    assert!((mu[(i, c)] - base_mu[(i, c)]).abs() < 1e-12);
+                }
+                assert!((var[i] - base_var[i]).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+/// K=4 shard parity at D=4: every output column of the sharded multi
+/// prediction tracks the single-engine multi baseline within the same
+/// DC-KRR envelope the D=1 test asserts.
+#[test]
+fn kshard_parity_at_d4_with_single_engine_baseline() {
+    for seed in [1u64, 7] {
+        let (x, y) = data(240, 6, seed);
+        let ym = multi_targets(&y, 4);
+        let (xq, _) = data(40, 6, 1000 + seed);
+        let router = ShardRouter::bootstrap_multi(&x, &ym, serve_cfg(4, false)).unwrap();
+        let single = mikrr::coordinator::engine::Engine::fit_multi(
+            &x,
+            &ym,
+            &Kernel::poly(2, 1.0),
+            0.5,
+            router.space(),
+            false,
+        )
+        .unwrap();
+        let sharded = router.handle().predict_multi(&xq).unwrap();
+        let baseline = single.predict_multi(&xq).unwrap();
+        assert_eq!(sharded.shape(), (40, 4));
+        for c in 0..4 {
+            let dev = rmse(&sharded.col(c), &baseline.col(c));
+            // column c's signal is (1 + 0.5 c)× the D=1 signal; the DC-KRR
+            // deviation scales with it
+            let scale = 1.0 + 0.5 * c as f64;
+            assert!(dev < 0.30 * scale, "seed {seed} col {c}: sharded-vs-single rmse {dev}");
+        }
+    }
+}
+
+/// Rollback at D=4: a failing multi round on a snapshot_rollback shard
+/// must restore the engine, leave the published epoch untouched, count
+/// the rollback, and keep accepting valid multi rounds afterwards.
+#[test]
+fn failed_multi_round_rolls_back_and_recovers_at_d4() {
+    let (x, y) = data(60, 5, 21);
+    let ym = multi_targets(&y, 4);
+    let mut cfg = serve_cfg(1, false);
+    cfg.base.snapshot_rollback = true;
+    let mut router = ShardRouter::bootstrap_multi(&x, &ym, cfg).unwrap();
+    let h = router.handle();
+    let (xq, _) = data(6, 5, 1021);
+    let p0 = h.predict_multi(&xq).unwrap();
+
+    // an out-of-range removal fails inside the engine round
+    let (xc, yc) = data(2, 5, 22);
+    let ycm = multi_targets(&yc, 4);
+    let err = router.shard_mut(0).apply_update_multi(&xc, &ycm, &[500]);
+    assert!(err.is_err(), "out-of-range removal must fail");
+    assert_eq!(router.shard(0).counters.get("rollbacks"), 1);
+    assert_eq!(h.epochs(), vec![0], "failed round must not publish");
+    let p1 = h.predict_multi(&xq).unwrap();
+    for (a, b) in p0.as_slice().iter().zip(p1.as_slice()) {
+        assert_eq!(a, b, "published state changed after a rolled-back round");
+    }
+
+    // the shard keeps working: a valid multi round lands and publishes
+    let out = router.shard_mut(0).apply_update_multi(&xc, &ycm, &[0, 1]).unwrap();
+    assert_eq!(out.added, 2);
+    assert_eq!(h.epochs(), vec![1]);
+    assert_eq!(router.n_samples(), 60);
+
+    // D=1 surface stays shimmed off on a D=4 shard
+    assert!(router.shard_mut(0).apply_update(&xc, &yc, &[]).is_err());
+    assert!(h.predict(&xq).is_err());
+}
+
+/// Multi-output events stream end to end at D=4: router fan-out, shard
+/// batch assembly, and the coalesced multi predict answered as one packed
+/// round.
+#[test]
+fn router_streams_multi_output_events_end_to_end() {
+    let (x, y) = data(160, 6, 23);
+    let ym = multi_targets(&y, 4);
+    let mut router = ShardRouter::bootstrap_multi(&x, &ym, serve_cfg(2, true)).unwrap();
+    let n0 = router.n_samples();
+
+    let (xs, ys) = data(24, 6, 24);
+    let ysm = multi_targets(&ys, 4);
+    for i in 0..24 {
+        router.ingest(StreamEvent::multi(xs.row(i).to_vec(), ysm.row(i), 0, i as u64));
+    }
+    let mut rounds = 0;
+    loop {
+        let report = router.update_round();
+        if report.is_empty() {
+            break;
+        }
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        rounds += 1;
+        assert!(rounds < 100, "stream did not drain");
+    }
+    assert_eq!(router.n_samples(), n0 + 24);
+
+    // a D=4 microbatch client coalesces multi requests into packed rounds
+    let h = router.handle();
+    let (xq, _) = data(8, 6, 1023);
+    let direct = h.predict_multi(&xq).unwrap();
+    let server = MicroBatchServer::spawn(h, 6, MicroBatchPolicy::default());
+    let mut client = server.client();
+    for i in 0..8 {
+        let got = client.predict_multi(xq.row(i)).unwrap();
+        assert_eq!(got.len(), 4);
+        for c in 0..4 {
+            assert!((got[c] - direct[(i, c)]).abs() < 1e-9);
+        }
+    }
+    // scalar requests error cleanly against the D=4 deployment
+    assert!(client.predict(xq.row(0)).is_err());
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 9);
 }
