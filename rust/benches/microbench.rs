@@ -39,6 +39,11 @@
 //!   rounds replace duplicate inserts with rank-1 multiplicity bumps
 //!   (`multi/fold_hot_sensors`, tracked `speedup_fold_hot_sensors`). The
 //!   run's target dim D and fold ratio are recorded in the env block.
+//! * `health/*`            — the per-round residual probe (4 sampled
+//!   columns against the maintained inverse) vs the full refit it gates
+//!   (`health/probe_residual`, tracked `speedup_health_probe_vs_refit`):
+//!   quantifies that always-on health checking is orders cheaper than the
+//!   recovery it triggers.
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
@@ -605,6 +610,31 @@ fn main() {
         });
     }
 
+    // ---- health/*: numerical health probes (ISSUE 7) ----
+    // the per-round residual probe (4 sampled columns: kernel/scatter row
+    // + GEMV against the maintained inverse) vs the full refactorization
+    // it gates — the probe must be cheap enough to run every round, the
+    // refit is the recovery cost paid only on a trip
+    if b.enabled("health/probe_residual") {
+        use mikrr::config::Space;
+        use mikrr::coordinator::engine::Engine;
+        use mikrr::health::{HealthProbe, ProbeConfig};
+
+        let d = mikrr::data::synth::ecg_like(600, 21, 31);
+        let poly2 = Kernel::poly(2, 1.0);
+        let mut eng =
+            Engine::fit(&d.x, &d.y, &poly2, 0.5, Space::Intrinsic, false).unwrap();
+        let mut probe = HealthProbe::new(ProbeConfig::default());
+        probe.check(&eng).unwrap(); // warm the probe buffers
+        b.bench("health/probe_residual/check4_J253", || {
+            black_box(probe.check(&eng).unwrap());
+        });
+        b.bench("health/probe_residual/refit_J253", || {
+            eng.refit().unwrap();
+            black_box(eng.n_samples());
+        });
+    }
+
     // ---- machine-readable reports ----
     let mut extras: Vec<(&str, f64)> =
         vec![("threads", mikrr::par::num_threads() as f64)];
@@ -680,6 +710,11 @@ fn main() {
             "speedup_fold_hot_sensors",
             "multi/fold_hot_sensors/unfolded",
             "multi/fold_hot_sensors/folded",
+        ),
+        (
+            "speedup_health_probe_vs_refit",
+            "health/probe_residual/refit_J253",
+            "health/probe_residual/check4_J253",
         ),
     ] {
         if let (Some(s), Some(f)) = (b.summary(slow), b.summary(fast)) {

@@ -432,6 +432,87 @@ impl Engine {
     pub fn restore(&mut self, snap: Snapshot) {
         *self = *snap.state;
     }
+
+    /// Number of probe-able residual indices for [`Engine::probe_residual_into`]:
+    /// the maintained inverse's side (N for the empirical `Q⁻¹`, J for the
+    /// intrinsic `S⁻¹`).
+    pub fn probe_dim(&self) -> usize {
+        match &self.krr {
+            KrrEngine::Intrinsic(m) => m.j(),
+            KrrEngine::Empirical(_) => self.y.rows(),
+        }
+    }
+
+    /// Numerical health probe on the maintained inverse: ∞-norm of row `i`
+    /// of `A·A⁻¹ − I` where `A` is rebuilt exactly from the retained
+    /// stores (`K + ρC⁻¹` empirical, `ΦᵀCΦ + ρI` intrinsic). Exactly 0 in
+    /// exact arithmetic; drift accumulated over incremental rounds shows
+    /// up here long before predictions go visibly wrong. Allocation-free
+    /// once `g`/`r` are warm.
+    pub fn probe_residual_into(
+        &self,
+        i: usize,
+        g: &mut Vec<f64>,
+        r: &mut Vec<f64>,
+    ) -> Result<f64> {
+        match &self.krr {
+            KrrEngine::Intrinsic(m) => m.probe_residual_into(i, g, r),
+            KrrEngine::Empirical(m) => m.probe_residual_into(i, g, r),
+        }
+    }
+
+    /// Self-heal: rebuild every maintained inverse from the retained
+    /// training stores (full refactorization), then replay the duplicate
+    /// multiplicities as rank-1 folds so the healed engine carries the
+    /// exact same `C = diag(c_i)` weighting as the drifted one. Replaying
+    /// a row's own averaged target leaves the target fixed
+    /// (`(c·ȳ + ȳ)/(c + 1) = ȳ`) while each fold bumps the weight — so the
+    /// healed state matches what a never-drifted engine would hold.
+    /// O(N·J² + J³) (or O(N³) empirical): the slow path by design; the
+    /// serving layer runs it on the writer copy while readers keep serving
+    /// the last published epoch.
+    pub fn refit(&mut self) -> Result<()> {
+        let mut healed = Engine::fit_multi(
+            &self.x,
+            &self.y,
+            &self.kernel,
+            self.ridge,
+            self.space,
+            self.kbr.is_some(),
+        )?;
+        healed.fold_eps = self.fold_eps;
+        let d = self.y.cols();
+        let mut y_row = Mat::default();
+        y_row.resize_scratch(1, d);
+        let x_row = Mat::default(); // apply_folds never reads features
+        for i in 0..self.mult.len() {
+            let reps = (self.mult[i] - 1.0).round() as usize;
+            for _ in 0..reps {
+                y_row.as_mut_slice().copy_from_slice(self.y.row(i));
+                match &mut healed.krr {
+                    KrrEngine::Intrinsic(m) => m.apply_folds(&[(i, 0)], &x_row, &y_row)?,
+                    KrrEngine::Empirical(m) => m.apply_folds(&[(i, 0)], &x_row, &y_row)?,
+                }
+                if let Some(kbr) = &mut healed.kbr {
+                    kbr.apply_folds(&[(i, 0)], &x_row, &y_row)?;
+                }
+                healed.mult[i] += 1.0;
+            }
+        }
+        *self = healed;
+        Ok(())
+    }
+
+    /// Chaos-only hook: multiplicatively corrupt one entry of the
+    /// maintained inverse so health probes have real drift to detect
+    /// (compiled out of non-chaos builds).
+    #[cfg(feature = "chaos")]
+    pub fn chaos_corrupt_inverse(&mut self, factor: f64) {
+        match &mut self.krr {
+            KrrEngine::Intrinsic(m) => m.chaos_scale_inverse(factor),
+            KrrEngine::Empirical(m) => m.chaos_scale_inverse(factor),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -559,6 +640,56 @@ mod tests {
         assert_eq!(mean.shape(), (4, 2));
         assert_eq!(var.len(), 4);
         assert!(var.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn probe_residual_tiny_on_fresh_fit_both_spaces() {
+        let d = synth::ecg_like(40, 5, 21);
+        let mut g = Vec::new();
+        let mut r = Vec::new();
+        for space in [Space::Intrinsic, Space::Empirical] {
+            let e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, space, false).unwrap();
+            assert!(e.probe_dim() > 0);
+            for i in 0..e.probe_dim() {
+                let res = e.probe_residual_into(i, &mut g, &mut r).unwrap();
+                assert!(res < 1e-8, "{space:?} probe {i} residual {res}");
+            }
+            assert!(e.probe_residual_into(e.probe_dim(), &mut g, &mut r).is_err());
+        }
+    }
+
+    #[test]
+    fn refit_reproduces_folded_engine_exactly() {
+        let d = synth::ecg_like(30, 5, 22);
+        let mut e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true)
+            .unwrap();
+        e.set_fold_eps(Some(0.0));
+        // fold stored rows 4 and 7 plus a fresh row, then a removal round
+        let fresh = synth::ecg_like(1, 5, 23);
+        let xb = Mat::from_fn(3, 5, |r, c| match r {
+            0 => d.x[(4, c)],
+            1 => fresh.x[(0, c)],
+            _ => d.x[(7, c)],
+        });
+        e.inc_dec(&xb, &[0.3, fresh.y[0], -0.4], &[]).unwrap();
+        e.inc_dec(&Mat::zeros(0, 5), &[], &[2]).unwrap();
+        let q = d.x.block(0, 8, 0, 5);
+        let p_before = e.predict(&q).unwrap();
+        let (m_before, v_before) = e.predict_with_uncertainty(&q).unwrap();
+        let mult_before = e.multiplicities().to_vec();
+        e.refit().unwrap();
+        assert_eq!(e.multiplicities(), &mult_before[..], "refit must replay C");
+        let p_after = e.predict(&q).unwrap();
+        crate::testutil::assert_vec_close(&p_after, &p_before, 1e-9);
+        let (m_after, v_after) = e.predict_with_uncertainty(&q).unwrap();
+        crate::testutil::assert_vec_close(&m_after, &m_before, 1e-9);
+        crate::testutil::assert_vec_close(&v_after, &v_before, 1e-9);
+        // and the healed inverse probes clean
+        let mut g = Vec::new();
+        let mut r = Vec::new();
+        for i in 0..e.probe_dim() {
+            assert!(e.probe_residual_into(i, &mut g, &mut r).unwrap() < 1e-8);
+        }
     }
 
     #[test]

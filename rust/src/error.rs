@@ -59,7 +59,14 @@ impl fmt::Display for Error {
     }
 }
 
-impl std::error::Error for Error {}
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
@@ -76,6 +83,28 @@ impl Error {
     /// Shorthand constructor for numerical errors.
     pub fn numerical(context: &'static str, detail: impl Into<String>) -> Self {
         Error::Numerical { context, detail: detail.into() }
+    }
+
+    /// Transient-vs-permanent classification — the serve-layer supervisor's
+    /// retry policy keys off this ([`crate::serve::ShardSupervisor`]).
+    ///
+    /// *Transient* means a retry of the same operation can plausibly
+    /// succeed once conditions change: a numerical failure can clear after
+    /// a rollback + self-heal refactorization, and stream / I/O / runtime
+    /// failures are environmental. *Permanent* errors are deterministic
+    /// functions of the request itself (wrong shape, bad config, an
+    /// invalid removal set, a broken artifact) — retrying replays the same
+    /// failure, so the supervisor quarantines instead of retrying.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            Error::Numerical { .. } | Error::Stream(_) | Error::Io(_) | Error::Runtime(_) => {
+                true
+            }
+            Error::Shape { .. }
+            | Error::InvalidUpdate(_)
+            | Error::Config(_)
+            | Error::Artifact(_) => false,
+        }
     }
 }
 
@@ -108,5 +137,28 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn io_source_is_exposed() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        let src = e.source().expect("Io carries a source");
+        assert!(src.to_string().contains("gone"));
+        assert!(Error::Config("x".into()).source().is_none());
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(Error::numerical("woodbury", "singular core").is_transient());
+        assert!(Error::Stream("channel closed".into()).is_transient());
+        assert!(Error::Runtime("pjrt".into()).is_transient());
+        let io: Error = std::io::Error::new(std::io::ErrorKind::TimedOut, "t").into();
+        assert!(io.is_transient());
+        assert!(!Error::shape("gemm", "3 != 4").is_transient());
+        assert!(!Error::InvalidUpdate("remove 9 >= n 5".into()).is_transient());
+        assert!(!Error::Config("bad".into()).is_transient());
+        assert!(!Error::Artifact("missing manifest".into()).is_transient());
     }
 }

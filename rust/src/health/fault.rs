@@ -1,0 +1,174 @@
+//! Deterministic fault injection plans for chaos testing.
+//!
+//! A [`FaultPlan`] is a seeded, fully precomputed schedule: *which* shard
+//! suffers *what* [`FaultKind`] at *which* serving round. Two runs with the
+//! same seed inject byte-identical faults, so a chaos failure reproduces
+//! from nothing but its seed (the CI lane prints it).
+//!
+//! The plan type and its logic are ALWAYS compiled — they are plain data
+//! and stay unit-tested in tier-1. Only the *injection call sites* in the
+//! serve layer are gated behind the `chaos` cargo feature; without it the
+//! hooks are empty `#[inline(always)]` functions and the whole mechanism
+//! compiles to nothing.
+
+use crate::util::prng::Rng;
+
+/// One kind of injected failure.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Overwrite one pending event's features with NaN — must be rejected
+    /// at the event boundary, never reach an engine.
+    NanRow,
+    /// Overwrite one pending event's features with +Inf — same boundary
+    /// contract as [`FaultKind::NanRow`].
+    InfRow,
+    /// Overwrite one pending event's features with finite-but-huge values
+    /// that overflow the Gram matrix — a *poison batch*: passes boundary
+    /// validation, then fails numerically on every retry, and must end in
+    /// batch quarantine rather than an infinite requeue.
+    PoisonRow,
+    /// Make the shard's update round return `Error::Numerical` once (the
+    /// canonical transient failure — succeeds on retry).
+    ForcedNumerical,
+    /// Wedge the shard: its update rounds fail for the next `rounds`
+    /// rounds, driving consecutive-failure shard quarantine while the
+    /// router serves from the remaining K−1 shards.
+    Wedge {
+        /// How many consecutive rounds stay wedged.
+        rounds: u32,
+    },
+    /// Multiply one entry of the maintained inverse by `factor` — silent
+    /// corruption only a health probe can see, driving the self-heal path.
+    CorruptInverse {
+        /// Multiplicative corruption (e.g. `1.5` = 50% off).
+        factor: f64,
+    },
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScheduledFault {
+    /// Target shard index.
+    pub shard: usize,
+    /// Serving round (0-based supervisor round) at which it fires.
+    pub round: u64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A deterministic, inspectable schedule of faults.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed the plan was built from (0 for hand-built plans).
+    pub seed: u64,
+    faults: Vec<ScheduledFault>,
+}
+
+impl FaultPlan {
+    /// Empty plan (hand-build with [`FaultPlan::push`]).
+    pub fn new(seed: u64) -> Self {
+        Self { seed, faults: Vec::new() }
+    }
+
+    /// Add one scheduled fault.
+    pub fn push(&mut self, shard: usize, round: u64, kind: FaultKind) -> &mut Self {
+        self.faults.push(ScheduledFault { shard, round, kind });
+        self
+    }
+
+    /// Random plan: `n_faults` faults spread over `shards × rounds`,
+    /// drawn deterministically from `seed`. Wedges and inverse corruption
+    /// are scheduled early enough to also exercise the recovery half of
+    /// their state machines within the run.
+    pub fn random(seed: u64, shards: usize, rounds: u64, n_faults: usize) -> Self {
+        assert!(shards > 0 && rounds > 0, "FaultPlan::random needs a grid");
+        let mut rng = Rng::new(seed ^ 0xFA117_F1A9);
+        let mut plan = Self::new(seed);
+        for _ in 0..n_faults {
+            let shard = rng.below(shards);
+            let round = rng.below(rounds as usize) as u64;
+            let kind = match rng.below(6) {
+                0 => FaultKind::NanRow,
+                1 => FaultKind::InfRow,
+                2 => FaultKind::PoisonRow,
+                3 => FaultKind::ForcedNumerical,
+                4 => FaultKind::Wedge { rounds: 1 + rng.below(3) as u32 },
+                _ => FaultKind::CorruptInverse { factor: rng.range(1.5, 4.0) },
+            };
+            plan.push(shard, round, kind);
+        }
+        plan
+    }
+
+    /// All scheduled faults, in insertion order.
+    pub fn faults(&self) -> &[ScheduledFault] {
+        &self.faults
+    }
+
+    /// Total scheduled faults.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Faults firing on `(shard, round)`.
+    pub fn firing(&self, shard: usize, round: u64) -> impl Iterator<Item = &ScheduledFault> {
+        self.faults
+            .iter()
+            .filter(move |f| f.shard == shard && f.round == round)
+    }
+
+    /// Count of scheduled faults matching a predicate — used by chaos
+    /// tests to check observed counters against the injected plan.
+    pub fn count_where(&self, pred: impl Fn(&ScheduledFault) -> bool) -> usize {
+        self.faults.iter().filter(|f| pred(f)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_plan() {
+        let a = FaultPlan::random(42, 4, 20, 10);
+        let b = FaultPlan::random(42, 4, 20, 10);
+        assert_eq!(a.faults(), b.faults());
+        assert_eq!(a.len(), 10);
+        let c = FaultPlan::random(43, 4, 20, 10);
+        assert_ne!(a.faults(), c.faults(), "different seeds must differ");
+    }
+
+    #[test]
+    fn firing_filters_by_cell() {
+        let mut p = FaultPlan::new(0);
+        p.push(0, 3, FaultKind::NanRow)
+            .push(1, 3, FaultKind::ForcedNumerical)
+            .push(0, 3, FaultKind::InfRow)
+            .push(0, 4, FaultKind::PoisonRow);
+        let at: Vec<_> = p.firing(0, 3).map(|f| f.kind).collect();
+        assert_eq!(at, vec![FaultKind::NanRow, FaultKind::InfRow]);
+        assert_eq!(p.firing(2, 3).count(), 0);
+        assert_eq!(p.count_where(|f| f.shard == 0), 3);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn random_plan_stays_on_grid() {
+        let p = FaultPlan::random(7, 3, 15, 40);
+        for f in p.faults() {
+            assert!(f.shard < 3);
+            assert!(f.round < 15);
+            if let FaultKind::Wedge { rounds } = f.kind {
+                assert!((1..=3).contains(&rounds));
+            }
+            if let FaultKind::CorruptInverse { factor } = f.kind {
+                assert!((1.5..4.0).contains(&factor));
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Numerical health monitoring and deterministic fault injection for the
+//! self-healing serving tier.
+//!
+//! The paper's premise is one maintained inverse surviving thousands of
+//! incremental/decremental rounds — but floating-point drift, a NaN sensor
+//! row, or a near-singular batch can corrupt that inverse *silently*: the
+//! engine keeps answering, every answer is wrong. This module gives the
+//! serve layer the two missing pieces:
+//!
+//! * [`probe`] — cheap per-round residual checks on the maintained inverse
+//!   (`‖row_i(A·A⁻¹ − I)‖∞` for a rotating sample of indices) plus a drift
+//!   counter, so corruption is *detected* within a bounded number of rounds
+//!   instead of never. When the counter trips, the supervisor self-heals
+//!   via [`crate::coordinator::engine::Engine::refit`] on the writer copy
+//!   while readers keep serving the last published epoch.
+//! * [`fault`] — a seeded, deterministic [`fault::FaultPlan`] describing
+//!   *which* shard suffers *what* fault at *which* round (NaN/Inf rows,
+//!   poison batches, forced numerical failures, wedged shards, corrupted
+//!   inverses). The plan logic is always compiled so it stays unit-tested;
+//!   the injection call sites in `serve/` only exist under the `chaos`
+//!   cargo feature and compile to nothing otherwise.
+
+pub mod fault;
+pub mod probe;
+
+pub use fault::{FaultKind, FaultPlan, ScheduledFault};
+pub use probe::{HealthProbe, HealthVerdict, ProbeConfig, ProbeReport};

@@ -1,0 +1,217 @@
+//! Residual health probes on the maintained inverse.
+//!
+//! A probe samples `k` indices of the residual operator `A·A⁻¹ − I`
+//! (exactly zero in exact arithmetic) and reports the worst ∞-norm seen.
+//! Indices rotate round-robin across calls, so over `ceil(dim / k)`
+//! consecutive checks every row of the inverse gets inspected — a cheap
+//! amortized full audit instead of an O(N³) verification per round. The
+//! per-probe cost is one kernel/scatter row plus one symmetric mat-vec
+//! (see `EmpiricalKrr::probe_residual_into` / `IntrinsicKrr::probe_residual_into`).
+//!
+//! Single breaches are tolerated (`Degraded`): one bad probe can be an
+//! ill-conditioned row rather than real corruption. Only
+//! [`ProbeConfig::trip_after`] *consecutive* breaching checks escalate to
+//! `Critical`, which is the supervisor's signal to self-heal.
+
+use crate::coordinator::engine::Engine;
+use crate::error::Result;
+
+/// Tuning knobs for a [`HealthProbe`].
+#[derive(Clone, Debug)]
+pub struct ProbeConfig {
+    /// Residual indices sampled per check (clamped to the probe dim).
+    pub samples: usize,
+    /// ∞-norm residual above which a check counts as a breach.
+    pub threshold: f64,
+    /// Consecutive breaching checks before the verdict turns `Critical`.
+    pub trip_after: usize,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        // 1e-6 is ~1e8 ULPs of headroom over the ~1e-14 residuals a
+        // healthy double-precision inverse shows at our problem sizes,
+        // while still catching a single corrupted entry immediately.
+        Self { samples: 4, threshold: 1e-6, trip_after: 2 }
+    }
+}
+
+/// Outcome classification of one health check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthVerdict {
+    /// All sampled residuals under threshold.
+    Healthy,
+    /// Breach seen, but not enough consecutive ones to trip yet.
+    Degraded,
+    /// `trip_after` consecutive breaching checks — self-heal now.
+    Critical,
+}
+
+/// What one [`HealthProbe::check`] observed.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeReport {
+    /// Worst ∞-norm residual across the sampled indices.
+    pub max_residual: f64,
+    /// Index that produced `max_residual`.
+    pub worst_index: usize,
+    /// Current consecutive-breach count (the drift counter).
+    pub consecutive_breaches: usize,
+    /// Classification under the probe's config.
+    pub verdict: HealthVerdict,
+}
+
+/// Stateful rotating probe over one engine's maintained inverse.
+///
+/// Owns its scratch buffers, so a warm probe allocates nothing per check
+/// (asserted in `rust/tests/alloc_count.rs` on the 1-thread path).
+#[derive(Clone, Debug, Default)]
+pub struct HealthProbe {
+    cfg: ProbeConfig,
+    /// Next residual index to sample (wraps at the engine's probe dim).
+    cursor: usize,
+    /// Consecutive checks that breached the threshold.
+    consecutive_breaches: usize,
+    /// Total checks run (diagnostics).
+    checks: u64,
+    /// Total breaching checks (diagnostics).
+    breaches: u64,
+    /// Warm probe scratch: rebuilt operator row, then residual row.
+    g: Vec<f64>,
+    r: Vec<f64>,
+}
+
+impl HealthProbe {
+    /// New probe with the given config.
+    pub fn new(cfg: ProbeConfig) -> Self {
+        Self { cfg, ..Self::default() }
+    }
+
+    /// The probe's config.
+    pub fn config(&self) -> &ProbeConfig {
+        &self.cfg
+    }
+
+    /// Consecutive breaching checks so far (resets on a clean check).
+    pub fn consecutive_breaches(&self) -> usize {
+        self.consecutive_breaches
+    }
+
+    /// Lifetime (checks, breaches) counts.
+    pub fn totals(&self) -> (u64, u64) {
+        (self.checks, self.breaches)
+    }
+
+    /// Reset the drift counter and cursor — called after a self-heal so
+    /// the healed engine starts from a clean slate.
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+        self.consecutive_breaches = 0;
+    }
+
+    /// Run one health check against `engine`: sample the next
+    /// `min(samples, probe_dim)` residual indices (rotating cursor), update
+    /// the drift counter, classify. Allocation-free once warm.
+    pub fn check(&mut self, engine: &Engine) -> Result<ProbeReport> {
+        let dim = engine.probe_dim();
+        if dim == 0 {
+            return Ok(ProbeReport {
+                max_residual: 0.0,
+                worst_index: 0,
+                consecutive_breaches: self.consecutive_breaches,
+                verdict: HealthVerdict::Healthy,
+            });
+        }
+        let k = self.cfg.samples.min(dim).max(1);
+        let mut max_residual = 0.0f64;
+        let mut worst_index = self.cursor % dim;
+        for _ in 0..k {
+            let i = self.cursor % dim;
+            self.cursor = (self.cursor + 1) % dim;
+            let res = engine.probe_residual_into(i, &mut self.g, &mut self.r)?;
+            if res > max_residual || !res.is_finite() {
+                max_residual = if res.is_finite() { res } else { f64::INFINITY };
+                worst_index = i;
+            }
+        }
+        self.checks += 1;
+        let breach = !(max_residual <= self.cfg.threshold);
+        if breach {
+            self.breaches += 1;
+            self.consecutive_breaches += 1;
+        } else {
+            self.consecutive_breaches = 0;
+        }
+        let verdict = if !breach {
+            HealthVerdict::Healthy
+        } else if self.consecutive_breaches >= self.cfg.trip_after {
+            HealthVerdict::Critical
+        } else {
+            HealthVerdict::Degraded
+        };
+        Ok(ProbeReport {
+            max_residual,
+            worst_index,
+            consecutive_breaches: self.consecutive_breaches,
+            verdict,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Space;
+    use crate::data::synth;
+    use crate::kernels::Kernel;
+
+    fn engine(space: Space) -> Engine {
+        let d = synth::ecg_like(30, 5, 31);
+        Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, space, false).unwrap()
+    }
+
+    #[test]
+    fn healthy_engine_probes_healthy() {
+        for space in [Space::Intrinsic, Space::Empirical] {
+            let e = engine(space);
+            let mut p = HealthProbe::new(ProbeConfig::default());
+            // enough checks to rotate through every index at least once
+            for _ in 0..(e.probe_dim() / 4 + 2) {
+                let rep = p.check(&e).unwrap();
+                assert_eq!(rep.verdict, HealthVerdict::Healthy, "{space:?}: {rep:?}");
+                assert!(rep.max_residual < 1e-8);
+            }
+            assert_eq!(p.consecutive_breaches(), 0);
+            let (checks, breaches) = p.totals();
+            assert!(checks > 0);
+            assert_eq!(breaches, 0);
+        }
+    }
+
+    #[test]
+    fn drift_counter_escalates_then_resets() {
+        let e = engine(Space::Intrinsic);
+        // threshold 0 below any float residual -> every check breaches
+        let mut p = HealthProbe::new(ProbeConfig {
+            samples: 2,
+            threshold: -1.0,
+            trip_after: 3,
+        });
+        assert_eq!(p.check(&e).unwrap().verdict, HealthVerdict::Degraded);
+        assert_eq!(p.check(&e).unwrap().verdict, HealthVerdict::Degraded);
+        let rep = p.check(&e).unwrap();
+        assert_eq!(rep.verdict, HealthVerdict::Critical);
+        assert_eq!(rep.consecutive_breaches, 3);
+        p.reset();
+        assert_eq!(p.consecutive_breaches(), 0);
+        // with a sane threshold the same engine is healthy again
+        let mut sane = HealthProbe::new(ProbeConfig::default());
+        assert_eq!(sane.check(&e).unwrap().verdict, HealthVerdict::Healthy);
+    }
+
+    #[test]
+    fn nan_residual_counts_as_breach() {
+        // a probe must never classify NaN as under-threshold
+        let breach = !(f64::NAN <= 1e-6);
+        assert!(breach);
+    }
+}

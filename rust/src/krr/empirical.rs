@@ -22,7 +22,7 @@
 //! M=10^6).
 
 use crate::error::{Error, Result};
-use crate::kernels::gram::{gram_into, gram_symmetric_into, GramWork};
+use crate::kernels::gram::{gram_into, gram_row, gram_symmetric_into, GramWork};
 use crate::kernels::Kernel;
 use crate::linalg::gemm::{gemv_into, ger, matmul_into};
 use crate::linalg::matrix::dot;
@@ -221,6 +221,45 @@ impl EmpiricalKrr {
     /// Per-row duplicate multiplicities (all 1.0 unless folds happened).
     pub fn multiplicities(&self) -> &[f64] {
         &self.mult
+    }
+
+    /// Numerical health probe: the ∞-norm residual of the maintained
+    /// inverse on probe column `i`,
+    /// `‖(K + ρC⁻¹) Q⁻¹ eᵢ − eᵢ‖∞` — exactly 0 in exact arithmetic, and a
+    /// direct measure of how far floating-point drift has pushed `Q⁻¹`
+    /// from the true inverse after thousands of incremental rounds.
+    ///
+    /// Cost is ONE kernel row (O(N M)) plus one symmetric mat-vec (O(N²)):
+    /// by symmetry of `K + ρC⁻¹` and `Q⁻¹`, the probed *row* of the
+    /// residual operator equals the probed column, so only row `i` of the
+    /// regularized Gram is ever formed. `g`/`r` are caller scratch —
+    /// allocation-free once warm (asserted in `rust/tests/alloc_count.rs`).
+    pub fn probe_residual_into(
+        &self,
+        i: usize,
+        g: &mut Vec<f64>,
+        r: &mut Vec<f64>,
+    ) -> Result<f64> {
+        let n = self.y.rows();
+        ensure_shape!(i < n, "EmpiricalKrr::probe_residual", "probe index {i} >= n {n}");
+        g.clear();
+        g.resize(n, 0.0);
+        gram_row(&self.kernel, &self.x, self.x.row(i), g);
+        g[i] += self.rho / self.mult[i];
+        // r = Q⁻¹ (K + ρC⁻¹) eᵢ-row — the symmetric twin of the column residual
+        gemv_into(&self.q_inv, g, r)?;
+        r[i] -= 1.0;
+        Ok(r.iter().fold(0.0f64, |m, &v| m.max(v.abs())))
+    }
+
+    /// Chaos hook: multiply one maintained-inverse entry by `factor`,
+    /// simulating accumulated floating-point drift. Only compiled in
+    /// fault-injection builds — see [`crate::health::fault`].
+    #[cfg(feature = "chaos")]
+    pub fn chaos_scale_inverse(&mut self, factor: f64) {
+        if self.q_inv.rows() > 0 {
+            self.q_inv[(0, 0)] *= factor;
+        }
     }
 
     /// Single incremental update (paper eq. 20-23 path).

@@ -249,6 +249,47 @@ impl IntrinsicKrr {
         &self.mult
     }
 
+    /// Numerical health probe: ∞-norm of row `i` of the residual operator
+    /// `S·S⁻¹ − I` where `S = ΦᵀCΦ + ρI` is rebuilt exactly from the
+    /// retained feature store. Since both `S` and the maintained `S⁻¹`
+    /// are symmetric, the probed *row* of the residual equals the probed
+    /// *column* `S⁻¹·s_i − e_i`, so one probe costs one scatter row
+    /// (O(N·J)) plus one GEMV (O(J²)) — no full scatter rebuild.
+    /// Allocation-free once `g`/`r` are warm (length J).
+    pub fn probe_residual_into(
+        &self,
+        i: usize,
+        g: &mut Vec<f64>,
+        r: &mut Vec<f64>,
+    ) -> Result<f64> {
+        let j = self.phi.cols();
+        ensure_shape!(i < j, "IntrinsicKrr::probe_residual", "probe index {i} >= J {j}");
+        g.clear();
+        g.resize(j, 0.0);
+        for n in 0..self.phi.rows() {
+            let row = self.phi.row(n);
+            let w = self.mult[n] * row[i];
+            if w != 0.0 {
+                for (gj, &pj) in g.iter_mut().zip(row.iter()) {
+                    *gj += w * pj;
+                }
+            }
+        }
+        g[i] += self.rho;
+        gemv_into(&self.s_inv, g, r)?;
+        r[i] -= 1.0;
+        Ok(r.iter().fold(0.0f64, |m, &v| m.max(v.abs())))
+    }
+
+    /// Chaos-only hook: multiplicatively corrupt one entry of the
+    /// maintained inverse so health probes have real drift to detect.
+    #[cfg(feature = "chaos")]
+    pub fn chaos_scale_inverse(&mut self, factor: f64) {
+        if self.s_inv.rows() > 0 {
+            self.s_inv[(0, 0)] *= factor;
+        }
+    }
+
     /// Single-sample incremental update (paper eq. 11) — used by the
     /// single-instance baseline. Internally a rank-1 `inc_dec`.
     pub fn inc_one(&mut self, x_new: &[f64], y_new: f64) -> Result<()> {

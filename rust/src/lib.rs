@@ -39,6 +39,7 @@ pub mod krr;
 
 pub mod coordinator;
 pub mod data;
+pub mod health;
 pub mod metrics;
 pub mod runtime;
 pub mod serve;

@@ -195,6 +195,12 @@ impl Counters {
         self.map.get(name).copied().unwrap_or(0)
     }
 
+    /// Iterate `(name, value)` pairs in name order (inspection /
+    /// aggregation across shards).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
     /// Render all counters.
     pub fn render(&self) -> String {
         self.map

@@ -302,31 +302,36 @@ fn serve_batch(
     // no KBR twin, a D=1 request against a multi-output deployment)
     // neither blocks the others nor gets rewritten
     let mean_err: Option<Error> = if want_mean {
-        handle.predict_into(&buf.xb, &mut buf.mean, &mut buf.work).err()
+        retry_once(|| handle.predict_into(&buf.xb, &mut buf.mean, &mut buf.work))
     } else {
         None
     };
     let var_err: Option<Error> = if want_var {
-        handle
-            .predict_with_uncertainty_into(&buf.xb, &mut buf.kmean, &mut buf.var, &mut buf.work)
-            .err()
+        retry_once(|| {
+            handle.predict_with_uncertainty_into(
+                &buf.xb,
+                &mut buf.kmean,
+                &mut buf.var,
+                &mut buf.work,
+            )
+        })
     } else {
         None
     };
     let mmean_err: Option<Error> = if want_mmean {
-        handle.predict_multi_into(&buf.xb, &mut buf.mean_mat, &mut buf.work).err()
+        retry_once(|| handle.predict_multi_into(&buf.xb, &mut buf.mean_mat, &mut buf.work))
     } else {
         None
     };
     let mvar_err: Option<Error> = if want_mvar {
-        handle
-            .predict_with_uncertainty_multi_into(
+        retry_once(|| {
+            handle.predict_with_uncertainty_multi_into(
                 &buf.xb,
                 &mut buf.kmean_mat,
                 &mut buf.var_multi,
                 &mut buf.work,
             )
-            .err()
+        })
     } else {
         None
     };
@@ -357,6 +362,20 @@ fn serve_batch(
         let _ = req.resp.send(reply);
     }
     total
+}
+
+/// Run one predict pass, retrying it exactly once when the failure is
+/// transient ([`Error::is_transient`]): the read path is stateless over a
+/// published epoch, so a second attempt against the (possibly newer)
+/// snapshot is safe and often lands after a mid-read republish or heal.
+/// Permanent errors (shape, config) are returned immediately — retrying
+/// cannot change them.
+fn retry_once(mut pass: impl FnMut() -> Result<()>) -> Option<Error> {
+    match pass() {
+        Ok(()) => None,
+        Err(e) if e.is_transient() => pass().err(),
+        Err(e) => Some(e),
+    }
 }
 
 /// Re-materialize a pass error for each affected request. [`Error`] is not

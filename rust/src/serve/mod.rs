@@ -32,15 +32,66 @@
 //! rounds) with the `speedup_serve_microbatch` headline wired into the CI
 //! perf gate; see EXPERIMENTS.md §Perf and `examples/serve_shard.rs` for
 //! the end-to-end drive.
+//!
+//! # Failure semantics and recovery
+//!
+//! The write path is supervised ([`supervisor`]); every failure mode has a
+//! bounded, observable outcome — never an infinite requeue, never a
+//! blocked read:
+//!
+//! * **Malformed input** (wrong dimension / target count, NaN/±Inf
+//!   payloads) is rejected at the event boundary
+//!   ([`crate::streaming::StreamEvent::validate`], counted under
+//!   `rejected` / `rejected_nonfinite`) before any engine sees it. A bad
+//!   float that slipped past would corrupt the maintained inverse
+//!   *silently*; a reject is loud and cheap.
+//! * **Transient update failures** (`Error::is_transient()`: numerical,
+//!   stream, I/O, runtime) are retried in place with deterministic
+//!   exponential backoff + jitter, up to `RetryPolicy::max_attempts`,
+//!   provided the shard's `snapshot_rollback` restored the pre-round state
+//!   (a dropped batch is never retried — the retry would consume the next
+//!   batch). Rollback means a failed round leaves the writer engine
+//!   exactly as it was, and the published epoch was never touched.
+//! * **Poison batches** — out of retry budget, or a permanent error — are
+//!   **quarantined**: pulled off the pending queue into
+//!   [`supervisor::QuarantinedBatch`] (who, when, how many attempts,
+//!   which events), counted under `batches_quarantined` /
+//!   `events_quarantined`. The requeue loop therefore strictly shrinks
+//!   and the router drain can never livelock on a batch that will never
+//!   succeed.
+//! * **Failing shards** — `quarantine_after` consecutive failed rounds,
+//!   or a critical health probe whose heal failed — flip their shared
+//!   [`publish::ShardStatus`] cell to `Quarantined`. Every read fan-in
+//!   skips them and renormalizes over the remaining K−1 shards (same
+//!   DC-KRR average / precision weighting, fewer estimators); if *all*
+//!   shards are quarantined the fan-in fails open and uses everything.
+//! * **Silent numerical drift** is caught by rotating residual probes on
+//!   the maintained inverse ([`crate::health::probe::HealthProbe`], warm
+//!   and allocation-free). `trip_after` consecutive breaches escalate to
+//!   a **self-heal**: a full refactorization from the shard's retained
+//!   training view with multiplicity replay
+//!   ([`crate::coordinator::engine::Engine::refit`]) on the *writer* copy,
+//!   then a republish. Readers serve the last published epoch for the
+//!   whole rebuild — recovery costs freshness, never availability.
+//!
+//! Chaos coverage: the `chaos` cargo feature compiles in seeded fault
+//! hooks ([`crate::health::fault::FaultPlan`]) and
+//! `rust/tests/chaos_suite.rs` drives NaN rows, poison batches, forced
+//! failures, wedged shards, and corrupted inverses across a seed matrix
+//! (see EXPERIMENTS.md §Robustness).
 
 pub mod microbatch;
 pub mod publish;
 pub mod router;
 pub mod shard;
+pub mod supervisor;
 
 pub use microbatch::{MicroBatchPolicy, MicroBatchServer, MicroBatchStats, PredictClient};
-pub use publish::Epoch;
+pub use publish::{Epoch, HealthCell, ShardStatus};
 pub use router::{
     Placement, RoundReport, RouterHandle, RouterPredictWork, ServeConfig, ShardRouter,
 };
 pub use shard::{Shard, SnapshotHandle};
+pub use supervisor::{
+    QuarantinedBatch, RetryPolicy, ShardSupervisor, SupervisorConfig,
+};

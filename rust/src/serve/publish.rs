@@ -19,8 +19,65 @@
 //! published epoch until the next one lands, which is exactly the
 //! freshness semantics an incremental model update implies anyway.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Serving status of one shard, shared writer→readers the same way the
+/// epoch snapshot is: the supervisor (writer side) stores it, read handles
+/// load it per fan-in and skip quarantined shards (see
+/// [`crate::serve::RouterHandle`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStatus {
+    /// Serving and accepting updates.
+    Healthy,
+    /// Serving, but under observation (probe breach or recent failures).
+    Degraded,
+    /// Not trusted for reads: the router fans in over the other K−1 shards
+    /// until a background refit republishes and the supervisor clears it.
+    Quarantined,
+}
+
+/// Lock-free shared cell holding a [`ShardStatus`] (one `AtomicU8`).
+#[derive(Debug, Default)]
+pub struct HealthCell {
+    status: AtomicU8,
+}
+
+impl HealthCell {
+    const HEALTHY: u8 = 0;
+    const DEGRADED: u8 = 1;
+    const QUARANTINED: u8 = 2;
+
+    /// New cell, starting [`ShardStatus::Healthy`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current status.
+    pub fn get(&self) -> ShardStatus {
+        match self.status.load(Ordering::Acquire) {
+            Self::HEALTHY => ShardStatus::Healthy,
+            Self::DEGRADED => ShardStatus::Degraded,
+            _ => ShardStatus::Quarantined,
+        }
+    }
+
+    /// Store a new status.
+    pub fn set(&self, s: ShardStatus) {
+        let v = match s {
+            ShardStatus::Healthy => Self::HEALTHY,
+            ShardStatus::Degraded => Self::DEGRADED,
+            ShardStatus::Quarantined => Self::QUARANTINED,
+        };
+        self.status.store(v, Ordering::Release);
+    }
+
+    /// True when reads may use this shard (anything but quarantined —
+    /// degraded shards still serve; quarantine is the only read-side cut).
+    pub fn serving(&self) -> bool {
+        self.status.load(Ordering::Acquire) != Self::QUARANTINED
+    }
+}
 
 /// A single-writer multi-reader epoch-published slot.
 ///
@@ -85,6 +142,21 @@ mod tests {
     use super::*;
     use std::sync::Barrier;
     use std::time::{Duration, Instant};
+
+    #[test]
+    fn health_cell_round_trips_all_statuses() {
+        let c = HealthCell::new();
+        assert_eq!(c.get(), ShardStatus::Healthy);
+        assert!(c.serving());
+        c.set(ShardStatus::Degraded);
+        assert_eq!(c.get(), ShardStatus::Degraded);
+        assert!(c.serving(), "degraded shards still serve");
+        c.set(ShardStatus::Quarantined);
+        assert_eq!(c.get(), ShardStatus::Quarantined);
+        assert!(!c.serving());
+        c.set(ShardStatus::Healthy);
+        assert!(c.serving());
+    }
 
     #[test]
     fn publish_bumps_epoch_and_swaps() {

@@ -28,6 +28,14 @@
 //! double-count that prior K times and report overconfident intervals).
 //! Both reductions are exact identities at K = 1, which is what the parity
 //! tests anchor on.
+//!
+//! When the supervisor quarantines a shard (see [`super::supervisor`]),
+//! every fan-in skips it and renormalizes over the shards actually used —
+//! the same DC-KRR average / precision weighting over K−1 unbiased
+//! estimators, so degraded serving changes variance, not correctness. If
+//! *every* shard is quarantined the handle fails open and uses all of
+//! them: a drifted answer beats no answer, and an all-quarantined state
+//! only happens mid-heal.
 
 use crate::config::Space;
 use crate::coordinator::engine::EnginePredictWork;
@@ -185,6 +193,28 @@ impl RouterHandle {
         &self.shards[i]
     }
 
+    /// Per-shard serving statuses (one atomic load each).
+    pub fn statuses(&self) -> Vec<super::publish::ShardStatus> {
+        self.shards.iter().map(|s| s.status()).collect()
+    }
+
+    /// How many shards the next fan-in will use (all, when every shard is
+    /// quarantined — fail-open).
+    pub fn num_serving(&self) -> usize {
+        let n = self.shards.iter().filter(|s| s.serving()).count();
+        if n == 0 {
+            self.shards.len()
+        } else {
+            n
+        }
+    }
+
+    /// True when the fan-ins must ignore quarantine flags because nothing
+    /// is serving.
+    fn fail_open(&self) -> bool {
+        !self.shards.iter().any(SnapshotHandle::serving)
+    }
+
     /// Per-shard epoch numbers (freshness diagnostics).
     pub fn epochs(&self) -> Vec<u64> {
         self.shards.iter().map(|s| s.epoch()).collect()
@@ -213,14 +243,20 @@ impl RouterHandle {
     ) -> Result<()> {
         out.clear();
         out.resize(x.rows(), 0.0);
+        let fail_open = self.fail_open();
+        let mut used = 0usize;
         for h in &self.shards {
+            if !fail_open && !h.serving() {
+                continue;
+            }
             let snap = h.snapshot();
             snap.predict_into(x, &mut work.shard_out, &mut work.engine)?;
             for (o, s) in out.iter_mut().zip(&work.shard_out) {
                 *o += s;
             }
+            used += 1;
         }
-        let k = self.shards.len() as f64;
+        let k = used.max(1) as f64;
         for o in out.iter_mut() {
             *o /= k;
         }
@@ -243,10 +279,15 @@ impl RouterHandle {
         out: &mut Mat,
         work: &mut RouterPredictWork,
     ) -> Result<()> {
-        for (si, h) in self.shards.iter().enumerate() {
+        let fail_open = self.fail_open();
+        let mut used = 0usize;
+        for h in &self.shards {
+            if !fail_open && !h.serving() {
+                continue;
+            }
             let snap = h.snapshot();
             snap.predict_multi_into(x, &mut work.shard_mat, &mut work.engine)?;
-            if si == 0 {
+            if used == 0 {
                 out.resize_scratch(work.shard_mat.rows(), work.shard_mat.cols());
                 out.as_mut_slice().copy_from_slice(work.shard_mat.as_slice());
             } else {
@@ -254,8 +295,9 @@ impl RouterHandle {
                     *o += s;
                 }
             }
+            used += 1;
         }
-        let k = self.shards.len() as f64;
+        let k = used.max(1) as f64;
         for o in out.as_mut_slice() {
             *o /= k;
         }
@@ -289,7 +331,12 @@ impl RouterHandle {
         work.acc_mean.resize(b, 0.0);
         work.acc_prec.clear();
         work.acc_prec.resize(b, 0.0);
+        let fail_open = self.fail_open();
+        let mut used = 0usize;
         for h in &self.shards {
+            if !fail_open && !h.serving() {
+                continue;
+            }
             let snap = h.snapshot();
             snap.predict_with_uncertainty_into(
                 x,
@@ -306,8 +353,9 @@ impl RouterHandle {
                 *ap += lam;
                 *am += lam * m;
             }
+            used += 1;
         }
-        let k = self.shards.len() as f64;
+        let k = used.max(1) as f64;
         mean.clear();
         var.clear();
         for (am, ap) in work.acc_mean.iter().zip(&work.acc_prec) {
@@ -345,7 +393,12 @@ impl RouterHandle {
         let b = x.rows();
         work.acc_prec.clear();
         work.acc_prec.resize(b, 0.0);
-        for (si, h) in self.shards.iter().enumerate() {
+        let fail_open = self.fail_open();
+        let mut used = 0usize;
+        for h in &self.shards {
+            if !fail_open && !h.serving() {
+                continue;
+            }
             let snap = h.snapshot();
             snap.predict_with_uncertainty_multi_into(
                 x,
@@ -353,7 +406,7 @@ impl RouterHandle {
                 &mut work.shard_var,
                 &mut work.engine,
             )?;
-            if si == 0 {
+            if used == 0 {
                 work.acc_mat.resize_scratch(b, work.shard_mat.cols());
                 work.acc_mat.as_mut_slice().fill(0.0);
             }
@@ -370,8 +423,9 @@ impl RouterHandle {
                     *a += lam * m;
                 }
             }
+            used += 1;
         }
-        let k = self.shards.len() as f64;
+        let k = used.max(1) as f64;
         let d = work.acc_mat.cols();
         mean.resize_scratch(b, d);
         var.clear();
@@ -704,6 +758,40 @@ mod tests {
         assert_eq!(r.n_samples(), 56);
         assert_eq!(r.handle().epochs(), vec![1, 1]);
         assert_eq!(r.counters.get("routed"), 8);
+    }
+
+    #[test]
+    fn quarantined_shard_is_skipped_and_renormalized() {
+        use crate::serve::publish::ShardStatus;
+        let d = synth::ecg_like(48, 5, 8);
+        let q = synth::ecg_like(5, 5, 9);
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+        cfg.base.with_uncertainty = true;
+        let r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+        let h = r.handle();
+        assert_eq!(h.num_serving(), 2);
+        r.shard(1).set_status(ShardStatus::Quarantined);
+        assert_eq!(h.num_serving(), 1);
+        assert_eq!(
+            h.statuses(),
+            vec![ShardStatus::Healthy, ShardStatus::Quarantined]
+        );
+        // K−1 fan-in over one healthy shard == that shard's own answer
+        let p = h.predict(&q.x).unwrap();
+        let p0 = h.shard(0).predict(&q.x).unwrap();
+        crate::testutil::assert_vec_close(&p, &p0, 1e-12);
+        let (mu, var) = h.predict_with_uncertainty(&q.x).unwrap();
+        let (mu0, var0) = h.shard(0).predict_with_uncertainty(&q.x).unwrap();
+        crate::testutil::assert_vec_close(&mu, &mu0, 1e-12);
+        crate::testutil::assert_vec_close(&var, &var0, 1e-12);
+        // all-quarantined fails open to the full fan-in
+        r.shard(0).set_status(ShardStatus::Quarantined);
+        assert_eq!(h.num_serving(), 2);
+        let p_open = h.predict(&q.x).unwrap();
+        r.shard(0).set_status(ShardStatus::Healthy);
+        r.shard(1).set_status(ShardStatus::Healthy);
+        let p_all = h.predict(&q.x).unwrap();
+        crate::testutil::assert_vec_close(&p_open, &p_all, 1e-12);
     }
 
     #[test]

@@ -20,16 +20,28 @@ use crate::streaming::outlier::detect_scored_multi;
 use crate::streaming::StreamEvent;
 use std::sync::Arc;
 
-use super::publish::Epoch;
+use super::publish::{Epoch, HealthCell, ShardStatus};
 
 /// A cloneable, lock-free-for-readers handle onto one shard's published
 /// model state.
 #[derive(Clone)]
 pub struct SnapshotHandle {
     cell: Arc<Epoch<Engine>>,
+    health: Arc<HealthCell>,
 }
 
 impl SnapshotHandle {
+    /// The shard's current serving status (one atomic load).
+    pub fn status(&self) -> ShardStatus {
+        self.health.get()
+    }
+
+    /// True when the router may fan in over this shard (anything but
+    /// quarantined).
+    pub fn serving(&self) -> bool {
+        self.health.serving()
+    }
+
     /// The last published engine snapshot (readers compute against this
     /// without ever contending with the shard's writer).
     pub fn snapshot(&self) -> Arc<Engine> {
@@ -83,8 +95,18 @@ pub struct Shard {
     cell: Arc<Epoch<Engine>>,
     /// Round policy, inherited from the coordinator config.
     cfg: CoordinatorConfig,
+    /// Shared serving status (read by the router's fan-in loops).
+    health: Arc<HealthCell>,
     /// Arrivals routed here but not yet folded into an update.
     pending: Vec<StreamEvent>,
+    /// Size of the batch the most recent failed [`Shard::flush`] requeued
+    /// (0 after a success) — the supervisor quarantines exactly this
+    /// prefix once the retry budget is spent.
+    last_attempt: usize,
+    /// Chaos-injected failure window: while > 0, every flush fails with
+    /// `Error::Numerical` (decrementing by 1 per round).
+    #[cfg(feature = "chaos")]
+    chaos_fail_rounds: u32,
     /// Reused insertion-block assembly buffers (`y_new` is (B, D)).
     x_new: Mat,
     y_new: Mat,
@@ -128,7 +150,11 @@ impl Shard {
             engine,
             cell,
             cfg: cfg.clone(),
+            health: Arc::new(HealthCell::new()),
             pending: Vec::new(),
+            last_attempt: 0,
+            #[cfg(feature = "chaos")]
+            chaos_fail_rounds: 0,
             x_new: Mat::default(),
             y_new: Mat::default(),
             y_row: Vec::new(),
@@ -169,7 +195,76 @@ impl Shard {
 
     /// A read handle onto this shard's published epochs.
     pub fn handle(&self) -> SnapshotHandle {
-        SnapshotHandle { cell: Arc::clone(&self.cell) }
+        SnapshotHandle {
+            cell: Arc::clone(&self.cell),
+            health: Arc::clone(&self.health),
+        }
+    }
+
+    /// Current serving status.
+    pub fn status(&self) -> ShardStatus {
+        self.health.get()
+    }
+
+    /// Set the serving status (supervisor side); read handles observe it
+    /// on their next fan-in.
+    pub fn set_status(&self, s: ShardStatus) {
+        self.health.set(s);
+    }
+
+    /// Borrow the writer engine (read-only: probes, diagnostics).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Size of the batch the most recent failed flush requeued (0 after a
+    /// successful round).
+    pub fn last_attempt_len(&self) -> usize {
+        self.last_attempt
+    }
+
+    /// Pull the first `n` pending events off the queue — the supervisor's
+    /// poison-batch quarantine: the events leave the requeue loop for good
+    /// and become inspectable evidence instead.
+    pub fn quarantine_front(&mut self, n: usize) -> Vec<StreamEvent> {
+        let n = n.min(self.pending.len());
+        self.pending.drain(..n).collect()
+    }
+
+    /// Self-heal: full refactorization of the writer engine from its
+    /// retained training view ([`Engine::refit`]), then publish the healed
+    /// state and mark the shard healthy. Readers keep serving the previous
+    /// epoch for the whole (O(N·J²)-ish) rebuild — the heal only ever
+    /// delays *freshness*, never a read.
+    pub fn heal(&mut self) -> Result<u64> {
+        self.engine.refit()?;
+        let epoch = self.cell.publish(self.engine.clone());
+        self.counters.inc("heals");
+        self.health.set(ShardStatus::Healthy);
+        Ok(epoch)
+    }
+
+    /// Chaos-only: make the next `rounds` flushes fail with
+    /// `Error::Numerical` (a wedged shard / forced transient failure).
+    #[cfg(feature = "chaos")]
+    pub fn chaos_wedge(&mut self, rounds: u32) {
+        self.chaos_fail_rounds = self.chaos_fail_rounds.max(rounds);
+    }
+
+    /// Chaos-only: mutate the oldest pending event in place (NaN/Inf/
+    /// poison row injection).
+    #[cfg(feature = "chaos")]
+    pub fn chaos_mutate_front(&mut self, f: impl FnOnce(&mut StreamEvent)) {
+        if let Some(ev) = self.pending.first_mut() {
+            f(ev);
+        }
+    }
+
+    /// Chaos-only: corrupt the writer engine's maintained inverse so the
+    /// health probe has real drift to find.
+    #[cfg(feature = "chaos")]
+    pub fn chaos_corrupt_inverse(&mut self, factor: f64) {
+        self.engine.chaos_corrupt_inverse(factor);
     }
 
     /// Apply ONE fused round over an explicit batch of events: nominate
@@ -193,24 +288,9 @@ impl Shard {
         self.y_new.resize_scratch(0, d);
         for ev in events {
             // validate here, where it is still an Err: the engines' feature
-            // maps assert on dimension and must never see a bad row
-            ensure_shape!(
-                ev.x.len() == dim,
-                "Shard::apply_batch",
-                "event (source {}, seq {}) has dim {}, expected {dim}",
-                ev.source_id,
-                ev.seq,
-                ev.x.len()
-            );
-            ensure_shape!(
-                ev.n_outputs() == d,
-                "Shard::apply_batch",
-                "event (source {}, seq {}) carries {} target columns, engine \
-                 expects D = {d}",
-                ev.source_id,
-                ev.seq,
-                ev.n_outputs()
-            );
+            // maps assert on dimension, and a NaN/Inf row admitted past
+            // this point poisons the maintained inverse silently
+            ev.validate(dim, d)?;
             self.x_new.push_row(&ev.x)?;
             self.y_row.clear();
             self.y_row.push(ev.y);
@@ -235,6 +315,7 @@ impl Shard {
             ));
         }
         self.stage_x(x_new)?;
+        self.check_targets_finite(y_new)?;
         self.y_new.resize_scratch(y_new.len(), 1);
         self.y_new.as_mut_slice().copy_from_slice(y_new);
         self.update_and_publish(remove_idx)
@@ -248,9 +329,23 @@ impl Shard {
         remove_idx: &[usize],
     ) -> Result<RoundOutcome> {
         self.stage_x(x_new)?;
+        self.check_targets_finite(y_new.as_slice())?;
         self.y_new.resize_scratch(y_new.rows(), y_new.cols());
         self.y_new.as_mut_slice().copy_from_slice(y_new.as_slice());
         self.update_and_publish(remove_idx)
+    }
+
+    /// Boundary float validation for the explicit-block entry points (the
+    /// event path goes through [`StreamEvent::validate`] instead).
+    fn check_targets_finite(&mut self, y: &[f64]) -> Result<()> {
+        if y.iter().all(|v| v.is_finite()) {
+            Ok(())
+        } else {
+            self.counters.inc("rejected_nonfinite");
+            Err(crate::error::Error::InvalidUpdate(
+                "insertion targets carry non-finite values".into(),
+            ))
+        }
     }
 
     /// Copy the insertion features into the warm staging buffer.
@@ -262,6 +357,12 @@ impl Shard {
             x_new.cols(),
             self.engine.dim()
         );
+        if !x_new.is_finite() {
+            self.counters.inc("rejected_nonfinite");
+            return Err(crate::error::Error::InvalidUpdate(
+                "insertion features carry non-finite values".into(),
+            ));
+        }
         if x_new.rows() > 0 {
             self.x_new.resize_scratch(x_new.rows(), x_new.cols());
             self.x_new.as_mut_slice().copy_from_slice(x_new.as_slice());
@@ -275,34 +376,70 @@ impl Shard {
     /// `Ok(None)` when nothing is pending (or everything drained was
     /// malformed).
     ///
-    /// Failure policy: malformed events (wrong dimension) can never
-    /// succeed, so they are discarded up front (`counters["rejected"]`)
-    /// instead of poisoning the queue. If the engine update itself fails,
-    /// the batch is requeued only when `snapshot_rollback` restored the
-    /// pre-round state — without a snapshot the engine may have partially
-    /// absorbed the batch (KRR updates before KBR inside
-    /// [`Engine::inc_dec`]), and retrying would double-apply it, so the
-    /// batch is dropped (`counters["dropped"]`) and the error surfaced.
+    /// Failure policy: malformed events (wrong dimension / target count /
+    /// non-finite floats) can never succeed, so they are discarded up
+    /// front (`counters["rejected"]`, non-finite ones additionally under
+    /// `counters["rejected_nonfinite"]`) instead of poisoning the queue.
+    /// If the engine update itself fails, the batch is requeued only when
+    /// `snapshot_rollback` restored the pre-round state — without a
+    /// snapshot the engine may have partially absorbed the batch (KRR
+    /// updates before KBR inside [`Engine::inc_dec`]), and retrying would
+    /// double-apply it, so the batch is dropped (`counters["dropped"]`)
+    /// and the error surfaced. A requeued batch records its size in
+    /// [`Shard::last_attempt_len`], which is what the supervisor
+    /// quarantines once the retry budget is spent.
     pub fn flush(&mut self) -> Result<Option<RoundOutcome>> {
         if self.pending.is_empty() {
             return Ok(None);
         }
         let take = self.pending.len().min(self.cfg.batch.max_batch);
         // drain the OLDEST events first (arrival order)
-        let mut batch: Vec<StreamEvent> = self.pending.drain(..take).collect();
+        let batch: Vec<StreamEvent> = self.pending.drain(..take).collect();
         let dim = self.engine.dim();
         let d = self.engine.n_outputs();
         let before = batch.len();
-        batch.retain(|ev| ev.x.len() == dim && ev.n_outputs() == d);
+        let mut nonfinite = 0u64;
+        let batch: Vec<StreamEvent> = batch
+            .into_iter()
+            .filter(|ev| {
+                let ok = ev.validate(dim, d).is_ok();
+                if !ok && !ev.is_finite() {
+                    nonfinite += 1;
+                }
+                ok
+            })
+            .collect();
+        if nonfinite > 0 {
+            self.counters.add("rejected_nonfinite", nonfinite);
+        }
         if batch.len() < before {
             self.counters.add("rejected", (before - batch.len()) as u64);
         }
         if batch.is_empty() {
             return Ok(None);
         }
+        #[cfg(feature = "chaos")]
+        if self.chaos_fail_rounds > 0 {
+            self.chaos_fail_rounds -= 1;
+            self.counters.inc("chaos_forced_failures");
+            self.last_attempt = batch.len();
+            if self.cfg.snapshot_rollback {
+                self.pending.splice(0..0, batch);
+            } else {
+                self.counters.add("dropped", batch.len() as u64);
+            }
+            return Err(crate::error::Error::numerical(
+                "Shard::flush",
+                "chaos-injected failure",
+            ));
+        }
         match self.apply_batch(&batch) {
-            Ok(out) => Ok(Some(out)),
+            Ok(out) => {
+                self.last_attempt = 0;
+                Ok(Some(out))
+            }
             Err(e) => {
+                self.last_attempt = batch.len();
                 if self.cfg.snapshot_rollback {
                     self.pending.splice(0..0, batch);
                 } else {

@@ -1,0 +1,552 @@
+//! The shard supervisor: bounded retry, poison-batch quarantine, shard
+//! quarantine with self-heal, and periodic numerical health probes.
+//!
+//! One supervised round per shard runs the state machine documented in
+//! [`super`]'s "Failure semantics and recovery" section:
+//!
+//! ```text
+//!            flush Ok                      transient Err, attempt < R
+//!  Healthy ───────────▶ Healthy    flush ──────────────────────────▶ retry
+//!     │                              │        (backoff + jitter)
+//!     │ permanent Err                │ transient Err, attempt == R
+//!     ▼                              ▼
+//!  batch quarantined  ◀──────────  batch quarantined
+//!     │
+//!     │ `quarantine_after` consecutive failed rounds
+//!     ▼
+//!  shard Quarantined ── heal (refit + republish) ──▶ Healthy
+//! ```
+//!
+//! Retries are only attempted for errors where
+//! [`crate::error::Error::is_transient`] is
+//! true AND the shard's `snapshot_rollback` requeued the batch (without a
+//! rollback the batch was dropped and a "retry" would consume the *next*
+//! batch). Permanent errors skip the retry budget entirely: replaying a
+//! deterministic failure R times is R−1 wasted updates.
+//!
+//! Everything here runs on the writer side. Readers keep serving the last
+//! published epoch through every retry, quarantine, and heal — the router
+//! fan-ins only ever observe the [`ShardStatus`] cell flipping, which
+//! drops a quarantined shard out of the average (K−1 serving) until its
+//! heal republishes.
+
+use crate::health::probe::{HealthProbe, HealthVerdict, ProbeConfig};
+use crate::metrics::Counters;
+use crate::streaming::StreamEvent;
+use crate::util::prng::SplitMix64;
+use std::time::Duration;
+
+use super::publish::ShardStatus;
+use super::router::{RoundReport, ShardRouter};
+
+#[cfg(feature = "chaos")]
+use crate::health::fault::{FaultKind, FaultPlan};
+
+/// Bounded-retry policy with deterministic exponential backoff + jitter.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per batch (first try + retries), R ≥ 1.
+    pub max_attempts: u32,
+    /// Backoff before retry k is `base_backoff · 2^(k−1)`, capped below.
+    pub base_backoff: Duration,
+    /// Backoff cap.
+    pub max_backoff: Duration,
+    /// Jitter fraction in `[0, 1]`: the backoff is scaled by a
+    /// deterministic factor in `[1 − jitter, 1 + jitter)`.
+    pub jitter: f64,
+    /// Seed for the jitter stream (same seed ⇒ same schedule).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            // retries are in-process recomputations, not network calls:
+            // the backoff exists to let a transient CPU/contention blip
+            // pass, so the scale is microseconds, not seconds
+            base_backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_millis(5),
+            jitter: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff before retry `attempt` (1-based) of the work item
+    /// identified by `key`. Pure function of `(seed, key, attempt)` — two
+    /// runs with the same seed sleep the same schedule.
+    pub fn backoff_for(&self, key: u64, attempt: u32) -> Duration {
+        let exp = self
+            .base_backoff
+            .saturating_mul(1u32 << attempt.saturating_sub(1).min(20));
+        let capped = exp.min(self.max_backoff);
+        let mut sm = SplitMix64::new(
+            self.seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ u64::from(attempt),
+        );
+        let u = (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let factor = 1.0 + self.jitter * (2.0 * u - 1.0);
+        capped.mul_f64(factor.max(0.0))
+    }
+}
+
+/// Supervisor tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// Retry policy for transient flush failures.
+    pub retry: RetryPolicy,
+    /// Health-probe thresholds.
+    pub probe: ProbeConfig,
+    /// Probe cadence: check each shard every `probe_every` supervised
+    /// rounds (0 disables probing).
+    pub probe_every: u64,
+    /// Consecutive failed rounds before the shard itself is quarantined.
+    pub quarantine_after: u32,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            retry: RetryPolicy::default(),
+            probe: ProbeConfig::default(),
+            probe_every: 1,
+            quarantine_after: 2,
+        }
+    }
+}
+
+/// A batch pulled out of the requeue loop for good: the events, why, and
+/// how much retry budget they consumed. Inspectable evidence, never
+/// re-applied.
+#[derive(Debug)]
+pub struct QuarantinedBatch {
+    /// Shard the batch failed on.
+    pub shard: usize,
+    /// Supervised round it was quarantined in.
+    pub round: u64,
+    /// Attempts spent before quarantine (1 for permanent errors).
+    pub attempts: u32,
+    /// Display form of the final error.
+    pub error: String,
+    /// The events themselves (possibly empty if the shard's policy had
+    /// already dropped them).
+    pub events: Vec<StreamEvent>,
+}
+
+/// Per-shard supervisor state.
+#[derive(Default)]
+struct ShardState {
+    probe: HealthProbe,
+    consecutive_failed_rounds: u32,
+}
+
+/// Supervises a [`ShardRouter`]'s write path: drives flushes with bounded
+/// retry, quarantines poison batches and failing shards, heals via refit,
+/// and runs the periodic health probes.
+pub struct ShardSupervisor {
+    cfg: SupervisorConfig,
+    states: Vec<ShardState>,
+    quarantined: Vec<QuarantinedBatch>,
+    /// retries / batches_quarantined / events_quarantined /
+    /// shards_quarantined / shards_recovered / probe_breaches /
+    /// probe_trips / heal_failures.
+    pub counters: Counters,
+    round: u64,
+    #[cfg(feature = "chaos")]
+    plan: Option<FaultPlan>,
+}
+
+impl ShardSupervisor {
+    /// New supervisor for a router with `num_shards` shards.
+    pub fn new(cfg: SupervisorConfig, num_shards: usize) -> Self {
+        let mut states = Vec::with_capacity(num_shards);
+        for _ in 0..num_shards {
+            states.push(ShardState {
+                probe: HealthProbe::new(cfg.probe.clone()),
+                consecutive_failed_rounds: 0,
+            });
+        }
+        Self {
+            cfg,
+            states,
+            quarantined: Vec::new(),
+            counters: Counters::default(),
+            round: 0,
+            #[cfg(feature = "chaos")]
+            plan: None,
+        }
+    }
+
+    /// Supervised rounds completed so far.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// The quarantined batches, oldest first.
+    pub fn quarantined_batches(&self) -> &[QuarantinedBatch] {
+        &self.quarantined
+    }
+
+    /// Arm a deterministic fault plan: scheduled faults fire at the start
+    /// of their `(shard, round)` supervised round.
+    #[cfg(feature = "chaos")]
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        self.plan = Some(plan);
+    }
+
+    #[cfg(feature = "chaos")]
+    fn inject(&mut self, router: &mut ShardRouter, si: usize) {
+        let Some(plan) = &self.plan else { return };
+        let round = self.round;
+        // collect first: the injection needs &mut router while the plan
+        // sits behind &self
+        let kinds: Vec<FaultKind> = plan.firing(si, round).map(|f| f.kind).collect();
+        for kind in kinds {
+            let shard = router.shard_mut(si);
+            match kind {
+                FaultKind::NanRow => {
+                    shard.chaos_mutate_front(|ev| ev.x.fill(f64::NAN));
+                }
+                FaultKind::InfRow => {
+                    shard.chaos_mutate_front(|ev| ev.x.fill(f64::INFINITY));
+                }
+                FaultKind::PoisonRow => {
+                    // finite, passes boundary validation, overflows the
+                    // Gram matrix -> deterministic numerical failure
+                    shard.chaos_mutate_front(|ev| ev.x.fill(1e200));
+                }
+                FaultKind::ForcedNumerical => shard.chaos_wedge(1),
+                FaultKind::Wedge { rounds } => shard.chaos_wedge(rounds),
+                FaultKind::CorruptInverse { factor } => {
+                    shard.chaos_corrupt_inverse(factor);
+                }
+            }
+            self.counters.inc("faults_injected");
+        }
+    }
+
+    /// One supervised round over every shard: heal quarantined shards,
+    /// flush the rest with bounded retry, quarantine what can't succeed,
+    /// then probe. Returns the same [`RoundReport`] shape as
+    /// [`ShardRouter::update_round`]; quarantine details accumulate in
+    /// [`ShardSupervisor::quarantined_batches`].
+    pub fn supervise_round(&mut self, router: &mut ShardRouter) -> RoundReport {
+        while self.states.len() < router.num_shards() {
+            self.states.push(ShardState {
+                probe: HealthProbe::new(self.cfg.probe.clone()),
+                consecutive_failed_rounds: 0,
+            });
+        }
+        let mut report = RoundReport::default();
+        for si in 0..router.num_shards() {
+            #[cfg(feature = "chaos")]
+            self.inject(router, si);
+            if router.shard(si).status() == ShardStatus::Quarantined {
+                self.heal_shard(router, si);
+                continue;
+            }
+            self.flush_with_retry(router, si, &mut report);
+            self.probe_shard(router, si);
+        }
+        self.round += 1;
+        report
+    }
+
+    /// Drive supervised rounds until every shard's pending queue is empty
+    /// or quarantined away, up to `max_rounds`. The quarantine path is
+    /// what makes this loop terminate on permanently failing input: every
+    /// failed batch either succeeds within its retry budget or leaves the
+    /// queue for good, so pending length strictly decreases.
+    pub fn drain(&mut self, router: &mut ShardRouter, max_rounds: usize) -> RoundReport {
+        let mut report = RoundReport::default();
+        for _ in 0..max_rounds {
+            let pending: usize = (0..router.num_shards())
+                .map(|i| router.shard(i).pending())
+                .sum();
+            if pending == 0 {
+                break;
+            }
+            report.merge(self.supervise_round(router));
+        }
+        report
+    }
+
+    fn heal_shard(&mut self, router: &mut ShardRouter, si: usize) {
+        match router.shard_mut(si).heal() {
+            Ok(_) => {
+                self.states[si].consecutive_failed_rounds = 0;
+                self.states[si].probe.reset();
+                self.counters.inc("shards_recovered");
+            }
+            Err(_) => {
+                // refit itself failed: stay quarantined, try next round
+                self.counters.inc("heal_failures");
+            }
+        }
+    }
+
+    fn flush_with_retry(
+        &mut self,
+        router: &mut ShardRouter,
+        si: usize,
+        report: &mut RoundReport,
+    ) {
+        let max_attempts = self.cfg.retry.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            match router.shard_mut(si).flush() {
+                Ok(Some(out)) => {
+                    report.outcomes.push(out);
+                    self.mark_round_ok(router, si);
+                    return;
+                }
+                Ok(None) => {
+                    // nothing pending (or only rejected events): a no-op
+                    // round is a healthy round
+                    self.mark_round_ok(router, si);
+                    return;
+                }
+                Err(e) => {
+                    let shard = router.shard_mut(si);
+                    let requeued = shard.last_attempt_len() > 0
+                        && shard.pending() >= shard.last_attempt_len();
+                    let retryable = e.is_transient() && requeued;
+                    if retryable && attempt < max_attempts {
+                        self.counters.inc("retries");
+                        let key = ((si as u64) << 32) | self.round;
+                        std::thread::sleep(self.cfg.retry.backoff_for(key, attempt));
+                        continue;
+                    }
+                    // out of budget (or unretryable): quarantine the batch
+                    let n = shard.last_attempt_len();
+                    let events = shard.quarantine_front(n);
+                    self.counters.inc("batches_quarantined");
+                    self.counters.add("events_quarantined", events.len() as u64);
+                    self.quarantined.push(QuarantinedBatch {
+                        shard: si,
+                        round: self.round,
+                        attempts: attempt,
+                        error: e.to_string(),
+                        events,
+                    });
+                    self.mark_round_failed(router, si);
+                    report.errors.push((si, e));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn mark_round_ok(&mut self, router: &ShardRouter, si: usize) {
+        self.states[si].consecutive_failed_rounds = 0;
+        if router.shard(si).status() == ShardStatus::Degraded {
+            router.shard(si).set_status(ShardStatus::Healthy);
+        }
+    }
+
+    fn mark_round_failed(&mut self, router: &ShardRouter, si: usize) {
+        let st = &mut self.states[si];
+        st.consecutive_failed_rounds += 1;
+        if st.consecutive_failed_rounds >= self.cfg.quarantine_after {
+            router.shard(si).set_status(ShardStatus::Quarantined);
+            self.counters.inc("shards_quarantined");
+        } else {
+            router.shard(si).set_status(ShardStatus::Degraded);
+        }
+    }
+
+    fn probe_shard(&mut self, router: &mut ShardRouter, si: usize) {
+        if self.cfg.probe_every == 0 || self.round % self.cfg.probe_every != 0 {
+            return;
+        }
+        let verdict = match self.states[si].probe.check(router.shard(si).engine()) {
+            Ok(rep) => rep.verdict,
+            // a probe that cannot even run is a critical signal
+            Err(_) => HealthVerdict::Critical,
+        };
+        match verdict {
+            HealthVerdict::Healthy => {}
+            HealthVerdict::Degraded => {
+                self.counters.inc("probe_breaches");
+                if router.shard(si).status() == ShardStatus::Healthy {
+                    router.shard(si).set_status(ShardStatus::Degraded);
+                }
+            }
+            HealthVerdict::Critical => {
+                self.counters.inc("probe_breaches");
+                self.counters.inc("probe_trips");
+                // self-heal immediately on the writer copy; readers keep
+                // serving the published epoch throughout
+                match router.shard_mut(si).heal() {
+                    Ok(_) => {
+                        self.states[si].probe.reset();
+                        self.counters.inc("heals");
+                    }
+                    Err(_) => {
+                        router.shard(si).set_status(ShardStatus::Quarantined);
+                        self.counters.inc("shards_quarantined");
+                        self.counters.inc("heal_failures");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kernels::Kernel;
+    use crate::serve::router::ServeConfig;
+
+    fn serve_cfg(shards: usize) -> ServeConfig {
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), shards);
+        cfg.base.outlier = None;
+        cfg.base.snapshot_rollback = true;
+        cfg
+    }
+
+    fn router(shards: usize) -> ShardRouter {
+        let d = synth::ecg_like(48, 5, 41);
+        ShardRouter::bootstrap(&d.x, &d.y, serve_cfg(shards)).unwrap()
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_grows() {
+        let p = RetryPolicy::default();
+        let a = p.backoff_for(7, 1);
+        let b = p.backoff_for(7, 1);
+        assert_eq!(a, b, "same (seed, key, attempt) ⇒ same backoff");
+        assert_ne!(p.backoff_for(8, 1), a, "different keys jitter apart");
+        for attempt in 1..8 {
+            assert!(p.backoff_for(7, attempt) <= p.max_backoff.mul_f64(1.0 + p.jitter));
+        }
+        // the exponential envelope grows until the cap
+        let p0 = RetryPolicy { jitter: 0.0, ..RetryPolicy::default() };
+        assert!(p0.backoff_for(1, 2) > p0.backoff_for(1, 1));
+        assert_eq!(p0.backoff_for(1, 12), p0.max_backoff);
+    }
+
+    #[test]
+    fn clean_traffic_supervises_like_update_round() {
+        let mut r = router(2);
+        let mut sup = ShardSupervisor::new(SupervisorConfig::default(), r.num_shards());
+        let extra = synth::ecg_like(8, 5, 42);
+        for i in 0..8 {
+            r.ingest(StreamEvent::single(extra.x.row(i).to_vec(), extra.y[i], 0, i as u64));
+        }
+        let rep = sup.drain(&mut r, 16);
+        assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+        assert_eq!(rep.added(), 8);
+        assert!(sup.quarantined_batches().is_empty());
+        assert_eq!(sup.counters.get("batches_quarantined"), 0);
+        assert!(r.handle().statuses().iter().all(|s| *s == ShardStatus::Healthy));
+    }
+
+    #[test]
+    fn nonfinite_events_rejected_at_boundary_not_quarantined() {
+        let mut r = router(2);
+        let mut sup = ShardSupervisor::new(SupervisorConfig::default(), r.num_shards());
+        r.ingest(StreamEvent::single(vec![f64::NAN; 5], 0.0, 0, 0));
+        r.ingest(StreamEvent::single(vec![1.0, 2.0, f64::INFINITY, 0.0, 0.0], 0.0, 0, 1));
+        let rep = sup.drain(&mut r, 8);
+        assert!(rep.errors.is_empty());
+        let nonfinite: u64 = (0..r.num_shards())
+            .map(|i| r.shard(i).counters.get("rejected_nonfinite"))
+            .sum();
+        assert_eq!(nonfinite, 2, "both bad rows counted at the boundary");
+        assert!(sup.quarantined_batches().is_empty(), "rejects are not quarantines");
+    }
+
+    #[test]
+    fn poison_batch_quarantined_after_budget_then_shard_recovers() {
+        let mut r = router(2);
+        let cfg = SupervisorConfig {
+            retry: RetryPolicy {
+                max_attempts: 3,
+                base_backoff: Duration::ZERO,
+                max_backoff: Duration::ZERO,
+                jitter: 0.0,
+                seed: 1,
+            },
+            quarantine_after: 2,
+            ..SupervisorConfig::default()
+        };
+        let mut sup = ShardSupervisor::new(cfg, r.num_shards());
+        // poison: finite but overflows the poly2 Gram -> Numerical every try
+        r.shard_mut(0).push(StreamEvent::single(vec![1e200; 5], 0.0, 0, 0));
+        let good = synth::ecg_like(2, 5, 43);
+        r.shard_mut(1).push(StreamEvent::single(good.x.row(0).to_vec(), good.y[0], 0, 1));
+        let rep = sup.drain(&mut r, 8);
+        assert_eq!(rep.errors.len(), 1, "poison shard reports exactly one failure");
+        assert_eq!(sup.counters.get("retries"), 2, "R−1 retries before quarantine");
+        assert_eq!(sup.counters.get("batches_quarantined"), 1);
+        let q = &sup.quarantined_batches()[0];
+        assert_eq!((q.shard, q.attempts), (0, 3));
+        assert_eq!(q.events.len(), 1, "the poison event is inspectable");
+        assert_eq!(r.shard(0).pending(), 0, "nothing left looping in the queue");
+        // one failed round < quarantine_after=2: degraded, not quarantined
+        assert_eq!(r.shard(0).status(), ShardStatus::Degraded);
+        // clean traffic heals the degraded marker
+        r.shard_mut(0).push(StreamEvent::single(good.x.row(1).to_vec(), good.y[1], 0, 2));
+        sup.drain(&mut r, 4);
+        assert_eq!(r.shard(0).status(), ShardStatus::Healthy);
+    }
+
+    #[test]
+    fn dropped_batch_is_not_retried() {
+        // without snapshot rollback the shard DROPS a failed batch (a
+        // retry would double-apply a partially absorbed update), so the
+        // supervisor must not retry — it would consume the NEXT batch
+        let d = synth::ecg_like(48, 5, 45);
+        let mut cfg = serve_cfg(2);
+        cfg.base.snapshot_rollback = false;
+        let mut r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+        let mut sup = ShardSupervisor::new(SupervisorConfig::default(), r.num_shards());
+        r.shard_mut(0).push(StreamEvent::single(vec![1e200; 5], 0.0, 0, 0));
+        let rep = sup.drain(&mut r, 4);
+        assert_eq!(rep.errors.len(), 1);
+        assert_eq!(sup.counters.get("retries"), 0, "dropped batches never retry");
+        assert_eq!(sup.counters.get("batches_quarantined"), 1);
+        assert!(
+            sup.quarantined_batches()[0].events.is_empty(),
+            "events were already dropped by the shard's policy"
+        );
+        assert_eq!(r.shard(0).counters.get("dropped"), 1);
+    }
+
+    #[test]
+    fn quarantined_shard_heals_and_rejoins() {
+        let mut r = router(2);
+        let cfg = SupervisorConfig {
+            retry: RetryPolicy {
+                max_attempts: 1,
+                base_backoff: Duration::ZERO,
+                max_backoff: Duration::ZERO,
+                jitter: 0.0,
+                seed: 2,
+            },
+            quarantine_after: 1,
+            ..SupervisorConfig::default()
+        };
+        let mut sup = ShardSupervisor::new(cfg, r.num_shards());
+        // one poison batch + quarantine_after=1 -> the shard quarantines
+        r.shard_mut(0).push(StreamEvent::single(vec![1e200; 5], 0.0, 0, 0));
+        sup.supervise_round(&mut r);
+        assert_eq!(r.shard(0).status(), ShardStatus::Quarantined);
+        assert_eq!(r.handle().num_serving(), 1);
+        let q = synth::ecg_like(3, 5, 44);
+        // reads still answered from the healthy shard
+        assert_eq!(r.handle().predict(&q.x).unwrap().len(), 3);
+        // next supervised round heals it (refit from retained stores)
+        let e0 = r.shard(0).handle().epoch();
+        sup.supervise_round(&mut r);
+        assert_eq!(r.shard(0).status(), ShardStatus::Healthy);
+        assert_eq!(sup.counters.get("shards_recovered"), 1);
+        assert!(r.shard(0).handle().epoch() > e0, "heal republishes");
+        assert_eq!(r.handle().num_serving(), 2);
+    }
+}

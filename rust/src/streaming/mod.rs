@@ -57,6 +57,47 @@ impl StreamEvent {
     pub fn n_outputs(&self) -> usize {
         1 + self.y_tail.len()
     }
+
+    /// True when every payload float (features AND all target columns) is
+    /// finite. A NaN/±Inf row admitted into an engine poisons the Gram
+    /// matrix and, through the maintained inverse, every prediction after
+    /// it — so the serve boundary rejects on this before any engine sees
+    /// the event.
+    pub fn is_finite(&self) -> bool {
+        self.x.iter().all(|v| v.is_finite())
+            && self.y.is_finite()
+            && self.y_tail.iter().all(|v| v.is_finite())
+    }
+
+    /// Full boundary validation: feature dimension, target-column count,
+    /// and float finiteness. `Err(Error::InvalidUpdate)` on any violation —
+    /// the event can never be applied, so callers drop (and count) it
+    /// rather than requeue it.
+    pub fn validate(&self, dim: usize, n_outputs: usize) -> crate::error::Result<()> {
+        if self.x.len() != dim {
+            return Err(crate::error::Error::InvalidUpdate(format!(
+                "event (source {}, seq {}) has dim {}, expected {dim}",
+                self.source_id,
+                self.seq,
+                self.x.len()
+            )));
+        }
+        if self.n_outputs() != n_outputs {
+            return Err(crate::error::Error::InvalidUpdate(format!(
+                "event (source {}, seq {}) carries {} target columns, expected {n_outputs}",
+                self.source_id,
+                self.seq,
+                self.n_outputs()
+            )));
+        }
+        if !self.is_finite() {
+            return Err(crate::error::Error::InvalidUpdate(format!(
+                "event (source {}, seq {}) carries non-finite values",
+                self.source_id, self.seq
+            )));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -78,5 +119,24 @@ mod tests {
         assert_eq!(e.y, 1.0);
         assert_eq!(e.y_tail, vec![2.0, 3.0]);
         assert_eq!(e.n_outputs(), 3);
+    }
+
+    #[test]
+    fn validate_rejects_nonfinite_and_bad_shapes() {
+        let good = StreamEvent::multi(vec![1.0, 2.0], &[0.5, -0.5], 0, 0);
+        assert!(good.is_finite());
+        assert!(good.validate(2, 2).is_ok());
+        assert!(good.validate(3, 2).is_err(), "wrong dim");
+        assert!(good.validate(2, 1).is_err(), "wrong D");
+        let nan_x = StreamEvent::single(vec![1.0, f64::NAN], 0.0, 0, 1);
+        assert!(!nan_x.is_finite());
+        assert!(matches!(
+            nan_x.validate(2, 1),
+            Err(crate::error::Error::InvalidUpdate(_))
+        ));
+        let inf_y = StreamEvent::single(vec![1.0, 2.0], f64::INFINITY, 0, 2);
+        assert!(inf_y.validate(2, 1).is_err());
+        let nan_tail = StreamEvent::multi(vec![1.0, 2.0], &[0.0, f64::NEG_INFINITY], 0, 3);
+        assert!(nan_tail.validate(2, 2).is_err());
     }
 }

@@ -325,6 +325,37 @@ fn steady_state_inc_dec_is_allocation_free() {
         assert_eq!(allocs, 0, "warm RouterHandle serving path allocated {allocs} times");
     }
 
+    // --- warm health probes (ISSUE 7): the rotating residual probe on the
+    // maintained inverse — kernel/scatter row build + GEMV against the
+    // inverse + ∞-norm — reuses the probe's own column and residual
+    // buffers, so steady-state health checking is free to run every round
+    // (both spaces; the sampled columns rotate across checks, exercising
+    // fresh probe indices while the buffers stay warm) ---
+    {
+        use mikrr::config::Space;
+        use mikrr::coordinator::engine::Engine;
+        use mikrr::health::{HealthProbe, HealthVerdict, ProbeConfig};
+
+        let (x, y) = data(40, 4, 30);
+        for space in [Space::Intrinsic, Space::Empirical] {
+            let eng = Engine::fit(&x, &y, &Kernel::poly(2, 1.0), 0.5, space, false).unwrap();
+            let mut probe = HealthProbe::new(ProbeConfig::default());
+            probe.check(&eng).unwrap(); // warm the column + GEMV buffers
+            let allocs = steady_state_allocs(
+                || {
+                    let rep = probe.check(&eng).unwrap();
+                    assert_eq!(rep.verdict, HealthVerdict::Healthy);
+                },
+                1,
+                8,
+            );
+            assert_eq!(
+                allocs, 0,
+                "warm health probe ({space:?}) allocated {allocs} times"
+            );
+        }
+    }
+
     // --- packed BLAS-3 + blocked TRSM, 1-thread path: once the output
     // buffers and the thread-local packing panels are warm, the kernels
     // must not touch the heap either (they sit under every engine above) ---

@@ -1,0 +1,275 @@
+//! Chaos suite (ISSUE 7): seeded fault injection against the supervised
+//! serving tier. Compiled and run only under `--features chaos`; the CI
+//! lane sweeps a small seed matrix via the `CHAOS_SEED` env var.
+//!
+//! Every test drives the REAL state machine — boundary rejection, bounded
+//! retry, poison-batch quarantine, shard quarantine with K−1 fan-in, and
+//! probe-tripped self-heal — with faults scheduled by a deterministic
+//! [`FaultPlan`], then checks the observed counters against the plan.
+
+#![cfg(feature = "chaos")]
+
+use mikrr::data::synth;
+use mikrr::health::{FaultKind, FaultPlan};
+use mikrr::kernels::Kernel;
+use mikrr::serve::{
+    RetryPolicy, ServeConfig, ShardRouter, ShardStatus, ShardSupervisor, SupervisorConfig,
+};
+use mikrr::streaming::StreamEvent;
+use std::time::Duration;
+
+/// Seed for the randomized-plan test: overridable by the CI matrix.
+fn chaos_seed(default: u64) -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn serve_cfg(shards: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), shards);
+    cfg.base.outlier = None;
+    cfg.base.snapshot_rollback = true;
+    cfg
+}
+
+fn router(shards: usize, seed: u64) -> ShardRouter {
+    let d = synth::ecg_like(64, 5, seed);
+    ShardRouter::bootstrap(&d.x, &d.y, serve_cfg(shards)).unwrap()
+}
+
+fn zero_backoff(max_attempts: u32, quarantine_after: u32) -> SupervisorConfig {
+    SupervisorConfig {
+        retry: RetryPolicy {
+            max_attempts,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            jitter: 0.0,
+            seed: 0,
+        },
+        quarantine_after,
+        ..SupervisorConfig::default()
+    }
+}
+
+/// One clean event per shard, distinct across rounds.
+fn push_clean(r: &mut ShardRouter, round: u64) {
+    let n = r.num_shards();
+    let d = synth::ecg_like(n, 5, 9000 + round);
+    for s in 0..n {
+        r.shard_mut(s).push(StreamEvent::single(
+            d.x.row(s).to_vec(),
+            d.y[s],
+            s,
+            round * n as u64 + s as u64,
+        ));
+    }
+}
+
+/// NaN/Inf injections are rejected at the event boundary: the observed
+/// `rejected_nonfinite` total equals the number of NaN/Inf faults in the
+/// plan, and none of them consume retry budget or land in quarantine.
+#[test]
+fn nonfinite_injection_counts_match_plan() {
+    let mut r = router(2, 51);
+    let mut plan = FaultPlan::new(0);
+    plan.push(0, 0, FaultKind::NanRow)
+        .push(1, 0, FaultKind::InfRow)
+        .push(0, 1, FaultKind::NanRow);
+    let planned = plan.count_where(|f| {
+        matches!(f.kind, FaultKind::NanRow | FaultKind::InfRow)
+    }) as u64;
+    let mut sup = ShardSupervisor::new(zero_backoff(3, 2), r.num_shards());
+    sup.arm_faults(plan);
+    for round in 0..3 {
+        push_clean(&mut r, round);
+        let rep = sup.supervise_round(&mut r);
+        assert!(rep.errors.is_empty(), "round {round}: {:?}", rep.errors);
+    }
+    let nonfinite: u64 = (0..r.num_shards())
+        .map(|i| r.shard(i).counters.get("rejected_nonfinite"))
+        .sum();
+    assert_eq!(nonfinite, planned, "boundary counter matches the injected plan");
+    assert_eq!(sup.counters.get("faults_injected"), planned);
+    assert_eq!(sup.counters.get("retries"), 0, "rejects never enter the retry loop");
+    assert!(sup.quarantined_batches().is_empty());
+    assert!(r.handle().statuses().iter().all(|s| *s == ShardStatus::Healthy));
+}
+
+/// A forced numerical failure is the canonical transient: one in-place
+/// retry lands the same batch, nothing is quarantined, and the round's
+/// update publishes as if the blip never happened.
+#[test]
+fn forced_numerical_failure_recovers_on_retry() {
+    let mut r = router(2, 52);
+    let mut plan = FaultPlan::new(0);
+    plan.push(0, 0, FaultKind::ForcedNumerical);
+    let mut sup = ShardSupervisor::new(zero_backoff(3, 2), r.num_shards());
+    sup.arm_faults(plan);
+    push_clean(&mut r, 0);
+    let rep = sup.supervise_round(&mut r);
+    assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+    assert_eq!(rep.added(), 2, "both shards' events landed");
+    assert_eq!(sup.counters.get("retries"), 1, "exactly one retry consumed");
+    assert_eq!(r.shard(0).counters.get("chaos_forced_failures"), 1);
+    assert!(sup.quarantined_batches().is_empty());
+    assert_eq!(r.shard(0).status(), ShardStatus::Healthy);
+    assert_eq!(r.shard(0).handle().epoch(), 1, "the retried round published");
+}
+
+/// Poison rows pass boundary validation, fail numerically on every
+/// attempt, and must end in batch quarantine with the full retry budget
+/// spent — the quarantine count matches the injected fault count.
+#[test]
+fn poison_rows_end_in_quarantine_matching_plan() {
+    let mut r = router(2, 53);
+    let mut plan = FaultPlan::new(0);
+    plan.push(0, 0, FaultKind::PoisonRow).push(1, 1, FaultKind::PoisonRow);
+    let planned = plan.count_where(|f| f.kind == FaultKind::PoisonRow) as u64;
+    let mut sup = ShardSupervisor::new(zero_backoff(3, 8), r.num_shards());
+    sup.arm_faults(plan);
+    for round in 0..3 {
+        push_clean(&mut r, round);
+        sup.supervise_round(&mut r);
+    }
+    sup.drain(&mut r, 8);
+    assert_eq!(sup.counters.get("batches_quarantined"), planned);
+    assert_eq!(sup.counters.get("events_quarantined"), planned);
+    for q in sup.quarantined_batches() {
+        assert_eq!(q.attempts, 3, "full retry budget spent on shard {}", q.shard);
+        assert_eq!(q.events.len(), 1);
+        assert!(q.events[0].x.iter().all(|v| v.is_finite()), "poison is finite");
+    }
+    let pending: usize = (0..2).map(|i| r.shard(i).pending()).sum();
+    assert_eq!(pending, 0, "no poison left looping in any queue");
+}
+
+/// A wedged shard quarantines after `quarantine_after` consecutive failed
+/// rounds; the router serves from the remaining K−1 shards the whole time
+/// (renormalized fan-in, monotone epochs), then the shard heals and
+/// rejoins.
+#[test]
+fn wedged_shard_serves_k_minus_1_then_heals() {
+    let mut r = router(2, 54);
+    let mut plan = FaultPlan::new(0);
+    plan.push(0, 0, FaultKind::Wedge { rounds: 2 });
+    let mut sup = ShardSupervisor::new(zero_backoff(1, 2), r.num_shards());
+    sup.arm_faults(plan);
+    let h = r.handle();
+    let q = synth::ecg_like(6, 5, 9954);
+    let lone = h.shard(1).predict(&q.x).unwrap();
+    let mut last_epochs = h.epochs();
+
+    // rounds 0 and 1: the wedge fails shard 0's flush both times
+    for round in 0..2 {
+        push_clean(&mut r, round);
+        sup.supervise_round(&mut r);
+        let now = h.epochs();
+        for (e, le) in now.iter().zip(&last_epochs) {
+            assert!(e >= le, "epochs must be monotone under injection");
+        }
+        last_epochs = now;
+        // reads answered on every round, wedged or not
+        assert_eq!(h.predict(&q.x).unwrap().len(), 6);
+    }
+    assert_eq!(r.shard(0).status(), ShardStatus::Quarantined);
+    assert_eq!(h.num_serving(), 1);
+    assert_eq!(sup.counters.get("shards_quarantined"), 1);
+    // K−1 fan-in equals the lone healthy shard exactly (it saw 2 updates
+    // since `lone` was read, so compare against its current snapshot)
+    let lone_now = h.shard(1).predict(&q.x).unwrap();
+    let fanin = h.predict(&q.x).unwrap();
+    for (a, b) in fanin.iter().zip(&lone_now) {
+        assert!((a - b).abs() < 1e-12, "K−1 fan-in == the healthy shard");
+    }
+    assert!(lone.iter().all(|v| v.is_finite()));
+
+    // round 2: the supervisor heals the quarantined shard (refit +
+    // republish) and it rejoins the average
+    sup.supervise_round(&mut r);
+    assert_eq!(r.shard(0).status(), ShardStatus::Healthy);
+    assert_eq!(sup.counters.get("shards_recovered"), 1);
+    assert_eq!(h.num_serving(), 2);
+    let now = h.epochs();
+    assert!(now[0] > last_epochs[0], "heal republishes");
+    let s0 = h.shard(0).predict(&q.x).unwrap();
+    let s1 = h.shard(1).predict(&q.x).unwrap();
+    let fanin2 = h.predict(&q.x).unwrap();
+    for i in 0..6 {
+        assert!((fanin2[i] - 0.5 * (s0[i] + s1[i])).abs() < 1e-12);
+    }
+}
+
+/// Silent inverse corruption: the update round still succeeds (and even
+/// publishes the drifted state), only the residual probe sees it. After
+/// `trip_after` consecutive breaches the supervisor self-heals — and the
+/// healed writer re-converges to an uninjected control run within 1e-8.
+#[test]
+fn corrupt_inverse_trips_probe_and_reconverges() {
+    let mut chaos = router(2, 55);
+    let mut control = router(2, 55);
+    let mut plan = FaultPlan::new(0);
+    plan.push(0, 0, FaultKind::CorruptInverse { factor: 100.0 });
+    let mut sup = ShardSupervisor::new(zero_backoff(3, 4), chaos.num_shards());
+    sup.arm_faults(plan);
+    let mut ctl = ShardSupervisor::new(zero_backoff(3, 4), control.num_shards());
+
+    // round 0: corruption lands, then a clean update runs THROUGH the
+    // corrupted inverse; round 1+: probes breach until trip_after (2)
+    for round in 0..2 {
+        push_clean(&mut chaos, round);
+        push_clean(&mut control, round);
+        sup.supervise_round(&mut chaos);
+        ctl.supervise_round(&mut control);
+    }
+    assert!(sup.counters.get("probe_breaches") >= 2, "corruption was seen");
+    assert_eq!(sup.counters.get("probe_trips"), 1, "trip_after breaches escalate");
+    assert_eq!(sup.counters.get("heals"), 1, "the trip self-healed");
+    assert_eq!(ctl.counters.get("probe_breaches"), 0, "control stays clean");
+
+    // post-heal: every probe residual on the healed shard is tiny again
+    let eng = chaos.shard(0).engine();
+    let (mut g, mut rr) = (Vec::new(), Vec::new());
+    for i in 0..eng.probe_dim() {
+        let res = eng.probe_residual_into(i, &mut g, &mut rr).unwrap();
+        assert!(res < 1e-8, "post-heal residual {res} at probe {i}");
+    }
+    // and the healed writer matches the uninjected control run to 1e-8
+    // (heal the control too: both sides are then exact refactorizations of
+    // the same retained training view, so the comparison isolates what the
+    // corruption + heal changed rather than incremental-vs-retrain drift)
+    control.shard_mut(0).heal().unwrap();
+    let q = synth::ecg_like(8, 5, 9955);
+    let healed = chaos.shard(0).engine().predict(&q.x).unwrap();
+    let clean = control.shard(0).engine().predict(&q.x).unwrap();
+    for (a, b) in healed.iter().zip(&clean) {
+        assert!((a - b).abs() < 1e-8, "re-convergence: {a} vs {b}");
+    }
+}
+
+/// The randomized plan is deterministic end to end: two identical runs
+/// under the same `CHAOS_SEED` inject the same faults and leave byte-equal
+/// counters, statuses, and epochs.
+#[test]
+fn randomized_plan_runs_deterministically() {
+    let seed = chaos_seed(42);
+    let run = || -> (String, String, Vec<u64>, Vec<ShardStatus>) {
+        let mut r = router(2, 56);
+        let plan = FaultPlan::random(seed, 2, 6, 8);
+        let mut sup = ShardSupervisor::new(zero_backoff(2, 3), r.num_shards());
+        sup.arm_faults(plan);
+        for round in 0..6 {
+            push_clean(&mut r, round);
+            sup.supervise_round(&mut r);
+        }
+        sup.drain(&mut r, 8);
+        let shard_counters = (0..r.num_shards())
+            .map(|i| r.shard(i).counters.render())
+            .collect::<Vec<_>>()
+            .join(" | ");
+        (sup.counters.render(), shard_counters, r.handle().epochs(), r.handle().statuses())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "seed {seed}: chaos run must be bit-reproducible");
+}

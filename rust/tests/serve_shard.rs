@@ -13,11 +13,15 @@ use mikrr::kernels::Kernel;
 use mikrr::krr::rmse;
 use mikrr::linalg::matrix::dot;
 use mikrr::linalg::Mat;
-use mikrr::serve::{MicroBatchPolicy, MicroBatchServer, Placement, ServeConfig, ShardRouter};
+use mikrr::serve::{
+    MicroBatchPolicy, MicroBatchServer, Placement, RetryPolicy, ServeConfig, ShardRouter,
+    ShardStatus, ShardSupervisor, SupervisorConfig,
+};
 use mikrr::streaming::sink::SinkNode;
 use mikrr::streaming::source::{SensorNode, SourceConfig};
 use mikrr::streaming::StreamEvent;
 use mikrr::util::prng::Rng;
+use std::time::Duration;
 
 /// Low-noise near-linear data (the regime where the DC-KRR averaging
 /// argument is quantitatively tight).
@@ -459,4 +463,133 @@ fn router_streams_multi_output_events_end_to_end() {
     assert!(client.predict(xq.row(0)).is_err());
     let stats = server.shutdown();
     assert_eq!(stats.requests, 9);
+}
+
+/// ISSUE 7 regression — a permanently failing (poison) batch must land in
+/// quarantine after exactly R attempts and never loop forever in the
+/// router's drain. The poison rows are finite (1e200) so they pass the
+/// event-boundary float validation, but they overflow the poly2 Gram and
+/// hit the factorization's non-finite pivot guard on every attempt.
+/// Meanwhile good traffic on the other shard keeps landing, readers stay
+/// answered throughout, and the published state of the poisoned shard is
+/// untouched (snapshot rollback restored the writer every time).
+#[test]
+fn poison_batch_quarantined_after_r_attempts_never_loops() {
+    let (x, y) = data(80, 5, 31);
+    let mut cfg = serve_cfg(2, false);
+    cfg.base.snapshot_rollback = true;
+    let mut router = ShardRouter::bootstrap(&x, &y, cfg).unwrap();
+    let h = router.handle();
+    let (xq, _) = data(6, 5, 1031);
+    let p0 = h.predict(&xq).unwrap();
+
+    let retry = RetryPolicy {
+        max_attempts: 3,
+        base_backoff: Duration::ZERO,
+        max_backoff: Duration::ZERO,
+        jitter: 0.0,
+        seed: 7,
+    };
+    let sup_cfg = SupervisorConfig { retry, quarantine_after: 2, ..SupervisorConfig::default() };
+    let mut sup = ShardSupervisor::new(sup_cfg, router.num_shards());
+
+    // shard 0: poison; shard 1: a clean event that must still land
+    router.shard_mut(0).push(StreamEvent::single(vec![1e200; 5], 0.0, 0, 0));
+    let (xg, yg) = data(1, 5, 32);
+    router.shard_mut(1).push(StreamEvent::single(xg.row(0).to_vec(), yg[0], 1, 1));
+
+    // drain with a generous round cap: termination is the point under test
+    let report = sup.drain(&mut router, 16);
+    assert_eq!(report.added(), 1, "clean traffic landed despite the poison batch");
+    assert_eq!(report.errors.len(), 1, "the poison batch failed exactly once at the end");
+
+    // quarantine bookkeeping: R attempts spent, batch pulled off the queue
+    assert_eq!(sup.counters.get("retries"), 2, "R−1 = 2 in-place retries");
+    assert_eq!(sup.counters.get("batches_quarantined"), 1);
+    assert_eq!(sup.counters.get("events_quarantined"), 1);
+    let q = &sup.quarantined_batches()[0];
+    assert_eq!(q.shard, 0);
+    assert_eq!(q.attempts, 3);
+    assert_eq!(q.events.len(), 1, "the poison event is retained as evidence");
+    assert!(q.events[0].x.iter().all(|&v| v == 1e200));
+    assert_eq!(router.shard(0).pending(), 0, "nothing left to requeue — no livelock");
+
+    // one failed round < quarantine_after: degraded but still serving
+    assert_eq!(router.shard(0).status(), ShardStatus::Degraded);
+    assert_eq!(h.num_serving(), 2);
+
+    // the poisoned shard never published: epoch still at bootstrap, and
+    // reads stayed finite and answered throughout
+    assert_eq!(router.shard(0).handle().epoch(), 0, "failed rounds never publish");
+    let p1 = h.predict(&xq).unwrap();
+    assert!(p0.iter().chain(&p1).all(|v| v.is_finite()));
+
+    // afterwards the shard accepts clean traffic again and heals its marker
+    let (xc, yc) = data(1, 5, 33);
+    router.shard_mut(0).push(StreamEvent::single(xc.row(0).to_vec(), yc[0], 0, 2));
+    let rep2 = sup.drain(&mut router, 4);
+    assert!(rep2.errors.is_empty(), "{:?}", rep2.errors);
+    assert_eq!(router.shard(0).status(), ShardStatus::Healthy);
+    assert_eq!(router.shard(0).handle().epoch(), 1);
+}
+
+/// ISSUE 7 regression — non-finite payloads are rejected at the event
+/// boundary with `rejected_nonfinite` counters, never reaching the retry
+/// or quarantine machinery; and a shard pushed past `quarantine_after`
+/// drops out of the read fan-in (K−1 serving) until its heal republishes.
+#[test]
+fn boundary_rejects_and_shard_quarantine_degrade_reads_to_k_minus_1() {
+    let (x, y) = data(80, 5, 34);
+    let mut cfg = serve_cfg(2, false);
+    cfg.base.snapshot_rollback = true;
+    let mut router = ShardRouter::bootstrap(&x, &y, cfg).unwrap();
+    let h = router.handle();
+    let (xq, _) = data(5, 5, 1034);
+
+    let retry = RetryPolicy {
+        max_attempts: 1,
+        base_backoff: Duration::ZERO,
+        max_backoff: Duration::ZERO,
+        jitter: 0.0,
+        seed: 9,
+    };
+    let sup_cfg = SupervisorConfig { retry, quarantine_after: 1, ..SupervisorConfig::default() };
+    let mut sup = ShardSupervisor::new(sup_cfg, router.num_shards());
+
+    // non-finite rows: boundary rejects, not quarantines
+    router.shard_mut(0).push(StreamEvent::single(vec![f64::NAN; 5], 0.0, 0, 0));
+    let inf_row = vec![0.0, f64::INFINITY, 0.0, 0.0, 0.0];
+    router.shard_mut(1).push(StreamEvent::single(inf_row, 0.0, 1, 1));
+    let rep = sup.drain(&mut router, 4);
+    assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+    let nonfinite: u64 = (0..2).map(|i| router.shard(i).counters.get("rejected_nonfinite")).sum();
+    assert_eq!(nonfinite, 2, "both bad rows counted at the boundary");
+    assert_eq!(sup.counters.get("batches_quarantined"), 0);
+    assert_eq!(sup.counters.get("retries"), 0);
+
+    // now a poison batch with quarantine_after=1: the shard itself goes
+    let expected_k1: Vec<f64> = h.shard(1).predict(&xq).unwrap();
+    router.shard_mut(0).push(StreamEvent::single(vec![1e200; 5], 0.0, 0, 2));
+    sup.supervise_round(&mut router);
+    assert_eq!(router.shard(0).status(), ShardStatus::Quarantined);
+    assert_eq!(h.num_serving(), 1);
+    // the fan-in renormalizes over the surviving shard: K−1 serving equals
+    // the healthy shard's own prediction exactly
+    let fanin = h.predict(&xq).unwrap();
+    for (a, b) in fanin.iter().zip(&expected_k1) {
+        assert!((a - b).abs() < 1e-12, "K−1 fan-in must equal the lone healthy shard");
+    }
+
+    // next supervised round heals the quarantined shard (full refit from
+    // retained stores) and it rejoins the average
+    sup.supervise_round(&mut router);
+    assert_eq!(router.shard(0).status(), ShardStatus::Healthy);
+    assert_eq!(sup.counters.get("shards_recovered"), 1);
+    assert_eq!(h.num_serving(), 2);
+    let fanin2 = h.predict(&xq).unwrap();
+    let s0 = h.shard(0).predict(&xq).unwrap();
+    for i in 0..xq.rows() {
+        let avg = 0.5 * (s0[i] + expected_k1[i]);
+        assert!((fanin2[i] - avg).abs() < 1e-12, "healed shard rejoined the average");
+    }
 }
