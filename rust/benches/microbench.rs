@@ -44,6 +44,11 @@
 //!   (`health/probe_residual`, tracked `speedup_health_probe_vs_refit`):
 //!   quantifies that always-on health checking is orders cheaper than the
 //!   recovery it triggers.
+//! * `persist/*`           — the durability hot path (ISSUE 8): a 4-event
+//!   WAL batch append (frame + CRC + fsync) vs the full N=600 engine
+//!   snapshot it amortizes (`persist/durability`, tracked
+//!   `speedup_persist_wal_vs_snapshot` — fsync-bound, so reported but not
+//!   perf-gated).
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
@@ -635,6 +640,45 @@ fn main() {
         });
     }
 
+    // ---- persist/*: the durability hot path (ISSUE 8) ----
+    // the per-round WAL append (frame + CRC + fsync) vs the full engine
+    // snapshot it amortizes — the trade the `checkpoint_every` cadence
+    // knob tunes. Tracked (`speedup_persist_wal_vs_snapshot`), not gated:
+    // both sides are fsync-bound, so the ratio is a durability-cost
+    // report, not a compute regression signal.
+    if b.enabled("persist/durability") {
+        use mikrr::config::Space;
+        use mikrr::coordinator::engine::Engine;
+        use mikrr::persist::snapshot::write_snapshot;
+        use mikrr::persist::wal::Wal;
+        use mikrr::persist::{EngineState, WalRecord};
+        use mikrr::streaming::StreamEvent;
+        use mikrr::testutil::ScratchDir;
+
+        let dir = ScratchDir::new("bench-persist");
+        let d = mikrr::data::synth::ecg_like(600, 21, 41);
+        let poly2 = Kernel::poly(2, 1.0);
+        let eng =
+            Engine::fit(&d.x, &d.y, &poly2, 0.5, Space::Intrinsic, false).unwrap();
+        let events: Vec<StreamEvent> = (0..4)
+            .map(|i| StreamEvent::single(d.x.row(i).to_vec(), d.y[i], 0, i as u64))
+            .collect();
+        let mut wal = Wal::create(dir.path(), 0, 1).unwrap();
+        let mut scratch = Vec::new();
+        let mut seq = 0u64;
+        b.bench("persist/durability/wal_append_batch4_n600", || {
+            seq += 1;
+            wal.append(&WalRecord::Batch { seq, events: events.clone() }, &mut scratch)
+                .unwrap();
+        });
+        // constant generation: each iteration renames over the same file,
+        // so the bench doesn't fill the disk with snapshot history
+        b.bench("persist/durability/snapshot_n600", || {
+            write_snapshot(dir.path(), 1, &EngineState::capture(&eng, 1, 1, 1)).unwrap();
+            black_box(());
+        });
+    }
+
     // ---- machine-readable reports ----
     let mut extras: Vec<(&str, f64)> =
         vec![("threads", mikrr::par::num_threads() as f64)];
@@ -715,6 +759,11 @@ fn main() {
             "speedup_health_probe_vs_refit",
             "health/probe_residual/refit_J253",
             "health/probe_residual/check4_J253",
+        ),
+        (
+            "speedup_persist_wal_vs_snapshot",
+            "persist/durability/snapshot_n600",
+            "persist/durability/wal_append_batch4_n600",
         ),
     ] {
         if let (Some(s), Some(f)) = (b.summary(slow), b.summary(fast)) {

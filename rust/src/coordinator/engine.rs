@@ -189,17 +189,14 @@ impl Engine {
     /// `(N, D)` target matrix. Borrowed, not cloned: the outlier-scoring
     /// hot path reads it every round, and an owned copy was an O(N M)
     /// allocation per call. This is THE accessor pair for the training
-    /// stores; the slice-only [`Engine::targets`] is a deprecated `D = 1`
-    /// shim over the same view.
+    /// stores.
     pub fn training_view(&self) -> (&Mat, &Mat) {
         (&self.x, &self.y)
     }
 
-    /// Borrow the training targets (engine order), `D = 1` only.
-    #[deprecated(note = "use training_view(); this is the slice-only D=1 shim")]
-    pub fn targets(&self) -> &[f64] {
-        debug_assert_eq!(self.y.cols(), 1, "targets() is the D=1 view");
-        self.y.as_slice()
+    /// True when the engine carries a KBR twin for uncertainty serving.
+    pub fn has_uncertainty(&self) -> bool {
+        self.kbr.is_some()
     }
 
     /// Predict point estimates (`D = 1`).
@@ -481,25 +478,80 @@ impl Engine {
             self.kbr.is_some(),
         )?;
         healed.fold_eps = self.fold_eps;
+        healed.replay_multiplicities(&self.mult)?;
+        *self = healed;
+        Ok(())
+    }
+
+    /// Rebuild an engine from captured parts: the retained training stores
+    /// plus their per-row duplicate multiplicities — the decode half of the
+    /// durability layer's snapshot codec ([`crate::persist::snapshot`]).
+    ///
+    /// `y` is the multiplicity-*averaged* target matrix exactly as
+    /// [`Engine::training_view`] exposes it, and `mult` the matching
+    /// [`Engine::multiplicities`] mirror, so `capture → rebuild` commutes
+    /// with the maintained update rules: fitting on the averaged stores and
+    /// replaying each row's folds reproduces the same `C = diag(c_i)`
+    /// weighting a never-restarted engine carries (the same invariant
+    /// [`Engine::refit`] relies on, verified against the incremental path
+    /// in the self-heal tests).
+    pub fn from_parts(
+        x: &Mat,
+        y: &Mat,
+        mult: &[f64],
+        kernel: &Kernel,
+        ridge: f64,
+        space: Space,
+        with_uncertainty: bool,
+        fold_eps: Option<f64>,
+    ) -> Result<Self> {
+        if mult.len() != y.rows() || x.rows() != y.rows() {
+            return Err(Error::shape(
+                "Engine::from_parts",
+                format!(
+                    "x rows {}, y rows {}, mult len {} must all agree",
+                    x.rows(),
+                    y.rows(),
+                    mult.len()
+                ),
+            ));
+        }
+        if let Some(bad) = mult.iter().find(|&&m| !(m.is_finite() && m >= 1.0)) {
+            return Err(Error::InvalidUpdate(format!(
+                "multiplicity {bad} is not a finite count >= 1"
+            )));
+        }
+        let mut e = Engine::fit_multi(x, y, kernel, ridge, space, with_uncertainty)?;
+        e.fold_eps = fold_eps;
+        e.replay_multiplicities(mult)?;
+        Ok(e)
+    }
+
+    /// Replay duplicate multiplicities onto a freshly fit engine (all
+    /// `mult == 1.0`): each row `i` gets `mult[i] - 1` rank-1 folds of its
+    /// own averaged target, which leaves the target fixed while bumping the
+    /// per-row weight — shared by [`Engine::refit`] and
+    /// [`Engine::from_parts`].
+    fn replay_multiplicities(&mut self, mult: &[f64]) -> Result<()> {
+        debug_assert_eq!(mult.len(), self.mult.len());
         let d = self.y.cols();
         let mut y_row = Mat::default();
         y_row.resize_scratch(1, d);
         let x_row = Mat::default(); // apply_folds never reads features
-        for i in 0..self.mult.len() {
-            let reps = (self.mult[i] - 1.0).round() as usize;
+        for i in 0..mult.len() {
+            let reps = (mult[i] - 1.0).round() as usize;
             for _ in 0..reps {
                 y_row.as_mut_slice().copy_from_slice(self.y.row(i));
-                match &mut healed.krr {
+                match &mut self.krr {
                     KrrEngine::Intrinsic(m) => m.apply_folds(&[(i, 0)], &x_row, &y_row)?,
                     KrrEngine::Empirical(m) => m.apply_folds(&[(i, 0)], &x_row, &y_row)?,
                 }
-                if let Some(kbr) = &mut healed.kbr {
+                if let Some(kbr) = &mut self.kbr {
                     kbr.apply_folds(&[(i, 0)], &x_row, &y_row)?;
                 }
-                healed.mult[i] += 1.0;
+                self.mult[i] += 1.0;
             }
         }
-        *self = healed;
         Ok(())
     }
 
@@ -693,12 +745,61 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_targets_shim_matches_training_view() {
-        let d = synth::ecg_like(15, 4, 14);
-        let e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false)
+    fn from_parts_matches_incremental_engine() {
+        let d = synth::ecg_like(30, 5, 22);
+        let mut e = Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, true)
             .unwrap();
-        let (_, yv) = e.training_view();
-        assert_eq!(e.targets(), yv.as_slice());
+        e.set_fold_eps(Some(0.0));
+        let fresh = synth::ecg_like(1, 5, 23);
+        let xb = Mat::from_fn(3, 5, |r, c| match r {
+            0 => d.x[(4, c)],
+            1 => fresh.x[(0, c)],
+            _ => d.x[(7, c)],
+        });
+        e.inc_dec(&xb, &[0.3, fresh.y[0], -0.4], &[]).unwrap();
+        let (xv, yv) = e.training_view();
+        let rebuilt = Engine::from_parts(
+            &xv.clone(),
+            &yv.clone(),
+            e.multiplicities(),
+            e.kernel(),
+            e.ridge(),
+            e.space(),
+            e.has_uncertainty(),
+            e.fold_eps(),
+        )
+        .unwrap();
+        assert!(rebuilt.has_uncertainty());
+        assert_eq!(rebuilt.fold_eps(), Some(0.0));
+        assert_eq!(rebuilt.multiplicities(), e.multiplicities());
+        let q = d.x.block(0, 8, 0, 5);
+        let p = e.predict(&q).unwrap();
+        let pr = rebuilt.predict(&q).unwrap();
+        crate::testutil::assert_vec_close(&pr, &p, 1e-9);
+        let (m, v) = e.predict_with_uncertainty(&q).unwrap();
+        let (mr, vr) = rebuilt.predict_with_uncertainty(&q).unwrap();
+        crate::testutil::assert_vec_close(&mr, &m, 1e-9);
+        crate::testutil::assert_vec_close(&vr, &v, 1e-9);
+    }
+
+    #[test]
+    fn from_parts_rejects_malformed_parts() {
+        let d = synth::ecg_like(10, 3, 5);
+        let ym = Mat::from_vec(10, 1, d.y.clone()).unwrap();
+        let k = Kernel::poly(2, 1.0);
+        let short = vec![1.0; 9];
+        assert!(Engine::from_parts(
+            &d.x, &ym, &short, &k, 0.5, Space::Intrinsic, false, None
+        )
+        .is_err());
+        let bad = {
+            let mut m = vec![1.0; 10];
+            m[3] = 0.0;
+            m
+        };
+        assert!(Engine::from_parts(
+            &d.x, &ym, &bad, &k, 0.5, Space::Intrinsic, false, None
+        )
+        .is_err());
     }
 }

@@ -38,6 +38,29 @@ pub enum Error {
     Stream(String),
     /// I/O.
     Io(std::io::Error),
+    /// Durability-layer failures (snapshot / WAL encode-decode, crash-safe
+    /// file plumbing — see [`crate::persist`]). Splits into an underlying
+    /// [`PersistDetail`] because the recovery path treats the two halves
+    /// oppositely: a filesystem error is transient (retry the write), a
+    /// checksum violation is permanent (fall back a snapshot generation).
+    Persist {
+        /// Operation that failed (e.g. `"Wal::append"`).
+        context: &'static str,
+        /// What went wrong underneath.
+        detail: PersistDetail,
+    },
+}
+
+/// The underlying cause of an [`Error::Persist`].
+#[derive(Debug)]
+pub enum PersistDetail {
+    /// Filesystem failure (open/write/fsync/rename) — environmental, a
+    /// retry of the same operation can plausibly succeed.
+    Io(std::io::Error),
+    /// Checksum / framing / version violation — the bytes themselves are
+    /// wrong, so re-reading replays the same failure; recovery must fall
+    /// back to an older snapshot generation instead.
+    Corruption(String),
 }
 
 impl fmt::Display for Error {
@@ -55,6 +78,12 @@ impl fmt::Display for Error {
             Error::Runtime(d) => write!(f, "runtime error: {d}"),
             Error::Stream(d) => write!(f, "stream error: {d}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Persist { context, detail } => match detail {
+                PersistDetail::Io(e) => write!(f, "persist error in {context}: io: {e}"),
+                PersistDetail::Corruption(d) => {
+                    write!(f, "persist error in {context}: corruption: {d}")
+                }
+            },
         }
     }
 }
@@ -63,6 +92,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::Persist { detail: PersistDetail::Io(e), .. } => Some(e),
             _ => None,
         }
     }
@@ -85,6 +115,17 @@ impl Error {
         Error::Numerical { context, detail: detail.into() }
     }
 
+    /// Shorthand constructor for persistence I/O failures (transient).
+    pub fn persist_io(context: &'static str, e: std::io::Error) -> Self {
+        Error::Persist { context, detail: PersistDetail::Io(e) }
+    }
+
+    /// Shorthand constructor for persistence corruption (permanent — the
+    /// recovery path falls back a snapshot generation on this).
+    pub fn persist_corruption(context: &'static str, detail: impl Into<String>) -> Self {
+        Error::Persist { context, detail: PersistDetail::Corruption(detail.into()) }
+    }
+
     /// Transient-vs-permanent classification — the serve-layer supervisor's
     /// retry policy keys off this ([`crate::serve::ShardSupervisor`]).
     ///
@@ -95,11 +136,17 @@ impl Error {
     /// functions of the request itself (wrong shape, bad config, an
     /// invalid removal set, a broken artifact) — retrying replays the same
     /// failure, so the supervisor quarantines instead of retrying.
+    ///
+    /// Persistence errors split by their [`PersistDetail`]: a filesystem
+    /// failure is transient (the write can be retried), while checksum
+    /// corruption is permanent — re-reading the same bytes fails the same
+    /// way, so recovery falls back a snapshot generation instead.
     pub fn is_transient(&self) -> bool {
         match self {
             Error::Numerical { .. } | Error::Stream(_) | Error::Io(_) | Error::Runtime(_) => {
                 true
             }
+            Error::Persist { detail, .. } => matches!(detail, PersistDetail::Io(_)),
             Error::Shape { .. }
             | Error::InvalidUpdate(_)
             | Error::Config(_)
@@ -160,5 +207,27 @@ mod tests {
         assert!(!Error::InvalidUpdate("remove 9 >= n 5".into()).is_transient());
         assert!(!Error::Config("bad".into()).is_transient());
         assert!(!Error::Artifact("missing manifest".into()).is_transient());
+    }
+
+    #[test]
+    fn persist_classification_and_display() {
+        let io = std::io::Error::new(std::io::ErrorKind::Interrupted, "disk yanked");
+        let e = Error::persist_io("Wal::append", io);
+        assert!(e.is_transient(), "persist io is retryable");
+        assert!(e.to_string().contains("Wal::append"));
+        assert!(e.to_string().contains("disk yanked"));
+        {
+            use std::error::Error as _;
+            let src = e.source().expect("persist io carries a source");
+            assert!(src.to_string().contains("disk yanked"));
+        }
+        let c = Error::persist_corruption("snapshot::read", "crc mismatch in section 3");
+        assert!(!c.is_transient(), "corruption must fall back a generation, not retry");
+        assert!(c.to_string().contains("corruption"));
+        assert!(c.to_string().contains("crc mismatch"));
+        {
+            use std::error::Error as _;
+            assert!(c.source().is_none());
+        }
     }
 }

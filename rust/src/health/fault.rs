@@ -45,6 +45,61 @@ pub enum FaultKind {
     },
 }
 
+/// A deterministic crash point in the durability layer's write path
+/// ([`crate::persist`]): every write / fsync / rename boundary in the
+/// snapshot-checkpoint and WAL-append sequences has one. Like
+/// [`FaultKind`], the enum is plain data and always compiles; the arming
+/// registry and the injection sites ([`crate::persist::kill`]) only exist
+/// under the `chaos` feature.
+///
+/// Semantics when armed: the FIRST time execution reaches the armed
+/// point, the simulated process "dies" — that operation fails with a
+/// transient [`crate::error::Error::Persist`], and every later persist
+/// operation fails too (a dead process does not keep writing). `*Torn`
+/// points additionally leave a partial frame on disk, which is what the
+/// torn-tail truncation path must digest at recovery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillPoint {
+    /// Mid-way through appending one WAL record (torn tail on disk).
+    WalAppendTorn,
+    /// After the full record bytes, before the WAL fsync.
+    WalAppendFull,
+    /// During the WAL fsync itself.
+    WalFsync,
+    /// Mid-way through the snapshot tmp-file body (torn tmp file).
+    SnapTmpTorn,
+    /// After the full tmp-file body, before its fsync.
+    SnapTmpFull,
+    /// During the tmp-file fsync.
+    SnapTmpFsync,
+    /// Between the tmp fsync and the atomic rename (tmp complete,
+    /// snapshot not yet visible under its final name).
+    SnapRename,
+    /// After the rename, before the directory fsync that makes it durable.
+    SnapDirFsync,
+    /// After the snapshot landed, before the new WAL segment was created.
+    SnapNewSegment,
+    /// During old-generation garbage collection.
+    SnapGc,
+}
+
+impl KillPoint {
+    /// Every kill point, in write-path order — the recovery matrix test
+    /// iterates this so a newly added boundary cannot dodge coverage.
+    pub const ALL: [KillPoint; 10] = [
+        KillPoint::WalAppendTorn,
+        KillPoint::WalAppendFull,
+        KillPoint::WalFsync,
+        KillPoint::SnapTmpTorn,
+        KillPoint::SnapTmpFull,
+        KillPoint::SnapTmpFsync,
+        KillPoint::SnapRename,
+        KillPoint::SnapDirFsync,
+        KillPoint::SnapNewSegment,
+        KillPoint::SnapGc,
+    ];
+}
+
 /// One scheduled fault.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ScheduledFault {
@@ -155,6 +210,31 @@ mod tests {
         assert_eq!(p.firing(2, 3).count(), 0);
         assert_eq!(p.count_where(|f| f.shard == 0), 3);
         assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn kill_point_catalogue_is_exhaustive_and_distinct() {
+        for (i, a) in KillPoint::ALL.iter().enumerate() {
+            for b in &KillPoint::ALL[i + 1..] {
+                assert_ne!(a, b, "KillPoint::ALL carries a duplicate");
+            }
+        }
+        // the match is the exhaustiveness proof: adding a variant without
+        // extending ALL fails to compile here
+        for p in KillPoint::ALL {
+            match p {
+                KillPoint::WalAppendTorn
+                | KillPoint::WalAppendFull
+                | KillPoint::WalFsync
+                | KillPoint::SnapTmpTorn
+                | KillPoint::SnapTmpFull
+                | KillPoint::SnapTmpFsync
+                | KillPoint::SnapRename
+                | KillPoint::SnapDirFsync
+                | KillPoint::SnapNewSegment
+                | KillPoint::SnapGc => {}
+            }
+        }
     }
 
     #[test]

@@ -23,5 +23,5 @@
 pub mod fault;
 pub mod probe;
 
-pub use fault::{FaultKind, FaultPlan, ScheduledFault};
+pub use fault::{FaultKind, FaultPlan, KillPoint, ScheduledFault};
 pub use probe::{HealthProbe, HealthVerdict, ProbeConfig, ProbeReport};

@@ -10,7 +10,8 @@
 //!   and the incremental KRR/KBR engines themselves (intrinsic and empirical
 //!   space), all in pure Rust on the request path. The [`serve`] layer scales
 //!   this to serving traffic: K sharded engine replicas, epoch-published read
-//!   snapshots, and micro-batched prediction execution.
+//!   snapshots, and micro-batched prediction execution — made crash-safe by
+//!   the [`persist`] layer's engine snapshots and per-shard write-ahead logs.
 //! * **L2** — the paper's update equations as JAX graphs
 //!   (`python/compile/model.py`), AOT-lowered to HLO text at build time.
 //! * **L1** — Pallas kernels for the compute hot-spots
@@ -41,6 +42,7 @@ pub mod coordinator;
 pub mod data;
 pub mod health;
 pub mod metrics;
+pub mod persist;
 pub mod runtime;
 pub mod serve;
 pub mod streaming;

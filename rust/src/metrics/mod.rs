@@ -201,6 +201,15 @@ impl Counters {
         self.map.iter().map(|(k, &v)| (k.as_str(), v))
     }
 
+    /// Merge another registry into this one, summing shared names — the
+    /// aggregation primitive for fleet-wide views (per-shard durability
+    /// counters rolled up by `ShardRouter::durability_counters`).
+    pub fn merge_from(&mut self, other: &Counters) {
+        for (k, v) in other.iter() {
+            self.add(k, v);
+        }
+    }
+
     /// Render all counters.
     pub fn render(&self) -> String {
         self.map
@@ -300,6 +309,21 @@ mod tests {
         assert_eq!(c.get("updates"), 3);
         assert_eq!(c.get("missing"), 0);
         assert!(c.render().contains("updates=3"));
+    }
+
+    #[test]
+    fn counters_merge_sums_shared_names() {
+        let mut a = Counters::default();
+        a.add("rounds", 3);
+        a.add("heals", 1);
+        let mut b = Counters::default();
+        b.add("rounds", 2);
+        b.add("snapshots_written", 4);
+        a.merge_from(&b);
+        assert_eq!(a.get("rounds"), 5);
+        assert_eq!(a.get("heals"), 1);
+        assert_eq!(a.get("snapshots_written"), 4);
+        assert_eq!(b.get("rounds"), 2, "source is untouched");
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Little-endian binary primitives and the CRC-framed section container
+//! shared by the snapshot and WAL codecs.
+//!
+//! A *section* is the unit of corruption detection:
+//!
+//! ```text
+//! [tag: u32][len: u64][payload: len bytes][crc32: u32]
+//! ```
+//!
+//! with the CRC computed over `tag ‖ len ‖ payload`, so a flipped bit in
+//! the header (a wrong tag, an inflated length) is as loud as one in the
+//! payload. Decoding never panics: every truncation or mismatch surfaces
+//! as [`Error::persist_corruption`], which [`crate::error::Error::is_transient`]
+//! classifies as permanent — the recovery path's signal to fall back a
+//! generation rather than retry.
+
+use crate::error::{Error, Result};
+
+use super::crc::{crc32, Crc32};
+
+// ---- writer primitives (append-to-Vec) ----
+
+/// Append a `u8`.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a little-endian `u32`.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `u64`.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f64` as its little-endian IEEE-754 bit pattern (bit-exact
+/// round trip, NaN payloads included).
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+// ---- reader cursor ----
+
+/// Bounds-checked reader over a decoded byte buffer.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Context string used in corruption errors.
+    ctx: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    /// Cursor over `buf`, reporting failures against `ctx`.
+    pub fn new(buf: &'a [u8], ctx: &'static str) -> Self {
+        Self { buf, pos: 0, ctx }
+    }
+
+    /// Current byte offset.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True once every byte has been consumed.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take `n` raw bytes.
+    pub fn take_bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::persist_corruption(
+                self.ctx,
+                format!(
+                    "truncated: wanted {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.remaining()
+                ),
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Take a `u8`.
+    pub fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take_bytes(1)?[0])
+    }
+
+    /// Take a little-endian `u32`.
+    pub fn take_u32(&mut self) -> Result<u32> {
+        let b = self.take_bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Take a little-endian `u64`.
+    pub fn take_u64(&mut self) -> Result<u64> {
+        let b = self.take_bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Take a `u64` and narrow it to `usize` (corruption if it does not
+    /// fit — a hostile length must never drive an allocation).
+    pub fn take_len(&mut self) -> Result<usize> {
+        let v = self.take_u64()?;
+        usize::try_from(v).map_err(|_| {
+            Error::persist_corruption(self.ctx, format!("length {v} overflows usize"))
+        })
+    }
+
+    /// Take an `f64` from its bit pattern.
+    pub fn take_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+}
+
+// ---- CRC-framed sections ----
+
+/// Append one `[tag][len][payload][crc]` section.
+pub fn write_section(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    put_u32(out, tag);
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    let mut c = Crc32::new();
+    c.update(&tag.to_le_bytes());
+    c.update(&(payload.len() as u64).to_le_bytes());
+    c.update(payload);
+    put_u32(out, c.finish());
+}
+
+/// Read one section, verifying its CRC. Returns `(tag, payload)`.
+pub fn read_section<'a>(cur: &mut Cursor<'a>, ctx: &'static str) -> Result<(u32, &'a [u8])> {
+    let tag = cur.take_u32()?;
+    let len = cur.take_len()?;
+    // saturating: a hostile length near usize::MAX must not overflow the
+    // bound check (debug builds would panic instead of returning Err)
+    if cur.remaining() < len.saturating_add(4) {
+        return Err(Error::persist_corruption(
+            ctx,
+            format!(
+                "section {tag:#x} claims {len} bytes but only {} remain",
+                cur.remaining()
+            ),
+        ));
+    }
+    let payload = cur.take_bytes(len)?;
+    let stored = cur.take_u32()?;
+    let mut c = Crc32::new();
+    c.update(&tag.to_le_bytes());
+    c.update(&(len as u64).to_le_bytes());
+    c.update(payload);
+    let computed = c.finish();
+    if computed != stored {
+        return Err(Error::persist_corruption(
+            ctx,
+            format!(
+                "section {tag:#x} crc mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+        ));
+    }
+    Ok((tag, payload))
+}
+
+/// One-shot CRC over a frame (WAL records use raw `[len][payload][crc]`
+/// framing; re-exported here so both codecs share one implementation).
+pub fn frame_crc(payload: &[u8]) -> u32 {
+    crc32(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 3);
+        put_f64(&mut buf, -0.0);
+        put_f64(&mut buf, f64::from_bits(0x7FF8_0000_0000_1234)); // NaN payload
+        let mut cur = Cursor::new(&buf, "test");
+        assert_eq!(cur.take_u8().unwrap(), 7);
+        assert_eq!(cur.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(cur.take_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(cur.take_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(cur.take_f64().unwrap().to_bits(), 0x7FF8_0000_0000_1234);
+        assert!(cur.is_empty());
+        assert!(cur.take_u8().is_err(), "reading past the end is corruption");
+    }
+
+    #[test]
+    fn section_round_trip_and_crc_rejection() {
+        let mut buf = Vec::new();
+        write_section(&mut buf, 3, b"hello sections");
+        write_section(&mut buf, 9, b"");
+        let mut cur = Cursor::new(&buf, "test");
+        let (tag, payload) = read_section(&mut cur, "test").unwrap();
+        assert_eq!((tag, payload), (3, b"hello sections".as_slice()));
+        let (tag, payload) = read_section(&mut cur, "test").unwrap();
+        assert_eq!((tag, payload.len()), (9, 0));
+        assert!(cur.is_empty());
+        // flip any byte -> corruption (header flips included)
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x40;
+            let mut cur = Cursor::new(&bad, "test");
+            let r = read_section(&mut cur, "test")
+                .and_then(|_| read_section(&mut cur, "test"));
+            assert!(r.is_err(), "flip at byte {i} slipped through");
+            assert!(!r.unwrap_err().is_transient(), "corruption is permanent");
+        }
+    }
+
+    #[test]
+    fn truncated_section_rejected() {
+        let mut buf = Vec::new();
+        write_section(&mut buf, 1, &[0xAB; 32]);
+        for cut in 0..buf.len() {
+            let mut cur = Cursor::new(&buf[..cut], "test");
+            assert!(read_section(&mut cur, "test").is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn hostile_length_is_rejected_not_allocated() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 1);
+        put_u64(&mut buf, u64::MAX); // section claims 2^64 bytes
+        let mut cur = Cursor::new(&buf, "test");
+        assert!(read_section(&mut cur, "test").is_err());
+    }
+}

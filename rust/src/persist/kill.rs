@@ -1,0 +1,149 @@
+//! Crash-fault injection for the durability write path.
+//!
+//! The [`KillPoint`] catalogue lives in [`crate::health::fault`] (plain
+//! data, always compiled); this module holds the process-wide arming
+//! registry and is the only place the snapshot/WAL code consults. Without
+//! the `chaos` feature, [`fires`] is a constant `false` and the whole
+//! mechanism compiles to nothing — production builds carry zero injection
+//! code, same contract as the serve-layer fault hooks.
+//!
+//! Death semantics: arming registers ONE kill point. The first persist
+//! operation to reach it "dies" — [`fires`] returns `true` there and at
+//! **every** persist boundary afterwards, because a crashed process does
+//! not keep writing. The recovery matrix test arms a point, drives traffic
+//! until [`fired`] reports the crash, abandons the live router (the
+//! simulated dead process), calls [`disarm`], and then recovers from the
+//! state directory alone.
+//!
+//! The registry is a process-global: tests that arm kill points must
+//! serialize on a shared lock (see `rust/tests/recovery_kill_matrix.rs`)
+//! or run with `--test-threads=1`.
+
+use crate::error::Error;
+use crate::health::fault::KillPoint;
+
+#[cfg(feature = "chaos")]
+mod registry {
+    use super::KillPoint;
+    use std::sync::Mutex;
+
+    struct Armed {
+        point: KillPoint,
+        fired: bool,
+    }
+
+    static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
+
+    pub fn arm(point: KillPoint) {
+        *ARMED.lock().expect("kill registry poisoned") =
+            Some(Armed { point, fired: false });
+    }
+
+    pub fn disarm() {
+        *ARMED.lock().expect("kill registry poisoned") = None;
+    }
+
+    pub fn fired() -> bool {
+        ARMED
+            .lock()
+            .expect("kill registry poisoned")
+            .as_ref()
+            .is_some_and(|a| a.fired)
+    }
+
+    pub fn should_kill(point: KillPoint) -> bool {
+        let mut g = ARMED.lock().expect("kill registry poisoned");
+        match g.as_mut() {
+            // once dead, every persist boundary fails
+            Some(a) if a.fired || a.point == point => {
+                a.fired = true;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Arm one kill point (chaos builds only). Replaces any previous arming.
+#[cfg(feature = "chaos")]
+pub fn arm(point: KillPoint) {
+    registry::arm(point);
+}
+
+/// Clear the registry — the step between "the process died" and "a fresh
+/// process starts recovery" (chaos builds only).
+#[cfg(feature = "chaos")]
+pub fn disarm() {
+    registry::disarm();
+}
+
+/// True once the armed kill point has fired (chaos builds only).
+#[cfg(feature = "chaos")]
+pub fn fired() -> bool {
+    registry::fired()
+}
+
+/// Does the armed kill point fire at this boundary? Constant `false`
+/// without the `chaos` feature.
+#[inline(always)]
+pub fn fires(point: KillPoint) -> bool {
+    #[cfg(feature = "chaos")]
+    {
+        registry::should_kill(point)
+    }
+    #[cfg(not(feature = "chaos"))]
+    {
+        let _ = point;
+        false
+    }
+}
+
+/// The simulated crash error: a *transient* persist failure (the
+/// filesystem did not corrupt anything — the process just stopped), so
+/// the supervisor's classification treats it exactly like a real torn
+/// write or failed fsync.
+pub fn killed(context: &'static str, point: KillPoint) -> Error {
+    Error::persist_io(
+        context,
+        std::io::Error::new(
+            std::io::ErrorKind::Interrupted,
+            format!("chaos kill at {point:?}"),
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn killed_error_is_transient_persist() {
+        let e = killed("Wal::append", KillPoint::WalFsync);
+        assert!(e.is_transient());
+        assert!(e.to_string().contains("WalFsync"));
+        assert!(matches!(e, Error::Persist { .. }));
+    }
+
+    #[cfg(not(feature = "chaos"))]
+    #[test]
+    fn without_chaos_nothing_fires() {
+        for p in KillPoint::ALL {
+            assert!(!fires(p));
+        }
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn armed_point_fires_once_then_everything_fails() {
+        // serialized against other chaos tests by being the only registry
+        // test in this crate's unit suite
+        arm(KillPoint::WalFsync);
+        assert!(!fired());
+        assert!(!fires(KillPoint::WalAppendTorn), "other points pass until death");
+        assert!(fires(KillPoint::WalFsync), "the armed point kills");
+        assert!(fired());
+        assert!(fires(KillPoint::SnapGc), "dead processes do not keep writing");
+        disarm();
+        assert!(!fires(KillPoint::WalFsync), "disarmed registry is inert");
+    }
+}

@@ -1,0 +1,42 @@
+//! Durable shards: crash-safe engine snapshots and per-shard write-ahead
+//! logs, dependency-free over `std::fs`.
+//!
+//! ## Layering
+//!
+//! - [`crc`] / [`codec`] — CRC-32 framing and the little-endian binary
+//!   primitives both file formats share.
+//! - [`snapshot`] — versioned engine snapshots (`shard-<k>-gen-<g>.snap`),
+//!   written crash-consistently (tmp + fsync + atomic rename + dir fsync)
+//!   and rebuilt through a fresh factorization on load.
+//! - [`wal`] — per-shard, per-generation append-only logs of applied
+//!   rounds (`shard-<k>-wal-<g>.log`), CRC per record, torn tails
+//!   truncated on open.
+//! - [`store`] — the per-shard driver gluing them together: write-ahead
+//!   logging, checkpoint cadence, generation GC, the recovery scan, and
+//!   the fleet-level `router.meta` file.
+//! - [`kill`] — chaos-gated crash injection at every write/fsync/rename
+//!   boundary (the [`crate::health::fault::KillPoint`] catalogue); a
+//!   constant no-op outside `--features chaos`.
+//!
+//! ## Durability contract
+//!
+//! After any crash — at *any* kill point — recovery restores every shard
+//! to exactly the state reachable from the durable prefix: the newest
+//! intact snapshot generation plus idempotent WAL replay (by sequence
+//! number) of everything logged after it. A corrupted newest snapshot
+//! falls back one generation and replays the correspondingly longer WAL
+//! suffix; unrecoverable shards are quarantined through the serve layer's
+//! health machinery rather than panicking the fleet. The recovery matrix
+//! test (`rust/tests/recovery_kill_matrix.rs`) proves recovered
+//! predictions match an uninterrupted control run at every kill point.
+
+pub mod codec;
+pub mod crc;
+pub mod kill;
+pub mod snapshot;
+pub mod store;
+pub mod wal;
+
+pub use snapshot::EngineState;
+pub use store::{recover_shard, DurabilityConfig, RecoveredShard, RouterMeta, ShardStore};
+pub use wal::WalRecord;

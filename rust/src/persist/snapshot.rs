@@ -1,0 +1,448 @@
+//! Versioned, CRC-framed engine snapshots with crash-consistent writes.
+//!
+//! A snapshot captures everything needed to rebuild an [`Engine`] from
+//! cold: the retained training view `(X, Y)`, the per-row duplicate
+//! multiplicities, and the hyperparameters (kernel, ridge, space,
+//! uncertainty flag, fold radius). The maintained inverse is deliberately
+//! NOT serialized — [`EngineState::rebuild`] re-factorizes through
+//! [`Engine::from_parts`], so a restored engine is *fresher* than the one
+//! that crashed (zero accumulated drift) while holding the same weighted
+//! training set, and a corrupted inverse can never be resurrected from
+//! disk. Recovery probe-validates the rebuilt inverse anyway
+//! (`ShardRouter::recover`).
+//!
+//! ## File format
+//!
+//! ```text
+//! [magic "MIKRRSNP"][version u32]
+//! [section SEC_META][section SEC_KERNEL][section SEC_X][section SEC_Y]
+//! [section SEC_MULT][section SEC_END]
+//! ```
+//!
+//! each section CRC-framed by [`super::codec::write_section`]. Any flipped
+//! bit, truncation, or missing section decodes to a permanent
+//! [`Error::Persist`] corruption — the caller's signal to fall back one
+//! generation.
+//!
+//! ## Crash consistency
+//!
+//! [`write_snapshot`] writes `<name>.snap.tmp`, fsyncs it, atomically
+//! renames onto `shard-<id>-gen-<g>.snap`, then fsyncs the directory. A
+//! crash anywhere in that sequence leaves either the previous generation
+//! intact (tmp file garbage is ignored by [`list_generations`]) or the new
+//! generation fully durable — never a half-visible snapshot. Every
+//! boundary carries a [`KillPoint`] so the chaos matrix can die exactly
+//! there.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::config::Space;
+use crate::coordinator::engine::Engine;
+use crate::error::{Error, Result};
+use crate::health::fault::KillPoint;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+
+use super::codec::{
+    put_f64, put_u32, put_u64, put_u8, read_section, write_section, Cursor,
+};
+use super::kill;
+
+/// File magic (8 bytes).
+pub const MAGIC: &[u8; 8] = b"MIKRRSNP";
+/// Codec version; bump on any layout change.
+pub const VERSION: u32 = 1;
+
+const SEC_META: u32 = 1;
+const SEC_KERNEL: u32 = 2;
+const SEC_X: u32 = 3;
+const SEC_Y: u32 = 4;
+const SEC_MULT: u32 = 5;
+const SEC_END: u32 = 0xE0F;
+
+/// Everything a snapshot persists about one engine.
+#[derive(Clone, Debug)]
+pub struct EngineState {
+    /// Snapshot generation (monotone per shard).
+    pub generation: u64,
+    /// Published epoch at capture time.
+    pub epoch: u64,
+    /// Highest applied event sequence number at capture time — the replay
+    /// and re-feed cutoff.
+    pub high_seq: u64,
+    /// Operating space.
+    pub space: Space,
+    /// Whether the engine carries a KBR twin.
+    pub with_uncertainty: bool,
+    /// Ridge parameter.
+    pub ridge: f64,
+    /// Duplicate-fold radius.
+    pub fold_eps: Option<f64>,
+    /// Kernel.
+    pub kernel: Kernel,
+    /// Training features, engine order.
+    pub x: Mat,
+    /// Multiplicity-averaged targets `(N, D)`, engine order.
+    pub y: Mat,
+    /// Per-row duplicate multiplicities.
+    pub mult: Vec<f64>,
+}
+
+impl EngineState {
+    /// Capture an engine's persistent parts.
+    pub fn capture(e: &Engine, generation: u64, epoch: u64, high_seq: u64) -> Self {
+        let (x, y) = e.training_view();
+        Self {
+            generation,
+            epoch,
+            high_seq,
+            space: e.space(),
+            with_uncertainty: e.has_uncertainty(),
+            ridge: e.ridge(),
+            fold_eps: e.fold_eps(),
+            kernel: e.kernel().clone(),
+            x: x.clone(),
+            y: y.clone(),
+            mult: e.multiplicities().to_vec(),
+        }
+    }
+
+    /// Re-factorize an engine from the captured parts (fresh maintained
+    /// inverse, replayed multiplicities).
+    pub fn rebuild(&self) -> Result<Engine> {
+        Engine::from_parts(
+            &self.x,
+            &self.y,
+            &self.mult,
+            &self.kernel,
+            self.ridge,
+            self.space,
+            self.with_uncertainty,
+            self.fold_eps,
+        )
+    }
+
+    /// Serialize to the on-disk byte form.
+    pub fn encode(&self) -> Vec<u8> {
+        let floats = self.x.as_slice().len() + self.y.as_slice().len() + self.mult.len();
+        let mut out = Vec::with_capacity(64 + 8 * floats);
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, VERSION);
+
+        let mut p = Vec::new();
+        put_u64(&mut p, self.generation);
+        put_u64(&mut p, self.epoch);
+        put_u64(&mut p, self.high_seq);
+        put_space(&mut p, self.space);
+        put_u8(&mut p, self.with_uncertainty as u8);
+        put_f64(&mut p, self.ridge);
+        match self.fold_eps {
+            Some(eps) => {
+                put_u8(&mut p, 1);
+                put_f64(&mut p, eps);
+            }
+            None => {
+                put_u8(&mut p, 0);
+                put_f64(&mut p, 0.0);
+            }
+        }
+        write_section(&mut out, SEC_META, &p);
+
+        p.clear();
+        put_kernel(&mut p, &self.kernel);
+        write_section(&mut out, SEC_KERNEL, &p);
+
+        for (tag, m) in [(SEC_X, &self.x), (SEC_Y, &self.y)] {
+            p.clear();
+            put_u64(&mut p, m.rows() as u64);
+            put_u64(&mut p, m.cols() as u64);
+            for &v in m.as_slice() {
+                put_f64(&mut p, v);
+            }
+            write_section(&mut out, tag, &p);
+        }
+
+        p.clear();
+        put_u64(&mut p, self.mult.len() as u64);
+        for &v in &self.mult {
+            put_f64(&mut p, v);
+        }
+        write_section(&mut out, SEC_MULT, &p);
+
+        write_section(&mut out, SEC_END, &[]);
+        out
+    }
+
+    /// Decode from the on-disk byte form, verifying every CRC.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        const CTX: &str = "snapshot::decode";
+        let corrupt = |d: String| Error::persist_corruption(CTX, d);
+        let mut cur = Cursor::new(bytes, CTX);
+        let magic = cur.take_bytes(MAGIC.len())?;
+        if magic != MAGIC {
+            return Err(corrupt(format!("bad magic {magic:02x?}")));
+        }
+        let version = cur.take_u32()?;
+        if version != VERSION {
+            return Err(corrupt(format!("unsupported version {version}")));
+        }
+
+        let mut meta = None;
+        let mut kernel = None;
+        let mut x = None;
+        let mut y = None;
+        let mut mult = None;
+        let mut ended = false;
+        while !ended {
+            let (tag, payload) = read_section(&mut cur, CTX)?;
+            let mut pc = Cursor::new(payload, CTX);
+            match tag {
+                SEC_META => {
+                    let generation = pc.take_u64()?;
+                    let epoch = pc.take_u64()?;
+                    let high_seq = pc.take_u64()?;
+                    let space = take_space(&mut pc)?;
+                    let with_uncertainty = match pc.take_u8()? {
+                        0 => false,
+                        1 => true,
+                        b => return Err(corrupt(format!("bad bool {b}"))),
+                    };
+                    let ridge = pc.take_f64()?;
+                    let has_eps = pc.take_u8()?;
+                    let eps = pc.take_f64()?;
+                    let fold_eps = match has_eps {
+                        0 => None,
+                        1 => Some(eps),
+                        b => return Err(corrupt(format!("bad fold flag {b}"))),
+                    };
+                    meta = Some((
+                        generation,
+                        epoch,
+                        high_seq,
+                        space,
+                        with_uncertainty,
+                        ridge,
+                        fold_eps,
+                    ));
+                }
+                SEC_KERNEL => {
+                    kernel = Some(take_kernel(&mut pc)?);
+                }
+                SEC_X | SEC_Y => {
+                    let rows = pc.take_len()?;
+                    let cols = pc.take_len()?;
+                    let n = rows
+                        .checked_mul(cols)
+                        .and_then(|n| n.checked_mul(8).map(|_| n))
+                        .ok_or_else(|| {
+                            corrupt(format!("matrix {rows}x{cols} overflows"))
+                        })?;
+                    if pc.remaining() != n * 8 {
+                        return Err(corrupt(format!(
+                            "matrix section {tag:#x}: {rows}x{cols} needs {} bytes, has {}",
+                            n * 8,
+                            pc.remaining()
+                        )));
+                    }
+                    let mut data = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        data.push(pc.take_f64()?);
+                    }
+                    let m = Mat::from_vec(rows, cols, data)?;
+                    if tag == SEC_X {
+                        x = Some(m);
+                    } else {
+                        y = Some(m);
+                    }
+                }
+                SEC_MULT => {
+                    let n = pc.take_len()?;
+                    if n.checked_mul(8).is_none() {
+                        return Err(corrupt(format!("mult length {n} overflows")));
+                    }
+                    if pc.remaining() != n * 8 {
+                        return Err(corrupt(format!(
+                            "mult section: {n} entries need {} bytes, has {}",
+                            n * 8,
+                            pc.remaining()
+                        )));
+                    }
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(pc.take_f64()?);
+                    }
+                    mult = Some(v);
+                }
+                SEC_END => ended = true,
+                t => return Err(corrupt(format!("unknown section tag {t:#x}"))),
+            }
+            if !ended && !pc.is_empty() {
+                return Err(corrupt(format!("section {tag:#x} has trailing bytes")));
+            }
+        }
+        if !cur.is_empty() {
+            return Err(corrupt("trailing bytes after end section".into()));
+        }
+        let (generation, epoch, high_seq, space, with_uncertainty, ridge, fold_eps) =
+            meta.ok_or_else(|| corrupt("missing meta section".into()))?;
+        let kernel = kernel.ok_or_else(|| corrupt("missing kernel section".into()))?;
+        let x = x.ok_or_else(|| corrupt("missing X section".into()))?;
+        let y = y.ok_or_else(|| corrupt("missing Y section".into()))?;
+        let mult = mult.ok_or_else(|| corrupt("missing mult section".into()))?;
+        if x.rows() != y.rows() || mult.len() != y.rows() {
+            return Err(corrupt(format!(
+                "inconsistent stores: x {}x{}, y {}x{}, mult {}",
+                x.rows(),
+                x.cols(),
+                y.rows(),
+                y.cols(),
+                mult.len()
+            )));
+        }
+        Ok(Self {
+            generation,
+            epoch,
+            high_seq,
+            space,
+            with_uncertainty,
+            ridge,
+            fold_eps,
+            kernel,
+            x,
+            y,
+            mult,
+        })
+    }
+}
+
+/// Canonical snapshot filename for `(shard, generation)`.
+pub fn snapshot_path(dir: &Path, shard_id: usize, generation: u64) -> PathBuf {
+    dir.join(format!("shard-{shard_id}-gen-{generation}.snap"))
+}
+
+/// Write a snapshot crash-consistently: tmp file → fsync → atomic rename
+/// → directory fsync. Each boundary carries its [`KillPoint`].
+pub fn write_snapshot(dir: &Path, shard_id: usize, state: &EngineState) -> Result<()> {
+    const CTX: &str = "snapshot::write";
+    let bytes = state.encode();
+    let final_path = snapshot_path(dir, shard_id, state.generation);
+    let tmp_path = final_path.with_extension("snap.tmp");
+    {
+        let mut f =
+            fs::File::create(&tmp_path).map_err(|e| Error::persist_io(CTX, e))?;
+        if kill::fires(KillPoint::SnapTmpTorn) {
+            // simulate dying mid-write: half the body lands, then nothing
+            let _ = f.write_all(&bytes[..bytes.len() / 2]);
+            return Err(kill::killed(CTX, KillPoint::SnapTmpTorn));
+        }
+        f.write_all(&bytes).map_err(|e| Error::persist_io(CTX, e))?;
+        if kill::fires(KillPoint::SnapTmpFull) {
+            return Err(kill::killed(CTX, KillPoint::SnapTmpFull));
+        }
+        if kill::fires(KillPoint::SnapTmpFsync) {
+            return Err(kill::killed(CTX, KillPoint::SnapTmpFsync));
+        }
+        f.sync_all().map_err(|e| Error::persist_io(CTX, e))?;
+    }
+    if kill::fires(KillPoint::SnapRename) {
+        return Err(kill::killed(CTX, KillPoint::SnapRename));
+    }
+    fs::rename(&tmp_path, &final_path).map_err(|e| Error::persist_io(CTX, e))?;
+    if kill::fires(KillPoint::SnapDirFsync) {
+        return Err(kill::killed(CTX, KillPoint::SnapDirFsync));
+    }
+    sync_dir(dir).map_err(|e| Error::persist_io(CTX, e))?;
+    Ok(())
+}
+
+/// Read and decode one snapshot file.
+pub fn read_snapshot(path: &Path) -> Result<EngineState> {
+    let bytes = fs::read(path).map_err(|e| Error::persist_io("snapshot::read", e))?;
+    EngineState::decode(&bytes)
+}
+
+/// Shard snapshot generations present in `dir`, ascending. Ignores tmp
+/// garbage, quarantined `.corrupt` files, and other shards' files.
+pub fn list_generations(dir: &Path, shard_id: usize) -> Result<Vec<u64>> {
+    const CTX: &str = "snapshot::list";
+    let prefix = format!("shard-{shard_id}-gen-");
+    let mut gens = Vec::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(gens),
+        Err(e) => return Err(Error::persist_io(CTX, e)),
+    };
+    for entry in entries {
+        let entry = entry.map_err(|e| Error::persist_io(CTX, e))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix(&prefix) else { continue };
+        let Some(gen) = rest.strip_suffix(".snap") else { continue };
+        if let Ok(g) = gen.parse::<u64>() {
+            gens.push(g);
+        }
+    }
+    gens.sort_unstable();
+    Ok(gens)
+}
+
+/// Quarantine a corrupt snapshot out of the generation listing (renamed to
+/// `<name>.corrupt`, kept for post-mortem).
+pub fn quarantine_snapshot(path: &Path) -> Result<()> {
+    let mut corrupt = path.as_os_str().to_owned();
+    corrupt.push(".corrupt");
+    fs::rename(path, PathBuf::from(corrupt))
+        .map_err(|e| Error::persist_io("snapshot::quarantine", e))
+}
+
+/// fsync a directory so a completed rename is durable.
+pub(crate) fn sync_dir(dir: &Path) -> std::io::Result<()> {
+    fs::File::open(dir)?.sync_all()
+}
+
+// ---- shared enum codecs (also used by the router-meta file) ----
+
+pub(crate) fn put_space(out: &mut Vec<u8>, space: Space) {
+    put_u8(out, match space {
+        Space::Intrinsic => 0,
+        Space::Empirical => 1,
+    });
+}
+
+pub(crate) fn take_space(pc: &mut Cursor<'_>) -> Result<Space> {
+    match pc.take_u8()? {
+        0 => Ok(Space::Intrinsic),
+        1 => Ok(Space::Empirical),
+        s => Err(Error::persist_corruption("take_space", format!("unknown space tag {s}"))),
+    }
+}
+
+pub(crate) fn put_kernel(out: &mut Vec<u8>, k: &Kernel) {
+    match k {
+        Kernel::Linear => put_u8(out, 0),
+        Kernel::Poly { degree, coef0 } => {
+            put_u8(out, 1);
+            put_u32(out, *degree);
+            put_f64(out, *coef0);
+        }
+        Kernel::Rbf { gamma } => {
+            put_u8(out, 2);
+            put_f64(out, *gamma);
+        }
+    }
+}
+
+pub(crate) fn take_kernel(pc: &mut Cursor<'_>) -> Result<Kernel> {
+    match pc.take_u8()? {
+        0 => Ok(Kernel::Linear),
+        1 => {
+            let degree = pc.take_u32()?;
+            let coef0 = pc.take_f64()?;
+            Ok(Kernel::Poly { degree, coef0 })
+        }
+        2 => Ok(Kernel::Rbf { gamma: pc.take_f64()? }),
+        k => Err(Error::persist_corruption("take_kernel", format!("unknown kernel tag {k}"))),
+    }
+}

@@ -1,0 +1,641 @@
+//! Per-shard durability driver: checkpoint scheduling, WAL segment
+//! rotation, generation GC, and the recovery scan.
+//!
+//! A [`ShardStore`] owns one shard's on-disk state:
+//!
+//! ```text
+//! <dir>/router.meta                    fleet topology + round policy
+//! <dir>/shard-<k>-gen-<g>.snap         engine snapshot, generation g
+//! <dir>/shard-<k>-wal-<g>.log          events applied AFTER snapshot g
+//! ```
+//!
+//! The live write path is *write-ahead*: the shard logs a round's batch
+//! ([`ShardStore::log_batch`]) before applying it, and after a successful
+//! round calls [`ShardStore::maybe_checkpoint`] — every `checkpoint_every`
+//! rounds that snapshots the engine at generation `g+1`, opens WAL segment
+//! `g+1`, and garbage-collects generations older than the retention
+//! window. Keeping `keep_generations >= 2` means a corrupted newest
+//! snapshot still recovers: the scan falls back one generation and replays
+//! a longer WAL suffix instead.
+//!
+//! [`recover_shard`] is the read side: pick the newest snapshot that
+//! decodes cleanly (quarantining corrupt ones as `.corrupt` and counting
+//! `snapshot_fallbacks`), then collect every WAL record from that
+//! generation forward — including segments *newer* than the chosen
+//! snapshot, which exist exactly when the newest snapshot was the corrupt
+//! one. Torn tails are truncated and counted (`torn_tails_truncated`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::CoordinatorConfig;
+use crate::error::{Error, Result};
+use crate::health::fault::KillPoint;
+use crate::metrics::Counters;
+use crate::streaming::batcher::BatchPolicy;
+use crate::streaming::outlier::OutlierConfig;
+use crate::streaming::StreamEvent;
+
+use super::codec::{put_f64, put_u64, put_u8, read_section, write_section, Cursor};
+use super::kill;
+use super::snapshot::{
+    self, put_kernel, put_space, quarantine_snapshot, read_snapshot, snapshot_path,
+    take_kernel, take_space, write_snapshot, EngineState,
+};
+use super::wal::{read_records, wal_path, Wal, WalRecord};
+
+/// Durability policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct DurabilityConfig {
+    /// Snapshot the engine every this many successful rounds (`>= 1`).
+    pub checkpoint_every: u64,
+    /// Snapshot generations retained after GC (`>= 1`; keep `>= 2` to
+    /// survive a corrupted newest generation).
+    pub keep_generations: usize,
+}
+
+impl Default for DurabilityConfig {
+    fn default() -> Self {
+        Self { checkpoint_every: 8, keep_generations: 2 }
+    }
+}
+
+impl DurabilityConfig {
+    fn validate(&self) -> Result<()> {
+        if self.checkpoint_every == 0 {
+            return Err(Error::Config("checkpoint_every must be >= 1".into()));
+        }
+        if self.keep_generations == 0 {
+            return Err(Error::Config("keep_generations must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One shard's durability state: current generation, its open WAL
+/// segment, and the checkpoint cadence.
+pub struct ShardStore {
+    dir: PathBuf,
+    shard_id: usize,
+    generation: u64,
+    rounds_since_checkpoint: u64,
+    wal: Wal,
+    cfg: DurabilityConfig,
+    scratch: Vec<u8>,
+    /// Durability counters (`snapshots_written`, `wal_records_appended`,
+    /// ...), merged into fleet views via [`Counters::merge_from`].
+    pub counters: Counters,
+}
+
+impl ShardStore {
+    /// Initialize a shard's durable state: write snapshot generation 1 of
+    /// the engine as it stands and open WAL segment 1.
+    pub fn create(
+        dir: &Path,
+        shard_id: usize,
+        engine: &Engine,
+        epoch: u64,
+        high_seq: u64,
+        cfg: DurabilityConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        fs::create_dir_all(dir).map_err(|e| Error::persist_io("ShardStore::create", e))?;
+        let mut counters = Counters::default();
+        write_snapshot(dir, shard_id, &EngineState::capture(engine, 1, epoch, high_seq))?;
+        counters.inc("snapshots_written");
+        let wal = Wal::create(dir, shard_id, 1)?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            shard_id,
+            generation: 1,
+            rounds_since_checkpoint: 0,
+            wal,
+            cfg,
+            scratch: Vec::new(),
+            counters,
+        })
+    }
+
+    /// Resume a shard's durable state at `generation` after recovery,
+    /// taking a fresh checkpoint there (snapshot + empty segment). Using a
+    /// generation strictly above every pre-crash one keeps the invariant
+    /// that record sequence numbers never run backwards across segment
+    /// order, even after a generation fallback.
+    pub fn resume(
+        dir: &Path,
+        shard_id: usize,
+        engine: &Engine,
+        epoch: u64,
+        high_seq: u64,
+        generation: u64,
+        cfg: DurabilityConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let mut store = Self {
+            dir: dir.to_path_buf(),
+            shard_id,
+            generation: generation.saturating_sub(1),
+            rounds_since_checkpoint: 0,
+            wal: Wal::create(dir, shard_id, generation)?,
+            cfg,
+            scratch: Vec::new(),
+            counters: Counters::default(),
+        };
+        // checkpoint() moves generation forward to `generation` and
+        // GCs everything the retention window no longer needs
+        store.checkpoint(engine, epoch, high_seq)?;
+        Ok(store)
+    }
+
+    /// Current snapshot generation.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The state directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Write-ahead log one validated event batch (before it is applied).
+    pub fn log_batch(&mut self, seq: u64, events: &[StreamEvent]) -> Result<()> {
+        let rec = WalRecord::Batch { seq, events: events.to_vec() };
+        self.wal.append(&rec, &mut self.scratch)?;
+        self.counters.inc("wal_records_appended");
+        Ok(())
+    }
+
+    /// Write-ahead log an outlier-eviction round.
+    pub fn log_evict(&mut self, seq: u64) -> Result<()> {
+        self.wal.append(&WalRecord::Evict { seq }, &mut self.scratch)?;
+        self.counters.inc("wal_records_appended");
+        Ok(())
+    }
+
+    /// Write-ahead log a self-heal refactorization.
+    pub fn log_heal(&mut self, seq: u64) -> Result<()> {
+        self.wal.append(&WalRecord::Heal { seq }, &mut self.scratch)?;
+        self.counters.inc("wal_records_appended");
+        Ok(())
+    }
+
+    /// Called after each successful round: checkpoint when the cadence
+    /// says so. Returns whether a checkpoint was taken.
+    pub fn maybe_checkpoint(&mut self, engine: &Engine, epoch: u64, high_seq: u64) -> Result<bool> {
+        self.rounds_since_checkpoint += 1;
+        if self.rounds_since_checkpoint < self.cfg.checkpoint_every {
+            return Ok(false);
+        }
+        self.checkpoint(engine, epoch, high_seq)?;
+        Ok(true)
+    }
+
+    /// Unconditional checkpoint: snapshot at `generation + 1`, open that
+    /// generation's WAL segment, GC what retention no longer needs.
+    pub fn checkpoint(&mut self, engine: &Engine, epoch: u64, high_seq: u64) -> Result<()> {
+        const CTX: &str = "ShardStore::checkpoint";
+        let gen = self.generation + 1;
+        let state = EngineState::capture(engine, gen, epoch, high_seq);
+        write_snapshot(&self.dir, self.shard_id, &state)?;
+        self.counters.inc("snapshots_written");
+        if kill::fires(KillPoint::SnapNewSegment) {
+            return Err(kill::killed(CTX, KillPoint::SnapNewSegment));
+        }
+        self.wal = Wal::create(&self.dir, self.shard_id, gen)?;
+        self.generation = gen;
+        self.rounds_since_checkpoint = 0;
+        if kill::fires(KillPoint::SnapGc) {
+            return Err(kill::killed(CTX, KillPoint::SnapGc));
+        }
+        self.gc()?;
+        Ok(())
+    }
+
+    /// Remove snapshot + WAL generations older than the retention window.
+    fn gc(&mut self) -> Result<()> {
+        const CTX: &str = "ShardStore::gc";
+        let gens = snapshot::list_generations(&self.dir, self.shard_id)?;
+        if gens.len() <= self.cfg.keep_generations {
+            return Ok(());
+        }
+        for &g in &gens[..gens.len() - self.cfg.keep_generations] {
+            for path in [
+                snapshot_path(&self.dir, self.shard_id, g),
+                wal_path(&self.dir, self.shard_id, g),
+            ] {
+                match fs::remove_file(&path) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(Error::persist_io(CTX, e)),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Everything [`recover_shard`] digs out of one shard's state directory.
+pub struct RecoveredShard {
+    /// The newest snapshot that decoded cleanly.
+    pub state: EngineState,
+    /// WAL records from `state.generation` forward, ascending segment
+    /// order (replay candidates; the applier skips `seq <= epoch`).
+    pub records: Vec<WalRecord>,
+    /// What recovery observed (`snapshot_fallbacks`,
+    /// `torn_tails_truncated`).
+    pub counters: Counters,
+    /// Highest generation seen on disk, valid or not — resume at
+    /// `max_generation_seen + 1`.
+    pub max_generation_seen: u64,
+}
+
+/// Scan one shard's directory: newest valid snapshot + WAL suffix.
+pub fn recover_shard(dir: &Path, shard_id: usize) -> Result<RecoveredShard> {
+    const CTX: &str = "recover_shard";
+    let mut counters = Counters::default();
+    let gens = snapshot::list_generations(dir, shard_id)?;
+    if gens.is_empty() {
+        return Err(Error::persist_corruption(
+            CTX,
+            format!("no snapshot generations for shard {shard_id} in {}", dir.display()),
+        ));
+    }
+    let mut max_generation_seen = *gens.last().expect("non-empty");
+    let mut state = None;
+    for &g in gens.iter().rev() {
+        let path = snapshot_path(dir, shard_id, g);
+        match read_snapshot(&path) {
+            Ok(s) if s.generation == g => {
+                state = Some(s);
+                break;
+            }
+            Ok(_) => {
+                // a snapshot claiming another generation is misfiled bytes
+                counters.inc("snapshot_fallbacks");
+                quarantine_snapshot(&path)?;
+            }
+            Err(e) if !e.is_transient() => {
+                counters.inc("snapshot_fallbacks");
+                quarantine_snapshot(&path)?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let state = state.ok_or_else(|| {
+        Error::persist_corruption(
+            CTX,
+            format!("every snapshot generation of shard {shard_id} is corrupt"),
+        )
+    })?;
+
+    // WAL segments can outrun the chosen snapshot when the newest snapshot
+    // was the corrupt one — replay them all, ascending.
+    for g in list_wal_generations(dir, shard_id)? {
+        max_generation_seen = max_generation_seen.max(g);
+    }
+    let mut records = Vec::new();
+    for g in state.generation..=max_generation_seen {
+        let (mut recs, torn) = read_records(&wal_path(dir, shard_id, g))?;
+        if torn {
+            counters.inc("torn_tails_truncated");
+        }
+        records.append(&mut recs);
+    }
+    Ok(RecoveredShard { state, records, counters, max_generation_seen })
+}
+
+/// WAL segment generations present for a shard, ascending.
+fn list_wal_generations(dir: &Path, shard_id: usize) -> Result<Vec<u64>> {
+    const CTX: &str = "list_wal_generations";
+    let prefix = format!("shard-{shard_id}-wal-");
+    let mut gens = Vec::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(gens),
+        Err(e) => return Err(Error::persist_io(CTX, e)),
+    };
+    for entry in entries {
+        let entry = entry.map_err(|e| Error::persist_io(CTX, e))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix(&prefix) else { continue };
+        let Some(g) = rest.strip_suffix(".log") else { continue };
+        if let Ok(g) = g.parse::<u64>() {
+            gens.push(g);
+        }
+    }
+    gens.sort_unstable();
+    Ok(gens)
+}
+
+// ---- router metadata ----
+
+/// Fleet-level recovery metadata: how many shards, how arrivals were
+/// placed, the shared round policy, and the durability knobs. Written once
+/// by `ShardRouter::make_durable` (atomically, no kill points — it is not
+/// on the hot write path) and read first by `ShardRouter::recover`.
+#[derive(Clone, Debug)]
+pub struct RouterMeta {
+    /// Shard count K.
+    pub shards: usize,
+    /// True for content-hash placement (`Placement::Hash`), false for
+    /// round-robin. Stored as a plain bool so the persist layer does not
+    /// depend on serve-layer types.
+    pub hash_placement: bool,
+    /// The per-shard round policy.
+    pub base: CoordinatorConfig,
+    /// Durability knobs to resume with.
+    pub durability: DurabilityConfig,
+}
+
+const META_MAGIC: &[u8; 8] = b"MIKRRMET";
+const META_VERSION: u32 = 1;
+const SEC_ROUTER: u32 = 1;
+
+/// The metadata file's path.
+pub fn meta_path(dir: &Path) -> PathBuf {
+    dir.join("router.meta")
+}
+
+/// Atomically write the router metadata file.
+pub fn write_meta(dir: &Path, meta: &RouterMeta) -> Result<()> {
+    const CTX: &str = "write_meta";
+    fs::create_dir_all(dir).map_err(|e| Error::persist_io(CTX, e))?;
+    let mut out = Vec::new();
+    out.extend_from_slice(META_MAGIC);
+    super::codec::put_u32(&mut out, META_VERSION);
+    let mut p = Vec::new();
+    put_u64(&mut p, meta.shards as u64);
+    put_u8(&mut p, meta.hash_placement as u8);
+    put_u64(&mut p, meta.durability.checkpoint_every);
+    put_u64(&mut p, meta.durability.keep_generations as u64);
+    put_kernel(&mut p, &meta.base.kernel);
+    put_f64(&mut p, meta.base.ridge);
+    match meta.base.space {
+        None => put_u8(&mut p, 0),
+        Some(s) => {
+            put_u8(&mut p, 1);
+            put_space(&mut p, s);
+        }
+    }
+    put_u64(&mut p, meta.base.batch.max_batch as u64);
+    put_u64(&mut p, meta.base.batch.max_wait.as_nanos() as u64);
+    match &meta.base.outlier {
+        None => {
+            put_u8(&mut p, 0);
+            put_f64(&mut p, 0.0);
+            put_u64(&mut p, 0);
+        }
+        Some(o) => {
+            put_u8(&mut p, 1);
+            put_f64(&mut p, o.z_threshold);
+            put_u64(&mut p, o.max_removals as u64);
+        }
+    }
+    put_u8(&mut p, meta.base.with_uncertainty as u8);
+    put_u8(&mut p, meta.base.snapshot_rollback as u8);
+    match meta.base.fold_eps {
+        None => {
+            put_u8(&mut p, 0);
+            put_f64(&mut p, 0.0);
+        }
+        Some(eps) => {
+            put_u8(&mut p, 1);
+            put_f64(&mut p, eps);
+        }
+    }
+    write_section(&mut out, SEC_ROUTER, &p);
+
+    let final_path = meta_path(dir);
+    let tmp_path = dir.join("router.meta.tmp");
+    {
+        use std::io::Write as _;
+        let mut f = fs::File::create(&tmp_path).map_err(|e| Error::persist_io(CTX, e))?;
+        f.write_all(&out).map_err(|e| Error::persist_io(CTX, e))?;
+        f.sync_all().map_err(|e| Error::persist_io(CTX, e))?;
+    }
+    fs::rename(&tmp_path, &final_path).map_err(|e| Error::persist_io(CTX, e))?;
+    snapshot::sync_dir(dir).map_err(|e| Error::persist_io(CTX, e))?;
+    Ok(())
+}
+
+/// Read and verify the router metadata file.
+pub fn read_meta(dir: &Path) -> Result<RouterMeta> {
+    const CTX: &str = "read_meta";
+    let corrupt = |d: String| Error::persist_corruption(CTX, d);
+    let bytes = fs::read(meta_path(dir)).map_err(|e| Error::persist_io(CTX, e))?;
+    let mut cur = Cursor::new(&bytes, CTX);
+    let magic = cur.take_bytes(META_MAGIC.len())?;
+    if magic != META_MAGIC {
+        return Err(corrupt(format!("bad magic {magic:02x?}")));
+    }
+    let version = cur.take_u32()?;
+    if version != META_VERSION {
+        return Err(corrupt(format!("unsupported version {version}")));
+    }
+    let (tag, payload) = read_section(&mut cur, CTX)?;
+    if tag != SEC_ROUTER {
+        return Err(corrupt(format!("unexpected section {tag:#x}")));
+    }
+    let mut pc = Cursor::new(payload, CTX);
+    let shards = pc.take_len()?;
+    let hash_placement = pc.take_u8()? != 0;
+    let checkpoint_every = pc.take_u64()?;
+    let keep_generations = pc.take_len()?;
+    let kernel = take_kernel(&mut pc)?;
+    let ridge = pc.take_f64()?;
+    let space = match pc.take_u8()? {
+        0 => None,
+        1 => Some(take_space(&mut pc)?),
+        b => return Err(corrupt(format!("bad space flag {b}"))),
+    };
+    let max_batch = pc.take_len()?;
+    let max_wait = std::time::Duration::from_nanos(pc.take_u64()?);
+    let outlier = {
+        let flag = pc.take_u8()?;
+        let z_threshold = pc.take_f64()?;
+        let max_removals = pc.take_len()?;
+        match flag {
+            0 => None,
+            1 => Some(OutlierConfig { z_threshold, max_removals }),
+            b => return Err(corrupt(format!("bad outlier flag {b}"))),
+        }
+    };
+    let with_uncertainty = pc.take_u8()? != 0;
+    let snapshot_rollback = pc.take_u8()? != 0;
+    let fold_eps = {
+        let flag = pc.take_u8()?;
+        let eps = pc.take_f64()?;
+        match flag {
+            0 => None,
+            1 => Some(eps),
+            b => return Err(corrupt(format!("bad fold flag {b}"))),
+        }
+    };
+    if !pc.is_empty() {
+        return Err(corrupt("trailing bytes in router section".into()));
+    }
+    Ok(RouterMeta {
+        shards,
+        hash_placement,
+        base: CoordinatorConfig {
+            kernel,
+            ridge,
+            space,
+            batch: BatchPolicy { max_batch, max_wait },
+            outlier,
+            with_uncertainty,
+            snapshot_rollback,
+            fold_eps,
+        },
+        durability: DurabilityConfig { checkpoint_every, keep_generations },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Space;
+    use crate::data::synth;
+    use crate::kernels::Kernel;
+    use crate::testutil::ScratchDir;
+
+    fn small_engine(seed: u64) -> Engine {
+        let d = synth::ecg_like(24, 4, seed);
+        Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false).unwrap()
+    }
+
+    #[test]
+    fn checkpoint_cadence_rotates_generations_and_gcs() {
+        let dir = ScratchDir::new("store-cadence");
+        let e = small_engine(31);
+        let cfg = DurabilityConfig { checkpoint_every: 2, keep_generations: 2 };
+        let mut store = ShardStore::create(dir.path(), 0, &e, 0, 0, cfg).unwrap();
+        assert_eq!(store.generation(), 1);
+        let ev = vec![StreamEvent::single(vec![0.0; 4], 0.1, 0, 1)];
+        for round in 1..=5u64 {
+            store.log_batch(round, &ev).unwrap();
+            let ck = store.maybe_checkpoint(&e, round, round).unwrap();
+            assert_eq!(ck, round % 2 == 0, "round {round}");
+        }
+        assert_eq!(store.generation(), 3);
+        assert_eq!(store.counters.get("snapshots_written"), 3);
+        assert_eq!(store.counters.get("wal_records_appended"), 5);
+        let gens = snapshot::list_generations(dir.path(), 0).unwrap();
+        assert_eq!(gens, vec![2, 3], "generation 1 was GCd");
+        assert_eq!(list_wal_generations(dir.path(), 0).unwrap(), vec![2, 3]);
+        // the open segment holds exactly the post-checkpoint record
+        let (recs, torn) = read_records(&wal_path(dir.path(), 0, 3)).unwrap();
+        assert!(!torn);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].seq(), 5);
+    }
+
+    #[test]
+    fn recover_prefers_newest_valid_snapshot() {
+        let dir = ScratchDir::new("store-recover");
+        let e = small_engine(32);
+        let cfg = DurabilityConfig { checkpoint_every: 100, keep_generations: 2 };
+        let mut store = ShardStore::create(dir.path(), 0, &e, 0, 0, cfg).unwrap();
+        store.checkpoint(&e, 3, 3).unwrap();
+        store.log_evict(4).unwrap();
+        let rec = recover_shard(dir.path(), 0).unwrap();
+        assert_eq!(rec.state.generation, 2);
+        assert_eq!(rec.state.high_seq, 3);
+        assert_eq!(rec.max_generation_seen, 2);
+        assert_eq!(rec.records.len(), 1);
+        assert_eq!(rec.records[0].seq(), 4);
+        assert_eq!(rec.counters.get("snapshot_fallbacks"), 0);
+        let rebuilt = rec.state.rebuild().unwrap();
+        assert_eq!(rebuilt.n_samples(), e.n_samples());
+    }
+
+    #[test]
+    fn corrupt_newest_generation_falls_back_and_replays_older_segment() {
+        let dir = ScratchDir::new("store-fallback");
+        let e = small_engine(33);
+        let cfg = DurabilityConfig { checkpoint_every: 100, keep_generations: 2 };
+        let mut store = ShardStore::create(dir.path(), 0, &e, 0, 0, cfg).unwrap();
+        store.log_evict(1).unwrap();
+        store.log_evict(2).unwrap();
+        store.checkpoint(&e, 2, 2).unwrap();
+        store.log_evict(3).unwrap();
+        // flip one byte inside snapshot generation 2
+        let snap2 = snapshot_path(dir.path(), 0, 2);
+        let mut bytes = fs::read(&snap2).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        fs::write(&snap2, &bytes).unwrap();
+        let rec = recover_shard(dir.path(), 0).unwrap();
+        assert_eq!(rec.state.generation, 1, "fell back one generation");
+        assert_eq!(rec.counters.get("snapshot_fallbacks"), 1);
+        assert_eq!(rec.max_generation_seen, 2);
+        // the longer suffix: both segments replay (seqs 1, 2 from segment
+        // 1 and seq 3 from segment 2)
+        assert_eq!(
+            rec.records.iter().map(WalRecord::seq).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        // the corrupt file is quarantined out of the listing
+        assert_eq!(snapshot::list_generations(dir.path(), 0).unwrap(), vec![1]);
+        assert!(fs::metadata(snap2.with_extension("snap.corrupt")).is_ok());
+    }
+
+    #[test]
+    fn resume_checkpoints_above_every_seen_generation() {
+        let dir = ScratchDir::new("store-resume");
+        let e = small_engine(34);
+        let cfg = DurabilityConfig::default();
+        let mut store = ShardStore::create(dir.path(), 0, &e, 0, 0, cfg).unwrap();
+        store.checkpoint(&e, 1, 1).unwrap();
+        drop(store);
+        let rec = recover_shard(dir.path(), 0).unwrap();
+        let store =
+            ShardStore::resume(dir.path(), 0, &e, 1, 1, rec.max_generation_seen + 1, cfg).unwrap();
+        assert_eq!(store.generation(), 3);
+        let gens = snapshot::list_generations(dir.path(), 0).unwrap();
+        assert_eq!(*gens.last().unwrap(), 3);
+    }
+
+    #[test]
+    fn router_meta_round_trips() {
+        let dir = ScratchDir::new("store-meta");
+        let mut base = CoordinatorConfig::default_for(Kernel::Rbf { gamma: 0.02 });
+        base.space = Some(Space::Empirical);
+        base.with_uncertainty = true;
+        base.snapshot_rollback = true;
+        base.fold_eps = Some(1e-9);
+        base.batch.max_batch = 7;
+        base.batch.max_wait = std::time::Duration::from_millis(21);
+        let meta = RouterMeta {
+            shards: 5,
+            hash_placement: true,
+            base,
+            durability: DurabilityConfig { checkpoint_every: 3, keep_generations: 4 },
+        };
+        write_meta(dir.path(), &meta).unwrap();
+        let got = read_meta(dir.path()).unwrap();
+        assert_eq!(got.shards, 5);
+        assert!(got.hash_placement);
+        assert_eq!(got.durability.checkpoint_every, 3);
+        assert_eq!(got.durability.keep_generations, 4);
+        assert_eq!(got.base.kernel, Kernel::Rbf { gamma: 0.02 });
+        assert_eq!(got.base.space, Some(Space::Empirical));
+        assert_eq!(got.base.batch.max_batch, 7);
+        assert_eq!(got.base.batch.max_wait, std::time::Duration::from_millis(21));
+        let o = got.base.outlier.expect("outlier config survives");
+        assert_eq!(o.z_threshold, 4.0);
+        assert_eq!(o.max_removals, 2);
+        assert!(got.base.with_uncertainty);
+        assert!(got.base.snapshot_rollback);
+        assert_eq!(got.base.fold_eps, Some(1e-9));
+        // corruption is rejected
+        let path = meta_path(dir.path());
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 10;
+        bytes[last] ^= 0x80;
+        fs::write(&path, &bytes).unwrap();
+        assert!(read_meta(dir.path()).unwrap_err().to_string().contains("corruption"));
+    }
+}

@@ -1,0 +1,427 @@
+//! Per-shard write-ahead log of applied event batches.
+//!
+//! One WAL *segment* per snapshot generation: `shard-<id>-wal-<gen>.log`
+//! holds everything applied *after* snapshot generation `gen` landed.
+//! Recovery loads the newest valid snapshot and replays the segments from
+//! that generation forward; checkpointing opens a fresh segment and
+//! garbage-collects the ones older generations covered.
+//!
+//! ## Record framing
+//!
+//! ```text
+//! segment  = [magic "MIKRRWAL"][version u32] record*
+//! record   = [len u32][payload: len bytes][crc32(payload) u32]
+//! payload  = [kind u8][seq u64] body
+//! ```
+//!
+//! `seq` is the monotone per-shard sequence the record publishes (the
+//! epoch the round produced). Replay is idempotent by `seq`: records at or
+//! below the recovered engine's epoch are skipped, so a crash *after* the
+//! snapshot but *before* WAL truncation never double-applies.
+//!
+//! ## Torn tails
+//!
+//! A crash mid-append leaves a partial record at the tail. On read, the
+//! first record that is truncated or fails its CRC ends the segment: the
+//! valid prefix is returned and (when `repair` is set) the file is
+//! truncated back to it, exactly like a journaling filesystem's log
+//! replay. A *live* append that fails with a real I/O error also rolls the
+//! file back to its pre-append length so a later append cannot interleave
+//! with the torn bytes — but a chaos kill deliberately skips that repair,
+//! because the simulated process is dead.
+
+use std::fs;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::health::fault::KillPoint;
+use crate::streaming::StreamEvent;
+
+use super::codec::{frame_crc, put_u32, put_u64, put_u8};
+use super::kill;
+
+/// Segment magic (8 bytes).
+pub const WAL_MAGIC: &[u8; 8] = b"MIKRRWAL";
+/// Segment codec version.
+pub const WAL_VERSION: u32 = 1;
+
+const HEADER_LEN: u64 = 12;
+
+const KIND_BATCH: u8 = 0;
+const KIND_EVICT: u8 = 1;
+const KIND_HEAL: u8 = 2;
+
+/// One durable log entry: a state transition the shard applied.
+#[derive(Clone, Debug)]
+pub enum WalRecord {
+    /// A validated event batch entering [`apply_batch`](crate::serve::Shard).
+    Batch {
+        /// Sequence the round publishes (engine epoch after apply).
+        seq: u64,
+        /// The filtered, validated events, in apply order.
+        events: Vec<StreamEvent>,
+    },
+    /// An outlier-eviction round.
+    Evict {
+        /// Sequence the eviction publishes.
+        seq: u64,
+    },
+    /// A self-heal refactorization round.
+    Heal {
+        /// Sequence the heal publishes.
+        seq: u64,
+    },
+}
+
+impl WalRecord {
+    /// The sequence this record publishes.
+    pub fn seq(&self) -> u64 {
+        match self {
+            WalRecord::Batch { seq, .. }
+            | WalRecord::Evict { seq }
+            | WalRecord::Heal { seq } => *seq,
+        }
+    }
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            WalRecord::Batch { seq, events } => {
+                put_u8(out, KIND_BATCH);
+                put_u64(out, *seq);
+                put_u32(out, events.len() as u32);
+                for e in events {
+                    e.encode_into(out);
+                }
+            }
+            WalRecord::Evict { seq } => {
+                put_u8(out, KIND_EVICT);
+                put_u64(out, *seq);
+            }
+            WalRecord::Heal { seq } => {
+                put_u8(out, KIND_HEAL);
+                put_u64(out, *seq);
+            }
+        }
+    }
+
+    fn decode_payload(buf: &[u8]) -> Result<WalRecord> {
+        const CTX: &str = "WalRecord::decode";
+        let corrupt = |d: String| Error::persist_corruption(CTX, d);
+        if buf.len() < 9 {
+            return Err(corrupt(format!("payload of {} bytes has no header", buf.len())));
+        }
+        let kind = buf[0];
+        let seq = u64::from_le_bytes(buf[1..9].try_into().unwrap());
+        let mut pos = 9;
+        match kind {
+            KIND_BATCH => {
+                if buf.len() < pos + 4 {
+                    return Err(corrupt("batch record missing count".into()));
+                }
+                let n = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+                pos += 4;
+                let mut events = Vec::with_capacity(n.min(1 + buf.len() / 24));
+                for _ in 0..n {
+                    events.push(StreamEvent::decode_from(buf, &mut pos)?);
+                }
+                if pos != buf.len() {
+                    return Err(corrupt(format!(
+                        "batch record has {} trailing bytes",
+                        buf.len() - pos
+                    )));
+                }
+                Ok(WalRecord::Batch { seq, events })
+            }
+            KIND_EVICT | KIND_HEAL => {
+                if pos != buf.len() {
+                    return Err(corrupt("oversized control record".into()));
+                }
+                Ok(if kind == KIND_EVICT {
+                    WalRecord::Evict { seq }
+                } else {
+                    WalRecord::Heal { seq }
+                })
+            }
+            k => Err(corrupt(format!("unknown record kind {k}"))),
+        }
+    }
+}
+
+/// Canonical segment filename for `(shard, generation)`.
+pub fn wal_path(dir: &Path, shard_id: usize, generation: u64) -> PathBuf {
+    dir.join(format!("shard-{shard_id}-wal-{generation}.log"))
+}
+
+/// An open, append-only WAL segment.
+pub struct Wal {
+    file: fs::File,
+    path: PathBuf,
+    /// Length of the valid prefix — the rollback point for failed appends.
+    len: u64,
+}
+
+impl Wal {
+    /// Create a fresh segment (header written and fsynced). Truncates any
+    /// stale file at the same path.
+    pub fn create(dir: &Path, shard_id: usize, generation: u64) -> Result<Self> {
+        const CTX: &str = "Wal::create";
+        let path = wal_path(dir, shard_id, generation);
+        let mut file = fs::File::create(&path).map_err(|e| Error::persist_io(CTX, e))?;
+        let mut header = Vec::with_capacity(HEADER_LEN as usize);
+        header.extend_from_slice(WAL_MAGIC);
+        put_u32(&mut header, WAL_VERSION);
+        file.write_all(&header).map_err(|e| Error::persist_io(CTX, e))?;
+        file.sync_all().map_err(|e| Error::persist_io(CTX, e))?;
+        Ok(Self { file, path, len: HEADER_LEN })
+    }
+
+    /// Re-open an existing segment for appending, truncating any torn
+    /// tail first. Returns `(wal, records, torn)`.
+    pub fn open(
+        dir: &Path,
+        shard_id: usize,
+        generation: u64,
+    ) -> Result<(Self, Vec<WalRecord>, bool)> {
+        const CTX: &str = "Wal::open";
+        let path = wal_path(dir, shard_id, generation);
+        let (records, valid_len, torn) = scan(&path)?;
+        let file = fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .map_err(|e| Error::persist_io(CTX, e))?;
+        if torn {
+            file.set_len(valid_len).map_err(|e| Error::persist_io(CTX, e))?;
+            file.sync_all().map_err(|e| Error::persist_io(CTX, e))?;
+        }
+        Ok((Self { file, path, len: valid_len }, records, torn))
+    }
+
+    /// The segment's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Length of the durable valid prefix.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True when the segment holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len <= HEADER_LEN
+    }
+
+    /// Append one record durably (write + fsync). `scratch` is reused
+    /// across calls to keep the hot path allocation-light.
+    pub fn append(&mut self, rec: &WalRecord, scratch: &mut Vec<u8>) -> Result<()> {
+        const CTX: &str = "Wal::append";
+        scratch.clear();
+        // reserve the frame header, encode payload, then backfill
+        put_u32(scratch, 0);
+        rec.encode_payload(scratch);
+        let payload_len = scratch.len() - 4;
+        scratch[..4].copy_from_slice(&(payload_len as u32).to_le_bytes());
+        let crc = frame_crc(&scratch[4..]);
+        put_u32(scratch, crc);
+
+        // position explicitly at the valid prefix: a reopened segment's
+        // cursor starts at 0, and a rolled-back append leaves it past EOF
+        self.file
+            .seek(SeekFrom::Start(self.len))
+            .map_err(|e| Error::persist_io(CTX, e))?;
+        if kill::fires(KillPoint::WalAppendTorn) {
+            // die mid-write: half the frame lands, and nobody repairs it —
+            // the simulated process is gone (recovery truncates the tail)
+            let _ = self.file.write_all(&scratch[..scratch.len() / 2]);
+            return Err(kill::killed(CTX, KillPoint::WalAppendTorn));
+        }
+        if let Err(e) = self.file.write_all(scratch) {
+            // live process, real I/O failure: roll the file back to the
+            // valid prefix so a retried append can't interleave torn bytes
+            let _ = self.file.set_len(self.len);
+            return Err(Error::persist_io(CTX, e));
+        }
+        if kill::fires(KillPoint::WalAppendFull) {
+            return Err(kill::killed(CTX, KillPoint::WalAppendFull));
+        }
+        if kill::fires(KillPoint::WalFsync) {
+            return Err(kill::killed(CTX, KillPoint::WalFsync));
+        }
+        if let Err(e) = self.file.sync_data() {
+            let _ = self.file.set_len(self.len);
+            return Err(Error::persist_io(CTX, e));
+        }
+        self.len += scratch.len() as u64;
+        Ok(())
+    }
+}
+
+/// Read every valid record of a segment. A missing file reads as empty;
+/// a truncated or CRC-failing tail ends the scan (`torn = true`), without
+/// modifying the file (use [`Wal::open`] to also truncate it).
+pub fn read_records(path: &Path) -> Result<(Vec<WalRecord>, bool)> {
+    let (records, _, torn) = scan(path)?;
+    Ok((records, torn))
+}
+
+/// Scan a segment: `(records, valid_prefix_len, torn)`.
+fn scan(path: &Path) -> Result<(Vec<WalRecord>, u64, bool)> {
+    const CTX: &str = "wal::scan";
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok((Vec::new(), HEADER_LEN, false))
+        }
+        Err(e) => return Err(Error::persist_io(CTX, e)),
+    };
+    if bytes.len() < HEADER_LEN as usize {
+        // creation crashed before the header was durable: an empty segment
+        return Ok((Vec::new(), bytes.len() as u64, true));
+    }
+    if &bytes[..8] != WAL_MAGIC {
+        return Err(Error::persist_corruption(CTX, format!("bad magic {:02x?}", &bytes[..8])));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != WAL_VERSION {
+        return Err(Error::persist_corruption(CTX, format!("unsupported version {version}")));
+    }
+    let mut records = Vec::new();
+    let mut pos = HEADER_LEN as usize;
+    loop {
+        let remaining = bytes.len() - pos;
+        if remaining == 0 {
+            return Ok((records, pos as u64, false));
+        }
+        if remaining < 4 {
+            return Ok((records, pos as u64, true));
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        if remaining < 4 + len + 4 {
+            return Ok((records, pos as u64, true));
+        }
+        let payload = &bytes[pos + 4..pos + 4 + len];
+        let stored = u32::from_le_bytes(bytes[pos + 4 + len..pos + 8 + len].try_into().unwrap());
+        if frame_crc(payload) != stored {
+            // a flipped bit anywhere in the record: the byte stream after
+            // it cannot be trusted, so the valid prefix ends here
+            return Ok((records, pos as u64, true));
+        }
+        records.push(WalRecord::decode_payload(payload)?);
+        pos += 8 + len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::ScratchDir;
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Batch {
+                seq: 5,
+                events: vec![
+                    StreamEvent::single(vec![1.0, -2.5], 0.75, 3, 41),
+                    StreamEvent::multi(vec![0.0, 1e-12], &[1.0, 2.0, 3.0], 1, 42),
+                ],
+            },
+            WalRecord::Evict { seq: 6 },
+            WalRecord::Heal { seq: 7 },
+            WalRecord::Batch { seq: 8, events: Vec::new() },
+        ]
+    }
+
+    #[test]
+    fn segment_round_trips() {
+        let dir = ScratchDir::new("wal-rt");
+        let mut wal = Wal::create(dir.path(), 0, 1).unwrap();
+        let mut scratch = Vec::new();
+        for r in &sample_records() {
+            wal.append(r, &mut scratch).unwrap();
+        }
+        let (got, torn) = read_records(&wal_path(dir.path(), 0, 1)).unwrap();
+        assert!(!torn);
+        assert_eq!(got.len(), 4);
+        assert_eq!(got.iter().map(WalRecord::seq).collect::<Vec<_>>(), vec![5, 6, 7, 8]);
+        match &got[0] {
+            WalRecord::Batch { events, .. } => {
+                assert_eq!(events.len(), 2);
+                assert_eq!(events[0].x, vec![1.0, -2.5]);
+                assert_eq!(events[1].y_tail, vec![2.0, 3.0]);
+                assert_eq!(events[1].seq, 42);
+            }
+            other => panic!("expected batch, got {other:?}"),
+        }
+        assert!(matches!(got[1], WalRecord::Evict { seq: 6 }));
+        assert!(matches!(got[2], WalRecord::Heal { seq: 7 }));
+    }
+
+    #[test]
+    fn missing_segment_reads_empty() {
+        let dir = ScratchDir::new("wal-missing");
+        let (recs, torn) = read_records(&wal_path(dir.path(), 9, 9)).unwrap();
+        assert!(recs.is_empty());
+        assert!(!torn);
+    }
+
+    #[test]
+    fn torn_tail_is_detected_and_truncated_on_open() {
+        let dir = ScratchDir::new("wal-torn");
+        let mut wal = Wal::create(dir.path(), 0, 1).unwrap();
+        let mut scratch = Vec::new();
+        wal.append(&WalRecord::Evict { seq: 1 }, &mut scratch).unwrap();
+        wal.append(&WalRecord::Heal { seq: 2 }, &mut scratch).unwrap();
+        let good_len = wal.len();
+        drop(wal);
+        // hand-tear: append half of a third record's frame
+        let path = wal_path(dir.path(), 0, 1);
+        let mut torn_frame = Vec::new();
+        put_u32(&mut torn_frame, 9);
+        put_u8(&mut torn_frame, KIND_EVICT);
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&torn_frame).unwrap();
+        drop(f);
+        let (recs, torn) = read_records(&path).unwrap();
+        assert!(torn, "partial frame must read as torn");
+        assert_eq!(recs.len(), 2, "valid prefix survives");
+        let (wal, recs, torn) = Wal::open(dir.path(), 0, 1).unwrap();
+        assert!(torn);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(wal.len(), good_len, "open truncated back to the valid prefix");
+        assert_eq!(fs::metadata(&path).unwrap().len(), good_len);
+        // and a fresh append after repair extends cleanly
+        let mut wal = wal;
+        wal.append(&WalRecord::Evict { seq: 3 }, &mut scratch).unwrap();
+        let (recs, torn) = read_records(&path).unwrap();
+        assert!(!torn);
+        assert_eq!(recs.iter().map(WalRecord::seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn mid_record_bit_flip_ends_the_valid_prefix() {
+        let dir = ScratchDir::new("wal-flip");
+        let mut wal = Wal::create(dir.path(), 0, 1).unwrap();
+        let mut scratch = Vec::new();
+        wal.append(&WalRecord::Evict { seq: 1 }, &mut scratch).unwrap();
+        let flip_at = wal.len() as usize - 6; // inside record 1's payload
+        wal.append(&WalRecord::Heal { seq: 2 }, &mut scratch).unwrap();
+        drop(wal);
+        let path = wal_path(dir.path(), 0, 1);
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[flip_at] ^= 0x10;
+        fs::write(&path, &bytes).unwrap();
+        let (recs, torn) = read_records(&path).unwrap();
+        assert!(torn);
+        assert!(recs.is_empty(), "nothing after the flipped record is trusted");
+    }
+
+    #[test]
+    fn bad_magic_is_corruption_not_torn() {
+        let dir = ScratchDir::new("wal-magic");
+        let path = wal_path(dir.path(), 0, 1);
+        fs::write(&path, b"NOTAWAL!....").unwrap();
+        let err = read_records(&path).unwrap_err();
+        assert!(!err.is_transient(), "foreign bytes are permanent corruption");
+    }
+}

@@ -73,12 +73,34 @@
 //!   ([`crate::coordinator::engine::Engine::refit`]) on the *writer* copy,
 //!   then a republish. Readers serve the last published epoch for the
 //!   whole rebuild — recovery costs freshness, never availability.
+//! * **Process crashes** are survivable once the fleet is made durable
+//!   ([`ShardRouter::make_durable`], [`crate::persist`]): every applied
+//!   round is **write-ahead logged** before the engine sees it, the
+//!   engine is snapshotted every `checkpoint_every` rounds with
+//!   crash-consistent tmp + fsync + atomic-rename generations, and
+//!   [`ShardRouter::recover`] rebuilds each shard from its newest intact
+//!   snapshot plus an idempotent (sequence-numbered) WAL replay. A
+//!   corrupted newest snapshot falls back one generation and replays a
+//!   longer suffix; recovered inverses are probe-verified before serving,
+//!   and a shard that fails verification comes back `Quarantined` —
+//!   into the same heal machinery as live drift — instead of failing the
+//!   fleet. Events still in flight at the crash (never WAL-logged) are
+//!   re-fed by the caller, filtered to `seq > high_seq` per shard
+//!   ([`ShardRouter::high_seqs`]) so nothing applies twice. While a store
+//!   is attached, the explicit-block entries (`apply_batch`,
+//!   `apply_update*`) are rejected: they would mutate an engine with no
+//!   WAL record, silently widening the crash window.
 //!
 //! Chaos coverage: the `chaos` cargo feature compiles in seeded fault
 //! hooks ([`crate::health::fault::FaultPlan`]) and
 //! `rust/tests/chaos_suite.rs` drives NaN rows, poison batches, forced
 //! failures, wedged shards, and corrupted inverses across a seed matrix
-//! (see EXPERIMENTS.md §Robustness).
+//! (see EXPERIMENTS.md §Robustness). The durability half lives in
+//! `rust/tests/recovery_kill_matrix.rs`: deterministic kill points at
+//! every persist write/fsync/rename boundary
+//! ([`crate::health::fault::KillPoint`]), with recovered predictions
+//! checked against an uninterrupted control run at every point (see
+//! EXPERIMENTS.md §Durability).
 
 pub mod microbatch;
 pub mod publish;

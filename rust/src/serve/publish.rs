@@ -93,7 +93,15 @@ pub struct Epoch<T> {
 impl<T> Epoch<T> {
     /// Wrap a bootstrap state as epoch 0.
     pub fn new(initial: T) -> Self {
-        Self { slot: Mutex::new(Arc::new(initial)), epoch: AtomicU64::new(0) }
+        Self::new_at(initial, 0)
+    }
+
+    /// Wrap a restored state at a non-zero starting epoch — recovery
+    /// republishes a shard at the epoch its snapshot + WAL replay
+    /// reconstructed, so sequence-based idempotency keeps working across
+    /// the restart.
+    pub fn new_at(initial: T, epoch: u64) -> Self {
+        Self { slot: Mutex::new(Arc::new(initial)), epoch: AtomicU64::new(epoch) }
     }
 
     /// The most recently published snapshot. Never blocks on an in-flight

@@ -37,18 +37,24 @@
 //! them: a drifted answer beats no answer, and an all-quarantined state
 //! only happens mid-heal.
 
+use std::path::Path;
+
 use crate::config::Space;
 use crate::coordinator::engine::EnginePredictWork;
 use crate::coordinator::{CoordinatorConfig, RoundOutcome};
 use crate::error::{Error, Result};
+use crate::health::probe::{HealthProbe, HealthVerdict, ProbeConfig};
 use crate::kernels::Kernel;
 use crate::krr::advisor::Advisor;
 use crate::linalg::Mat;
 use crate::metrics::Counters;
+use crate::persist::snapshot::{quarantine_snapshot, snapshot_path};
+use crate::persist::store::{self, recover_shard, DurabilityConfig, RouterMeta, ShardStore};
 use crate::streaming::batcher::Batcher;
 use crate::streaming::sink::SinkNode;
 use crate::streaming::StreamEvent;
 
+use super::publish::ShardStatus;
 use super::shard::{Shard, SnapshotHandle};
 
 /// How arrivals are placed onto shards.
@@ -60,6 +66,20 @@ pub enum Placement {
     /// observation always lands on the same shard, regardless of arrival
     /// order or source).
     Hash,
+}
+
+impl Placement {
+    /// The shard a feature row deterministically maps to, when placement
+    /// is content-addressed. `None` for round-robin, which is stateful —
+    /// only the router's own cursor can answer it. Recovery re-feed uses
+    /// this to route lost events back to exactly the shard that would have
+    /// received them.
+    pub fn shard_of(&self, x: &[f64], k: usize) -> Option<usize> {
+        match self {
+            Placement::RoundRobin => None,
+            Placement::Hash => Some((hash_row(x) % k as u64) as usize),
+        }
+    }
 }
 
 /// FNV-1a over the row's f64 bit patterns.
@@ -466,6 +486,12 @@ pub struct ShardRouter {
     placement: Placement,
     rr: usize,
     batcher: Batcher,
+    /// The per-shard round policy (kept for durability metadata).
+    base: CoordinatorConfig,
+    /// Fleet-level recovery observations (`wal_records_replayed`,
+    /// `wal_replay_skipped`, `snapshot_fallbacks`, ...); empty on a
+    /// bootstrapped router.
+    recovery: Counters,
     /// routed / rounds.
     pub counters: Counters,
 }
@@ -522,6 +548,8 @@ impl ShardRouter {
             placement: cfg.placement,
             rr: 0,
             batcher: Batcher::new(policy),
+            base: cfg.base,
+            recovery: Counters::default(),
             counters: Counters::default(),
         })
     }
@@ -556,16 +584,163 @@ impl ShardRouter {
         RouterHandle { shards: self.shards.iter().map(|s| s.handle()).collect() }
     }
 
+    // ---- durability ----
+
+    /// Make the fleet durable under `dir`: write the router metadata file,
+    /// snapshot every shard's engine as generation 1, open each shard's
+    /// WAL segment, and attach the stores. From here on every applied
+    /// round is write-ahead logged and checkpointed on `dcfg`'s cadence,
+    /// and [`ShardRouter::recover`] can rebuild the fleet from `dir` after
+    /// a crash at any point.
+    pub fn make_durable(&mut self, dir: &Path, dcfg: DurabilityConfig) -> Result<()> {
+        if self.shards.iter().any(Shard::is_durable) {
+            return Err(Error::Config("router is already durable".into()));
+        }
+        store::write_meta(
+            dir,
+            &RouterMeta {
+                shards: self.shards.len(),
+                hash_placement: self.placement == Placement::Hash,
+                base: self.base.clone(),
+                durability: dcfg,
+            },
+        )?;
+        for shard in &mut self.shards {
+            let epoch = shard.handle().epoch();
+            let st = ShardStore::create(
+                dir,
+                shard.id(),
+                shard.engine(),
+                epoch,
+                shard.high_seq(),
+                dcfg,
+            )?;
+            shard.attach_store(st);
+        }
+        Ok(())
+    }
+
+    /// Rebuild a durable fleet from its state directory after a crash.
+    ///
+    /// Per shard: pick the newest snapshot generation that decodes *and*
+    /// refactorizes cleanly (corrupt ones are quarantined aside and the
+    /// scan falls back a generation), replay the WAL suffix idempotently
+    /// by sequence number, probe-verify the recovered inverse, and resume
+    /// durable logging at a generation above everything seen pre-crash. A
+    /// shard whose probe breaches comes back [`ShardStatus::Quarantined`]
+    /// — routed into the supervisor's quarantine/heal machinery instead of
+    /// failing the fleet.
+    ///
+    /// Replay restores everything the WAL saw; events that were still
+    /// in-flight at the crash are the caller's to re-feed, filtered per
+    /// shard to `ev.seq > high_seq` ([`ShardRouter::high_seqs`]) for
+    /// exactly-once application.
+    pub fn recover(dir: &Path) -> Result<Self> {
+        let meta = store::read_meta(dir)?;
+        let mut recovery = Counters::default();
+        let mut shards = Vec::with_capacity(meta.shards);
+        for id in 0..meta.shards {
+            // newest snapshot that both decodes AND refactorizes: a state
+            // whose rebuild fails is corruption the CRC happened to miss,
+            // so quarantine it and rescan to give the fallback generation
+            // its turn
+            let (rec, engine) = loop {
+                let rec = recover_shard(dir, id)?;
+                match rec.state.rebuild() {
+                    Ok(engine) => break (rec, engine),
+                    Err(e) if !e.is_transient() => {
+                        recovery.inc("snapshot_fallbacks");
+                        quarantine_snapshot(&snapshot_path(dir, id, rec.state.generation))?;
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            recovery.merge_from(&rec.counters);
+            let mut shard =
+                Shard::from_engine(id, engine, &meta.base, rec.state.epoch, rec.state.high_seq);
+            for record in &rec.records {
+                match shard.replay_record(record) {
+                    Ok(true) => recovery.inc("wal_records_replayed"),
+                    Ok(false) => {}
+                    // round failures are deterministic in (engine state,
+                    // batch): a replay failure reproduces one the live run
+                    // already resolved by quarantine or drop
+                    Err(_) => recovery.inc("wal_replay_skipped"),
+                }
+            }
+            // probe-verify the recovered inverse before it serves reads
+            let mut probe = HealthProbe::new(ProbeConfig::default());
+            match probe.check(shard.engine()) {
+                Ok(report) if report.verdict == HealthVerdict::Healthy => {}
+                _ => {
+                    recovery.inc("recovered_quarantined");
+                    shard.set_status(ShardStatus::Quarantined);
+                }
+            }
+            let epoch = shard.handle().epoch();
+            let st = ShardStore::resume(
+                dir,
+                id,
+                shard.engine(),
+                epoch,
+                shard.high_seq(),
+                rec.max_generation_seen + 1,
+                meta.durability,
+            )?;
+            shard.attach_store(st);
+            shards.push(shard);
+        }
+        let mut policy = meta.base.batch.clone();
+        policy.max_batch = policy.max_batch.saturating_mul(meta.shards.max(1));
+        Ok(Self {
+            shards,
+            placement: if meta.hash_placement {
+                Placement::Hash
+            } else {
+                Placement::RoundRobin
+            },
+            rr: 0,
+            batcher: Batcher::new(policy),
+            base: meta.base,
+            recovery,
+            counters: Counters::default(),
+        })
+    }
+
+    /// Per-shard applied-event high-water marks — the exactly-once re-feed
+    /// cutoffs after [`ShardRouter::recover`].
+    pub fn high_seqs(&self) -> Vec<u64> {
+        self.shards.iter().map(Shard::high_seq).collect()
+    }
+
+    /// Fleet durability counters: the recovery scan's observations merged
+    /// with every shard store's live counters.
+    pub fn durability_counters(&self) -> Counters {
+        let mut out = Counters::default();
+        out.merge_from(&self.recovery);
+        for shard in &self.shards {
+            if let Some(c) = shard.durability_counters() {
+                out.merge_from(c);
+            }
+        }
+        out
+    }
+
+    /// The placement policy arrivals are routed with.
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
     /// The shard an event is placed on.
     pub fn route(&mut self, ev: &StreamEvent) -> usize {
         let k = self.shards.len();
-        match self.placement {
-            Placement::RoundRobin => {
+        match self.placement.shard_of(&ev.x, k) {
+            Some(s) => s,
+            None => {
                 let s = self.rr % k;
                 self.rr = (self.rr + 1) % k;
                 s
             }
-            Placement::Hash => (hash_row(&ev.x) % k as u64) as usize,
         }
     }
 
@@ -792,6 +967,50 @@ mod tests {
         r.shard(1).set_status(ShardStatus::Healthy);
         let p_all = h.predict(&q.x).unwrap();
         crate::testutil::assert_vec_close(&p_open, &p_all, 1e-12);
+    }
+
+    #[test]
+    fn durable_router_round_trips_through_recovery() {
+        use crate::persist::DurabilityConfig;
+        use crate::testutil::ScratchDir;
+        let dir = ScratchDir::new("router-durable");
+        let d = synth::ecg_like(48, 5, 10);
+        let extra = synth::ecg_like(8, 5, 11);
+        let q = synth::ecg_like(6, 5, 12);
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+        cfg.placement = Placement::Hash;
+        cfg.base.outlier = None;
+        cfg.base.snapshot_rollback = true;
+        let mut r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+        r.make_durable(
+            dir.path(),
+            DurabilityConfig { checkpoint_every: 2, keep_generations: 2 },
+        )
+        .unwrap();
+        assert!(r.make_durable(dir.path(), DurabilityConfig::default()).is_err());
+        for i in 0..8 {
+            r.ingest(ev(extra.x.row(i).to_vec(), extra.y[i], (i + 1) as u64));
+            let report = r.update_round();
+            assert!(report.errors.is_empty(), "{:?}", report.errors);
+        }
+        let live = r.handle().predict(&q.x).unwrap();
+        let seqs = r.high_seqs();
+        drop(r);
+        let mut rec = ShardRouter::recover(dir.path()).unwrap();
+        assert_eq!(rec.placement(), Placement::Hash);
+        assert_eq!(rec.num_shards(), 2);
+        assert_eq!(rec.high_seqs(), seqs);
+        assert!(rec.shard(0).is_durable() && rec.shard(1).is_durable());
+        crate::testutil::assert_vec_close(
+            &rec.handle().predict(&q.x).unwrap(),
+            &live,
+            1e-8,
+        );
+        let dc = rec.durability_counters();
+        assert!(dc.get("snapshots_written") >= 1, "{dc:?}");
+        assert_eq!(dc.get("snapshot_fallbacks"), 0);
+        // explicit updates bypass the WAL and are rejected on durable shards
+        assert!(rec.shard_mut(0).apply_batch(&[]).is_err());
     }
 
     #[test]

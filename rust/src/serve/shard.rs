@@ -16,6 +16,8 @@ use crate::ensure_shape;
 use crate::error::Result;
 use crate::linalg::Mat;
 use crate::metrics::{Counters, LatencyHist, Timer};
+use crate::persist::store::ShardStore;
+use crate::persist::wal::WalRecord;
 use crate::streaming::outlier::detect_scored_multi;
 use crate::streaming::StreamEvent;
 use std::sync::Arc;
@@ -107,6 +109,13 @@ pub struct Shard {
     /// `Error::Numerical` (decrementing by 1 per round).
     #[cfg(feature = "chaos")]
     chaos_fail_rounds: u32,
+    /// Durable-shard state ([`ShardStore`]): write-ahead log + checkpoint
+    /// cadence. `None` = the pre-durability in-memory-only behaviour.
+    store: Option<ShardStore>,
+    /// Highest applied *event* sequence number — persisted in snapshots
+    /// and used after recovery to re-feed exactly the events the crash
+    /// lost (distinct from the epoch, which counts *rounds*).
+    high_seq: u64,
     /// Reused insertion-block assembly buffers (`y_new` is (B, D)).
     x_new: Mat,
     y_new: Mat,
@@ -144,8 +153,22 @@ impl Shard {
         let mut engine =
             Engine::fit_multi(x, y, &cfg.kernel, cfg.ridge, space, cfg.with_uncertainty)?;
         engine.set_fold_eps(cfg.fold_eps);
-        let cell = Arc::new(Epoch::new(engine.clone()));
-        Ok(Self {
+        Ok(Self::from_engine(id, engine, cfg, 0, 0))
+    }
+
+    /// Assemble a shard around an existing engine, publishing it at a
+    /// given epoch / event high-water mark — the recovery entry
+    /// (`ShardRouter::recover`) republishes a rebuilt engine at the epoch
+    /// its snapshot recorded so WAL replay stays sequence-idempotent.
+    pub(crate) fn from_engine(
+        id: usize,
+        engine: Engine,
+        cfg: &CoordinatorConfig,
+        epoch: u64,
+        high_seq: u64,
+    ) -> Self {
+        let cell = Arc::new(Epoch::new_at(engine.clone(), epoch));
+        Self {
             id,
             engine,
             cell,
@@ -155,12 +178,14 @@ impl Shard {
             last_attempt: 0,
             #[cfg(feature = "chaos")]
             chaos_fail_rounds: 0,
+            store: None,
+            high_seq,
             x_new: Mat::default(),
             y_new: Mat::default(),
             y_row: Vec::new(),
             counters: Counters::default(),
             update_latency: LatencyHist::new(),
-        })
+        }
     }
 
     /// Shard id (its index in the router).
@@ -223,6 +248,42 @@ impl Shard {
         self.last_attempt
     }
 
+    /// Attach durable state: from here on every applied round is
+    /// write-ahead logged and the store checkpoints on its cadence. The
+    /// explicit-block entries ([`Shard::apply_batch`],
+    /// [`Shard::apply_update`], [`Shard::apply_update_multi`]) are
+    /// rejected while a store is attached — they would mutate the engine
+    /// without a WAL record.
+    pub fn attach_store(&mut self, store: ShardStore) {
+        self.store = Some(store);
+    }
+
+    /// True when this shard is durably logged.
+    pub fn is_durable(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// Highest applied event sequence number (the exactly-once re-feed
+    /// cutoff after recovery).
+    pub fn high_seq(&self) -> u64 {
+        self.high_seq
+    }
+
+    /// The durability counters, when a store is attached.
+    pub fn durability_counters(&self) -> Option<&Counters> {
+        self.store.as_ref().map(|s| &s.counters)
+    }
+
+    fn ensure_not_durable(&self, ctx: &'static str) -> Result<()> {
+        if self.store.is_some() {
+            return Err(crate::error::Error::Config(format!(
+                "{ctx} bypasses the write-ahead log; durable shards apply \
+                 rounds via flush / evict_outliers / heal"
+            )));
+        }
+        Ok(())
+    }
+
     /// Pull the first `n` pending events off the queue — the supervisor's
     /// poison-batch quarantine: the events leave the requeue loop for good
     /// and become inspectable evidence instead.
@@ -237,6 +298,14 @@ impl Shard {
     /// epoch for the whole (O(N·J²)-ish) rebuild — the heal only ever
     /// delays *freshness*, never a read.
     pub fn heal(&mut self) -> Result<u64> {
+        if let Some(store) = self.store.as_mut() {
+            // write-ahead: replay re-runs the refit at the same round
+            store.log_heal(self.cell.epoch() + 1)?;
+        }
+        self.heal_inner()
+    }
+
+    fn heal_inner(&mut self) -> Result<u64> {
         self.engine.refit()?;
         let epoch = self.cell.publish(self.engine.clone());
         self.counters.inc("heals");
@@ -272,6 +341,11 @@ impl Shard {
     /// single multiple inc/dec update (with per-shard snapshot rollback if
     /// configured), then publish the new epoch.
     pub fn apply_batch(&mut self, events: &[StreamEvent]) -> Result<RoundOutcome> {
+        self.ensure_not_durable("Shard::apply_batch")?;
+        self.apply_batch_inner(events)
+    }
+
+    fn apply_batch_inner(&mut self, events: &[StreamEvent]) -> Result<RoundOutcome> {
         let removals: Vec<usize> = match &self.cfg.outlier {
             Some(ocfg) => {
                 let pred = self.engine.krr().predict_training_multi()?;
@@ -309,6 +383,7 @@ impl Shard {
         y_new: &[f64],
         remove_idx: &[usize],
     ) -> Result<RoundOutcome> {
+        self.ensure_not_durable("Shard::apply_update")?;
         if self.engine.n_outputs() != 1 {
             return Err(crate::error::Error::Config(
                 "apply_update is the D=1 surface; use apply_update_multi".into(),
@@ -328,6 +403,7 @@ impl Shard {
         y_new: &Mat,
         remove_idx: &[usize],
     ) -> Result<RoundOutcome> {
+        self.ensure_not_durable("Shard::apply_update_multi")?;
         self.stage_x(x_new)?;
         self.check_targets_finite(y_new.as_slice())?;
         self.y_new.resize_scratch(y_new.rows(), y_new.cols());
@@ -433,9 +509,29 @@ impl Shard {
                 "chaos-injected failure",
             ));
         }
-        match self.apply_batch(&batch) {
+        // write-ahead: the filtered batch is logged before the engine sees
+        // it. On a WAL failure the engine is untouched, so the batch is
+        // ALWAYS requeued (no rollback needed) and the error surfaces as
+        // transient or permanent per its persist classification.
+        if let Some(store) = self.store.as_mut() {
+            let seq = self.cell.epoch() + 1;
+            if let Err(e) = store.log_batch(seq, &batch) {
+                self.last_attempt = batch.len();
+                self.pending.splice(0..0, batch);
+                return Err(e);
+            }
+        }
+        match self.apply_batch_inner(&batch) {
             Ok(out) => {
                 self.last_attempt = 0;
+                let max_seq = batch.iter().map(|ev| ev.seq).max().unwrap_or(0);
+                self.high_seq = self.high_seq.max(max_seq);
+                // checkpoint cadence: the round is already applied and
+                // published, so a checkpoint failure surfaces as an error
+                // WITHOUT requeueing (retrying the batch would double-apply)
+                if self.store.is_some() {
+                    self.checkpoint_if_due()?;
+                }
                 Ok(Some(out))
             }
             Err(e) => {
@@ -450,10 +546,50 @@ impl Shard {
         }
     }
 
+    /// Run the store's checkpoint cadence against the current engine.
+    fn checkpoint_if_due(&mut self) -> Result<()> {
+        let epoch = self.cell.epoch();
+        let high_seq = self.high_seq;
+        if let Some(store) = self.store.as_mut() {
+            store.maybe_checkpoint(&self.engine, epoch, high_seq)?;
+        }
+        Ok(())
+    }
+
     /// An insertion-free round: outlier nomination + decremental update
     /// only (the explicit eviction entry).
     pub fn evict_outliers(&mut self) -> Result<RoundOutcome> {
-        self.apply_batch(&[])
+        if let Some(store) = self.store.as_mut() {
+            store.log_evict(self.cell.epoch() + 1)?;
+        }
+        self.apply_batch_inner(&[])
+    }
+
+    /// Replay one recovered WAL record onto this shard. Records at or
+    /// below the published epoch are no-ops (`Ok(false)`) — the snapshot
+    /// already contains them. A record that fails to apply returns the
+    /// error; because round failures are deterministic functions of engine
+    /// state + batch, a replay failure reproduces a failure the live run
+    /// already saw (and resolved by quarantine or drop), so the caller
+    /// counts it and moves on.
+    pub(crate) fn replay_record(&mut self, rec: &WalRecord) -> Result<bool> {
+        if rec.seq() <= self.cell.epoch() {
+            return Ok(false);
+        }
+        match rec {
+            WalRecord::Batch { events, .. } => {
+                self.apply_batch_inner(events)?;
+                let max_seq = events.iter().map(|ev| ev.seq).max().unwrap_or(0);
+                self.high_seq = self.high_seq.max(max_seq);
+            }
+            WalRecord::Evict { .. } => {
+                self.apply_batch_inner(&[])?;
+            }
+            WalRecord::Heal { .. } => {
+                self.heal_inner()?;
+            }
+        }
+        Ok(true)
     }
 
     /// The fused update on the writer engine + epoch publish. The insertion

@@ -24,6 +24,14 @@
 //! batch). Permanent errors skip the retry budget entirely: replaying a
 //! deterministic failure R times is R−1 wasted updates.
 //!
+//! Durable shards fold in unchanged: a failed **write-ahead append**
+//! leaves the engine untouched and always requeues, so a transient persist
+//! error (`Error::Persist` with an I/O cause) rides the same bounded-retry
+//! path, while persist *corruption* is permanent and quarantines like any
+//! other deterministic failure. Heals on durable shards WAL-log a heal
+//! record before refitting, so a crash mid-heal replays the refit on
+//! recovery.
+//!
 //! Everything here runs on the writer side. Readers keep serving the last
 //! published epoch through every retry, quarantine, and heal — the router
 //! fan-ins only ever observe the [`ShardStatus`] cell flipping, which

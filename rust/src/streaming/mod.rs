@@ -98,6 +98,83 @@ impl StreamEvent {
         }
         Ok(())
     }
+
+    /// Append this event's wire form to `out` — the payload format of the
+    /// durability layer's WAL `Batch` records ([`crate::persist::wal`]).
+    ///
+    /// Layout (all little-endian): `[seq u64][source_id u64]
+    /// [dim u32][x: dim f64][tail u32][y f64][y_tail: tail f64]`, with
+    /// every `f64` as its IEEE-754 bit pattern so replay is bit-exact
+    /// (the CRC lives one framing layer up, on the whole WAL record).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(self.source_id as u64).to_le_bytes());
+        out.extend_from_slice(&(self.x.len() as u32).to_le_bytes());
+        for &v in &self.x {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out.extend_from_slice(&(self.y_tail.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.y.to_bits().to_le_bytes());
+        for &v in &self.y_tail {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Decode one event from `buf` starting at `*pos`, advancing `*pos`
+    /// past it. Truncation or hostile lengths surface as permanent
+    /// [`crate::error::Error::Persist`] corruption — the WAL reader treats
+    /// a record that passed its CRC but fails here as a codec version bug,
+    /// not a torn tail.
+    pub fn decode_from(buf: &[u8], pos: &mut usize) -> crate::error::Result<StreamEvent> {
+        const CTX: &str = "StreamEvent::decode_from";
+        let corrupt =
+            |d: String| crate::error::Error::persist_corruption(CTX, d);
+        let take = |pos: &mut usize, n: usize| -> crate::error::Result<&[u8]> {
+            if buf.len().saturating_sub(*pos) < n {
+                return Err(crate::error::Error::persist_corruption(
+                    CTX,
+                    format!(
+                        "truncated: wanted {n} bytes at offset {pos}, have {}",
+                        buf.len().saturating_sub(*pos)
+                    ),
+                ));
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let take_u64 = |pos: &mut usize| -> crate::error::Result<u64> {
+            let b = take(pos, 8)?;
+            Ok(u64::from_le_bytes(b.try_into().unwrap()))
+        };
+        let take_u32 = |pos: &mut usize| -> crate::error::Result<u32> {
+            let b = take(pos, 4)?;
+            Ok(u32::from_le_bytes(b.try_into().unwrap()))
+        };
+        let seq = take_u64(pos)?;
+        let source = take_u64(pos)?;
+        let source_id = usize::try_from(source)
+            .map_err(|_| corrupt(format!("source_id {source} overflows usize")))?;
+        let dim = take_u32(pos)? as usize;
+        // bound allocations by what the buffer can actually hold
+        if buf.len().saturating_sub(*pos) < dim.saturating_mul(8) {
+            return Err(corrupt(format!("dim {dim} exceeds remaining bytes")));
+        }
+        let mut x = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            x.push(f64::from_bits(take_u64(pos)?));
+        }
+        let tail = take_u32(pos)? as usize;
+        if buf.len().saturating_sub(*pos) < tail.saturating_mul(8).saturating_add(8) {
+            return Err(corrupt(format!("tail {tail} exceeds remaining bytes")));
+        }
+        let y = f64::from_bits(take_u64(pos)?);
+        let mut y_tail = Vec::with_capacity(tail);
+        for _ in 0..tail {
+            y_tail.push(f64::from_bits(take_u64(pos)?));
+        }
+        Ok(StreamEvent { x, y, y_tail, source_id, seq })
+    }
 }
 
 #[cfg(test)]
@@ -138,5 +215,53 @@ mod tests {
         assert!(inf_y.validate(2, 1).is_err());
         let nan_tail = StreamEvent::multi(vec![1.0, 2.0], &[0.0, f64::NEG_INFINITY], 0, 3);
         assert!(nan_tail.validate(2, 2).is_err());
+    }
+
+    #[test]
+    fn wire_codec_round_trips_bit_exact() {
+        let events = [
+            StreamEvent::single(vec![1.5, -2.25, 0.0], -0.0, 7, 42),
+            StreamEvent::multi(vec![f64::MIN_POSITIVE], &[1.0, 2.0, -3.5, 1e-300], 0, 1),
+            StreamEvent::single(Vec::new(), 9.75, usize::MAX, u64::MAX),
+        ];
+        let mut buf = Vec::new();
+        for e in &events {
+            e.encode_into(&mut buf);
+        }
+        let mut pos = 0;
+        for e in &events {
+            let d = StreamEvent::decode_from(&buf, &mut pos).unwrap();
+            assert_eq!(d.seq, e.seq);
+            assert_eq!(d.source_id, e.source_id);
+            assert_eq!(
+                d.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                e.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(d.y.to_bits(), e.y.to_bits());
+            assert_eq!(
+                d.y_tail.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                e.y_tail.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(pos, buf.len(), "decoder consumed exactly what was written");
+    }
+
+    #[test]
+    fn wire_codec_rejects_truncation_and_hostile_lengths() {
+        let e = StreamEvent::multi(vec![1.0, 2.0, 3.0], &[0.5, -0.5], 3, 11);
+        let mut buf = Vec::new();
+        e.encode_into(&mut buf);
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            let r = StreamEvent::decode_from(&buf[..cut], &mut pos);
+            assert!(r.is_err(), "cut at {cut} decoded anyway");
+            assert!(!r.unwrap_err().is_transient(), "codec failures are permanent");
+        }
+        // inflate the dim field (offset 16) far past the buffer: must be
+        // rejected before any allocation sized by it
+        let mut hostile = buf.clone();
+        hostile[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut pos = 0;
+        assert!(StreamEvent::decode_from(&hostile, &mut pos).is_err());
     }
 }

@@ -94,6 +94,39 @@ impl Cases {
     }
 }
 
+/// Unique on-disk scratch directory for persistence tests, removed on
+/// drop. Uniqueness is three-layer so parallel test binaries (and the CI
+/// seed-matrix lanes, which each set their own `TMPDIR`) can never share a
+/// state directory: the OS temp root, the process id, and a process-local
+/// counter.
+pub struct ScratchDir {
+    path: std::path::PathBuf,
+}
+
+impl ScratchDir {
+    /// Create `$TMPDIR/mikrr-<label>-<pid>-<n>`.
+    pub fn new(label: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("mikrr-{label}-{}-{n}", std::process::id()));
+        std::fs::create_dir_all(&path).expect("create scratch dir");
+        Self { path }
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
 /// Random SPD matrix of size n with given diagonal dominance.
 pub fn random_spd(rng: &mut Rng, n: usize, jitter: f64) -> Mat {
     let a = Mat::from_fn(n, n, |_, _| rng.gaussian());

@@ -1,0 +1,382 @@
+//! Tier-1 durability coverage (no chaos feature needed): snapshot codec
+//! round trips, corruption rejection, WAL round trips, and crash-free
+//! durable-router recovery matching live predictions. The kill-point
+//! crash matrix builds on these in `rust/tests/recovery_kill_matrix.rs`
+//! (`--features chaos`).
+
+use mikrr::config::Space;
+use mikrr::coordinator::engine::Engine;
+use mikrr::data::synth;
+use mikrr::kernels::Kernel;
+use mikrr::linalg::Mat;
+use mikrr::persist::snapshot::{list_generations, snapshot_path};
+use mikrr::persist::wal::{read_records, wal_path, Wal};
+use mikrr::persist::{DurabilityConfig, EngineState, WalRecord};
+use mikrr::serve::{Placement, ServeConfig, ShardRouter};
+use mikrr::streaming::StreamEvent;
+use mikrr::testutil::{assert_vec_close, ScratchDir};
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn snapshot_codec_round_trips_bit_exact_d1_with_folds() {
+    let d = synth::ecg_like(28, 4, 101);
+    let mut e =
+        Engine::fit(&d.x, &d.y, &Kernel::poly(2, 1.0), 0.5, Space::Intrinsic, false).unwrap();
+    e.set_fold_eps(Some(1e-9));
+    // insert an exact duplicate of row 0: folds into multiplicity 2
+    let dup = Mat::from_vec(1, 4, d.x.row(0).to_vec()).unwrap();
+    e.inc_dec(&dup, &[d.y[0] + 0.25], &[]).unwrap();
+    assert!(
+        (e.multiplicities()[0] - 2.0).abs() < 1e-12,
+        "duplicate folded: {:?}",
+        &e.multiplicities()[..2]
+    );
+
+    let state = EngineState::capture(&e, 3, 5, 7);
+    let got = EngineState::decode(&state.encode()).unwrap();
+    assert_eq!((got.generation, got.epoch, got.high_seq), (3, 5, 7));
+    assert_eq!(got.space, Space::Intrinsic);
+    assert!(!got.with_uncertainty);
+    assert_eq!(got.ridge.to_bits(), 0.5f64.to_bits());
+    assert_eq!(got.fold_eps.map(f64::to_bits), Some(1e-9f64.to_bits()));
+    assert_eq!(got.kernel, Kernel::poly(2, 1.0));
+    // the training view and multiplicities survive BIT-exactly
+    assert_eq!(bits(&got.x), bits(&state.x));
+    assert_eq!(bits(&got.y), bits(&state.y));
+    assert_eq!(
+        got.mult.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        state.mult.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+
+    let rebuilt = got.rebuild().unwrap();
+    assert_eq!(rebuilt.n_samples(), e.n_samples());
+    assert!((rebuilt.multiplicities()[0] - 2.0).abs() < 1e-12);
+    let q = synth::ecg_like(6, 4, 102);
+    assert_vec_close(&rebuilt.predict(&q.x).unwrap(), &e.predict(&q.x).unwrap(), 1e-9);
+}
+
+#[test]
+fn snapshot_codec_round_trips_d4_with_uncertainty() {
+    let d = synth::ecg_like(30, 5, 103);
+    let mut ym = Mat::default();
+    ym.resize_scratch(30, 4);
+    for i in 0..30 {
+        let y = d.y[i];
+        ym.row_mut(i).copy_from_slice(&[y, 0.5 * y, y + 1.0, -y]);
+    }
+    let e = Engine::fit_multi(
+        &d.x,
+        &ym,
+        &Kernel::Rbf { gamma: 0.05 },
+        0.7,
+        Space::Empirical,
+        true,
+    )
+    .unwrap();
+    let state = EngineState::capture(&e, 1, 0, 0);
+    let got = EngineState::decode(&state.encode()).unwrap();
+    assert!(got.with_uncertainty);
+    assert_eq!(got.kernel, Kernel::Rbf { gamma: 0.05 });
+    assert_eq!((got.y.rows(), got.y.cols()), (30, 4));
+    assert_eq!(bits(&got.x), bits(&state.x));
+    assert_eq!(bits(&got.y), bits(&state.y));
+
+    let rebuilt = got.rebuild().unwrap();
+    let q = synth::ecg_like(5, 5, 104);
+    let pm = rebuilt.predict_multi(&q.x).unwrap();
+    let pe = e.predict_multi(&q.x).unwrap();
+    assert_vec_close(pm.as_slice(), pe.as_slice(), 1e-9);
+    let (mu_r, var_r) = rebuilt.predict_with_uncertainty_multi(&q.x).unwrap();
+    let (mu_e, var_e) = e.predict_with_uncertainty_multi(&q.x).unwrap();
+    assert_vec_close(mu_r.as_slice(), mu_e.as_slice(), 1e-9);
+    assert_vec_close(&var_r, &var_e, 1e-9);
+}
+
+#[test]
+fn snapshot_codec_rejects_truncation_and_bit_flips() {
+    let d = synth::ecg_like(20, 3, 105);
+    let e =
+        Engine::fit(&d.x, &d.y, &Kernel::Linear, 0.4, Space::Intrinsic, false).unwrap();
+    let bytes = EngineState::capture(&e, 2, 1, 1).encode();
+    assert!(EngineState::decode(&bytes).is_ok());
+    // every truncation point fails loudly (sampled stride + the last byte)
+    let mut cut = 0;
+    while cut < bytes.len() {
+        assert!(
+            EngineState::decode(&bytes[..cut]).is_err(),
+            "truncation to {cut} of {} must not decode",
+            bytes.len()
+        );
+        cut += 17;
+    }
+    assert!(EngineState::decode(&bytes[..bytes.len() - 1]).is_err());
+    // any flipped bit fails loudly: magic/version by direct check, every
+    // section byte by its CRC
+    let mut at = 0;
+    while at < bytes.len() {
+        let mut bad = bytes.clone();
+        bad[at] ^= 0x40;
+        assert!(EngineState::decode(&bad).is_err(), "bit flip at {at} must not decode");
+        at += 13;
+    }
+    // trailing garbage after SEC_END is rejected too
+    let mut long = bytes.clone();
+    long.push(0);
+    assert!(EngineState::decode(&long).is_err());
+}
+
+#[test]
+fn wal_round_trips_multi_output_batches() {
+    let dir = ScratchDir::new("persist-wal-rt");
+    let mut wal = Wal::create(dir.path(), 3, 1).unwrap();
+    let mut scratch = Vec::new();
+    let recs = vec![
+        WalRecord::Batch {
+            seq: 1,
+            events: vec![
+                StreamEvent::multi(vec![0.25, -1.5], &[1.0, -0.0, 1e-300], 9, 11),
+                StreamEvent::single(vec![2.0, 4.0], 0.125, 0, 12),
+            ],
+        },
+        WalRecord::Evict { seq: 2 },
+        WalRecord::Heal { seq: 3 },
+    ];
+    for r in &recs {
+        wal.append(r, &mut scratch).unwrap();
+    }
+    drop(wal);
+    let (got, torn) = read_records(&wal_path(dir.path(), 3, 1)).unwrap();
+    assert!(!torn);
+    assert_eq!(got.len(), 3);
+    assert_eq!(got.iter().map(WalRecord::seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+    match (&got[0], &recs[0]) {
+        (
+            WalRecord::Batch { events: ge, .. },
+            WalRecord::Batch { events: we, .. },
+        ) => {
+            assert_eq!(ge.len(), we.len());
+            for (g, w) in ge.iter().zip(we) {
+                assert_eq!(g.seq, w.seq);
+                assert_eq!(g.source_id, w.source_id);
+                assert_eq!(
+                    g.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    w.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+                assert_eq!(g.y.to_bits(), w.y.to_bits());
+                assert_eq!(
+                    g.y_tail.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    w.y_tail.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+        other => panic!("batch record did not round trip: {other:?}"),
+    }
+    // reopening the intact segment reports no torn tail
+    let (reopened, replayed, torn) = Wal::open(dir.path(), 3, 1).unwrap();
+    assert!(!torn);
+    assert_eq!(replayed.len(), 3);
+    drop(reopened);
+}
+
+fn drain(r: &mut ShardRouter) {
+    for _ in 0..64 {
+        let report = r.update_round();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        if r.num_shards() == 0 {
+            break;
+        }
+        let pending: usize = (0..r.num_shards()).map(|i| r.shard(i).pending()).sum();
+        if pending == 0 {
+            break;
+        }
+    }
+    let pending: usize = (0..r.num_shards()).map(|i| r.shard(i).pending()).sum();
+    assert_eq!(pending, 0, "drain left events pending");
+}
+
+/// Crash-free end-to-end: durable K=4 fleet with checkpoints, recovered
+/// predictions (point + posterior) match the live router at 1e-8.
+#[test]
+fn durable_router_recovery_matches_live_predictions() {
+    let dir = ScratchDir::new("persist-e2e");
+    let d = synth::ecg_like(48, 5, 106);
+    let extra = synth::ecg_like(40, 5, 107);
+    let q = synth::ecg_like(8, 5, 108);
+    let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 4);
+    cfg.placement = Placement::Hash;
+    cfg.base.outlier = None;
+    cfg.base.with_uncertainty = true;
+    cfg.base.snapshot_rollback = true;
+    cfg.base.batch.max_batch = 3;
+    let mut r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+    r.make_durable(
+        dir.path(),
+        DurabilityConfig { checkpoint_every: 2, keep_generations: 2 },
+    )
+    .unwrap();
+    for i in 0..40 {
+        r.ingest(StreamEvent::single(
+            extra.x.row(i).to_vec(),
+            extra.y[i],
+            0,
+            (i + 1) as u64,
+        ));
+    }
+    drain(&mut r);
+    // exercise the non-batch record kinds on the live path too
+    let evict_report = r.evict_outliers();
+    assert!(evict_report.errors.is_empty(), "{:?}", evict_report.errors);
+    r.shard_mut(0).heal().unwrap();
+
+    let h = r.handle();
+    let live_p = h.predict(&q.x).unwrap();
+    let (live_mu, live_var) = h.predict_with_uncertainty(&q.x).unwrap();
+    let live_seqs = r.high_seqs();
+    assert_eq!(*live_seqs.iter().max().unwrap(), 40);
+    let live_dc = r.durability_counters();
+    assert!(live_dc.get("snapshots_written") >= 4, "{live_dc:?}");
+    assert!(live_dc.get("wal_records_appended") > 0, "{live_dc:?}");
+    drop(r);
+
+    let rec = ShardRouter::recover(dir.path()).unwrap();
+    assert_eq!(rec.num_shards(), 4);
+    assert_eq!(rec.placement(), Placement::Hash);
+    assert_eq!(rec.high_seqs(), live_seqs);
+    let rh = rec.handle();
+    assert!(
+        rh.statuses().iter().all(|s| *s == mikrr::serve::ShardStatus::Healthy),
+        "recovered inverses must probe healthy: {:?}",
+        rh.statuses()
+    );
+    assert_vec_close(&rh.predict(&q.x).unwrap(), &live_p, 1e-8);
+    let (mu, var) = rh.predict_with_uncertainty(&q.x).unwrap();
+    assert_vec_close(&mu, &live_mu, 1e-8);
+    assert_vec_close(&var, &live_var, 1e-8);
+    // the durability counters surface through the standard iter() protocol
+    let dc = rec.durability_counters();
+    let names: Vec<&str> = dc.iter().map(|(n, _)| n).collect();
+    assert!(names.contains(&"snapshots_written"), "{names:?}");
+    assert_eq!(dc.get("snapshot_fallbacks"), 0);
+    assert_eq!(dc.get("torn_tails_truncated"), 0);
+}
+
+/// With checkpoints disabled (huge cadence) every applied round lives only
+/// in WAL segment 1, so recovery must replay exactly what was appended —
+/// including multi-output batches, an eviction round, and a heal.
+#[test]
+fn recovery_replays_the_full_wal_suffix_d4() {
+    let dir = ScratchDir::new("persist-replay-all");
+    let d = synth::ecg_like(48, 5, 109);
+    let extra = synth::ecg_like(20, 5, 110);
+    let q = synth::ecg_like(6, 5, 111);
+    let row4 = |y: f64| [y, 0.5 * y, y + 1.0, -y];
+    let mut ym = Mat::default();
+    ym.resize_scratch(48, 4);
+    for i in 0..48 {
+        ym.row_mut(i).copy_from_slice(&row4(d.y[i]));
+    }
+    let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+    cfg.placement = Placement::Hash;
+    cfg.base.outlier = None;
+    cfg.base.with_uncertainty = true;
+    cfg.base.snapshot_rollback = true;
+    cfg.base.batch.max_batch = 3;
+    let mut r = ShardRouter::bootstrap_multi(&d.x, &ym, cfg).unwrap();
+    r.make_durable(
+        dir.path(),
+        DurabilityConfig { checkpoint_every: 1_000, keep_generations: 2 },
+    )
+    .unwrap();
+    for i in 0..20 {
+        r.ingest(StreamEvent::multi(
+            extra.x.row(i).to_vec(),
+            &row4(extra.y[i]),
+            0,
+            (i + 1) as u64,
+        ));
+    }
+    drain(&mut r);
+    let evict_report = r.evict_outliers();
+    assert!(evict_report.errors.is_empty(), "{:?}", evict_report.errors);
+    r.shard_mut(1).heal().unwrap();
+
+    let h = r.handle();
+    let live_pm = h.predict_multi(&q.x).unwrap();
+    let (live_mu, live_var) = h.predict_with_uncertainty_multi(&q.x).unwrap();
+    let live_seqs = r.high_seqs();
+    let appended = r.durability_counters().get("wal_records_appended");
+    assert!(appended > 0);
+    drop(r);
+
+    let rec = ShardRouter::recover(dir.path()).unwrap();
+    assert_eq!(rec.high_seqs(), live_seqs);
+    let dc = rec.durability_counters();
+    assert_eq!(
+        dc.get("wal_records_replayed"),
+        appended,
+        "no checkpoints → every appended record replays: {dc:?}"
+    );
+    assert_eq!(dc.get("wal_replay_skipped"), 0);
+    let rh = rec.handle();
+    let pm = rh.predict_multi(&q.x).unwrap();
+    assert_vec_close(pm.as_slice(), live_pm.as_slice(), 1e-8);
+    let (mu, var) = rh.predict_with_uncertainty_multi(&q.x).unwrap();
+    assert_vec_close(mu.as_slice(), live_mu.as_slice(), 1e-8);
+    assert_vec_close(&var, &live_var, 1e-8);
+}
+
+/// Corrupting the newest on-disk snapshot of one shard: recovery falls
+/// back a generation, replays the longer WAL suffix, counts the fallback,
+/// and still matches the live run.
+#[test]
+fn corrupted_newest_snapshot_falls_back_a_generation() {
+    let dir = ScratchDir::new("persist-fallback");
+    let d = synth::ecg_like(48, 5, 112);
+    let extra = synth::ecg_like(6, 5, 113);
+    let q = synth::ecg_like(6, 5, 114);
+    let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+    // round-robin: both shards deterministically see 3 of the 6 arrivals,
+    // so shard 0 is guaranteed to have rotated generations
+    cfg.placement = Placement::RoundRobin;
+    cfg.base.outlier = None;
+    cfg.base.snapshot_rollback = true;
+    cfg.base.batch.max_batch = 2;
+    let mut r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+    r.make_durable(
+        dir.path(),
+        DurabilityConfig { checkpoint_every: 1, keep_generations: 3 },
+    )
+    .unwrap();
+    for i in 0..6 {
+        r.ingest(StreamEvent::single(
+            extra.x.row(i).to_vec(),
+            extra.y[i],
+            0,
+            (i + 1) as u64,
+        ));
+    }
+    drain(&mut r);
+    let live_p = r.handle().predict(&q.x).unwrap();
+    let live_seqs = r.high_seqs();
+    drop(r);
+
+    // flip one byte in the NEWEST snapshot generation of shard 0
+    let newest = *list_generations(dir.path(), 0).unwrap().last().unwrap();
+    assert!(newest >= 2, "checkpoint_every=1 must have rotated generations");
+    let path = snapshot_path(dir.path(), 0, newest);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let rec = ShardRouter::recover(dir.path()).unwrap();
+    let dc = rec.durability_counters();
+    assert_eq!(dc.get("snapshot_fallbacks"), 1, "{dc:?}");
+    assert_eq!(rec.high_seqs(), live_seqs);
+    assert_vec_close(&rec.handle().predict(&q.x).unwrap(), &live_p, 1e-8);
+    // the corrupt file was quarantined aside, not deleted
+    assert!(std::fs::metadata(path.with_extension("snap.corrupt")).is_ok());
+}

@@ -1,0 +1,281 @@
+//! Kill-point recovery matrix (ISSUE 8): crash the durable serving fleet
+//! at EVERY persist write/fsync/rename boundary and prove recovery
+//! restores it — recovered KRR point predictions AND KBR posteriors match
+//! an uninterrupted control run to 1e-8, for D=1 and D=4.
+//!
+//! Scenario per kill point: bootstrap a K=4 hash-placed fleet, make it
+//! durable, warm it with a clean prefix of the stream, arm the kill point,
+//! drive until it fires (dead-process semantics: from then on every
+//! persist boundary fails), drop the router mid-flight, recover from disk,
+//! re-feed exactly the events each shard's `high_seq` says were lost, and
+//! compare against a control router that saw the whole stream with no
+//! durability at all.
+//!
+//! The kill registry is process-global, so every test serializes on
+//! `KILL_LOCK`; the CI lane additionally runs this file with
+//! `--test-threads=1` across a seed matrix (`CHAOS_SEED`).
+
+#![cfg(feature = "chaos")]
+
+use std::sync::Mutex;
+
+use mikrr::data::synth;
+use mikrr::health::KillPoint;
+use mikrr::kernels::Kernel;
+use mikrr::linalg::Mat;
+use mikrr::persist::{kill, DurabilityConfig};
+use mikrr::serve::{Placement, ServeConfig, ShardRouter, ShardStatus};
+use mikrr::streaming::StreamEvent;
+use mikrr::testutil::{assert_vec_close, ScratchDir};
+
+/// Global serialization for the (process-global) kill registry.
+static KILL_LOCK: Mutex<()> = Mutex::new(());
+
+/// Seed for the synthetic workload: overridable by the CI matrix.
+fn chaos_seed(default: u64) -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Disarms the registry even when a scenario assertion panics, so one
+/// failure cannot wedge every later test in the process.
+struct Disarmed;
+impl Drop for Disarmed {
+    fn drop(&mut self) {
+        kill::disarm();
+    }
+}
+
+const TOL: f64 = 1e-8;
+const K: usize = 4;
+const N_BOOT: usize = 48;
+const N_STREAM: usize = 40;
+const WARM: usize = 6;
+
+fn target_row(y: f64, d: usize) -> Vec<f64> {
+    (0..d)
+        .map(|j| match j {
+            0 => y,
+            1 => 0.5 * y,
+            2 => y + 1.0,
+            _ => -y,
+        })
+        .collect()
+}
+
+fn serve_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), K);
+    cfg.placement = Placement::Hash;
+    cfg.base.outlier = None;
+    cfg.base.with_uncertainty = true;
+    cfg.base.snapshot_rollback = true;
+    cfg.base.batch.max_batch = 3;
+    cfg
+}
+
+fn workload(d_outputs: usize, seed: u64) -> (Mat, Mat, Vec<StreamEvent>, Mat) {
+    let boot = synth::ecg_like(N_BOOT, 5, seed);
+    let stream = synth::ecg_like(N_STREAM, 5, seed + 1);
+    let q = synth::ecg_like(8, 5, seed + 2);
+    let mut ym = Mat::default();
+    ym.resize_scratch(N_BOOT, d_outputs);
+    for i in 0..N_BOOT {
+        ym.row_mut(i).copy_from_slice(&target_row(boot.y[i], d_outputs));
+    }
+    let events: Vec<StreamEvent> = (0..N_STREAM)
+        .map(|i| {
+            StreamEvent::multi(
+                stream.x.row(i).to_vec(),
+                &target_row(stream.y[i], d_outputs),
+                0,
+                (i + 1) as u64,
+            )
+        })
+        .collect();
+    (boot.x, ym, events, q.x)
+}
+
+/// Ingest + flush until nothing is pending; every round must be clean.
+fn drain_strict(r: &mut ShardRouter) {
+    for _ in 0..128 {
+        let report = r.update_round();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        let pending: usize = (0..r.num_shards()).map(|i| r.shard(i).pending()).sum();
+        if pending == 0 {
+            return;
+        }
+    }
+    panic!("drain did not converge");
+}
+
+/// Fused mean + variance read, shape-independent: `(flat means, variances)`.
+fn posterior(r: &ShardRouter, q: &Mat) -> (Vec<f64>, Vec<f64>) {
+    let (mu, var) = r.handle().predict_with_uncertainty_multi(q).unwrap();
+    (mu.as_slice().to_vec(), var)
+}
+
+fn kill_scenario(point: KillPoint, d_outputs: usize, seed: u64) {
+    let dir = ScratchDir::new(&format!("killmat-{point:?}-d{d_outputs}"));
+    let (bx, by, events, q) = workload(d_outputs, seed);
+
+    // control: the whole stream, no durability, no crash
+    let mut control = ShardRouter::bootstrap_multi(&bx, &by, serve_cfg()).unwrap();
+    for ev in &events {
+        control.ingest(ev.clone());
+    }
+    drain_strict(&mut control);
+    let want_p = control.handle().predict_multi(&q).unwrap();
+    let (want_mu, want_var) = posterior(&control, &q);
+
+    // durable run, crashed at `point`
+    let mut r = ShardRouter::bootstrap_multi(&bx, &by, serve_cfg()).unwrap();
+    r.make_durable(
+        dir.path(),
+        DurabilityConfig { checkpoint_every: 2, keep_generations: 2 },
+    )
+    .unwrap();
+    for ev in &events[..WARM] {
+        r.ingest(ev.clone());
+    }
+    drain_strict(&mut r);
+
+    kill::arm(point);
+    let _guard = Disarmed;
+    for ev in &events[WARM..] {
+        r.ingest(ev.clone());
+        let _ = r.update_round(); // errors are the point here
+        if kill::fired() {
+            break;
+        }
+    }
+    assert!(kill::fired(), "{point:?} never fired — the scenario is vacuous");
+    drop(r); // the crash: whatever was in memory is gone
+    drop(_guard);
+
+    let mut rec = ShardRouter::recover(dir.path()).unwrap();
+    assert_eq!(rec.num_shards(), K);
+    assert!(
+        rec.handle().statuses().iter().all(|s| *s == ShardStatus::Healthy),
+        "{point:?}: recovered inverses must probe healthy"
+    );
+    if point == KillPoint::WalAppendTorn {
+        assert!(
+            rec.durability_counters().get("torn_tails_truncated") >= 1,
+            "{point:?} must leave a torn tail for recovery to truncate"
+        );
+    }
+    // exactly-once re-feed: only events above each shard's recovered
+    // high-water mark, routed by the same content hash
+    let seqs = rec.high_seqs();
+    for ev in &events {
+        let s = rec
+            .placement()
+            .shard_of(&ev.x, K)
+            .expect("hash placement is content-addressed");
+        if ev.seq > seqs[s] {
+            rec.ingest(ev.clone());
+        }
+    }
+    drain_strict(&mut rec);
+
+    let got_p = rec.handle().predict_multi(&q).unwrap();
+    assert_vec_close(got_p.as_slice(), want_p.as_slice(), TOL);
+    let (got_mu, got_var) = posterior(&rec, &q);
+    assert_vec_close(&got_mu, &want_mu, TOL);
+    assert_vec_close(&got_var, &want_var, TOL);
+}
+
+#[test]
+fn kill_point_matrix_d1() {
+    let _g = KILL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let seed = chaos_seed(42);
+    for point in KillPoint::ALL {
+        kill_scenario(point, 1, seed);
+    }
+}
+
+#[test]
+fn kill_point_matrix_d4() {
+    let _g = KILL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let seed = chaos_seed(42);
+    for point in KillPoint::ALL {
+        kill_scenario(point, 4, seed);
+    }
+}
+
+/// A crash that corrupts the newest snapshot on top of the kill: recovery
+/// falls back a generation, replays the longer WAL suffix, and still
+/// matches the control run.
+#[test]
+fn kill_plus_corrupted_newest_snapshot_falls_back() {
+    let _g = KILL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let seed = chaos_seed(42);
+    let dir = ScratchDir::new("killmat-fallback");
+    let (bx, by, events, q) = workload(1, seed + 100);
+
+    let mut control = ShardRouter::bootstrap_multi(&bx, &by, serve_cfg()).unwrap();
+    for ev in &events {
+        control.ingest(ev.clone());
+    }
+    drain_strict(&mut control);
+    let want_p = control.handle().predict_multi(&q).unwrap();
+
+    let mut r = ShardRouter::bootstrap_multi(&bx, &by, serve_cfg()).unwrap();
+    r.make_durable(
+        dir.path(),
+        DurabilityConfig { checkpoint_every: 2, keep_generations: 2 },
+    )
+    .unwrap();
+    // a longer warm phase than the matrix: ≥1 shard must have checkpointed
+    // (pigeonhole: 20 events over 4 shards → some shard ran ≥2 rounds)
+    for ev in &events[..20] {
+        r.ingest(ev.clone());
+    }
+    drain_strict(&mut r);
+    kill::arm(KillPoint::WalFsync);
+    let _guard = Disarmed;
+    for ev in &events[20..] {
+        r.ingest(ev.clone());
+        let _ = r.update_round();
+        if kill::fired() {
+            break;
+        }
+    }
+    assert!(kill::fired());
+    drop(r);
+    drop(_guard);
+
+    // bit-flip every shard's NEWEST snapshot: recovery must fall back and
+    // recover the round coverage from the WAL instead
+    use mikrr::persist::snapshot::{list_generations, snapshot_path};
+    let mut flipped = 0u64;
+    for shard in 0..K {
+        let gens = list_generations(dir.path(), shard).unwrap();
+        let newest = *gens.last().unwrap();
+        if gens.len() < 2 {
+            continue; // single generation: corrupting it would lose the shard
+        }
+        let path = snapshot_path(dir.path(), shard, newest);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        flipped += 1;
+    }
+    assert!(flipped > 0, "warm phase must have produced rotated generations");
+
+    let mut rec = ShardRouter::recover(dir.path()).unwrap();
+    assert_eq!(rec.durability_counters().get("snapshot_fallbacks"), flipped);
+    let seqs = rec.high_seqs();
+    for ev in &events {
+        let s = rec.placement().shard_of(&ev.x, K).unwrap();
+        if ev.seq > seqs[s] {
+            rec.ingest(ev.clone());
+        }
+    }
+    drain_strict(&mut rec);
+    let got_p = rec.handle().predict_multi(&q).unwrap();
+    assert_vec_close(got_p.as_slice(), want_p.as_slice(), TOL);
+}
