@@ -9,7 +9,7 @@
 use mikrr::data::synth;
 use mikrr::kernels::Kernel;
 use mikrr::persist::DurabilityConfig;
-use mikrr::serve::{Placement, ServeConfig, ShardRouter};
+use mikrr::serve::{Placement, PredictRequest, QueryKind, ServeConfig, ShardRouter};
 use mikrr::streaming::StreamEvent;
 
 fn main() -> Result<(), mikrr::error::Error> {
@@ -80,25 +80,21 @@ fn main() -> Result<(), mikrr::error::Error> {
     while recovered.update_round().added() > 0 {}
     println!("re-fed {refed} lost events");
 
-    let want = control.handle().predict(&queries.x)?;
-    let got = recovered.handle().predict(&queries.x)?;
-    let (want_mu, want_var) = control.handle().predict_with_uncertainty(&queries.x)?;
-    let (got_mu, got_var) = recovered.handle().predict_with_uncertainty(&queries.x)?;
-    let max_dp = got
-        .iter()
-        .zip(&want)
-        .map(|(g, w)| (g - w).abs())
-        .fold(0.0f64, f64::max);
-    let max_dmu = got_mu
-        .iter()
-        .zip(&want_mu)
-        .map(|(g, w)| (g - w).abs())
-        .fold(0.0f64, f64::max);
-    let max_dvar = got_var
-        .iter()
-        .zip(&want_var)
-        .map(|(g, w)| (g - w).abs())
-        .fold(0.0f64, f64::max);
+    let point = PredictRequest::new(queries.x.clone(), QueryKind::Mean);
+    let bayes = PredictRequest::new(queries.x.clone(), QueryKind::MeanVar);
+    let want = control.handle().query(&point)?;
+    let got = recovered.handle().query(&point)?;
+    let want_b = control.handle().query(&bayes)?;
+    let got_b = recovered.handle().query(&bayes)?;
+    let max_abs_gap = |g: &[f64], w: &[f64]| {
+        g.iter().zip(w).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max)
+    };
+    let max_dp = max_abs_gap(got.mean.as_slice(), want.mean.as_slice());
+    let max_dmu = max_abs_gap(got_b.mean.as_slice(), want_b.mean.as_slice());
+    let max_dvar = max_abs_gap(
+        got_b.variance.as_deref().unwrap_or_default(),
+        want_b.variance.as_deref().unwrap_or_default(),
+    );
     println!(
         "recovered vs control: |Δpoint|={max_dp:.3e} |Δμ|={max_dmu:.3e} |Δσ²|={max_dvar:.3e}"
     );

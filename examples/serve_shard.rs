@@ -14,7 +14,8 @@ use mikrr::kernels::Kernel;
 use mikrr::krr::classification_accuracy;
 use mikrr::metrics::Timer;
 use mikrr::serve::{
-    MicroBatchPolicy, MicroBatchServer, Placement, ServeConfig, ShardRouter,
+    MicroBatchPolicy, MicroBatchServer, Placement, PredictRequest, QueryKind,
+    ServeConfig, ShardRouter,
 };
 use mikrr::streaming::batcher::BatchPolicy;
 use mikrr::streaming::fanout::spawn_fanout;
@@ -101,8 +102,10 @@ fn main() -> Result<(), mikrr::error::Error> {
             let mut i = 0usize;
             while !stop_c.load(std::sync::atomic::Ordering::Relaxed) {
                 let t = Timer::start();
-                let (_mu, _var) =
-                    client.predict_with_uncertainty(queries.x.row(i % 64)).unwrap();
+                let req =
+                    PredictRequest::single(queries.x.row(i % 64), QueryKind::MeanVar);
+                let resp = client.query(req).unwrap();
+                let (_mu, _var) = (resp.scalar(), resp.variance_at(0));
                 lat.record(t.elapsed());
                 served += 1;
                 i += 1;
@@ -156,15 +159,24 @@ fn main() -> Result<(), mikrr::error::Error> {
     // held-out quality through the DC-KRR averaged read path
     let test = synth::ecg_like(2_000, dim, 999);
     let handle = router.handle();
-    let pred = handle.predict(&test.x)?;
+    let pred = handle.query(&PredictRequest::new(test.x.clone(), QueryKind::Mean))?;
     println!(
         "held-out accuracy after stream: {:.2}%",
-        100.0 * classification_accuracy(&pred, &test.y)
+        100.0 * classification_accuracy(pred.mean.as_slice(), &test.y)
     );
-    let (mu, var) = handle.predict_with_uncertainty(&test.x.block(0, 3, 0, dim))?;
+    let probe = handle.query(&PredictRequest::new(
+        test.x.block(0, 3, 0, dim),
+        QueryKind::MeanVar,
+    ))?;
+    let var = probe.variance.as_deref().unwrap_or_default();
     println!(
         "uncertainty fan-in sample: mu = {:?}, 95% half-widths = {:?}",
-        mu.iter().map(|m| (m * 100.0).round() / 100.0).collect::<Vec<_>>(),
+        probe
+            .mean
+            .as_slice()
+            .iter()
+            .map(|m| (m * 100.0).round() / 100.0)
+            .collect::<Vec<_>>(),
         var.iter()
             .map(|v| (1.96 * v.sqrt() * 100.0).round() / 100.0)
             .collect::<Vec<_>>(),

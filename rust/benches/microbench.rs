@@ -49,6 +49,12 @@
 //!   snapshot it amortizes (`persist/durability`, tracked
 //!   `speedup_persist_wal_vs_snapshot` — fsync-bound, so reported but not
 //!   perf-gated).
+//! * `net/*`               — the socket serving front-end (ISSUE 9): a
+//!   sustained mixed predict/update storm over loopback TCP through the
+//!   epoll reactor (`net/storm`, tracked `sustained_rps` and
+//!   `net_storm_p99_us`): 4 client threads, 7:1 predict:update mix, shed
+//!   requests retried after the server's hint — the end-to-end serving
+//!   capacity including framing, syscalls, and window batching.
 //! * `featmap`, `gemm`, `spd_inverse` — substrate hot spots.
 //!
 //! Run: cargo bench --bench microbench [-- --filter <id>] [-- --quick]
@@ -448,7 +454,10 @@ fn main() {
     // dispatch crossover at the paper's J=253 (poly2, m=21)
     if b.enabled("serve/microbatch_predict") {
         use mikrr::coordinator::CoordinatorConfig;
-        use mikrr::serve::{Placement, RouterPredictWork, ServeConfig, ShardRouter};
+        use mikrr::serve::{
+            Placement, PredictRequest, PredictResponse, QueryKind, RouterPredictWork,
+            ServeConfig, ShardRouter,
+        };
 
         let d = mikrr::data::synth::ecg_like(600, 21, 11);
         let mut base = CoordinatorConfig::default_for(Kernel::poly(2, 1.0));
@@ -462,18 +471,20 @@ fn main() {
         .unwrap();
         let h = router.handle();
         let q = mikrr::data::synth::ecg_like(64, 21, 12);
-        let rows: Vec<Mat> = (0..64).map(|r| q.x.block(r, r + 1, 0, 21)).collect();
+        let reqs: Vec<PredictRequest> = (0..64)
+            .map(|r| PredictRequest::new(q.x.block(r, r + 1, 0, 21), QueryKind::MeanVar))
+            .collect();
         b.bench("serve/microbatch_predict/per_request_gemv_B64", || {
-            for row in &rows {
-                black_box(h.predict_with_uncertainty(row).unwrap());
+            for req in &reqs {
+                black_box(h.query(req).unwrap());
             }
         });
         let mut work = RouterPredictWork::default();
-        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        let mut resp = PredictResponse::default();
+        let batch_req = PredictRequest::new(q.x.clone(), QueryKind::MeanVar);
         b.bench("serve/microbatch_predict/microbatch_gemm_B64", || {
-            h.predict_with_uncertainty_into(&q.x, &mut mean, &mut var, &mut work)
-                .unwrap();
-            black_box(&mean);
+            h.query_into(&batch_req, &mut resp, &mut work).unwrap();
+            black_box(&resp);
         });
     }
     // (b) shard update round, empirical space (maintained state (N/K)^2
@@ -679,11 +690,132 @@ fn main() {
         });
     }
 
+    // ---- net/*: the socket serving front-end (ISSUE 9) ----
+    // sustained mixed predict/update storm over loopback TCP through the
+    // epoll reactor: 4 client threads, 7:1 predict:update mix, shed
+    // requests retried after the server's hint. Tracked (`sustained_rps`),
+    // not ratio-gated: the figure is an end-to-end serving-capacity report
+    // (framing + syscalls + window batching), not a compute kernel.
+    let mut net_storm: Option<(f64, f64)> = None;
+    if b.enabled("net/storm") {
+        use mikrr::coordinator::CoordinatorConfig;
+        use mikrr::net::{Frame, NetClient, NetConfig, NetServer};
+        use mikrr::serve::{
+            Placement, PredictRequest, QueryKind, ServeConfig, ShardRouter,
+        };
+        use mikrr::streaming::StreamEvent;
+        use std::time::{Duration, Instant};
+
+        let d = mikrr::data::synth::ecg_like(600, 21, 51);
+        let mut base = CoordinatorConfig::default_for(Kernel::poly(2, 1.0));
+        base.outlier = None;
+        base.with_uncertainty = true;
+        let mut router = ShardRouter::bootstrap(
+            &d.x,
+            &d.y,
+            ServeConfig { shards: 1, placement: Placement::RoundRobin, base },
+        )
+        .unwrap();
+        let (server, rx) =
+            NetServer::spawn(router.handle(), 21, NetConfig::default()).unwrap();
+        let addr = server.addr();
+        // the documented ingest wiring: drain acked updates into the
+        // router flush path while the storm runs
+        let consumer = std::thread::spawn(move || {
+            let mut n = 0usize;
+            while let Ok(ev) = rx.recv() {
+                router.ingest(ev);
+                n += 1;
+                if n % 64 == 0 {
+                    router.update_round();
+                }
+            }
+            router.update_round();
+        });
+
+        let threads = 4usize;
+        let per_thread = 1500usize;
+        let q = mikrr::data::synth::ecg_like(64, 21, 52);
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let rows: Vec<Vec<f64>> =
+                (0..64).map(|i| q.x.row((t * 16 + i) % 64).to_vec()).collect();
+            joins.push(std::thread::spawn(move || {
+                let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+                c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                let mut lat_us = Vec::with_capacity(per_thread);
+                let mut seq = 0u64;
+                for i in 0..per_thread {
+                    let s = Instant::now();
+                    if i % 8 == 7 {
+                        // update: send and wait for the ack, resending on shed
+                        loop {
+                            let row = &rows[i % rows.len()];
+                            let ev = StreamEvent::single(row.clone(), 1.0, t, seq);
+                            seq += 1;
+                            c.send_update(&ev).unwrap();
+                            match c.recv().unwrap() {
+                                Frame::Ack { .. } => break,
+                                Frame::RetryAfter { retry_ms, .. } => std::thread::sleep(
+                                    Duration::from_millis(u64::from(retry_ms.max(1))),
+                                ),
+                                f => panic!("unexpected frame {f:?}"),
+                            }
+                        }
+                    } else {
+                        let want = if i % 2 == 0 {
+                            QueryKind::Mean
+                        } else {
+                            QueryKind::MeanVar
+                        };
+                        let req = PredictRequest::single(&rows[i % rows.len()], want);
+                        loop {
+                            match c.query(&req) {
+                                Ok(_) => break,
+                                Err(e) if e.is_transient() => {
+                                    std::thread::sleep(Duration::from_millis(1))
+                                }
+                                Err(e) => panic!("storm predict failed: {e}"),
+                            }
+                        }
+                    }
+                    lat_us.push(s.elapsed().as_secs_f64() * 1e6);
+                }
+                lat_us
+            }));
+        }
+        let mut lat: Vec<f64> = Vec::new();
+        for j in joins {
+            lat.extend(j.join().unwrap());
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let stats = server.shutdown();
+        consumer.join().unwrap();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = lat[((lat.len() as f64 * 0.99) as usize).min(lat.len() - 1)];
+        let rps = lat.len() as f64 / elapsed.max(1e-9);
+        net_storm = Some((rps, p99));
+        println!(
+            "net/storm: {:.0} req/s sustained, p99 {:.0}us over {} requests \
+             ({} shed, window occupancy p99 {:.1} rows)",
+            rps,
+            p99,
+            lat.len(),
+            stats.counters.get("shed_predict") + stats.counters.get("shed_update"),
+            stats.window_occupancy.percentile(99.0),
+        );
+    }
+
     // ---- machine-readable reports ----
     let mut extras: Vec<(&str, f64)> =
         vec![("threads", mikrr::par::num_threads() as f64)];
     if allocs_per_round >= 0.0 {
         extras.push(("allocs_per_round_intrinsic_J253", allocs_per_round));
+    }
+    if let Some((rps, p99_us)) = net_storm {
+        extras.push(("sustained_rps", rps));
+        extras.push(("net_storm_p99_us", p99_us));
     }
     if let (Some(alloc), Some(inplace)) = (
         b.summary("incplace/incdec_alloc_J253_H6"),

@@ -42,6 +42,7 @@ pub mod coordinator;
 pub mod data;
 pub mod health;
 pub mod metrics;
+pub mod net;
 pub mod persist;
 pub mod runtime;
 pub mod serve;

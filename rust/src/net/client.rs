@@ -1,0 +1,140 @@
+//! Blocking client for the reactor protocol — the reference
+//! implementation of the frame grammar, used by the loopback tests, the
+//! `net/storm` microbench, and `examples/net_serve.rs`.
+//!
+//! One client owns one connection and is synchronous by construction.
+//! Pipelining is explicit: [`NetClient::send_predict`] /
+//! [`NetClient::send_update`] enqueue frames without waiting, and
+//! [`NetClient::recv`] pulls whatever answer arrives next — ids
+//! correlate them. [`NetClient::query`] is the simple call-and-wait
+//! wrapper matching the in-process [`crate::serve::PredictClient`].
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use super::frame::{self, Frame};
+use crate::error::{Error, Result};
+use crate::serve::query::{PredictRequest, PredictResponse};
+use crate::streaming::StreamEvent;
+
+/// Blocking connection to a [`super::NetServer`].
+pub struct NetClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    out: Vec<u8>,
+    scratch: Vec<u8>,
+    next_id: u64,
+    max_frame_len: usize,
+}
+
+impl NetClient {
+    /// Connect. `max_frame_len` must be at least the server's cap (it
+    /// bounds what [`NetClient::recv`] will accept).
+    pub fn connect(addr: SocketAddr, max_frame_len: usize) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self {
+            stream,
+            rbuf: Vec::new(),
+            out: Vec::new(),
+            scratch: Vec::new(),
+            next_id: 1,
+            max_frame_len,
+        })
+    }
+
+    /// Bound how long [`NetClient::recv`] blocks (`None` = forever).
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(t)?;
+        Ok(())
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn send(&mut self) -> Result<()> {
+        self.stream.write_all(&self.out)?;
+        self.out.clear();
+        Ok(())
+    }
+
+    /// Send one predict frame without waiting; returns its id.
+    pub fn send_predict(&mut self, req: &PredictRequest) -> Result<u64> {
+        let id = self.fresh_id();
+        frame::encode_predict(&mut self.out, &mut self.scratch, id, req);
+        self.send()?;
+        Ok(id)
+    }
+
+    /// Send one update frame without waiting; returns its id.
+    pub fn send_update(&mut self, ev: &StreamEvent) -> Result<u64> {
+        let id = self.fresh_id();
+        frame::encode_update(&mut self.out, &mut self.scratch, id, ev);
+        self.send()?;
+        Ok(id)
+    }
+
+    /// Push pre-encoded bytes down the socket verbatim — the loopback
+    /// tests use this to deliver torn and bit-flipped frames.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Block until one complete frame arrives and decode it.
+    pub fn recv(&mut self) -> Result<Frame> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some(total) = frame::peek_frame(&self.rbuf, self.max_frame_len)? {
+                let f = frame::decode_frame(&self.rbuf[..total])?;
+                self.rbuf.drain(..total);
+                return Ok(f);
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(Error::Stream("server closed the connection".into()));
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(Error::Stream("timed out waiting for a frame".into()));
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+    }
+
+    /// Send one request and block for ITS answer (frames for other ids —
+    /// e.g. acks of pipelined updates — are skipped). A `RetryAfter`
+    /// surfaces as a *transient* [`Error::Stream`] so retry loops built
+    /// on [`Error::is_transient`] do the right thing; an `Error` frame
+    /// keeps its server-side transience.
+    pub fn query(&mut self, req: &PredictRequest) -> Result<PredictResponse> {
+        let id = self.send_predict(req)?;
+        loop {
+            match self.recv()? {
+                Frame::Response { id: rid, resp } if rid == id => return Ok(resp),
+                Frame::RetryAfter { id: rid, retry_ms } if rid == id => {
+                    return Err(Error::Stream(format!(
+                        "request shed, retry after {retry_ms}ms"
+                    )));
+                }
+                Frame::Error { id: rid, transient, msg } if rid == id || rid == 0 => {
+                    return Err(if transient {
+                        Error::Stream(msg)
+                    } else {
+                        Error::Config(msg)
+                    });
+                }
+                _ => continue,
+            }
+        }
+    }
+}

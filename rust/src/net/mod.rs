@@ -1,0 +1,34 @@
+//! Dependency-free network serving front-end.
+//!
+//! The paper pitches multiple incremental KRR at "big streams ... in
+//! cloud centers", and the ROADMAP's north star is serving traffic that
+//! arrives over sockets, not over in-process channels. This module puts
+//! the [`crate::serve`] layer behind TCP without adding a dependency:
+//!
+//! * [`sys`] — readiness polling: raw-syscall epoll on Linux
+//!   x86_64/aarch64 (the same no-libc idiom as `par/mod.rs`), a
+//!   spurious-readiness fallback everywhere else.
+//! * [`frame`] — the wire protocol: each message is one
+//!   [`crate::persist::codec`] CRC section whose payload is the
+//!   *canonical* serialization of the in-process request/response types.
+//! * [`reactor`] — the single-threaded event loop: nonblocking accept,
+//!   per-connection buffers, per-[`crate::serve::QueryKind`] batch
+//!   window shared with [`crate::serve::MicroBatchServer`], and
+//!   load-shedding admission control (`RetryAfter`).
+//! * [`client`] — a blocking reference client for tests, benches, and
+//!   examples.
+//!
+//! The frame grammar, shed semantics, and retry-after contract are
+//! documented in `serve/mod.rs` §"Network serving and admission
+//! control"; throughput and tail latency under a mixed predict/update
+//! storm are tracked by the `net/storm` microbench (`sustained_rps` in
+//! the CI perf gate, next to `speedup_serve_microbatch`).
+
+pub mod client;
+pub mod frame;
+pub mod reactor;
+pub mod sys;
+
+pub use client::NetClient;
+pub use frame::Frame;
+pub use reactor::{NetConfig, NetLive, NetServer, NetStats};

@@ -1,0 +1,658 @@
+//! The event-driven serving front-end: one reactor thread multiplexing
+//! every connection over [`super::sys::Poller`], coalescing predict
+//! frames into the per-[`QueryKind`] micro-batch lanes and feeding
+//! update frames to the router ingest path through a bounded queue.
+//!
+//! # Execution model
+//!
+//! A single thread owns the listener, every connection, and the batch
+//! window — there are no locks on the request path. Each poll iteration:
+//!
+//! 1. wait for readiness (bounded so the stop flag and the window
+//!    deadline are honored),
+//! 2. accept new connections / drain readable sockets, decoding complete
+//!    frames and admitting them (or shedding, see below),
+//! 3. when the window fills ([`MicroBatchPolicy::max_rows`] rows) or its
+//!    deadline passes ([`MicroBatchPolicy::max_wait`] after the first
+//!    admitted row), run ONE batched [`RouterHandle`] query per
+//!    [`QueryKind`] present ([`QueryLanes`], the same core the
+//!    in-process [`crate::serve::MicroBatchServer`] uses) and answer
+//!    every admitted frame out of its kind's lane.
+//!
+//! B concurrent network predicts therefore cost one packed GEMM per
+//! kind, exactly like B in-process clients.
+//!
+//! # Admission control
+//!
+//! Nothing queues unboundedly — see `serve/mod.rs` §"Network serving and
+//! admission control" for the contract. Per connection: at most
+//! [`NetConfig::max_inflight_per_conn`] admitted predicts. Globally: at
+//! most [`NetConfig::pending_budget`] admitted rows per window; updates
+//! go through a bounded [`std::sync::mpsc::sync_channel`] of
+//! [`NetConfig::update_queue`] events. Anything over budget is answered
+//! *immediately* with a `RetryAfter` frame and never stored; a
+//! connection whose unread replies exceed [`NetConfig::max_write_buf`]
+//! is closed as a slow reader. Frames that fail CRC/framing get one
+//! best-effort `Error` frame and the connection is closed — a torn frame
+//! means the byte stream can never resynchronize.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::frame::{self, Frame};
+use super::sys::{sock_id, Event, Interest, Poller, SockId};
+use crate::error::{Error, Result};
+use crate::metrics::{Counters, LatencyHist};
+use crate::serve::microbatch::QueryLanes;
+use crate::serve::query::QueryKind;
+use crate::serve::{MicroBatchPolicy, RouterHandle};
+use crate::streaming::StreamEvent;
+
+/// Reactor configuration. Defaults serve a loopback fleet; production
+/// deployments tune the budgets to the provisioned memory.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address (`"127.0.0.1:0"` = loopback, OS-assigned port).
+    pub addr: String,
+    /// Batch window shared with the in-process micro-batcher.
+    pub batch: MicroBatchPolicy,
+    /// Hard cap on a frame's declared payload length; an over-cap header
+    /// is a protocol error (connection closed), not a queued read.
+    pub max_frame_len: usize,
+    /// Max admitted-but-unanswered predict frames per connection.
+    pub max_inflight_per_conn: usize,
+    /// Global cap on admitted rows in one window; further predicts shed.
+    pub pending_budget: usize,
+    /// Bounded update queue (events) between reactor and ingest consumer.
+    pub update_queue: usize,
+    /// Backoff hint carried by `RetryAfter` frames, milliseconds.
+    pub retry_after_ms: u32,
+    /// Close a connection whose pending replies exceed this many bytes.
+    pub max_write_buf: usize,
+    /// Max simultaneous connections; excess accepts are dropped on sight.
+    pub max_conns: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            batch: MicroBatchPolicy::default(),
+            max_frame_len: 1 << 20,
+            max_inflight_per_conn: 64,
+            pending_budget: 1024,
+            update_queue: 1024,
+            retry_after_ms: 5,
+            max_write_buf: 4 << 20,
+            max_conns: 1024,
+        }
+    }
+}
+
+/// Final reactor statistics, returned by [`NetServer::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    /// Named counters: `accepted`, `conn_rejected`, `shed_predict`,
+    /// `shed_update`, `predicts_served`, `updates_admitted`,
+    /// `protocol_errors`, `slow_reader_closed`, `batches`, `poll_errors`.
+    pub counters: Counters,
+    /// Rows per executed window (recorded as raw samples; use
+    /// [`LatencyHist::percentile`] for the p99 occupancy figure).
+    pub window_occupancy: LatencyHist,
+    /// High-water mark of admitted rows — bounded by
+    /// [`NetConfig::pending_budget`] by construction.
+    pub max_pending_rows: usize,
+}
+
+/// Live counters readable while the reactor runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetLive {
+    /// Connections accepted so far.
+    pub accepted: u64,
+    /// Frames shed (predict + update).
+    pub shed: u64,
+    /// Currently open connections.
+    pub active_conns: u64,
+}
+
+#[derive(Default)]
+struct LiveCells {
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    active_conns: AtomicU64,
+}
+
+/// Handle to a running reactor. Dropping it stops the reactor and joins
+/// the thread; [`NetServer::shutdown`] does the same and returns stats.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    live: Arc<LiveCells>,
+    join: Option<JoinHandle<NetStats>>,
+}
+
+impl NetServer {
+    /// Bind, spawn the reactor thread, and return the handle plus the
+    /// bounded receiver of admitted update events. The caller owns the
+    /// ingest side: drain the receiver into
+    /// [`crate::serve::router::ShardRouter::ingest`] +
+    /// `update_round()`; dropping the receiver makes the reactor answer
+    /// further updates with a permanent error.
+    pub fn spawn(
+        handle: RouterHandle,
+        dim: usize,
+        cfg: NetConfig,
+    ) -> Result<(NetServer, Receiver<StreamEvent>)> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let mut poller = Poller::new()?;
+        poller.register(sock_id(&listener), TOKEN_LISTENER, Interest::READ)?;
+        let (update_tx, update_rx) = sync_channel(cfg.update_queue.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(LiveCells::default());
+        let reactor = Reactor {
+            handle,
+            dim,
+            cfg,
+            listener,
+            poller,
+            conns: Vec::new(),
+            free: Vec::new(),
+            gens: Vec::new(),
+            lanes: QueryLanes::new(dim),
+            pending: Vec::new(),
+            pending_rows: 0,
+            window_deadline: Instant::now(),
+            update_tx,
+            stop: stop.clone(),
+            live: live.clone(),
+            events: Vec::new(),
+            chunk: vec![0u8; 64 * 1024],
+            scratch: Vec::new(),
+            stats: NetStats::default(),
+        };
+        let join = std::thread::Builder::new()
+            .name("mikrr-net-reactor".into())
+            .spawn(move || reactor.run())
+            .map_err(Error::Io)?;
+        Ok((NetServer { addr, stop, live, join: Some(join) }, update_rx))
+    }
+
+    /// The bound address (use with an OS-assigned port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the live counters.
+    pub fn live(&self) -> NetLive {
+        NetLive {
+            accepted: self.live.accepted.load(Ordering::Relaxed),
+            shed: self.live.shed.load(Ordering::Relaxed),
+            active_conns: self.live.active_conns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the reactor: the window in flight is executed and flushed
+    /// best-effort, every connection is dropped, and the final statistics
+    /// come back.
+    pub fn shutdown(mut self) -> NetStats {
+        self.stop.store(true, Ordering::SeqCst);
+        self.join
+            .take()
+            .expect("server already shut down")
+            .join()
+            .expect("net reactor panicked")
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+const TOKEN_LISTENER: u64 = 0;
+
+struct Conn {
+    stream: TcpStream,
+    id: SockId,
+    gen: u32,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wstart: usize,
+    inflight: usize,
+    wants_write: bool,
+    /// Answer what is buffered, then close (set on protocol errors).
+    closing: bool,
+    /// Remove at the next reap point.
+    dead: bool,
+}
+
+/// One admitted predict frame, waiting for its window to execute.
+struct PendingReq {
+    slot: usize,
+    gen: u32,
+    id: u64,
+    want: QueryKind,
+    start: usize,
+    rows: usize,
+}
+
+struct Reactor {
+    handle: RouterHandle,
+    dim: usize,
+    cfg: NetConfig,
+    listener: TcpListener,
+    poller: Poller,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// Per-slot generation, bumped on every close: a [`PendingReq`]
+    /// whose generation no longer matches is for a connection that died
+    /// (and possibly a slot that was reused) — its reply is dropped
+    /// instead of misdelivered.
+    gens: Vec<u32>,
+    lanes: QueryLanes,
+    pending: Vec<PendingReq>,
+    pending_rows: usize,
+    window_deadline: Instant,
+    update_tx: SyncSender<StreamEvent>,
+    stop: Arc<AtomicBool>,
+    live: Arc<LiveCells>,
+    events: Vec<Event>,
+    chunk: Vec<u8>,
+    scratch: Vec<u8>,
+    stats: NetStats,
+}
+
+impl Reactor {
+    fn run(mut self) -> NetStats {
+        let mut consecutive_poll_errors = 0u32;
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            if self.window_due() {
+                self.execute_window();
+            }
+            let timeout_ms = self.poll_timeout_ms();
+            let mut events = std::mem::take(&mut self.events);
+            match self.poller.wait(&mut events, timeout_ms) {
+                Ok(()) => consecutive_poll_errors = 0,
+                Err(_) => {
+                    self.stats.counters.inc("poll_errors");
+                    consecutive_poll_errors += 1;
+                    if consecutive_poll_errors > 100 {
+                        // the poller is wedged; dying loudly beats spinning
+                        self.events = events;
+                        break;
+                    }
+                }
+            }
+            for &ev in &events {
+                if ev.token == TOKEN_LISTENER {
+                    self.accept_ready();
+                } else {
+                    let slot = (ev.token - 1) as usize;
+                    if ev.readable || ev.error {
+                        self.drive_readable(slot);
+                    }
+                    if ev.writable {
+                        self.flush_conn(slot);
+                    }
+                    self.reap_if_dead(slot);
+                }
+            }
+            self.events = events;
+            if self.window_due() {
+                self.execute_window();
+            }
+        }
+        // drain: answer the window in flight, push replies best-effort
+        self.execute_window();
+        for slot in 0..self.conns.len() {
+            self.flush_conn(slot);
+        }
+        // dropping self.update_tx (with self) disconnects the receiver
+        self.stats
+    }
+
+    fn window_due(&self) -> bool {
+        self.pending_rows >= self.cfg.batch.max_rows
+            || (self.pending_rows > 0 && Instant::now() >= self.window_deadline)
+    }
+
+    fn poll_timeout_ms(&self) -> i32 {
+        if self.pending_rows > 0 {
+            let left = self.window_deadline.saturating_duration_since(Instant::now());
+            // ceil to a millisecond: a sub-ms window overshoots by < 1ms
+            // rather than busy-polling the last microseconds
+            (left.as_millis() as i32 + i32::from(left.subsec_micros() % 1000 != 0)).clamp(1, 10)
+        } else {
+            10
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    self.stats.counters.inc("accepted");
+                    self.live.accepted.fetch_add(1, Ordering::Relaxed);
+                    let open = self.live.active_conns.load(Ordering::Relaxed) as usize;
+                    if open >= self.cfg.max_conns {
+                        self.stats.counters.inc("conn_rejected");
+                        drop(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let slot = match self.free.pop() {
+                        Some(s) => s,
+                        None => {
+                            self.conns.push(None);
+                            self.gens.push(0);
+                            self.conns.len() - 1
+                        }
+                    };
+                    let id = sock_id(&stream);
+                    let token = slot as u64 + 1;
+                    if self.poller.register(id, token, Interest::READ).is_err() {
+                        self.free.push(slot);
+                        continue;
+                    }
+                    self.conns[slot] = Some(Conn {
+                        stream,
+                        id,
+                        gen: self.gens[slot],
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        wstart: 0,
+                        inflight: 0,
+                        wants_write: false,
+                        closing: false,
+                        dead: false,
+                    });
+                    self.live.active_conns.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn drive_readable(&mut self, slot: usize) {
+        loop {
+            let Some(conn) = self.conns[slot].as_mut() else { return };
+            if conn.dead || conn.closing {
+                return;
+            }
+            match conn.stream.read(&mut self.chunk) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&self.chunk[..n]);
+                    // defend the read buffer like the write buffer: a
+                    // peer pipelining more than one frame cap + budget's
+                    // worth of bytes is over any sane window
+                    if conn.rbuf.len()
+                        > self.cfg.max_frame_len + frame::HEADER_LEN + frame::TRAILER_LEN
+                            + self.cfg.max_write_buf
+                    {
+                        conn.dead = true;
+                        self.stats.counters.inc("slow_reader_closed");
+                        return;
+                    }
+                    if n < self.chunk.len() {
+                        break; // drained the socket
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        self.parse_frames(slot);
+    }
+
+    fn parse_frames(&mut self, slot: usize) {
+        let Some(conn) = self.conns[slot].as_mut() else { return };
+        let mut rbuf = std::mem::take(&mut conn.rbuf);
+        let mut consumed = 0;
+        loop {
+            let alive = self.conns[slot].as_ref().is_some_and(|c| !c.dead && !c.closing);
+            if !alive {
+                break;
+            }
+            match frame::peek_frame(&rbuf[consumed..], self.cfg.max_frame_len) {
+                Ok(None) => break,
+                Ok(Some(total)) => {
+                    let decoded = frame::decode_frame(&rbuf[consumed..consumed + total]);
+                    consumed += total;
+                    match decoded {
+                        Ok(f) => self.handle_frame(slot, f),
+                        Err(e) => {
+                            self.protocol_error(slot, &e);
+                            break;
+                        }
+                    }
+                }
+                Err(e) => {
+                    self.protocol_error(slot, &e);
+                    break;
+                }
+            }
+        }
+        rbuf.drain(..consumed);
+        if let Some(c) = self.conns[slot].as_mut() {
+            c.rbuf = rbuf;
+        }
+    }
+
+    fn handle_frame(&mut self, slot: usize, f: Frame) {
+        match f {
+            Frame::Predict { id, req } => self.handle_predict(slot, id, req),
+            Frame::Update { id, ev } => self.handle_update(slot, id, ev),
+            Frame::Response { .. }
+            | Frame::Ack { .. }
+            | Frame::RetryAfter { .. }
+            | Frame::Error { .. } => {
+                let e = Error::Config("client sent a server-only frame".into());
+                self.protocol_error(slot, &e);
+            }
+        }
+    }
+
+    fn handle_predict(&mut self, slot: usize, id: u64, req: crate::serve::PredictRequest) {
+        let rows = req.x.rows();
+        if req.x.cols() != self.dim || rows == 0 {
+            let e = Error::shape(
+                "net::reactor",
+                format!(
+                    "request batch is {}x{}, expected (>=1, {})",
+                    rows,
+                    req.x.cols(),
+                    self.dim
+                ),
+            );
+            self.reply_error(slot, id, &e);
+            return;
+        }
+        let inflight = self.conns[slot].as_ref().map_or(0, |c| c.inflight);
+        if inflight >= self.cfg.max_inflight_per_conn
+            || self.pending_rows + rows > self.cfg.pending_budget
+        {
+            self.stats.counters.inc("shed_predict");
+            self.live.shed.fetch_add(1, Ordering::Relaxed);
+            self.reply_retry_after(slot, id);
+            return;
+        }
+        if self.pending.is_empty() {
+            self.window_deadline = Instant::now() + self.cfg.batch.max_wait;
+        }
+        let start = self.lanes.push_rows(req.want, &req.x);
+        let gen = self.gens[slot];
+        self.pending.push(PendingReq { slot, gen, id, want: req.want, start, rows });
+        self.pending_rows += rows;
+        self.stats.max_pending_rows = self.stats.max_pending_rows.max(self.pending_rows);
+        if let Some(c) = self.conns[slot].as_mut() {
+            c.inflight += 1;
+        }
+    }
+
+    fn handle_update(&mut self, slot: usize, id: u64, ev: StreamEvent) {
+        match self.update_tx.try_send(ev) {
+            Ok(()) => {
+                self.stats.counters.inc("updates_admitted");
+                let Self { conns, scratch, .. } = self;
+                if let Some(c) = conns[slot].as_mut() {
+                    frame::encode_ack(&mut c.wbuf, scratch, id);
+                }
+                self.flush_conn(slot);
+            }
+            Err(TrySendError::Full(_)) => {
+                self.stats.counters.inc("shed_update");
+                self.live.shed.fetch_add(1, Ordering::Relaxed);
+                self.reply_retry_after(slot, id);
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                let e = Error::Config("update sink detached; ingest is not running".into());
+                self.reply_error(slot, id, &e);
+            }
+        }
+    }
+
+    fn reply_retry_after(&mut self, slot: usize, id: u64) {
+        let retry_ms = self.cfg.retry_after_ms;
+        let Self { conns, scratch, .. } = self;
+        if let Some(c) = conns[slot].as_mut() {
+            frame::encode_retry_after(&mut c.wbuf, scratch, id, retry_ms);
+        }
+        self.flush_conn(slot);
+    }
+
+    fn reply_error(&mut self, slot: usize, id: u64, e: &Error) {
+        let Self { conns, scratch, .. } = self;
+        if let Some(c) = conns[slot].as_mut() {
+            frame::encode_error(&mut c.wbuf, scratch, id, e);
+        }
+        self.flush_conn(slot);
+    }
+
+    /// Send one best-effort error frame and close: a framing/CRC failure
+    /// means the byte stream cannot be resynchronized.
+    fn protocol_error(&mut self, slot: usize, e: &Error) {
+        self.stats.counters.inc("protocol_errors");
+        let Self { conns, scratch, .. } = self;
+        if let Some(c) = conns[slot].as_mut() {
+            frame::encode_error(&mut c.wbuf, scratch, 0, e);
+            c.closing = true;
+        }
+        self.flush_conn(slot);
+    }
+
+    fn execute_window(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let rows = self.pending_rows;
+        self.stats.window_occupancy.record(rows as f64);
+        self.stats.counters.inc("batches");
+        self.lanes.execute(&self.handle);
+        let pending = std::mem::take(&mut self.pending);
+        for p in &pending {
+            let Self { conns, scratch, lanes, gens, stats, .. } = &mut *self;
+            let alive = conns[p.slot]
+                .as_mut()
+                .filter(|c| c.gen == gens[p.slot] && c.gen == p.gen && !c.dead);
+            let Some(c) = alive else { continue };
+            c.inflight = c.inflight.saturating_sub(1);
+            match lanes.lane_result(p.want) {
+                Ok(resp) => {
+                    frame::encode_response_rows(&mut c.wbuf, scratch, p.id, resp, p.start, p.rows);
+                    stats.counters.inc("predicts_served");
+                }
+                Err(e) => {
+                    frame::encode_error(&mut c.wbuf, scratch, p.id, e);
+                }
+            }
+            self.flush_conn(p.slot);
+        }
+        self.pending = pending;
+        self.pending.clear();
+        self.pending_rows = 0;
+        self.lanes.reset();
+    }
+
+    fn flush_conn(&mut self, slot: usize) {
+        let max_write_buf = self.cfg.max_write_buf;
+        let Self { conns, poller, stats, .. } = self;
+        let Some(conn) = conns[slot].as_mut() else { return };
+        if conn.dead {
+            return;
+        }
+        while conn.wstart < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wstart..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    return;
+                }
+                Ok(n) => conn.wstart += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        if conn.wstart >= conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wstart = 0;
+            if conn.wants_write {
+                conn.wants_write = false;
+                let _ = poller.modify(conn.id, slot as u64 + 1, Interest::READ);
+            }
+            if conn.closing {
+                conn.dead = true;
+            }
+        } else if conn.wbuf.len() - conn.wstart > max_write_buf {
+            // slow reader: dropping it bounds reply memory; the client
+            // sees a reset and re-resolves
+            conn.dead = true;
+            stats.counters.inc("slow_reader_closed");
+        } else if !conn.wants_write {
+            conn.wants_write = true;
+            let _ = poller.modify(conn.id, slot as u64 + 1, Interest::READ_WRITE);
+        }
+    }
+
+    fn reap_if_dead(&mut self, slot: usize) {
+        let dead = self.conns[slot].as_ref().is_some_and(|c| c.dead);
+        if !dead {
+            return;
+        }
+        let conn = self.conns[slot].take().expect("checked above");
+        let _ = self.poller.deregister(conn.id, slot as u64 + 1);
+        drop(conn);
+        self.gens[slot] = self.gens[slot].wrapping_add(1);
+        self.free.push(slot);
+        self.live.active_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+}

@@ -1,28 +1,38 @@
-//! Micro-batched prediction front-end: concurrent single-row predict
-//! requests are coalesced into one batched predict per shard.
+//! Micro-batched prediction front-end: concurrent predict requests are
+//! coalesced into per-[`QueryKind`] batched reads against the router.
 //!
 //! A request fleet issuing individual predictions pays a per-request
 //! GEMV — for the KBR twin an O(J²) covariance product *per request* —
 //! plus per-call allocation and dispatch overhead. The micro-batcher
 //! collects whatever requests arrive within a short window (or until
-//! `max_rows`) and executes them as ONE batched `predict_into` through the
-//! router: the covariance product becomes a single (J, J)·(J, B) packed
-//! GEMM above the dispatch crossover, the feature map and cross-Gram
-//! builds amortize across the batch, and the worker's warm
-//! [`RouterPredictWork`] keeps the whole serving loop allocation-free
-//! (measured in `rust/tests/alloc_count.rs` on the `predict_into` paths).
+//! `max_rows` rows are pending) and executes them through [`QueryLanes`]:
+//! each [`QueryKind`] present in the window gets ONE batched
+//! [`RouterHandle::query_into`] over exactly its own rows — the covariance
+//! product becomes a single (J, J)·(J, B) packed GEMM above the dispatch
+//! crossover, the feature map and cross-Gram builds amortize across the
+//! sub-batch, and the worker's warm [`RouterPredictWork`] keeps the whole
+//! serving loop allocation-free (measured in `rust/tests/alloc_count.rs`).
+//!
+//! Per-kind sub-batching (instead of the four historical passes over the
+//! full window) preserves the estimator-separation invariant for free: a
+//! `Mean` request is answered by the KRR point path and never shares an
+//! execution with the KBR posterior rows it happened to coalesce with.
+//! The same lanes are driven directly by the network reactor
+//! ([`crate::net`]), so socket traffic and in-process clients share one
+//! batch-execution core.
 //!
 //! The batching window trades tail latency for throughput exactly like the
 //! update-side [`crate::streaming::batcher`]: `max_wait` bounds the added
 //! latency, `max_rows` bounds the batch.
 
-use crate::error::{Error, Result};
-use crate::linalg::Mat;
+use crate::error::{Error, PersistDetail, Result};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::query::{PredictRequest, PredictResponse, QueryKind};
 use super::router::{RouterHandle, RouterPredictWork};
+use crate::linalg::Mat;
 
 /// Batching policy for the prediction front-end.
 #[derive(Clone, Debug)]
@@ -42,27 +52,103 @@ impl Default for MicroBatchPolicy {
     }
 }
 
-/// What a request wants back.
-#[derive(Clone, Copy)]
-enum Want {
-    Mean,
-    MeanVar,
-    MeanMulti,
-    MeanVarMulti,
+/// One per-[`QueryKind`] sub-batch: the rows that joined this window for
+/// that kind, the batched response, and the pass error if the kind failed.
+#[derive(Default)]
+struct QueryLane {
+    xb: Mat,
+    resp: PredictResponse,
+    err: Option<Error>,
 }
 
-/// Reply payload: scalar replies stay allocation-free on the send side;
-/// multi-output replies carry the request's D-column mean row.
-enum ReplyBody {
-    Scalar(f64, Option<f64>),
-    Multi(Vec<f64>, Option<f64>),
+/// The shared batch-execution core: four [`QueryLane`]s (one per
+/// [`QueryKind`]) over one warm [`RouterPredictWork`].
+///
+/// Both front-ends drive it the same way — `reset`, `push_rows` per
+/// request (remembering the returned start row), `execute`, then slice
+/// each caller's answer back out of its kind's lane. A kind's query runs
+/// over ONLY that kind's rows; a failing kind poisons its own lane and no
+/// other. `pub(crate)` so the network reactor batches socket requests
+/// through the exact same code the in-process server uses.
+#[derive(Default)]
+pub(crate) struct QueryLanes {
+    lanes: [QueryLane; 4],
+    work: RouterPredictWork,
+    dim: usize,
 }
 
-type Reply = Result<ReplyBody>;
+impl QueryLanes {
+    /// Lanes for `dim`-column query rows.
+    pub fn new(dim: usize) -> Self {
+        Self { dim, ..Self::default() }
+    }
+
+    /// Clear every lane for a new window (buffers stay warm).
+    pub fn reset(&mut self) {
+        for lane in &mut self.lanes {
+            lane.xb.resize_scratch(0, self.dim);
+            lane.err = None;
+        }
+    }
+
+    /// Append `x`'s rows to `want`'s lane; returns the start row the
+    /// caller must remember to slice its reply back out. Callers validate
+    /// `x.cols() == dim` first.
+    pub fn push_rows(&mut self, want: QueryKind, x: &Mat) -> usize {
+        let lane = &mut self.lanes[want.lane()];
+        let start = lane.xb.rows();
+        lane.xb.push_rows(x).expect("caller validates request dims");
+        start
+    }
+
+    /// Total rows pending across all lanes.
+    pub fn total_rows(&self) -> usize {
+        self.lanes.iter().map(|l| l.xb.rows()).sum()
+    }
+
+    /// Run ONE batched router query per non-empty lane. Transient
+    /// failures are retried once (see [`retry_once`]); the outcome lands
+    /// in the lane for [`QueryLanes::reply_for`] / [`QueryLanes::lane_result`].
+    pub fn execute(&mut self, handle: &RouterHandle) {
+        let Self { lanes, work, .. } = self;
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if lane.xb.rows() == 0 {
+                continue;
+            }
+            let want = QueryKind::ALL[i];
+            lane.err =
+                retry_once(|| handle.query_inner(&lane.xb, want, &mut lane.resp, work));
+        }
+    }
+
+    /// Borrow a lane's batched outcome (the reactor encodes reply frames
+    /// straight from this, no per-request materialization).
+    pub fn lane_result(&self, want: QueryKind) -> std::result::Result<&PredictResponse, &Error> {
+        let lane = &self.lanes[want.lane()];
+        match &lane.err {
+            Some(e) => Err(e),
+            None => Ok(&lane.resp),
+        }
+    }
+
+    /// Materialize one caller's reply: rows `[start, start + rows)` of
+    /// `want`'s lane as an owned response (channel replies transfer
+    /// ownership to the client thread).
+    pub fn reply_for(&self, want: QueryKind, start: usize, rows: usize) -> Result<PredictResponse> {
+        match self.lane_result(want) {
+            Err(e) => Err(replicate(e)),
+            Ok(resp) => Ok(PredictResponse {
+                mean: resp.mean.block(start, start + rows, 0, resp.mean.cols()),
+                variance: resp.variance.as_ref().map(|v| v[start..start + rows].to_vec()),
+            }),
+        }
+    }
+}
+
+type Reply = Result<PredictResponse>;
 
 struct Request {
-    x: Vec<f64>,
-    want: Want,
+    req: PredictRequest,
     resp: SyncSender<Reply>,
 }
 
@@ -81,7 +167,7 @@ pub struct MicroBatchStats {
     pub batches: u64,
     /// Requests served (including per-request errors).
     pub requests: u64,
-    /// Largest batch coalesced.
+    /// Largest window coalesced, in rows.
     pub max_batch_rows: usize,
 }
 
@@ -95,57 +181,50 @@ pub struct PredictClient {
 }
 
 impl PredictClient {
-    /// Predict one observation (blocks until the batch it joined runs;
-    /// `D = 1` — errors on a multi-output deployment).
-    pub fn predict(&mut self, x: &[f64]) -> Result<f64> {
-        match self.call(x, Want::Mean)? {
-            ReplyBody::Scalar(m, _) => Ok(m),
-            ReplyBody::Multi(..) => unreachable!("Mean requests get scalar replies"),
-        }
-    }
-
-    /// Predict one observation with predictive variance (requires the
-    /// shards' KBR twins; `D = 1`).
-    pub fn predict_with_uncertainty(&mut self, x: &[f64]) -> Result<(f64, f64)> {
-        match self.call(x, Want::MeanVar)? {
-            ReplyBody::Scalar(m, v) => {
-                Ok((m, v.expect("MeanVar reply carries a variance")))
-            }
-            ReplyBody::Multi(..) => unreachable!("MeanVar requests get scalar replies"),
-        }
-    }
-
-    /// Predict all D output columns for one observation. Coalesced multi
-    /// requests are answered as ONE packed `(B, D)` round through the
-    /// router.
-    pub fn predict_multi(&mut self, x: &[f64]) -> Result<Vec<f64>> {
-        match self.call(x, Want::MeanMulti)? {
-            ReplyBody::Multi(m, _) => Ok(m),
-            ReplyBody::Scalar(..) => unreachable!("MeanMulti requests get multi replies"),
-        }
-    }
-
-    /// Predict all D output columns plus the shared predictive variance
-    /// for one observation (requires the shards' KBR twins).
-    pub fn predict_with_uncertainty_multi(&mut self, x: &[f64]) -> Result<(Vec<f64>, f64)> {
-        match self.call(x, Want::MeanVarMulti)? {
-            ReplyBody::Multi(m, v) => {
-                Ok((m, v.expect("MeanVarMulti reply carries a variance")))
-            }
-            ReplyBody::Scalar(..) => {
-                unreachable!("MeanVarMulti requests get multi replies")
-            }
-        }
-    }
-
-    fn call(&mut self, x: &[f64], want: Want) -> Reply {
-        let req = Request { x: x.to_vec(), want, resp: self.resp_tx.clone() };
+    /// Run one [`PredictRequest`] — blocks until the window it joined
+    /// executes. Multi-row requests coalesce like everything else; the
+    /// reply covers exactly this request's rows.
+    pub fn query(&mut self, req: PredictRequest) -> Result<PredictResponse> {
+        let req = Request { req, resp: self.resp_tx.clone() };
         self.tx
             .send(Msg::Req(req))
             .map_err(|_| Error::Stream("prediction server is down".into()))?;
         self.resp_rx
             .recv()
             .map_err(|_| Error::Stream("prediction server dropped the request".into()))?
+    }
+
+    /// Predict one observation (`D = 1`).
+    #[deprecated(since = "0.4.0", note = "use PredictClient::query with QueryKind::Mean")]
+    pub fn predict(&mut self, x: &[f64]) -> Result<f64> {
+        let resp = self.query(PredictRequest::single(x, QueryKind::Mean))?;
+        Ok(resp.scalar())
+    }
+
+    /// Predict one observation with predictive variance (requires the
+    /// shards' KBR twins; `D = 1`).
+    #[deprecated(since = "0.4.0", note = "use PredictClient::query with QueryKind::MeanVar")]
+    pub fn predict_with_uncertainty(&mut self, x: &[f64]) -> Result<(f64, f64)> {
+        let resp = self.query(PredictRequest::single(x, QueryKind::MeanVar))?;
+        Ok((resp.scalar(), resp.variance_at(0)))
+    }
+
+    /// Predict all D output columns for one observation.
+    #[deprecated(since = "0.4.0", note = "use PredictClient::query with QueryKind::MeanMulti")]
+    pub fn predict_multi(&mut self, x: &[f64]) -> Result<Vec<f64>> {
+        let resp = self.query(PredictRequest::single(x, QueryKind::MeanMulti))?;
+        Ok(resp.mean.row(0).to_vec())
+    }
+
+    /// Predict all D output columns plus the shared predictive variance
+    /// for one observation (requires the shards' KBR twins).
+    #[deprecated(
+        since = "0.4.0",
+        note = "use PredictClient::query with QueryKind::MeanVarMulti"
+    )]
+    pub fn predict_with_uncertainty_multi(&mut self, x: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let resp = self.query(PredictRequest::single(x, QueryKind::MeanVarMulti))?;
+        Ok((resp.mean.row(0).to_vec(), resp.variance_at(0)))
     }
 }
 
@@ -204,26 +283,6 @@ impl Drop for MicroBatchServer {
     }
 }
 
-/// The worker's reusable batch-execution buffers (warm across batches, so
-/// steady-state serving is allocation-free).
-#[derive(Default)]
-struct BatchBuffers {
-    xb: Mat,
-    work: RouterPredictWork,
-    /// Validated requests of the batch being served (capacity retained).
-    valid: Vec<Request>,
-    /// KRR point predictions (the `predict` estimator).
-    mean: Vec<f64>,
-    /// KBR posterior-fan-in means (a DIFFERENT estimator — never used to
-    /// answer a plain `predict` request).
-    kmean: Vec<f64>,
-    var: Vec<f64>,
-    /// Multi-output twins of the three buffers above, (B, D).
-    mean_mat: Mat,
-    kmean_mat: Mat,
-    var_multi: Vec<f64>,
-}
-
 fn worker_loop(
     handle: RouterHandle,
     dim: usize,
@@ -232,24 +291,32 @@ fn worker_loop(
 ) -> MicroBatchStats {
     let mut stats = MicroBatchStats::default();
     let mut batch: Vec<Request> = Vec::with_capacity(policy.max_rows);
-    let mut buf = BatchBuffers::default();
+    let mut lanes = QueryLanes::new(dim);
+    let mut valid: Vec<(Request, usize)> = Vec::with_capacity(policy.max_rows);
     let mut stopping = false;
     while !stopping {
         // block for the first request of the batch
-        match rx.recv() {
-            Ok(Msg::Req(first)) => batch.push(first),
+        let mut rows_pending = match rx.recv() {
+            Ok(Msg::Req(first)) => {
+                let rows = first.req.x.rows();
+                batch.push(first);
+                rows
+            }
             Ok(Msg::Shutdown) | Err(_) => break,
-        }
+        };
         // coalesce until the window closes, the batch fills, the server
         // signals shutdown, or every sender is gone
         let deadline = Instant::now() + policy.max_wait;
-        while batch.len() < policy.max_rows {
+        while rows_pending < policy.max_rows {
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 break;
             }
             match rx.recv_timeout(left) {
-                Ok(Msg::Req(req)) => batch.push(req),
+                Ok(Msg::Req(req)) => {
+                    rows_pending += req.req.x.rows();
+                    batch.push(req);
+                }
                 Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
                     stopping = true;
                     break;
@@ -257,109 +324,51 @@ fn worker_loop(
                 Err(RecvTimeoutError::Timeout) => break,
             }
         }
-        let rows = batch.len();
-        let served = serve_batch(&handle, dim, &mut batch, &mut buf);
+        let served = serve_batch(&handle, dim, &mut batch, &mut lanes, &mut valid);
         stats.requests += served as u64;
-        stats.max_batch_rows = stats.max_batch_rows.max(rows);
+        stats.max_batch_rows = stats.max_batch_rows.max(rows_pending);
         stats.batches += 1;
     }
     stats
 }
 
-/// Run one coalesced batch: validate rows, execute the batched predict
-/// passes, and fan replies out. Mean requests are ALWAYS answered from the
-/// KRR point-prediction path and MeanVar requests from the KBR posterior
-/// fan-in — coalescing must never change which estimator answers a
-/// request, so a mixed batch runs both passes (each still batched over the
-/// whole block). Returns the number of requests replied to (including
-/// error replies).
+/// Run one coalesced window: validate shapes, push every request's rows
+/// onto its kind's lane, execute ONE batched router query per kind
+/// present, and slice replies back out. A `Mean` request is ALWAYS
+/// answered from the KRR point path and a `MeanVar` request from the KBR
+/// posterior fan-in — per-kind lanes make crossing estimators structurally
+/// impossible. Returns the number of requests replied to (including error
+/// replies).
 fn serve_batch(
     handle: &RouterHandle,
     dim: usize,
     batch: &mut Vec<Request>,
-    buf: &mut BatchBuffers,
+    lanes: &mut QueryLanes,
+    valid: &mut Vec<(Request, usize)>,
 ) -> usize {
     let total = batch.len();
-    buf.xb.resize_scratch(0, dim);
-    buf.valid.clear();
-    for req in batch.drain(..) {
-        if req.x.len() != dim {
-            let msg = format!("request row has dim {}, expected {dim}", req.x.len());
-            let _ = req.resp.send(Err(Error::shape("microbatch", msg)));
+    lanes.reset();
+    valid.clear();
+    for r in batch.drain(..) {
+        if r.req.x.cols() != dim || r.req.x.rows() == 0 {
+            let msg = format!(
+                "request batch is {}x{}, expected (>=1, {dim})",
+                r.req.x.rows(),
+                r.req.x.cols()
+            );
+            let _ = r.resp.send(Err(Error::shape("microbatch", msg)));
             continue;
         }
-        buf.xb.push_row(&req.x).expect("dims checked");
-        buf.valid.push(req);
+        let start = lanes.push_rows(r.req.want, &r.req.x);
+        valid.push((r, start));
     }
-    if buf.valid.is_empty() {
+    if valid.is_empty() {
         return total;
     }
-    let want_mean = buf.valid.iter().any(|r| matches!(r.want, Want::Mean));
-    let want_var = buf.valid.iter().any(|r| matches!(r.want, Want::MeanVar));
-    let want_mmean = buf.valid.iter().any(|r| matches!(r.want, Want::MeanMulti));
-    let want_mvar = buf.valid.iter().any(|r| matches!(r.want, Want::MeanVarMulti));
-    // each pass carries its own error so a failure on one estimator (e.g.
-    // no KBR twin, a D=1 request against a multi-output deployment)
-    // neither blocks the others nor gets rewritten
-    let mean_err: Option<Error> = if want_mean {
-        retry_once(|| handle.predict_into(&buf.xb, &mut buf.mean, &mut buf.work))
-    } else {
-        None
-    };
-    let var_err: Option<Error> = if want_var {
-        retry_once(|| {
-            handle.predict_with_uncertainty_into(
-                &buf.xb,
-                &mut buf.kmean,
-                &mut buf.var,
-                &mut buf.work,
-            )
-        })
-    } else {
-        None
-    };
-    let mmean_err: Option<Error> = if want_mmean {
-        retry_once(|| handle.predict_multi_into(&buf.xb, &mut buf.mean_mat, &mut buf.work))
-    } else {
-        None
-    };
-    let mvar_err: Option<Error> = if want_mvar {
-        retry_once(|| {
-            handle.predict_with_uncertainty_multi_into(
-                &buf.xb,
-                &mut buf.kmean_mat,
-                &mut buf.var_multi,
-                &mut buf.work,
-            )
-        })
-    } else {
-        None
-    };
-    let (mean, kmean, var) = (&buf.mean, &buf.kmean, &buf.var);
-    let (mean_mat, kmean_mat, var_multi) = (&buf.mean_mat, &buf.kmean_mat, &buf.var_multi);
-    for (i, req) in buf.valid.drain(..).enumerate() {
-        let reply: Reply = match req.want {
-            Want::Mean => match &mean_err {
-                None => Ok(ReplyBody::Scalar(mean[i], None)),
-                Some(e) => Err(replicate(e)),
-            },
-            Want::MeanVar => match &var_err {
-                None => Ok(ReplyBody::Scalar(kmean[i], Some(var[i]))),
-                Some(e) => Err(replicate(e)),
-            },
-            Want::MeanMulti => match &mmean_err {
-                None => Ok(ReplyBody::Multi(mean_mat.row(i).to_vec(), None)),
-                Some(e) => Err(replicate(e)),
-            },
-            Want::MeanVarMulti => match &mvar_err {
-                None => Ok(ReplyBody::Multi(
-                    kmean_mat.row(i).to_vec(),
-                    Some(var_multi[i]),
-                )),
-                Some(e) => Err(replicate(e)),
-            },
-        };
-        let _ = req.resp.send(reply);
+    lanes.execute(handle);
+    for (r, start) in valid.drain(..) {
+        let reply = lanes.reply_for(r.req.want, start, r.req.x.rows());
+        let _ = r.resp.send(reply);
     }
     total
 }
@@ -370,7 +379,7 @@ fn serve_batch(
 /// snapshot is safe and often lands after a mid-read republish or heal.
 /// Permanent errors (shape, config) are returned immediately — retrying
 /// cannot change them.
-fn retry_once(mut pass: impl FnMut() -> Result<()>) -> Option<Error> {
+pub(crate) fn retry_once(mut pass: impl FnMut() -> Result<()>) -> Option<Error> {
     match pass() {
         Ok(()) => None,
         Err(e) if e.is_transient() => pass().err(),
@@ -382,7 +391,7 @@ fn retry_once(mut pass: impl FnMut() -> Result<()>) -> Option<Error> {
 /// `Clone` (its `Io` variant wraps `std::io::Error`), but preserving the
 /// variant matters to clients: a permanent `Config` problem (no KBR twin)
 /// must stay distinguishable from a transient transport failure.
-fn replicate(e: &Error) -> Error {
+pub(crate) fn replicate(e: &Error) -> Error {
     match e {
         Error::Shape { context, detail } => {
             Error::Shape { context: *context, detail: detail.clone() }
@@ -396,6 +405,14 @@ fn replicate(e: &Error) -> Error {
         Error::Runtime(m) => Error::Runtime(m.clone()),
         Error::Stream(m) => Error::Stream(m.clone()),
         Error::Io(io) => Error::Stream(format!("io error: {io}")),
+        // transient/permanent split of Persist survives replication:
+        // Io -> Stream (both transient), Corruption stays permanent
+        Error::Persist { context, detail } => match detail {
+            PersistDetail::Io(io) => {
+                Error::Stream(format!("persist io error in {context}: {io}"))
+            }
+            PersistDetail::Corruption(d) => Error::persist_corruption(context, d.clone()),
+        },
     }
 }
 
@@ -413,6 +430,18 @@ mod tests {
         ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap()
     }
 
+    fn direct(h: &RouterHandle, x: &Mat, want: QueryKind) -> PredictResponse {
+        h.query(&PredictRequest::new(x.clone(), want)).unwrap()
+    }
+
+    fn single_query(
+        client: &mut PredictClient,
+        row: &[f64],
+        want: QueryKind,
+    ) -> Result<PredictResponse> {
+        client.query(PredictRequest::single(row, want))
+    }
+
     #[test]
     fn single_requests_match_batched_read_path() {
         let r = router(false);
@@ -420,10 +449,12 @@ mod tests {
         let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
         let mut client = server.client();
         let q = synth::ecg_like(6, 5, 2);
-        let direct = h.predict(&q.x).unwrap();
+        let want = QueryKind::Mean;
+        let d = direct(&h, &q.x, want);
         for i in 0..6 {
-            let got = client.predict(q.x.row(i)).unwrap();
-            crate::testutil::assert_close(got, direct[i], 1e-9);
+            let got = single_query(&mut client, q.x.row(i), want).unwrap();
+            crate::testutil::assert_close(got.scalar(), d.mean[(i, 0)], 1e-9);
+            assert!(got.variance.is_none());
         }
         drop(client);
         let stats = server.shutdown();
@@ -437,13 +468,27 @@ mod tests {
         let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
         let mut client = server.client();
         let q = synth::ecg_like(4, 5, 3);
-        let (mu, sig) = h.predict_with_uncertainty(&q.x).unwrap();
+        let d = direct(&h, &q.x, QueryKind::MeanVar);
         for i in 0..4 {
-            let (m, v) = client.predict_with_uncertainty(q.x.row(i)).unwrap();
-            crate::testutil::assert_close(m, mu[i], 1e-9);
-            crate::testutil::assert_close(v, sig[i], 1e-9);
-            assert!(v > 0.0);
+            let got = single_query(&mut client, q.x.row(i), QueryKind::MeanVar).unwrap();
+            crate::testutil::assert_close(got.scalar(), d.mean[(i, 0)], 1e-9);
+            crate::testutil::assert_close(got.variance_at(0), d.variance_at(i), 1e-9);
+            assert!(got.variance_at(0) > 0.0);
         }
+    }
+
+    #[test]
+    fn multi_row_requests_slice_their_own_window() {
+        let r = router(false);
+        let h = r.handle();
+        let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
+        let mut client = server.client();
+        let q = synth::ecg_like(6, 5, 9);
+        let d = direct(&h, &q.x, QueryKind::Mean);
+        // one request carrying all 6 rows comes back as one (6, 1) answer
+        let got = client.query(PredictRequest::new(q.x.clone(), QueryKind::Mean)).unwrap();
+        assert_eq!(got.mean.shape(), (6, 1));
+        crate::testutil::assert_vec_close(got.mean.as_slice(), d.mean.as_slice(), 1e-12);
     }
 
     #[test]
@@ -453,8 +498,8 @@ mod tests {
         let r = router(true);
         let h = r.handle();
         let q = synth::ecg_like(2, 5, 6);
-        let direct_mean = h.predict(&q.x).unwrap();
-        let (dmu, dvar) = h.predict_with_uncertainty(&q.x).unwrap();
+        let dmean = direct(&h, &q.x, QueryKind::Mean);
+        let dvar = direct(&h, &q.x, QueryKind::MeanVar);
         // max_rows 2 + a generous window forces the two concurrent
         // requests into one batch
         let server = MicroBatchServer::spawn(
@@ -465,12 +510,14 @@ mod tests {
         let mut c1 = server.client();
         let mut c2 = server.client();
         let row0 = q.x.row(0).to_vec();
-        let t = std::thread::spawn(move || c1.predict(&row0).unwrap());
-        let (m1, v1) = c2.predict_with_uncertainty(q.x.row(1)).unwrap();
+        let t = std::thread::spawn(move || {
+            single_query(&mut c1, &row0, QueryKind::Mean).unwrap().scalar()
+        });
+        let got = single_query(&mut c2, q.x.row(1), QueryKind::MeanVar).unwrap();
         let m0 = t.join().unwrap();
-        crate::testutil::assert_close(m0, direct_mean[0], 1e-9);
-        crate::testutil::assert_close(m1, dmu[1], 1e-9);
-        crate::testutil::assert_close(v1, dvar[1], 1e-9);
+        crate::testutil::assert_close(m0, dmean.mean[(0, 0)], 1e-9);
+        crate::testutil::assert_close(got.scalar(), dvar.mean[(1, 0)], 1e-9);
+        crate::testutil::assert_close(got.variance_at(0), dvar.variance_at(1), 1e-9);
     }
 
     #[test]
@@ -478,15 +525,16 @@ mod tests {
         let r = router(false);
         let server = MicroBatchServer::spawn(r.handle(), 5, MicroBatchPolicy::default());
         let mut client = server.client();
-        assert!(client.predict(&[1.0, 2.0]).is_err(), "wrong dim");
+        let e = single_query(&mut client, &[1.0, 2.0], QueryKind::Mean).unwrap_err();
+        assert!(matches!(e, Error::Shape { .. }), "wrong dim: {e:?}");
         // mean requests still work after an error reply
         let q = synth::ecg_like(1, 5, 4);
-        assert!(client.predict(q.x.row(0)).is_ok());
+        assert!(single_query(&mut client, q.x.row(0), QueryKind::Mean).is_ok());
         // no KBR twin: variance requests get the Config error (variant
         // preserved through replicate()), without killing the server
-        let err = client.predict_with_uncertainty(q.x.row(0)).unwrap_err();
+        let err = single_query(&mut client, q.x.row(0), QueryKind::MeanVar).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "got {err:?}");
-        assert!(client.predict(q.x.row(0)).is_ok());
+        assert!(single_query(&mut client, q.x.row(0), QueryKind::Mean).is_ok());
     }
 
     #[test]
@@ -495,12 +543,15 @@ mod tests {
         let server = MicroBatchServer::spawn(r.handle(), 5, MicroBatchPolicy::default());
         let mut client = server.client();
         let q = synth::ecg_like(1, 5, 7);
-        assert!(client.predict(q.x.row(0)).is_ok());
+        assert!(single_query(&mut client, q.x.row(0), QueryKind::Mean).is_ok());
         // the client still holds a live sender: shutdown must not rely on
         // channel disconnect to stop the worker
         let stats = server.shutdown();
         assert_eq!(stats.requests, 1);
-        assert!(client.predict(q.x.row(0)).is_err(), "post-shutdown calls error");
+        assert!(
+            single_query(&mut client, q.x.row(0), QueryKind::Mean).is_err(),
+            "post-shutdown calls error"
+        );
     }
 
     #[test]
@@ -513,19 +564,25 @@ mod tests {
             MicroBatchPolicy { max_rows: 16, max_wait: Duration::from_millis(20) },
         );
         let q = synth::ecg_like(24, 5, 5);
-        let direct = h.predict(&q.x).unwrap();
+        let d = direct(&h, &q.x, QueryKind::Mean);
         let mut joins = Vec::new();
         for t in 0..3 {
             let mut client = server.client();
             let rows: Vec<Vec<f64>> =
                 (0..8).map(|i| q.x.row(t * 8 + i).to_vec()).collect();
             joins.push(std::thread::spawn(move || {
-                rows.iter().map(|r| client.predict(r).unwrap()).collect::<Vec<f64>>()
+                rows.iter()
+                    .map(|r| single_query(&mut client, r, QueryKind::Mean).unwrap().scalar())
+                    .collect::<Vec<f64>>()
             }));
         }
         for (t, j) in joins.into_iter().enumerate() {
             let got = j.join().unwrap();
-            crate::testutil::assert_vec_close(&got, &direct[t * 8..(t + 1) * 8], 1e-9);
+            crate::testutil::assert_vec_close(
+                &got,
+                &d.mean.as_slice()[t * 8..(t + 1) * 8],
+                1e-9,
+            );
         }
         let stats = server.shutdown();
         assert_eq!(stats.requests, 24);
@@ -547,24 +604,39 @@ mod tests {
         let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
         let mut client = server.client();
         let q = synth::ecg_like(4, 5, 8);
-        let direct = h.predict_multi(&q.x).unwrap();
-        let mut work = RouterPredictWork::default();
-        let mut kmean = Mat::default();
-        let mut var = Vec::new();
-        h.predict_with_uncertainty_multi_into(&q.x, &mut kmean, &mut var, &mut work).unwrap();
+        let dm = direct(&h, &q.x, QueryKind::MeanMulti);
+        let dmv = direct(&h, &q.x, QueryKind::MeanVarMulti);
         for i in 0..4 {
-            let got = client.predict_multi(q.x.row(i)).unwrap();
-            assert_eq!(got.len(), 2);
-            crate::testutil::assert_vec_close(&got, direct.row(i), 1e-9);
-            let (m, v) = client.predict_with_uncertainty_multi(q.x.row(i)).unwrap();
-            crate::testutil::assert_vec_close(&m, kmean.row(i), 1e-9);
-            crate::testutil::assert_close(v, var[i], 1e-9);
+            let got = single_query(&mut client, q.x.row(i), QueryKind::MeanMulti).unwrap();
+            assert_eq!(got.mean.shape(), (1, 2));
+            crate::testutil::assert_vec_close(got.mean.row(0), dm.mean.row(i), 1e-9);
+            let gv = single_query(&mut client, q.x.row(i), QueryKind::MeanVarMulti).unwrap();
+            crate::testutil::assert_vec_close(gv.mean.row(0), dmv.mean.row(i), 1e-9);
+            crate::testutil::assert_close(gv.variance_at(0), dmv.variance_at(i), 1e-9);
         }
-        // scalar requests against a D=2 deployment error cleanly (D=1 shim
+        // scalar requests against a D=2 deployment error cleanly (D=1
         // guard propagates through the coalesced batch) without killing
         // concurrent multi traffic
-        let err = client.predict(q.x.row(0)).unwrap_err();
+        let err = single_query(&mut client, q.x.row(0), QueryKind::Mean).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "got {err:?}");
-        assert!(client.predict_multi(q.x.row(0)).is_ok());
+        assert!(single_query(&mut client, q.x.row(0), QueryKind::MeanMulti).is_ok());
+    }
+
+    /// The deprecated per-flavor client methods are views of `query`.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_client_shims_still_serve() {
+        let r = router(true);
+        let h = r.handle();
+        let server = MicroBatchServer::spawn(h.clone(), 5, MicroBatchPolicy::default());
+        let mut client = server.client();
+        let q = synth::ecg_like(2, 5, 11);
+        let dmean = direct(&h, &q.x, QueryKind::Mean);
+        let dvar = direct(&h, &q.x, QueryKind::MeanVar);
+        let m = client.predict(q.x.row(0)).unwrap();
+        crate::testutil::assert_close(m, dmean.mean[(0, 0)], 1e-9);
+        let (mu, v) = client.predict_with_uncertainty(q.x.row(1)).unwrap();
+        crate::testutil::assert_close(mu, dvar.mean[(1, 0)], 1e-9);
+        crate::testutil::assert_close(v, dvar.variance_at(1), 1e-9);
     }
 }

@@ -91,6 +91,64 @@
 //!   `apply_update*`) are rejected: they would mutate an engine with no
 //!   WAL record, silently widening the crash window.
 //!
+//! # The query API
+//!
+//! All reads — in-process and network — are one request/response pair:
+//! [`PredictRequest`] `{ x: Mat, want: QueryKind }` in,
+//! [`PredictResponse`] `{ mean: Mat, variance: Option<Vec<f64>> }` out,
+//! through a single `query` entry point per layer
+//! ([`SnapshotHandle::query`], [`RouterHandle::query`],
+//! [`PredictClient::query`]). [`QueryKind`] selects the estimator surface
+//! (`Mean`/`MeanMulti` = KRR point path, `MeanVar`/`MeanVarMulti` = KBR
+//! posterior with precision-weighted fan-in); the legacy
+//! `predict*`/`predict*_into` explosion survives as deprecated shims over
+//! the same path. Both types carry `encode_into`/`decode_from`
+//! ([`serve::query`](query)) so the network frame is the canonical
+//! serialization of the exact structs the in-process API uses.
+//!
+//! # Network serving and admission control
+//!
+//! [`crate::net`] puts this layer behind a socket: a dependency-free
+//! epoll reactor accepts nonblocking connections and speaks a
+//! length-prefixed, CRC-framed protocol built on the [`crate::persist`]
+//! codec section format.
+//!
+//! **Frame grammar.** Every frame is one persist-codec section:
+//! `[tag u32][len u64][payload][crc32 u32]`, little-endian, CRC over
+//! tag‖len‖payload. Tags (ASCII-mnemonic u32s): `MKPR` predict request
+//! (`[id u64][PredictRequest]`), `MKUP` update
+//! (`[id u64][StreamEvent]`), `MKRS` predict response
+//! (`[id u64][PredictResponse]`), `MKAK` update ack (`[id u64]`),
+//! `MKRA` retry-after (`[id u64][retry_ms u32]`), `MKER` error
+//! (`[id u64][transient u8][len u32][utf8 msg]`). The `id` is an opaque
+//! client-chosen correlation token echoed back verbatim; responses may
+//! arrive out of order relative to other connections' traffic but are
+//! in-order per connection. A frame that fails CRC or framing, or whose
+//! declared length exceeds `max_frame_len`, is answered with a permanent
+//! `MKER` and the connection is closed — a torn frame means the byte
+//! stream is unrecoverable.
+//!
+//! **Batching.** Predict frames from all connections coalesce into the
+//! same per-[`QueryKind`] micro-batch window the in-process server uses
+//! ([`microbatch::QueryLanes`]): B concurrent network reads become one
+//! packed GEMM per kind. Update frames decode to
+//! [`crate::streaming::StreamEvent`] and feed the [`ShardRouter`] ingest
+//! path through a bounded queue.
+//!
+//! **Shed semantics / retry-after contract.** Admission control is
+//! load-shedding, never unbounded queueing: each connection has an
+//! inflight cap, the reactor has a global pending-rows budget, and the
+//! update queue is bounded. An over-budget frame is answered *immediately*
+//! with `MKRA` carrying a client hint of `retry_after_ms` milliseconds;
+//! nothing about it is queued, so pending memory is bounded by
+//! `pending_budget` + per-connection buffers regardless of offered load.
+//! A shed is not an error: the request was never admitted, state did not
+//! change, and the client should back off `retry_ms` (plus jitter) and
+//! resend the identical frame. Sheds are counted (`shed_predict` /
+//! `shed_update` in [`crate::metrics::Counters`]) so the loopback tests
+//! can assert shed ≡ excess exactly; a slow reader whose write buffer
+//! exceeds its cap is closed rather than buffered indefinitely.
+//!
 //! Chaos coverage: the `chaos` cargo feature compiles in seeded fault
 //! hooks ([`crate::health::fault::FaultPlan`]) and
 //! `rust/tests/chaos_suite.rs` drives NaN rows, poison batches, forced
@@ -104,16 +162,18 @@
 
 pub mod microbatch;
 pub mod publish;
+pub mod query;
 pub mod router;
 pub mod shard;
 pub mod supervisor;
 
 pub use microbatch::{MicroBatchPolicy, MicroBatchServer, MicroBatchStats, PredictClient};
 pub use publish::{Epoch, HealthCell, ShardStatus};
+pub use query::{PredictRequest, PredictResponse, QueryKind};
 pub use router::{
     Placement, RoundReport, RouterHandle, RouterPredictWork, ServeConfig, ShardRouter,
 };
-pub use shard::{Shard, SnapshotHandle};
+pub use shard::{Shard, SnapshotHandle, SnapshotQueryWork};
 pub use supervisor::{
     QuarantinedBatch, RetryPolicy, ShardSupervisor, SupervisorConfig,
 };

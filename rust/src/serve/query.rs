@@ -1,0 +1,409 @@
+//! The unified serving query surface: one request/response pair for every
+//! predict flavor the serve layer used to spell out by hand.
+//!
+//! Before this module the shard/router/micro-batch layers each carried the
+//! `{predict, predict_multi, predict_with_uncertainty,
+//! predict_with_uncertainty_multi} × {owned, _into}` explosion — 17 public
+//! methods whose bodies differed only in which engine kernel they called and
+//! how the DC-KRR fan-in accumulated. [`PredictRequest`] collapses the
+//! *what* into a [`QueryKind`] and leaves the *how* to one `query` entry
+//! point per layer; the legacy names survive as thin deprecated shims.
+//!
+//! The same two types are the canonical wire payloads of the network
+//! serving front-end ([`crate::net`]): [`PredictRequest::encode_into`] /
+//! [`PredictRequest::decode_from`] mirror
+//! [`crate::streaming::StreamEvent::encode_into`] — little-endian, f64s as
+//! IEEE-754 bit patterns (bit-exact round trips), every decode
+//! bounds-checked against hostile lengths so a flipped or forged header can
+//! reject but never panic or drive an unbounded allocation.
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::persist::codec::{put_u32, put_u8, Cursor};
+
+/// Which estimator a query wants, and the shape of its answer.
+///
+/// The serving tier maintains two estimators per shard (the KRR point
+/// predictor and, when configured, its KBR Bayesian twin) over a `(N, D)`
+/// target matrix. The four kinds are the cross product of
+/// {point, posterior} × {`D = 1` scalar surface, multi-output}:
+///
+/// | kind            | engine path            | `mean` shape | `variance`     |
+/// |-----------------|------------------------|--------------|----------------|
+/// | `Mean`          | KRR point, `D = 1`     | `(B, 1)`     | `None`         |
+/// | `MeanMulti`     | KRR point, any `D`     | `(B, D)`     | `None`         |
+/// | `MeanVar`       | KBR posterior, `D = 1` | `(B, 1)`     | `Some(len B)`  |
+/// | `MeanVarMulti`  | KBR posterior, any `D` | `(B, D)`     | `Some(len B)`  |
+///
+/// The `D = 1` kinds are not redundant with the multi kinds: they run the
+/// engines' GEMV surface while the multi kinds run the packed `(B, D)` GEMM,
+/// and the serving tier's parity tests pin each path bitwise. Mixing them in
+/// one micro-batch window is safe — execution always dispatches per-kind
+/// sub-batches (see [`crate::serve::MicroBatchServer`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueryKind {
+    /// KRR point prediction, `D = 1` scalar surface.
+    Mean,
+    /// KRR point prediction, multi-output `(B, D)`.
+    MeanMulti,
+    /// KBR posterior mean + variance, `D = 1` scalar surface.
+    MeanVar,
+    /// KBR posterior `(B, D)` means + ONE shared variance per row.
+    MeanVarMulti,
+}
+
+impl QueryKind {
+    /// All kinds, in wire-tag order (also the micro-batch lane order).
+    pub const ALL: [QueryKind; 4] =
+        [QueryKind::Mean, QueryKind::MeanMulti, QueryKind::MeanVar, QueryKind::MeanVarMulti];
+
+    /// True for the KBR posterior kinds (the response carries a variance).
+    pub fn wants_variance(self) -> bool {
+        matches!(self, QueryKind::MeanVar | QueryKind::MeanVarMulti)
+    }
+
+    /// True for the multi-output kinds (the `D = 1` guard is skipped).
+    pub fn is_multi(self) -> bool {
+        matches!(self, QueryKind::MeanMulti | QueryKind::MeanVarMulti)
+    }
+
+    /// Wire tag (`u8`) — also the lane index used by the batch executor.
+    pub fn wire(self) -> u8 {
+        match self {
+            QueryKind::Mean => 0,
+            QueryKind::MeanMulti => 1,
+            QueryKind::MeanVar => 2,
+            QueryKind::MeanVarMulti => 3,
+        }
+    }
+
+    /// Inverse of [`QueryKind::wire`]; a hostile tag is corruption.
+    pub fn from_wire(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(QueryKind::Mean),
+            1 => Ok(QueryKind::MeanMulti),
+            2 => Ok(QueryKind::MeanVar),
+            3 => Ok(QueryKind::MeanVarMulti),
+            other => Err(Error::persist_corruption(
+                "QueryKind::from_wire",
+                format!("unknown query kind tag {other}"),
+            )),
+        }
+    }
+
+    /// Lane index for per-kind sub-batch bookkeeping.
+    pub(crate) fn lane(self) -> usize {
+        self.wire() as usize
+    }
+}
+
+/// One serving query: a `(B, dim)` batch of query rows plus the
+/// [`QueryKind`] selecting estimator and output shape.
+///
+/// `B = 1` is the common single-row case; multi-row requests ride the same
+/// path and coalesce into the same packed GEMM window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictRequest {
+    /// Query points, one per row.
+    pub x: Mat,
+    /// Which estimator to run and what shape to answer with.
+    pub want: QueryKind,
+}
+
+impl PredictRequest {
+    /// Request over a `(B, dim)` batch.
+    pub fn new(x: Mat, want: QueryKind) -> Self {
+        Self { x, want }
+    }
+
+    /// Single-row convenience: wraps `row` as a `(1, dim)` batch.
+    pub fn single(row: &[f64], want: QueryKind) -> Self {
+        let mut x = Mat::zeros(1, row.len());
+        x.as_mut_slice().copy_from_slice(row);
+        Self { x, want }
+    }
+
+    /// Append the wire encoding:
+    ///
+    /// ```text
+    /// [want: u8][rows: u32][cols: u32][x: rows*cols f64 bit patterns]
+    /// ```
+    ///
+    /// Little-endian throughout; f64s round-trip bit-exact.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        put_u8(out, self.want.wire());
+        put_u32(out, self.x.rows() as u32);
+        put_u32(out, self.x.cols() as u32);
+        out.reserve(self.x.as_slice().len() * 8);
+        for &v in self.x.as_slice() {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Decode one request from `cur`, bounds-checking every read.
+    ///
+    /// Hostile `rows`/`cols` values are rejected against the bytes actually
+    /// present before any allocation happens, so a forged header cannot
+    /// drive an out-of-memory — the same standard as
+    /// [`crate::persist::codec`]'s section reader.
+    pub fn decode_from(cur: &mut Cursor<'_>) -> Result<Self> {
+        const CTX: &str = "PredictRequest::decode_from";
+        let want = QueryKind::from_wire(cur.take_u8()?)?;
+        let rows = cur.take_u32()? as usize;
+        let cols = cur.take_u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or_else(|| {
+            Error::persist_corruption(CTX, format!("{rows}x{cols} overflows"))
+        })?;
+        if n.saturating_mul(8) > cur.remaining() {
+            return Err(Error::persist_corruption(
+                CTX,
+                format!("{rows}x{cols} needs {n} f64s but only {} bytes remain", cur.remaining()),
+            ));
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(cur.take_f64()?);
+        }
+        let x = Mat::from_vec(rows, cols, data)
+            .map_err(|e| Error::persist_corruption(CTX, format!("bad shape: {e}")))?;
+        Ok(Self { x, want })
+    }
+}
+
+/// The answer to a [`PredictRequest`].
+///
+/// `mean` is `(B, D)` (`D = 1` for the scalar kinds); `variance` is present
+/// exactly for the [`QueryKind::wants_variance`] kinds, one posterior
+/// variance per query row (multi-output shards share ONE variance across
+/// the `D` targets — see the engine docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PredictResponse {
+    /// Predicted means, one row per query row.
+    pub mean: Mat,
+    /// Posterior variances (`len == mean.rows()`), KBR kinds only.
+    pub variance: Option<Vec<f64>>,
+}
+
+impl PredictResponse {
+    /// The single scalar answer of a 1-row `D = 1` response.
+    pub fn scalar(&self) -> f64 {
+        self.mean[(0, 0)]
+    }
+
+    /// The variance of query row `r` (panics if this response has none).
+    pub fn variance_at(&self, r: usize) -> f64 {
+        self.variance.as_ref().expect("response carries no variance")[r]
+    }
+
+    /// Append the wire encoding:
+    ///
+    /// ```text
+    /// [has_var: u8][rows: u32][cols: u32]
+    /// [mean: rows*cols f64 bit patterns][variance: rows f64s if has_var]
+    /// ```
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        self.encode_rows_into(out, 0, self.mean.rows());
+    }
+
+    /// Encode the row window `[start, start + rows)` as a standalone
+    /// response — the reactor's way of slicing one client's answer out of
+    /// a batched window without materializing a sub-matrix.
+    pub fn encode_rows_into(&self, out: &mut Vec<u8>, start: usize, rows: usize) {
+        debug_assert!(start + rows <= self.mean.rows());
+        let cols = self.mean.cols();
+        put_u8(out, u8::from(self.variance.is_some()));
+        put_u32(out, rows as u32);
+        put_u32(out, cols as u32);
+        let m = &self.mean.as_slice()[start * cols..(start + rows) * cols];
+        out.reserve((m.len() + rows) * 8);
+        for &v in m {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        if let Some(var) = &self.variance {
+            for &v in &var[start..start + rows] {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode one response, bounds-checked like
+    /// [`PredictRequest::decode_from`].
+    pub fn decode_from(cur: &mut Cursor<'_>) -> Result<Self> {
+        const CTX: &str = "PredictResponse::decode_from";
+        let has_var = match cur.take_u8()? {
+            0 => false,
+            1 => true,
+            other => {
+                return Err(Error::persist_corruption(
+                    CTX,
+                    format!("bad has_var flag {other}"),
+                ))
+            }
+        };
+        let rows = cur.take_u32()? as usize;
+        let cols = cur.take_u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or_else(|| {
+            Error::persist_corruption(CTX, format!("{rows}x{cols} overflows"))
+        })?;
+        let total = n + if has_var { rows } else { 0 };
+        if total.saturating_mul(8) > cur.remaining() {
+            return Err(Error::persist_corruption(
+                CTX,
+                format!("{rows}x{cols} needs {total} f64s but only {} bytes remain", cur.remaining()),
+            ));
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(cur.take_f64()?);
+        }
+        let mean = Mat::from_vec(rows, cols, data)
+            .map_err(|e| Error::persist_corruption(CTX, format!("bad shape: {e}")))?;
+        let variance = if has_var {
+            let mut v = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                v.push(cur.take_f64()?);
+            }
+            Some(v)
+        } else {
+            None
+        };
+        Ok(Self { mean, variance })
+    }
+
+    /// Reset to an empty-but-warm state, parking any variance buffer in
+    /// `spare` so alternating variance/no-variance queries stay
+    /// allocation-free.
+    pub(crate) fn clear_into_spare(&mut self, spare: &mut Vec<f64>) {
+        if let Some(mut v) = self.variance.take() {
+            if v.capacity() > spare.capacity() {
+                v.clear();
+                *spare = v;
+            }
+        }
+    }
+
+    /// Take (or revive from `spare`) the variance buffer for writing.
+    pub(crate) fn take_variance_buf(&mut self, spare: &mut Vec<f64>) -> Vec<f64> {
+        let mut v = self.variance.take().unwrap_or_else(|| std::mem::take(spare));
+        v.clear();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_req(want: QueryKind) -> PredictRequest {
+        let x = Mat::from_fn(3, 4, |r, c| (r * 4 + c) as f64 * 0.25 - 1.0);
+        PredictRequest::new(x, want)
+    }
+
+    #[test]
+    fn kind_wire_round_trips() {
+        for k in QueryKind::ALL {
+            assert_eq!(QueryKind::from_wire(k.wire()).unwrap(), k);
+            assert_eq!(k.lane(), k.wire() as usize);
+        }
+        assert!(QueryKind::from_wire(4).is_err());
+        assert!(QueryKind::MeanVar.wants_variance() && !QueryKind::MeanVar.is_multi());
+        assert!(QueryKind::MeanVarMulti.wants_variance() && QueryKind::MeanVarMulti.is_multi());
+        assert!(!QueryKind::Mean.wants_variance());
+        assert!(QueryKind::MeanMulti.is_multi());
+    }
+
+    #[test]
+    fn request_round_trips_bit_exact() {
+        for k in QueryKind::ALL {
+            let mut req = sample_req(k);
+            // NaN payloads and signed zeros must survive
+            req.x[(0, 0)] = f64::from_bits(0x7FF8_0000_0000_1234);
+            req.x[(1, 1)] = -0.0;
+            let mut buf = Vec::new();
+            req.encode_into(&mut buf);
+            let mut cur = Cursor::new(&buf, "test");
+            let back = PredictRequest::decode_from(&mut cur).unwrap();
+            assert!(cur.is_empty());
+            assert_eq!(back.want, k);
+            assert_eq!(back.x.shape(), req.x.shape());
+            for (a, b) in back.x.as_slice().iter().zip(req.x.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn response_round_trips_and_row_slicing_matches() {
+        let mean = Mat::from_fn(4, 2, |r, c| (r as f64) * 10.0 + c as f64);
+        let resp =
+            PredictResponse { mean, variance: Some(vec![0.1, 0.2, 0.3, 0.4]) };
+        let mut buf = Vec::new();
+        resp.encode_into(&mut buf);
+        let mut cur = Cursor::new(&buf, "test");
+        let back = PredictResponse::decode_from(&mut cur).unwrap();
+        assert!(cur.is_empty());
+        assert_eq!(back, resp);
+
+        // a row-window encoding decodes to exactly that sub-response
+        let mut win = Vec::new();
+        resp.encode_rows_into(&mut win, 1, 2);
+        let mut cur = Cursor::new(&win, "test");
+        let sub = PredictResponse::decode_from(&mut cur).unwrap();
+        assert_eq!(sub.mean, resp.mean.block(1, 3, 0, 2));
+        assert_eq!(sub.variance.unwrap(), vec![0.2, 0.3]);
+
+        // no-variance responses omit the tail
+        let novar = PredictResponse { mean: Mat::zeros(2, 1), variance: None };
+        let mut buf2 = Vec::new();
+        novar.encode_into(&mut buf2);
+        let mut cur = Cursor::new(&buf2, "test");
+        assert_eq!(PredictResponse::decode_from(&mut cur).unwrap(), novar);
+    }
+
+    #[test]
+    fn request_rejects_truncation_and_bit_flips() {
+        let req = sample_req(QueryKind::MeanVarMulti);
+        let mut buf = Vec::new();
+        req.encode_into(&mut buf);
+        for cut in 0..buf.len() {
+            let mut cur = Cursor::new(&buf[..cut], "test");
+            let r = PredictRequest::decode_from(&mut cur);
+            // every strict prefix must fail or decode fewer bytes than sent
+            if let Ok(back) = r {
+                assert!(back.x.as_slice().len() < req.x.as_slice().len());
+            }
+        }
+        // header flips either fail or change the decoded value — never panic
+        for i in 0..9.min(buf.len()) {
+            let mut bad = buf.clone();
+            bad[i] ^= 0xFF;
+            let mut cur = Cursor::new(&bad, "test");
+            let _ = PredictRequest::decode_from(&mut cur);
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_reject_before_allocating() {
+        // rows*cols chosen to overflow or vastly exceed the buffer
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 0);
+        put_u32(&mut buf, u32::MAX);
+        put_u32(&mut buf, u32::MAX);
+        let mut cur = Cursor::new(&buf, "test");
+        let e = PredictRequest::decode_from(&mut cur).unwrap_err();
+        assert!(!e.is_transient(), "hostile header is corruption, not retryable");
+
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 1); // has_var
+        put_u32(&mut buf, 1_000_000);
+        put_u32(&mut buf, 1_000_000);
+        let mut cur = Cursor::new(&buf, "test");
+        assert!(PredictResponse::decode_from(&mut cur).is_err());
+
+        // bad has_var flag and bad kind tag are corruption too
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        let mut cur = Cursor::new(&buf, "test");
+        assert!(PredictResponse::decode_from(&mut cur).is_err());
+    }
+}

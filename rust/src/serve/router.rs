@@ -13,13 +13,14 @@
 //!
 //! # Read path
 //!
-//! [`RouterHandle::predict`] averages the K shard predictions — the
-//! divide-and-conquer KRR estimator (You et al., *Accurate, Fast and
+//! All reads go through ONE entry point, [`RouterHandle::query`], keyed by
+//! [`super::QueryKind`]. The point kinds average the K shard predictions —
+//! the divide-and-conquer KRR estimator (You et al., *Accurate, Fast and
 //! Scalable Kernel Ridge Regression on Parallel and Distributed Systems*):
 //! with data split uniformly at random, each shard is an unbiased
 //! estimator of the same regression function and the average concentrates
-//! around the full-data solution. For the KBR twin,
-//! [`RouterHandle::predict_with_uncertainty`] fuses shard posteriors by
+//! around the full-data solution. The KBR kinds
+//! fuse shard posteriors by
 //! **precision weighting**: μ = Σₖ λₖ μₖ / Σₖ λₖ with λₖ = 1/σₖ², the
 //! minimum-variance unbiased combination of independent shard estimates,
 //! and σ̄² = K / Σₖ λₖ — the precision-weighted harmonic mean of shard
@@ -55,6 +56,7 @@ use crate::streaming::sink::SinkNode;
 use crate::streaming::StreamEvent;
 
 use super::publish::ShardStatus;
+use super::query::{PredictRequest, PredictResponse, QueryKind};
 use super::shard::{Shard, SnapshotHandle};
 
 /// How arrivals are placed onto shards.
@@ -167,9 +169,10 @@ pub struct RouterPredictWork {
     /// Multi-output shard scratch and accumulators, (B, D).
     shard_mat: Mat,
     acc_mat: Mat,
-    /// Fused mean/var staging for the interval read path.
-    fused_mean: Vec<f64>,
-    fused_var: Vec<f64>,
+    /// Parked variance buffer so alternating query kinds stay warm.
+    spare_var: Vec<f64>,
+    /// Response staging for the deprecated `*_into` shims.
+    resp: PredictResponse,
 }
 
 /// Cloneable read front-end over all shards' published epochs.
@@ -245,100 +248,236 @@ impl RouterHandle {
         self.shards.iter().map(|s| s.n_samples()).sum()
     }
 
-    /// DC-KRR averaged prediction across shards.
-    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
-        let mut out = Vec::new();
-        self.predict_into(x, &mut out, &mut RouterPredictWork::default())?;
-        Ok(out)
+    /// Run one [`PredictRequest`] across the shard fleet, allocating a
+    /// fresh response. Serving loops should prefer
+    /// [`RouterHandle::query_into`] with warm buffers.
+    pub fn query(&self, req: &PredictRequest) -> Result<PredictResponse> {
+        let mut resp = PredictResponse::default();
+        self.query_inner(&req.x, req.want, &mut resp, &mut RouterPredictWork::default())?;
+        Ok(resp)
     }
 
-    /// [`RouterHandle::predict`] through a warm workspace: each shard
-    /// serves the whole micro-batch as one batched predict (BLAS-3 above
-    /// the dispatch crossover), and a warm round allocates nothing.
+    /// Run one [`PredictRequest`] through caller-owned buffers — THE fan-in
+    /// entry point: every legacy `predict*` shim, the micro-batch window,
+    /// and the network reactor all funnel through here. Allocation-free
+    /// once `resp`/`work` are warm.
+    pub fn query_into(
+        &self,
+        req: &PredictRequest,
+        resp: &mut PredictResponse,
+        work: &mut RouterPredictWork,
+    ) -> Result<()> {
+        self.query_inner(&req.x, req.want, resp, work)
+    }
+
+    /// Shared body of the query surface (borrows `x` so the deprecated
+    /// shims avoid copying the batch into a request).
+    ///
+    /// ONE loop visits every serving shard; each [`QueryKind`] dispatches
+    /// to the same engine kernel and accumulation rule the legacy fan-ins
+    /// used (DC-KRR average for the point kinds, precision weighting for
+    /// the KBR kinds), so answers are bitwise-unchanged by the redesign.
+    /// Quarantine-skip, fail-open, and the `used.max(1)` renormalization
+    /// are applied once, identically for every kind.
+    pub(crate) fn query_inner(
+        &self,
+        x: &Mat,
+        want: QueryKind,
+        resp: &mut PredictResponse,
+        work: &mut RouterPredictWork,
+    ) -> Result<()> {
+        let b = x.rows();
+        match want {
+            QueryKind::Mean => {
+                resp.mean.resize_scratch(b, 1);
+                resp.mean.as_mut_slice().fill(0.0);
+            }
+            QueryKind::MeanMulti => {}
+            QueryKind::MeanVar => {
+                work.acc_mean.clear();
+                work.acc_mean.resize(b, 0.0);
+                work.acc_prec.clear();
+                work.acc_prec.resize(b, 0.0);
+            }
+            QueryKind::MeanVarMulti => {
+                work.acc_prec.clear();
+                work.acc_prec.resize(b, 0.0);
+            }
+        }
+        let fail_open = self.fail_open();
+        let mut used = 0usize;
+        for h in &self.shards {
+            if !fail_open && !h.serving() {
+                continue;
+            }
+            let snap = h.snapshot();
+            match want {
+                QueryKind::Mean => {
+                    snap.predict_into(x, &mut work.shard_out, &mut work.engine)?;
+                    let acc = resp.mean.as_mut_slice().iter_mut();
+                    for (o, s) in acc.zip(&work.shard_out) {
+                        *o += s;
+                    }
+                }
+                QueryKind::MeanMulti => {
+                    snap.predict_multi_into(x, &mut work.shard_mat, &mut work.engine)?;
+                    if used == 0 {
+                        resp.mean.resize_scratch(work.shard_mat.rows(), work.shard_mat.cols());
+                        resp.mean.as_mut_slice().copy_from_slice(work.shard_mat.as_slice());
+                    } else {
+                        let acc = resp.mean.as_mut_slice().iter_mut();
+                        for (o, s) in acc.zip(work.shard_mat.as_slice()) {
+                            *o += s;
+                        }
+                    }
+                }
+                QueryKind::MeanVar => {
+                    snap.predict_with_uncertainty_into(
+                        x,
+                        &mut work.shard_mean,
+                        &mut work.shard_var,
+                        &mut work.engine,
+                    )?;
+                    let acc = work.acc_mean.iter_mut().zip(work.acc_prec.iter_mut());
+                    for ((&m, &v), (am, ap)) in
+                        work.shard_mean.iter().zip(&work.shard_var).zip(acc)
+                    {
+                        // shard variances are >= sigma_b^2 > 0 by construction
+                        let lam = 1.0 / v;
+                        *ap += lam;
+                        *am += lam * m;
+                    }
+                }
+                QueryKind::MeanVarMulti => {
+                    snap.predict_with_uncertainty_multi_into(
+                        x,
+                        &mut work.shard_mat,
+                        &mut work.shard_var,
+                        &mut work.engine,
+                    )?;
+                    if used == 0 {
+                        work.acc_mat.resize_scratch(b, work.shard_mat.cols());
+                        work.acc_mat.as_mut_slice().fill(0.0);
+                    }
+                    for r in 0..b {
+                        // shard variances are >= sigma_b^2 > 0 by construction
+                        let lam = 1.0 / work.shard_var[r];
+                        work.acc_prec[r] += lam;
+                        for (a, &m) in
+                            work.acc_mat.row_mut(r).iter_mut().zip(work.shard_mat.row(r))
+                        {
+                            *a += lam * m;
+                        }
+                    }
+                }
+            }
+            used += 1;
+        }
+        let k = used.max(1) as f64;
+        match want {
+            QueryKind::Mean | QueryKind::MeanMulti => {
+                for o in resp.mean.as_mut_slice() {
+                    *o /= k;
+                }
+                resp.clear_into_spare(&mut work.spare_var);
+            }
+            QueryKind::MeanVar => {
+                let mut var = resp.take_variance_buf(&mut work.spare_var);
+                resp.mean.resize_scratch(b, 1);
+                let rows = resp.mean.as_mut_slice().iter_mut();
+                for ((am, ap), m) in work.acc_mean.iter().zip(&work.acc_prec).zip(rows) {
+                    *m = am / ap;
+                    var.push(k / ap);
+                }
+                resp.variance = Some(var);
+            }
+            QueryKind::MeanVarMulti => {
+                let mut var = resp.take_variance_buf(&mut work.spare_var);
+                let d = work.acc_mat.cols();
+                resp.mean.resize_scratch(b, d);
+                for (r, &ap) in work.acc_prec.iter().enumerate() {
+                    let acc = resp.mean.row_mut(r).iter_mut();
+                    for (m, &a) in acc.zip(work.acc_mat.row(r)) {
+                        *m = a / ap;
+                    }
+                    var.push(k / ap);
+                }
+                resp.variance = Some(var);
+            }
+        }
+        Ok(())
+    }
+
+    /// DC-KRR averaged prediction across shards.
+    #[deprecated(since = "0.4.0", note = "use RouterHandle::query with QueryKind::Mean")]
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
+        let mut resp = PredictResponse::default();
+        self.query_inner(x, QueryKind::Mean, &mut resp, &mut RouterPredictWork::default())?;
+        Ok(resp.mean.as_slice().to_vec())
+    }
+
+    /// [`RouterHandle::predict`] through a warm workspace.
+    #[deprecated(since = "0.4.0", note = "use RouterHandle::query_into with QueryKind::Mean")]
     pub fn predict_into(
         &self,
         x: &Mat,
         out: &mut Vec<f64>,
         work: &mut RouterPredictWork,
     ) -> Result<()> {
-        out.clear();
-        out.resize(x.rows(), 0.0);
-        let fail_open = self.fail_open();
-        let mut used = 0usize;
-        for h in &self.shards {
-            if !fail_open && !h.serving() {
-                continue;
-            }
-            let snap = h.snapshot();
-            snap.predict_into(x, &mut work.shard_out, &mut work.engine)?;
-            for (o, s) in out.iter_mut().zip(&work.shard_out) {
-                *o += s;
-            }
-            used += 1;
+        let mut resp = std::mem::take(&mut work.resp);
+        let res = self.query_inner(x, QueryKind::Mean, &mut resp, work);
+        if res.is_ok() {
+            out.clear();
+            out.extend_from_slice(resp.mean.as_slice());
         }
-        let k = used.max(1) as f64;
-        for o in out.iter_mut() {
-            *o /= k;
-        }
-        Ok(())
+        work.resp = resp;
+        res
     }
 
     /// DC-KRR averaged multi-output prediction across shards: `(B, D)`.
+    #[deprecated(since = "0.4.0", note = "use RouterHandle::query with QueryKind::MeanMulti")]
     pub fn predict_multi(&self, x: &Mat) -> Result<Mat> {
-        let mut out = Mat::default();
-        self.predict_multi_into(x, &mut out, &mut RouterPredictWork::default())?;
-        Ok(out)
+        let mut resp = PredictResponse::default();
+        self.query_inner(x, QueryKind::MeanMulti, &mut resp, &mut RouterPredictWork::default())?;
+        Ok(resp.mean)
     }
 
-    /// [`RouterHandle::predict_multi`] through a warm workspace: each
-    /// shard answers the whole micro-batch as ONE packed `(B, D)` GEMM and
-    /// the average accumulates in place. Allocation-free once warm.
+    /// [`RouterHandle::predict_multi`] through a warm workspace.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use RouterHandle::query_into with QueryKind::MeanMulti"
+    )]
     pub fn predict_multi_into(
         &self,
         x: &Mat,
         out: &mut Mat,
         work: &mut RouterPredictWork,
     ) -> Result<()> {
-        let fail_open = self.fail_open();
-        let mut used = 0usize;
-        for h in &self.shards {
-            if !fail_open && !h.serving() {
-                continue;
-            }
-            let snap = h.snapshot();
-            snap.predict_multi_into(x, &mut work.shard_mat, &mut work.engine)?;
-            if used == 0 {
-                out.resize_scratch(work.shard_mat.rows(), work.shard_mat.cols());
-                out.as_mut_slice().copy_from_slice(work.shard_mat.as_slice());
-            } else {
-                for (o, s) in out.as_mut_slice().iter_mut().zip(work.shard_mat.as_slice()) {
-                    *o += s;
-                }
-            }
-            used += 1;
+        let mut resp = std::mem::take(&mut work.resp);
+        let res = self.query_inner(x, QueryKind::MeanMulti, &mut resp, work);
+        if res.is_ok() {
+            out.resize_scratch(resp.mean.rows(), resp.mean.cols());
+            out.as_mut_slice().copy_from_slice(resp.mean.as_slice());
         }
-        let k = used.max(1) as f64;
-        for o in out.as_mut_slice() {
-            *o /= k;
-        }
-        Ok(())
+        work.resp = resp;
+        res
     }
 
     /// Precision-weighted posterior fan-in across the shards' KBR twins
     /// (see the module docs for the fusion rule).
+    #[deprecated(since = "0.4.0", note = "use RouterHandle::query with QueryKind::MeanVar")]
     pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
-        let mut mean = Vec::new();
-        let mut var = Vec::new();
-        self.predict_with_uncertainty_into(
-            x,
-            &mut mean,
-            &mut var,
-            &mut RouterPredictWork::default(),
-        )?;
-        Ok((mean, var))
+        let mut resp = PredictResponse::default();
+        self.query_inner(x, QueryKind::MeanVar, &mut resp, &mut RouterPredictWork::default())?;
+        let var = resp.variance.take().unwrap_or_default();
+        Ok((resp.mean.as_slice().to_vec(), var))
     }
 
     /// [`RouterHandle::predict_with_uncertainty`] through a warm workspace.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use RouterHandle::query_into with QueryKind::MeanVar"
+    )]
     pub fn predict_with_uncertainty_into(
         &self,
         x: &Mat,
@@ -346,63 +485,44 @@ impl RouterHandle {
         var: &mut Vec<f64>,
         work: &mut RouterPredictWork,
     ) -> Result<()> {
-        let b = x.rows();
-        work.acc_mean.clear();
-        work.acc_mean.resize(b, 0.0);
-        work.acc_prec.clear();
-        work.acc_prec.resize(b, 0.0);
-        let fail_open = self.fail_open();
-        let mut used = 0usize;
-        for h in &self.shards {
-            if !fail_open && !h.serving() {
-                continue;
-            }
-            let snap = h.snapshot();
-            snap.predict_with_uncertainty_into(
-                x,
-                &mut work.shard_mean,
-                &mut work.shard_var,
-                &mut work.engine,
-            )?;
-            let acc = work.acc_mean.iter_mut().zip(work.acc_prec.iter_mut());
-            for ((&m, &v), (am, ap)) in
-                work.shard_mean.iter().zip(&work.shard_var).zip(acc)
-            {
-                // shard variances are >= sigma_b^2 > 0 by construction
-                let lam = 1.0 / v;
-                *ap += lam;
-                *am += lam * m;
-            }
-            used += 1;
+        let mut resp = std::mem::take(&mut work.resp);
+        let res = self.query_inner(x, QueryKind::MeanVar, &mut resp, work);
+        if res.is_ok() {
+            mean.clear();
+            mean.extend_from_slice(resp.mean.as_slice());
+            var.clear();
+            var.extend_from_slice(resp.variance.as_deref().unwrap_or_default());
         }
-        let k = used.max(1) as f64;
-        mean.clear();
-        var.clear();
-        for (am, ap) in work.acc_mean.iter().zip(&work.acc_prec) {
-            mean.push(am / ap);
-            var.push(k / ap);
-        }
-        Ok(())
+        work.resp = resp;
+        res
     }
 
     /// Multi-output precision-weighted fan-in: `(B, D)` fused means and
     /// the shared per-query fused variance. The shard weights λₖ = 1/σₖ²
     /// come from the shared variance column, so all D output columns of a
     /// query row fuse with the SAME weights.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use RouterHandle::query with QueryKind::MeanVarMulti"
+    )]
     pub fn predict_with_uncertainty_multi(&self, x: &Mat) -> Result<(Mat, Vec<f64>)> {
-        let mut mean = Mat::default();
-        let mut var = Vec::new();
-        self.predict_with_uncertainty_multi_into(
+        let mut resp = PredictResponse::default();
+        self.query_inner(
             x,
-            &mut mean,
-            &mut var,
+            QueryKind::MeanVarMulti,
+            &mut resp,
             &mut RouterPredictWork::default(),
         )?;
-        Ok((mean, var))
+        let var = resp.variance.take().unwrap_or_default();
+        Ok((resp.mean, var))
     }
 
     /// [`RouterHandle::predict_with_uncertainty_multi`] through a warm
-    /// workspace. Allocation-free once warm.
+    /// workspace.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use RouterHandle::query_into with QueryKind::MeanVarMulti"
+    )]
     pub fn predict_with_uncertainty_multi_into(
         &self,
         x: &Mat,
@@ -410,72 +530,41 @@ impl RouterHandle {
         var: &mut Vec<f64>,
         work: &mut RouterPredictWork,
     ) -> Result<()> {
-        let b = x.rows();
-        work.acc_prec.clear();
-        work.acc_prec.resize(b, 0.0);
-        let fail_open = self.fail_open();
-        let mut used = 0usize;
-        for h in &self.shards {
-            if !fail_open && !h.serving() {
-                continue;
-            }
-            let snap = h.snapshot();
-            snap.predict_with_uncertainty_multi_into(
-                x,
-                &mut work.shard_mat,
-                &mut work.shard_var,
-                &mut work.engine,
-            )?;
-            if used == 0 {
-                work.acc_mat.resize_scratch(b, work.shard_mat.cols());
-                work.acc_mat.as_mut_slice().fill(0.0);
-            }
-            for r in 0..b {
-                // shard variances are >= sigma_b^2 > 0 by construction
-                let lam = 1.0 / work.shard_var[r];
-                work.acc_prec[r] += lam;
-                for (a, &m) in work
-                    .acc_mat
-                    .row_mut(r)
-                    .iter_mut()
-                    .zip(work.shard_mat.row(r))
-                {
-                    *a += lam * m;
-                }
-            }
-            used += 1;
+        let mut resp = std::mem::take(&mut work.resp);
+        let res = self.query_inner(x, QueryKind::MeanVarMulti, &mut resp, work);
+        if res.is_ok() {
+            mean.resize_scratch(resp.mean.rows(), resp.mean.cols());
+            mean.as_mut_slice().copy_from_slice(resp.mean.as_slice());
+            var.clear();
+            var.extend_from_slice(resp.variance.as_deref().unwrap_or_default());
         }
-        let k = used.max(1) as f64;
-        let d = work.acc_mat.cols();
-        mean.resize_scratch(b, d);
-        var.clear();
-        for (r, &ap) in work.acc_prec.iter().enumerate() {
-            for (m, &a) in mean.row_mut(r).iter_mut().zip(work.acc_mat.row(r)) {
-                *m = a / ap;
-            }
-            var.push(k / ap);
-        }
-        Ok(())
+        work.resp = resp;
+        res
     }
 
     /// ~95% credible intervals from the fused posterior, written into a
     /// caller-provided buffer through [`crate::kbr::interval95_from_into`]
     /// — the serve layer's allocation-free uncertainty fan-in (`D = 1`).
+    #[deprecated(
+        since = "0.4.0",
+        note = "use RouterHandle::query_into with QueryKind::MeanVar + interval95_from_into"
+    )]
     pub fn predict_interval95_into(
         &self,
         x: &Mat,
         out: &mut Vec<(f64, f64)>,
         work: &mut RouterPredictWork,
     ) -> Result<()> {
-        let mut fused_mean = std::mem::take(&mut work.fused_mean);
-        let mut fused_var = std::mem::take(&mut work.fused_var);
-        let res =
-            self.predict_with_uncertainty_into(x, &mut fused_mean, &mut fused_var, work);
+        let mut resp = std::mem::take(&mut work.resp);
+        let res = self.query_inner(x, QueryKind::MeanVar, &mut resp, work);
         if res.is_ok() {
-            crate::kbr::interval95_from_into(&fused_mean, &fused_var, out);
+            crate::kbr::interval95_from_into(
+                resp.mean.as_slice(),
+                resp.variance.as_deref().unwrap_or_default(),
+                out,
+            );
         }
-        work.fused_mean = fused_mean;
-        work.fused_var = fused_var;
+        work.resp = resp;
         res
     }
 }
@@ -867,6 +956,26 @@ mod tests {
     use super::*;
     use crate::data::synth;
 
+    fn qmean(h: &RouterHandle, x: &Mat) -> Vec<f64> {
+        let resp = h.query(&PredictRequest::new(x.clone(), QueryKind::Mean)).unwrap();
+        resp.mean.as_slice().to_vec()
+    }
+
+    fn qvar(h: &RouterHandle, x: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let resp = h.query(&PredictRequest::new(x.clone(), QueryKind::MeanVar)).unwrap();
+        (resp.mean.as_slice().to_vec(), resp.variance.unwrap())
+    }
+
+    fn snap_qmean(h: &SnapshotHandle, x: &Mat) -> Vec<f64> {
+        let resp = h.query(&PredictRequest::new(x.clone(), QueryKind::Mean)).unwrap();
+        resp.mean.as_slice().to_vec()
+    }
+
+    fn snap_qvar(h: &SnapshotHandle, x: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let resp = h.query(&PredictRequest::new(x.clone(), QueryKind::MeanVar)).unwrap();
+        (resp.mean.as_slice().to_vec(), resp.variance.unwrap())
+    }
+
     fn ev(x: Vec<f64>, y: f64, seq: u64) -> StreamEvent {
         StreamEvent::single(x, y, 0, seq)
     }
@@ -952,20 +1061,20 @@ mod tests {
             vec![ShardStatus::Healthy, ShardStatus::Quarantined]
         );
         // K−1 fan-in over one healthy shard == that shard's own answer
-        let p = h.predict(&q.x).unwrap();
-        let p0 = h.shard(0).predict(&q.x).unwrap();
+        let p = qmean(&h, &q.x);
+        let p0 = snap_qmean(h.shard(0), &q.x);
         crate::testutil::assert_vec_close(&p, &p0, 1e-12);
-        let (mu, var) = h.predict_with_uncertainty(&q.x).unwrap();
-        let (mu0, var0) = h.shard(0).predict_with_uncertainty(&q.x).unwrap();
+        let (mu, var) = qvar(&h, &q.x);
+        let (mu0, var0) = snap_qvar(h.shard(0), &q.x);
         crate::testutil::assert_vec_close(&mu, &mu0, 1e-12);
         crate::testutil::assert_vec_close(&var, &var0, 1e-12);
         // all-quarantined fails open to the full fan-in
         r.shard(0).set_status(ShardStatus::Quarantined);
         assert_eq!(h.num_serving(), 2);
-        let p_open = h.predict(&q.x).unwrap();
+        let p_open = qmean(&h, &q.x);
         r.shard(0).set_status(ShardStatus::Healthy);
         r.shard(1).set_status(ShardStatus::Healthy);
-        let p_all = h.predict(&q.x).unwrap();
+        let p_all = qmean(&h, &q.x);
         crate::testutil::assert_vec_close(&p_open, &p_all, 1e-12);
     }
 
@@ -993,7 +1102,7 @@ mod tests {
             let report = r.update_round();
             assert!(report.errors.is_empty(), "{:?}", report.errors);
         }
-        let live = r.handle().predict(&q.x).unwrap();
+        let live = qmean(&r.handle(), &q.x);
         let seqs = r.high_seqs();
         drop(r);
         let mut rec = ShardRouter::recover(dir.path()).unwrap();
@@ -1001,11 +1110,7 @@ mod tests {
         assert_eq!(rec.num_shards(), 2);
         assert_eq!(rec.high_seqs(), seqs);
         assert!(rec.shard(0).is_durable() && rec.shard(1).is_durable());
-        crate::testutil::assert_vec_close(
-            &rec.handle().predict(&q.x).unwrap(),
-            &live,
-            1e-8,
-        );
+        crate::testutil::assert_vec_close(&qmean(&rec.handle(), &q.x), &live, 1e-8);
         let dc = rec.durability_counters();
         assert!(dc.get("snapshots_written") >= 1, "{dc:?}");
         assert_eq!(dc.get("snapshot_fallbacks"), 0);
@@ -1032,14 +1137,88 @@ mod tests {
         .unwrap();
         let h = r.handle();
         crate::testutil::assert_vec_close(
-            &h.predict(&q.x).unwrap(),
+            &qmean(&h, &q.x),
             &single.predict(&q.x).unwrap(),
             1e-12,
         );
         // precision fan-in is an exact identity at K = 1
-        let (mu, var) = h.predict_with_uncertainty(&q.x).unwrap();
+        let (mu, var) = qvar(&h, &q.x);
         let (mu1, var1) = single.predict_with_uncertainty(&q.x).unwrap();
         crate::testutil::assert_vec_close(&mu, &mu1, 1e-12);
         crate::testutil::assert_vec_close(&var, &var1, 1e-12);
+    }
+
+    /// Every deprecated shim must be a bit-identical view of the unified
+    /// query path — the contract that lets callers migrate incrementally.
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shims_match_query_bitwise() {
+        let d = synth::ecg_like(48, 5, 13);
+        let q = synth::ecg_like(6, 5, 14);
+        let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+        cfg.base.with_uncertainty = true;
+        let r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+        let h = r.handle();
+        let mut work = RouterPredictWork::default();
+
+        let mean = h.query(&PredictRequest::new(q.x.clone(), QueryKind::Mean)).unwrap();
+        assert_eq!(h.predict(&q.x).unwrap(), mean.mean.as_slice());
+        let mut out = Vec::new();
+        h.predict_into(&q.x, &mut out, &mut work).unwrap();
+        assert_eq!(out, mean.mean.as_slice());
+
+        let multi = h.query(&PredictRequest::new(q.x.clone(), QueryKind::MeanMulti)).unwrap();
+        assert_eq!(h.predict_multi(&q.x).unwrap(), multi.mean);
+        let mut outm = Mat::default();
+        h.predict_multi_into(&q.x, &mut outm, &mut work).unwrap();
+        assert_eq!(outm, multi.mean);
+
+        let mv = h.query(&PredictRequest::new(q.x.clone(), QueryKind::MeanVar)).unwrap();
+        let (mu, var) = h.predict_with_uncertainty(&q.x).unwrap();
+        assert_eq!(mu, mv.mean.as_slice());
+        assert_eq!(Some(&var), mv.variance.as_ref());
+        let (mut mu2, mut var2) = (Vec::new(), Vec::new());
+        h.predict_with_uncertainty_into(&q.x, &mut mu2, &mut var2, &mut work).unwrap();
+        assert_eq!(mu2, mv.mean.as_slice());
+        assert_eq!(Some(&var2), mv.variance.as_ref());
+
+        let mvm =
+            h.query(&PredictRequest::new(q.x.clone(), QueryKind::MeanVarMulti)).unwrap();
+        let (mum, varm) = h.predict_with_uncertainty_multi(&q.x).unwrap();
+        assert_eq!(mum, mvm.mean);
+        assert_eq!(Some(&varm), mvm.variance.as_ref());
+        let (mut mum2, mut varm2) = (Mat::default(), Vec::new());
+        h.predict_with_uncertainty_multi_into(&q.x, &mut mum2, &mut varm2, &mut work)
+            .unwrap();
+        assert_eq!(mum2, mvm.mean);
+        assert_eq!(Some(&varm2), mvm.variance.as_ref());
+
+        // interval shim = query(MeanVar) + the interval transform
+        let mut iv = Vec::new();
+        h.predict_interval95_into(&q.x, &mut iv, &mut work).unwrap();
+        let mut iv2 = Vec::new();
+        crate::kbr::interval95_from_into(
+            mv.mean.as_slice(),
+            mv.variance.as_deref().unwrap(),
+            &mut iv2,
+        );
+        assert_eq!(iv, iv2);
+
+        // snapshot-level shims against SnapshotHandle::query
+        let s = h.shard(0);
+        let smean = s.query(&PredictRequest::new(q.x.clone(), QueryKind::Mean)).unwrap();
+        assert_eq!(s.predict(&q.x).unwrap(), smean.mean.as_slice());
+        let smulti =
+            s.query(&PredictRequest::new(q.x.clone(), QueryKind::MeanMulti)).unwrap();
+        assert_eq!(s.predict_multi(&q.x).unwrap(), smulti.mean);
+        let smv = s.query(&PredictRequest::new(q.x.clone(), QueryKind::MeanVar)).unwrap();
+        let (smu, svar) = s.predict_with_uncertainty(&q.x).unwrap();
+        assert_eq!(smu, smv.mean.as_slice());
+        assert_eq!(Some(&svar), smv.variance.as_ref());
+        let smvm =
+            s.query(&PredictRequest::new(q.x.clone(), QueryKind::MeanVarMulti)).unwrap();
+        let (smum, svarm) = s.predict_with_uncertainty_multi(&q.x).unwrap();
+        assert_eq!(smum, smvm.mean);
+        assert_eq!(Some(&svarm), smvm.variance.as_ref());
     }
 }

@@ -10,7 +10,7 @@
 //! *freshness* by one epoch (see [`super::publish`] for the contrast with
 //! the coordinator's `RwLock` read path).
 
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, EnginePredictWork};
 use crate::coordinator::{CoordinatorConfig, RoundOutcome};
 use crate::ensure_shape;
 use crate::error::Result;
@@ -23,6 +23,18 @@ use crate::streaming::StreamEvent;
 use std::sync::Arc;
 
 use super::publish::{Epoch, HealthCell, ShardStatus};
+use super::query::{PredictRequest, PredictResponse, QueryKind};
+
+/// Caller-owned workspace for [`SnapshotHandle::query_into`]: the engine
+/// scratch plus the staging buffers the `D = 1` kinds need to bridge the
+/// engines' `Vec<f64>` surface into the response's `(B, 1)` matrix.
+/// Allocation-free once warm.
+#[derive(Default)]
+pub struct SnapshotQueryWork {
+    engine: EnginePredictWork,
+    mean: Vec<f64>,
+    spare_var: Vec<f64>,
+}
 
 /// A cloneable, lock-free-for-readers handle onto one shard's published
 /// model state.
@@ -60,26 +72,113 @@ impl SnapshotHandle {
         self.cell.epoch()
     }
 
+    /// Run one [`PredictRequest`] against the last published epoch,
+    /// allocating a fresh response (serving loops should prefer
+    /// [`SnapshotHandle::query_into`] with warm buffers).
+    pub fn query(&self, req: &PredictRequest) -> Result<PredictResponse> {
+        let mut resp = PredictResponse::default();
+        let mut work = SnapshotQueryWork::default();
+        self.query_inner(&req.x, req.want, &mut resp, &mut work)?;
+        Ok(resp)
+    }
+
+    /// Run one [`PredictRequest`] through caller-owned buffers — the single
+    /// entry point every legacy `predict*` shim delegates to.
+    /// Allocation-free once `resp`/`work` are warm.
+    pub fn query_into(
+        &self,
+        req: &PredictRequest,
+        resp: &mut PredictResponse,
+        work: &mut SnapshotQueryWork,
+    ) -> Result<()> {
+        self.query_inner(&req.x, req.want, resp, work)
+    }
+
+    /// Shared body of [`SnapshotHandle::query`] / [`SnapshotHandle::query_into`]
+    /// (borrows `x` so the deprecated shims avoid copying the batch into a
+    /// request). Each kind dispatches to the same engine kernel the legacy
+    /// method used, so answers are bitwise-unchanged by the redesign.
+    pub(crate) fn query_inner(
+        &self,
+        x: &Mat,
+        want: QueryKind,
+        resp: &mut PredictResponse,
+        work: &mut SnapshotQueryWork,
+    ) -> Result<()> {
+        let snap = self.cell.load();
+        match want {
+            QueryKind::Mean => {
+                snap.predict_into(x, &mut work.mean, &mut work.engine)?;
+                resp.mean.resize_scratch(x.rows(), 1);
+                resp.mean.as_mut_slice().copy_from_slice(&work.mean);
+                resp.clear_into_spare(&mut work.spare_var);
+            }
+            QueryKind::MeanMulti => {
+                snap.predict_multi_into(x, &mut resp.mean, &mut work.engine)?;
+                resp.clear_into_spare(&mut work.spare_var);
+            }
+            QueryKind::MeanVar => {
+                let mut var = resp.take_variance_buf(&mut work.spare_var);
+                snap.predict_with_uncertainty_into(x, &mut work.mean, &mut var, &mut work.engine)?;
+                resp.mean.resize_scratch(x.rows(), 1);
+                resp.mean.as_mut_slice().copy_from_slice(&work.mean);
+                resp.variance = Some(var);
+            }
+            QueryKind::MeanVarMulti => {
+                let mut var = resp.take_variance_buf(&mut work.spare_var);
+                snap.predict_with_uncertainty_multi_into(
+                    x,
+                    &mut resp.mean,
+                    &mut var,
+                    &mut work.engine,
+                )?;
+                resp.variance = Some(var);
+            }
+        }
+        Ok(())
+    }
+
     /// Predict through the last published epoch (`D = 1`).
+    #[deprecated(since = "0.4.0", note = "use SnapshotHandle::query with QueryKind::Mean")]
     pub fn predict(&self, x: &Mat) -> Result<Vec<f64>> {
-        self.cell.load().predict(x)
+        let mut resp = PredictResponse::default();
+        let mut work = SnapshotQueryWork::default();
+        self.query_inner(x, QueryKind::Mean, &mut resp, &mut work)?;
+        Ok(resp.mean.as_slice().to_vec())
     }
 
     /// Predict all D output columns through the last published epoch.
+    #[deprecated(since = "0.4.0", note = "use SnapshotHandle::query with QueryKind::MeanMulti")]
     pub fn predict_multi(&self, x: &Mat) -> Result<Mat> {
-        self.cell.load().predict_multi(x)
+        let mut resp = PredictResponse::default();
+        let mut work = SnapshotQueryWork::default();
+        self.query_inner(x, QueryKind::MeanMulti, &mut resp, &mut work)?;
+        Ok(resp.mean)
     }
 
     /// Predictive mean + variance through the last published epoch
     /// (requires the shard's KBR twin, `D = 1`).
+    #[deprecated(since = "0.4.0", note = "use SnapshotHandle::query with QueryKind::MeanVar")]
     pub fn predict_with_uncertainty(&self, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.cell.load().predict_with_uncertainty(x)
+        let mut resp = PredictResponse::default();
+        let mut work = SnapshotQueryWork::default();
+        self.query_inner(x, QueryKind::MeanVar, &mut resp, &mut work)?;
+        let var = resp.variance.take().unwrap_or_default();
+        Ok((resp.mean.as_slice().to_vec(), var))
     }
 
     /// Multi-output predictive mean + shared per-query variance through
     /// the last published epoch (requires the shard's KBR twin).
+    #[deprecated(
+        since = "0.4.0",
+        note = "use SnapshotHandle::query with QueryKind::MeanVarMulti"
+    )]
     pub fn predict_with_uncertainty_multi(&self, x: &Mat) -> Result<(Mat, Vec<f64>)> {
-        self.cell.load().predict_with_uncertainty_multi(x)
+        let mut resp = PredictResponse::default();
+        let mut work = SnapshotQueryWork::default();
+        self.query_inner(x, QueryKind::MeanVarMulti, &mut resp, &mut work)?;
+        let var = resp.variance.take().unwrap_or_default();
+        Ok((resp.mean, var))
     }
 
     /// Training-set size of the last published epoch.

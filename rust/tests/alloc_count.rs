@@ -288,12 +288,17 @@ fn steady_state_inc_dec_is_allocation_free() {
         assert!(var.iter().all(|&v| v > 0.0));
     }
 
-    // --- warm sharded serving: the router fan-in (snapshot load + K
-    // batched shard reads + averaging / precision weighting) through a
-    // warm RouterPredictWork is allocation-free end to end ---
+    // --- warm sharded serving: the unified query fan-in (snapshot load +
+    // K batched shard reads + averaging / precision weighting) through a
+    // warm RouterPredictWork is allocation-free end to end — alternating
+    // kinds included (the parked variance buffer must survive the
+    // point-kind rounds) ---
     {
         use mikrr::coordinator::CoordinatorConfig;
-        use mikrr::serve::{RouterPredictWork, ServeConfig, ShardRouter};
+        use mikrr::serve::{
+            PredictRequest, PredictResponse, QueryKind, RouterPredictWork, ServeConfig,
+            ShardRouter,
+        };
 
         let (x, y) = data(48, 4, 7);
         let (xq, _) = data(16, 4, 8);
@@ -308,21 +313,47 @@ fn steady_state_inc_dec_is_allocation_free() {
         .unwrap();
         let h = router.handle();
         let mut w = RouterPredictWork::default();
-        let mut out = Vec::new();
-        let (mut mean, mut var) = (Vec::new(), Vec::new());
-        h.predict_into(&xq, &mut out, &mut w).unwrap(); // warm
-        h.predict_with_uncertainty_into(&xq, &mut mean, &mut var, &mut w)
-            .unwrap(); // warm
+        let mut resp = PredictResponse::default();
+        // requests built OUTSIDE the measured loop: the request is the
+        // caller's long-lived description of its traffic, not per-call
+        // state (PredictRequest::new moves the batch, no copy)
+        let req_mean = PredictRequest::new(xq.clone(), QueryKind::Mean);
+        let req_var = PredictRequest::new(xq.clone(), QueryKind::MeanVar);
+        h.query_into(&req_mean, &mut resp, &mut w).unwrap(); // warm
+        h.query_into(&req_var, &mut resp, &mut w).unwrap(); // warm
         let allocs = steady_state_allocs(
             || {
-                h.predict_into(&xq, &mut out, &mut w).unwrap();
-                h.predict_with_uncertainty_into(&xq, &mut mean, &mut var, &mut w)
-                    .unwrap();
+                h.query_into(&req_mean, &mut resp, &mut w).unwrap();
+                h.query_into(&req_var, &mut resp, &mut w).unwrap();
             },
             1,
             4,
         );
-        assert_eq!(allocs, 0, "warm RouterHandle serving path allocated {allocs} times");
+        assert_eq!(allocs, 0, "warm RouterHandle::query_into allocated {allocs} times");
+
+        // the deprecated *_into shims ride the same workspace and stay on
+        // the same zero-allocation contract
+        #[allow(deprecated)]
+        {
+            let mut out = Vec::new();
+            let (mut mean, mut var) = (Vec::new(), Vec::new());
+            h.predict_into(&xq, &mut out, &mut w).unwrap(); // warm
+            h.predict_with_uncertainty_into(&xq, &mut mean, &mut var, &mut w)
+                .unwrap(); // warm
+            let allocs = steady_state_allocs(
+                || {
+                    h.predict_into(&xq, &mut out, &mut w).unwrap();
+                    h.predict_with_uncertainty_into(&xq, &mut mean, &mut var, &mut w)
+                        .unwrap();
+                },
+                1,
+                4,
+            );
+            assert_eq!(
+                allocs, 0,
+                "warm deprecated predict_into shims allocated {allocs} times"
+            );
+        }
     }
 
     // --- warm health probes (ISSUE 7): the rotating residual probe on the

@@ -7,6 +7,10 @@
 //! probe-tripped self-heal — with faults scheduled by a deterministic
 //! [`FaultPlan`], then checks the observed counters against the plan.
 
+// The serving tests intentionally exercise the deprecated predict*
+// shims alongside the unified query API.
+#![allow(deprecated)]
+
 #![cfg(feature = "chaos")]
 
 use mikrr::data::synth;

@@ -1,0 +1,376 @@
+//! Loopback acceptance tests for the network serving front-end (ISSUE 9):
+//!
+//! * **Bitwise parity** — concurrent socket predicts decode to answers
+//!   bitwise-identical to direct [`RouterHandle::query`] calls (the wire
+//!   codec carries IEEE-754 bit patterns and the reactor batches through
+//!   the same `QueryLanes` the in-process server uses).
+//! * **Exact shedding** — an over-budget predict burst yields exactly
+//!   `M - budget` `RetryAfter` frames; an over-queue update burst yields
+//!   exactly `M - queue` sheds; pending rows never exceed the budget.
+//! * **Socket-boundary rejection** — torn frames, oversize lengths, and
+//!   every-byte bit flips never produce a valid response and never kill
+//!   the server.
+
+use std::time::Duration;
+
+use mikrr::data::synth;
+use mikrr::error::Error;
+use mikrr::kernels::Kernel;
+use mikrr::linalg::Mat;
+use mikrr::net::frame::{encode_predict, peek_frame, Frame};
+use mikrr::net::{NetClient, NetConfig, NetServer};
+use mikrr::serve::router::{RouterHandle, ServeConfig, ShardRouter};
+use mikrr::serve::{MicroBatchPolicy, PredictRequest, PredictResponse, QueryKind};
+use mikrr::streaming::StreamEvent;
+
+const DIM: usize = 5;
+
+fn router(uncertainty: bool) -> ShardRouter {
+    let d = synth::ecg_like(60, DIM, 1);
+    let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+    cfg.base.with_uncertainty = uncertainty;
+    ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap()
+}
+
+fn direct(h: &RouterHandle, x: &Mat, want: QueryKind) -> PredictResponse {
+    h.query(&PredictRequest::new(x.clone(), want)).unwrap()
+}
+
+fn assert_bitwise(got: &PredictResponse, want: &PredictResponse) {
+    assert_eq!(got.mean.shape(), want.mean.shape());
+    for (g, w) in got.mean.as_slice().iter().zip(want.mean.as_slice()) {
+        assert_eq!(g.to_bits(), w.to_bits(), "mean bits differ: {g} vs {w}");
+    }
+    match (&got.variance, &want.variance) {
+        (None, None) => {}
+        (Some(g), Some(w)) => {
+            assert_eq!(g.len(), w.len());
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "variance bits differ: {a} vs {b}");
+            }
+        }
+        (g, w) => panic!("variance presence differs: {g:?} vs {w:?}"),
+    }
+}
+
+#[test]
+fn concurrent_socket_predicts_are_bitwise_identical_to_direct_query() {
+    let r = router(true);
+    let h = r.handle();
+    let (server, _rx) = NetServer::spawn(h.clone(), DIM, NetConfig::default()).unwrap();
+    let addr = server.addr();
+    let q = synth::ecg_like(8, DIM, 2);
+    let dmean = direct(&h, &q.x, QueryKind::Mean);
+    let dvar = direct(&h, &q.x, QueryKind::MeanVar);
+
+    // 4 client threads, each querying its own rows for both kinds: the
+    // reactor coalesces them into shared windows in arrival order, and
+    // every per-row answer must still be bit-identical to a direct call
+    let mut joins = Vec::new();
+    for t in 0..4usize {
+        let rows: Vec<Vec<f64>> = (0..2).map(|i| q.x.row(t * 2 + i).to_vec()).collect();
+        joins.push(std::thread::spawn(move || {
+            let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            rows.iter()
+                .map(|row| {
+                    let m = c
+                        .query(&PredictRequest::single(row, QueryKind::Mean))
+                        .unwrap();
+                    let v = c
+                        .query(&PredictRequest::single(row, QueryKind::MeanVar))
+                        .unwrap();
+                    (m, v)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    for (t, j) in joins.into_iter().enumerate() {
+        for (i, (m, v)) in j.join().unwrap().into_iter().enumerate() {
+            let row = t * 2 + i;
+            assert_eq!(m.mean.shape(), (1, 1));
+            assert_eq!(
+                m.mean[(0, 0)].to_bits(),
+                dmean.mean[(row, 0)].to_bits(),
+                "row {row} mean differs from direct query"
+            );
+            assert_eq!(
+                v.mean[(0, 0)].to_bits(),
+                dvar.mean[(row, 0)].to_bits(),
+                "row {row} posterior mean differs"
+            );
+            assert_eq!(
+                v.variance_at(0).to_bits(),
+                dvar.variance_at(row).to_bits(),
+                "row {row} variance differs"
+            );
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.counters.get("predicts_served"), 16);
+    assert_eq!(stats.counters.get("shed_predict"), 0);
+    assert_eq!(stats.counters.get("protocol_errors"), 0);
+}
+
+#[test]
+fn multi_row_and_multi_output_requests_round_trip_bitwise() {
+    let d = synth::ecg_like(60, DIM, 1);
+    let y = Mat::from_fn(60, 2, |i, j| if j == 0 { d.y[i] } else { 2.0 * d.y[i] - 0.5 });
+    let mut cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+    cfg.base.with_uncertainty = true;
+    let r = ShardRouter::bootstrap_multi(&d.x, &y, cfg).unwrap();
+    let h = r.handle();
+    let (server, _rx) = NetServer::spawn(h.clone(), DIM, NetConfig::default()).unwrap();
+    let q = synth::ecg_like(6, DIM, 3);
+
+    let mut c = NetClient::connect(server.addr(), 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for want in [QueryKind::MeanMulti, QueryKind::MeanVarMulti] {
+        let got = c.query(&PredictRequest::new(q.x.clone(), want)).unwrap();
+        assert_eq!(got.mean.shape(), (6, 2));
+        assert_bitwise(&got, &direct(&h, &q.x, want));
+    }
+    drop(c);
+    server.shutdown();
+}
+
+#[test]
+fn over_budget_predict_storm_sheds_exactly_the_excess() {
+    let r = router(false);
+    let h = r.handle();
+    let budget = 5usize;
+    let m = 12usize;
+    let cfg = NetConfig {
+        // window larger than the budget so admission alone decides; a
+        // long max_wait keeps the window open until every frame landed
+        batch: MicroBatchPolicy { max_rows: 64, max_wait: Duration::from_millis(300) },
+        pending_budget: budget,
+        max_inflight_per_conn: m + 1,
+        ..NetConfig::default()
+    };
+    let (server, _rx) = NetServer::spawn(h, DIM, cfg).unwrap();
+    let q = synth::ecg_like(m, DIM, 4);
+
+    let mut c = NetClient::connect(server.addr(), 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // pipeline all M single-row predicts, then collect all M answers
+    let mut ids = Vec::new();
+    for i in 0..m {
+        ids.push(
+            c.send_predict(&PredictRequest::single(q.x.row(i), QueryKind::Mean))
+                .unwrap(),
+        );
+    }
+    let mut responses = 0usize;
+    let mut sheds = 0usize;
+    for _ in 0..m {
+        match c.recv().unwrap() {
+            Frame::Response { id, .. } => {
+                assert!(ids.contains(&id));
+                responses += 1;
+            }
+            Frame::RetryAfter { id, retry_ms } => {
+                assert!(ids.contains(&id));
+                assert!(retry_ms > 0);
+                sheds += 1;
+            }
+            f => panic!("unexpected frame {f:?}"),
+        }
+    }
+    assert_eq!(responses, budget, "every admitted row is answered");
+    assert_eq!(sheds, m - budget, "every over-budget row is shed, exactly once");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.counters.get("shed_predict") as usize, m - budget);
+    assert_eq!(stats.counters.get("predicts_served") as usize, budget);
+    assert!(
+        stats.max_pending_rows <= budget,
+        "admitted rows ({}) exceeded the pending budget ({budget})",
+        stats.max_pending_rows
+    );
+    assert!(stats.window_occupancy.percentile(99.0) <= budget as f64);
+}
+
+#[test]
+fn over_queue_update_storm_sheds_exactly_the_excess() {
+    let r = router(false);
+    let queue = 4usize;
+    let m = 10usize;
+    let cfg = NetConfig { update_queue: queue, ..NetConfig::default() };
+    // hold the receiver WITHOUT draining: the bounded queue must shed,
+    // never grow
+    let (server, rx) = NetServer::spawn(r.handle(), DIM, cfg).unwrap();
+
+    let mut c = NetClient::connect(server.addr(), 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..m {
+        let ev = StreamEvent::single(vec![0.1 * i as f64; DIM], 1.0, 0, i as u64);
+        c.send_update(&ev).unwrap();
+    }
+    let (mut acks, mut sheds) = (0usize, 0usize);
+    for _ in 0..m {
+        match c.recv().unwrap() {
+            Frame::Ack { .. } => acks += 1,
+            Frame::RetryAfter { .. } => sheds += 1,
+            f => panic!("unexpected frame {f:?}"),
+        }
+    }
+    assert_eq!(acks, queue);
+    assert_eq!(sheds, m - queue);
+    // exactly the admitted events sit in the queue, in order
+    let admitted: Vec<StreamEvent> = rx.try_iter().collect();
+    assert_eq!(admitted.len(), queue);
+    for (i, ev) in admitted.iter().enumerate() {
+        assert_eq!(ev.seq, i as u64);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.counters.get("updates_admitted") as usize, queue);
+    assert_eq!(stats.counters.get("shed_update") as usize, m - queue);
+}
+
+#[test]
+fn acked_updates_flow_into_the_router_ingest_path() {
+    let mut r = router(false);
+    let before = r.n_samples();
+    let (server, rx) = NetServer::spawn(r.handle(), DIM, NetConfig::default()).unwrap();
+
+    // the documented wiring: drain the receiver into ingest + update_round
+    let consumer = std::thread::spawn(move || {
+        let mut got = 0usize;
+        while let Ok(ev) = rx.recv() {
+            r.ingest(ev);
+            got += 1;
+        }
+        let report = r.update_round();
+        (r, got, report)
+    });
+
+    let n = 6usize;
+    let d = synth::ecg_like(n, DIM, 5);
+    let mut c = NetClient::connect(server.addr(), 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..n {
+        c.send_update(&StreamEvent::single(d.x.row(i).to_vec(), d.y[i], 0, i as u64))
+            .unwrap();
+    }
+    for _ in 0..n {
+        assert!(matches!(c.recv().unwrap(), Frame::Ack { .. }));
+    }
+    // shutting down drops the reactor's sender, ending the consumer loop
+    let stats = server.shutdown();
+    assert_eq!(stats.counters.get("updates_admitted") as usize, n);
+    let (r, got, report) = consumer.join().unwrap();
+    assert_eq!(got, n, "every acked event reached the consumer");
+    assert!(report.added() >= 1, "the flush applied the acked events");
+    assert!(r.n_samples() > before);
+}
+
+#[test]
+fn wrong_dim_and_zero_row_requests_error_cleanly() {
+    let r = router(false);
+    let (server, _rx) = NetServer::spawn(r.handle(), DIM, NetConfig::default()).unwrap();
+    let mut c = NetClient::connect(server.addr(), 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    let e = c
+        .query(&PredictRequest::single(&[1.0, 2.0], QueryKind::Mean))
+        .unwrap_err();
+    assert!(matches!(e, Error::Config(_)), "shape errors are permanent: {e:?}");
+
+    let empty = PredictRequest::new(Mat::zeros(0, DIM), QueryKind::Mean);
+    assert!(c.query(&empty).is_err());
+
+    // the connection survives request-level errors
+    let q = synth::ecg_like(1, DIM, 6);
+    assert!(c.query(&PredictRequest::single(q.x.row(0), QueryKind::Mean)).is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn corrupt_and_oversize_frames_close_the_connection_not_the_server() {
+    let r = router(false);
+    let h = r.handle();
+    let cfg = NetConfig { max_frame_len: 4096, ..NetConfig::default() };
+    let (server, _rx) = NetServer::spawn(h, DIM, cfg).unwrap();
+    let addr = server.addr();
+    let q = synth::ecg_like(1, DIM, 7);
+    let req = PredictRequest::single(q.x.row(0), QueryKind::Mean);
+
+    // CRC corruption: server answers a permanent error and closes
+    let mut wire = Vec::new();
+    encode_predict(&mut wire, &mut Vec::new(), 1, &req);
+    let mut bad = wire.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x01; // corrupt the CRC itself
+    let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+    c.send_raw(&bad).unwrap();
+    match c.recv() {
+        Ok(Frame::Error { transient, .. }) => assert!(!transient),
+        Ok(f) => panic!("corrupt frame produced {f:?}"),
+        Err(_) => {} // already closed: equally acceptable
+    }
+    assert!(c.recv().is_err(), "connection stays closed after a torn frame");
+
+    // oversize declared length: rejected from the header alone
+    let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+    let mut oversize = Vec::new();
+    oversize.extend_from_slice(&mikrr::net::frame::TAG_PREDICT.to_le_bytes());
+    oversize.extend_from_slice(&(1u64 << 40).to_le_bytes());
+    c.send_raw(&oversize).unwrap();
+    match c.recv() {
+        Ok(Frame::Error { transient, .. }) => assert!(!transient),
+        Ok(f) => panic!("oversize header produced {f:?}"),
+        Err(_) => {}
+    }
+
+    // a torn frame (valid prefix, missing tail) just waits server-side;
+    // dropping the connection mid-frame must not wedge the reactor
+    let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+    c.send_raw(&wire[..wire.len() / 2]).unwrap();
+    drop(c);
+
+    // the server is still fully alive for new connections
+    let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let got = c.query(&req).unwrap();
+    assert_eq!(got.mean.shape(), (1, 1));
+    let stats = server.shutdown();
+    assert!(stats.counters.get("protocol_errors") >= 2);
+}
+
+#[test]
+fn every_byte_flip_at_the_socket_never_yields_a_valid_response() {
+    let r = router(false);
+    let h = r.handle();
+    let cfg = NetConfig { max_frame_len: 4096, ..NetConfig::default() };
+    let (server, _rx) = NetServer::spawn(h.clone(), DIM, cfg).unwrap();
+    let addr = server.addr();
+    let q = synth::ecg_like(1, DIM, 8);
+    let req = PredictRequest::single(q.x.row(0), QueryKind::Mean);
+    let mut wire = Vec::new();
+    encode_predict(&mut wire, &mut Vec::new(), 9, &req);
+    assert_eq!(peek_frame(&wire, 4096).unwrap(), Some(wire.len()));
+
+    for i in 0..wire.len() {
+        let mut bad = wire.clone();
+        bad[i] ^= 0x01;
+        let mut c = NetClient::connect(addr, 4096 + 64).unwrap();
+        // short timeout: a flip that inflates the length makes the server
+        // wait for bytes that never come — a safe outcome, scored as such
+        c.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+        c.send_raw(&bad).unwrap();
+        match c.recv() {
+            Ok(Frame::Error { .. }) => {}  // rejected loudly
+            Err(_) => {}                   // closed or timed out: safe
+            Ok(f) => panic!("flip at byte {i} produced a non-error frame {f:?}"),
+        }
+    }
+    // after the whole gauntlet the server still answers correctly
+    let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let got = c.query(&req).unwrap();
+    assert_bitwise(&got, &direct(&h, &req.x, QueryKind::Mean));
+    server.shutdown();
+}

@@ -4,6 +4,10 @@
 //! crash matrix builds on these in `rust/tests/recovery_kill_matrix.rs`
 //! (`--features chaos`).
 
+// The serving tests intentionally exercise the deprecated predict*
+// shims alongside the unified query API.
+#![allow(deprecated)]
+
 use mikrr::config::Space;
 use mikrr::coordinator::engine::Engine;
 use mikrr::data::synth;

@@ -15,6 +15,10 @@
 //! `KILL_LOCK`; the CI lane additionally runs this file with
 //! `--test-threads=1` across a seed matrix (`CHAOS_SEED`).
 
+// Recovery parity intentionally checks the deprecated predict* shims
+// against the unified query path.
+#![allow(deprecated)]
+
 #![cfg(feature = "chaos")]
 
 use std::sync::Mutex;

@@ -8,6 +8,10 @@
 //!   block on or observe a half-applied update.
 //! * **End-to-end** — stream → router → shard rounds bookkeeping.
 
+// The serving tests intentionally exercise the deprecated predict*
+// shims alongside the unified query API.
+#![allow(deprecated)]
+
 use mikrr::data::synth;
 use mikrr::kernels::Kernel;
 use mikrr::krr::rmse;
