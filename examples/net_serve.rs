@@ -1,6 +1,7 @@
 //! The network serving front-end end to end: a shard fleet behind a TCP
 //! reactor, a client fleet mixing predict and update frames over real
 //! sockets, an ingest consumer feeding acked updates into router rounds,
+//! a live `MKTL` telemetry pull rendering the merged fleet snapshot,
 //! and a deliberate over-budget burst showing admission control shedding
 //! exactly the excess instead of queueing it.
 //!
@@ -104,6 +105,17 @@ fn main() -> Result<(), mikrr::error::Error> {
         live.accepted,
         live.shed,
     );
+
+    // live observability over the same socket: the MKTL stats frame pulls
+    // the merged fleet snapshot — reactor counters, shard round phases,
+    // window occupancy, and the flight-recorder tail — without perturbing
+    // the registries it reads (a second idle pull is byte-identical)
+    {
+        let mut c = NetClient::connect(addr, 1 << 20).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let snap = c.stats()?;
+        println!("\n--- live MKTL telemetry snapshot ---\n{}", snap.render_text());
+    }
 
     let stats = server.shutdown();
     let (router, ingested, report) = consumer.join().unwrap();

@@ -30,7 +30,10 @@
 //!   (`serve/microbatch_predict`, headline `speedup_serve_microbatch` —
 //!   perf-gated in CI), and the K=1 vs K=4 empirical-space shard update
 //!   round (`serve/shard_round`, `speedup_serve_shard_k4`: the same
-//!   logical +4/−4 round on one N=512 inverse vs four (N/4)² shards).
+//!   logical +4/−4 round on one N=512 inverse vs four (N/4)² shards), and
+//!   the fully instrumented shard round vs the same round against a
+//!   disabled registry (`serve/telemetry_overhead`, headline
+//!   `overhead_telemetry_round` — perf-gated in CI at <= 1.03x).
 //! * `multi/*`             — multi-output targets + duplicate folding
 //!   (ISSUE 6): one engine with a (J, 8) coefficient block answering a
 //!   256-row query as one packed GEMM vs 8 sequential D=1 GEMV engines
@@ -537,6 +540,54 @@ fn main() {
         });
     }
 
+    // (c) telemetry overhead (ISSUE 10): the fully instrumented shard
+    // round (phase timers, registry counters, flight-recorder spans) vs
+    // the identical round against a disabled registry. Gated
+    // (`overhead_telemetry_round` <= 1.03): observability must cost no
+    // more than 3% on the write path it observes.
+    if b.enabled("serve/telemetry_overhead") {
+        use mikrr::config::Space;
+        use mikrr::coordinator::CoordinatorConfig;
+        use mikrr::serve::{Placement, ServeConfig, ShardRouter};
+        use mikrr::telemetry::Registry;
+        use std::sync::Arc;
+
+        let d = mikrr::data::synth::ecg_like(512, 8, 14);
+        let mk_router = || {
+            let mut base = CoordinatorConfig::default_for(Kernel::poly(2, 1.0));
+            base.space = Some(Space::Empirical);
+            base.outlier = None;
+            ShardRouter::bootstrap(
+                &d.x,
+                &d.y,
+                ServeConfig { shards: 1, placement: Placement::RoundRobin, base },
+            )
+            .unwrap()
+        };
+        let pool: Vec<_> = (0..160)
+            .map(|k| mikrr::data::synth::ecg_like(4, 8, 70 + k))
+            .collect();
+        let mut live = mk_router();
+        let mut it_on = 0usize;
+        b.bench("serve/telemetry_overhead/instrumented_round_n512", || {
+            let batch = &pool[it_on % pool.len()];
+            it_on += 1;
+            live.shard_mut(0)
+                .apply_update(&batch.x, &batch.y, &[0, 1, 2, 3])
+                .unwrap();
+        });
+        let mut dark = mk_router();
+        dark.shard_mut(0).set_telemetry(Arc::new(Registry::disabled()));
+        let mut it_off = 0usize;
+        b.bench("serve/telemetry_overhead/disabled_round_n512", || {
+            let batch = &pool[it_off % pool.len()];
+            it_off += 1;
+            dark.shard_mut(0)
+                .apply_update(&batch.x, &batch.y, &[0, 1, 2, 3])
+                .unwrap();
+        });
+    }
+
     // ---- multi/*: multi-output targets + duplicate folding (ISSUE 6) ----
     // (a) D=8 packed predict: one engine with a (J, 8) coefficient block
     // answering a 256-row query as ONE (256, J)·(J, 8) GEMM, vs 8
@@ -907,6 +958,23 @@ fn main() {
                 mikrr::util::fmt_secs(f.mean()),
             );
         }
+    }
+
+    // telemetry overhead is a ratio gate in the opposite direction: the
+    // instrumented round divided by the disabled-registry baseline, which
+    // the CI perf gate holds at <= 1.03
+    if let (Some(on), Some(off)) = (
+        b.summary("serve/telemetry_overhead/instrumented_round_n512"),
+        b.summary("serve/telemetry_overhead/disabled_round_n512"),
+    ) {
+        let overhead = on.mean() / off.mean().max(1e-12);
+        extras.push(("overhead_telemetry_round", overhead));
+        println!(
+            "serve/telemetry_overhead: instrumented round {overhead:.3}x the \
+             disabled baseline ({} -> {})",
+            mikrr::util::fmt_secs(off.mean()),
+            mikrr::util::fmt_secs(on.mean()),
+        );
     }
 
     // ---- multi-threaded compute-core child (BENCH_microbench_mt.json) ----

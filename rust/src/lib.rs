@@ -47,6 +47,7 @@ pub mod persist;
 pub mod runtime;
 pub mod serve;
 pub mod streaming;
+pub mod telemetry;
 
 pub mod testutil;
 

@@ -173,19 +173,33 @@ pub fn mae_multi(
     multi_output_error(pred, truth, false)
 }
 
-/// Lightweight named-counter registry for the coordinator.
+/// Lightweight named-counter registry — the string-keyed
+/// **aggregation/rendering surface** for fleet views.
+///
+/// Since the telemetry PR this type is *deprecated for hot-path
+/// recording*: serve/net/persist increments go through the lock-free
+/// [`crate::telemetry::Registry`] (`MetricId` slots, relaxed atomics,
+/// zero-alloc), and owners expose `counters()` views built from their
+/// registries via [`crate::telemetry::Registry::counters`]. `inc`/`add`
+/// here allocate (`BTreeMap` + `String`) and require `&mut`, which is
+/// exactly what a hot path must not do — CI greps forbid new
+/// string-keyed increments outside `metrics/` and the coordinator/sink
+/// legacy call sites. Merging, `get`, `iter`, and `render` remain the
+/// supported aggregation API.
 #[derive(Clone, Debug, Default)]
 pub struct Counters {
     map: BTreeMap<String, u64>,
 }
 
 impl Counters {
-    /// Increment a counter.
+    /// Increment a counter. Aggregation surface only — hot paths record
+    /// through `telemetry::Registry` (see the type docs).
     pub fn inc(&mut self, name: &str) {
         self.add(name, 1);
     }
 
-    /// Add to a counter.
+    /// Add to a counter. Aggregation surface only — hot paths record
+    /// through `telemetry::Registry` (see the type docs).
     pub fn add(&mut self, name: &str, v: u64) {
         *self.map.entry(name.to_string()).or_default() += v;
     }
@@ -221,12 +235,24 @@ impl Counters {
 }
 
 /// Histogram of durations with fixed log-spaced buckets (for latency
-/// reporting in the serving example).
+/// reporting in the serving examples and `NetStats`).
+///
+/// **O(1) memory forever**: only the fixed bucket counts plus running
+/// count/sum/min/max are kept — the old unbounded `samples: Vec<f64>`
+/// (a slow leak on a serving path) is gone, and a warm `record` is
+/// allocation-free (asserted in `rust/tests/alloc_count.rs`).
+/// Percentiles are derived from the bucket counts: the covering
+/// bucket's upper edge clamped to the observed `[min, max]`, which
+/// bounds the relative error at one bucket ratio (10^0.25 ≈ 1.78×) and
+/// is exact at the extremes.
 #[derive(Clone, Debug)]
 pub struct LatencyHist {
     bounds: Vec<f64>,
     counts: Vec<u64>,
-    samples: Vec<f64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
 }
 
 impl Default for LatencyHist {
@@ -245,24 +271,66 @@ impl LatencyHist {
             b *= 10.0_f64.powf(0.25);
         }
         let n = bounds.len();
-        Self { bounds, counts: vec![0; n + 1], samples: Vec::new() }
+        Self {
+            bounds,
+            counts: vec![0; n + 1],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
     }
 
-    /// Record one duration (seconds).
+    /// Record one duration (seconds). O(1), allocation-free.
     pub fn record(&mut self, seconds: f64) {
         let idx = self.bounds.partition_point(|&b| b < seconds);
         self.counts[idx] += 1;
-        self.samples.push(seconds);
+        self.total += 1;
+        self.sum += seconds;
+        self.min = self.min.min(seconds);
+        self.max = self.max.max(seconds);
     }
 
     /// Number of recorded samples.
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.total as usize
     }
 
-    /// Percentile over raw samples.
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Percentile derived from the bucket counts: the upper edge of the
+    /// bucket covering the rank, clamped to the observed `[min, max]`.
     pub fn percentile(&self, p: f64) -> f64 {
-        crate::util::stats::percentile(&self.samples, p)
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.total);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let hi = self.bounds.get(idx).copied().unwrap_or(self.max);
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
     }
 
     /// One-line summary.
@@ -273,7 +341,7 @@ impl LatencyHist {
             fmt_secs(self.percentile(50.0)),
             fmt_secs(self.percentile(95.0)),
             fmt_secs(self.percentile(99.0)),
-            fmt_secs(crate::util::stats::max(&self.samples)),
+            fmt_secs(self.max()),
         )
     }
 }
@@ -336,6 +404,33 @@ mod tests {
         let p50 = h.percentile(50.0);
         assert!(p50 > 4e-4 && p50 < 6e-4, "p50={p50}");
         assert!(h.summary().contains("p99"));
+        // extremes are exact: the clamp pins p100 to the true max and
+        // low quantiles to at least the true min
+        assert_eq!(h.percentile(100.0), 1e-3);
+        assert!(h.percentile(0.0) >= 1e-5);
+        assert_eq!(h.max(), 1e-3);
+        assert!((h.mean() - 50.5e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_hist_memory_is_bounded() {
+        // regression for the unbounded `samples: Vec<f64>`: a histogram
+        // that has seen a million samples is byte-for-byte the same size
+        // as a fresh one — only the fixed bucket counts grow in value
+        let fresh = LatencyHist::new();
+        let mut h = LatencyHist::new();
+        for i in 0..1_000_000u64 {
+            h.record((i % 977) as f64 * 1e-6);
+        }
+        assert_eq!(h.count(), 1_000_000);
+        assert_eq!(h.counts.len(), fresh.counts.len());
+        assert_eq!(h.counts.capacity(), fresh.counts.capacity());
+        assert_eq!(h.bounds.len(), fresh.bounds.len());
+        assert_eq!(h.counts.iter().sum::<u64>(), 1_000_000);
+        // quantiles still answer sanely off the bucket counts
+        let p99 = h.percentile(99.0);
+        assert!(p99 > 9e-4 && p99 <= 976e-6, "p99={p99}");
+        assert_eq!(h.percentile(100.0), 976e-6);
     }
 
     #[test]

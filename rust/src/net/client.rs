@@ -17,6 +17,7 @@ use super::frame::{self, Frame};
 use crate::error::{Error, Result};
 use crate::serve::query::{PredictRequest, PredictResponse};
 use crate::streaming::StreamEvent;
+use crate::telemetry::TelemetrySnapshot;
 
 /// Blocking connection to a [`super::NetServer`].
 pub struct NetClient {
@@ -107,6 +108,36 @@ impl NetClient {
                     return Err(Error::Stream("timed out waiting for a frame".into()));
                 }
                 Err(e) => return Err(Error::Io(e)),
+            }
+        }
+    }
+
+    /// Send one stats-pull frame without waiting; returns its id.
+    pub fn send_stats_pull(&mut self) -> Result<u64> {
+        let id = self.fresh_id();
+        frame::encode_stats_pull(&mut self.out, &mut self.scratch, id);
+        self.send()?;
+        Ok(id)
+    }
+
+    /// Pull the server's merged fleet telemetry snapshot (the `MKTL`
+    /// frame): every counter/gauge slot, every histogram, and the
+    /// reactor's flight-recorder tail. The server records nothing while
+    /// answering, so two pulls against an idle server decode to equal —
+    /// indeed byte-identical — snapshots.
+    pub fn stats(&mut self) -> Result<TelemetrySnapshot> {
+        let id = self.send_stats_pull()?;
+        loop {
+            match self.recv()? {
+                Frame::Stats { id: rid, snapshot } if rid == id => return Ok(snapshot),
+                Frame::Error { id: rid, transient, msg } if rid == id || rid == 0 => {
+                    return Err(if transient {
+                        Error::Stream(msg)
+                    } else {
+                        Error::Config(msg)
+                    });
+                }
+                _ => continue,
             }
         }
     }

@@ -18,6 +18,7 @@ use crate::error::{Error, Result};
 use crate::persist::codec::{put_u32, put_u64, put_u8, read_section, write_section, Cursor};
 use crate::serve::query::{PredictRequest, PredictResponse};
 use crate::streaming::StreamEvent;
+use crate::telemetry::TelemetrySnapshot;
 
 /// Predict request: `[id u64][PredictRequest]`.
 pub const TAG_PREDICT: u32 = u32::from_le_bytes(*b"MKPR");
@@ -31,6 +32,10 @@ pub const TAG_ACK: u32 = u32::from_le_bytes(*b"MKAK");
 pub const TAG_RETRY_AFTER: u32 = u32::from_le_bytes(*b"MKRA");
 /// Request failed: `[id u64][transient u8][len u32][utf8 msg]`.
 pub const TAG_ERROR: u32 = u32::from_le_bytes(*b"MKER");
+/// Stats exposition, both directions: `[id u64][dir u8][snapshot?]`.
+/// `dir = 0` is the client's pull (no body); `dir = 1` is the server's
+/// reply carrying one canonical [`TelemetrySnapshot`].
+pub const TAG_STATS: u32 = u32::from_le_bytes(*b"MKTL");
 
 /// Bytes of section header before the payload (`tag` + `len`).
 pub const HEADER_LEN: usize = 12;
@@ -85,6 +90,21 @@ pub enum Frame {
         transient: bool,
         /// Human-readable cause.
         msg: String,
+    },
+    /// Client → server: pull the server's telemetry snapshot. Answering
+    /// a pull records nothing — two pulls against an idle server return
+    /// byte-identical snapshots.
+    StatsPull {
+        /// Correlation token, echoed back verbatim.
+        id: u64,
+    },
+    /// Server → client: the merged fleet telemetry snapshot (reactor +
+    /// router + every shard registry, plus the flight-recorder tail).
+    Stats {
+        /// Echoed correlation token.
+        id: u64,
+        /// The snapshot, exactly as the in-process merge produces it.
+        snapshot: TelemetrySnapshot,
     },
 }
 
@@ -160,6 +180,16 @@ pub fn decode_frame(bytes: &[u8]) -> Result<Frame> {
             let msg = String::from_utf8_lossy(p.take_bytes(n)?).into_owned();
             Frame::Error { id, transient, msg }
         }
+        TAG_STATS => match p.take_u8()? {
+            0 => Frame::StatsPull { id },
+            1 => Frame::Stats { id, snapshot: TelemetrySnapshot::decode(&mut p, CTX)? },
+            v => {
+                return Err(Error::persist_corruption(
+                    CTX,
+                    format!("stats frame direction {v}, expected 0/1"),
+                ))
+            }
+        },
         other => {
             return Err(Error::persist_corruption(
                 CTX,
@@ -243,6 +273,23 @@ pub fn encode_error(out: &mut Vec<u8>, scratch: &mut Vec<u8>, id: u64, e: &Error
     write_section(out, TAG_ERROR, scratch);
 }
 
+/// Append a stats-pull request.
+pub fn encode_stats_pull(out: &mut Vec<u8>, scratch: &mut Vec<u8>, id: u64) {
+    scratch.clear();
+    put_u64(scratch, id);
+    put_u8(scratch, 0);
+    write_section(out, TAG_STATS, scratch);
+}
+
+/// Append a stats reply carrying `snap`'s canonical encoding.
+pub fn encode_stats(out: &mut Vec<u8>, scratch: &mut Vec<u8>, id: u64, snap: &TelemetrySnapshot) {
+    scratch.clear();
+    put_u64(scratch, id);
+    put_u8(scratch, 1);
+    snap.encode(scratch);
+    write_section(out, TAG_STATS, scratch);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +299,20 @@ mod tests {
     fn sample_request() -> PredictRequest {
         let x = Mat::from_vec(2, 3, vec![1.0, -0.0, 2.5, 3.0, 4.0, 5.0]).unwrap();
         PredictRequest::new(x, QueryKind::MeanVar)
+    }
+
+    fn sample_snapshot() -> TelemetrySnapshot {
+        use crate::telemetry::{HistId, MetricId, Registry, SpanEvent, SpanKind};
+        let reg = Registry::new();
+        reg.add(MetricId::Routed, 7);
+        reg.inc(MetricId::Rounds);
+        reg.gauge_max(MetricId::MaxBatchRows, 64);
+        reg.record_hist(HistId::RoundLatencyUs, 120);
+        reg.record_hist(HistId::RoundLatencyUs, 3000);
+        let mut snap = reg.snapshot();
+        snap.spans.push(SpanEvent { t_us: 5, kind: SpanKind::RoundStart, a: 8, b: 0 });
+        snap.spans.push(SpanEvent { t_us: 9, kind: SpanKind::RoundEnd, a: 8, b: 130 });
+        snap
     }
 
     #[test]
@@ -270,6 +331,9 @@ mod tests {
         encode_ack(&mut buf, &mut scratch, 43);
         encode_retry_after(&mut buf, &mut scratch, 9, 5);
         encode_error(&mut buf, &mut scratch, 8, &Error::Config("no twin".into()));
+        encode_stats_pull(&mut buf, &mut scratch, 11);
+        let snap = sample_snapshot();
+        encode_stats(&mut buf, &mut scratch, 11, &snap);
 
         let mut rest = &buf[..];
         let mut frames = Vec::new();
@@ -278,7 +342,7 @@ mod tests {
             frames.push(decode_frame(&rest[..total]).unwrap());
             rest = &rest[total..];
         }
-        assert_eq!(frames.len(), 6);
+        assert_eq!(frames.len(), 8);
         match &frames[0] {
             Frame::Predict { id, req: r } => {
                 assert_eq!(*id, 42);
@@ -311,6 +375,14 @@ mod tests {
                 assert!(msg.contains("no twin"));
             }
             f => panic!("want Error, got {f:?}"),
+        }
+        assert!(matches!(frames[6], Frame::StatsPull { id: 11 }));
+        match &frames[7] {
+            Frame::Stats { id, snapshot } => {
+                assert_eq!(*id, 11);
+                assert_eq!(*snapshot, snap, "snapshot survives the wire verbatim");
+            }
+            f => panic!("want Stats, got {f:?}"),
         }
     }
 
@@ -402,6 +474,59 @@ mod tests {
         write_section(&mut buf, TAG_ACK, &payload);
         let total = peek_frame(&buf, 1 << 20).unwrap().unwrap();
         assert!(decode_frame(&buf[..total]).is_err());
+    }
+
+    #[test]
+    fn stats_frames_are_strict_and_deterministic() {
+        let snap = sample_snapshot();
+        // deterministic: same snapshot, bitwise-identical frame
+        let (mut a, mut b, mut scratch) = (Vec::new(), Vec::new(), Vec::new());
+        encode_stats(&mut a, &mut scratch, 3, &snap);
+        encode_stats(&mut b, &mut scratch, 3, &snap);
+        assert_eq!(a, b, "canonical encoding is unique");
+        // every single-bit flip anywhere in the stats frame is caught
+        for i in 0..a.len() {
+            for bit in [0x01u8, 0x80u8] {
+                let mut bad = a.clone();
+                bad[i] ^= bit;
+                match peek_frame(&bad, 1 << 20) {
+                    Err(_) | Ok(None) => {}
+                    Ok(Some(t)) => assert!(
+                        decode_frame(&bad[..t]).is_err(),
+                        "stats flip at byte {i} bit {bit:#x} slipped through"
+                    ),
+                }
+            }
+        }
+        // hostile direction byte with a valid CRC
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1);
+        put_u8(&mut payload, 2);
+        let mut buf = Vec::new();
+        write_section(&mut buf, TAG_STATS, &payload);
+        let total = peek_frame(&buf, 1 << 20).unwrap().unwrap();
+        assert!(decode_frame(&buf[..total]).is_err(), "direction 2 rejected");
+        // a pull carrying stray body bytes is corruption, not slack
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1);
+        put_u8(&mut payload, 0);
+        put_u8(&mut payload, 0xAA);
+        let mut buf = Vec::new();
+        write_section(&mut buf, TAG_STATS, &payload);
+        let total = peek_frame(&buf, 1 << 20).unwrap().unwrap();
+        assert!(decode_frame(&buf[..total]).is_err(), "stray pull bytes rejected");
+        // a reply whose snapshot body is truncated mid-histogram fails
+        // structurally even with a recomputed CRC
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1);
+        put_u8(&mut payload, 1);
+        let mut body = Vec::new();
+        snap.encode(&mut body);
+        payload.extend_from_slice(&body[..body.len() - 3]);
+        let mut buf = Vec::new();
+        write_section(&mut buf, TAG_STATS, &payload);
+        let total = peek_frame(&buf, 1 << 20).unwrap().unwrap();
+        assert!(decode_frame(&buf[..total]).is_err(), "truncated snapshot rejected");
     }
 
     #[test]

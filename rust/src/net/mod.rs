@@ -23,6 +23,13 @@
 //! control"; throughput and tail latency under a mixed predict/update
 //! storm are tracked by the `net/storm` microbench (`sustained_rps` in
 //! the CI perf gate, next to `speedup_serve_microbatch`).
+//!
+//! Observability rides the same socket: an `MKTL` stats frame
+//! ([`NetClient::stats`]) pulls the merged
+//! [`crate::telemetry::TelemetrySnapshot`] — reactor + router + every
+//! shard registry, plus the reactor's flight-recorder tail — without
+//! perturbing what it measures (the pull path records nothing). See
+//! `serve/mod.rs` §"Telemetry and flight recording".
 
 pub mod client;
 pub mod frame;

@@ -47,11 +47,12 @@ use std::time::Instant;
 use super::frame::{self, Frame};
 use super::sys::{sock_id, Event, Interest, Poller, SockId};
 use crate::error::{Error, Result};
-use crate::metrics::{Counters, LatencyHist};
+use crate::metrics::{Counters, LatencyHist, Timer};
 use crate::serve::microbatch::QueryLanes;
 use crate::serve::query::QueryKind;
 use crate::serve::{MicroBatchPolicy, RouterHandle};
 use crate::streaming::StreamEvent;
+use crate::telemetry::{FlightRecorder, MetricId, Registry, SpanKind, DEFAULT_RECORDER_CAPACITY};
 
 /// Reactor configuration. Defaults serve a loopback fleet; production
 /// deployments tune the budgets to the provisioned memory.
@@ -133,6 +134,7 @@ pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     live: Arc<LiveCells>,
+    telemetry: Arc<Registry>,
     join: Option<JoinHandle<NetStats>>,
 }
 
@@ -156,7 +158,10 @@ impl NetServer {
         let (update_tx, update_rx) = sync_channel(cfg.update_queue.max(1));
         let stop = Arc::new(AtomicBool::new(false));
         let live = Arc::new(LiveCells::default());
+        let telemetry = Arc::new(Registry::new());
         let reactor = Reactor {
+            telemetry: Arc::clone(&telemetry),
+            recorder: FlightRecorder::default(),
             handle,
             dim,
             cfg,
@@ -181,7 +186,15 @@ impl NetServer {
             .name("mikrr-net-reactor".into())
             .spawn(move || reactor.run())
             .map_err(Error::Io)?;
-        Ok((NetServer { addr, stop, live, join: Some(join) }, update_rx))
+        Ok((NetServer { addr, stop, live, telemetry, join: Some(join) }, update_rx))
+    }
+
+    /// The reactor-tier metrics registry, readable while it runs. The
+    /// merged fleet view (reactor + router + shards) is what the `MKTL`
+    /// stats frame ships — pull it with
+    /// [`super::client::NetClient::stats`].
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
     }
 
     /// The bound address (use with an OS-assigned port).
@@ -248,6 +261,8 @@ struct PendingReq {
 }
 
 struct Reactor {
+    telemetry: Arc<Registry>,
+    recorder: FlightRecorder,
     handle: RouterHandle,
     dim: usize,
     cfg: NetConfig,
@@ -288,7 +303,7 @@ impl Reactor {
             match self.poller.wait(&mut events, timeout_ms) {
                 Ok(()) => consecutive_poll_errors = 0,
                 Err(_) => {
-                    self.stats.counters.inc("poll_errors");
+                    self.telemetry.inc(MetricId::PollErrors);
                     consecutive_poll_errors += 1;
                     if consecutive_poll_errors > 100 {
                         // the poller is wedged; dying loudly beats spinning
@@ -321,6 +336,10 @@ impl Reactor {
         for slot in 0..self.conns.len() {
             self.flush_conn(slot);
         }
+        // the registry was the source of truth all along; the final
+        // stats are its string-keyed view
+        self.stats.counters = self.telemetry.counters();
+        self.stats.max_pending_rows = self.telemetry.get(MetricId::MaxPendingRows) as usize;
         // dropping self.update_tx (with self) disconnects the receiver
         self.stats
     }
@@ -345,11 +364,11 @@ impl Reactor {
         loop {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
-                    self.stats.counters.inc("accepted");
+                    self.telemetry.inc(MetricId::Accepted);
                     self.live.accepted.fetch_add(1, Ordering::Relaxed);
                     let open = self.live.active_conns.load(Ordering::Relaxed) as usize;
                     if open >= self.cfg.max_conns {
-                        self.stats.counters.inc("conn_rejected");
+                        self.telemetry.inc(MetricId::ConnRejected);
                         drop(stream);
                         continue;
                     }
@@ -384,6 +403,7 @@ impl Reactor {
                         dead: false,
                     });
                     self.live.active_conns.fetch_add(1, Ordering::Relaxed);
+                    self.recorder.record(SpanKind::Accept, slot as u64, open as u64 + 1);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
@@ -413,7 +433,7 @@ impl Reactor {
                             + self.cfg.max_write_buf
                     {
                         conn.dead = true;
-                        self.stats.counters.inc("slow_reader_closed");
+                        self.telemetry.inc(MetricId::SlowReaderClosed);
                         return;
                     }
                     if n < self.chunk.len() {
@@ -469,10 +489,12 @@ impl Reactor {
         match f {
             Frame::Predict { id, req } => self.handle_predict(slot, id, req),
             Frame::Update { id, ev } => self.handle_update(slot, id, ev),
+            Frame::StatsPull { id } => self.handle_stats_pull(slot, id),
             Frame::Response { .. }
             | Frame::Ack { .. }
             | Frame::RetryAfter { .. }
-            | Frame::Error { .. } => {
+            | Frame::Error { .. }
+            | Frame::Stats { .. } => {
                 let e = Error::Config("client sent a server-only frame".into());
                 self.protocol_error(slot, &e);
             }
@@ -498,7 +520,8 @@ impl Reactor {
         if inflight >= self.cfg.max_inflight_per_conn
             || self.pending_rows + rows > self.cfg.pending_budget
         {
-            self.stats.counters.inc("shed_predict");
+            self.telemetry.inc(MetricId::ShedPredict);
+            self.recorder.record(SpanKind::Shed, rows as u64, self.pending_rows as u64);
             self.live.shed.fetch_add(1, Ordering::Relaxed);
             self.reply_retry_after(slot, id);
             return;
@@ -510,7 +533,7 @@ impl Reactor {
         let gen = self.gens[slot];
         self.pending.push(PendingReq { slot, gen, id, want: req.want, start, rows });
         self.pending_rows += rows;
-        self.stats.max_pending_rows = self.stats.max_pending_rows.max(self.pending_rows);
+        self.telemetry.gauge_max(MetricId::MaxPendingRows, self.pending_rows as u64);
         if let Some(c) = self.conns[slot].as_mut() {
             c.inflight += 1;
         }
@@ -519,7 +542,7 @@ impl Reactor {
     fn handle_update(&mut self, slot: usize, id: u64, ev: StreamEvent) {
         match self.update_tx.try_send(ev) {
             Ok(()) => {
-                self.stats.counters.inc("updates_admitted");
+                self.telemetry.inc(MetricId::UpdatesAdmitted);
                 let Self { conns, scratch, .. } = self;
                 if let Some(c) = conns[slot].as_mut() {
                     frame::encode_ack(&mut c.wbuf, scratch, id);
@@ -527,7 +550,8 @@ impl Reactor {
                 self.flush_conn(slot);
             }
             Err(TrySendError::Full(_)) => {
-                self.stats.counters.inc("shed_update");
+                self.telemetry.inc(MetricId::ShedUpdate);
+                self.recorder.record(SpanKind::Shed, 1, self.pending_rows as u64);
                 self.live.shed.fetch_add(1, Ordering::Relaxed);
                 self.reply_retry_after(slot, id);
             }
@@ -536,6 +560,24 @@ impl Reactor {
                 self.reply_error(slot, id, &e);
             }
         }
+    }
+
+    /// Answer a stats pull with the merged fleet snapshot: router +
+    /// every shard registry (via [`RouterHandle::telemetry`]), the
+    /// reactor's own registry, and the reactor flight-recorder tail.
+    ///
+    /// This path deliberately records NOTHING — no counter, no span — so
+    /// two pulls against an idle server return byte-identical frames
+    /// (the acceptance contract for monitoring scrapers diffing pulls).
+    fn handle_stats_pull(&mut self, slot: usize, id: u64) {
+        let mut snap = self.handle.telemetry();
+        self.telemetry.merge_into(&mut snap);
+        snap.spans = self.recorder.tail(DEFAULT_RECORDER_CAPACITY);
+        let Self { conns, scratch, .. } = self;
+        if let Some(c) = conns[slot].as_mut() {
+            frame::encode_stats(&mut c.wbuf, scratch, id, &snap);
+        }
+        self.flush_conn(slot);
     }
 
     fn reply_retry_after(&mut self, slot: usize, id: u64) {
@@ -558,7 +600,8 @@ impl Reactor {
     /// Send one best-effort error frame and close: a framing/CRC failure
     /// means the byte stream cannot be resynchronized.
     fn protocol_error(&mut self, slot: usize, e: &Error) {
-        self.stats.counters.inc("protocol_errors");
+        self.telemetry.inc(MetricId::ProtocolErrors);
+        self.recorder.record(SpanKind::ProtocolError, slot as u64, 0);
         let Self { conns, scratch, .. } = self;
         if let Some(c) = conns[slot].as_mut() {
             frame::encode_error(&mut c.wbuf, scratch, 0, e);
@@ -573,11 +616,13 @@ impl Reactor {
         }
         let rows = self.pending_rows;
         self.stats.window_occupancy.record(rows as f64);
-        self.stats.counters.inc("batches");
-        self.lanes.execute(&self.handle);
+        self.telemetry.inc(MetricId::Batches);
+        let t = Timer::start();
+        self.lanes.execute(&self.handle, &self.telemetry);
+        self.recorder.record(SpanKind::WindowExec, rows as u64, (t.elapsed() * 1e6) as u64);
         let pending = std::mem::take(&mut self.pending);
         for p in &pending {
-            let Self { conns, scratch, lanes, gens, stats, .. } = &mut *self;
+            let Self { conns, scratch, lanes, gens, telemetry, .. } = &mut *self;
             let alive = conns[p.slot]
                 .as_mut()
                 .filter(|c| c.gen == gens[p.slot] && c.gen == p.gen && !c.dead);
@@ -586,7 +631,7 @@ impl Reactor {
             match lanes.lane_result(p.want) {
                 Ok(resp) => {
                     frame::encode_response_rows(&mut c.wbuf, scratch, p.id, resp, p.start, p.rows);
-                    stats.counters.inc("predicts_served");
+                    telemetry.inc(MetricId::PredictsServed);
                 }
                 Err(e) => {
                     frame::encode_error(&mut c.wbuf, scratch, p.id, e);
@@ -602,7 +647,7 @@ impl Reactor {
 
     fn flush_conn(&mut self, slot: usize) {
         let max_write_buf = self.cfg.max_write_buf;
-        let Self { conns, poller, stats, .. } = self;
+        let Self { conns, poller, telemetry, .. } = self;
         let Some(conn) = conns[slot].as_mut() else { return };
         if conn.dead {
             return;
@@ -636,7 +681,7 @@ impl Reactor {
             // slow reader: dropping it bounds reply memory; the client
             // sees a reset and re-resolves
             conn.dead = true;
-            stats.counters.inc("slow_reader_closed");
+            telemetry.inc(MetricId::SlowReaderClosed);
         } else if !conn.wants_write {
             conn.wants_write = true;
             let _ = poller.modify(conn.id, slot as u64 + 1, Interest::READ_WRITE);
@@ -654,5 +699,6 @@ impl Reactor {
         self.gens[slot] = self.gens[slot].wrapping_add(1);
         self.free.push(slot);
         self.live.active_conns.fetch_sub(1, Ordering::Relaxed);
+        self.recorder.record(SpanKind::ConnClosed, slot as u64, 0);
     }
 }

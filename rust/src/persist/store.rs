@@ -27,15 +27,17 @@
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::coordinator::engine::Engine;
 use crate::coordinator::CoordinatorConfig;
 use crate::error::{Error, Result};
 use crate::health::fault::KillPoint;
-use crate::metrics::Counters;
+use crate::metrics::{Counters, Timer};
 use crate::streaming::batcher::BatchPolicy;
 use crate::streaming::outlier::OutlierConfig;
 use crate::streaming::StreamEvent;
+use crate::telemetry::{HistId, MetricId, Registry};
 
 use super::codec::{put_f64, put_u64, put_u8, read_section, write_section, Cursor};
 use super::kill;
@@ -83,10 +85,25 @@ pub struct ShardStore {
     wal: Wal,
     cfg: DurabilityConfig,
     scratch: Vec<u8>,
-    /// Durability counters (`snapshots_written`, `wal_records_appended`,
-    /// ...), merged into fleet views via [`Counters::merge_from`].
-    pub counters: Counters,
+    /// Durability metric slots (`snapshots_written`,
+    /// `wal_records_appended`, `checkpoints`) plus the WAL-append /
+    /// checkpoint latency histograms. `Shard::attach_store` swaps this for
+    /// the owning shard's registry so one instance covers the whole shard.
+    telemetry: Arc<Registry>,
 }
+
+/// The registry slots that constitute a durability view (store writes the
+/// first three; recovery scans record the rest).
+pub const DURABILITY_IDS: [MetricId; 8] = [
+    MetricId::SnapshotsWritten,
+    MetricId::WalRecordsAppended,
+    MetricId::Checkpoints,
+    MetricId::SnapshotFallbacks,
+    MetricId::TornTailsTruncated,
+    MetricId::WalRecordsReplayed,
+    MetricId::WalReplaySkipped,
+    MetricId::RecoveredQuarantined,
+];
 
 impl ShardStore {
     /// Initialize a shard's durable state: write snapshot generation 1 of
@@ -101,9 +118,9 @@ impl ShardStore {
     ) -> Result<Self> {
         cfg.validate()?;
         fs::create_dir_all(dir).map_err(|e| Error::persist_io("ShardStore::create", e))?;
-        let mut counters = Counters::default();
+        let telemetry = Arc::new(Registry::new());
         write_snapshot(dir, shard_id, &EngineState::capture(engine, 1, epoch, high_seq))?;
-        counters.inc("snapshots_written");
+        telemetry.inc(MetricId::SnapshotsWritten);
         let wal = Wal::create(dir, shard_id, 1)?;
         Ok(Self {
             dir: dir.to_path_buf(),
@@ -113,7 +130,7 @@ impl ShardStore {
             wal,
             cfg,
             scratch: Vec::new(),
-            counters,
+            telemetry,
         })
     }
 
@@ -140,7 +157,7 @@ impl ShardStore {
             wal: Wal::create(dir, shard_id, generation)?,
             cfg,
             scratch: Vec::new(),
-            counters: Counters::default(),
+            telemetry: Arc::new(Registry::new()),
         };
         // checkpoint() moves generation forward to `generation` and
         // GCs everything the retention window no longer needs
@@ -158,25 +175,50 @@ impl ShardStore {
         &self.dir
     }
 
+    /// The store's live metric slots.
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// Record into `reg` from here on, after folding the counts recorded
+    /// so far into it (how `Shard::attach_store` unifies the shard's and
+    /// its store's slots into one instance).
+    pub fn set_telemetry(&mut self, reg: Arc<Registry>) {
+        reg.absorb(&self.telemetry);
+        self.telemetry = reg;
+    }
+
+    /// String-keyed view over the durability slots only (legacy
+    /// `counters` field surface; names are unchanged).
+    pub fn counters(&self) -> Counters {
+        self.telemetry.counters_for(&DURABILITY_IDS)
+    }
+
     /// Write-ahead log one validated event batch (before it is applied).
     pub fn log_batch(&mut self, seq: u64, events: &[StreamEvent]) -> Result<()> {
         let rec = WalRecord::Batch { seq, events: events.to_vec() };
+        let t = Timer::start();
         self.wal.append(&rec, &mut self.scratch)?;
-        self.counters.inc("wal_records_appended");
+        self.telemetry.record_secs(HistId::WalAppendUs, t.elapsed());
+        self.telemetry.inc(MetricId::WalRecordsAppended);
         Ok(())
     }
 
     /// Write-ahead log an outlier-eviction round.
     pub fn log_evict(&mut self, seq: u64) -> Result<()> {
+        let t = Timer::start();
         self.wal.append(&WalRecord::Evict { seq }, &mut self.scratch)?;
-        self.counters.inc("wal_records_appended");
+        self.telemetry.record_secs(HistId::WalAppendUs, t.elapsed());
+        self.telemetry.inc(MetricId::WalRecordsAppended);
         Ok(())
     }
 
     /// Write-ahead log a self-heal refactorization.
     pub fn log_heal(&mut self, seq: u64) -> Result<()> {
+        let t = Timer::start();
         self.wal.append(&WalRecord::Heal { seq }, &mut self.scratch)?;
-        self.counters.inc("wal_records_appended");
+        self.telemetry.record_secs(HistId::WalAppendUs, t.elapsed());
+        self.telemetry.inc(MetricId::WalRecordsAppended);
         Ok(())
     }
 
@@ -195,10 +237,11 @@ impl ShardStore {
     /// generation's WAL segment, GC what retention no longer needs.
     pub fn checkpoint(&mut self, engine: &Engine, epoch: u64, high_seq: u64) -> Result<()> {
         const CTX: &str = "ShardStore::checkpoint";
+        let t = Timer::start();
         let gen = self.generation + 1;
         let state = EngineState::capture(engine, gen, epoch, high_seq);
         write_snapshot(&self.dir, self.shard_id, &state)?;
-        self.counters.inc("snapshots_written");
+        self.telemetry.inc(MetricId::SnapshotsWritten);
         if kill::fires(KillPoint::SnapNewSegment) {
             return Err(kill::killed(CTX, KillPoint::SnapNewSegment));
         }
@@ -209,6 +252,8 @@ impl ShardStore {
             return Err(kill::killed(CTX, KillPoint::SnapGc));
         }
         self.gc()?;
+        self.telemetry.record_secs(HistId::CheckpointUs, t.elapsed());
+        self.telemetry.inc(MetricId::Checkpoints);
         Ok(())
     }
 
@@ -253,7 +298,10 @@ pub struct RecoveredShard {
 /// Scan one shard's directory: newest valid snapshot + WAL suffix.
 pub fn recover_shard(dir: &Path, shard_id: usize) -> Result<RecoveredShard> {
     const CTX: &str = "recover_shard";
-    let mut counters = Counters::default();
+    // scan-local registry; the string-keyed RecoveredShard::counters view
+    // is frozen from it at the end (recovery is a cold path, but it still
+    // keeps string keys off every increment)
+    let reg = Registry::new();
     let gens = snapshot::list_generations(dir, shard_id)?;
     if gens.is_empty() {
         return Err(Error::persist_corruption(
@@ -272,11 +320,11 @@ pub fn recover_shard(dir: &Path, shard_id: usize) -> Result<RecoveredShard> {
             }
             Ok(_) => {
                 // a snapshot claiming another generation is misfiled bytes
-                counters.inc("snapshot_fallbacks");
+                reg.inc(MetricId::SnapshotFallbacks);
                 quarantine_snapshot(&path)?;
             }
             Err(e) if !e.is_transient() => {
-                counters.inc("snapshot_fallbacks");
+                reg.inc(MetricId::SnapshotFallbacks);
                 quarantine_snapshot(&path)?;
             }
             Err(e) => return Err(e),
@@ -298,11 +346,11 @@ pub fn recover_shard(dir: &Path, shard_id: usize) -> Result<RecoveredShard> {
     for g in state.generation..=max_generation_seen {
         let (mut recs, torn) = read_records(&wal_path(dir, shard_id, g))?;
         if torn {
-            counters.inc("torn_tails_truncated");
+            reg.inc(MetricId::TornTailsTruncated);
         }
         records.append(&mut recs);
     }
-    Ok(RecoveredShard { state, records, counters, max_generation_seen })
+    Ok(RecoveredShard { state, records, counters: reg.counters(), max_generation_seen })
 }
 
 /// WAL segment generations present for a shard, ascending.
@@ -520,8 +568,9 @@ mod tests {
             assert_eq!(ck, round % 2 == 0, "round {round}");
         }
         assert_eq!(store.generation(), 3);
-        assert_eq!(store.counters.get("snapshots_written"), 3);
-        assert_eq!(store.counters.get("wal_records_appended"), 5);
+        assert_eq!(store.counters().get("snapshots_written"), 3);
+        assert_eq!(store.counters().get("wal_records_appended"), 5);
+        assert_eq!(store.counters().get("checkpoints"), 2);
         let gens = snapshot::list_generations(dir.path(), 0).unwrap();
         assert_eq!(gens, vec![2, 3], "generation 1 was GCd");
         assert_eq!(list_wal_generations(dir.path(), 0).unwrap(), vec![2, 3]);

@@ -27,12 +27,24 @@
 
 use crate::error::{Error, PersistDetail, Result};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::query::{PredictRequest, PredictResponse, QueryKind};
 use super::router::{RouterHandle, RouterPredictWork};
 use crate::linalg::Mat;
+use crate::metrics::Timer;
+use crate::telemetry::{HistId, MetricId, Registry};
+
+/// Per-lane latency histogram, indexed by [`QueryKind::lane`] (the
+/// [`QueryKind::ALL`] order: Mean, MeanMulti, MeanVar, MeanVarMulti).
+const LANE_HIST: [HistId; 4] = [
+    HistId::LaneMeanUs,
+    HistId::LaneMeanMultiUs,
+    HistId::LaneMeanVarUs,
+    HistId::LaneMeanVarMultiUs,
+];
 
 /// Batching policy for the prediction front-end.
 #[derive(Clone, Debug)]
@@ -109,15 +121,23 @@ impl QueryLanes {
     /// Run ONE batched router query per non-empty lane. Transient
     /// failures are retried once (see [`retry_once`]); the outcome lands
     /// in the lane for [`QueryLanes::reply_for`] / [`QueryLanes::lane_result`].
-    pub fn execute(&mut self, handle: &RouterHandle) {
+    ///
+    /// `telemetry` records the window occupancy and one latency sample
+    /// per executed lane — relaxed atomics on the warm path, no
+    /// allocation (pass [`Registry::disabled`] to opt out entirely).
+    pub fn execute(&mut self, handle: &RouterHandle, telemetry: &Registry) {
         let Self { lanes, work, .. } = self;
+        let occupancy: usize = lanes.iter().map(|l| l.xb.rows()).sum();
+        telemetry.record_hist(HistId::WindowOccupancyRows, occupancy as u64);
         for (i, lane) in lanes.iter_mut().enumerate() {
             if lane.xb.rows() == 0 {
                 continue;
             }
             let want = QueryKind::ALL[i];
+            let t = Timer::start();
             lane.err =
                 retry_once(|| handle.query_inner(&lane.xb, want, &mut lane.resp, work));
+            telemetry.record_secs(LANE_HIST[i], t.elapsed());
         }
     }
 
@@ -233,6 +253,7 @@ impl PredictClient {
 pub struct MicroBatchServer {
     tx: Option<SyncSender<Msg>>,
     worker: Option<JoinHandle<MicroBatchStats>>,
+    telemetry: Arc<Registry>,
 }
 
 impl MicroBatchServer {
@@ -240,9 +261,18 @@ impl MicroBatchServer {
     /// dimension every request row must have.
     pub fn spawn(handle: RouterHandle, dim: usize, policy: MicroBatchPolicy) -> Self {
         assert!(policy.max_rows >= 1, "max_rows must be >= 1");
+        let telemetry = Arc::new(Registry::new());
+        let reg = Arc::clone(&telemetry);
         let (tx, rx) = sync_channel::<Msg>(policy.max_rows.saturating_mul(4).max(16));
-        let worker = std::thread::spawn(move || worker_loop(handle, dim, policy, rx));
-        Self { tx: Some(tx), worker: Some(worker) }
+        let worker = std::thread::spawn(move || worker_loop(handle, dim, policy, rx, &reg));
+        Self { tx: Some(tx), worker: Some(worker), telemetry }
+    }
+
+    /// The front-end's metrics registry: window sizes, per-lane latency
+    /// histograms, and the batch/request counters, live while the worker
+    /// runs (unlike [`MicroBatchServer::shutdown`]'s final stats).
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
     }
 
     /// Mint a client (one per request thread).
@@ -288,6 +318,7 @@ fn worker_loop(
     dim: usize,
     policy: MicroBatchPolicy,
     rx: Receiver<Msg>,
+    telemetry: &Registry,
 ) -> MicroBatchStats {
     let mut stats = MicroBatchStats::default();
     let mut batch: Vec<Request> = Vec::with_capacity(policy.max_rows);
@@ -324,10 +355,13 @@ fn worker_loop(
                 Err(RecvTimeoutError::Timeout) => break,
             }
         }
-        let served = serve_batch(&handle, dim, &mut batch, &mut lanes, &mut valid);
+        let served = serve_batch(&handle, dim, &mut batch, &mut lanes, &mut valid, telemetry);
         stats.requests += served as u64;
         stats.max_batch_rows = stats.max_batch_rows.max(rows_pending);
         stats.batches += 1;
+        telemetry.inc(MetricId::Batches);
+        telemetry.add(MetricId::Requests, served as u64);
+        telemetry.gauge_max(MetricId::MaxBatchRows, rows_pending as u64);
     }
     stats
 }
@@ -345,6 +379,7 @@ fn serve_batch(
     batch: &mut Vec<Request>,
     lanes: &mut QueryLanes,
     valid: &mut Vec<(Request, usize)>,
+    telemetry: &Registry,
 ) -> usize {
     let total = batch.len();
     lanes.reset();
@@ -365,7 +400,7 @@ fn serve_batch(
     if valid.is_empty() {
         return total;
     }
-    lanes.execute(handle);
+    lanes.execute(handle, telemetry);
     for (r, start) in valid.drain(..) {
         let reply = lanes.reply_for(r.req.want, start, r.req.x.rows());
         let _ = r.resp.send(reply);
@@ -584,9 +619,21 @@ mod tests {
                 1e-9,
             );
         }
+        let telemetry = Arc::clone(server.telemetry());
         let stats = server.shutdown();
         assert_eq!(stats.requests, 24);
         assert!(stats.batches <= 24, "some coalescing expected under load");
+        // the registry view agrees with the worker's returned stats
+        assert_eq!(telemetry.get(MetricId::Requests), 24);
+        assert_eq!(telemetry.get(MetricId::Batches), stats.batches);
+        assert_eq!(telemetry.get(MetricId::MaxBatchRows), stats.max_batch_rows as u64);
+        let occ = telemetry.snapshot();
+        assert_eq!(
+            occ.hist(HistId::WindowOccupancyRows).count,
+            stats.batches,
+            "one occupancy sample per executed window"
+        );
+        assert!(occ.hist(HistId::LaneMeanUs).count >= 1, "Mean lane latency sampled");
     }
 
     fn router_multi(uncertainty: bool) -> ShardRouter {

@@ -149,6 +149,53 @@
 //! can assert shed ≡ excess exactly; a slow reader whose write buffer
 //! exceeds its cap is closed rather than buffered indefinitely.
 //!
+//! # Telemetry and flight recording
+//!
+//! Observability follows one discipline: **the instrument must not
+//! perturb what it measures**. Three pieces
+//! ([`crate::telemetry`]):
+//!
+//! * **Registries, not string counters.** Every tier — shard, router,
+//!   micro-batch worker, net reactor, supervisor, shard store — owns one
+//!   [`crate::telemetry::Registry`]: statically-keyed `AtomicU64` slots
+//!   addressed by [`crate::telemetry::MetricId`] /
+//!   [`crate::telemetry::HistId`] enums. A warm-path increment is one
+//!   relaxed atomic add — no map lookup, no allocation, no lock (the
+//!   `alloc_count.rs` contract covers counters, histograms, and span
+//!   recording). Latency histograms are fixed log₂ buckets with
+//!   bucket-derived `p50`/`p99`, O(1) memory forever. The legacy
+//!   [`crate::metrics::Counters`] remains as the string-keyed *view*
+//!   (`counters()` on each owner) for rendering and tests; hot paths
+//!   never touch it (CI greps `serve/ net/ persist/` for string-keyed
+//!   increments).
+//! * **What is instrumented.** Shard rounds time their phases —
+//!   plan (outlier nomination), WAL append, fused inc/dec, publish —
+//!   plus round latency; the micro-batch window records occupancy and
+//!   per-[`QueryKind`] lane latency; the reactor counts
+//!   accept/shed/serve/protocol-error events; the store times WAL
+//!   appends and checkpoints; probes feed a residual-trend histogram
+//!   (pico-units). Registries merge upward:
+//!   [`RouterHandle::telemetry`] folds router + every shard into one
+//!   [`crate::telemetry::TelemetrySnapshot`] fleet view.
+//! * **Flight recorder.** Each shard and the reactor keep a
+//!   fixed-capacity ring of POD span events
+//!   ([`crate::telemetry::FlightRecorder`]: round start/end, WAL, inc/dec,
+//!   publish, rollback, retry, probe, quarantine, heal, shed, accept...).
+//!   Recording is a 25-byte struct store into a pre-reserved ring. The
+//!   ring is frozen into a labeled [`crate::telemetry::FlightDump`] at
+//!   failure boundaries — shard quarantine
+//!   ([`ShardSupervisor::flight_dumps`]) and crash recovery
+//!   ([`ShardRouter::recovery_flight_dumps`]) — so every post-mortem
+//!   ships with the event trail that led into it.
+//!
+//! On the wire, the `MKTL` stats frame ([`crate::net::NetClient::stats`])
+//! carries the canonical snapshot encoding — deterministic, so two pulls
+//! against an idle server are byte-identical; the pull path itself
+//! records nothing. `TelemetrySnapshot::render_text` / `write_json` are
+//! the human/machine exposition formats, and the
+//! `serve/telemetry_overhead` microbench gates the instrumented round at
+//! ≤ 3% over a [`crate::telemetry::Registry::disabled`] baseline.
+//!
 //! Chaos coverage: the `chaos` cargo feature compiles in seeded fault
 //! hooks ([`crate::health::fault::FaultPlan`]) and
 //! `rust/tests/chaos_suite.rs` drives NaN rows, poison batches, forced

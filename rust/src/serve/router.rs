@@ -39,6 +39,7 @@
 //! only happens mid-heal.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::config::Space;
 use crate::coordinator::engine::EnginePredictWork;
@@ -54,6 +55,7 @@ use crate::persist::store::{self, recover_shard, DurabilityConfig, RouterMeta, S
 use crate::streaming::batcher::Batcher;
 use crate::streaming::sink::SinkNode;
 use crate::streaming::StreamEvent;
+use crate::telemetry::{FlightDump, MetricId, Registry, SpanKind, TelemetrySnapshot};
 
 use super::publish::ShardStatus;
 use super::query::{PredictRequest, PredictResponse, QueryKind};
@@ -179,12 +181,27 @@ pub struct RouterPredictWork {
 #[derive(Clone)]
 pub struct RouterHandle {
     shards: Vec<SnapshotHandle>,
+    router_telemetry: Arc<Registry>,
 }
 
 impl RouterHandle {
     /// Number of shards behind this handle.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Merge the fleet's live registries — the router's own slots plus
+    /// every shard's (rounds, phase histograms, durability) — into one
+    /// frozen [`TelemetrySnapshot`]. This is the serve-tier half of the
+    /// `MKTL` stats payload; it reads only relaxed atomics, so it never
+    /// contends with the writers it observes.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot::new();
+        self.router_telemetry.merge_into(&mut snap);
+        for s in &self.shards {
+            s.telemetry().merge_into(&mut snap);
+        }
+        snap
     }
 
     /// The same handle with its shards visited in `order` — a test/debug
@@ -208,6 +225,7 @@ impl RouterHandle {
         }
         Ok(RouterHandle {
             shards: order.iter().map(|&i| self.shards[i].clone()).collect(),
+            router_telemetry: Arc::clone(&self.router_telemetry),
         })
     }
 
@@ -577,12 +595,16 @@ pub struct ShardRouter {
     batcher: Batcher,
     /// The per-shard round policy (kept for durability metadata).
     base: CoordinatorConfig,
-    /// Fleet-level recovery observations (`wal_records_replayed`,
-    /// `wal_replay_skipped`, `snapshot_fallbacks`, ...); empty on a
-    /// bootstrapped router.
-    recovery: Counters,
-    /// routed / rounds.
-    pub counters: Counters,
+    /// Router-level metric slots: routed / rounds / shard_errors, plus
+    /// the fleet recovery observations (`wal_records_replayed`,
+    /// `wal_replay_skipped`, `snapshot_fallbacks`, ...) when this router
+    /// came out of [`ShardRouter::recover`]. Shared with every
+    /// [`RouterHandle`] so the read side can merge the fleet view.
+    telemetry: Arc<Registry>,
+    /// One flight-recorder dump per recovered shard — the event trail
+    /// replay produced, shipped with the recovery so post-mortems can see
+    /// what was rebuilt. Empty on a bootstrapped router.
+    recovery_flight_dumps: Vec<FlightDump>,
 }
 
 impl ShardRouter {
@@ -638,8 +660,8 @@ impl ShardRouter {
             rr: 0,
             batcher: Batcher::new(policy),
             base: cfg.base,
-            recovery: Counters::default(),
-            counters: Counters::default(),
+            telemetry: Arc::new(Registry::new()),
+            recovery_flight_dumps: Vec::new(),
         })
     }
 
@@ -670,7 +692,28 @@ impl ShardRouter {
 
     /// A cloneable read front-end over all shards.
     pub fn handle(&self) -> RouterHandle {
-        RouterHandle { shards: self.shards.iter().map(|s| s.handle()).collect() }
+        RouterHandle {
+            shards: self.shards.iter().map(|s| s.handle()).collect(),
+            router_telemetry: Arc::clone(&self.telemetry),
+        }
+    }
+
+    /// The router's own metric slots (routed / rounds / shard_errors /
+    /// recovery observations).
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// String-keyed compatibility view over the router's registry (the
+    /// legacy `counters` field's rendering surface).
+    pub fn counters(&self) -> Counters {
+        self.telemetry.counters()
+    }
+
+    /// The flight-recorder dumps [`ShardRouter::recover`] shipped, one
+    /// per recovered shard (empty on a bootstrapped router).
+    pub fn recovery_flight_dumps(&self) -> &[FlightDump] {
+        &self.recovery_flight_dumps
     }
 
     // ---- durability ----
@@ -726,7 +769,8 @@ impl ShardRouter {
     /// exactly-once application.
     pub fn recover(dir: &Path) -> Result<Self> {
         let meta = store::read_meta(dir)?;
-        let mut recovery = Counters::default();
+        let telemetry = Arc::new(Registry::new());
+        let mut recovery_flight_dumps = Vec::with_capacity(meta.shards);
         let mut shards = Vec::with_capacity(meta.shards);
         for id in 0..meta.shards {
             // newest snapshot that both decodes AND refactorizes: a state
@@ -738,23 +782,27 @@ impl ShardRouter {
                 match rec.state.rebuild() {
                     Ok(engine) => break (rec, engine),
                     Err(e) if !e.is_transient() => {
-                        recovery.inc("snapshot_fallbacks");
+                        telemetry.inc(MetricId::SnapshotFallbacks);
                         quarantine_snapshot(&snapshot_path(dir, id, rec.state.generation))?;
                     }
                     Err(e) => return Err(e),
                 }
             };
-            recovery.merge_from(&rec.counters);
+            telemetry.absorb_counters(&rec.counters);
             let mut shard =
                 Shard::from_engine(id, engine, &meta.base, rec.state.epoch, rec.state.high_seq);
+            let mut replayed = 0u64;
             for record in &rec.records {
                 match shard.replay_record(record) {
-                    Ok(true) => recovery.inc("wal_records_replayed"),
+                    Ok(true) => {
+                        replayed += 1;
+                        telemetry.inc(MetricId::WalRecordsReplayed);
+                    }
                     Ok(false) => {}
                     // round failures are deterministic in (engine state,
                     // batch): a replay failure reproduces one the live run
                     // already resolved by quarantine or drop
-                    Err(_) => recovery.inc("wal_replay_skipped"),
+                    Err(_) => telemetry.inc(MetricId::WalReplaySkipped),
                 }
             }
             // probe-verify the recovered inverse before it serves reads
@@ -762,10 +810,14 @@ impl ShardRouter {
             match probe.check(shard.engine()) {
                 Ok(report) if report.verdict == HealthVerdict::Healthy => {}
                 _ => {
-                    recovery.inc("recovered_quarantined");
+                    telemetry.inc(MetricId::RecoveredQuarantined);
                     shard.set_status(ShardStatus::Quarantined);
                 }
             }
+            // the replay trail (round/WAL/publish spans) ships with the
+            // recovery as a per-shard post-mortem dump
+            shard.record_span(SpanKind::Recover, id as u64, replayed);
+            recovery_flight_dumps.push(shard.flight_dump(format!("shard-{id} recovery")));
             let epoch = shard.handle().epoch();
             let st = ShardStore::resume(
                 dir,
@@ -791,8 +843,8 @@ impl ShardRouter {
             rr: 0,
             batcher: Batcher::new(policy),
             base: meta.base,
-            recovery,
-            counters: Counters::default(),
+            telemetry,
+            recovery_flight_dumps,
         })
     }
 
@@ -805,11 +857,10 @@ impl ShardRouter {
     /// Fleet durability counters: the recovery scan's observations merged
     /// with every shard store's live counters.
     pub fn durability_counters(&self) -> Counters {
-        let mut out = Counters::default();
-        out.merge_from(&self.recovery);
+        let mut out = self.telemetry.counters_for(&store::DURABILITY_IDS);
         for shard in &self.shards {
             if let Some(c) = shard.durability_counters() {
-                out.merge_from(c);
+                out.merge_from(&c);
             }
         }
         out
@@ -836,7 +887,7 @@ impl ShardRouter {
     /// Route one arrival onto its shard's pending queue.
     pub fn ingest(&mut self, ev: StreamEvent) {
         let s = self.route(&ev);
-        self.counters.inc("routed");
+        self.telemetry.inc(MetricId::Routed);
         self.shards[s].push(ev);
     }
 
@@ -856,9 +907,9 @@ impl ShardRouter {
             }
         }
         if !report.outcomes.is_empty() {
-            self.counters.inc("rounds");
+            self.telemetry.inc(MetricId::Rounds);
         }
-        self.counters.add("shard_errors", report.errors.len() as u64);
+        self.telemetry.add(MetricId::ShardErrors, report.errors.len() as u64);
         report
     }
 
@@ -871,7 +922,7 @@ impl ShardRouter {
                 Err(e) => report.errors.push((shard.id(), e)),
             }
         }
-        self.counters.add("shard_errors", report.errors.len() as u64);
+        self.telemetry.add(MetricId::ShardErrors, report.errors.len() as u64);
         report
     }
 
@@ -933,7 +984,7 @@ impl ShardRouter {
             for (shard, sink) in self.shards.iter_mut().zip(sinks.iter_mut()) {
                 let want = shard.max_batch();
                 for ev in sink.drain(want, std::time::Duration::from_millis(5)) {
-                    self.counters.inc("routed");
+                    self.telemetry.inc(MetricId::Routed);
                     shard.push(ev);
                 }
             }
@@ -1041,7 +1092,16 @@ mod tests {
         assert_eq!(report.added(), 8);
         assert_eq!(r.n_samples(), 56);
         assert_eq!(r.handle().epochs(), vec![1, 1]);
-        assert_eq!(r.counters.get("routed"), 8);
+        assert_eq!(r.counters().get("routed"), 8);
+        assert_eq!(r.counters().get("rounds"), 1);
+        let snap = r.handle().telemetry();
+        assert_eq!(snap.counter(crate::telemetry::MetricId::Routed), 8);
+        assert_eq!(
+            snap.counter(crate::telemetry::MetricId::Added),
+            8,
+            "fleet view merges shard registries"
+        );
+        assert_eq!(snap.hist(crate::telemetry::HistId::RoundLatencyUs).count, 2);
     }
 
     #[test]

@@ -15,11 +15,12 @@ use crate::coordinator::{CoordinatorConfig, RoundOutcome};
 use crate::ensure_shape;
 use crate::error::Result;
 use crate::linalg::Mat;
-use crate::metrics::{Counters, LatencyHist, Timer};
+use crate::metrics::{Counters, Timer};
 use crate::persist::store::ShardStore;
 use crate::persist::wal::WalRecord;
 use crate::streaming::outlier::detect_scored_multi;
 use crate::streaming::StreamEvent;
+use crate::telemetry::{FlightDump, FlightRecorder, HistId, MetricId, Registry, SpanKind};
 use std::sync::Arc;
 
 use super::publish::{Epoch, HealthCell, ShardStatus};
@@ -42,12 +43,20 @@ pub struct SnapshotQueryWork {
 pub struct SnapshotHandle {
     cell: Arc<Epoch<Engine>>,
     health: Arc<HealthCell>,
+    telemetry: Arc<Registry>,
 }
 
 impl SnapshotHandle {
     /// The shard's current serving status (one atomic load).
     pub fn status(&self) -> ShardStatus {
         self.health.get()
+    }
+
+    /// The shard's live metric slots — what the reader-side fleet view
+    /// ([`super::router::RouterHandle::telemetry`], the `MKTL` stats
+    /// frame) merges without touching the writer.
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
     }
 
     /// True when the router may fan in over this shard (anything but
@@ -219,11 +228,14 @@ pub struct Shard {
     x_new: Mat,
     y_new: Mat,
     y_row: Vec<f64>,
-    /// rounds / added / removed / rollbacks / epochs.
-    pub counters: Counters,
-    /// Update-latency histogram (the write-path half of the throughput
-    /// headline; the read path never appears here by construction).
-    pub update_latency: LatencyHist,
+    /// Lock-free metric slots: rounds / added / removed / rollbacks /
+    /// phase + round latency histograms. Shared (`Arc`) with this shard's
+    /// [`SnapshotHandle`]s and attached [`ShardStore`], so readers merge a
+    /// fleet view without touching the writer.
+    telemetry: Arc<Registry>,
+    /// Single-writer flight recorder for the shard's round phases — the
+    /// supervisor dumps it at quarantine, recovery ships it per shard.
+    recorder: FlightRecorder,
 }
 
 impl Shard {
@@ -282,8 +294,8 @@ impl Shard {
             x_new: Mat::default(),
             y_new: Mat::default(),
             y_row: Vec::new(),
-            counters: Counters::default(),
-            update_latency: LatencyHist::new(),
+            telemetry: Arc::new(Registry::new()),
+            recorder: FlightRecorder::default(),
         }
     }
 
@@ -322,7 +334,45 @@ impl Shard {
         SnapshotHandle {
             cell: Arc::clone(&self.cell),
             health: Arc::clone(&self.health),
+            telemetry: Arc::clone(&self.telemetry),
         }
+    }
+
+    /// This shard's live metric slots.
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// Replace the shard's registry (e.g. to share one registry across a
+    /// tier). Counts recorded so far are folded into `reg`, and an
+    /// attached store starts recording there too. Call before taking
+    /// [`Shard::handle`]s — existing handles keep the old registry.
+    pub fn set_telemetry(&mut self, reg: Arc<Registry>) {
+        reg.absorb(&self.telemetry);
+        if let Some(store) = self.store.as_mut() {
+            store.set_telemetry(Arc::clone(&reg));
+        }
+        self.telemetry = reg;
+    }
+
+    /// String-keyed compatibility view over the shard's registry (the
+    /// legacy `counters` field's rendering surface; names are unchanged).
+    pub fn counters(&self) -> Counters {
+        self.telemetry.counters()
+    }
+
+    /// Freeze the shard's flight-recorder window into a labeled dump —
+    /// what the supervisor attaches the moment it quarantines this shard.
+    pub fn flight_dump(&self, label: impl Into<String>) -> FlightDump {
+        self.recorder.dump(label)
+    }
+
+    /// Stamp a span into this shard's recorder from its owner (the
+    /// supervisor's retry/quarantine decisions, the router's recovery) so
+    /// the dump carries the decisions *about* the shard alongside the
+    /// events *inside* it.
+    pub(crate) fn record_span(&mut self, kind: SpanKind, a: u64, b: u64) {
+        self.recorder.record(kind, a, b);
     }
 
     /// Current serving status.
@@ -353,7 +403,11 @@ impl Shard {
     /// [`Shard::apply_update`], [`Shard::apply_update_multi`]) are
     /// rejected while a store is attached — they would mutate the engine
     /// without a WAL record.
-    pub fn attach_store(&mut self, store: ShardStore) {
+    pub fn attach_store(&mut self, mut store: ShardStore) {
+        // one registry per shard: the store's WAL/checkpoint slots land in
+        // the same instance as the round slots (its pre-attach counts —
+        // e.g. the create()-time snapshot — are absorbed first)
+        store.set_telemetry(Arc::clone(&self.telemetry));
         self.store = Some(store);
     }
 
@@ -368,9 +422,10 @@ impl Shard {
         self.high_seq
     }
 
-    /// The durability counters, when a store is attached.
-    pub fn durability_counters(&self) -> Option<&Counters> {
-        self.store.as_ref().map(|s| &s.counters)
+    /// The durability counters, when a store is attached (a string-keyed
+    /// view over the store's registry slots).
+    pub fn durability_counters(&self) -> Option<Counters> {
+        self.store.as_ref().map(|s| s.counters())
     }
 
     fn ensure_not_durable(&self, ctx: &'static str) -> Result<()> {
@@ -407,7 +462,8 @@ impl Shard {
     fn heal_inner(&mut self) -> Result<u64> {
         self.engine.refit()?;
         let epoch = self.cell.publish(self.engine.clone());
-        self.counters.inc("heals");
+        self.telemetry.inc(MetricId::Heals);
+        self.recorder.record(SpanKind::Heal, self.id as u64, 0);
         self.health.set(ShardStatus::Healthy);
         Ok(epoch)
     }
@@ -445,6 +501,9 @@ impl Shard {
     }
 
     fn apply_batch_inner(&mut self, events: &[StreamEvent]) -> Result<RoundOutcome> {
+        self.recorder.record(SpanKind::RoundStart, events.len() as u64, 0);
+        // plan phase: outlier nomination + insertion-block staging
+        let t_plan = Timer::start();
         let removals: Vec<usize> = match &self.cfg.outlier {
             Some(ocfg) => {
                 let pred = self.engine.krr().predict_training_multi()?;
@@ -470,6 +529,7 @@ impl Shard {
             self.y_row.extend_from_slice(&ev.y_tail);
             self.y_new.push_row(&self.y_row)?;
         }
+        self.telemetry.record_secs(HistId::PhasePlanUs, t_plan.elapsed());
         self.update_and_publish(&removals)
     }
 
@@ -516,7 +576,7 @@ impl Shard {
         if y.iter().all(|v| v.is_finite()) {
             Ok(())
         } else {
-            self.counters.inc("rejected_nonfinite");
+            self.telemetry.inc(MetricId::RejectedNonfinite);
             Err(crate::error::Error::InvalidUpdate(
                 "insertion targets carry non-finite values".into(),
             ))
@@ -533,7 +593,7 @@ impl Shard {
             self.engine.dim()
         );
         if !x_new.is_finite() {
-            self.counters.inc("rejected_nonfinite");
+            self.telemetry.inc(MetricId::RejectedNonfinite);
             return Err(crate::error::Error::InvalidUpdate(
                 "insertion features carry non-finite values".into(),
             ));
@@ -567,6 +627,7 @@ impl Shard {
         if self.pending.is_empty() {
             return Ok(None);
         }
+        self.recorder.record(SpanKind::Flush, self.pending.len() as u64, 0);
         let take = self.pending.len().min(self.cfg.batch.max_batch);
         // drain the OLDEST events first (arrival order)
         let batch: Vec<StreamEvent> = self.pending.drain(..take).collect();
@@ -585,10 +646,10 @@ impl Shard {
             })
             .collect();
         if nonfinite > 0 {
-            self.counters.add("rejected_nonfinite", nonfinite);
+            self.telemetry.add(MetricId::RejectedNonfinite, nonfinite);
         }
         if batch.len() < before {
-            self.counters.add("rejected", (before - batch.len()) as u64);
+            self.telemetry.add(MetricId::Rejected, (before - batch.len()) as u64);
         }
         if batch.is_empty() {
             return Ok(None);
@@ -596,12 +657,13 @@ impl Shard {
         #[cfg(feature = "chaos")]
         if self.chaos_fail_rounds > 0 {
             self.chaos_fail_rounds -= 1;
-            self.counters.inc("chaos_forced_failures");
+            self.telemetry.inc(MetricId::ChaosForcedFailures);
             self.last_attempt = batch.len();
+            self.recorder.record(SpanKind::Rollback, batch.len() as u64, 0);
             if self.cfg.snapshot_rollback {
                 self.pending.splice(0..0, batch);
             } else {
-                self.counters.add("dropped", batch.len() as u64);
+                self.telemetry.add(MetricId::Dropped, batch.len() as u64);
             }
             return Err(crate::error::Error::numerical(
                 "Shard::flush",
@@ -614,7 +676,12 @@ impl Shard {
         // transient or permanent per its persist classification.
         if let Some(store) = self.store.as_mut() {
             let seq = self.cell.epoch() + 1;
-            if let Err(e) = store.log_batch(seq, &batch) {
+            let t = Timer::start();
+            let logged = store.log_batch(seq, &batch);
+            let wal_us = (t.elapsed() * 1e6) as u64;
+            self.telemetry.record_hist(HistId::PhaseWalUs, wal_us);
+            self.recorder.record(SpanKind::WalAppend, seq, wal_us);
+            if let Err(e) = logged {
                 self.last_attempt = batch.len();
                 self.pending.splice(0..0, batch);
                 return Err(e);
@@ -638,7 +705,7 @@ impl Shard {
                 if self.cfg.snapshot_rollback {
                     self.pending.splice(0..0, batch);
                 } else {
-                    self.counters.add("dropped", batch.len() as u64);
+                    self.telemetry.add(MetricId::Dropped, batch.len() as u64);
                 }
                 Err(e)
             }
@@ -650,7 +717,11 @@ impl Shard {
         let epoch = self.cell.epoch();
         let high_seq = self.high_seq;
         if let Some(store) = self.store.as_mut() {
-            store.maybe_checkpoint(&self.engine, epoch, high_seq)?;
+            let t = Timer::start();
+            if store.maybe_checkpoint(&self.engine, epoch, high_seq)? {
+                let us = (t.elapsed() * 1e6) as u64;
+                self.recorder.record(SpanKind::Checkpoint, store.generation(), us);
+            }
         }
         Ok(())
     }
@@ -701,15 +772,24 @@ impl Shard {
             Err(e) => {
                 if let Some(snap) = snapshot {
                     self.engine.restore(snap);
-                    self.counters.inc("rollbacks");
+                    self.telemetry.inc(MetricId::Rollbacks);
+                    self.recorder.record(SpanKind::Rollback, self.y_new.rows() as u64, 0);
                 }
                 return Err(e);
             }
         }
-        self.counters.add("folded", self.engine.last_round_folds() as u64);
+        let incdec_us = (t.elapsed() * 1e6) as u64;
+        self.telemetry.record_hist(HistId::PhaseIncDecUs, incdec_us);
+        self.recorder.record(SpanKind::IncDec, self.y_new.rows() as u64, incdec_us);
+        self.telemetry.add(MetricId::Folded, self.engine.last_round_folds() as u64);
         // publish: the O(state) clone is the epoch snapshot itself; readers
         // switch to it atomically and the writer keeps its private copy
+        let t_pub = Timer::start();
         let epoch = self.cell.publish(self.engine.clone());
+        let publish_us = (t_pub.elapsed() * 1e6) as u64;
+        self.telemetry.record_hist(HistId::PhasePublishUs, publish_us);
+        self.telemetry.inc(MetricId::EpochsPublished);
+        self.recorder.record(SpanKind::Publish, epoch, publish_us);
         let dt = t.elapsed();
         let outcome = RoundOutcome {
             added: self.y_new.rows(),
@@ -718,10 +798,11 @@ impl Shard {
             n_after: self.engine.n_samples(),
         };
         debug_assert!(epoch > 0);
-        self.counters.inc("rounds");
-        self.counters.add("added", outcome.added as u64);
-        self.counters.add("removed", outcome.removed as u64);
-        self.update_latency.record(dt);
+        self.telemetry.inc(MetricId::Rounds);
+        self.telemetry.add(MetricId::Added, outcome.added as u64);
+        self.telemetry.add(MetricId::Removed, outcome.removed as u64);
+        self.telemetry.record_secs(HistId::RoundLatencyUs, dt);
+        self.recorder.record(SpanKind::RoundEnd, outcome.added as u64, (dt * 1e6) as u64);
         Ok(outcome)
     }
 }

@@ -41,7 +41,9 @@
 use crate::health::probe::{HealthProbe, HealthVerdict, ProbeConfig};
 use crate::metrics::Counters;
 use crate::streaming::StreamEvent;
+use crate::telemetry::{FlightDump, HistId, MetricId, Registry, SpanKind};
 use crate::util::prng::SplitMix64;
+use std::sync::Arc;
 use std::time::Duration;
 
 use super::publish::ShardStatus;
@@ -156,10 +158,15 @@ pub struct ShardSupervisor {
     cfg: SupervisorConfig,
     states: Vec<ShardState>,
     quarantined: Vec<QuarantinedBatch>,
-    /// retries / batches_quarantined / events_quarantined /
-    /// shards_quarantined / shards_recovered / probe_breaches /
-    /// probe_trips / heal_failures.
-    pub counters: Counters,
+    /// Supervisor metric slots: retries / batches_quarantined /
+    /// events_quarantined / shards_quarantined / shards_recovered /
+    /// probe_breaches / probe_trips / heal_failures, plus the
+    /// probe-residual trend histogram.
+    telemetry: Arc<Registry>,
+    /// One flight-recorder dump per shard quarantine, captured the moment
+    /// the shard's status flips — the event trail leading into the
+    /// failure, frozen before any heal can overwrite it.
+    flight_dumps: Vec<FlightDump>,
     round: u64,
     #[cfg(feature = "chaos")]
     plan: Option<FaultPlan>,
@@ -179,7 +186,8 @@ impl ShardSupervisor {
             cfg,
             states,
             quarantined: Vec::new(),
-            counters: Counters::default(),
+            telemetry: Arc::new(Registry::new()),
+            flight_dumps: Vec::new(),
             round: 0,
             #[cfg(feature = "chaos")]
             plan: None,
@@ -194,6 +202,23 @@ impl ShardSupervisor {
     /// The quarantined batches, oldest first.
     pub fn quarantined_batches(&self) -> &[QuarantinedBatch] {
         &self.quarantined
+    }
+
+    /// The supervisor-tier metrics registry.
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// Snapshot of the supervisor counters under their legacy string keys.
+    pub fn counters(&self) -> Counters {
+        self.telemetry.counters()
+    }
+
+    /// Flight-recorder dumps captured at each shard quarantine, oldest
+    /// first. Each dump freezes the quarantined shard's span trail at the
+    /// moment its status flipped.
+    pub fn flight_dumps(&self) -> &[FlightDump] {
+        &self.flight_dumps
     }
 
     /// Arm a deterministic fault plan: scheduled faults fire at the start
@@ -230,7 +255,7 @@ impl ShardSupervisor {
                     shard.chaos_corrupt_inverse(factor);
                 }
             }
-            self.counters.inc("faults_injected");
+            self.telemetry.inc(MetricId::FaultsInjected);
         }
     }
 
@@ -285,11 +310,11 @@ impl ShardSupervisor {
             Ok(_) => {
                 self.states[si].consecutive_failed_rounds = 0;
                 self.states[si].probe.reset();
-                self.counters.inc("shards_recovered");
+                self.telemetry.inc(MetricId::ShardsRecovered);
             }
             Err(_) => {
                 // refit itself failed: stay quarantined, try next round
-                self.counters.inc("heal_failures");
+                self.telemetry.inc(MetricId::HealFailures);
             }
         }
     }
@@ -322,7 +347,8 @@ impl ShardSupervisor {
                         && shard.pending() >= shard.last_attempt_len();
                     let retryable = e.is_transient() && requeued;
                     if retryable && attempt < max_attempts {
-                        self.counters.inc("retries");
+                        self.telemetry.inc(MetricId::Retries);
+                        shard.record_span(SpanKind::Retry, si as u64, u64::from(attempt));
                         let key = ((si as u64) << 32) | self.round;
                         std::thread::sleep(self.cfg.retry.backoff_for(key, attempt));
                         continue;
@@ -330,8 +356,8 @@ impl ShardSupervisor {
                     // out of budget (or unretryable): quarantine the batch
                     let n = shard.last_attempt_len();
                     let events = shard.quarantine_front(n);
-                    self.counters.inc("batches_quarantined");
-                    self.counters.add("events_quarantined", events.len() as u64);
+                    self.telemetry.inc(MetricId::BatchesQuarantined);
+                    self.telemetry.add(MetricId::EventsQuarantined, events.len() as u64);
                     self.quarantined.push(QuarantinedBatch {
                         shard: si,
                         round: self.round,
@@ -354,48 +380,72 @@ impl ShardSupervisor {
         }
     }
 
-    fn mark_round_failed(&mut self, router: &ShardRouter, si: usize) {
+    fn mark_round_failed(&mut self, router: &mut ShardRouter, si: usize) {
         let st = &mut self.states[si];
         st.consecutive_failed_rounds += 1;
         if st.consecutive_failed_rounds >= self.cfg.quarantine_after {
-            router.shard(si).set_status(ShardStatus::Quarantined);
-            self.counters.inc("shards_quarantined");
+            self.quarantine_shard(router, si);
         } else {
             router.shard(si).set_status(ShardStatus::Degraded);
         }
+    }
+
+    /// Flip the shard to `Quarantined` and freeze its flight recorder:
+    /// the dump captures the span trail that led into the failure before
+    /// any heal attempt can push it out of the ring.
+    fn quarantine_shard(&mut self, router: &mut ShardRouter, si: usize) {
+        router.shard(si).set_status(ShardStatus::Quarantined);
+        self.telemetry.inc(MetricId::ShardsQuarantined);
+        let round = self.round;
+        let shard = router.shard_mut(si);
+        shard.record_span(SpanKind::Quarantine, si as u64, round);
+        self.flight_dumps
+            .push(shard.flight_dump(format!("shard-{si} quarantine round {round}")));
     }
 
     fn probe_shard(&mut self, router: &mut ShardRouter, si: usize) {
         if self.cfg.probe_every == 0 || self.round % self.cfg.probe_every != 0 {
             return;
         }
-        let verdict = match self.states[si].probe.check(router.shard(si).engine()) {
-            Ok(rep) => rep.verdict,
+        let checked = self.states[si].probe.check(router.shard(si).engine());
+        let verdict = match checked {
+            Ok(rep) => {
+                // residual trend in pico-units: residuals near the trip
+                // threshold sit around 1e-8..1e-3, far below the 1µ-unit
+                // resolution the latency histograms use
+                let picos = (rep.max_residual * 1e12) as u64;
+                self.telemetry.record_hist(HistId::ProbeResidualPicos, picos);
+                router.shard_mut(si).record_span(
+                    SpanKind::Probe,
+                    picos,
+                    rep.consecutive_breaches as u64,
+                );
+                rep.verdict
+            }
             // a probe that cannot even run is a critical signal
             Err(_) => HealthVerdict::Critical,
         };
         match verdict {
             HealthVerdict::Healthy => {}
             HealthVerdict::Degraded => {
-                self.counters.inc("probe_breaches");
+                self.telemetry.inc(MetricId::ProbeBreaches);
                 if router.shard(si).status() == ShardStatus::Healthy {
                     router.shard(si).set_status(ShardStatus::Degraded);
                 }
             }
             HealthVerdict::Critical => {
-                self.counters.inc("probe_breaches");
-                self.counters.inc("probe_trips");
+                self.telemetry.inc(MetricId::ProbeBreaches);
+                self.telemetry.inc(MetricId::ProbeTrips);
                 // self-heal immediately on the writer copy; readers keep
                 // serving the published epoch throughout
                 match router.shard_mut(si).heal() {
                     Ok(_) => {
                         self.states[si].probe.reset();
-                        self.counters.inc("heals");
+                        self.telemetry.inc(MetricId::Heals);
                     }
                     Err(_) => {
-                        router.shard(si).set_status(ShardStatus::Quarantined);
-                        self.counters.inc("shards_quarantined");
-                        self.counters.inc("heal_failures");
+                        self.telemetry.inc(MetricId::HealFailures);
+                        self.quarantine_shard(router, si);
                     }
                 }
             }
@@ -450,7 +500,8 @@ mod tests {
         assert!(rep.errors.is_empty(), "{:?}", rep.errors);
         assert_eq!(rep.added(), 8);
         assert!(sup.quarantined_batches().is_empty());
-        assert_eq!(sup.counters.get("batches_quarantined"), 0);
+        assert_eq!(sup.counters().get("batches_quarantined"), 0);
+        assert!(sup.flight_dumps().is_empty(), "no quarantine, no dump");
         assert!(r.handle().statuses().iter().all(|s| *s == ShardStatus::Healthy));
     }
 
@@ -463,7 +514,7 @@ mod tests {
         let rep = sup.drain(&mut r, 8);
         assert!(rep.errors.is_empty());
         let nonfinite: u64 = (0..r.num_shards())
-            .map(|i| r.shard(i).counters.get("rejected_nonfinite"))
+            .map(|i| r.shard(i).counters().get("rejected_nonfinite"))
             .sum();
         assert_eq!(nonfinite, 2, "both bad rows counted at the boundary");
         assert!(sup.quarantined_batches().is_empty(), "rejects are not quarantines");
@@ -490,8 +541,8 @@ mod tests {
         r.shard_mut(1).push(StreamEvent::single(good.x.row(0).to_vec(), good.y[0], 0, 1));
         let rep = sup.drain(&mut r, 8);
         assert_eq!(rep.errors.len(), 1, "poison shard reports exactly one failure");
-        assert_eq!(sup.counters.get("retries"), 2, "R−1 retries before quarantine");
-        assert_eq!(sup.counters.get("batches_quarantined"), 1);
+        assert_eq!(sup.counters().get("retries"), 2, "R−1 retries before quarantine");
+        assert_eq!(sup.counters().get("batches_quarantined"), 1);
         let q = &sup.quarantined_batches()[0];
         assert_eq!((q.shard, q.attempts), (0, 3));
         assert_eq!(q.events.len(), 1, "the poison event is inspectable");
@@ -517,13 +568,13 @@ mod tests {
         r.shard_mut(0).push(StreamEvent::single(vec![1e200; 5], 0.0, 0, 0));
         let rep = sup.drain(&mut r, 4);
         assert_eq!(rep.errors.len(), 1);
-        assert_eq!(sup.counters.get("retries"), 0, "dropped batches never retry");
-        assert_eq!(sup.counters.get("batches_quarantined"), 1);
+        assert_eq!(sup.counters().get("retries"), 0, "dropped batches never retry");
+        assert_eq!(sup.counters().get("batches_quarantined"), 1);
         assert!(
             sup.quarantined_batches()[0].events.is_empty(),
             "events were already dropped by the shard's policy"
         );
-        assert_eq!(r.shard(0).counters.get("dropped"), 1);
+        assert_eq!(r.shard(0).counters().get("dropped"), 1);
     }
 
     #[test]
@@ -546,6 +597,14 @@ mod tests {
         sup.supervise_round(&mut r);
         assert_eq!(r.shard(0).status(), ShardStatus::Quarantined);
         assert_eq!(r.handle().num_serving(), 1);
+        // the quarantine froze a flight dump with the failing round's trail
+        assert_eq!(sup.flight_dumps().len(), 1);
+        let dump = &sup.flight_dumps()[0];
+        assert!(dump.label.contains("shard-0"), "{}", dump.label);
+        assert!(
+            dump.events.iter().any(|e| e.kind == crate::telemetry::SpanKind::Quarantine),
+            "dump ends with the quarantine marker"
+        );
         let q = synth::ecg_like(3, 5, 44);
         // reads still answered from the healthy shard
         assert_eq!(r.handle().predict(&q.x).unwrap().len(), 3);
@@ -553,7 +612,7 @@ mod tests {
         let e0 = r.shard(0).handle().epoch();
         sup.supervise_round(&mut r);
         assert_eq!(r.shard(0).status(), ShardStatus::Healthy);
-        assert_eq!(sup.counters.get("shards_recovered"), 1);
+        assert_eq!(sup.counters().get("shards_recovered"), 1);
         assert!(r.shard(0).handle().epoch() > e0, "heal republishes");
         assert_eq!(r.handle().num_serving(), 2);
     }

@@ -1,0 +1,36 @@
+//! Fleet telemetry: the lock-free metrics registry, the hot-path flight
+//! recorder, and the snapshot type the `MKTL` wire frame carries.
+//!
+//! Three pieces, one discipline — observability must cost (almost)
+//! nothing on the paths it observes:
+//!
+//! * [`registry::Registry`] — statically-keyed `AtomicU64` counters,
+//!   high-water gauges, and fixed-bucket log₂ histograms. [`MetricId`] /
+//!   [`HistId`] enums replace string keys, increments are relaxed
+//!   atomics, and the warm path is O(1) and allocation-free (the
+//!   `alloc_count.rs` contract covers it). Per-owner registries merge
+//!   into one [`TelemetrySnapshot`] fleet view, following the PR 8
+//!   durability-counter idiom.
+//! * [`trace::FlightRecorder`] — a per-thread fixed-capacity ring of POD
+//!   [`SpanEvent`]s (round/WAL/publish/probe/quarantine/...), dumped
+//!   automatically at failure boundaries so post-mortems ship with the
+//!   failure.
+//! * [`TelemetrySnapshot`] — the frozen fleet view: deterministic
+//!   canonical encoding (the `MKTL` stats frame payload pulled by
+//!   `NetClient::stats`), `render_text` for humans, `write_json` for
+//!   machines.
+//!
+//! The legacy [`crate::metrics::Counters`] stays as the string-keyed
+//! aggregation/rendering surface: every owner exposes `counters()`
+//! views built from its registry, and hot paths no longer touch the
+//! allocating `BTreeMap` (CI greps enforce this outside `metrics/`).
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    HistId, HistSnapshot, MetricId, MetricKind, Registry, TelemetrySnapshot, HIST_BUCKETS,
+};
+pub use trace::{
+    FlightDump, FlightRecorder, SpanEvent, SpanKind, DEFAULT_RECORDER_CAPACITY,
+};

@@ -1,0 +1,1144 @@
+//! Lock-free, statically-keyed metrics registry.
+//!
+//! The serving tier's observability source of truth: one [`Registry`] per
+//! owner (shard, router, supervisor, reactor, micro-batch server), each a
+//! fixed array of `AtomicU64` slots indexed by the [`MetricId`] /
+//! [`HistId`] enums — no string hashing, no `BTreeMap` allocation, no
+//! locks. The hot path is a single relaxed `fetch_add` per event, O(1)
+//! and allocation-free (asserted in `rust/tests/alloc_count.rs`), so the
+//! registry can sit inside the shard round and reactor event loop at a
+//! ≤ 3% overhead budget (the `serve/telemetry_overhead` bench gates the
+//! measured ratio).
+//!
+//! Latency/occupancy distributions use fixed log₂ buckets: recording a
+//! value bumps bucket `floor(log2(v)) + 1` (bucket 0 holds exact zeros),
+//! so a histogram is 64 counters — O(1) memory forever, unlike the raw
+//! sample vector the old `LatencyHist` kept. Quantiles come back out of
+//! the bucket counts as the covering bucket's upper edge clamped to the
+//! observed `[min, max]`, which bounds the relative error at 2× and is
+//! exact at the extremes.
+//!
+//! Aggregation follows the PR 8 durability-counter idiom: per-owner
+//! registries `merge` into one [`TelemetrySnapshot`] fleet view
+//! (counters sum, max-gauges take the max, histogram buckets add).
+//! Snapshots render as text ([`TelemetrySnapshot::render_text`]), as
+//! benchlib-style JSON ([`TelemetrySnapshot::write_json`]), and encode
+//! to the canonical byte layout the `MKTL` wire frame carries
+//! ([`TelemetrySnapshot::encode`] / [`TelemetrySnapshot::decode`]) —
+//! deterministic, so two idle pulls off a live server are bitwise equal.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::metrics::Counters;
+use crate::persist::codec::{put_u32, put_u64, put_u8, Cursor};
+
+use super::trace::{SpanEvent, SpanKind};
+
+/// Statically-keyed counter/gauge slots. The `name()` strings are the
+/// legacy `Counters` keys, so registry-backed views render identically
+/// to the pre-telemetry string-keyed counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum MetricId {
+    // -- shard round (serve write path) --
+    /// Successful update rounds (shard and router both count theirs).
+    Rounds = 0,
+    /// Samples added across rounds.
+    Added,
+    /// Samples removed (evictions).
+    Removed,
+    /// Rounds rolled back after a failed inc/dec.
+    Rollbacks,
+    /// Near-duplicate inputs folded into multiplicity weights.
+    Folded,
+    /// Events rejected before staging (shape mismatches).
+    Rejected,
+    /// Events rejected for non-finite features/targets.
+    RejectedNonfinite,
+    /// Events dropped by the requeue-vs-drop policy.
+    Dropped,
+    /// Self-heal refactorizations (shard and supervisor).
+    Heals,
+    /// Failures forced by the chaos fault plan.
+    ChaosForcedFailures,
+    /// Engine snapshots published to readers.
+    EpochsPublished,
+    // -- router --
+    /// Events routed to a shard's ingest queue.
+    Routed,
+    /// Shard errors surfaced by a router round.
+    ShardErrors,
+    // -- recovery scan --
+    /// Corrupt newest snapshots skipped for an older generation.
+    SnapshotFallbacks,
+    /// WAL tails truncated at a torn record.
+    TornTailsTruncated,
+    /// WAL records replayed into a recovered engine.
+    WalRecordsReplayed,
+    /// WAL records skipped as already applied (`seq <= epoch`).
+    WalReplaySkipped,
+    /// Shards that failed the post-recovery probe and rejoined quarantined.
+    RecoveredQuarantined,
+    // -- durable store --
+    /// Engine snapshots written.
+    SnapshotsWritten,
+    /// WAL records appended.
+    WalRecordsAppended,
+    /// Checkpoints taken (snapshot + segment rotation + GC).
+    Checkpoints,
+    // -- supervisor --
+    /// In-place flush retries.
+    Retries,
+    /// Batches quarantined after the retry budget.
+    BatchesQuarantined,
+    /// Events inside quarantined batches.
+    EventsQuarantined,
+    /// Shards marked `Quarantined`.
+    ShardsQuarantined,
+    /// Quarantined shards brought back to `Healthy`.
+    ShardsRecovered,
+    /// Probe checks that breached the residual threshold.
+    ProbeBreaches,
+    /// Probes that escalated to `Critical`.
+    ProbeTrips,
+    /// Self-heal attempts that failed.
+    HealFailures,
+    /// Faults injected by the chaos plan.
+    FaultsInjected,
+    // -- network reactor --
+    /// Connections accepted.
+    Accepted,
+    /// Connections rejected at the `max_conns` cap.
+    ConnRejected,
+    /// Predict requests shed over the pending budget.
+    ShedPredict,
+    /// Update frames shed over the bounded queue.
+    ShedUpdate,
+    /// Predict requests answered.
+    PredictsServed,
+    /// Update frames admitted to the ingest queue.
+    UpdatesAdmitted,
+    /// Frames rejected as corrupt/oversize/unknown.
+    ProtocolErrors,
+    /// Connections closed for an over-cap write buffer.
+    SlowReaderClosed,
+    /// Micro-batch windows executed.
+    Batches,
+    /// Requests entering a micro-batch window.
+    Requests,
+    /// Event-loop poll errors.
+    PollErrors,
+    // -- high-water gauges (merge takes the max, not the sum) --
+    /// Most rows ever pending in one window.
+    MaxPendingRows,
+    /// Largest micro-batch window executed.
+    MaxBatchRows,
+}
+
+/// How a slot aggregates across registries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone event count: merge by summing.
+    Counter,
+    /// High-water gauge: merge by taking the max.
+    MaxGauge,
+}
+
+impl MetricId {
+    /// Every id, index-ordered (`ALL[i] as usize == i`).
+    pub const ALL: [MetricId; 43] = [
+        MetricId::Rounds,
+        MetricId::Added,
+        MetricId::Removed,
+        MetricId::Rollbacks,
+        MetricId::Folded,
+        MetricId::Rejected,
+        MetricId::RejectedNonfinite,
+        MetricId::Dropped,
+        MetricId::Heals,
+        MetricId::ChaosForcedFailures,
+        MetricId::EpochsPublished,
+        MetricId::Routed,
+        MetricId::ShardErrors,
+        MetricId::SnapshotFallbacks,
+        MetricId::TornTailsTruncated,
+        MetricId::WalRecordsReplayed,
+        MetricId::WalReplaySkipped,
+        MetricId::RecoveredQuarantined,
+        MetricId::SnapshotsWritten,
+        MetricId::WalRecordsAppended,
+        MetricId::Checkpoints,
+        MetricId::Retries,
+        MetricId::BatchesQuarantined,
+        MetricId::EventsQuarantined,
+        MetricId::ShardsQuarantined,
+        MetricId::ShardsRecovered,
+        MetricId::ProbeBreaches,
+        MetricId::ProbeTrips,
+        MetricId::HealFailures,
+        MetricId::FaultsInjected,
+        MetricId::Accepted,
+        MetricId::ConnRejected,
+        MetricId::ShedPredict,
+        MetricId::ShedUpdate,
+        MetricId::PredictsServed,
+        MetricId::UpdatesAdmitted,
+        MetricId::ProtocolErrors,
+        MetricId::SlowReaderClosed,
+        MetricId::Batches,
+        MetricId::Requests,
+        MetricId::PollErrors,
+        MetricId::MaxPendingRows,
+        MetricId::MaxBatchRows,
+    ];
+
+    /// Number of counter/gauge slots.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Stable string key — the legacy `Counters` name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricId::Rounds => "rounds",
+            MetricId::Added => "added",
+            MetricId::Removed => "removed",
+            MetricId::Rollbacks => "rollbacks",
+            MetricId::Folded => "folded",
+            MetricId::Rejected => "rejected",
+            MetricId::RejectedNonfinite => "rejected_nonfinite",
+            MetricId::Dropped => "dropped",
+            MetricId::Heals => "heals",
+            MetricId::ChaosForcedFailures => "chaos_forced_failures",
+            MetricId::EpochsPublished => "epochs_published",
+            MetricId::Routed => "routed",
+            MetricId::ShardErrors => "shard_errors",
+            MetricId::SnapshotFallbacks => "snapshot_fallbacks",
+            MetricId::TornTailsTruncated => "torn_tails_truncated",
+            MetricId::WalRecordsReplayed => "wal_records_replayed",
+            MetricId::WalReplaySkipped => "wal_replay_skipped",
+            MetricId::RecoveredQuarantined => "recovered_quarantined",
+            MetricId::SnapshotsWritten => "snapshots_written",
+            MetricId::WalRecordsAppended => "wal_records_appended",
+            MetricId::Checkpoints => "checkpoints",
+            MetricId::Retries => "retries",
+            MetricId::BatchesQuarantined => "batches_quarantined",
+            MetricId::EventsQuarantined => "events_quarantined",
+            MetricId::ShardsQuarantined => "shards_quarantined",
+            MetricId::ShardsRecovered => "shards_recovered",
+            MetricId::ProbeBreaches => "probe_breaches",
+            MetricId::ProbeTrips => "probe_trips",
+            MetricId::HealFailures => "heal_failures",
+            MetricId::FaultsInjected => "faults_injected",
+            MetricId::Accepted => "accepted",
+            MetricId::ConnRejected => "conn_rejected",
+            MetricId::ShedPredict => "shed_predict",
+            MetricId::ShedUpdate => "shed_update",
+            MetricId::PredictsServed => "predicts_served",
+            MetricId::UpdatesAdmitted => "updates_admitted",
+            MetricId::ProtocolErrors => "protocol_errors",
+            MetricId::SlowReaderClosed => "slow_reader_closed",
+            MetricId::Batches => "batches",
+            MetricId::Requests => "requests",
+            MetricId::PollErrors => "poll_errors",
+            MetricId::MaxPendingRows => "max_pending_rows",
+            MetricId::MaxBatchRows => "max_batch_rows",
+        }
+    }
+
+    /// The slot's aggregation rule.
+    pub fn kind(self) -> MetricKind {
+        match self {
+            MetricId::MaxPendingRows | MetricId::MaxBatchRows => MetricKind::MaxGauge,
+            _ => MetricKind::Counter,
+        }
+    }
+
+    /// Decode an index (wire/dump paths; `None` = unknown slot).
+    pub fn from_index(i: usize) -> Option<MetricId> {
+        Self::ALL.get(i).copied()
+    }
+}
+
+/// Statically-keyed histogram slots. All record `u64` values — timings
+/// in whole microseconds (`*_us`), occupancies in rows, residuals in
+/// picounits (`residual * 1e12`, so the healthy 1e-14..1e-6 band maps
+/// onto distinguishable integer buckets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum HistId {
+    /// Whole shard update round, µs.
+    RoundLatencyUs = 0,
+    /// Round phase: validate/stage/plan-folds, µs.
+    PhasePlanUs,
+    /// Round phase: write-ahead log append, µs.
+    PhaseWalUs,
+    /// Round phase: inc/dec engine update, µs.
+    PhaseIncDecUs,
+    /// Round phase: epoch snapshot publish, µs.
+    PhasePublishUs,
+    /// Rows per executed micro-batch window.
+    WindowOccupancyRows,
+    /// `Mean` lane execution, µs.
+    LaneMeanUs,
+    /// `MeanVar` lane execution, µs.
+    LaneMeanVarUs,
+    /// `MeanMulti` lane execution, µs.
+    LaneMeanMultiUs,
+    /// `MeanVarMulti` lane execution, µs.
+    LaneMeanVarMultiUs,
+    /// One WAL record append, µs.
+    WalAppendUs,
+    /// One checkpoint (snapshot + rotate + GC), µs.
+    CheckpointUs,
+    /// Health-probe max residual, picounits.
+    ProbeResidualPicos,
+}
+
+impl HistId {
+    /// Every id, index-ordered (`ALL[i] as usize == i`).
+    pub const ALL: [HistId; 13] = [
+        HistId::RoundLatencyUs,
+        HistId::PhasePlanUs,
+        HistId::PhaseWalUs,
+        HistId::PhaseIncDecUs,
+        HistId::PhasePublishUs,
+        HistId::WindowOccupancyRows,
+        HistId::LaneMeanUs,
+        HistId::LaneMeanVarUs,
+        HistId::LaneMeanMultiUs,
+        HistId::LaneMeanVarMultiUs,
+        HistId::WalAppendUs,
+        HistId::CheckpointUs,
+        HistId::ProbeResidualPicos,
+    ];
+
+    /// Number of histogram slots.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Stable string key (JSON/text rendering).
+    pub fn name(self) -> &'static str {
+        match self {
+            HistId::RoundLatencyUs => "round_latency_us",
+            HistId::PhasePlanUs => "phase_plan_us",
+            HistId::PhaseWalUs => "phase_wal_us",
+            HistId::PhaseIncDecUs => "phase_incdec_us",
+            HistId::PhasePublishUs => "phase_publish_us",
+            HistId::WindowOccupancyRows => "window_occupancy_rows",
+            HistId::LaneMeanUs => "lane_mean_us",
+            HistId::LaneMeanVarUs => "lane_meanvar_us",
+            HistId::LaneMeanMultiUs => "lane_mean_multi_us",
+            HistId::LaneMeanVarMultiUs => "lane_meanvar_multi_us",
+            HistId::WalAppendUs => "wal_append_us",
+            HistId::CheckpointUs => "checkpoint_us",
+            HistId::ProbeResidualPicos => "probe_residual_picos",
+        }
+    }
+
+    /// Decode an index (wire/dump paths; `None` = unknown slot).
+    pub fn from_index(i: usize) -> Option<HistId> {
+        Self::ALL.get(i).copied()
+    }
+}
+
+/// Number of log₂ buckets per histogram (bucket 0 = exact zeros, bucket
+/// `b >= 1` covers `[2^(b-1), 2^b)`; the top bucket absorbs overflow).
+pub const HIST_BUCKETS: usize = 64;
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+#[inline]
+fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// One histogram's atomic slots.
+struct AtomicHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl AtomicHist {
+    fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+/// The lock-free registry: one `AtomicU64` slot per [`MetricId`], one
+/// 64-bucket atomic histogram per [`HistId`]. Shared by `Arc` between
+/// the owning writer and any readers (snapshot handles, the wire stats
+/// path); every mutation is a relaxed atomic RMW, so `&self` suffices
+/// and the hot path never locks or allocates.
+pub struct Registry {
+    enabled: bool,
+    counters: [AtomicU64; MetricId::COUNT],
+    hists: [AtomicHist; HistId::COUNT],
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry").field("enabled", &self.enabled).finish()
+    }
+}
+
+impl Registry {
+    /// A live registry.
+    pub fn new() -> Self {
+        Self {
+            enabled: true,
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| AtomicHist::new()),
+        }
+    }
+
+    /// A registry whose recording calls are no-ops — the uninstrumented
+    /// baseline for the `serve/telemetry_overhead` bench.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::new() }
+    }
+
+    /// Whether recording is live.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Add `v` to a counter slot (relaxed, lock-free, allocation-free).
+    #[inline]
+    pub fn add(&self, id: MetricId, v: u64) {
+        if self.enabled {
+            self.counters[id as usize].fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Increment a counter slot.
+    #[inline]
+    pub fn inc(&self, id: MetricId) {
+        self.add(id, 1);
+    }
+
+    /// Raise a high-water gauge slot to at least `v`.
+    #[inline]
+    pub fn gauge_max(&self, id: MetricId, v: u64) {
+        if self.enabled {
+            self.counters[id as usize].fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Read one slot.
+    pub fn get(&self, id: MetricId) -> u64 {
+        self.counters[id as usize].load(Ordering::Relaxed)
+    }
+
+    /// Record a value into a histogram slot.
+    #[inline]
+    pub fn record_hist(&self, id: HistId, v: u64) {
+        if self.enabled {
+            self.hists[id as usize].record(v);
+        }
+    }
+
+    /// Record a duration in seconds into a `*_us` histogram slot.
+    #[inline]
+    pub fn record_secs(&self, id: HistId, seconds: f64) {
+        if self.enabled {
+            self.record_hist(id, (seconds * 1e6) as u64);
+        }
+    }
+
+    /// Fold another registry's counts into this one (counters add,
+    /// gauges max, histogram buckets add) — used when an owner adopts a
+    /// shared registry and must not lose what it already recorded.
+    pub fn absorb(&self, other: &Registry) {
+        for id in MetricId::ALL {
+            let v = other.counters[id as usize].load(Ordering::Relaxed);
+            if v == 0 {
+                continue;
+            }
+            match id.kind() {
+                MetricKind::Counter => self.add(id, v),
+                MetricKind::MaxGauge => self.gauge_max(id, v),
+            }
+        }
+        for i in 0..HistId::COUNT {
+            let (src, dst) = (&other.hists[i], &self.hists[i]);
+            let n = src.count.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            for b in 0..HIST_BUCKETS {
+                let c = src.buckets[b].load(Ordering::Relaxed);
+                if c != 0 {
+                    dst.buckets[b].fetch_add(c, Ordering::Relaxed);
+                }
+            }
+            dst.count.fetch_add(n, Ordering::Relaxed);
+            dst.sum.fetch_add(src.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+            dst.min.fetch_min(src.min.load(Ordering::Relaxed), Ordering::Relaxed);
+            dst.max.fetch_max(src.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// Fold a string-keyed [`Counters`] view into the matching slots
+    /// (keys that name no registry metric are ignored) — the bridge for
+    /// cold paths that still produce legacy `Counters` values.
+    pub fn absorb_counters(&self, c: &Counters) {
+        for id in MetricId::ALL {
+            let v = c.get(id.name());
+            if v == 0 {
+                continue;
+            }
+            match id.kind() {
+                MetricKind::Counter => self.add(id, v),
+                MetricKind::MaxGauge => self.gauge_max(id, v),
+            }
+        }
+    }
+
+    /// Snapshot into a fleet view (counters sum, gauges max, buckets add).
+    pub fn merge_into(&self, snap: &mut TelemetrySnapshot) {
+        for id in MetricId::ALL {
+            let i = id as usize;
+            let v = self.counters[i].load(Ordering::Relaxed);
+            match id.kind() {
+                MetricKind::Counter => snap.counters[i] += v,
+                MetricKind::MaxGauge => snap.counters[i] = snap.counters[i].max(v),
+            }
+        }
+        for i in 0..HistId::COUNT {
+            let (src, dst) = (&self.hists[i], &mut snap.hists[i]);
+            let n = src.count.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            for b in 0..HIST_BUCKETS {
+                dst.buckets[b] += src.buckets[b].load(Ordering::Relaxed);
+            }
+            dst.count += n;
+            dst.sum += src.sum.load(Ordering::Relaxed);
+            dst.min = dst.min.min(src.min.load(Ordering::Relaxed));
+            dst.max = dst.max.max(src.max.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Snapshot this registry alone.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot::new();
+        self.merge_into(&mut snap);
+        snap
+    }
+
+    /// The legacy string-keyed view: every non-zero slot under its
+    /// [`MetricId::name`]. `Counters` stays the aggregation/rendering
+    /// surface; this registry is where hot paths record.
+    pub fn counters(&self) -> Counters {
+        let mut out = Counters::default();
+        for id in MetricId::ALL {
+            let v = self.get(id);
+            if v != 0 {
+                out.add(id.name(), v);
+            }
+        }
+        out
+    }
+
+    /// String-keyed view restricted to `ids` (still skipping zeros).
+    pub fn counters_for(&self, ids: &[MetricId]) -> Counters {
+        let mut out = Counters::default();
+        for &id in ids {
+            let v = self.get(id);
+            if v != 0 {
+                out.add(id.name(), v);
+            }
+        }
+        out
+    }
+}
+
+/// One histogram, frozen: bucket counts plus exact count/sum/min/max.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Log₂ bucket counts (see [`HIST_BUCKETS`]).
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Total recorded values.
+    pub count: u64,
+    /// Sum of recorded values.
+    pub sum: u64,
+    /// Smallest recorded value (`u64::MAX` when empty).
+    pub min: u64,
+    /// Largest recorded value (0 when empty).
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { buckets: [0; HIST_BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Quantile from the bucket counts: the covering bucket's upper edge
+    /// clamped to the observed `[min, max]` (0 when empty).
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut cum = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(b).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median.
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// A frozen fleet view: every counter/gauge slot, every histogram, and
+/// the flight-recorder tail that shipped with it. This is both the
+/// in-process aggregation product (`ShardRouter::telemetry`) and the
+/// `MKTL` wire payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TelemetrySnapshot {
+    /// Counter/gauge values, indexed by `MetricId as usize`.
+    pub counters: [u64; MetricId::COUNT],
+    /// Histograms, indexed by `HistId as usize`.
+    pub hists: [HistSnapshot; HistId::COUNT],
+    /// Flight-recorder tail (chronological; empty for in-process views).
+    pub spans: Vec<SpanEvent>,
+}
+
+impl Default for TelemetrySnapshot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TelemetrySnapshot {
+    /// An empty snapshot.
+    pub fn new() -> Self {
+        Self {
+            counters: [0; MetricId::COUNT],
+            hists: std::array::from_fn(|_| HistSnapshot::default()),
+            spans: Vec::new(),
+        }
+    }
+
+    /// Read one counter/gauge slot.
+    pub fn counter(&self, id: MetricId) -> u64 {
+        self.counters[id as usize]
+    }
+
+    /// Read one histogram.
+    pub fn hist(&self, id: HistId) -> &HistSnapshot {
+        &self.hists[id as usize]
+    }
+
+    /// Merge another snapshot (counters sum, gauges max, buckets add;
+    /// spans concatenate).
+    pub fn merge(&mut self, other: &TelemetrySnapshot) {
+        for id in MetricId::ALL {
+            let i = id as usize;
+            match id.kind() {
+                MetricKind::Counter => self.counters[i] += other.counters[i],
+                MetricKind::MaxGauge => {
+                    self.counters[i] = self.counters[i].max(other.counters[i])
+                }
+            }
+        }
+        for i in 0..HistId::COUNT {
+            let (src, dst) = (&other.hists[i], &mut self.hists[i]);
+            if src.count == 0 {
+                continue;
+            }
+            for b in 0..HIST_BUCKETS {
+                dst.buckets[b] += src.buckets[b];
+            }
+            dst.count += src.count;
+            dst.sum += src.sum;
+            dst.min = dst.min.min(src.min);
+            dst.max = dst.max.max(src.max);
+        }
+        self.spans.extend_from_slice(&other.spans);
+    }
+
+    /// The legacy string-keyed view of the counter slots.
+    pub fn to_counters(&self) -> Counters {
+        let mut out = Counters::default();
+        for id in MetricId::ALL {
+            let v = self.counter(id);
+            if v != 0 {
+                out.add(id.name(), v);
+            }
+        }
+        out
+    }
+
+    // ---- canonical byte layout (the MKTL payload) ----
+    //
+    // [n_counters u32] then per non-zero slot, ascending: [id u32][v u64]
+    // [n_hists u32]    then per non-empty hist, ascending:
+    //                  [id u32][count u64][sum u64][min u64][max u64]
+    //                  [n_buckets u32] then per non-zero bucket,
+    //                  ascending: [bucket u8][count u64]
+    // [n_spans u32]    then per span: [t_us u64][kind u8][a u64][b u64]
+    //
+    // Zero slots are skipped and ordering is fixed, so the encoding of a
+    // given snapshot is unique — two idle pulls are bitwise identical.
+
+    /// Append the canonical encoding to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let nonzero = self.counters.iter().filter(|&&v| v != 0).count();
+        put_u32(out, nonzero as u32);
+        for (i, &v) in self.counters.iter().enumerate() {
+            if v != 0 {
+                put_u32(out, i as u32);
+                put_u64(out, v);
+            }
+        }
+        let live = self.hists.iter().filter(|h| h.count != 0).count();
+        put_u32(out, live as u32);
+        for (i, h) in self.hists.iter().enumerate() {
+            if h.count == 0 {
+                continue;
+            }
+            put_u32(out, i as u32);
+            put_u64(out, h.count);
+            put_u64(out, h.sum);
+            put_u64(out, h.min);
+            put_u64(out, h.max);
+            let nb = h.buckets.iter().filter(|&&c| c != 0).count();
+            put_u32(out, nb as u32);
+            for (b, &c) in h.buckets.iter().enumerate() {
+                if c != 0 {
+                    put_u8(out, b as u8);
+                    put_u64(out, c);
+                }
+            }
+        }
+        put_u32(out, self.spans.len() as u32);
+        for s in &self.spans {
+            put_u64(out, s.t_us);
+            put_u8(out, s.kind as u8);
+            put_u64(out, s.a);
+            put_u64(out, s.b);
+        }
+    }
+
+    /// Decode the canonical layout. Strict: unknown ids/kinds, non-
+    /// ascending order, zero entries, or bucket/count mismatches are all
+    /// corruption — a hostile payload must never build a half-trusted
+    /// snapshot.
+    pub fn decode(cur: &mut Cursor<'_>, ctx: &'static str) -> Result<Self> {
+        let corrupt = |d: String| Error::persist_corruption(ctx, d);
+        let mut snap = TelemetrySnapshot::new();
+        let nc = cur.take_u32()? as usize;
+        if nc > MetricId::COUNT {
+            return Err(corrupt(format!("{nc} counter slots > {}", MetricId::COUNT)));
+        }
+        let mut prev: Option<usize> = None;
+        for _ in 0..nc {
+            let i = cur.take_u32()? as usize;
+            if MetricId::from_index(i).is_none() {
+                return Err(corrupt(format!("unknown metric id {i}")));
+            }
+            if prev.is_some_and(|p| i <= p) {
+                return Err(corrupt(format!("metric id {i} out of order")));
+            }
+            prev = Some(i);
+            let v = cur.take_u64()?;
+            if v == 0 {
+                return Err(corrupt(format!("explicit zero for metric id {i}")));
+            }
+            snap.counters[i] = v;
+        }
+        let nh = cur.take_u32()? as usize;
+        if nh > HistId::COUNT {
+            return Err(corrupt(format!("{nh} hist slots > {}", HistId::COUNT)));
+        }
+        let mut prev: Option<usize> = None;
+        for _ in 0..nh {
+            let i = cur.take_u32()? as usize;
+            if HistId::from_index(i).is_none() {
+                return Err(corrupt(format!("unknown hist id {i}")));
+            }
+            if prev.is_some_and(|p| i <= p) {
+                return Err(corrupt(format!("hist id {i} out of order")));
+            }
+            prev = Some(i);
+            let h = &mut snap.hists[i];
+            h.count = cur.take_u64()?;
+            h.sum = cur.take_u64()?;
+            h.min = cur.take_u64()?;
+            h.max = cur.take_u64()?;
+            if h.count == 0 || h.min > h.max {
+                return Err(corrupt(format!("hist {i} bad count/min/max")));
+            }
+            let nb = cur.take_u32()? as usize;
+            if nb > HIST_BUCKETS {
+                return Err(corrupt(format!("{nb} buckets > {HIST_BUCKETS}")));
+            }
+            let mut prev_b: Option<usize> = None;
+            let mut total = 0u64;
+            for _ in 0..nb {
+                let b = cur.take_u8()? as usize;
+                if b >= HIST_BUCKETS {
+                    return Err(corrupt(format!("bucket {b} out of range")));
+                }
+                if prev_b.is_some_and(|p| b <= p) {
+                    return Err(corrupt(format!("bucket {b} out of order")));
+                }
+                prev_b = Some(b);
+                let c = cur.take_u64()?;
+                if c == 0 {
+                    return Err(corrupt(format!("explicit zero bucket {b}")));
+                }
+                h.buckets[b] = c;
+                total = total.checked_add(c).ok_or_else(|| {
+                    Error::persist_corruption(ctx, "bucket counts overflow".into())
+                })?;
+            }
+            if total != h.count {
+                return Err(corrupt(format!(
+                    "hist {i} bucket sum {total} != count {}",
+                    h.count
+                )));
+            }
+        }
+        let ns = cur.take_u32()? as usize;
+        // a hostile count cannot drive allocation: reserve is capped and
+        // each span consumes 25 payload bytes, so an inflated count hits
+        // the cursor's truncation error within one iteration
+        snap.spans.reserve(ns.min(4096));
+        for _ in 0..ns {
+            let t_us = cur.take_u64()?;
+            let kind = cur.take_u8()?;
+            let kind = SpanKind::from_u8(kind)
+                .ok_or_else(|| corrupt(format!("unknown span kind {kind}")))?;
+            let a = cur.take_u64()?;
+            let b = cur.take_u64()?;
+            snap.spans.push(SpanEvent { t_us, kind, a, b });
+        }
+        Ok(snap)
+    }
+
+    /// Human-readable multi-line rendering (counters, histogram
+    /// quantiles, span tail).
+    pub fn render_text(&self) -> String {
+        let mut out = String::from("counters:\n");
+        for id in MetricId::ALL {
+            let v = self.counter(id);
+            if v != 0 {
+                out.push_str(&format!("  {:<22} {v}\n", id.name()));
+            }
+        }
+        out.push_str("histograms:\n");
+        for id in HistId::ALL {
+            let h = self.hist(id);
+            if h.count != 0 {
+                out.push_str(&format!(
+                    "  {:<22} n={} mean={:.1} p50={} p99={} max={}\n",
+                    id.name(),
+                    h.count,
+                    h.mean(),
+                    h.p50(),
+                    h.p99(),
+                    h.max
+                ));
+            }
+        }
+        if !self.spans.is_empty() {
+            out.push_str(&format!("span tail ({} events):\n", self.spans.len()));
+            for s in &self.spans {
+                out.push_str(&format!(
+                    "  +{:>9}us {:<15} a={} b={}\n",
+                    s.t_us,
+                    s.kind.name(),
+                    s.a,
+                    s.b
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable JSON (benchlib idiom: hand-rolled writer, static
+    /// keys, no escaping needed).
+    pub fn write_json(&self, out: &mut String) {
+        out.push_str("{\n  \"counters\": {");
+        let mut first = true;
+        for id in MetricId::ALL {
+            let v = self.counter(id);
+            if v != 0 {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!("\n    \"{}\": {v}", id.name()));
+            }
+        }
+        out.push_str("\n  },\n  \"hists\": {");
+        let mut first = true;
+        for id in HistId::ALL {
+            let h = self.hist(id);
+            if h.count == 0 {
+                continue;
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n    \"{}\": {{\"count\": {}, \"mean\": {:.3}, \"p50\": {}, \
+                 \"p99\": {}, \"min\": {}, \"max\": {}}}",
+                id.name(),
+                h.count,
+                h.mean(),
+                h.p50(),
+                h.p99(),
+                h.min,
+                h.max
+            ));
+        }
+        out.push_str("\n  },\n  \"spans\": [");
+        for (i, s) in self.spans.iter().enumerate() {
+            if i != 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"t_us\": {}, \"kind\": \"{}\", \"a\": {}, \"b\": {}}}",
+                s.t_us,
+                s.kind.name(),
+                s.a,
+                s.b
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_tables_are_index_ordered() {
+        for (i, id) in MetricId::ALL.iter().enumerate() {
+            assert_eq!(*id as usize, i, "{id:?}");
+            assert_eq!(MetricId::from_index(i), Some(*id));
+        }
+        for (i, id) in HistId::ALL.iter().enumerate() {
+            assert_eq!(*id as usize, i, "{id:?}");
+            assert_eq!(HistId::from_index(i), Some(*id));
+        }
+        assert_eq!(MetricId::from_index(MetricId::COUNT), None);
+        assert_eq!(HistId::from_index(HistId::COUNT), None);
+        // names are unique (they key the Counters compat view)
+        let mut names: Vec<&str> = MetricId::ALL.iter().map(|i| i.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), MetricId::COUNT);
+    }
+
+    #[test]
+    fn buckets_cover_the_u64_range() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        for b in 1..HIST_BUCKETS - 1 {
+            // bucket b holds exactly [2^(b-1), 2^b)
+            assert_eq!(bucket_of(1u64 << (b - 1)), b);
+            assert_eq!(bucket_of((1u64 << b) - 1), b);
+        }
+    }
+
+    #[test]
+    fn counters_and_gauges_aggregate_by_kind() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.add(MetricId::Rounds, 3);
+        b.add(MetricId::Rounds, 4);
+        a.gauge_max(MetricId::MaxPendingRows, 9);
+        b.gauge_max(MetricId::MaxPendingRows, 5);
+        let mut snap = a.snapshot();
+        b.merge_into(&mut snap);
+        assert_eq!(snap.counter(MetricId::Rounds), 7, "counters sum");
+        assert_eq!(snap.counter(MetricId::MaxPendingRows), 9, "gauges max");
+        // the compat view carries the legacy names
+        let c = snap.to_counters();
+        assert_eq!(c.get("rounds"), 7);
+        assert_eq!(c.get("max_pending_rows"), 9);
+        assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn hist_percentiles_from_buckets() {
+        let r = Registry::new();
+        for v in 1..=1000u64 {
+            r.record_hist(HistId::RoundLatencyUs, v);
+        }
+        let snap = r.snapshot();
+        let h = snap.hist(HistId::RoundLatencyUs);
+        assert_eq!(h.count, 1000);
+        assert_eq!((h.min, h.max), (1, 1000));
+        let p50 = h.p50();
+        // true p50 = 500; the covering log2 bucket's upper edge is 511
+        assert!((500..=511).contains(&p50), "p50={p50}");
+        let p99 = h.p99();
+        // true p99 = 990; upper edge 1023 clamps to max 1000
+        assert!((990..=1000).contains(&p99), "p99={p99}");
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+        // an empty histogram reads zero everywhere
+        let empty = snap.hist(HistId::CheckpointUs);
+        assert_eq!((empty.p50(), empty.p99()), (0, 0));
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let r = Registry::disabled();
+        r.inc(MetricId::Rounds);
+        r.gauge_max(MetricId::MaxBatchRows, 10);
+        r.record_hist(HistId::RoundLatencyUs, 5);
+        assert_eq!(r.snapshot(), TelemetrySnapshot::new());
+        assert!(!r.is_enabled());
+    }
+
+    #[test]
+    fn absorb_folds_counts() {
+        let keep = Registry::new();
+        keep.add(MetricId::SnapshotsWritten, 2);
+        keep.record_hist(HistId::CheckpointUs, 100);
+        let old = Registry::new();
+        old.add(MetricId::SnapshotsWritten, 1);
+        old.gauge_max(MetricId::MaxBatchRows, 7);
+        old.record_hist(HistId::CheckpointUs, 900);
+        keep.absorb(&old);
+        assert_eq!(keep.get(MetricId::SnapshotsWritten), 3);
+        assert_eq!(keep.get(MetricId::MaxBatchRows), 7);
+        let h = keep.snapshot().hist(HistId::CheckpointUs).clone();
+        assert_eq!((h.count, h.min, h.max), (2, 100, 900));
+    }
+
+    #[test]
+    fn snapshot_encoding_is_canonical_and_strict() {
+        let r = Registry::new();
+        r.add(MetricId::PredictsServed, 41);
+        r.gauge_max(MetricId::MaxPendingRows, 6);
+        for v in [0u64, 3, 17, 17, 250_000] {
+            r.record_hist(HistId::WindowOccupancyRows, v);
+        }
+        let mut snap = r.snapshot();
+        snap.spans.push(SpanEvent { t_us: 12, kind: SpanKind::Accept, a: 1, b: 0 });
+        snap.spans.push(SpanEvent { t_us: 90, kind: SpanKind::Shed, a: 2, b: 5 });
+
+        let mut bytes = Vec::new();
+        snap.encode(&mut bytes);
+        // determinism: re-encoding is bitwise identical
+        let mut again = Vec::new();
+        snap.encode(&mut again);
+        assert_eq!(bytes, again);
+
+        let mut cur = Cursor::new(&bytes, "test");
+        let back = TelemetrySnapshot::decode(&mut cur, "test").unwrap();
+        assert!(cur.is_empty(), "decode consumed everything");
+        assert_eq!(back, snap);
+
+        // every single-byte corruption is rejected or changes the value —
+        // never silently accepted as the same snapshot
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            let mut cur = Cursor::new(&bad, "test");
+            match TelemetrySnapshot::decode(&mut cur, "test") {
+                Err(_) => {}
+                Ok(other) => assert!(
+                    other != snap || !cur.is_empty(),
+                    "flip at byte {i} decoded to an identical snapshot"
+                ),
+            }
+        }
+
+        // truncation at every boundary is corruption
+        for cut in 0..bytes.len() {
+            let mut cur = Cursor::new(&bytes[..cut], "test");
+            let r = TelemetrySnapshot::decode(&mut cur, "test");
+            assert!(r.is_err() || !cur.is_empty(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn render_and_json_name_live_slots() {
+        let r = Registry::new();
+        r.add(MetricId::ShedPredict, 8);
+        r.record_hist(HistId::RoundLatencyUs, 420);
+        let mut snap = r.snapshot();
+        snap.spans.push(SpanEvent { t_us: 3, kind: SpanKind::Quarantine, a: 1, b: 2 });
+        let text = snap.render_text();
+        assert!(text.contains("shed_predict"), "{text}");
+        assert!(text.contains("round_latency_us"), "{text}");
+        assert!(text.contains("quarantine"), "{text}");
+        let mut json = String::new();
+        snap.write_json(&mut json);
+        assert!(json.contains("\"shed_predict\": 8"), "{json}");
+        assert!(json.contains("\"round_latency_us\""), "{json}");
+        assert!(json.contains("\"kind\": \"quarantine\""), "{json}");
+    }
+}

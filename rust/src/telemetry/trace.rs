@@ -1,0 +1,325 @@
+//! Hot-path flight recorder: a fixed-capacity ring buffer of structured
+//! POD span events.
+//!
+//! Each owner thread (a shard's writer, the network reactor, the
+//! supervisor) keeps its own [`FlightRecorder`] — single-writer, so
+//! recording is a plain array store: stamp a monotonic microsecond
+//! offset, write a [`SpanEvent`], advance the cursor. No locks, no
+//! allocation after construction (the buffer is pre-reserved; asserted
+//! in `rust/tests/alloc_count.rs`), and old events are overwritten once
+//! the capacity wraps — the recorder always holds the *last* `cap`
+//! events, which is exactly the window a post-mortem wants.
+//!
+//! Dumps are taken automatically at failure boundaries: the supervisor
+//! snapshots a shard's recorder the moment it quarantines it
+//! (`ShardSupervisor::flight_dumps`), and `ShardRouter::recover` ships
+//! one per recovered shard (`ShardRouter::recovery_flight_dumps`), so
+//! the event trail leading into a failure survives the failure. The
+//! network reactor's recorder tail also rides along in every `MKTL`
+//! stats frame.
+
+use std::time::Instant;
+
+/// What a span event marks. POD (`u8` on the wire); the `a`/`b` payload
+/// words of the owning [`SpanEvent`] are kind-specific (row counts,
+/// shard ids, microsecond durations, sequence numbers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// A shard update round began (`a` = batch rows).
+    RoundStart = 0,
+    /// A shard update round committed (`a` = added, `b` = round µs).
+    RoundEnd,
+    /// A flush was invoked (`a` = queued events).
+    Flush,
+    /// A WAL record was appended (`a` = seq, `b` = append µs).
+    WalAppend,
+    /// The inc/dec engine update ran (`a` = added, `b` = µs).
+    IncDec,
+    /// An engine snapshot was published (`a` = epoch, `b` = µs).
+    Publish,
+    /// A failed round was rolled back (`a` = batch rows).
+    Rollback,
+    /// A health probe ran (`a` = residual picounits, `b` = breaches).
+    Probe,
+    /// A flush was retried in place (`a` = shard, `b` = attempt).
+    Retry,
+    /// A shard or batch was quarantined (`a` = shard, `b` = seq).
+    Quarantine,
+    /// A self-heal refactorization ran (`a` = shard).
+    Heal,
+    /// A checkpoint rotated the WAL segment (`a` = generation, `b` = µs).
+    Checkpoint,
+    /// Recovery rebuilt a shard (`a` = shard, `b` = replayed records).
+    Recover,
+    /// A micro-batch window executed (`a` = rows, `b` = µs).
+    WindowExec,
+    /// A request was shed by admission control (`a` = request id).
+    Shed,
+    /// A connection was accepted (`a` = slot).
+    Accept,
+    /// A connection was closed (`a` = slot).
+    ConnClosed,
+    /// A frame was rejected as corrupt/oversize (`a` = slot).
+    ProtocolError,
+}
+
+impl SpanKind {
+    /// Every kind, index-ordered (`ALL[i] as usize == i`).
+    pub const ALL: [SpanKind; 18] = [
+        SpanKind::RoundStart,
+        SpanKind::RoundEnd,
+        SpanKind::Flush,
+        SpanKind::WalAppend,
+        SpanKind::IncDec,
+        SpanKind::Publish,
+        SpanKind::Rollback,
+        SpanKind::Probe,
+        SpanKind::Retry,
+        SpanKind::Quarantine,
+        SpanKind::Heal,
+        SpanKind::Checkpoint,
+        SpanKind::Recover,
+        SpanKind::WindowExec,
+        SpanKind::Shed,
+        SpanKind::Accept,
+        SpanKind::ConnClosed,
+        SpanKind::ProtocolError,
+    ];
+
+    /// Stable lowercase label.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::RoundStart => "round_start",
+            SpanKind::RoundEnd => "round_end",
+            SpanKind::Flush => "flush",
+            SpanKind::WalAppend => "wal_append",
+            SpanKind::IncDec => "inc_dec",
+            SpanKind::Publish => "publish",
+            SpanKind::Rollback => "rollback",
+            SpanKind::Probe => "probe",
+            SpanKind::Retry => "retry",
+            SpanKind::Quarantine => "quarantine",
+            SpanKind::Heal => "heal",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Recover => "recover",
+            SpanKind::WindowExec => "window_exec",
+            SpanKind::Shed => "shed",
+            SpanKind::Accept => "accept",
+            SpanKind::ConnClosed => "conn_closed",
+            SpanKind::ProtocolError => "protocol_error",
+        }
+    }
+
+    /// Decode a wire byte (`None` = unknown kind, i.e. corruption).
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        Self::ALL.get(v as usize).copied()
+    }
+}
+
+/// One recorded span: a monotonic timestamp (µs since the recorder was
+/// built), a kind, and two kind-specific payload words. 25 bytes on the
+/// wire, `Copy` in memory — recording is a struct store, nothing more.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Microseconds since the owning recorder's epoch (monotonic clock).
+    pub t_us: u64,
+    /// What happened.
+    pub kind: SpanKind,
+    /// First payload word (see [`SpanKind`] docs).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+}
+
+/// Default ring capacity: enough for the event trail of several rounds
+/// without ever exceeding ~6 KiB per owner.
+pub const DEFAULT_RECORDER_CAPACITY: usize = 256;
+
+/// Single-writer fixed-capacity ring buffer of [`SpanEvent`]s.
+#[derive(Clone, Debug)]
+pub struct FlightRecorder {
+    /// Ring storage, pre-reserved to `cap` (push never reallocates).
+    events: Vec<SpanEvent>,
+    cap: usize,
+    /// Total events ever recorded; `next % cap` is the overwrite slot.
+    next: u64,
+    epoch: Instant,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new(DEFAULT_RECORDER_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder holding the last `cap` events (`cap >= 1` enforced).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            events: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Record one span. O(1), allocation-free once constructed.
+    #[inline]
+    pub fn record(&mut self, kind: SpanKind, a: u64, b: u64) {
+        let ev = SpanEvent {
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            kind,
+            a,
+            b,
+        };
+        let slot = (self.next % self.cap as u64) as usize;
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.events[slot] = ev;
+        }
+        self.next += 1;
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True before the first record.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn total_recorded(&self) -> u64 {
+        self.next
+    }
+
+    /// The last `min(n, len)` events in chronological order.
+    pub fn tail(&self, n: usize) -> Vec<SpanEvent> {
+        let held = self.events.len();
+        let take = n.min(held);
+        let mut out = Vec::with_capacity(take);
+        // oldest held event sits at `next % cap` once the ring wrapped
+        let start = if held < self.cap { 0 } else { (self.next % self.cap as u64) as usize };
+        for k in (held - take)..held {
+            out.push(self.events[(start + k) % held.max(1)]);
+        }
+        out
+    }
+
+    /// Freeze the whole held window into a labeled post-mortem dump.
+    pub fn dump(&self, label: impl Into<String>) -> FlightDump {
+        FlightDump {
+            label: label.into(),
+            total_recorded: self.next,
+            events: self.tail(self.events.len()),
+        }
+    }
+}
+
+/// A frozen flight-recorder window, labeled with its origin — what the
+/// supervisor attaches to a quarantine and `recover` ships per shard.
+#[derive(Clone, Debug)]
+pub struct FlightDump {
+    /// Where the dump came from (e.g. `"shard-2 quarantine"`).
+    pub label: String,
+    /// Lifetime events recorded by the source (≥ `events.len()`).
+    pub total_recorded: u64,
+    /// The held window, chronological.
+    pub events: Vec<SpanEvent>,
+}
+
+impl FlightDump {
+    /// Human-readable rendering for logs/post-mortems.
+    pub fn render_text(&self) -> String {
+        let mut out = format!(
+            "flight dump [{}]: {} held of {} recorded\n",
+            self.label,
+            self.events.len(),
+            self.total_recorded
+        );
+        for e in &self.events {
+            out.push_str(&format!(
+                "  +{:>9}us {:<15} a={} b={}\n",
+                e.t_us,
+                e.kind.name(),
+                e.a,
+                e.b
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_kind_table_round_trips() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(*k as usize, i, "{k:?}");
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+        }
+        assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
+        assert_eq!(SpanKind::from_u8(u8::MAX), None);
+    }
+
+    #[test]
+    fn ring_holds_the_last_cap_events_in_order() {
+        let mut r = FlightRecorder::new(8);
+        assert!(r.is_empty());
+        for i in 0..20u64 {
+            r.record(SpanKind::RoundStart, i, 0);
+        }
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.capacity(), 8);
+        assert_eq!(r.total_recorded(), 20);
+        let tail = r.tail(8);
+        let ids: Vec<u64> = tail.iter().map(|e| e.a).collect();
+        assert_eq!(ids, (12..20).collect::<Vec<_>>(), "last 8, chronological");
+        // timestamps are monotone
+        for w in tail.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us);
+        }
+        // a shorter tail takes the newest end
+        let short: Vec<u64> = r.tail(3).iter().map(|e| e.a).collect();
+        assert_eq!(short, vec![17, 18, 19]);
+    }
+
+    #[test]
+    fn unwrapped_tail_and_dump() {
+        let mut r = FlightRecorder::new(16);
+        r.record(SpanKind::Flush, 5, 0);
+        r.record(SpanKind::Quarantine, 1, 42);
+        let tail = r.tail(16);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[1].kind, SpanKind::Quarantine);
+        let dump = r.dump("shard-1 quarantine");
+        assert_eq!(dump.events.len(), 2);
+        assert_eq!(dump.total_recorded, 2);
+        let text = dump.render_text();
+        assert!(text.contains("shard-1 quarantine"), "{text}");
+        assert!(text.contains("quarantine"), "{text}");
+        assert!(text.contains("b=42"), "{text}");
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let mut r = FlightRecorder::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.record(SpanKind::Shed, 1, 0);
+        r.record(SpanKind::Shed, 2, 0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.tail(4)[0].a, 2, "only the newest survives");
+    }
+}

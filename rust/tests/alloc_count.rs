@@ -387,6 +387,39 @@ fn steady_state_inc_dec_is_allocation_free() {
         }
     }
 
+    // --- warm telemetry (ISSUE 10): every primitive the instrumented
+    // round touches — relaxed counter/gauge slots, log₂ histogram
+    // buckets, the flight-recorder ring (including wrap-around), and the
+    // bucket-backed LatencyHist — is allocation-free once constructed,
+    // so wiring registries through the hot paths above cannot perturb
+    // their contracts ---
+    {
+        use mikrr::metrics::LatencyHist;
+        use mikrr::telemetry::{FlightRecorder, HistId, MetricId, Registry, SpanKind};
+
+        let reg = Registry::new();
+        let mut rec = FlightRecorder::new(64);
+        let mut lat = LatencyHist::new(); // buckets built here, never after
+        let mut i = 0u64;
+        let allocs = steady_state_allocs(
+            || {
+                i += 1;
+                reg.inc(MetricId::Rounds);
+                reg.add(MetricId::Routed, 3);
+                reg.gauge_max(MetricId::MaxBatchRows, i);
+                reg.record_hist(HistId::RoundLatencyUs, i);
+                rec.record(SpanKind::IncDec, i, 0);
+                lat.record(1e-6 * i as f64);
+            },
+            4,
+            256, // wraps the 64-slot ring well inside the measured window
+        );
+        assert_eq!(allocs, 0, "warm telemetry primitives allocated {allocs} times");
+        assert_eq!(reg.get(MetricId::Rounds), 260);
+        assert_eq!((rec.len(), rec.total_recorded()), (64, 260));
+        assert_eq!(lat.count(), 260);
+    }
+
     // --- packed BLAS-3 + blocked TRSM, 1-thread path: once the output
     // buffers and the thread-local packing panels are warm, the kernels
     // must not touch the heap either (they sit under every engine above) ---

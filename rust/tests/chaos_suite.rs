@@ -20,6 +20,7 @@ use mikrr::serve::{
     RetryPolicy, ServeConfig, ShardRouter, ShardStatus, ShardSupervisor, SupervisorConfig,
 };
 use mikrr::streaming::StreamEvent;
+use mikrr::telemetry::SpanKind;
 use std::time::Duration;
 
 /// Seed for the randomized-plan test: overridable by the CI matrix.
@@ -91,11 +92,11 @@ fn nonfinite_injection_counts_match_plan() {
         assert!(rep.errors.is_empty(), "round {round}: {:?}", rep.errors);
     }
     let nonfinite: u64 = (0..r.num_shards())
-        .map(|i| r.shard(i).counters.get("rejected_nonfinite"))
+        .map(|i| r.shard(i).counters().get("rejected_nonfinite"))
         .sum();
     assert_eq!(nonfinite, planned, "boundary counter matches the injected plan");
-    assert_eq!(sup.counters.get("faults_injected"), planned);
-    assert_eq!(sup.counters.get("retries"), 0, "rejects never enter the retry loop");
+    assert_eq!(sup.counters().get("faults_injected"), planned);
+    assert_eq!(sup.counters().get("retries"), 0, "rejects never enter the retry loop");
     assert!(sup.quarantined_batches().is_empty());
     assert!(r.handle().statuses().iter().all(|s| *s == ShardStatus::Healthy));
 }
@@ -114,8 +115,8 @@ fn forced_numerical_failure_recovers_on_retry() {
     let rep = sup.supervise_round(&mut r);
     assert!(rep.errors.is_empty(), "{:?}", rep.errors);
     assert_eq!(rep.added(), 2, "both shards' events landed");
-    assert_eq!(sup.counters.get("retries"), 1, "exactly one retry consumed");
-    assert_eq!(r.shard(0).counters.get("chaos_forced_failures"), 1);
+    assert_eq!(sup.counters().get("retries"), 1, "exactly one retry consumed");
+    assert_eq!(r.shard(0).counters().get("chaos_forced_failures"), 1);
     assert!(sup.quarantined_batches().is_empty());
     assert_eq!(r.shard(0).status(), ShardStatus::Healthy);
     assert_eq!(r.shard(0).handle().epoch(), 1, "the retried round published");
@@ -137,8 +138,8 @@ fn poison_rows_end_in_quarantine_matching_plan() {
         sup.supervise_round(&mut r);
     }
     sup.drain(&mut r, 8);
-    assert_eq!(sup.counters.get("batches_quarantined"), planned);
-    assert_eq!(sup.counters.get("events_quarantined"), planned);
+    assert_eq!(sup.counters().get("batches_quarantined"), planned);
+    assert_eq!(sup.counters().get("events_quarantined"), planned);
     for q in sup.quarantined_batches() {
         assert_eq!(q.attempts, 3, "full retry budget spent on shard {}", q.shard);
         assert_eq!(q.events.len(), 1);
@@ -178,7 +179,19 @@ fn wedged_shard_serves_k_minus_1_then_heals() {
     }
     assert_eq!(r.shard(0).status(), ShardStatus::Quarantined);
     assert_eq!(h.num_serving(), 1);
-    assert_eq!(sup.counters.get("shards_quarantined"), 1);
+    assert_eq!(sup.counters().get("shards_quarantined"), 1);
+    // the quarantine froze a flight dump: the event trail into the
+    // failure (flush attempts, rollbacks) ending at the quarantine marker
+    assert_eq!(sup.flight_dumps().len(), 1, "one dump per quarantine");
+    let dump = &sup.flight_dumps()[0];
+    assert!(dump.label.contains("shard-0"), "{}", dump.label);
+    assert!(dump.events.iter().any(|e| e.kind == SpanKind::Flush), "flush attempts held");
+    assert_eq!(
+        dump.events.last().map(|e| e.kind),
+        Some(SpanKind::Quarantine),
+        "trail ends at the quarantine marker"
+    );
+    assert!(dump.render_text().contains("quarantine"), "dump renders for post-mortems");
     // K−1 fan-in equals the lone healthy shard exactly (it saw 2 updates
     // since `lone` was read, so compare against its current snapshot)
     let lone_now = h.shard(1).predict(&q.x).unwrap();
@@ -192,7 +205,7 @@ fn wedged_shard_serves_k_minus_1_then_heals() {
     // republish) and it rejoins the average
     sup.supervise_round(&mut r);
     assert_eq!(r.shard(0).status(), ShardStatus::Healthy);
-    assert_eq!(sup.counters.get("shards_recovered"), 1);
+    assert_eq!(sup.counters().get("shards_recovered"), 1);
     assert_eq!(h.num_serving(), 2);
     let now = h.epochs();
     assert!(now[0] > last_epochs[0], "heal republishes");
@@ -226,10 +239,10 @@ fn corrupt_inverse_trips_probe_and_reconverges() {
         sup.supervise_round(&mut chaos);
         ctl.supervise_round(&mut control);
     }
-    assert!(sup.counters.get("probe_breaches") >= 2, "corruption was seen");
-    assert_eq!(sup.counters.get("probe_trips"), 1, "trip_after breaches escalate");
-    assert_eq!(sup.counters.get("heals"), 1, "the trip self-healed");
-    assert_eq!(ctl.counters.get("probe_breaches"), 0, "control stays clean");
+    assert!(sup.counters().get("probe_breaches") >= 2, "corruption was seen");
+    assert_eq!(sup.counters().get("probe_trips"), 1, "trip_after breaches escalate");
+    assert_eq!(sup.counters().get("heals"), 1, "the trip self-healed");
+    assert_eq!(ctl.counters().get("probe_breaches"), 0, "control stays clean");
 
     // post-heal: every probe residual on the healed shard is tiny again
     let eng = chaos.shard(0).engine();
@@ -268,10 +281,10 @@ fn randomized_plan_runs_deterministically() {
         }
         sup.drain(&mut r, 8);
         let shard_counters = (0..r.num_shards())
-            .map(|i| r.shard(i).counters.render())
+            .map(|i| r.shard(i).counters().render())
             .collect::<Vec<_>>()
             .join(" | ");
-        (sup.counters.render(), shard_counters, r.handle().epochs(), r.handle().statuses())
+        (sup.counters().render(), shard_counters, r.handle().epochs(), r.handle().statuses())
     };
     let a = run();
     let b = run();

@@ -22,6 +22,7 @@ use mikrr::net::{NetClient, NetConfig, NetServer};
 use mikrr::serve::router::{RouterHandle, ServeConfig, ShardRouter};
 use mikrr::serve::{MicroBatchPolicy, PredictRequest, PredictResponse, QueryKind};
 use mikrr::streaming::StreamEvent;
+use mikrr::telemetry::{HistId, MetricId, SpanKind};
 
 const DIM: usize = 5;
 
@@ -338,6 +339,56 @@ fn corrupt_and_oversize_frames_close_the_connection_not_the_server() {
     assert_eq!(got.mean.shape(), (1, 1));
     let stats = server.shutdown();
     assert!(stats.counters.get("protocol_errors") >= 2);
+}
+
+#[test]
+fn stats_pull_sees_live_traffic_and_is_bitwise_stable_when_idle() {
+    let r = router(false);
+    let (server, _rx) = NetServer::spawn(r.handle(), DIM, NetConfig::default()).unwrap();
+    let q = synth::ecg_like(4, DIM, 9);
+
+    let mut c = NetClient::connect(server.addr(), 1 << 20).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..4 {
+        c.query(&PredictRequest::single(q.x.row(i), QueryKind::Mean))
+            .unwrap();
+    }
+
+    // the merged fleet view shows reactor-side and shard-side activity
+    let snap = c.stats().unwrap();
+    assert_eq!(snap.counter(MetricId::PredictsServed), 4);
+    assert_eq!(snap.counter(MetricId::Accepted), 1);
+    assert_eq!(snap.counter(MetricId::ProtocolErrors), 0);
+    assert!(snap.counter(MetricId::Batches) >= 1);
+    assert!(
+        snap.hist(HistId::WindowOccupancyRows).count >= 1,
+        "window occupancy histogram populated by live traffic"
+    );
+    assert!(
+        snap.spans.iter().any(|e| e.kind == SpanKind::Accept),
+        "flight-recorder tail carries the accept span"
+    );
+    assert!(
+        snap.spans.iter().any(|e| e.kind == SpanKind::WindowExec),
+        "flight-recorder tail carries window executions"
+    );
+
+    // the pull path records nothing: two idle pulls decode equal, and
+    // the canonical encoding makes the payloads byte-identical too
+    let again = c.stats().unwrap();
+    assert_eq!(snap, again, "idle stats pulls must be bitwise-stable");
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    snap.encode(&mut a);
+    again.encode(&mut b);
+    assert_eq!(a, b, "canonical snapshot encoding is unique");
+
+    // renderers work on a live snapshot (smoke: non-empty, named slots)
+    let text = snap.render_text();
+    assert!(text.contains("predicts_served"), "{text}");
+    let mut json = String::new();
+    snap.write_json(&mut json);
+    assert!(json.contains("\"predicts_served\""), "{json}");
+    server.shutdown();
 }
 
 #[test]

@@ -210,7 +210,7 @@ fn router_runs_a_stream_end_to_end() {
     let (added, removed) = (report.added(), report.removed());
     assert_eq!(added, 30);
     assert_eq!(router.n_samples(), n0 + added - removed);
-    assert_eq!(router.counters.get("routed"), 30);
+    assert_eq!(router.counters().get("routed"), 30);
     assert!(router.shard(0).pending() == 0 && router.shard(1).pending() == 0);
 
     // one explicit decremental round across every shard
@@ -271,7 +271,7 @@ fn bad_event_does_not_corrupt_published_state() {
     assert!(report.is_empty(), "a rejected event is not a round: {report:?}");
     assert_eq!(h.epochs(), vec![0], "rejected event must not publish");
     assert_eq!(router.shard(0).pending(), 0, "malformed event discarded");
-    assert_eq!(router.shard(0).counters.get("rejected"), 1);
+    assert_eq!(router.shard(0).counters().get("rejected"), 1);
     let p1 = h.predict(&xq).unwrap();
     for (a, b) in p0.iter().zip(&p1) {
         assert_eq!(a, b, "published state changed after a rejected event");
@@ -405,7 +405,7 @@ fn failed_multi_round_rolls_back_and_recovers_at_d4() {
     let ycm = multi_targets(&yc, 4);
     let err = router.shard_mut(0).apply_update_multi(&xc, &ycm, &[500]);
     assert!(err.is_err(), "out-of-range removal must fail");
-    assert_eq!(router.shard(0).counters.get("rollbacks"), 1);
+    assert_eq!(router.shard(0).counters().get("rollbacks"), 1);
     assert_eq!(h.epochs(), vec![0], "failed round must not publish");
     let p1 = h.predict_multi(&xq).unwrap();
     for (a, b) in p0.as_slice().iter().zip(p1.as_slice()) {
@@ -508,9 +508,9 @@ fn poison_batch_quarantined_after_r_attempts_never_loops() {
     assert_eq!(report.errors.len(), 1, "the poison batch failed exactly once at the end");
 
     // quarantine bookkeeping: R attempts spent, batch pulled off the queue
-    assert_eq!(sup.counters.get("retries"), 2, "R−1 = 2 in-place retries");
-    assert_eq!(sup.counters.get("batches_quarantined"), 1);
-    assert_eq!(sup.counters.get("events_quarantined"), 1);
+    assert_eq!(sup.counters().get("retries"), 2, "R−1 = 2 in-place retries");
+    assert_eq!(sup.counters().get("batches_quarantined"), 1);
+    assert_eq!(sup.counters().get("events_quarantined"), 1);
     let q = &sup.quarantined_batches()[0];
     assert_eq!(q.shard, 0);
     assert_eq!(q.attempts, 3);
@@ -566,10 +566,10 @@ fn boundary_rejects_and_shard_quarantine_degrade_reads_to_k_minus_1() {
     router.shard_mut(1).push(StreamEvent::single(inf_row, 0.0, 1, 1));
     let rep = sup.drain(&mut router, 4);
     assert!(rep.errors.is_empty(), "{:?}", rep.errors);
-    let nonfinite: u64 = (0..2).map(|i| router.shard(i).counters.get("rejected_nonfinite")).sum();
+    let nonfinite: u64 = (0..2).map(|i| router.shard(i).counters().get("rejected_nonfinite")).sum();
     assert_eq!(nonfinite, 2, "both bad rows counted at the boundary");
-    assert_eq!(sup.counters.get("batches_quarantined"), 0);
-    assert_eq!(sup.counters.get("retries"), 0);
+    assert_eq!(sup.counters().get("batches_quarantined"), 0);
+    assert_eq!(sup.counters().get("retries"), 0);
 
     // now a poison batch with quarantine_after=1: the shard itself goes
     let expected_k1: Vec<f64> = h.shard(1).predict(&xq).unwrap();
@@ -588,7 +588,7 @@ fn boundary_rejects_and_shard_quarantine_degrade_reads_to_k_minus_1() {
     // retained stores) and it rejoins the average
     sup.supervise_round(&mut router);
     assert_eq!(router.shard(0).status(), ShardStatus::Healthy);
-    assert_eq!(sup.counters.get("shards_recovered"), 1);
+    assert_eq!(sup.counters().get("shards_recovered"), 1);
     assert_eq!(h.num_serving(), 2);
     let fanin2 = h.predict(&xq).unwrap();
     let s0 = h.shard(0).predict(&xq).unwrap();

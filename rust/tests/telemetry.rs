@@ -1,0 +1,171 @@
+//! Fleet telemetry acceptance tests (ISSUE 10):
+//!
+//! * **Storm exactness** — a 4-thread increment/histogram storm against
+//!   one shared [`Registry`] snapshots to the arithmetic ground truth:
+//!   relaxed atomics lose nothing, bucket sums equal counts, and the
+//!   string-keyed `Counters` view renders the same numbers.
+//! * **Ring semantics** — the flight recorder overwrites oldest-first,
+//!   keeps an exact chronological tail, and its dumps carry the
+//!   overwrite count.
+//! * **Fleet merge + canonical codec** — per-tier registries merge into
+//!   one snapshot (counters sum, gauges max, histograms add) and the
+//!   `MKTL` payload encoding round-trips bit-exactly.
+//! * **Recovery dumps** — [`ShardRouter::recover`] ships one flight dump
+//!   per shard whose trail ends in the `Recover` span.
+
+use std::sync::Arc;
+
+use mikrr::data::synth;
+use mikrr::kernels::Kernel;
+use mikrr::persist::codec::Cursor;
+use mikrr::persist::DurabilityConfig;
+use mikrr::serve::router::{ServeConfig, ShardRouter};
+use mikrr::streaming::StreamEvent;
+use mikrr::telemetry::{
+    FlightRecorder, HistId, MetricId, Registry, SpanKind, TelemetrySnapshot,
+};
+use mikrr::testutil::ScratchDir;
+
+#[test]
+fn four_thread_storm_snapshots_to_ground_truth() {
+    const N: u64 = 10_000;
+    let reg = Arc::new(Registry::new());
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let reg = Arc::clone(&reg);
+        joins.push(std::thread::spawn(move || {
+            for i in 0..N {
+                reg.inc(MetricId::Rounds);
+                reg.add(MetricId::Routed, t + 1);
+                reg.gauge_max(MetricId::MaxBatchRows, i);
+                reg.record_hist(HistId::RoundLatencyUs, i % 100 + 1);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter(MetricId::Rounds), 4 * N);
+    assert_eq!(snap.counter(MetricId::Routed), N * (1 + 2 + 3 + 4));
+    assert_eq!(snap.counter(MetricId::MaxBatchRows), N - 1, "gauge keeps the high-water mark");
+    let h = snap.hist(HistId::RoundLatencyUs);
+    assert_eq!(h.count, 4 * N);
+    assert_eq!(h.sum, 4 * (N / 100) * (100 * 101 / 2));
+    assert_eq!((h.min, h.max), (1, 100));
+    assert_eq!(h.buckets.iter().sum::<u64>(), h.count, "every sample lands in one bucket");
+    assert!(h.p50() >= 1 && h.p99() <= h.max.next_power_of_two());
+
+    // the string-keyed compatibility view renders the same numbers
+    let c = reg.counters();
+    assert_eq!(c.get("rounds"), 4 * N);
+    assert_eq!(c.get("routed"), N * 10);
+    assert_eq!(c.get("max_batch_rows"), N - 1);
+    // idle registry → identical second snapshot
+    assert_eq!(reg.snapshot(), snap);
+}
+
+#[test]
+fn flight_recorder_wraps_and_keeps_the_newest_tail() {
+    let mut rec = FlightRecorder::new(8);
+    assert!(rec.is_empty());
+    for i in 0..20u64 {
+        rec.record(SpanKind::RoundStart, i, 2 * i);
+    }
+    assert_eq!((rec.len(), rec.capacity(), rec.total_recorded()), (8, 8, 20));
+
+    // tail(n) is chronological and clipped to what survived the wraps
+    let tail = rec.tail(3);
+    assert_eq!(tail.iter().map(|e| e.a).collect::<Vec<_>>(), vec![17, 18, 19]);
+    let all = rec.tail(100);
+    assert_eq!(all.len(), 8);
+    assert_eq!(all.iter().map(|e| e.a).collect::<Vec<_>>(), (12u64..20).collect::<Vec<_>>());
+    assert!(all.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+
+    let dump = rec.dump("wrap-test".to_string());
+    assert_eq!(dump.label, "wrap-test");
+    assert_eq!(dump.total_recorded, 20);
+    assert_eq!(dump.events, all);
+    let text = dump.render_text();
+    assert!(text.contains("wrap-test") && text.contains("round_start"), "{text}");
+}
+
+#[test]
+fn per_tier_registries_merge_and_the_codec_round_trips() {
+    let a = Registry::new();
+    a.add(MetricId::Routed, 3);
+    a.gauge_max(MetricId::MaxPendingRows, 5);
+    a.record_hist(HistId::WalAppendUs, 5);
+    let b = Registry::new();
+    b.add(MetricId::Routed, 4);
+    b.add(MetricId::ShardErrors, 2);
+    b.gauge_max(MetricId::MaxPendingRows, 2);
+    b.record_hist(HistId::WalAppendUs, 100);
+
+    let mut snap = TelemetrySnapshot::new();
+    a.merge_into(&mut snap);
+    b.merge_into(&mut snap);
+    snap.spans.push(mikrr::telemetry::SpanEvent {
+        t_us: 1,
+        kind: SpanKind::Publish,
+        a: 4,
+        b: 0,
+    });
+    assert_eq!(snap.counter(MetricId::Routed), 7, "counters sum across tiers");
+    assert_eq!(snap.counter(MetricId::ShardErrors), 2);
+    assert_eq!(snap.counter(MetricId::MaxPendingRows), 5, "gauges keep the max");
+    let h = snap.hist(HistId::WalAppendUs);
+    assert_eq!((h.count, h.sum, h.min, h.max), (2, 105, 5, 100));
+
+    // canonical encoding: bit-exact round trip, byte-identical re-encode
+    let mut wire = Vec::new();
+    snap.encode(&mut wire);
+    let mut cur = Cursor::new(&wire, "telemetry test");
+    let back = TelemetrySnapshot::decode(&mut cur, "telemetry test").unwrap();
+    assert_eq!(back, snap);
+    let mut wire2 = Vec::new();
+    back.encode(&mut wire2);
+    assert_eq!(wire, wire2);
+}
+
+#[test]
+fn recovery_ships_one_flight_dump_per_shard_ending_in_recover() {
+    let dir = ScratchDir::new("telemetry-recovery");
+    let d = synth::ecg_like(36, 4, 301);
+    let extra = synth::ecg_like(12, 4, 302);
+    let cfg = ServeConfig::default_for(Kernel::poly(2, 1.0), 2);
+    let mut r = ShardRouter::bootstrap(&d.x, &d.y, cfg).unwrap();
+    r.make_durable(
+        dir.path(),
+        DurabilityConfig { checkpoint_every: 1_000_000, keep_generations: 2 },
+    )
+    .unwrap();
+    for i in 0..12 {
+        r.ingest(StreamEvent::single(
+            extra.x.row(i).to_vec(),
+            extra.y[i],
+            0,
+            (i + 1) as u64,
+        ));
+    }
+    let report = r.update_round();
+    assert!(report.errors.is_empty(), "{:?}", report.errors);
+    assert!(r.recovery_flight_dumps().is_empty(), "bootstrapped fleets carry no dumps");
+    drop(r);
+
+    let rec = ShardRouter::recover(dir.path()).unwrap();
+    let dumps = rec.recovery_flight_dumps();
+    assert_eq!(dumps.len(), rec.num_shards(), "one post-mortem dump per shard");
+    for (i, dump) in dumps.iter().enumerate() {
+        assert!(dump.label.contains(&format!("shard-{i}")), "{}", dump.label);
+        let last = dump.events.last().expect("recovery trail is never empty");
+        assert_eq!(last.kind, SpanKind::Recover);
+        assert_eq!(last.a, i as u64);
+    }
+    // replayed rounds surface both in the registry and the compat view
+    let replayed: u64 = dumps.iter().map(|d| d.events.last().unwrap().b).sum();
+    assert!(replayed > 0, "the WAL suffix was replayed somewhere");
+    assert_eq!(rec.telemetry().get(MetricId::WalRecordsReplayed), replayed);
+    assert_eq!(rec.counters().get("wal_records_replayed"), replayed);
+}
